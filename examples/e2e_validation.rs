@@ -1,0 +1,107 @@
+//! End-to-end validation driver — runs the full system on the real golden
+//! workloads and reproduces the paper's headline numbers (§8.4): the
+//! balance / speedup / efficiency grid on both simulated nodes, with
+//! result correctness checked against the oracle outputs on every run.
+//!
+//! This is the run recorded in EXPERIMENTS.md. `--quick` restricts to one
+//! node and three benchmarks.
+
+use enginecl::harness::{balance, perf};
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::{host::golden_close, ArtifactRegistry};
+use enginecl::util::cli::Args;
+use enginecl::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick") || std::env::var("ECL_BENCH_QUICK").as_deref() == Ok("1");
+    let reg = ArtifactRegistry::discover()?;
+
+    // Correctness gate: every bench, co-executed with HGuided, must match
+    // the golden oracle before any performance claims.
+    println!("== correctness gate (HGuided co-execution vs golden) ==");
+    let node = NodeConfig::batel();
+    for bench in enginecl::harness::runs::paper_benches() {
+        let report = enginecl::harness::runs::run_once(
+            &reg,
+            &node,
+            bench,
+            (0..node.devices.len())
+                .map(enginecl::coordinator::DeviceSpec::new)
+                .collect(),
+            enginecl::coordinator::SchedulerKind::hguided(),
+            None,
+        )?;
+        // Re-run through an engine to get outputs for checking.
+        let mut engine = enginecl::harness::runs::build_engine(
+            &reg,
+            &node,
+            bench,
+            (0..node.devices.len())
+                .map(enginecl::coordinator::DeviceSpec::new)
+                .collect(),
+            enginecl::coordinator::SchedulerKind::hguided(),
+            None,
+        )?;
+        engine.configurator().simulate_init = false;
+        engine.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let manifest = reg.bench(bench)?;
+        let golden = reg.golden_outputs(manifest)?;
+        let mut ok = true;
+        let mut worst = 0f64;
+        for (i, g) in golden.iter().enumerate() {
+            let (o, stat) = golden_close(bench, engine.output(i).unwrap(), g.as_f32().unwrap());
+            ok &= o;
+            worst = worst.max(stat);
+        }
+        println!(
+            "  {bench:<11} balance={:.3} err={worst:.2e}  {}",
+            report.balance(),
+            if ok { "OK" } else { "FAIL" }
+        );
+        anyhow::ensure!(ok, "{bench} failed the correctness gate");
+    }
+
+    // Performance grid.
+    let nodes: Vec<NodeConfig> = if quick {
+        vec![NodeConfig::batel()]
+    } else {
+        vec![NodeConfig::batel(), NodeConfig::remo()]
+    };
+    let benches: Option<Vec<&'static str>> = if quick {
+        Some(vec!["gaussian", "mandelbrot", "binomial"])
+    } else {
+        None
+    };
+
+    let mut hguided_eff = Vec::new();
+    for node in &nodes {
+        println!("\n== node {} ==", node.name);
+        let eval = balance::evaluate_node(&reg, node, benches.clone(), 1)?;
+        println!(
+            "{:<11} {:<12} {:>8} {:>8} {:>7} {:>6}",
+            "bench", "scheduler", "balance", "speedup", "S_max", "eff"
+        );
+        for c in &eval.cells {
+            println!(
+                "{:<11} {:<12} {:>8.3} {:>8.3} {:>7.3} {:>6.3}",
+                c.bench, c.scheduler, c.balance, c.speedup, c.max_speedup, c.efficiency
+            );
+        }
+        println!("-- mean efficiency by scheduler ({}):", node.name);
+        for (l, e) in perf::mean_efficiency_by_scheduler(&eval) {
+            println!("   {:<12} {:.3}", l, e);
+            if l == "HGuided" {
+                hguided_eff.push((node.name.clone(), e));
+            }
+        }
+        let balances: Vec<f64> = eval.cells.iter().map(|c| c.balance).collect();
+        println!("-- mean balance: {:.3}", stats::mean(&balances));
+    }
+
+    println!("\n== headline (paper: HGuided eff 0.89 Batel / 0.82 Remo) ==");
+    for (node, eff) in &hguided_eff {
+        println!("  HGuided mean efficiency on {node}: {eff:.3}");
+    }
+    Ok(())
+}

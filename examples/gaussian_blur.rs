@@ -1,0 +1,43 @@
+//! Gaussian blur — the paper's regular benchmark on the Remo desktop
+//! node, co-executing CPU + iGPU + GPU with the default Static scheduler
+//! (device-power proportions).
+
+use enginecl::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let registry = ArtifactRegistry::discover()?;
+    let bench = registry.bench("gaussian")?.clone();
+    let ins = registry.golden_inputs(&bench)?;
+    let img = ins[0].as_f32().unwrap().to_vec();
+    let filt = ins[1].as_f32().unwrap().to_vec();
+    let pixels = bench.n;
+
+    // ECL:BEGIN
+    let mut engine = Engine::new()?;
+    engine.node(NodeConfig::remo());
+    engine.use_mask(DeviceMask::All);
+
+    let mut program = Program::new();
+    program.input(img);
+    program.input(filt);
+    program.output(pixels);
+    program.kernel("gaussian", "gaussian_blur");
+
+    engine.program(program);
+    engine.run()?;
+    // ECL:END
+
+    let report = engine.report().unwrap();
+    println!(
+        "gaussian 512x512 on remo ({}): balance = {:.3}",
+        report.scheduler,
+        report.balance()
+    );
+    for (d, share) in report.devices.iter().zip(report.work_shares()) {
+        println!("  {:<12} {:>6.1}% of rows", d.name, share * 100.0);
+    }
+    let out = engine.output(0).unwrap();
+    let mean: f32 = out.iter().sum::<f32>() / out.len() as f32;
+    println!("blurred mean = {mean:.2} (input mean ≈ 127.5)");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Mandelbrot under HGuided — the irregular workload where adaptive
+//! scheduling matters (paper Figures 6 and 9). Prints the Introspector
+//! timeline so the decreasing package sizes are visible.
+
+use enginecl::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let registry = ArtifactRegistry::discover()?;
+    let bench = registry.bench("mandelbrot")?.clone();
+    let pixels = bench.n;
+
+    // ECL:BEGIN
+    let mut engine = Engine::new()?;
+    engine.use_mask(DeviceMask::All);
+    engine.scheduler(SchedulerKind::hguided());
+
+    let mut program = Program::new();
+    program.output(pixels);
+    program.out_pattern(4, 1);
+    program.kernel("mandelbrot", "mandelbrot");
+
+    engine.program(program);
+    engine.run()?;
+    // ECL:END
+
+    let report = engine.report().unwrap();
+    let w = bench.scalars["width"] as usize;
+    let h = bench.scalars["height"] as usize;
+    println!(
+        "mandelbrot {}x{}: balance = {:.3}, {} packages",
+        w,
+        h,
+        report.balance(),
+        report.total_packages()
+    );
+    print!("{}", report.ascii_timeline(72));
+
+    // Tiny ASCII render of the escape-iteration field.
+    let out = engine.output(0).unwrap();
+    let (cols, rows) = (64usize, 24usize);
+    let shades: &[u8] = b" .:-=+*#%@";
+    let maxiter = bench.scalars["maxiter"];
+    for r in 0..rows {
+        let mut line = String::new();
+        for c in 0..cols {
+            let x = c * w / cols;
+            let y = r * h / rows;
+            let v = out[y * w + x] as f64 / maxiter;
+            let idx = ((v.powf(0.35)) * (shades.len() - 1) as f64) as usize;
+            line.push(shades[idx.min(shades.len() - 1)] as char);
+        }
+        println!("{line}");
+    }
+    Ok(())
+}

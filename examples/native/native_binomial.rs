@@ -1,0 +1,148 @@
+//! NATIVE baseline — Binomial Options hand-driven over the raw runtime
+//! (the `xla` crate), the way an OpenCL C++ program drives
+//! clGetPlatformIDs / clCreateBuffer / clEnqueue* directly.
+//!
+//! Everything EngineCL automates is spelled out here: per-device client
+//! creation, artifact loading, executable builds, buffer uploads, manual
+//! work partitioning, offset bookkeeping, result collection and an error
+//! check after every call. This file is the "OpenCL" side of the Table-3
+//! usability comparison and the Fig-7/8 overhead baseline.
+
+use enginecl::runtime::host::read_f32_file;
+use enginecl::runtime::ArtifactRegistry;
+
+fn main() {
+    // Benchmark setup (not measured, same as the EngineCL example).
+    let registry = match ArtifactRegistry::discover() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("artifact discovery failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let bench = registry.bench("binomial").unwrap().clone();
+    let prices = read_f32_file(&registry.root.join(&bench.inputs[0].file)).unwrap();
+    let samples = bench.n;
+    // Manual device split: 10% / 62% / 28% of the options, granule-aligned.
+    let props = [0.10f64, 0.62, 0.28];
+
+    // ECL:BEGIN
+    let mut out = vec![0f32; samples];
+    let granule = bench.granule;
+    let total_granules = samples / granule;
+    let mut cursor = 0usize;
+    let mut assignments: Vec<(usize, usize)> = Vec::new();
+    for (i, p) in props.iter().enumerate() {
+        let mut g = (total_granules as f64 * p).floor() as usize;
+        if i == props.len() - 1 {
+            g = total_granules - cursor;
+        }
+        assignments.push((cursor * granule, (cursor + g) * granule));
+        cursor += g;
+    }
+    if cursor != total_granules {
+        eprintln!("partitioning error: {cursor} != {total_granules}");
+        std::process::exit(1);
+    }
+
+    for (dev, (begin, end)) in assignments.iter().enumerate() {
+        // One client per device (one OpenCL context+queue per device).
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("device {dev}: client creation failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        // Upload the input buffer to this device.
+        let in_buf = match client.buffer_from_host_buffer::<f32>(&prices, &[prices.len()], None) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("device {dev}: input upload failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        // Decompose this device's slice into available executable sizes,
+        // building (and caching) each executable by hand.
+        let mut built: Vec<(usize, xla::PjRtLoadedExecutable)> = Vec::new();
+        let mut off = *begin;
+        while off < *end {
+            let remaining = end - off;
+            let size = match bench.chunk_at_most(remaining) {
+                Some(s) => s,
+                None => {
+                    eprintln!("device {dev}: no executable for {remaining} items");
+                    std::process::exit(1);
+                }
+            };
+            let exe = match built.iter().find(|(s, _)| *s == size) {
+                Some((_, e)) => e,
+                None => {
+                    let path = bench.hlo_path(&registry.root, size).unwrap();
+                    let proto = match xla::HloModuleProto::from_text_file(
+                        path.to_str().unwrap(),
+                    ) {
+                        Ok(p) => p,
+                        Err(e) => {
+                            eprintln!("device {dev}: HLO parse failed: {e}");
+                            std::process::exit(1);
+                        }
+                    };
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = match client.compile(&comp) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            eprintln!("device {dev}: compile failed: {e}");
+                            std::process::exit(1);
+                        }
+                    };
+                    built.push((size, exe));
+                    &built.last().unwrap().1
+                }
+            };
+            let off_buf = match client.buffer_from_host_buffer::<i32>(&[off as i32], &[], None)
+            {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("device {dev}: offset upload failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let results = match exe.execute_b(&[&in_buf, &off_buf]) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("device {dev}: execute failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let tuple = match results[0][0].to_literal_sync() {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("device {dev}: download failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let part = match tuple.to_tuple1() {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("device {dev}: untuple failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            if let Err(e) = part.copy_raw_to::<f32>(&mut out[off..off + size]) {
+                eprintln!("device {dev}: result copy failed: {e}");
+                std::process::exit(1);
+            }
+            off += size;
+        }
+    }
+    // ECL:END
+
+    println!(
+        "native binomial: {} options, first values: {:.4} {:.4} {:.4}",
+        out.len(),
+        out[0],
+        out[1],
+        out[2]
+    );
+}

@@ -1,0 +1,131 @@
+//! NATIVE baseline — Gaussian blur over the raw runtime: two read
+//! buffers (image + filter weights) uploaded to every device, one write
+//! buffer, manual row-aligned split, per-call error control.
+
+use enginecl::runtime::host::read_f32_file;
+use enginecl::runtime::ArtifactRegistry;
+
+fn main() {
+    let registry = match ArtifactRegistry::discover() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("artifact discovery failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let bench = registry.bench("gaussian").unwrap().clone();
+    let img = read_f32_file(&registry.root.join(&bench.inputs[0].file)).unwrap();
+    let filt = read_f32_file(&registry.root.join(&bench.inputs[1].file)).unwrap();
+    let pixels = bench.n;
+    let props = [0.12f64, 0.45, 0.43];
+
+    // ECL:BEGIN
+    let mut out = vec![0f32; pixels];
+    let granule = bench.granule;
+    let total_granules = pixels / granule;
+    let mut cursor = 0usize;
+    let mut slices: Vec<(usize, usize)> = Vec::new();
+    for (i, p) in props.iter().enumerate() {
+        let mut g = (total_granules as f64 * p).floor() as usize;
+        if i == props.len() - 1 {
+            g = total_granules - cursor;
+        }
+        slices.push((cursor * granule, (cursor + g) * granule));
+        cursor += g;
+    }
+    if cursor != total_granules {
+        eprintln!("partitioning error");
+        std::process::exit(1);
+    }
+
+    for (dev, (begin, end)) in slices.iter().enumerate() {
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("device {dev}: client failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        let img_buf = match client.buffer_from_host_buffer::<f32>(&img, &[img.len()], None) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("device {dev}: image upload failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        let filt_buf = match client.buffer_from_host_buffer::<f32>(&filt, &[filt.len()], None) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("device {dev}: filter upload failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        let mut built: Vec<(usize, xla::PjRtLoadedExecutable)> = Vec::new();
+        let mut off = *begin;
+        while off < *end {
+            let size = match bench.chunk_at_most(end - off) {
+                Some(s) => s,
+                None => {
+                    eprintln!("device {dev}: no executable fits {}", end - off);
+                    std::process::exit(1);
+                }
+            };
+            if !built.iter().any(|(s, _)| *s == size) {
+                let path = bench.hlo_path(&registry.root, size).unwrap();
+                let proto = match xla::HloModuleProto::from_text_file(path.to_str().unwrap()) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        eprintln!("device {dev}: HLO parse failed: {e}");
+                        std::process::exit(1);
+                    }
+                };
+                match client.compile(&xla::XlaComputation::from_proto(&proto)) {
+                    Ok(exe) => built.push((size, exe)),
+                    Err(e) => {
+                        eprintln!("device {dev}: compile failed: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+            let exe = &built.iter().find(|(s, _)| *s == size).unwrap().1;
+            let off_buf = match client.buffer_from_host_buffer::<i32>(&[off as i32], &[], None)
+            {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("device {dev}: offset upload failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let results = match exe.execute_b(&[&img_buf, &filt_buf, &off_buf]) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("device {dev}: execute failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let tuple = match results[0][0].to_literal_sync() {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("device {dev}: download failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let part = match tuple.to_tuple1() {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("device {dev}: untuple failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            if let Err(e) = part.copy_raw_to::<f32>(&mut out[off..off + size]) {
+                eprintln!("device {dev}: result copy failed: {e}");
+                std::process::exit(1);
+            }
+            off += size;
+        }
+    }
+    // ECL:END
+
+    let mean: f32 = out.iter().sum::<f32>() / out.len() as f32;
+    println!("native gaussian: blurred mean = {mean:.2}");
+}

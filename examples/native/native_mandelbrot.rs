@@ -1,0 +1,127 @@
+//! NATIVE baseline — Mandelbrot over the raw runtime. No input buffers
+//! (0:1 read:write, as in the paper's Table 2), but a hand-written
+//! master/worker dynamic distribution over equal packages with all the
+//! synchronization bookkeeping EngineCL hides.
+
+use enginecl::runtime::ArtifactRegistry;
+
+fn main() {
+    let registry = match ArtifactRegistry::discover() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("artifact discovery failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let bench = registry.bench("mandelbrot").unwrap().clone();
+    let pixels = bench.n;
+    let ndev = 3usize;
+    let packages = 32usize;
+
+    // ECL:BEGIN
+    let mut out = vec![0f32; pixels];
+    let granule = bench.granule;
+    let total_granules = pixels / granule;
+    // Equal package list (manual Dynamic scheduling).
+    let per = total_granules / packages;
+    let mut queue: Vec<(usize, usize)> = Vec::new();
+    let mut cur = 0usize;
+    for i in 0..packages {
+        let mut g = per;
+        if i == packages - 1 {
+            g = total_granules - cur;
+        }
+        queue.push((cur * granule, (cur + g) * granule));
+        cur += g;
+    }
+    if cur != total_granules {
+        eprintln!("package construction error");
+        std::process::exit(1);
+    }
+
+    // Per-device contexts + executable caches.
+    let mut clients: Vec<xla::PjRtClient> = Vec::new();
+    let mut caches: Vec<Vec<(usize, xla::PjRtLoadedExecutable)>> = Vec::new();
+    for dev in 0..ndev {
+        match xla::PjRtClient::cpu() {
+            Ok(c) => {
+                clients.push(c);
+                caches.push(Vec::new());
+            }
+            Err(e) => {
+                eprintln!("device {dev}: client failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    // Round-robin "completion" order (a real OpenCL program would juggle
+    // events/callbacks here; serialized equivalents keep the bookkeeping).
+    let mut next = 0usize;
+    for (begin, end) in queue {
+        let dev = next % ndev;
+        next += 1;
+        let client = &clients[dev];
+        let cache = &mut caches[dev];
+        let mut off = begin;
+        while off < end {
+            let size = match bench.chunk_at_most(end - off) {
+                Some(s) => s,
+                None => {
+                    eprintln!("device {dev}: no executable fits {}", end - off);
+                    std::process::exit(1);
+                }
+            };
+            if !cache.iter().any(|(s, _)| *s == size) {
+                let path = bench.hlo_path(&registry.root, size).unwrap();
+                let proto = match xla::HloModuleProto::from_text_file(path.to_str().unwrap()) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        eprintln!("device {dev}: HLO parse failed: {e}");
+                        std::process::exit(1);
+                    }
+                };
+                match client.compile(&xla::XlaComputation::from_proto(&proto)) {
+                    Ok(exe) => cache.push((size, exe)),
+                    Err(e) => {
+                        eprintln!("device {dev}: compile failed: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+            let exe = &cache.iter().find(|(s, _)| *s == size).unwrap().1;
+            let off_lit = xla::Literal::scalar(off as i32);
+            let results = match exe.execute::<xla::Literal>(&[off_lit]) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("device {dev}: execute failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let tuple = match results[0][0].to_literal_sync() {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("device {dev}: download failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let part = match tuple.to_tuple1() {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("device {dev}: untuple failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            if let Err(e) = part.copy_raw_to::<f32>(&mut out[off..off + size]) {
+                eprintln!("device {dev}: result copy failed: {e}");
+                std::process::exit(1);
+            }
+            off += size;
+        }
+    }
+    // ECL:END
+
+    let maxiter = bench.scalars["maxiter"] as f32;
+    let inside = out.iter().filter(|&&v| v >= maxiter).count();
+    println!("native mandelbrot: {inside} pixels in the set");
+}

@@ -1,0 +1,145 @@
+//! NATIVE baseline — NBody over the raw runtime: two input buffers and
+//! two output buffers per device, manual three-way split, per-call error
+//! control. Mirror of `examples/nbody_coexec.rs` without EngineCL.
+
+use enginecl::runtime::host::read_f32_file;
+use enginecl::runtime::ArtifactRegistry;
+
+fn main() {
+    let registry = match ArtifactRegistry::discover() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("artifact discovery failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let bench = registry.bench("nbody").unwrap().clone();
+    let pos = read_f32_file(&registry.root.join(&bench.inputs[0].file)).unwrap();
+    let vel = read_f32_file(&registry.root.join(&bench.inputs[1].file)).unwrap();
+    let bodies = bench.n;
+    let props = [0.08f64, 0.30, 0.62];
+
+    // ECL:BEGIN
+    let mut out_pos = vec![0f32; bodies * 4];
+    let mut out_vel = vec![0f32; bodies * 4];
+    let granule = bench.granule;
+    let total_granules = bodies / granule;
+    let mut cursor = 0usize;
+    let mut slices: Vec<(usize, usize)> = Vec::new();
+    for (i, p) in props.iter().enumerate() {
+        let mut g = (total_granules as f64 * p).floor() as usize;
+        if i == props.len() - 1 {
+            g = total_granules - cursor;
+        }
+        slices.push((cursor * granule, (cursor + g) * granule));
+        cursor += g;
+    }
+    if cursor != total_granules {
+        eprintln!("partitioning error");
+        std::process::exit(1);
+    }
+
+    for (dev, (begin, end)) in slices.iter().enumerate() {
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("device {dev}: client failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        let pos_buf = match client.buffer_from_host_buffer::<f32>(&pos, &[pos.len()], None) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("device {dev}: pos upload failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        let vel_buf = match client.buffer_from_host_buffer::<f32>(&vel, &[vel.len()], None) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("device {dev}: vel upload failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        let mut off = *begin;
+        let mut built: Vec<(usize, xla::PjRtLoadedExecutable)> = Vec::new();
+        while off < *end {
+            let size = match bench.chunk_at_most(end - off) {
+                Some(s) => s,
+                None => {
+                    eprintln!("device {dev}: no executable fits {}", end - off);
+                    std::process::exit(1);
+                }
+            };
+            if !built.iter().any(|(s, _)| *s == size) {
+                let path = bench.hlo_path(&registry.root, size).unwrap();
+                let proto = match xla::HloModuleProto::from_text_file(path.to_str().unwrap()) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        eprintln!("device {dev}: HLO parse failed: {e}");
+                        std::process::exit(1);
+                    }
+                };
+                let comp = xla::XlaComputation::from_proto(&proto);
+                match client.compile(&comp) {
+                    Ok(exe) => built.push((size, exe)),
+                    Err(e) => {
+                        eprintln!("device {dev}: compile failed: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+            let exe = &built.iter().find(|(s, _)| *s == size).unwrap().1;
+            let off_buf = match client.buffer_from_host_buffer::<i32>(&[off as i32], &[], None)
+            {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("device {dev}: offset upload failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let results = match exe.execute_b(&[&pos_buf, &vel_buf, &off_buf]) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("device {dev}: execute failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let tuple = match results[0][0].to_literal_sync() {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("device {dev}: download failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let parts = match tuple.to_tuple() {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("device {dev}: untuple failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            if parts.len() != 2 {
+                eprintln!("device {dev}: expected 2 outputs, got {}", parts.len());
+                std::process::exit(1);
+            }
+            let lo = off * 4;
+            let hi = (off + size) * 4;
+            if let Err(e) = parts[0].copy_raw_to::<f32>(&mut out_pos[lo..hi]) {
+                eprintln!("device {dev}: pos copy failed: {e}");
+                std::process::exit(1);
+            }
+            if let Err(e) = parts[1].copy_raw_to::<f32>(&mut out_vel[lo..hi]) {
+                eprintln!("device {dev}: vel copy failed: {e}");
+                std::process::exit(1);
+            }
+            off += size;
+        }
+    }
+    // ECL:END
+
+    println!(
+        "native nbody: first body -> ({:.3}, {:.3}, {:.3})",
+        out_pos[0], out_pos[1], out_pos[2]
+    );
+}

@@ -1,0 +1,61 @@
+//! NBody co-execution — the paper's Listing 2: three devices (CPU, GPU,
+//! Xeon Phi) with kernel specializations and a Static scheduler with
+//! explicit work proportions. One line per extra device.
+
+use enginecl::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let registry = ArtifactRegistry::discover()?;
+    let bench = registry.bench("nbody")?.clone();
+    let ins = registry.golden_inputs(&bench)?;
+    let (pos, vel) = (
+        ins[0].as_f32().unwrap().to_vec(),
+        ins[1].as_f32().unwrap().to_vec(),
+    );
+    let bodies = bench.n;
+    let lws = 64;
+
+    // ECL:BEGIN
+    let mut engine = Engine::new()?;
+    engine.use_devices(vec![
+        DeviceSpec::new(0),                            // CPU, common kernel
+        DeviceSpec::with_kernel(2, "nbody"),           // Phi, binary kernel
+        DeviceSpec::with_kernel(1, "nbody"),           // GPU, tuned kernel
+    ]);
+
+    engine.work_items(bodies, lws);
+
+    engine.scheduler(SchedulerKind::static_with(vec![0.08, 0.30, 0.62]));
+
+    let mut program = Program::new();
+    program.input(pos);
+    program.input(vel);
+    program.output(bodies * 4);
+    program.output(bodies * 4);
+
+    program.kernel("nbody", "nbody");
+    program.arg_buffer(0);
+    program.arg_buffer(1);
+    program.arg_scalar(2, bodies as f64);
+    program.arg_scalar(3, 0.005);
+    program.arg_scalar(4, 50.0);
+    program.arg_buffer(5);
+    program.arg_buffer(6);
+
+    engine.program(program);
+    engine.run()?;
+    // ECL:END
+
+    let report = engine.report().unwrap();
+    println!(
+        "nbody co-execution ({}): balance = {:.3}",
+        report.scheduler,
+        report.balance()
+    );
+    for (d, share) in report.devices.iter().zip(report.work_shares()) {
+        println!("  {:<18} {:>6.1}% of bodies", d.name, share * 100.0);
+    }
+    let opos = engine.output(0).unwrap();
+    println!("first body -> ({:.3}, {:.3}, {:.3})", opos[0], opos[1], opos[2]);
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart — the paper's Listing 1: Binomial Options on a single CPU
+//! device, with explicit global/local work items and mixed positional /
+//! aggregate kernel arguments.
+//!
+//! Compare with `examples/native/native_binomial.rs`, the same computation
+//! hand-driven over the raw runtime: this file is what EngineCL buys you.
+
+use enginecl::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // Benchmark setup (outside the measured region, as in the paper).
+    let registry = ArtifactRegistry::discover()?;
+    let bench = registry.bench("binomial")?.clone();
+    let prices = registry.golden_inputs(&bench)?[0].as_f32().unwrap().to_vec();
+    let samples = bench.n;
+    let steps = bench.scalars["steps"];
+    let lws = 255; // the paper's local work size for Binomial
+
+    // ECL:BEGIN
+    let mut engine = Engine::new()?;
+    engine.use_mask(DeviceMask::Cpu); // 1 chip
+
+    engine.global_work_items(samples);
+    engine.local_work_items(lws);
+
+    let mut program = Program::new();
+    program.input(prices);
+    program.output(samples);
+    program.out_pattern(1, 255);
+
+    program.kernel("binomial", "binomial_opts");
+    program.arg_scalar(0, steps); // positional by index
+    program.arg_buffer(1); // aggregate: in
+    program.arg_buffer(2); // aggregate: out
+    program.arg_local_alloc(3, 255 * 16);
+    program.arg_local_alloc(4, 254 * 16);
+
+    engine.program(program);
+    engine.run()?;
+    // ECL:END
+
+    // Results are in the program's output container.
+    let out = engine.output(0).unwrap();
+    println!(
+        "binomial on CPU: {} options, first values: {:.4} {:.4} {:.4}",
+        out.len(),
+        out[0],
+        out[1],
+        out[2]
+    );
+    let report = engine.report().unwrap();
+    println!(
+        "wall = {:.1} ms, packages = {}",
+        report.wall.as_secs_f64() * 1e3,
+        report.total_packages()
+    );
+    if engine.has_errors() {
+        for err in engine.get_errors() {
+            eprintln!("error: {err}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Raytracer scenes — the paper benchmarks three scenes of growing
+//! complexity (ray1/ray2/ray3) to stress load balancing on irregular
+//! work. Runs each scene under Dynamic and HGuided and compares balance.
+
+use enginecl::prelude::*;
+
+fn run_scene(scene: &str, kind: SchedulerKind) -> anyhow::Result<(f64, f64)> {
+    let registry = ArtifactRegistry::discover()?;
+    let bench = registry.bench(scene)?.clone();
+    let spheres = registry.golden_inputs(&bench)?[0].as_f32().unwrap().to_vec();
+
+    // ECL:BEGIN
+    let mut engine = Engine::new()?;
+    engine.use_mask(DeviceMask::All);
+    engine.scheduler(kind);
+
+    let mut program = Program::new();
+    program.input(spheres);
+    program.output(bench.n * 4);
+    program.kernel(scene, "ray_trace");
+
+    engine.program(program);
+    engine.run()?;
+    // ECL:END
+
+    let report = engine.report().unwrap();
+    let wall = report
+        .devices
+        .iter()
+        .map(|d| d.completion().as_secs_f64())
+        .fold(0.0f64, f64::max);
+    Ok((report.balance(), wall * 1e3))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("{:<6} {:>14} {:>14}", "scene", "Dynamic 50", "HGuided");
+    for scene in ["ray1", "ray2", "ray3"] {
+        let (b_dyn, t_dyn) = run_scene(scene, SchedulerKind::dynamic(50))?;
+        let (b_hg, t_hg) = run_scene(scene, SchedulerKind::hguided())?;
+        println!(
+            "{:<6} {:>7.3}/{:>5.0}ms {:>7.3}/{:>5.0}ms",
+            scene, b_dyn, t_dyn, b_hg, t_hg
+        );
+    }
+    Ok(())
+}

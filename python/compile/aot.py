@@ -1,0 +1,127 @@
+"""AOT step: lower every (bench, chunk-size) to HLO *text* and emit the
+manifest + golden data the Rust runtime consumes.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos or ``.serialize()`` —
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the crate-side xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Python runs ONCE, at build time; the Rust binary is self-contained after
+``make artifacts``.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_chunk(spec: model.BenchSpec, size: int) -> str:
+    fn = spec.build_chunk(size)
+    in_specs = [
+        jax.ShapeDtypeStruct(b.shape, jnp.float32) for b in spec.inputs
+    ] + [jax.ShapeDtypeStruct((), jnp.int32)]
+    lowered = jax.jit(fn).lower(*in_specs)
+    return to_hlo_text(lowered)
+
+
+def write_raw(path: str, arr: np.ndarray) -> None:
+    arr.astype("<f4").tofile(path)
+
+
+def emit_bench(spec: model.BenchSpec, outdir: str, verbose: bool = True) -> dict:
+    bdir = os.path.join(outdir, spec.name)
+    os.makedirs(bdir, exist_ok=True)
+    art_bench = model.artifact_bench(spec.name)
+    chunks = []
+    if art_bench == spec.name:
+        for size in spec.chunk_sizes():
+            t0 = time.time()
+            text = lower_chunk(spec, size)
+            fname = f"{spec.name}/c{size}.hlo.txt"
+            with open(os.path.join(outdir, fname), "w") as f:
+                f.write(text)
+            if verbose:
+                print(f"  {fname}: {len(text)} chars in {time.time()-t0:.1f}s")
+            chunks.append({"size": size, "file": fname})
+    else:
+        chunks = [
+            {"size": size, "file": f"{art_bench}/c{size}.hlo.txt"}
+            for size in spec.chunk_sizes()
+        ]
+
+    # Golden workload: deterministic inputs + oracle outputs.
+    ins = spec.make_inputs()
+    outs = spec.ref_fn(ins)
+    in_entries = []
+    for buf, arr in zip(spec.inputs, ins):
+        fname = f"{spec.name}/golden_in_{buf.name}.f32"
+        write_raw(os.path.join(outdir, fname), np.asarray(arr).reshape(-1))
+        in_entries.append({
+            "name": buf.name,
+            "elems": int(np.prod(buf.shape)),
+            "elems_per_item": buf.elems_per_item,
+            "file": fname,
+        })
+    out_entries = []
+    for buf, arr in zip(spec.outputs, outs):
+        fname = f"{spec.name}/golden_out_{buf.name}.f32"
+        write_raw(os.path.join(outdir, fname), np.asarray(arr).reshape(-1))
+        out_entries.append({
+            "name": buf.name,
+            "elems": int(np.prod(buf.shape)),
+            "elems_per_item": buf.elems_per_item,
+            "file": fname,
+        })
+
+    return {
+        "name": spec.name,
+        "n": spec.n,
+        "granule": spec.granule,
+        "irregular": spec.irregular,
+        "out_pattern": list(spec.out_pattern),
+        "scalars": {k: float(v) for k, v in spec.scalars.items()},
+        "kernel": model.artifact_bench(spec.name),
+        "inputs": in_entries,
+        "outputs": out_entries,
+        "chunks": chunks,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--bench", default=None, help="only this bench")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "benches": {}}
+    names = [args.bench] if args.bench else list(model.BENCHES)
+    for name in names:
+        spec = model.BENCHES[name]
+        print(f"[aot] {name} (n={spec.n}, granule={spec.granule})")
+        manifest["benches"][name] = emit_bench(spec, args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

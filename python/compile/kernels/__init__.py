@@ -1,0 +1,17 @@
+"""L1 Pallas kernels for the EngineCL reproduction.
+
+Each module exposes a ``chunk_call(...)`` builder returning a jittable
+function with the uniform co-execution signature
+
+    fn(*full_inputs, offset: i32) -> tuple(out_chunks...)
+
+where ``offset`` is the first work-item of the package assigned to a device
+and the chunk size is static (HLO shapes are static; the Rust runtime picks
+the right executable and decomposes arbitrary packages greedily).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers the kernel into plain HLO ops
+that any backend (including the Rust-side PJRT CPU client) can run.
+"""
+
+from . import gaussian, binomial, mandelbrot, nbody, ray  # noqa: F401

@@ -1,0 +1,78 @@
+"""Gaussian KxK blur — the paper's regular benchmark (AMD APP SDK style).
+
+One work-item computes one output pixel. Two read buffers (image, 1-D
+separable filter weights), one write buffer, out pattern 1:1 (Table 2).
+
+The Gaussian is separable, so the kernel runs a row pass then a column
+pass over a (block_rows + 2R) row window — 2K tap operations instead of
+K^2, which keeps both execution and XLA compile time linear in K. Border
+pixels clamp (both passes), matching the oracle in ref.py.
+
+Pallas shape: the chunk is tiled in blocks of `block_rows` image rows;
+the full image stays resident because the stencil needs an R-row halo.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+K = 9  # separable filter width
+R = K // 2
+
+
+def _kernel(w, h, block_rows, off_ref, img_ref, filt_ref, out_ref):
+    """One grid step blurs `block_rows` rows of the chunk."""
+    pid = pl.program_id(0)
+    base = off_ref[0] + pid * (block_rows * w)  # first pixel of this block
+    y0 = base // w
+    img = img_ref[...].reshape(h, w)
+    g = filt_ref[...]
+
+    # Source window: rows y0-R .. y0+block_rows-1+R, clamped at borders.
+    ys = jnp.clip(jnp.arange(block_rows + 2 * R, dtype=jnp.int32) + (y0 - R), 0, h - 1)
+    src = jnp.take(img, ys, axis=0)  # (block_rows + 2R, w)
+
+    # Row pass (x direction), clamped.
+    xs = jnp.arange(w, dtype=jnp.int32)
+    rp = jnp.zeros_like(src)
+    for dx in range(-R, R + 1):
+        xi = jnp.clip(xs + dx, 0, w - 1)
+        rp = rp + jnp.take(src, xi, axis=1) * g[dx + R]
+
+    # Column pass (y direction) over the row-passed window.
+    acc = jnp.zeros((block_rows, w), jnp.float32)
+    for dy in range(K):
+        acc = acc + jax.lax.dynamic_slice(rp, (dy, 0), (block_rows, w)) * g[dy]
+
+    out_ref[...] = acc.reshape(block_rows * w)
+
+
+def chunk_call(w, h, chunk_size):
+    """Build fn(img[w*h], filt[K], offset) -> (blur_chunk[chunk_size],)."""
+    assert chunk_size % w == 0, "chunks are whole image rows"
+    chunk_rows = chunk_size // w
+    block_rows = 4 if chunk_rows % 4 == 0 else 1
+    grid = chunk_rows // block_rows
+    block = block_rows * w
+
+    kern = functools.partial(_kernel, w, h, block_rows)
+
+    def fn(img, filt, off):
+        offv = jnp.reshape(off, (1,))
+        out = pl.pallas_call(
+            kern,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec(img.shape, lambda i: (0,)),
+                pl.BlockSpec(filt.shape, lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((chunk_size,), jnp.float32),
+            interpret=True,
+        )(offv, img, filt)
+        return (out,)
+
+    return fn

@@ -1,0 +1,78 @@
+"""Mandelbrot escape-time — the paper's irregular benchmark.
+
+No read buffers (0:1 in Table 2): each work-item derives its pixel from the
+global id. The escape loop is a vectorized while_loop whose trip count is
+the *block maximum* — the same divergence cost model as a GPU warp, so the
+per-region irregularity the schedulers must absorb is preserved: blocks in
+the interior of the set cost maxiter iterations, blocks in empty regions a
+handful.
+
+Out pattern: the paper's kernel writes a float4 (4 pixels) per work-item;
+here one work-item = one pixel, recorded as such in the manifest.
+Iteration counts are emitted as f32 (exact integers < 2^24).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAXITER = 2048
+
+
+def _kernel(w, h, x0, y0, x1, y1, maxiter, off_ref, out_ref):
+    bsize = out_ref.shape[0]
+    pid = pl.program_id(0)
+    p = off_ref[0] + pid * bsize + jnp.arange(bsize, dtype=jnp.int32)
+    px = (p % w).astype(jnp.float32)
+    py = (p // w).astype(jnp.float32)
+    cre = x0 + px * ((x1 - x0) / w)
+    cim = y0 + py * ((y1 - y0) / h)
+
+    # Vectorized escape loop: runs until every pixel in the block escaped
+    # or maxiter — block cost = block max, the GPU-warp divergence model.
+    def body2(state):
+        zre, zim, it, active, iters = state
+        zre2 = zre * zre - zim * zim + cre
+        zim2 = 2.0 * zre * zim + cim
+        zre = jnp.where(active, zre2, zre)
+        zim = jnp.where(active, zim2, zim)
+        esc = zre * zre + zim * zim > 4.0
+        newly = jnp.logical_and(active, esc)
+        iters = jnp.where(newly, it + 1.0, iters)
+        active = jnp.logical_and(active, jnp.logical_not(esc))
+        return zre, zim, it + 1.0, active, iters
+
+    def cond2(state):
+        _, _, it, active, _ = state
+        return jnp.logical_and(jnp.any(active), it < maxiter)
+
+    zeros = jnp.zeros((bsize,), jnp.float32)
+    init = (zeros, zeros, jnp.float32(0.0), jnp.ones((bsize,), jnp.bool_), zeros)
+    _, _, _, active, iters = jax.lax.while_loop(cond2, body2, init)
+    # Pixels still active at maxiter belong to the set: mark with maxiter.
+    out_ref[...] = jnp.where(active, jnp.float32(maxiter), iters)
+
+
+def chunk_call(w, h, view, maxiter, chunk_size, block=256):
+    """Build fn(offset) -> (iters_chunk[chunk_size],). view=(x0,y0,x1,y1)."""
+    block = min(block, chunk_size)
+    assert chunk_size % block == 0
+    grid = chunk_size // block
+    x0, y0, x1, y1 = view
+    kern = functools.partial(_kernel, w, h, x0, y0, x1, y1, float(maxiter))
+
+    def fn(off):
+        offv = jnp.reshape(off, (1,))
+        out = pl.pallas_call(
+            kern,
+            grid=(grid,),
+            in_specs=[pl.BlockSpec((1,), lambda i: (0,))],
+            out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((chunk_size,), jnp.float32),
+            interpret=True,
+        )(offv)
+        return (out,)
+
+    return fn

@@ -1,0 +1,80 @@
+"""NBody (all-pairs gravitation) — regular benchmark (AMD APP SDK style).
+
+2 read + 2 write buffers (pos, vel in/out), 7 kernel args, out pattern 1:1
+(Table 2). Each work-item integrates one body against all N bodies.
+
+TPU adaptation: the chunk's body block (B,4) stays VMEM-resident while the
+full position array streams through in J-sized tiles via a fori_loop —
+the BlockSpec/loop expresses the HBM->VMEM schedule the OpenCL kernel
+expressed with work-group local-memory staging. The (B,J) pairwise
+distance computation is MXU-shaped (batched FMA over lanes).
+
+pos[:, 3] carries the body mass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DT = 0.005
+EPS2 = 50.0
+JTILE = 512
+
+
+def _kernel(n, dt, eps2, off_ref, posf_ref, pos_ref, vel_ref, opos_ref, ovel_ref):
+    del off_ref  # chunk pre-sliced in L2
+    posf = posf_ref[...]  # (n, 4) full positions
+    pos = pos_ref[...]  # (B, 4) chunk positions
+    vel = vel_ref[...]  # (B, 4)
+    b = pos.shape[0]
+
+    def tile(t, acc):
+        src = jax.lax.dynamic_slice(posf, (t * JTILE, 0), (JTILE, 4))
+        d = src[None, :, :3] - pos[:, None, :3]  # (B, J, 3)
+        dist2 = jnp.sum(d * d, axis=-1) + eps2  # (B, J)
+        inv = jax.lax.rsqrt(dist2)
+        inv3 = inv * inv * inv * src[None, :, 3]  # * mass_j
+        return acc + jnp.sum(d * inv3[:, :, None], axis=1)
+
+    acc = jax.lax.fori_loop(0, n // JTILE, tile, jnp.zeros((b, 3), jnp.float32))
+    nvel3 = vel[:, :3] + acc * dt
+    npos3 = pos[:, :3] + nvel3 * dt
+    opos_ref[...] = jnp.concatenate([npos3, pos[:, 3:4]], axis=1)
+    ovel_ref[...] = jnp.concatenate([nvel3, vel[:, 3:4]], axis=1)
+
+
+def chunk_call(n, chunk_size, block=256):
+    """Build fn(pos[n,4], vel[n,4], offset) -> (pos_chunk, vel_chunk)."""
+    block = min(block, chunk_size)
+    assert chunk_size % block == 0 and n % JTILE == 0
+    grid = chunk_size // block
+    kern = functools.partial(_kernel, n, DT, EPS2)
+
+    def fn(pos, vel, off):
+        pchunk = jax.lax.dynamic_slice(pos, (off, 0), (chunk_size, 4))
+        vchunk = jax.lax.dynamic_slice(vel, (off, 0), (chunk_size, 4))
+        offv = jnp.reshape(off, (1,))
+        outs = pl.pallas_call(
+            kern,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec(pos.shape, lambda i: (0, 0)),
+                pl.BlockSpec((block, 4), lambda i: (i, 0)),
+                pl.BlockSpec((block, 4), lambda i: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((block, 4), lambda i: (i, 0)),
+                pl.BlockSpec((block, 4), lambda i: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((chunk_size, 4), jnp.float32),
+                jax.ShapeDtypeStruct((chunk_size, 4), jnp.float32),
+            ],
+            interpret=True,
+        )(offv, pos, pchunk, vchunk)
+        return tuple(outs)
+
+    return fn

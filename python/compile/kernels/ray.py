@@ -1,0 +1,160 @@
+"""Sphere raytracer — the paper's irregular benchmark (open-source Ray[8]).
+
+1 read buffer (the scene: ns spheres x 8 floats: cx,cy,cz,r, cr,cg,cb,
+reflectivity), 1 write buffer (rgba per pixel), custom types and the
+largest arg count in Table 2.
+
+Each work-item traces one primary ray through the scene; reflective hits
+continue as secondary rays inside a vectorized while_loop (bounce depth is
+data-dependent -> block-level irregularity, like Mandelbrot). Shading is
+Lambertian toward a fixed point light (no occlusion test — see the note
+in the kernel body about shadow rays and executable build cost).
+
+Three scenes of growing complexity (ray1/ray2/ray3) share this executable;
+the scene is runtime input data.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAXBOUNCE = 8
+LIGHT = (5.0, 5.0, -2.0)
+AMBIENT = 0.1
+
+
+def _intersect(spheres, ox, oy, oz, dx, dy, dz):
+    """Nearest positive intersection. Returns (t, idx) with t=inf on miss."""
+    cx, cy, cz = spheres[:, 0], spheres[:, 1], spheres[:, 2]
+    r = spheres[:, 3]
+    lx = cx[None, :] - ox[:, None]
+    ly = cy[None, :] - oy[:, None]
+    lz = cz[None, :] - oz[:, None]
+    b = lx * dx[:, None] + ly * dy[:, None] + lz * dz[:, None]
+    c = lx * lx + ly * ly + lz * lz - (r * r)[None, :]
+    disc = b * b - c
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    t0 = b - sq
+    t1 = b + sq
+    t = jnp.where(t0 > 1e-3, t0, t1)
+    t = jnp.where(jnp.logical_and(disc > 0.0, t > 1e-3), t, jnp.inf)
+    idx = jnp.argmin(t, axis=1)
+    tmin = jnp.min(t, axis=1)
+    return tmin, idx
+
+
+def _kernel(w, h, off_ref, spheres_ref, out_ref):
+    bsize = out_ref.shape[0]
+    pid = pl.program_id(0)
+    p = off_ref[0] + pid * bsize + jnp.arange(bsize, dtype=jnp.int32)
+    spheres = spheres_ref[...]
+
+    px = (p % w).astype(jnp.float32)
+    py = (p // w).astype(jnp.float32)
+    # Camera at origin, screen plane at z=1, fov ~90deg.
+    dx = (px + 0.5) / w * 2.0 - 1.0
+    dy = ((py + 0.5) / h * 2.0 - 1.0) * (h / w)
+    dz = jnp.ones((bsize,), jnp.float32)
+    inv = jax.lax.rsqrt(dx * dx + dy * dy + dz * dz)
+    dx, dy, dz = dx * inv, dy * inv, dz * inv
+    ox = jnp.zeros((bsize,), jnp.float32)
+    oy = jnp.zeros((bsize,), jnp.float32)
+    oz = jnp.full((bsize,), -4.0)
+
+    colr = jnp.zeros((bsize,), jnp.float32)
+    colg = jnp.zeros((bsize,), jnp.float32)
+    colb = jnp.zeros((bsize,), jnp.float32)
+    atten = jnp.ones((bsize,), jnp.float32)
+    active = jnp.ones((bsize,), jnp.bool_)
+    depth = jnp.float32(0.0)
+    lx, ly, lz = LIGHT
+
+    def cond(st):
+        return jnp.logical_and(jnp.any(st[9]), st[10] < MAXBOUNCE)
+
+    def body(st):
+        ox, oy, oz, dx, dy, dz, cr_, cg_, cb_, act, dep, att = st
+        t, idx = _intersect(spheres, ox, oy, oz, dx, dy, dz)
+        hit = jnp.logical_and(act, jnp.isfinite(t))
+        ts = jnp.where(jnp.isfinite(t), t, 0.0)
+        hx = ox + dx * ts
+        hy = oy + dy * ts
+        hz = oz + dz * ts
+        scx = jnp.take(spheres[:, 0], idx)
+        scy = jnp.take(spheres[:, 1], idx)
+        scz = jnp.take(spheres[:, 2], idx)
+        sr = jnp.take(spheres[:, 3], idx)
+        nr = (hx - scx) / sr
+        ng = (hy - scy) / sr
+        nb = (hz - scz) / sr
+        # Lambert shading toward the point light.
+        tlx = lx - hx
+        tly = ly - hy
+        tlz = lz - hz
+        linv = jax.lax.rsqrt(tlx * tlx + tly * tly + tlz * tlz)
+        tlx, tly, tlz = tlx * linv, tly * linv, tlz * linv
+        lam = jnp.maximum(nr * tlx + ng * tly + nb * tlz, 0.0)
+        # Lambert shading only — shadow rays (a second _intersect per
+        # bounce) double the HLO body and with it the per-device
+        # executable build time; the load-balancing-relevant property
+        # (data-dependent bounce irregularity) is carried by reflections.
+        shade = AMBIENT + lam * (1.0 - AMBIENT)
+        kr = jnp.take(spheres[:, 4], idx)
+        kg = jnp.take(spheres[:, 5], idx)
+        kb = jnp.take(spheres[:, 6], idx)
+        refl = jnp.take(spheres[:, 7], idx)
+        contrib = att * (1.0 - refl)
+        cr_ = jnp.where(hit, cr_ + contrib * kr * shade, cr_)
+        cg_ = jnp.where(hit, cg_ + contrib * kg * shade, cg_)
+        cb_ = jnp.where(hit, cb_ + contrib * kb * shade, cb_)
+        # Continue only reflective hits.
+        dn = dx * nr + dy * ng + dz * nb
+        rdx = dx - 2.0 * dn * nr
+        rdy = dy - 2.0 * dn * ng
+        rdz = dz - 2.0 * dn * nb
+        cont = jnp.logical_and(hit, refl > 0.01)
+        ox = jnp.where(cont, hx + nr * 1e-2, ox)
+        oy = jnp.where(cont, hy + ng * 1e-2, oy)
+        oz = jnp.where(cont, hz + nb * 1e-2, oz)
+        dx = jnp.where(cont, rdx, dx)
+        dy = jnp.where(cont, rdy, dy)
+        dz = jnp.where(cont, rdz, dz)
+        att = jnp.where(cont, att * refl, att)
+        return ox, oy, oz, dx, dy, dz, cr_, cg_, cb_, cont, dep + 1.0, att
+
+    st = (ox, oy, oz, dx, dy, dz, colr, colg, colb, active, depth, atten)
+    st = jax.lax.while_loop(cond, body, st)
+    cr_, cg_, cb_ = st[6], st[7], st[8]
+    rgba = jnp.stack(
+        [jnp.clip(cr_, 0.0, 1.0), jnp.clip(cg_, 0.0, 1.0), jnp.clip(cb_, 0.0, 1.0),
+         jnp.ones((bsize,), jnp.float32)],
+        axis=1,
+    )
+    out_ref[...] = rgba
+
+
+def chunk_call(w, h, nspheres, chunk_size, block=128):
+    """Build fn(spheres[ns,8], offset) -> (rgba_chunk[chunk_size,4],)."""
+    block = min(block, chunk_size)
+    assert chunk_size % block == 0
+    grid = chunk_size // block
+    kern = functools.partial(_kernel, w, h)
+
+    def fn(spheres, off):
+        offv = jnp.reshape(off, (1,))
+        out = pl.pallas_call(
+            kern,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec((nspheres, 8), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block, 4), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((chunk_size, 4), jnp.float32),
+            interpret=True,
+        )(offv, spheres)
+        return (out,)
+
+    return fn

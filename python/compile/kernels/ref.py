@@ -1,0 +1,178 @@
+"""Pure-jnp oracles for every kernel — the build-time correctness signal.
+
+Each function computes the *full* problem with plain jax.numpy, no Pallas.
+pytest checks every chunk executable against the matching slice of these.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import binomial as _binomial
+from . import gaussian as _gaussian
+from . import mandelbrot as _mandelbrot
+from . import nbody as _nbody
+from . import ray as _ray
+
+K = _gaussian.K
+R = K // 2
+
+
+def gaussian(img, filt, w, h):
+    """Separable K-tap clamped-border blur of a flattened w*h image.
+
+    Row pass with clamped x indices, then column pass with clamped y —
+    the exact semantics of the Pallas kernel (including the border
+    behaviour, where clamp-then-separate differs from a true 2-D clamp).
+    """
+    im = img.reshape(h, w)
+    g = filt.reshape(K)
+    xs = jnp.arange(w)
+    ys = jnp.arange(h)
+    rp = jnp.zeros((h, w), jnp.float32)
+    for dx in range(-R, R + 1):
+        xx = jnp.clip(xs + dx, 0, w - 1)
+        rp = rp + im[:, xx] * g[dx + R]
+    acc = jnp.zeros((h, w), jnp.float32)
+    for dy in range(-R, R + 1):
+        yy = jnp.clip(ys + dy, 0, h - 1)
+        acc = acc + rp[yy, :] * g[dy + R]
+    return (acc.reshape(-1),)
+
+
+def binomial(prices):
+    """European call on a STEPS-step lattice, vectorized over options."""
+    steps = _binomial.STEPS
+    s = 10.0 + prices * 90.0
+    strike = 50.0
+    dt = 1.0 / steps
+    vsdt = _binomial.VOLATILITY * jnp.sqrt(dt)
+    rdt = jnp.exp(_binomial.RISK_FREE * dt)
+    u = jnp.exp(vsdt)
+    d = 1.0 / u
+    pu = (rdt - d) / (u - d)
+    pd = 1.0 - pu
+    pu_by_r = pu / rdt
+    pd_by_r = pd / rdt
+    j = jnp.arange(steps + 1, dtype=jnp.float32)
+    st = s[:, None] * jnp.exp(vsdt * (2.0 * j[None, :] - steps))
+    v = jnp.maximum(st - strike, 0.0)
+    # Explicit (non-roll) backward induction: width shrinks each step.
+    for _ in range(steps):
+        v = pu_by_r * v[:, 1:] + pd_by_r * v[:, :-1]
+    return (v[:, 0],)
+
+
+def mandelbrot(w, h, view, maxiter):
+    """Escape iterations per pixel, flattened row-major, as f32."""
+    x0, y0, x1, y1 = view
+    p = jnp.arange(w * h, dtype=jnp.int32)
+    cre = x0 + (p % w).astype(jnp.float32) * ((x1 - x0) / w)
+    cim = y0 + (p // w).astype(jnp.float32) * ((y1 - y0) / h)
+    def body(it, st):
+        zre, zim, iters, active = st
+        zre2 = zre * zre - zim * zim + cre
+        zim2 = 2.0 * zre * zim + cim
+        zre = jnp.where(active, zre2, zre)
+        zim = jnp.where(active, zim2, zim)
+        esc = zre * zre + zim * zim > 4.0
+        newly = jnp.logical_and(active, esc)
+        iters = jnp.where(newly, (it + 1).astype(jnp.float32), iters)
+        active = jnp.logical_and(active, jnp.logical_not(esc))
+        return zre, zim, iters, active
+
+    zre = jnp.zeros_like(cre)
+    init = (zre, zre, zre, jnp.ones(cre.shape, jnp.bool_))
+    _, _, iters, active = jax.lax.fori_loop(0, maxiter, body, init)
+    iters = jnp.where(active, jnp.float32(maxiter), iters)
+    return (iters,)
+
+
+def nbody(pos, vel):
+    """One leapfrog step of all-pairs gravity. pos[:,3] = mass."""
+    dt = _nbody.DT
+    eps2 = _nbody.EPS2
+    d = pos[None, :, :3] - pos[:, None, :3]
+    dist2 = jnp.sum(d * d, axis=-1) + eps2
+    inv = jax.lax.rsqrt(dist2)
+    inv3 = inv * inv * inv * pos[None, :, 3]
+    acc = jnp.sum(d * inv3[:, :, None], axis=1)
+    nvel3 = vel[:, :3] + acc * dt
+    npos3 = pos[:, :3] + nvel3 * dt
+    opos = jnp.concatenate([npos3, pos[:, 3:4]], axis=1)
+    ovel = jnp.concatenate([nvel3, vel[:, 3:4]], axis=1)
+    return (opos, ovel)
+
+
+def ray(spheres, w, h):
+    """Full-frame reference render: same math as the kernel, whole image."""
+    fn = _ray.chunk_call(w, h, spheres.shape[0], w * h, block=w * h)
+    # The kernel itself *is* jnp under interpret mode; using it at full size
+    # with a single block gives a reference independent of grid/blocking.
+    return fn(spheres, jnp.int32(0))
+
+
+def ray_jnp(spheres, w, h, maxbounce=None):
+    """Independent non-Pallas raytracer oracle (loop-unrolled bounces)."""
+    maxbounce = maxbounce or _ray.MAXBOUNCE
+    n = w * h
+    p = jnp.arange(n, dtype=jnp.int32)
+    px = (p % w).astype(jnp.float32)
+    py = (p // w).astype(jnp.float32)
+    dx = (px + 0.5) / w * 2.0 - 1.0
+    dy = ((py + 0.5) / h * 2.0 - 1.0) * (h / w)
+    dz = jnp.ones((n,), jnp.float32)
+    inv = jax.lax.rsqrt(dx * dx + dy * dy + dz * dz)
+    dx, dy, dz = dx * inv, dy * inv, dz * inv
+    ox = jnp.zeros((n,), jnp.float32)
+    oy = jnp.zeros((n,), jnp.float32)
+    oz = jnp.full((n,), -4.0)
+    cr_ = jnp.zeros((n,), jnp.float32)
+    cg_ = jnp.zeros((n,), jnp.float32)
+    cb_ = jnp.zeros((n,), jnp.float32)
+    att = jnp.ones((n,), jnp.float32)
+    act = jnp.ones((n,), jnp.bool_)
+    lx, ly, lz = _ray.LIGHT
+    for _ in range(maxbounce):
+        t, idx = _ray._intersect(spheres, ox, oy, oz, dx, dy, dz)
+        hit = jnp.logical_and(act, jnp.isfinite(t))
+        ts = jnp.where(jnp.isfinite(t), t, 0.0)
+        hx, hy, hz = ox + dx * ts, oy + dy * ts, oz + dz * ts
+        scx = jnp.take(spheres[:, 0], idx)
+        scy = jnp.take(spheres[:, 1], idx)
+        scz = jnp.take(spheres[:, 2], idx)
+        sr = jnp.take(spheres[:, 3], idx)
+        nr, ng, nb = (hx - scx) / sr, (hy - scy) / sr, (hz - scz) / sr
+        tlx, tly, tlz = lx - hx, ly - hy, lz - hz
+        linv = jax.lax.rsqrt(tlx * tlx + tly * tly + tlz * tlz)
+        tlx, tly, tlz = tlx * linv, tly * linv, tlz * linv
+        lam = jnp.maximum(nr * tlx + ng * tly + nb * tlz, 0.0)
+        shade = _ray.AMBIENT + lam * (1.0 - _ray.AMBIENT)
+        kr = jnp.take(spheres[:, 4], idx)
+        kg = jnp.take(spheres[:, 5], idx)
+        kb = jnp.take(spheres[:, 6], idx)
+        refl = jnp.take(spheres[:, 7], idx)
+        contrib = att * (1.0 - refl)
+        cr_ = jnp.where(hit, cr_ + contrib * kr * shade, cr_)
+        cg_ = jnp.where(hit, cg_ + contrib * kg * shade, cg_)
+        cb_ = jnp.where(hit, cb_ + contrib * kb * shade, cb_)
+        dn = dx * nr + dy * ng + dz * nb
+        rdx, rdy, rdz = dx - 2 * dn * nr, dy - 2 * dn * ng, dz - 2 * dn * nb
+        cont = jnp.logical_and(hit, refl > 0.01)
+        ox = jnp.where(cont, hx + nr * 1e-2, ox)
+        oy = jnp.where(cont, hy + ng * 1e-2, oy)
+        oz = jnp.where(cont, hz + nb * 1e-2, oz)
+        dx = jnp.where(cont, rdx, dx)
+        dy = jnp.where(cont, rdy, dy)
+        dz = jnp.where(cont, rdz, dz)
+        att = jnp.where(cont, att * refl, att)
+        act = cont
+    rgba = jnp.stack(
+        [jnp.clip(cr_, 0.0, 1.0), jnp.clip(cg_, 0.0, 1.0), jnp.clip(cb_, 0.0, 1.0),
+         jnp.ones((n,), jnp.float32)],
+        axis=1,
+    )
+    return (rgba,)
+
+
+def mandelbrot_ref(w, h, view, maxiter):  # convenience alias
+    return mandelbrot(w, h, view, maxiter)

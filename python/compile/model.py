@@ -1,0 +1,295 @@
+"""L2 — the benchmark registry: full compute graphs built from L1 kernels.
+
+A BenchSpec fixes everything the AOT step and the Rust runtime must agree
+on: problem size (work-items), scheduling granule (= the paper's local work
+size group), input/output buffer layout, baked scalar args, and the chunk
+function builder. Deterministic input generators double as the golden
+workload for the Rust integration tests.
+"""
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import binomial as kbinomial
+from .kernels import gaussian as kgaussian
+from .kernels import mandelbrot as kmandelbrot
+from .kernels import nbody as knbody
+from .kernels import ray as kray
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferSpec:
+    name: str
+    shape: Tuple[int, ...]  # full-problem shape
+    elems_per_item: int  # flattened elements per work-item (outputs)
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    name: str
+    n: int  # global work items
+    granule: int  # scheduling granule (paper: local work size)
+    inputs: Tuple[BufferSpec, ...]
+    outputs: Tuple[BufferSpec, ...]
+    scalars: Dict[str, float]  # baked at AOT time (paper: kernel args)
+    out_pattern: Tuple[int, int]  # paper Table 2 (out indexes : work items)
+    irregular: bool
+    make_inputs: Callable[[], List[np.ndarray]]
+    build_chunk: Callable[[int], Callable]  # chunk_size -> fn(*ins, off)
+    ref_fn: Callable[[Sequence[np.ndarray]], Tuple]
+
+    def chunk_sizes(self) -> List[int]:
+        """granule * 4^k up to the full problem size (plus the full size).
+
+        A 4x ladder keeps per-device executable builds cheap (the paper's
+        per-device clBuildProgram analog) at the cost of at most 3
+        sub-launches per ladder level during greedy decomposition.
+        """
+        sizes = []
+        s = self.granule
+        while s < self.n:
+            sizes.append(s)
+            s *= 4
+        sizes.append(self.n)
+        return sizes
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------------------
+# Gaussian: 512x512 image, 5x5 blur. Regular.
+GW, GH = 2048, 2048
+
+
+def _gaussian_filter() -> np.ndarray:
+    sigma = 1.5
+    ax = np.arange(kgaussian.K) - kgaussian.R
+    g = np.exp(-(ax**2) / (2 * sigma**2))
+    return (g / g.sum()).astype(np.float32)
+
+
+def _gaussian_inputs() -> List[np.ndarray]:
+    r = _rng(11)
+    img = r.random(GW * GH, dtype=np.float32) * 255.0
+    return [img, _gaussian_filter()]
+
+
+# --------------------------------------------------------------------------
+# Binomial: 4096 options. Regular, heavy per-item compute.
+BN = 4096
+
+
+def _binomial_inputs() -> List[np.ndarray]:
+    r = _rng(12)
+    return [r.random(BN, dtype=np.float32)]
+
+
+# --------------------------------------------------------------------------
+# Mandelbrot: 256x256 pixels over a view mixing interior/exterior. Irregular.
+MW, MH = 512, 512
+MVIEW = (-2.0, -1.25, 0.5, 1.25)
+
+
+# --------------------------------------------------------------------------
+# NBody: 4096 bodies, one integration step. Regular.
+NB = 8192
+
+
+def _nbody_inputs() -> List[np.ndarray]:
+    r = _rng(13)
+    pos = (r.random((NB, 4), dtype=np.float32) - 0.5) * 200.0
+    pos[:, 3] = r.random(NB, dtype=np.float32) * 10.0 + 1.0  # mass
+    vel = (r.random((NB, 4), dtype=np.float32) - 0.5) * 2.0
+    vel[:, 3] = 0.0
+    return [pos.reshape(-1), vel.reshape(-1)]
+
+
+# --------------------------------------------------------------------------
+# Ray: 128x128 pixels, 16 spheres. Irregular (bounce depth varies).
+RW, RH = 512, 512
+RNS = 32
+
+
+def make_scene(which: int) -> np.ndarray:
+    """Three scenes of growing complexity, as the paper's ray1/2/3."""
+    r = _rng(100 + which)
+    s = np.zeros((RNS, 8), dtype=np.float32)
+    # Ground-ish large sphere.
+    s[0] = [0.0, -103.0, 10.0, 100.0, 0.6, 0.6, 0.6, 0.05 * which]
+    for i in range(1, RNS):
+        # Scene 1: spread out, mostly diffuse. Scene 3: clustered, mirrored.
+        spread = 14.0 / which
+        s[i, 0] = (r.random() - 0.5) * spread
+        s[i, 1] = (r.random() - 0.5) * spread * 0.5
+        s[i, 2] = 6.0 + r.random() * 10.0 / which
+        s[i, 3] = 0.6 + r.random() * 1.2
+        s[i, 4:7] = r.random(3) * 0.9 + 0.1
+        s[i, 7] = min(0.9, r.random() * 0.3 * which)
+    return s
+
+
+def _ray_inputs(which: int = 1) -> Callable[[], List[np.ndarray]]:
+    def gen() -> List[np.ndarray]:
+        return [make_scene(which).reshape(-1)]
+
+    return gen
+
+
+# --------------------------------------------------------------------------
+
+
+def _benches() -> Dict[str, BenchSpec]:
+    b: Dict[str, BenchSpec] = {}
+
+    b["gaussian"] = BenchSpec(
+        name="gaussian",
+        n=GW * GH,
+        granule=4 * GW,
+        inputs=(
+            BufferSpec("img", (GW * GH,), 1),
+            BufferSpec("filt", (kgaussian.K,), 0),
+        ),
+        outputs=(BufferSpec("blur", (GW * GH,), 1),),
+        scalars={"width": GW, "height": GH, "ksize": kgaussian.K},
+        out_pattern=(1, 1),
+        irregular=False,
+        make_inputs=_gaussian_inputs,
+        build_chunk=lambda s: kgaussian.chunk_call(GW, GH, s),
+        ref_fn=lambda ins: ref.gaussian(jnp.asarray(ins[0]), jnp.asarray(ins[1]), GW, GH),
+    )
+
+    b["binomial"] = BenchSpec(
+        name="binomial",
+        n=BN,
+        granule=64,
+        inputs=(BufferSpec("prices", (BN,), 1),),
+        outputs=(BufferSpec("value", (BN,), 1),),
+        scalars={"steps": kbinomial.STEPS},
+        out_pattern=(1, 255),  # paper: 255 work-items cooperate per option
+        irregular=False,
+        make_inputs=_binomial_inputs,
+        build_chunk=lambda s: kbinomial.chunk_call(BN, s),
+        ref_fn=lambda ins: ref.binomial(jnp.asarray(ins[0])),
+    )
+
+    b["mandelbrot"] = BenchSpec(
+        name="mandelbrot",
+        n=MW * MH,
+        granule=256,
+        inputs=(),
+        outputs=(BufferSpec("iters", (MW * MH,), 1),),
+        scalars={
+            "width": MW, "height": MH, "maxiter": kmandelbrot.MAXITER,
+            "x0": MVIEW[0], "y0": MVIEW[1], "x1": MVIEW[2], "y1": MVIEW[3],
+        },
+        out_pattern=(4, 1),  # paper: one work-item wrote a float4
+        irregular=True,
+        make_inputs=lambda: [],
+        build_chunk=lambda s: kmandelbrot.chunk_call(
+            MW, MH, MVIEW, kmandelbrot.MAXITER, s
+        ),
+        ref_fn=lambda ins: ref.mandelbrot(MW, MH, MVIEW, kmandelbrot.MAXITER),
+    )
+
+    b["nbody"] = BenchSpec(
+        name="nbody",
+        n=NB,
+        granule=256,
+        inputs=(
+            BufferSpec("pos", (NB * 4,), 4),
+            BufferSpec("vel", (NB * 4,), 4),
+        ),
+        outputs=(
+            BufferSpec("opos", (NB * 4,), 4),
+            BufferSpec("ovel", (NB * 4,), 4),
+        ),
+        scalars={"dt": knbody.DT, "eps2": knbody.EPS2, "bodies": NB},
+        out_pattern=(1, 1),
+        irregular=False,
+        make_inputs=_nbody_inputs,
+        build_chunk=lambda s: _nbody_chunk(s),
+        ref_fn=lambda ins: _nbody_ref(ins),
+    )
+
+    for which in (1, 2, 3):
+        name = f"ray{which}"
+        b[name] = BenchSpec(
+            name=name,
+            n=RW * RH,
+            granule=256,
+            inputs=(BufferSpec("spheres", (RNS * 8,), 0),),
+            outputs=(BufferSpec("rgba", (RW * RH * 4,), 4),),
+            scalars={
+                "width": RW, "height": RH, "nspheres": RNS,
+                "maxbounce": kray.MAXBOUNCE, "scene": which,
+            },
+            out_pattern=(1, 1),
+            irregular=True,
+            make_inputs=_ray_inputs(which),
+            build_chunk=lambda s: _ray_chunk(s),
+            ref_fn=lambda ins: _ray_ref(ins),
+        )
+    return b
+
+
+def _nbody_chunk(s: int) -> Callable:
+    inner = knbody.chunk_call(NB, s)
+
+    def fn(pos_flat, vel_flat, off):
+        outs = inner(
+            jnp.reshape(pos_flat, (NB, 4)), jnp.reshape(vel_flat, (NB, 4)), off
+        )
+        return tuple(jnp.reshape(o, (-1,)) for o in outs)
+
+    return fn
+
+
+def _nbody_ref(ins) -> Tuple:
+    pos = jnp.asarray(ins[0]).reshape(NB, 4)
+    vel = jnp.asarray(ins[1]).reshape(NB, 4)
+    opos, ovel = ref.nbody(pos, vel)
+    return (opos.reshape(-1), ovel.reshape(-1))
+
+
+def _ray_chunk(s: int) -> Callable:
+    inner = kray.chunk_call(RW, RH, RNS, s)
+
+    def fn(spheres_flat, off):
+        out = inner(jnp.reshape(spheres_flat, (RNS, 8)), off)
+        return (jnp.reshape(out[0], (-1,)),)
+
+    return fn
+
+
+def _ray_ref(ins) -> Tuple:
+    # Golden outputs come from the kernel's own while-loop structure (at
+    # full size, single grid step): reflective ray paths are chaotic, so
+    # an unrolled oracle diverges visibly after a few bounces. The
+    # independent jnp oracle (ref.ray_jnp) is checked in pytest with a
+    # mismatch-fraction tolerance instead.
+    spheres = jnp.asarray(ins[0]).reshape(RNS, 8)
+    out = ref.ray(spheres, RW, RH)
+    return (out[0].reshape(-1),)
+
+
+BENCHES: Dict[str, BenchSpec] = _benches()
+
+# ray1/2/3 share executables: same HLO, different scene input data.
+ARTIFACT_ALIASES = {"ray2": "ray1", "ray3": "ray1"}
+
+
+def artifact_bench(name: str) -> str:
+    """The bench whose artifacts `name` executes with."""
+    return ARTIFACT_ALIASES.get(name, name)
+
+
+def item_offset_elems(spec: BenchSpec, buf: BufferSpec) -> int:
+    """Flattened elements per work-item for an input/output buffer."""
+    return buf.elems_per_item

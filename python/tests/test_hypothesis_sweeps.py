@@ -1,0 +1,114 @@
+"""Hypothesis sweeps over kernel parameters: shapes, offsets and data
+domains beyond the fixed bench configuration. These exercise the kernels
+as *kernels* (arbitrary well-formed arguments), not just the AOT points."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binomial as kbinomial
+from compile.kernels import gaussian as kgaussian
+from compile.kernels import mandelbrot as kmandelbrot
+from compile.kernels import nbody as knbody
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    opts=st.integers(2, 8).map(lambda k: 64 * k),
+    offg=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binomial_any_offset_matches_ref(opts, offg, seed):
+    rng = np.random.default_rng(seed)
+    prices = rng.random(opts, dtype=np.float32)
+    size = 64
+    off = offg * 16
+    if off + size > opts:
+        off = opts - size
+    fn = jax.jit(kbinomial.chunk_call(opts, size))
+    got = np.asarray(fn(jnp.asarray(prices), jnp.int32(off))[0])
+    (want,) = ref.binomial(jnp.asarray(prices))
+    np.testing.assert_allclose(got, np.asarray(want)[off:off + size],
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    w=st.sampled_from([32, 64, 128]),
+    rows=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gaussian_any_image_matches_ref(w, rows, seed):
+    h = w  # square images
+    rng = np.random.default_rng(seed)
+    img = rng.random(w * h, dtype=np.float32) * 100.0
+    filt = rng.random(kgaussian.K, dtype=np.float32)
+    filt /= filt.sum()
+    size = rows * w
+    off = (h // 3) * w
+    if off + size > w * h:
+        off = w * h - size
+    fn = jax.jit(kgaussian.chunk_call(w, h, size))
+    got = np.asarray(fn(jnp.asarray(img), jnp.asarray(filt), jnp.int32(off))[0])
+    (want,) = ref.gaussian(jnp.asarray(img), jnp.asarray(filt), w, h)
+    np.testing.assert_allclose(got, np.asarray(want)[off:off + size],
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    w=st.sampled_from([32, 64]),
+    maxiter=st.sampled_from([16, 64, 256]),
+    x0=st.floats(-2.5, -1.0),
+    y0=st.floats(-1.5, -0.5),
+)
+def test_mandelbrot_any_view_matches_ref(w, maxiter, x0, y0):
+    h = w
+    view = (x0, y0, x0 + 2.0, y0 + 2.0)
+    size = w * h
+    fn = jax.jit(kmandelbrot.chunk_call(w, h, view, maxiter, size, block=64))
+    got = np.asarray(fn(jnp.int32(0))[0])
+    (want,) = ref.mandelbrot(w, h, view, maxiter)
+    want = np.asarray(want)
+    # Escape-boundary pixels can legitimately differ by one iteration due
+    # to fused-multiply ordering; demand exactness on 99.5 %.
+    same = np.isclose(got, want, atol=0.5)
+    assert same.mean() > 0.995, f"{(~same).sum()} mismatching pixels"
+
+
+@settings(**SETTINGS)
+@given(
+    nt=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nbody_any_size_matches_ref(nt, seed):
+    n = knbody.JTILE * nt
+    rng = np.random.default_rng(seed)
+    pos = (rng.random((n, 4), dtype=np.float32) - 0.5) * 100.0
+    pos[:, 3] = rng.random(n, dtype=np.float32) * 5.0 + 1.0
+    vel = (rng.random((n, 4), dtype=np.float32) - 0.5)
+    vel[:, 3] = 0.0
+    size = min(256, n)
+    fn = jax.jit(knbody.chunk_call(n, size))
+    opos, ovel = fn(jnp.asarray(pos), jnp.asarray(vel), jnp.int32(0))
+    rpos, rvel = ref.nbody(jnp.asarray(pos), jnp.asarray(vel))
+    np.testing.assert_allclose(np.asarray(opos), np.asarray(rpos)[:size],
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(ovel), np.asarray(rvel)[:size],
+                               rtol=5e-4, atol=5e-4)
+
+
+@settings(**SETTINGS)
+@given(block=st.sampled_from([32, 64, 128, 256]))
+def test_binomial_blocking_invariance(block):
+    """Grid/block decomposition must not change results."""
+    opts = 512
+    rng = np.random.default_rng(7)
+    prices = jnp.asarray(rng.random(opts, dtype=np.float32))
+    a = jax.jit(kbinomial.chunk_call(opts, 256, block=block))(prices, jnp.int32(0))[0]
+    b = jax.jit(kbinomial.chunk_call(opts, 256, block=256))(prices, jnp.int32(0))[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,133 @@
+"""Core correctness signal: every Pallas chunk kernel must reproduce the
+pure-jnp oracle on every chunk size and at arbitrary granule-aligned
+offsets. This is what makes the AOT artifacts trustworthy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+
+def _tols(spec):
+    # Ray's while-loop bounces accumulate in a different fused order than
+    # the unrolled oracle; boundary hits differ by ~1e-3 in shade.
+    if spec.name.startswith("ray"):
+        return dict(rtol=3e-3, atol=3e-3)
+    return dict(rtol=RTOL, atol=ATOL)
+
+
+def _check_chunk(spec, size, offset):
+    ins = spec.make_inputs()
+    fn = jax.jit(spec.build_chunk(size))
+    outs = fn(*[jnp.asarray(a) for a in ins], jnp.int32(offset))
+    refs = spec.ref_fn(ins)
+    assert len(outs) == len(refs) == len(spec.outputs)
+    for o, r, buf in zip(outs, refs, spec.outputs):
+        e = buf.elems_per_item
+        got = np.asarray(o).reshape(-1)
+        want = np.asarray(r).reshape(-1)[offset * e:(offset + size) * e]
+        np.testing.assert_allclose(got, want, **_tols(spec),
+                                   err_msg=f"{spec.name} {buf.name} S={size} off={offset}")
+
+
+@pytest.mark.parametrize("name", list(model.BENCHES))
+def test_smallest_chunk_at_zero(name):
+    spec = model.BENCHES[name]
+    _check_chunk(spec, spec.granule, 0)
+
+
+@pytest.mark.parametrize("name", list(model.BENCHES))
+def test_smallest_chunk_at_tail(name):
+    spec = model.BENCHES[name]
+    _check_chunk(spec, spec.granule, spec.n - spec.granule)
+
+
+@pytest.mark.parametrize("name", list(model.BENCHES))
+def test_mid_chunk_unaligned_region(name):
+    """A larger chunk starting at an odd granule multiple."""
+    spec = model.BENCHES[name]
+    size = min(spec.granule * 4, spec.n)
+    offset = min(spec.granule * 3, spec.n - size)
+    _check_chunk(spec, size, offset)
+
+
+@pytest.mark.parametrize("name", list(model.BENCHES))
+def test_full_problem_chunk(name):
+    """The full-size executable (used by solo/native runs) matches ref."""
+    spec = model.BENCHES[name]
+    _check_chunk(spec, spec.n, 0)
+
+
+@pytest.mark.parametrize("name", list(model.BENCHES))
+def test_chunks_tile_the_problem(name):
+    """Concatenating every chunk of one size reproduces the full output
+    (the co-execution invariant: disjoint ranges merge losslessly)."""
+    spec = model.BENCHES[name]
+    size = spec.chunk_sizes()[min(2, len(spec.chunk_sizes()) - 1)]
+    ins = spec.make_inputs()
+    jins = [jnp.asarray(a) for a in ins]
+    fn = jax.jit(spec.build_chunk(size))
+    pieces = [fn(*jins, jnp.int32(off)) for off in range(0, spec.n, size)]
+    refs = spec.ref_fn(ins)
+    for k, buf in enumerate(spec.outputs):
+        got = np.concatenate([np.asarray(p[k]).reshape(-1) for p in pieces])
+        np.testing.assert_allclose(
+            got, np.asarray(refs[k]).reshape(-1), **_tols(spec))
+
+
+def test_mandelbrot_irregular_cost_profile():
+    """Iteration counts must differ strongly across regions — the property
+    the schedulers are evaluated against (Figure 6)."""
+    spec = model.BENCHES["mandelbrot"]
+    (iters,) = spec.ref_fn([])
+    arr = np.asarray(iters).reshape(model.MH, model.MW)
+    top = arr[: model.MH // 8].mean()
+    mid = arr[model.MH // 2 - 8 : model.MH // 2 + 8].mean()
+    assert mid > 4 * top, f"interior rows ({mid:.0f}) should dwarf edge rows ({top:.0f})"
+
+
+def test_ray_kernel_vs_independent_oracle():
+    """The Pallas ray kernel against the non-Pallas unrolled raytracer.
+    Reflective paths are chaotic, so boundary rays may diverge; demand
+    99% of channel values within 1e-2 and a tiny mean error."""
+    from compile.kernels import ref as kref
+    for which in (1, 2, 3):
+        spec = model.BENCHES[f"ray{which}"]
+        ins = spec.make_inputs()
+        (got,) = spec.ref_fn(ins)  # kernel-structured
+        spheres = jnp.asarray(ins[0]).reshape(model.RNS, 8)
+        (want,) = kref.ray_jnp(spheres, model.RW, model.RH)
+        got = np.asarray(got).reshape(-1)
+        want = np.asarray(want).reshape(-1)
+        close = np.abs(got - want) <= 1e-2
+        assert close.mean() > 0.99, f"ray{which}: {(~close).sum()} values off"
+        assert np.abs(got - want).mean() < 1e-3
+
+
+def test_ray_scenes_have_growing_reflectivity():
+    s1, s3 = model.make_scene(1), model.make_scene(3)
+    assert s3[:, 7].mean() > s1[:, 7].mean()
+
+
+def test_binomial_values_sane():
+    spec = model.BENCHES["binomial"]
+    ins = spec.make_inputs()
+    (v,) = spec.ref_fn(ins)
+    v = np.asarray(v)
+    s = 10.0 + np.asarray(ins[0]) * 90.0
+    assert (v >= 0).all(), "option value is non-negative"
+    assert (v <= s + 1e-3).all(), "call value bounded by spot"
+
+
+def test_nbody_mass_preserved():
+    spec = model.BENCHES["nbody"]
+    ins = spec.make_inputs()
+    opos, _ = spec.ref_fn(ins)
+    pos = np.asarray(ins[0]).reshape(-1, 4)
+    out = np.asarray(opos).reshape(-1, 4)
+    np.testing.assert_allclose(out[:, 3], pos[:, 3], rtol=0, atol=0)

@@ -1,0 +1,100 @@
+"""Structural tests of the AOT contract: chunk-size ladders, manifest
+shape agreement and golden-file round trips (what the Rust side relies on)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model
+
+ART = os.environ.get("ECL_ARTIFACTS",
+                     os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", list(model.BENCHES))
+def test_chunk_ladder_is_powers_of_two_times_granule(name):
+    spec = model.BENCHES[name]
+    sizes = spec.chunk_sizes()
+    assert sizes[0] == spec.granule
+    assert sizes[-1] == spec.n
+    for a, b in zip(sizes, sizes[1:]):
+        assert b == 4 * a or b == spec.n
+    # Greedy decomposition closure: any granule multiple is representable.
+    assert all(s % spec.granule == 0 for s in sizes)
+
+
+@pytest.mark.parametrize("name", list(model.BENCHES))
+def test_manifest_entry_matches_spec(name):
+    m = _manifest()["benches"][name]
+    spec = model.BENCHES[name]
+    assert m["n"] == spec.n
+    assert m["granule"] == spec.granule
+    assert m["irregular"] == spec.irregular
+    assert m["out_pattern"] == list(spec.out_pattern)
+    assert len(m["inputs"]) == len(spec.inputs)
+    assert len(m["outputs"]) == len(spec.outputs)
+    assert [c["size"] for c in m["chunks"]] == spec.chunk_sizes()
+
+
+@pytest.mark.parametrize("name", list(model.BENCHES))
+def test_hlo_artifacts_exist_and_parse_trivially(name):
+    m = _manifest()["benches"][name]
+    for chunk in m["chunks"]:
+        path = os.path.join(ART, chunk["file"])
+        assert os.path.exists(path), path
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{path} is not HLO text"
+
+
+@pytest.mark.parametrize("name", list(model.BENCHES))
+def test_golden_files_roundtrip(name):
+    m = _manifest()["benches"][name]
+    spec = model.BENCHES[name]
+    ins = spec.make_inputs()
+    for entry, arr in zip(m["inputs"], ins):
+        data = np.fromfile(os.path.join(ART, entry["file"]), dtype="<f4")
+        assert data.shape[0] == entry["elems"]
+        np.testing.assert_array_equal(data, np.asarray(arr).reshape(-1))
+    outs = spec.ref_fn(ins)
+    for entry, arr in zip(m["outputs"], outs):
+        data = np.fromfile(os.path.join(ART, entry["file"]), dtype="<f4")
+        assert data.shape[0] == entry["elems"]
+        np.testing.assert_allclose(data, np.asarray(arr).reshape(-1),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_ray_aliases_share_artifacts():
+    m = _manifest()["benches"]
+    assert m["ray2"]["chunks"] == m["ray1"]["chunks"]
+    assert m["ray3"]["chunks"] == m["ray1"]["chunks"]
+    # But the golden scenes differ.
+    s1 = np.fromfile(os.path.join(ART, m["ray1"]["inputs"][0]["file"]), dtype="<f4")
+    s2 = np.fromfile(os.path.join(ART, m["ray2"]["inputs"][0]["file"]), dtype="<f4")
+    assert not np.array_equal(s1, s2)
+
+
+def test_hlo_text_is_the_interchange_format():
+    """Guard against someone 'simplifying' aot.py to .serialize(): the
+    image's xla_extension 0.5.1 rejects jax>=0.5 64-bit-id protos."""
+    import ast
+    import inspect
+    from compile import aot
+    src = inspect.getsource(aot)
+    assert "as_hlo_text" in src
+    assert "mlir_module_to_xla_computation" in src
+    # No executable call to .serialize() (docstrings may mention it).
+    tree = ast.parse(src)
+    calls = [n for n in ast.walk(tree)
+             if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+             and n.func.attr == "serialize"]
+    assert not calls, "aot.py must not call .serialize()"

@@ -1,0 +1,59 @@
+//! Figures 10 & 11 — co-execution speedups vs the fastest device (GPU)
+//! and system efficiency (S_real/S_max) per bench × scheduler × node.
+//! Paper headline: HGuided mean efficiency 0.89 (Batel) / 0.82 (Remo).
+
+use enginecl::harness::{balance, perf, runs};
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::ArtifactRegistry;
+
+fn main() -> anyhow::Result<()> {
+    let reg = ArtifactRegistry::discover()?;
+    let quick = runs::quick_mode();
+    let nodes = if quick {
+        vec![NodeConfig::batel()]
+    } else {
+        vec![NodeConfig::batel(), NodeConfig::remo()]
+    };
+    let benches: Option<Vec<&'static str>> = if quick {
+        Some(vec!["gaussian", "mandelbrot", "binomial"])
+    } else {
+        None
+    };
+
+    println!("# Figures 10/11 — speedup vs single GPU and efficiency\n");
+    for node in &nodes {
+        let eval = balance::evaluate_node(&reg, node, benches.clone(), 1)?;
+        println!("## node {}", node.name);
+        println!("### solo times (S_max inputs)");
+        for (bench, solos) in &eval.solos {
+            print!("  {bench:<11}");
+            for (d, t) in node.devices.iter().zip(solos) {
+                print!(" {}={:.0}ms", d.name, t.as_secs_f64() * 1e3);
+            }
+            let times: Vec<f64> = solos.iter().map(|t| t.as_secs_f64()).collect();
+            let tmax = times.iter().cloned().fold(0.0f64, f64::max);
+            println!("  S_max={:.3}", times.iter().sum::<f64>() / tmax);
+        }
+        println!(
+            "\n{:<11} {:<12} {:>8} {:>7} {:>6}",
+            "bench", "scheduler", "speedup", "S_max", "eff"
+        );
+        for c in perf::perf_rows(&eval) {
+            println!(
+                "{:<11} {:<12} {:>8.3} {:>7.3} {:>6.3}",
+                c.bench, c.scheduler, c.speedup, c.max_speedup, c.efficiency
+            );
+        }
+        println!("\n### mean efficiency by scheduler ({})", node.name);
+        for (l, e) in perf::mean_efficiency_by_scheduler(&eval) {
+            println!("  {l:<12} {e:.3}");
+        }
+        println!("### geo-mean efficiency by scheduler ({})", node.name);
+        for (l, e) in perf::geomean_efficiency_by_scheduler(&eval) {
+            println!("  {l:<12} {e:.3}");
+        }
+        println!();
+    }
+    println!("(paper: HGuided mean efficiency 0.89 on Batel, 0.82 on Remo)");
+    Ok(())
+}

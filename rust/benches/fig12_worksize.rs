@@ -1,0 +1,44 @@
+//! Figure 12 — work-size distribution per device, benchmark and
+//! scheduler: the share of work-items each device computed.
+
+use enginecl::harness::{balance, perf, runs};
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::ArtifactRegistry;
+
+fn main() -> anyhow::Result<()> {
+    let reg = ArtifactRegistry::discover()?;
+    let quick = runs::quick_mode();
+    let nodes = if quick {
+        vec![NodeConfig::batel()]
+    } else {
+        vec![NodeConfig::batel(), NodeConfig::remo()]
+    };
+    let benches: Option<Vec<&'static str>> = if quick {
+        Some(vec!["nbody", "mandelbrot"])
+    } else {
+        None
+    };
+
+    println!("# Figure 12 — work distribution per device × bench × scheduler\n");
+    for node in &nodes {
+        let eval = balance::evaluate_node(&reg, node, benches.clone(), 1)?;
+        println!("## node {}", node.name);
+        print!("{:<11} {:<12}", "bench", "scheduler");
+        for d in &node.devices {
+            print!(" {:>16}", d.name);
+        }
+        println!();
+        for (bench, sched, shares) in perf::worksize_rows(&eval) {
+            print!("{bench:<11} {sched:<12}");
+            for s in shares {
+                print!(" {:>15.1}%", s * 100.0);
+            }
+            println!();
+        }
+        println!();
+    }
+    println!("(expected shapes: GPU majority share everywhere; CPU share grows");
+    println!(" with Dynamic package count on NBody; Static gives the Phi too");
+    println!(" much Mandelbrot interior — paper §8.4)");
+    Ok(())
+}

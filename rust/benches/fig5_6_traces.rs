@@ -1,0 +1,28 @@
+//! Figures 5 & 6 — Introspector package traces: chunk sizes over time for
+//! Gaussian (regular, Fig 5) and Mandelbrot (irregular, Fig 6) under
+//! Static, Dynamic-50 and HGuided on Batel.
+
+use enginecl::harness::traces;
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::ArtifactRegistry;
+
+fn main() -> anyhow::Result<()> {
+    let reg = ArtifactRegistry::discover()?;
+    let node = NodeConfig::batel();
+    for (fig, bench) in [("Figure 5", "gaussian"), ("Figure 6", "mandelbrot")] {
+        println!("# {fig} — package distribution, {bench}\n");
+        for (label, report) in traces::collect(&reg, &node, bench)? {
+            println!("## {label} — balance {:.3}", report.balance());
+            print!("{}", report.ascii_timeline(72));
+            println!("   package series (start_ms, items):");
+            for (dev, start, items) in traces::chunk_series(&report) {
+                println!("     {dev:<18} t={start:>9.1} items={items}");
+            }
+            println!();
+        }
+    }
+    println!("(expected shapes: Static = 1 package/device; Dynamic = equal");
+    println!(" packages, more to faster devices; HGuided = geometrically");
+    println!(" shrinking packages, larger for stronger devices)");
+    Ok(())
+}

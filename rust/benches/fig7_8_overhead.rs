@@ -1,0 +1,58 @@
+//! Figures 7 & 8 — EngineCL overhead vs the native driver on a single
+//! device, sweeping problem sizes. Paper's claims: max 2.8 %, avg 1.3 %
+//! at the minimum problem sizes, trending to zero as sizes grow.
+//!
+//! Quick mode (ECL_BENCH_QUICK=1): two benches, fewer reps.
+
+use enginecl::harness::{overhead, runs};
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::ArtifactRegistry;
+use enginecl::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let reg = ArtifactRegistry::discover()?;
+    let node = NodeConfig::batel();
+    let quick = runs::quick_mode();
+    let reps = if quick { 5 } else { 15 };
+    let benches: Vec<&str> = if quick {
+        vec!["binomial", "ray1"]
+    } else {
+        vec!["gaussian", "ray1", "binomial", "mandelbrot", "nbody"]
+    };
+
+    println!("# Figure 7 — execution time, native vs EngineCL, size sweep");
+    println!("# Figure 8 — worst overhead per device/bench vs execution time\n");
+    let mut min_size_ovh = Vec::new();
+    let mut worst: f64 = 0.0;
+    for bench in &benches {
+        let ladder = runs::size_ladder(&reg, bench, if quick { 3 } else { 5 })?;
+        println!("## {bench} (device 0)");
+        println!(
+            "{:>9} {:>13} {:>13} {:>8} {:>8}",
+            "gws", "native(ms)", "enginecl(ms)", "ovh(%)", "±std(ms)"
+        );
+        for (i, gws) in ladder.iter().enumerate() {
+            let p = overhead::measure(&reg, &node, bench, 0, *gws, reps)?;
+            println!(
+                "{:>9} {:>13.3} {:>13.3} {:>8.2} {:>8.3}",
+                p.gws,
+                p.native.as_secs_f64() * 1e3,
+                p.enginecl.as_secs_f64() * 1e3,
+                p.overhead_pct,
+                p.ecl_std * 1e3
+            );
+            if i == 0 {
+                min_size_ovh.push(p.overhead_pct);
+            }
+            worst = worst.max(p.overhead_pct);
+        }
+        println!();
+    }
+    println!("## summary");
+    println!(
+        "  mean overhead at minimum problem sizes: {:.2}% (paper: 1.3%)",
+        stats::mean(&min_size_ovh)
+    );
+    println!("  worst overhead observed: {worst:.2}% (paper: 2.8%)");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Figure 9 — load balance (T_first/T_last) per benchmark × scheduler on
+//! both nodes. Paper: mean 0.96, HGuided best everywhere, Static
+//! collapsing on irregular loads.
+
+use enginecl::harness::{balance, runs};
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::ArtifactRegistry;
+use enginecl::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let reg = ArtifactRegistry::discover()?;
+    let quick = runs::quick_mode();
+    let nodes = if quick {
+        vec![NodeConfig::batel()]
+    } else {
+        vec![NodeConfig::batel(), NodeConfig::remo()]
+    };
+    let benches: Option<Vec<&'static str>> = if quick {
+        Some(vec!["gaussian", "mandelbrot", "binomial"])
+    } else {
+        None
+    };
+
+    println!("# Figure 9 — load balance per bench × scheduler\n");
+    let mut all = Vec::new();
+    for node in &nodes {
+        let eval = balance::evaluate_node(&reg, node, benches.clone(), 1)?;
+        println!("## node {}", node.name);
+        print!("{:<11}", "bench");
+        for kind in runs::paper_schedulers() {
+            print!(" {:>11}", kind.label());
+        }
+        println!();
+        for (bench, cells) in balance::balance_rows(&eval) {
+            print!("{bench:<11}");
+            for (_, b) in &cells {
+                print!(" {b:>11.3}");
+                all.push(*b);
+            }
+            println!();
+        }
+        println!();
+    }
+    println!("mean balance: {:.3} (paper: 0.96)", stats::mean(&all));
+    Ok(())
+}

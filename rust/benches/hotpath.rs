@@ -1,0 +1,149 @@
+//! Hot-path microbenchmarks + ablations (the §Perf deliverable):
+//!
+//!  * package dispatch latency (scheduler decision + channel round trip)
+//!  * per-launch runtime overhead (offset upload + execute + write-back)
+//!  * resident-inputs vs per-launch literal upload (paper §5.2 ablation)
+//!  * greedy decomposition vs single-size launches
+//!  * HGuided k / min-size sensitivity (design-choice ablation)
+
+use std::time::Instant;
+
+use enginecl::coordinator::scheduler::{SchedDevice, Scheduler};
+use enginecl::coordinator::{DeviceSpec, SchedulerKind};
+use enginecl::harness::runs::{build_engine, quick_mode};
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::{ArtifactRegistry, ChunkExecutor, HostBuf};
+
+fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let reg = ArtifactRegistry::discover()?;
+    let node = NodeConfig::batel();
+    let quick = quick_mode();
+    let reps = if quick { 20 } else { 100 };
+
+    println!("# Hot-path microbenchmarks\n");
+
+    // ---- scheduler decision latency (pure L3) -----------------------
+    println!("## scheduler decision latency (ns/package, {} packages)", 10_000);
+    for kind in [
+        SchedulerKind::static_default(),
+        SchedulerKind::dynamic(10_000),
+        SchedulerKind::hguided(),
+    ] {
+        let devs: Vec<SchedDevice> = (0..3)
+            .map(|i| SchedDevice { name: format!("d{i}"), power: 0.3 + i as f64 * 0.3 })
+            .collect();
+        let mut total = 0usize;
+        let t0 = Instant::now();
+        let mut s = kind.build();
+        s.start(10_000, 256, &devs);
+        let mut dev = 0;
+        while let Some(r) = s.next_package(dev % 3) {
+            total += r.len();
+            dev += 1;
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / dev.max(1) as f64;
+        println!("  {:<12} {ns:>8.0} ns/package ({dev} packages, {total} items)", kind.label());
+    }
+
+    // ---- per-launch runtime overhead ---------------------------------
+    println!("\n## per-launch runtime cost (binomial, smallest chunk)");
+    let manifest = reg.bench("binomial")?.clone();
+    let inputs = reg.golden_inputs(&manifest)?;
+    let mut outs = vec![HostBuf::zeros_f32(manifest.outputs[0].elems)];
+    let mut exec = ChunkExecutor::new(&reg, &manifest, &inputs)?;
+    exec.prepare_all()?;
+    let g = manifest.granule;
+    let small = time_ms(reps, || {
+        exec.execute_range(0, g, &mut outs).unwrap();
+    });
+    let full = time_ms(reps.min(20), || {
+        exec.execute_range(0, manifest.n, &mut outs).unwrap();
+    });
+    println!("  chunk {g:>6} items: {small:>8.3} ms/launch");
+    println!("  chunk {:>6} items: {full:>8.3} ms/launch", manifest.n);
+    println!("  fixed launch cost ≈ {:.3} ms", small - (full - small) * g as f64 / (manifest.n - g) as f64);
+
+    // ---- resident vs literal inputs (gaussian: 16 MiB input) ---------
+    let gman = reg.bench("gaussian")?.clone();
+    let gg = gman.granule;
+    println!("\n## §5.2 buffer ablation (gaussian, {gg}-item chunks)");
+    let gins = reg.golden_inputs(&gman)?;
+    let mut gouts = vec![HostBuf::zeros_f32(gman.outputs[0].elems)];
+    let mut res = ChunkExecutor::with_options(&reg, &gman, &gins, true)?;
+    res.prepare(gg)?;
+    let t_res = time_ms(reps, || {
+        res.execute_range(0, gg, &mut gouts).unwrap();
+    });
+    let mut lit = ChunkExecutor::with_options(&reg, &gman, &gins, false)?;
+    lit.prepare(gg)?;
+    let t_lit = time_ms(reps, || {
+        lit.execute_range(0, gg, &mut gouts).unwrap();
+    });
+    println!("  resident inputs: {t_res:>8.3} ms/package");
+    println!("  literal re-upload: {t_lit:>8.3} ms/package ({:+.1}%)", (t_lit / t_res - 1.0) * 100.0);
+
+    // ---- decomposition ablation --------------------------------------
+    println!("\n## greedy decomposition vs exact-size launch (binomial)");
+    let ladder: Vec<usize> = manifest.chunks.keys().copied().collect();
+    let big = ladder[ladder.len().saturating_sub(2)]; // one exact launch
+    let near = big - g; // decomposes into several smaller launches
+    let exact_plan = exec.decompose(0, big)?.len();
+    let decomp_plan = exec.decompose(0, near)?.len();
+    let exact = time_ms(reps, || {
+        exec.execute_range(0, big, &mut outs).unwrap();
+    });
+    let decomposed = time_ms(reps, || {
+        exec.execute_range(0, near, &mut outs).unwrap();
+    });
+    println!("  {big:>6} items, {exact_plan} launch(es) : {exact:>8.3} ms");
+    println!("  {near:>6} items, {decomp_plan} launch(es): {decomposed:>8.3} ms");
+
+    // ---- end-to-end dispatch overhead ---------------------------------
+    println!("\n## engine dispatch overhead (raw config, 1 device, binomial)");
+    let e2e = time_ms(if quick { 3 } else { 10 }, || {
+        let mut engine = build_engine(
+            &reg,
+            &node,
+            "binomial",
+            vec![DeviceSpec::new(0)],
+            SchedulerKind::static_default(),
+            Some(manifest.granule * 4),
+        )
+        .unwrap();
+        *engine.configurator() = enginecl::coordinator::Configurator::raw();
+        engine.run().unwrap();
+    });
+    println!("  full engine run (4-granule problem): {e2e:>8.2} ms (incl. worker spawn + compile)");
+
+    // ---- HGuided parameter sensitivity --------------------------------
+    println!("\n## HGuided design-choice ablation (package counts over 64k granules)");
+    for (k, min) in [(1.0, 2), (2.0, 2), (3.0, 2), (2.0, 8)] {
+        let mut s = enginecl::coordinator::scheduler::HGuided::new(k, min);
+        let devs: Vec<SchedDevice> = vec![
+            SchedDevice { name: "cpu".into(), power: 0.3 },
+            SchedDevice { name: "gpu".into(), power: 1.0 },
+            SchedDevice { name: "acc".into(), power: 0.42 },
+        ];
+        s.start(65_536, 1, &devs);
+        let mut n = 0;
+        let mut first = 0;
+        let mut i = 0;
+        while let Some(r) = s.next_package(i % 3) {
+            if n == 0 {
+                first = r.len();
+            }
+            n += 1;
+            i += 1;
+        }
+        println!("  k={k:<4} min={min:<3} -> {n:>4} packages, first={first}");
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Table 3 — the eight usability metrics over the five paired programs
+//! (EngineCL example vs native baseline), with the OpenCL/EngineCL ratio
+//! per metric and the cross-program mean ratio, exactly as the paper
+//! reports them.
+
+use std::path::Path;
+
+use enginecl::metrics::analyze_source;
+
+const PAIRS: &[(&str, &str, &str)] = &[
+    ("Gaussian", "examples/gaussian_blur.rs", "examples/native/native_gaussian.rs"),
+    ("Ray", "examples/raytrace_scenes.rs", "examples/native/native_ray.rs"),
+    ("Binomial", "examples/quickstart.rs", "examples/native/native_binomial.rs"),
+    ("Mandelbrot", "examples/mandelbrot_hguided.rs", "examples/native/native_mandelbrot.rs"),
+    ("NBody", "examples/nbody_coexec.rs", "examples/native/native_nbody.rs"),
+];
+
+fn read(rel: &str) -> String {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(root.join(rel)).unwrap_or_else(|_| panic!("missing {rel}"))
+}
+
+fn main() {
+    println!("# Table 3 — usability metrics, native runtime vs EngineCL\n");
+    println!(
+        "{:<11} {:<9} {:>4} {:>5} {:>5} {:>5} {:>5} {:>5} {:>4} {:>5}",
+        "Program", "Runtime", "CC", "TOK", "OAC", "IS", "LOC", "INST", "MET", "ERRC"
+    );
+    let mut ratio_sums = [0f64; 8];
+    for (name, ecl_path, native_path) in PAIRS {
+        let native = analyze_source(&read(native_path));
+        let ecl = analyze_source(&read(ecl_path));
+        let ratios = ecl.ratio_from(&native);
+        println!(
+            "{:<11} {:<9} {:>4} {:>5} {:>5} {:>5} {:>5} {:>5} {:>4} {:>5}",
+            name, "native", native.cc, native.tok, native.oac, native.is, native.loc,
+            native.inst, native.met, native.errc
+        );
+        println!(
+            "{:<11} {:<9} {:>4} {:>5} {:>5} {:>5} {:>5} {:>5} {:>4} {:>5}",
+            "", "EngineCL", ecl.cc, ecl.tok, ecl.oac, ecl.is, ecl.loc, ecl.inst, ecl.met,
+            ecl.errc
+        );
+        print!("{:<11} {:<9}", "", "ratio");
+        for r in ratios {
+            print!(" {r:>5.1}");
+        }
+        println!();
+        for (s, r) in ratio_sums.iter_mut().zip(ratios) {
+            *s += r;
+        }
+    }
+    println!("\n## mean ratio (native / EngineCL) per metric");
+    let labels = ["CC", "TOK", "OAC", "IS", "LOC", "INST", "MET", "ERRC"];
+    for (l, s) in labels.iter().zip(ratio_sums) {
+        println!("  {l:<5} {:.1}", s / PAIRS.len() as f64);
+    }
+    println!("\n(paper's mean ratios: CC 4:1, TOK 7.3, OAC 8.5, IS 7.3, LOC 4.9, INST 5.5, MET 2.0, ERRC 21)");
+}

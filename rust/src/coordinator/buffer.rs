@@ -1,0 +1,89 @@
+//! Buffer proxy (paper Figure 4: Proxy pattern) — one interface over the
+//! programmer's containers regardless of their nature. The engine reads
+//! inputs through it and writes results back into the user's storage after
+//! `run()`, so user code keeps using plain `Vec<f32>`s.
+
+use crate::runtime::HostBuf;
+
+/// Direction of a program buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    In,
+    Out,
+}
+
+/// A registered program buffer. Owns a snapshot for inputs; outputs are
+/// materialized by the engine and copied out after the run.
+#[derive(Debug, Clone)]
+pub struct Buffer {
+    pub direction: Direction,
+    data: HostBuf,
+}
+
+impl Buffer {
+    pub fn input(data: Vec<f32>) -> Self {
+        Self { direction: Direction::In, data: HostBuf::F32(data) }
+    }
+
+    /// Output buffer of `len` f32 elements (zero-initialized).
+    pub fn output(len: usize) -> Self {
+        Self { direction: Direction::Out, data: HostBuf::zeros_f32(len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn host(&self) -> &HostBuf {
+        &self.data
+    }
+
+    pub fn host_mut(&mut self) -> &mut HostBuf {
+        &mut self.data
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        self.data.as_f32().expect("f32 buffer")
+    }
+
+    /// Replace contents (used by the engine to publish results).
+    pub fn store(&mut self, data: HostBuf) {
+        self.data = data;
+    }
+
+    pub fn take(self) -> HostBuf {
+        self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_snapshot() {
+        let b = Buffer::input(vec![1.0, 2.0]);
+        assert_eq!(b.direction, Direction::In);
+        assert_eq!(b.as_f32(), &[1.0, 2.0]);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn output_zeroed() {
+        let b = Buffer::output(3);
+        assert_eq!(b.direction, Direction::Out);
+        assert_eq!(b.as_f32(), &[0.0; 3]);
+    }
+
+    #[test]
+    fn store_and_take() {
+        let mut b = Buffer::output(2);
+        b.store(HostBuf::F32(vec![5.0, 6.0]));
+        assert_eq!(b.as_f32(), &[5.0, 6.0]);
+        assert_eq!(b.take(), HostBuf::F32(vec![5.0, 6.0]));
+    }
+}

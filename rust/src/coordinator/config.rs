@@ -1,0 +1,62 @@
+//! Configurator (Tier-2, paper Figure 3): knobs for the runtime internals
+//! and access to execution statistics.
+
+/// Tunables for `Engine::run`. Defaults reproduce the optimized runtime;
+/// the ablation benches flip individual flags.
+#[derive(Debug, Clone)]
+pub struct Configurator {
+    /// Upload inputs once per device and keep them resident (paper §5.2
+    /// buffer optimization). Off = re-upload per package.
+    pub resident_inputs: bool,
+    /// Compile all chunk-size executables during device init (the paper's
+    /// initialization optimization: build while other devices discover).
+    /// Off = compile lazily on first use of each size.
+    pub eager_compile: bool,
+    /// Simulate device init latencies (profiles' init/init_contention).
+    /// Off for overhead microbenchmarks that isolate the dispatch path.
+    pub simulate_init: bool,
+    /// Stretch execution times per device profile. Off = run at raw PJRT
+    /// speed (used by the overhead experiment where EngineCL must be
+    /// compared against the native driver on the *same* device).
+    pub simulate_speed: bool,
+    /// Collect per-package traces (Introspector).
+    pub introspect: bool,
+}
+
+impl Default for Configurator {
+    fn default() -> Self {
+        Self {
+            resident_inputs: true,
+            eager_compile: true,
+            simulate_init: true,
+            simulate_speed: true,
+            introspect: true,
+        }
+    }
+}
+
+impl Configurator {
+    /// Configuration for overhead measurements: no simulation, pure
+    /// dispatch machinery on one device.
+    pub fn raw() -> Self {
+        Self { simulate_init: false, simulate_speed: false, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_optimized() {
+        let c = Configurator::default();
+        assert!(c.resident_inputs && c.eager_compile && c.simulate_init && c.simulate_speed);
+    }
+
+    #[test]
+    fn raw_disables_simulation() {
+        let c = Configurator::raw();
+        assert!(!c.simulate_init && !c.simulate_speed);
+        assert!(c.resident_inputs);
+    }
+}

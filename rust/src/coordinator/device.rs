@@ -1,0 +1,232 @@
+//! Device abstraction (Tier-2) and the per-device worker thread (Tier-3).
+//!
+//! Exactly as the paper's Figure 1: the low-level runtime (OpenCL there,
+//! PJRT here) is encapsulated inside a `Device` managed by its own thread.
+//! Each worker owns a PJRT client + executables + resident buffers,
+//! simulates its profile's init latency and speed, executes assigned
+//! packages and streams completion events to the engine's master loop.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::config::Configurator;
+use crate::coordinator::introspector::PackageTrace;
+use crate::coordinator::work::Range;
+use crate::platform::{DeviceKind, DeviceProfile, TimeScaler};
+use crate::runtime::{ArtifactRegistry, BenchManifest, ChunkExecutor, HostBuf};
+
+/// Paper-style device selection masks (`ecl::DeviceMask`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceMask {
+    Cpu,
+    Gpu,
+    Accelerator,
+    /// Every device in the node.
+    All,
+    /// GPUs + accelerators (no CPU).
+    AcceleratorsOnly,
+}
+
+impl DeviceMask {
+    pub fn matches(&self, kind: DeviceKind) -> bool {
+        match self {
+            DeviceMask::Cpu => kind == DeviceKind::Cpu,
+            DeviceMask::Gpu => matches!(kind, DeviceKind::Gpu | DeviceKind::IntegratedGpu),
+            DeviceMask::Accelerator => kind == DeviceKind::Accelerator,
+            DeviceMask::All => true,
+            DeviceMask::AcceleratorsOnly => kind != DeviceKind::Cpu,
+        }
+    }
+}
+
+/// Explicit device selection (paper: `ecl::Device(platform, device,
+/// kernel?)`) — an index into the node's device list plus an optional
+/// kernel specialization label (artifact family override).
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub index: usize,
+    pub kernel: Option<String>,
+}
+
+impl DeviceSpec {
+    pub fn new(index: usize) -> Self {
+        Self { index, kernel: None }
+    }
+
+    /// Select with a device-specialized kernel (paper Listing 2: the Phi
+    /// got a binary kernel, the GPU a tuned source kernel).
+    pub fn with_kernel(index: usize, kernel: &str) -> Self {
+        Self { index, kernel: Some(kernel.to_string()) }
+    }
+}
+
+// ---- worker protocol (Tier-3) ---------------------------------------
+
+pub(crate) enum ToWorker {
+    Assign(Range),
+    Finish,
+}
+
+pub(crate) enum FromWorker {
+    /// Device initialized (driver sim + input upload + builds done).
+    Ready { dev: usize, init_start: std::time::Duration, init_end: std::time::Duration },
+    /// Package completed; ready for the next assignment.
+    Done { dev: usize },
+    /// Worker exited; full-size output buffers + its package traces.
+    Finished { dev: usize, outputs: Vec<HostBuf>, traces: Vec<PackageTrace> },
+    Failed { dev: usize, message: String },
+}
+
+pub(crate) struct WorkerCtx {
+    pub dev: usize,
+    pub profile: DeviceProfile,
+    pub registry: ArtifactRegistry,
+    pub bench: BenchManifest,
+    pub inputs: Arc<Vec<HostBuf>>,
+    pub config: Configurator,
+    pub epoch: Instant,
+    /// Serializes physical PJRT executions across device threads so raw
+    /// timings are clean; the stretch absorbs the wait (simclock docs).
+    pub exec_lock: Arc<Mutex<()>>,
+    /// True when a CPU device co-executes in the same engine — triggers
+    /// the profile's `init_contention` (the paper's Phi driver effect).
+    pub contended_init: bool,
+    /// All workers rendezvous here between *real* initialization (client
+    /// creation + executable builds, which burn physical CPU) and the
+    /// *simulated* driver-init sleeps. Without the barrier one device's
+    /// compile phase would steal cores from another's compute phase —
+    /// contention the simulated machine would not have.
+    pub init_barrier: Arc<std::sync::Barrier>,
+    pub seed: u64,
+}
+
+pub(crate) fn spawn_worker(
+    ctx: WorkerCtx,
+    to_master: Sender<FromWorker>,
+    from_master: Receiver<ToWorker>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("ecl-dev-{}", ctx.profile.name))
+        .spawn(move || {
+            if let Err(e) = worker_main(&ctx, &to_master, &from_master) {
+                let _ = to_master.send(FromWorker::Failed {
+                    dev: ctx.dev,
+                    message: format!("{e:#}"),
+                });
+            }
+        })
+        .expect("spawn device worker")
+}
+
+fn worker_main(
+    ctx: &WorkerCtx,
+    to_master: &Sender<FromWorker>,
+    from_master: &Receiver<ToWorker>,
+) -> anyhow::Result<()> {
+    let init_start = ctx.epoch.elapsed();
+
+    // 1. Real initialization: client, resident inputs, executable builds.
+    let mut exec = ChunkExecutor::with_options(
+        &ctx.registry,
+        &ctx.bench,
+        &ctx.inputs,
+        ctx.config.resident_inputs,
+    )?;
+    if ctx.config.eager_compile {
+        exec.prepare_all()?;
+    }
+    let mut outputs: Vec<HostBuf> = ctx
+        .bench
+        .outputs
+        .iter()
+        .map(|o| HostBuf::zeros_f32(o.elems))
+        .collect();
+
+    // 2. Rendezvous: no device starts computing while another is still
+    // burning physical cores on compilation (see WorkerCtx::init_barrier).
+    ctx.init_barrier.wait();
+
+    // 3. Simulated driver/platform initialization (Figure 13): the Phi
+    // arrives late, later still when a CPU device shares the engine.
+    if ctx.config.simulate_init {
+        let mut wait = ctx.profile.init;
+        if ctx.contended_init {
+            wait += ctx.profile.init_contention;
+        }
+        std::thread::sleep(wait);
+    }
+
+    let init_end = ctx.epoch.elapsed();
+    let mut scaler = TimeScaler::new(&ctx.profile, ctx.seed);
+    let mut traces: Vec<PackageTrace> = Vec::new();
+
+    to_master
+        .send(FromWorker::Ready { dev: ctx.dev, init_start, init_end })
+        .ok();
+
+    // 4. Package loop.
+    while let Ok(msg) = from_master.recv() {
+        match msg {
+            ToWorker::Finish => break,
+            ToWorker::Assign(range) => {
+                let started = Instant::now();
+                let start_off = ctx.epoch.elapsed();
+                let timing = {
+                    let _guard = ctx.exec_lock.lock().unwrap();
+                    exec.execute_range(range.begin, range.end, &mut outputs)?
+                };
+                if ctx.config.simulate_speed {
+                    // Device compute stretches with the profile; host-side
+                    // transfer/management time passes through unstretched.
+                    let target =
+                        scaler.target(timing.exec, timing.launches) + timing.xfer;
+                    scaler.hold(started, target);
+                }
+                let end_off = ctx.epoch.elapsed();
+                if ctx.config.introspect {
+                    traces.push(PackageTrace {
+                        device: ctx.dev,
+                        begin_item: range.begin,
+                        end_item: range.end,
+                        start: start_off,
+                        end: end_off,
+                        raw_exec: timing.exec,
+                        launches: timing.launches,
+                    });
+                }
+                to_master.send(FromWorker::Done { dev: ctx.dev }).ok();
+            }
+        }
+    }
+
+    to_master
+        .send(FromWorker::Finished { dev: ctx.dev, outputs, traces })
+        .ok();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_matching() {
+        assert!(DeviceMask::Cpu.matches(DeviceKind::Cpu));
+        assert!(!DeviceMask::Cpu.matches(DeviceKind::Gpu));
+        assert!(DeviceMask::Gpu.matches(DeviceKind::IntegratedGpu));
+        assert!(DeviceMask::All.matches(DeviceKind::Accelerator));
+        assert!(DeviceMask::AcceleratorsOnly.matches(DeviceKind::Gpu));
+        assert!(!DeviceMask::AcceleratorsOnly.matches(DeviceKind::Cpu));
+    }
+
+    #[test]
+    fn device_spec_builders() {
+        let d = DeviceSpec::new(2);
+        assert_eq!(d.index, 2);
+        assert!(d.kernel.is_none());
+        let d = DeviceSpec::with_kernel(1, "nbody.gpu");
+        assert_eq!(d.kernel.as_deref(), Some("nbody.gpu"));
+    }
+}

@@ -1,0 +1,417 @@
+//! `Engine` — the Tier-1 facade (paper Figure 4): device selection, work
+//! sizes, scheduler choice, program consumption and `run()`.
+//!
+//! `run()` spawns one worker thread per selected device, drives the
+//! master scheduling loop (assign-on-completion, the paper's Scheduler
+//! thread), merges the disjoint result ranges back into the program's
+//! output containers and leaves a full `RunReport` for introspection.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::config::Configurator;
+use crate::coordinator::device::{
+    spawn_worker, DeviceMask, DeviceSpec, FromWorker, ToWorker, WorkerCtx,
+};
+use crate::coordinator::error::EclError;
+use crate::coordinator::introspector::{DeviceTrace, RunReport};
+use crate::coordinator::program::{Arg, Program};
+use crate::coordinator::scheduler::{SchedDevice, SchedulerKind};
+use crate::platform::{DeviceKind, NodeConfig};
+use crate::runtime::{ArtifactRegistry, HostBuf};
+
+/// The paper's `ecl::EngineCL`.
+pub struct Engine {
+    registry: ArtifactRegistry,
+    node: NodeConfig,
+    selected: Vec<DeviceSpec>,
+    scheduler: SchedulerKind,
+    config: Configurator,
+    gws: Option<usize>,
+    lws: Option<usize>,
+    program: Option<Program>,
+    report: Option<RunReport>,
+    errors: Vec<EclError>,
+}
+
+impl Engine {
+    /// Discover artifacts and start from the default (Batel) node.
+    pub fn new() -> Result<Self, EclError> {
+        Ok(Self::with_registry(ArtifactRegistry::discover()?))
+    }
+
+    pub fn with_registry(registry: ArtifactRegistry) -> Self {
+        Self {
+            registry,
+            node: NodeConfig::batel(),
+            selected: Vec::new(),
+            scheduler: SchedulerKind::static_default(),
+            config: Configurator::default(),
+            gws: None,
+            lws: None,
+            program: None,
+            report: None,
+            errors: Vec::new(),
+        }
+    }
+
+    /// Select the simulated node (paper: the machine you run on).
+    pub fn node(&mut self, node: NodeConfig) -> &mut Self {
+        self.node = node;
+        self
+    }
+
+    pub fn node_config(&self) -> &NodeConfig {
+        &self.node
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Select devices by mask (paper: `engine.use(ecl::DeviceMask::CPU)`).
+    pub fn use_mask(&mut self, mask: DeviceMask) -> &mut Self {
+        self.selected = self
+            .node
+            .devices
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| mask.matches(d.kind))
+            .map(|(i, _)| DeviceSpec::new(i))
+            .collect();
+        self
+    }
+
+    /// Select explicit devices, optionally with kernel specializations
+    /// (paper Listing 2: `engine.use(Device(0,0), Device(0,1,phi_bin),..)`).
+    pub fn use_devices(&mut self, devices: Vec<DeviceSpec>) -> &mut Self {
+        self.selected = devices;
+        self
+    }
+
+    pub fn global_work_items(&mut self, gws: usize) -> &mut Self {
+        self.gws = Some(gws);
+        self
+    }
+
+    pub fn local_work_items(&mut self, lws: usize) -> &mut Self {
+        self.lws = Some(lws);
+        self
+    }
+
+    /// Both sizes in one call (paper: `engine.work_items(gws, lws)`).
+    pub fn work_items(&mut self, gws: usize, lws: usize) -> &mut Self {
+        self.gws = Some(gws);
+        self.lws = Some(lws);
+        self
+    }
+
+    pub fn scheduler(&mut self, kind: SchedulerKind) -> &mut Self {
+        self.scheduler = kind;
+        self
+    }
+
+    /// Tier-2 access to runtime internals.
+    pub fn configurator(&mut self) -> &mut Configurator {
+        &mut self.config
+    }
+
+    /// Consume the program (paper: `engine.program(std::move(program))`).
+    pub fn program(&mut self, program: Program) -> &mut Self {
+        self.program = Some(program);
+        self
+    }
+
+    pub fn has_errors(&self) -> bool {
+        !self.errors.is_empty()
+    }
+
+    pub fn get_errors(&self) -> &[EclError] {
+        &self.errors
+    }
+
+    /// Introspection data of the last run (paper's Configurator stats).
+    pub fn report(&self) -> Option<&RunReport> {
+        self.report.as_ref()
+    }
+
+    /// Computed output `i` of the last run.
+    pub fn output(&self, i: usize) -> Option<&[f32]> {
+        self.program.as_ref().and_then(|p| p.outputs().get(i)).map(|b| b.as_f32())
+    }
+
+    /// Run the program on the selected devices. Errors are both returned
+    /// and collected on the engine (paper's error model).
+    pub fn run(&mut self) -> Result<(), EclError> {
+        match self.run_inner() {
+            Ok(report) => {
+                self.report = Some(report);
+                Ok(())
+            }
+            Err(e) => {
+                let msg = format!("{e}");
+                self.errors.push(e);
+                Err(EclError::Runtime(msg))
+            }
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<RunReport, EclError> {
+        let program = self.program.as_mut().ok_or(EclError::NoProgram)?;
+        if self.selected.is_empty() {
+            return Err(EclError::NoDevices);
+        }
+        let kernel = program.kernel_name().ok_or(EclError::NoProgram)?.to_string();
+        let bench = self
+            .registry
+            .bench(&kernel)
+            .map_err(|_| EclError::UnknownKernel(kernel.clone()))?
+            .clone();
+
+        // ---- validation (the checks OpenCL leaves to the programmer) --
+        let gws = self.gws.unwrap_or(bench.n);
+        if gws > bench.n {
+            return Err(EclError::WorkSizeTooLarge { gws, n: bench.n });
+        }
+        if gws % bench.granule != 0 {
+            return Err(EclError::MisalignedWorkSize { gws, granule: bench.granule });
+        }
+        if program.inputs().len() != bench.inputs.len() {
+            return Err(EclError::InputArity {
+                expected: bench.inputs.len(),
+                got: program.inputs().len(),
+            });
+        }
+        if program.outputs().len() != bench.outputs.len() {
+            return Err(EclError::OutputArity {
+                expected: bench.outputs.len(),
+                got: program.outputs().len(),
+            });
+        }
+        for (spec, buf) in bench.inputs.iter().zip(program.inputs()) {
+            if buf.len() != spec.elems {
+                return Err(EclError::BufferSize {
+                    name: spec.name.clone(),
+                    expected: spec.elems,
+                    got: buf.len(),
+                });
+            }
+        }
+        for (spec, buf) in bench.outputs.iter().zip(program.outputs()) {
+            if buf.len() != spec.elems {
+                return Err(EclError::BufferSize {
+                    name: spec.name.clone(),
+                    expected: spec.elems,
+                    got: buf.len(),
+                });
+            }
+        }
+        validate_args(program.args(), &bench.scalars)?;
+        if let SchedulerKind::Static { props: Some(p), .. } = &self.scheduler {
+            if p.len() != self.selected.len() {
+                return Err(EclError::BadProportions {
+                    got: p.len(),
+                    devices: self.selected.len(),
+                });
+            }
+        }
+
+        // ---- spawn device workers -------------------------------------
+        let inputs: Arc<Vec<HostBuf>> =
+            Arc::new(program.inputs().iter().map(|b| b.host().clone()).collect());
+        let epoch = Instant::now();
+        let exec_lock = Arc::new(Mutex::new(()));
+        let has_cpu = self
+            .selected
+            .iter()
+            .any(|s| self.node.devices[s.index].kind == DeviceKind::Cpu);
+        let coexec = self.selected.len() > 1;
+
+        let (to_master_tx, from_workers) = channel::<FromWorker>();
+        let mut to_workers: Vec<Sender<ToWorker>> = Vec::new();
+        let mut handles = Vec::new();
+        let init_barrier = Arc::new(std::sync::Barrier::new(self.selected.len()));
+        for (slot, spec) in self.selected.iter().enumerate() {
+            let profile = self.node.devices[spec.index].clone();
+            let contended = coexec
+                && has_cpu
+                && profile.kind == DeviceKind::Accelerator
+                && self.config.simulate_init;
+            let (tx, rx) = channel::<ToWorker>();
+            to_workers.push(tx);
+            let ctx = WorkerCtx {
+                dev: slot,
+                profile,
+                registry: self.registry.clone(),
+                bench: bench.clone(),
+                inputs: Arc::clone(&inputs),
+                config: self.config.clone(),
+                epoch,
+                exec_lock: Arc::clone(&exec_lock),
+                contended_init: contended,
+                init_barrier: Arc::clone(&init_barrier),
+                seed: 0x9E3779B9 + slot as u64 * 0x85EBCA77,
+            };
+            handles.push(spawn_worker(ctx, to_master_tx.clone(), rx));
+        }
+        drop(to_master_tx);
+
+        // ---- master scheduling loop ------------------------------------
+        let sched_devices: Vec<SchedDevice> = self
+            .selected
+            .iter()
+            .map(|s| {
+                let d = &self.node.devices[s.index];
+                SchedDevice { name: d.name.clone(), power: d.relative_power }
+            })
+            .collect();
+        let mut scheduler = self.scheduler.build();
+        scheduler.start(gws / bench.granule, bench.granule, &sched_devices);
+
+        let ndev = self.selected.len();
+        let mut device_traces: Vec<DeviceTrace> = self
+            .selected
+            .iter()
+            .map(|s| {
+                let d = &self.node.devices[s.index];
+                DeviceTrace {
+                    name: d.name.clone(),
+                    kind: d.kind,
+                    init_start: Default::default(),
+                    init_end: Default::default(),
+                    packages: Vec::new(),
+                }
+            })
+            .collect();
+        let mut worker_outputs: Vec<Option<Vec<HostBuf>>> = (0..ndev).map(|_| None).collect();
+        let mut finished = 0usize;
+        let mut failure: Option<EclError> = None;
+
+        let assign = |dev: usize, scheduler: &mut Box<dyn crate::coordinator::scheduler::Scheduler>,
+                          to_workers: &[Sender<ToWorker>]| {
+            match scheduler.next_package(dev) {
+                Some(range) => {
+                    to_workers[dev].send(ToWorker::Assign(range)).ok();
+                }
+                None => {
+                    to_workers[dev].send(ToWorker::Finish).ok();
+                }
+            }
+        };
+
+        while finished < ndev {
+            match from_workers.recv() {
+                Ok(FromWorker::Ready { dev, init_start, init_end }) => {
+                    device_traces[dev].init_start = init_start;
+                    device_traces[dev].init_end = init_end;
+                    assign(dev, &mut scheduler, &to_workers);
+                }
+                Ok(FromWorker::Done { dev }) => {
+                    assign(dev, &mut scheduler, &to_workers);
+                }
+                Ok(FromWorker::Finished { dev, outputs, traces }) => {
+                    device_traces[dev].packages = traces;
+                    worker_outputs[dev] = Some(outputs);
+                    finished += 1;
+                }
+                Ok(FromWorker::Failed { dev, message }) => {
+                    failure.get_or_insert(EclError::Worker {
+                        device: device_traces[dev].name.clone(),
+                        message,
+                    });
+                    finished += 1;
+                }
+                Err(_) => break,
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(e) = failure {
+            return Err(e);
+        }
+
+        // ---- merge disjoint result ranges back into the program --------
+        for (dev, outs) in worker_outputs.into_iter().enumerate() {
+            let Some(outs) = outs else { continue };
+            let ranges: Vec<(usize, usize)> = device_traces[dev]
+                .packages
+                .iter()
+                .map(|p| (p.begin_item, p.end_item))
+                .collect();
+            for ((src, spec), dst) in
+                outs.iter().zip(&bench.outputs).zip(program.outputs_mut())
+            {
+                let src = src.as_f32().expect("worker outputs are f32");
+                let dst = dst.host_mut().as_f32_mut().expect("program outputs are f32");
+                for &(b, e) in &ranges {
+                    let lo = b * spec.elems_per_item;
+                    let hi = e * spec.elems_per_item;
+                    dst[lo..hi].copy_from_slice(&src[lo..hi]);
+                }
+            }
+        }
+
+        Ok(RunReport {
+            bench: bench.name.clone(),
+            scheduler: scheduler.name(),
+            gws,
+            wall: epoch.elapsed(),
+            devices: device_traces,
+        })
+    }
+}
+
+/// Validate recorded scalar args against the baked manifest scalars.
+fn validate_args(args: &BTreeMap<usize, Arg>, scalars: &BTreeMap<String, f64>) -> Result<(), EclError> {
+    let baked: Vec<(&String, &f64)> = scalars.iter().collect();
+    let mut scalar_idx = 0usize;
+    for (index, arg) in args {
+        if let Arg::Scalar(v) = arg {
+            // Scalars must match some baked value (AOT kernels cannot take
+            // new scalar values at run time — the paper's JIT could).
+            let matched = baked.iter().any(|(_, bv)| (*bv - v).abs() < 1e-9);
+            if !matched {
+                let (name, expected) = baked
+                    .get(scalar_idx.min(baked.len().saturating_sub(1)))
+                    .map(|(n, v)| ((*n).clone(), **v))
+                    .unwrap_or(("<none>".into(), f64::NAN));
+                return Err(EclError::ArgMismatch { index: *index, name, expected, got: *v });
+            }
+            scalar_idx += 1;
+        }
+    }
+    if scalar_idx > scalars.len() {
+        return Err(EclError::UnknownArg { index: scalar_idx });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_args_accepts_baked_values() {
+        let mut scalars = BTreeMap::new();
+        scalars.insert("steps".to_string(), 254.0);
+        scalars.insert("dt".to_string(), 0.005);
+        let mut args = BTreeMap::new();
+        args.insert(0, Arg::Scalar(254.0));
+        args.insert(1, Arg::BufferRef);
+        args.insert(2, Arg::LocalAlloc(1024));
+        assert!(validate_args(&args, &scalars).is_ok());
+    }
+
+    #[test]
+    fn validate_args_rejects_unbaked_scalar() {
+        let mut scalars = BTreeMap::new();
+        scalars.insert("steps".to_string(), 254.0);
+        let mut args = BTreeMap::new();
+        args.insert(0, Arg::Scalar(100.0));
+        let err = validate_args(&args, &scalars).unwrap_err();
+        assert!(matches!(err, EclError::ArgMismatch { .. }));
+    }
+}

@@ -1,0 +1,78 @@
+//! Engine error model — the paper's API collects runtime errors on the
+//! engine (`engine.has_errors()` / `get_errors()`) instead of forcing an
+//! error-check section after every call (the ERRC usability metric).
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum EclError {
+    #[error("no program set: call engine.program(..) before run()")]
+    NoProgram,
+
+    #[error("no devices selected: call engine.use_mask(..) or use_devices(..)")]
+    NoDevices,
+
+    #[error("unknown benchmark kernel '{0}'")]
+    UnknownKernel(String),
+
+    #[error("global work size {gws} exceeds compiled problem size {n}")]
+    WorkSizeTooLarge { gws: usize, n: usize },
+
+    #[error("global work size {gws} is not a multiple of the granule {granule}")]
+    MisalignedWorkSize { gws: usize, granule: usize },
+
+    #[error("program expects {expected} input buffers, got {got}")]
+    InputArity { expected: usize, got: usize },
+
+    #[error("program expects {expected} output buffers, got {got}")]
+    OutputArity { expected: usize, got: usize },
+
+    #[error("buffer '{name}' has {got} elements, manifest expects {expected}")]
+    BufferSize { name: String, expected: usize, got: usize },
+
+    #[error("kernel argument {index} ('{name}') = {got}, artifact was baked with {expected}")]
+    ArgMismatch { index: usize, name: String, expected: f64, got: f64 },
+
+    #[error("kernel argument {index}: no such baked argument")]
+    UnknownArg { index: usize },
+
+    #[error("static scheduler got {got} proportions for {devices} devices")]
+    BadProportions { got: usize, devices: usize },
+
+    #[error("device worker '{device}' failed: {message}")]
+    Worker { device: String, message: String },
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+}
+
+impl From<anyhow::Error> for EclError {
+    fn from(e: anyhow::Error) -> Self {
+        EclError::Runtime(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        let e = EclError::WorkSizeTooLarge { gws: 10, n: 5 };
+        assert!(e.to_string().contains("10"));
+        let e = EclError::ArgMismatch {
+            index: 2,
+            name: "steps".into(),
+            expected: 254.0,
+            got: 100.0,
+        };
+        assert!(e.to_string().contains("steps"));
+    }
+
+    #[test]
+    fn from_anyhow() {
+        let a = anyhow::anyhow!("boom");
+        let e: EclError = a.into();
+        assert!(matches!(e, EclError::Runtime(_)));
+    }
+}

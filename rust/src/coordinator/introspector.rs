@@ -1,0 +1,271 @@
+//! Introspector (paper §4.1, Figures 5/6/12/13): per-package execution
+//! traces collected during a run — the custom profiling the authors built
+//! because vendor tools could not observe multi-device co-execution.
+
+use std::time::Duration;
+
+use crate::platform::DeviceKind;
+
+/// One executed package.
+#[derive(Debug, Clone)]
+pub struct PackageTrace {
+    /// Index into `RunReport::devices`.
+    pub device: usize,
+    pub begin_item: usize,
+    pub end_item: usize,
+    /// Offsets from the engine's run epoch.
+    pub start: Duration,
+    pub end: Duration,
+    /// Raw (un-stretched) PJRT execution time.
+    pub raw_exec: Duration,
+    /// Sub-launches the package decomposed into.
+    pub launches: u32,
+}
+
+impl PackageTrace {
+    pub fn items(&self) -> usize {
+        self.end_item - self.begin_item
+    }
+}
+
+/// Per-device timeline.
+#[derive(Debug, Clone)]
+pub struct DeviceTrace {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// Offsets from run epoch: device thread spawn -> ready for work.
+    /// Includes driver init simulation + executable builds (the paper's
+    /// Figure 13 initialization phase).
+    pub init_start: Duration,
+    pub init_end: Duration,
+    pub packages: Vec<PackageTrace>,
+}
+
+impl DeviceTrace {
+    /// Work-items this device computed.
+    pub fn items(&self) -> usize {
+        self.packages.iter().map(PackageTrace::items).sum()
+    }
+
+    /// When this device finished its last package (run epoch offset);
+    /// init_end if it never got work.
+    pub fn completion(&self) -> Duration {
+        self.packages.iter().map(|p| p.end).max().unwrap_or(self.init_end)
+    }
+
+    /// Busy time: sum of package durations.
+    pub fn busy(&self) -> Duration {
+        self.packages.iter().map(|p| p.end.saturating_sub(p.start)).sum()
+    }
+}
+
+/// The full record of one engine run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub bench: String,
+    pub scheduler: String,
+    pub gws: usize,
+    /// Wall time of `Engine::run` (epoch -> all results merged).
+    pub wall: Duration,
+    pub devices: Vec<DeviceTrace>,
+}
+
+impl RunReport {
+    /// Start of the compute phase: the earliest device-ready time. Late
+    /// initializers (the Phi under CPU contention, Figure 13) are charged
+    /// for their lateness relative to this epoch — as the paper's
+    /// response times are.
+    pub fn compute_epoch(&self) -> Duration {
+        self.devices.iter().map(|d| d.init_end).min().unwrap_or_default()
+    }
+
+    /// Per-device response time: from the compute epoch to the device's
+    /// last package completion.
+    pub fn device_response(&self, i: usize) -> Duration {
+        self.devices[i].completion().saturating_sub(self.compute_epoch())
+    }
+
+    /// Co-execution response time: until the last device finished.
+    pub fn response_time(&self) -> Duration {
+        (0..self.devices.len())
+            .map(|i| self.device_response(i))
+            .max()
+            .unwrap_or_default()
+    }
+
+    /// The paper's balance metric: T_firstDone / T_lastDone over devices
+    /// that computed work (1.0 = all finished simultaneously).
+    pub fn balance(&self) -> f64 {
+        let epoch = self.compute_epoch().as_secs_f64();
+        let completions: Vec<f64> = self
+            .devices
+            .iter()
+            .filter(|d| !d.packages.is_empty())
+            .map(|d| d.completion().as_secs_f64() - epoch)
+            .collect();
+        if completions.len() < 2 {
+            return 1.0;
+        }
+        let first = completions.iter().cloned().fold(f64::INFINITY, f64::min);
+        let last = completions.iter().cloned().fold(0.0, f64::max);
+        if last == 0.0 {
+            1.0
+        } else {
+            first / last
+        }
+    }
+
+    /// Work-share per device, normalized to 1.0 (Figure 12).
+    pub fn work_shares(&self) -> Vec<f64> {
+        let total: usize = self.devices.iter().map(DeviceTrace::items).sum();
+        self.devices
+            .iter()
+            .map(|d| if total == 0 { 0.0 } else { d.items() as f64 / total as f64 })
+            .collect()
+    }
+
+    /// Total packages executed.
+    pub fn total_packages(&self) -> usize {
+        self.devices.iter().map(|d| d.packages.len()).sum()
+    }
+
+    /// ASCII timeline (one row per device) — the Introspector "visual
+    /// representation" of Figures 5/6 for terminals.
+    pub fn ascii_timeline(&self, width: usize) -> String {
+        let wall = self.wall.as_secs_f64().max(1e-9);
+        let mut out = String::new();
+        for d in &self.devices {
+            let mut row = vec![b'.'; width];
+            let ib = ((d.init_start.as_secs_f64() / wall) * width as f64) as usize;
+            let ie = ((d.init_end.as_secs_f64() / wall) * width as f64) as usize;
+            for c in row.iter_mut().take(ie.min(width)).skip(ib.min(width)) {
+                *c = b'i';
+            }
+            for p in &d.packages {
+                let b = ((p.start.as_secs_f64() / wall) * width as f64) as usize;
+                let e = (((p.end.as_secs_f64() / wall) * width as f64) as usize).max(b + 1);
+                for c in row.iter_mut().take(e.min(width)).skip(b.min(width)) {
+                    *c = b'#';
+                }
+            }
+            out.push_str(&format!(
+                "{:>16} |{}| {:>7.1}ms {:>6} items {:>4} pkgs\n",
+                d.name,
+                String::from_utf8(row).unwrap(),
+                d.completion().as_secs_f64() * 1e3,
+                d.items(),
+                d.packages.len()
+            ));
+        }
+        out
+    }
+
+    /// CSV of package traces (device,begin,end,start_ms,end_ms,raw_ms) —
+    /// the data behind Figures 5/6.
+    pub fn package_csv(&self) -> String {
+        let mut s = String::from("device,kind,begin_item,end_item,start_ms,end_ms,raw_ms,launches\n");
+        for d in &self.devices {
+            for p in &d.packages {
+                s.push_str(&format!(
+                    "{},{},{},{},{:.3},{:.3},{:.3},{}\n",
+                    d.name,
+                    d.kind.label(),
+                    p.begin_item,
+                    p.end_item,
+                    p.start.as_secs_f64() * 1e3,
+                    p.end.as_secs_f64() * 1e3,
+                    p.raw_exec.as_secs_f64() * 1e3,
+                    p.launches
+                ));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    fn mk_report() -> RunReport {
+        let mk = |device, b, e, s, t| PackageTrace {
+            device,
+            begin_item: b,
+            end_item: e,
+            start: ms(s),
+            end: ms(t),
+            raw_exec: ms((t - s) / 4),
+            launches: 1,
+        };
+        RunReport {
+            bench: "toy".into(),
+            scheduler: "Static".into(),
+            gws: 100,
+            wall: ms(100),
+            devices: vec![
+                DeviceTrace {
+                    name: "cpu".into(),
+                    kind: DeviceKind::Cpu,
+                    init_start: ms(0),
+                    init_end: ms(10),
+                    packages: vec![mk(0, 0, 30, 10, 80)],
+                },
+                DeviceTrace {
+                    name: "gpu".into(),
+                    kind: DeviceKind::Gpu,
+                    init_start: ms(0),
+                    init_end: ms(5),
+                    packages: vec![mk(1, 30, 100, 5, 100)],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn balance_ratio() {
+        let r = mk_report();
+        // compute epoch = min(init_end) = 5ms; (80-5)/(100-5) = 75/95.
+        assert!((r.balance() - 75.0 / 95.0).abs() < 1e-9);
+        assert_eq!(r.compute_epoch(), ms(5));
+        assert_eq!(r.response_time(), ms(95));
+        assert_eq!(r.device_response(0), ms(75));
+    }
+
+    #[test]
+    fn work_shares_sum_to_one() {
+        let r = mk_report();
+        let shares = r.work_shares();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((shares[0] - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_device_balance_is_one() {
+        let mut r = mk_report();
+        r.devices.truncate(1);
+        assert_eq!(r.balance(), 1.0);
+    }
+
+    #[test]
+    fn completion_and_busy() {
+        let r = mk_report();
+        assert_eq!(r.devices[0].completion(), ms(80));
+        assert_eq!(r.devices[0].busy(), ms(70));
+        assert_eq!(r.total_packages(), 2);
+    }
+
+    #[test]
+    fn csv_and_timeline_render() {
+        let r = mk_report();
+        let csv = r.package_csv();
+        assert!(csv.lines().count() == 3);
+        assert!(csv.contains("cpu,CPU,0,30"));
+        let tl = r.ascii_timeline(40);
+        assert_eq!(tl.lines().count(), 2);
+        assert!(tl.contains('#'));
+    }
+}

@@ -1,0 +1,26 @@
+//! The coordinator — EngineCL's contribution, re-implemented in Rust.
+//!
+//! Tier-1 (paper Figure 3): [`Engine`] and [`Program`] — the facade most
+//! programs need. Tier-2: [`DeviceSpec`], [`Configurator`], scheduler
+//! selection. Tier-3 (internal): device worker threads, work
+//! decomposition, the runtime layer and the introspector.
+
+pub mod buffer;
+pub mod config;
+pub mod device;
+pub mod engine;
+pub mod error;
+pub mod introspector;
+pub mod program;
+pub mod scheduler;
+pub mod work;
+
+pub use buffer::Buffer;
+pub use config::Configurator;
+pub use device::{DeviceMask, DeviceSpec};
+pub use engine::Engine;
+pub use error::EclError;
+pub use introspector::{DeviceTrace, PackageTrace, RunReport};
+pub use program::{Arg, Program};
+pub use scheduler::SchedulerKind;
+pub use work::Range;

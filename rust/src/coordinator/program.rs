@@ -1,0 +1,154 @@
+//! `Program` — the application-domain unit of the paper (§4.2): inputs,
+//! outputs, a kernel and an output pattern, decoupled from the engine.
+//!
+//! Kernels are AOT-compiled (the three-layer architecture bakes scalar
+//! arguments into the artifacts), so `arg(..)` records the value and the
+//! engine validates it against the manifest at `run()` — preserving the
+//! paper's API surface and its error semantics without a JIT.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::buffer::Buffer;
+
+/// A recorded kernel argument (paper Listing 1: positional or aggregate,
+/// plus local-memory allocations).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arg {
+    /// Scalar value, validated against the baked manifest scalars.
+    Scalar(f64),
+    /// A buffer argument, matched by registration order.
+    BufferRef,
+    /// Local memory reservation in bytes (paper's `Arg::LocalAlloc`);
+    /// AOT kernels size their VMEM blocks statically, so this is
+    /// API-compatibility metadata only.
+    LocalAlloc(usize),
+}
+
+/// The paper's Tier-1 `Program`.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    kernel_name: Option<String>,
+    kernel_entry: Option<String>,
+    inputs: Vec<Buffer>,
+    outputs: Vec<Buffer>,
+    args: BTreeMap<usize, Arg>,
+    out_pattern: (usize, usize),
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Self { out_pattern: (1, 1), ..Default::default() }
+    }
+
+    /// Register an input container (paper: `program.in(vector)`).
+    pub fn input(&mut self, data: Vec<f32>) -> &mut Self {
+        self.inputs.push(Buffer::input(data));
+        self
+    }
+
+    /// Register an output container of `len` f32s (paper: `program.out`).
+    pub fn output(&mut self, len: usize) -> &mut Self {
+        self.outputs.push(Buffer::output(len));
+        self
+    }
+
+    /// Output pattern: `num` out indexes per `den` work-items (paper §4.2;
+    /// e.g. Binomial is 1:255 — 255 work-items produce one output).
+    pub fn out_pattern(&mut self, num: usize, den: usize) -> &mut Self {
+        self.out_pattern = (num, den);
+        self
+    }
+
+    /// Select the kernel: `name` is the benchmark artifact family,
+    /// `entry` the kernel function (informational, as the source string
+    /// was in the paper).
+    pub fn kernel(&mut self, name: &str, entry: &str) -> &mut Self {
+        self.kernel_name = Some(name.to_string());
+        self.kernel_entry = Some(entry.to_string());
+        self
+    }
+
+    /// Positional scalar argument (paper: `program.arg(0, steps)`).
+    pub fn arg_scalar(&mut self, index: usize, value: f64) -> &mut Self {
+        self.args.insert(index, Arg::Scalar(value));
+        self
+    }
+
+    /// Aggregate buffer argument (paper: `program.arg(in)`); buffers are
+    /// matched by registration order, this records the position.
+    pub fn arg_buffer(&mut self, index: usize) -> &mut Self {
+        self.args.insert(index, Arg::BufferRef);
+        self
+    }
+
+    /// Local-memory reservation (paper: `ecl::Arg::LocalAlloc`).
+    pub fn arg_local_alloc(&mut self, index: usize, bytes: usize) -> &mut Self {
+        self.args.insert(index, Arg::LocalAlloc(bytes));
+        self
+    }
+
+    // ---- engine-side accessors -------------------------------------
+
+    pub fn kernel_name(&self) -> Option<&str> {
+        self.kernel_name.as_deref()
+    }
+
+    pub fn kernel_entry(&self) -> Option<&str> {
+        self.kernel_entry.as_deref()
+    }
+
+    pub fn inputs(&self) -> &[Buffer] {
+        &self.inputs
+    }
+
+    pub fn outputs(&self) -> &[Buffer] {
+        &self.outputs
+    }
+
+    pub fn outputs_mut(&mut self) -> &mut [Buffer] {
+        &mut self.outputs
+    }
+
+    pub fn args(&self) -> &BTreeMap<usize, Arg> {
+        &self.args
+    }
+
+    pub fn get_out_pattern(&self) -> (usize, usize) {
+        self.out_pattern
+    }
+
+    /// Move the computed output data out of the program (paper: after
+    /// `run()` the containers hold the results).
+    pub fn take_outputs(self) -> Vec<Buffer> {
+        self.outputs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain() {
+        let mut p = Program::new();
+        p.input(vec![1.0; 8])
+            .output(8)
+            .out_pattern(1, 255)
+            .kernel("binomial", "binomial_opts")
+            .arg_scalar(0, 254.0)
+            .arg_buffer(1)
+            .arg_local_alloc(3, 255 * 16);
+        assert_eq!(p.kernel_name(), Some("binomial"));
+        assert_eq!(p.inputs().len(), 1);
+        assert_eq!(p.outputs().len(), 1);
+        assert_eq!(p.get_out_pattern(), (1, 255));
+        assert_eq!(p.args().len(), 3);
+        assert_eq!(p.args()[&0], Arg::Scalar(254.0));
+        assert_eq!(p.args()[&3], Arg::LocalAlloc(255 * 16));
+    }
+
+    #[test]
+    fn default_out_pattern_is_1_1() {
+        assert_eq!(Program::new().get_out_pattern(), (1, 1));
+    }
+}

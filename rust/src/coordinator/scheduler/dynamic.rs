@@ -1,0 +1,95 @@
+//! Dynamic scheduler (paper §5.3): the dataset is divided into a given
+//! number of equal packages, well above the device count; the master
+//! assigns the next package to whichever device completes first.
+//! Adaptive (good for irregular kernels), but every package is a
+//! host<->device synchronization point — with many packages the overhead
+//! shows, with few a slow device can grab too large a tail package
+//! (Figure 9's Binomial/Dynamic-50 imbalance).
+
+use std::collections::VecDeque;
+
+use crate::coordinator::work::{equal_split, Range};
+
+use super::{SchedDevice, Scheduler};
+
+#[derive(Debug)]
+pub struct Dynamic {
+    packages: usize,
+    queue: VecDeque<Range>,
+}
+
+impl Dynamic {
+    pub fn new(packages: usize) -> Self {
+        Self { packages: packages.max(1), queue: VecDeque::new() }
+    }
+}
+
+impl Scheduler for Dynamic {
+    fn name(&self) -> String {
+        format!("Dynamic {}", self.packages)
+    }
+
+    fn start(&mut self, total_granules: usize, granule: usize, _devices: &[SchedDevice]) {
+        self.queue = equal_split(total_granules, self.packages)
+            .into_iter()
+            .filter(|(b, e)| e > b)
+            .map(|(b, e)| Range::new(b * granule, e * granule))
+            .collect();
+    }
+
+    fn next_package(&mut self, _dev: usize) -> Option<Range> {
+        self.queue.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn devs(n: usize) -> Vec<SchedDevice> {
+        (0..n).map(|i| SchedDevice { name: format!("d{i}"), power: 1.0 }).collect()
+    }
+
+    #[test]
+    fn fifo_covers_everything() {
+        let mut s = Dynamic::new(7);
+        s.start(100, 8, &devs(3));
+        let mut cursor = 0;
+        let mut count = 0;
+        while let Some(r) = s.next_package(count % 3) {
+            assert_eq!(r.begin, cursor, "contiguous FIFO");
+            cursor = r.end;
+            count += 1;
+        }
+        assert_eq!(cursor, 100 * 8);
+        assert_eq!(count, 7);
+    }
+
+    #[test]
+    fn near_equal_packages() {
+        let mut s = Dynamic::new(50);
+        s.start(1024, 128, &devs(2));
+        let mut lens = Vec::new();
+        while let Some(r) = s.next_package(0) {
+            lens.push(r.len());
+        }
+        assert_eq!(lens.len(), 50);
+        let mx = lens.iter().max().unwrap();
+        let mn = lens.iter().min().unwrap();
+        assert!(mx - mn <= 128);
+    }
+
+    #[test]
+    fn more_packages_than_granules_degrades_gracefully() {
+        let mut s = Dynamic::new(100);
+        s.start(3, 16, &devs(2));
+        let mut total = 0;
+        let mut n = 0;
+        while let Some(r) = s.next_package(0) {
+            total += r.len();
+            n += 1;
+        }
+        assert_eq!(total, 48);
+        assert_eq!(n, 3, "at most one package per granule");
+    }
+}

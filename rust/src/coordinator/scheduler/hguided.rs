@@ -1,0 +1,155 @@
+//! HGuided scheduler (paper §5.3) — the best performer in the paper's
+//! evaluation: guided self-scheduling weighted by heterogeneous device
+//! powers. Large packages early (few synchronization points), shrinking
+//! toward the end (all devices finish together), sized per device:
+//!
+//!   packet_size_i = floor( G_r * P_i / (k * n * sum_j P_j) )
+//!
+//! clamped below by a per-device minimum that also scales with power
+//! ("giving bigger package sizes in the most powerful devices").
+
+use crate::coordinator::work::Range;
+
+use super::{SchedDevice, Scheduler};
+
+#[derive(Debug)]
+pub struct HGuided {
+    k: f64,
+    min_granules: usize,
+    granule: usize,
+    powers: Vec<f64>,
+    power_sum: f64,
+    power_max: f64,
+    /// Next unassigned granule.
+    cursor: usize,
+    total: usize,
+}
+
+impl HGuided {
+    pub fn new(k: f64, min_granules: usize) -> Self {
+        Self {
+            k: if k <= 0.0 { 2.0 } else { k },
+            min_granules: min_granules.max(1),
+            granule: 1,
+            powers: Vec::new(),
+            power_sum: 0.0,
+            power_max: 0.0,
+            cursor: 0,
+            total: 0,
+        }
+    }
+
+    /// Package size (in granules) for device `dev` given `pending`
+    /// unassigned granules — the paper's formula plus the minimum clamp.
+    fn packet_granules(&self, dev: usize, pending: usize) -> usize {
+        let n = self.powers.len() as f64;
+        let p = self.powers[dev];
+        let raw = (pending as f64 * p) / (self.k * n * self.power_sum);
+        let min_i =
+            ((self.min_granules as f64 * p / self.power_max).round() as usize).max(1);
+        (raw.floor() as usize).max(min_i).min(pending)
+    }
+}
+
+impl Scheduler for HGuided {
+    fn name(&self) -> String {
+        "HGuided".into()
+    }
+
+    fn start(&mut self, total_granules: usize, granule: usize, devices: &[SchedDevice]) {
+        self.granule = granule;
+        self.powers = devices.iter().map(|d| d.power.max(1e-6)).collect();
+        self.power_sum = self.powers.iter().sum();
+        self.power_max = self.powers.iter().cloned().fold(f64::MIN, f64::max);
+        self.cursor = 0;
+        self.total = total_granules;
+    }
+
+    fn next_package(&mut self, dev: usize) -> Option<Range> {
+        let pending = self.total - self.cursor;
+        if pending == 0 {
+            return None;
+        }
+        let take = self.packet_granules(dev, pending);
+        let begin = self.cursor;
+        self.cursor += take;
+        Some(Range::new(begin * self.granule, self.cursor * self.granule))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn devs(powers: &[f64]) -> Vec<SchedDevice> {
+        powers
+            .iter()
+            .enumerate()
+            .map(|(i, p)| SchedDevice { name: format!("d{i}"), power: *p })
+            .collect()
+    }
+
+    #[test]
+    fn covers_everything_round_robin() {
+        let mut s = HGuided::new(2.0, 2);
+        let d = devs(&[0.3, 1.0, 0.42]);
+        s.start(1000, 64, &d);
+        let mut cursor = 0;
+        let mut i = 0;
+        while let Some(r) = s.next_package(i % 3) {
+            assert_eq!(r.begin, cursor);
+            assert_eq!(r.begin % 64, 0);
+            assert_eq!(r.len() % 64, 0);
+            cursor = r.end;
+            i += 1;
+        }
+        assert_eq!(cursor, 1000 * 64);
+    }
+
+    #[test]
+    fn sizes_decrease_for_same_device() {
+        let mut s = HGuided::new(2.0, 1);
+        s.start(10_000, 1, &devs(&[1.0, 1.0]));
+        let mut last = usize::MAX;
+        for _ in 0..20 {
+            let r = s.next_package(0).unwrap();
+            assert!(r.len() <= last, "monotonically non-increasing");
+            last = r.len();
+        }
+    }
+
+    #[test]
+    fn powerful_devices_get_bigger_packets() {
+        let mut a = HGuided::new(2.0, 2);
+        a.start(10_000, 1, &devs(&[0.2, 1.0]));
+        let weak = a.next_package(0).unwrap().len();
+        let mut b = HGuided::new(2.0, 2);
+        b.start(10_000, 1, &devs(&[0.2, 1.0]));
+        let strong = b.next_package(1).unwrap().len();
+        assert!(strong > weak * 3, "strong {strong} vs weak {weak}");
+    }
+
+    #[test]
+    fn respects_min_granules() {
+        let mut s = HGuided::new(2.0, 4);
+        s.start(1000, 1, &devs(&[1.0, 1.0]));
+        // Drain; every package ≥ min (except possibly the final remainder).
+        let mut sizes = Vec::new();
+        while let Some(r) = s.next_package(0) {
+            sizes.push(r.len());
+        }
+        for &sz in &sizes[..sizes.len() - 1] {
+            assert!(sz >= 4);
+        }
+        assert_eq!(sizes.iter().sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn smaller_k_gives_bigger_first_packet() {
+        let mut a = HGuided::new(1.0, 1);
+        a.start(1000, 1, &devs(&[1.0]));
+        let mut b = HGuided::new(4.0, 1);
+        b.start(1000, 1, &devs(&[1.0]));
+        assert!(a.next_package(0).unwrap().len() > b.next_package(0).unwrap().len());
+    }
+}

@@ -1,0 +1,152 @@
+//! Pluggable scheduling system (paper Figure 4: Strategy pattern).
+//!
+//! A scheduler hands out granule-ranges to devices on request. The engine
+//! calls `start` once with the work size and device descriptions, then
+//! `next_package(dev)` every time device `dev` is idle; `None` is terminal
+//! for that device. All three of the paper's algorithms are implemented;
+//! new ones plug in through the same trait.
+
+pub mod dynamic;
+pub mod hguided;
+pub mod static_sched;
+
+pub use dynamic::Dynamic;
+pub use hguided::HGuided;
+pub use static_sched::Static;
+
+use crate::coordinator::work::Range;
+
+/// Device description given to schedulers at `start`.
+#[derive(Debug, Clone)]
+pub struct SchedDevice {
+    pub name: String,
+    /// Relative computing power (HGuided's P_i; Static's default props).
+    pub power: f64,
+}
+
+/// The Strategy interface.
+pub trait Scheduler: Send {
+    fn name(&self) -> String;
+
+    /// Reset internal state for a run over `total_granules` granules of
+    /// `granule` work-items each, across `devices`.
+    fn start(&mut self, total_granules: usize, granule: usize, devices: &[SchedDevice]);
+
+    /// The next package for device `dev` (indexes `devices` from `start`),
+    /// in *work-items*. `None` = no more work for this device, ever.
+    fn next_package(&mut self, dev: usize) -> Option<Range>;
+}
+
+/// Engine-facing configuration enum (Tier-2 API); materialized into a
+/// boxed Strategy at run time.
+#[derive(Debug, Clone)]
+pub enum SchedulerKind {
+    /// One package per device, proportional to `props` (or to device
+    /// powers when `None`). `reversed` flips the delivery order
+    /// (the paper's "Static rev").
+    Static { props: Option<Vec<f64>>, reversed: bool },
+    /// `packages` equal chunks, first-come-first-served.
+    Dynamic { packages: usize },
+    /// Geometrically decreasing packages weighted by device power.
+    HGuided { k: f64, min_granules: usize },
+}
+
+impl SchedulerKind {
+    pub fn static_default() -> Self {
+        SchedulerKind::Static { props: None, reversed: false }
+    }
+
+    pub fn static_with(props: Vec<f64>) -> Self {
+        SchedulerKind::Static { props: Some(props), reversed: false }
+    }
+
+    pub fn dynamic(packages: usize) -> Self {
+        SchedulerKind::Dynamic { packages }
+    }
+
+    pub fn hguided() -> Self {
+        SchedulerKind::HGuided { k: 2.0, min_granules: 2 }
+    }
+
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Static { props, reversed } => {
+                Box::new(Static::new(props.clone(), *reversed))
+            }
+            SchedulerKind::Dynamic { packages } => Box::new(Dynamic::new(*packages)),
+            SchedulerKind::HGuided { k, min_granules } => {
+                Box::new(HGuided::new(*k, *min_granules))
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SchedulerKind::Static { reversed: false, .. } => "Static".into(),
+            SchedulerKind::Static { reversed: true, .. } => "Static rev".into(),
+            SchedulerKind::Dynamic { packages } => format!("Dynamic {packages}"),
+            SchedulerKind::HGuided { .. } => "HGuided".into(),
+        }
+    }
+}
+
+/// Parse a CLI scheduler spec: `static`, `static-rev`, `dynamic:N`,
+/// `hguided`, `hguided:k=3,min=4`.
+pub fn parse_kind(s: &str) -> Option<SchedulerKind> {
+    let (head, tail) = s.split_once(':').unwrap_or((s, ""));
+    match head {
+        "static" => Some(SchedulerKind::Static { props: None, reversed: false }),
+        "static-rev" => Some(SchedulerKind::Static { props: None, reversed: true }),
+        "dynamic" => {
+            let packages = if tail.is_empty() { 50 } else { tail.parse().ok()? };
+            Some(SchedulerKind::Dynamic { packages })
+        }
+        "hguided" => {
+            let mut k = 2.0;
+            let mut min = 2;
+            for part in tail.split(',').filter(|p| !p.is_empty()) {
+                let (key, val) = part.split_once('=')?;
+                match key {
+                    "k" => k = val.parse().ok()?,
+                    "min" => min = val.parse().ok()?,
+                    _ => return None,
+                }
+            }
+            Some(SchedulerKind::HGuided { k, min_granules: min })
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        assert_eq!(SchedulerKind::static_default().label(), "Static");
+        assert_eq!(SchedulerKind::dynamic(150).label(), "Dynamic 150");
+        assert_eq!(SchedulerKind::hguided().label(), "HGuided");
+        assert_eq!(
+            SchedulerKind::Static { props: None, reversed: true }.label(),
+            "Static rev"
+        );
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert!(matches!(parse_kind("static"), Some(SchedulerKind::Static { reversed: false, .. })));
+        assert!(matches!(parse_kind("static-rev"), Some(SchedulerKind::Static { reversed: true, .. })));
+        assert!(matches!(parse_kind("dynamic:150"), Some(SchedulerKind::Dynamic { packages: 150 })));
+        assert!(matches!(parse_kind("dynamic"), Some(SchedulerKind::Dynamic { packages: 50 })));
+        match parse_kind("hguided:k=3.5,min=4") {
+            Some(SchedulerKind::HGuided { k, min_granules }) => {
+                assert!((k - 3.5).abs() < 1e-9);
+                assert_eq!(min_granules, 4);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse_kind("nope").is_none());
+        assert!(parse_kind("hguided:bogus=1").is_none());
+    }
+}

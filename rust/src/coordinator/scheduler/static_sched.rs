@@ -1,0 +1,131 @@
+//! Static scheduler (paper §5.3): one package per device, sized before
+//! execution from known proportions. Minimal synchronization (one package
+//! each), best for regular kernels on well-characterized devices; not
+//! adaptive, so irregular loads (Mandelbrot) imbalance it badly — which
+//! Figure 9 shows and our Figure-9 bench reproduces.
+//!
+//! Delivery order matters for irregular problems (which *region* each
+//! device gets): `Static` hands the first slice to the first device,
+//! `Static rev` reverses the slice order (paper §7.3).
+
+use crate::coordinator::work::{proportional_split, Range};
+
+use super::{SchedDevice, Scheduler};
+
+#[derive(Debug)]
+pub struct Static {
+    props: Option<Vec<f64>>,
+    reversed: bool,
+    granule: usize,
+    /// Pre-computed package per device; taken on first request.
+    packages: Vec<Option<Range>>,
+}
+
+impl Static {
+    pub fn new(props: Option<Vec<f64>>, reversed: bool) -> Self {
+        Self { props, reversed, granule: 1, packages: Vec::new() }
+    }
+}
+
+impl Scheduler for Static {
+    fn name(&self) -> String {
+        if self.reversed { "Static rev".into() } else { "Static".into() }
+    }
+
+    fn start(&mut self, total_granules: usize, granule: usize, devices: &[SchedDevice]) {
+        self.granule = granule;
+        let props: Vec<f64> = match &self.props {
+            Some(p) => {
+                assert_eq!(p.len(), devices.len(), "one proportion per device");
+                p.clone()
+            }
+            None => devices.iter().map(|d| d.power).collect(),
+        };
+        // Slice the dataset contiguously; delivery order decides which
+        // device gets which region.
+        let order: Vec<usize> = if self.reversed {
+            (0..devices.len()).rev().collect()
+        } else {
+            (0..devices.len()).collect()
+        };
+        let ordered_props: Vec<f64> = order.iter().map(|&i| props[i]).collect();
+        let slices = proportional_split(total_granules, &ordered_props);
+        let mut packages = vec![None; devices.len()];
+        for (slot, (gb, ge)) in order.iter().zip(slices) {
+            if ge > gb {
+                packages[*slot] = Some(Range::new(gb * granule, ge * granule));
+            }
+        }
+        self.packages = packages;
+    }
+
+    fn next_package(&mut self, dev: usize) -> Option<Range> {
+        self.packages.get_mut(dev).and_then(|p| p.take())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn devs(powers: &[f64]) -> Vec<SchedDevice> {
+        powers
+            .iter()
+            .enumerate()
+            .map(|(i, p)| SchedDevice { name: format!("d{i}"), power: *p })
+            .collect()
+    }
+
+    #[test]
+    fn one_package_each_then_none() {
+        let mut s = Static::new(Some(vec![0.25, 0.75]), false);
+        s.start(100, 64, &devs(&[1.0, 1.0]));
+        let a = s.next_package(0).unwrap();
+        let b = s.next_package(1).unwrap();
+        assert_eq!(a.len() + b.len(), 100 * 64);
+        assert!(s.next_package(0).is_none());
+        assert!(s.next_package(1).is_none());
+    }
+
+    #[test]
+    fn proportions_respected() {
+        let mut s = Static::new(Some(vec![0.1, 0.9]), false);
+        s.start(1000, 1, &devs(&[1.0, 1.0]));
+        let a = s.next_package(0).unwrap();
+        let b = s.next_package(1).unwrap();
+        assert!((a.len() as f64 - 100.0).abs() <= 1.0);
+        assert!((b.len() as f64 - 900.0).abs() <= 1.0);
+        // Device 0 gets the *first* region.
+        assert_eq!(a.begin, 0);
+        assert_eq!(b.end, 1000);
+    }
+
+    #[test]
+    fn reversed_flips_regions() {
+        let mut s = Static::new(Some(vec![0.5, 0.5]), true);
+        s.start(10, 1, &devs(&[1.0, 1.0]));
+        let a = s.next_package(0).unwrap();
+        let b = s.next_package(1).unwrap();
+        // Reversed: the last device gets the first region.
+        assert_eq!(b.begin, 0);
+        assert_eq!(a.end, 10);
+    }
+
+    #[test]
+    fn defaults_to_power_proportions() {
+        let mut s = Static::new(None, false);
+        s.start(100, 1, &devs(&[1.0, 3.0]));
+        let a = s.next_package(0).unwrap();
+        let b = s.next_package(1).unwrap();
+        assert_eq!(a.len(), 25);
+        assert_eq!(b.len(), 75);
+    }
+
+    #[test]
+    fn zero_power_device_gets_nothing() {
+        let mut s = Static::new(Some(vec![0.0, 1.0]), false);
+        s.start(10, 1, &devs(&[1.0, 1.0]));
+        assert!(s.next_package(0).is_none());
+        assert_eq!(s.next_package(1).unwrap().len(), 10);
+    }
+}

@@ -1,0 +1,134 @@
+//! Work-item ranges and partitioning helpers.
+//!
+//! All scheduling happens in *granules* (the paper's work-groups): a
+//! package is a contiguous granule-aligned range of work-items.
+
+/// A half-open range of work-items `[begin, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Range {
+    pub begin: usize,
+    pub end: usize,
+}
+
+impl Range {
+    pub fn new(begin: usize, end: usize) -> Self {
+        debug_assert!(end >= begin);
+        Self { begin, end }
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.begin
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end == self.begin
+    }
+}
+
+/// Split `total` granules proportionally to `props` (normalized), granule-
+/// aligned, remainder granules going to the largest shares first. Returns
+/// one (possibly empty) contiguous slice per prop, in order.
+pub fn proportional_split(total_granules: usize, props: &[f64]) -> Vec<(usize, usize)> {
+    assert!(!props.is_empty());
+    let sum: f64 = props.iter().sum();
+    assert!(sum > 0.0, "proportions must sum > 0");
+    // Largest-remainder method on granule counts.
+    let exact: Vec<f64> = props.iter().map(|p| p / sum * total_granules as f64).collect();
+    let mut counts: Vec<usize> = exact.iter().map(|e| e.floor() as usize).collect();
+    let mut assigned: usize = counts.iter().sum();
+    let mut order: Vec<usize> = (0..props.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = exact[a] - counts[a] as f64;
+        let rb = exact[b] - counts[b] as f64;
+        rb.partial_cmp(&ra).unwrap()
+    });
+    let mut i = 0;
+    while assigned < total_granules {
+        counts[order[i % order.len()]] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    // Convert to contiguous (begin, end) granule ranges.
+    let mut out = Vec::with_capacity(props.len());
+    let mut cursor = 0;
+    for c in counts {
+        out.push((cursor, cursor + c));
+        cursor += c;
+    }
+    debug_assert_eq!(cursor, total_granules);
+    out
+}
+
+/// Split `total_granules` into `packages` near-equal contiguous slices
+/// (first `total % packages` slices get one extra granule).
+pub fn equal_split(total_granules: usize, packages: usize) -> Vec<(usize, usize)> {
+    assert!(packages > 0);
+    let packages = packages.min(total_granules.max(1));
+    let base = total_granules / packages;
+    let extra = total_granules % packages;
+    let mut out = Vec::with_capacity(packages);
+    let mut cursor = 0;
+    for i in 0..packages {
+        let len = base + usize::from(i < extra);
+        out.push((cursor, cursor + len));
+        cursor += len;
+    }
+    debug_assert_eq!(cursor, total_granules);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_basics() {
+        let r = Range::new(128, 384);
+        assert_eq!(r.len(), 256);
+        assert!(!r.is_empty());
+        assert!(Range::new(5, 5).is_empty());
+    }
+
+    #[test]
+    fn proportional_covers_exactly() {
+        for total in [1usize, 7, 100, 1023] {
+            let parts = proportional_split(total, &[0.08, 0.3, 0.62]);
+            assert_eq!(parts.len(), 3);
+            assert_eq!(parts[0].0, 0);
+            assert_eq!(parts.last().unwrap().1, total);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn proportional_respects_ratios() {
+        let parts = proportional_split(1000, &[1.0, 3.0]);
+        let l0 = parts[0].1 - parts[0].0;
+        let l1 = parts[1].1 - parts[1].0;
+        assert_eq!(l0 + l1, 1000);
+        assert!((l0 as f64 - 250.0).abs() <= 1.0);
+        assert!((l1 as f64 - 750.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn proportional_zero_share_allowed() {
+        let parts = proportional_split(10, &[0.0, 1.0]);
+        assert_eq!(parts[0], (0, 0));
+        assert_eq!(parts[1], (0, 10));
+    }
+
+    #[test]
+    fn equal_split_covers() {
+        for (total, packages) in [(100usize, 7usize), (5, 5), (3, 10), (1024, 50)] {
+            let parts = equal_split(total, packages);
+            assert_eq!(parts[0].0, 0);
+            assert_eq!(parts.last().unwrap().1, total);
+            let lens: Vec<usize> = parts.iter().map(|(a, b)| b - a).collect();
+            let mx = lens.iter().max().unwrap();
+            let mn = lens.iter().min().unwrap();
+            assert!(mx - mn <= 1, "near-equal: {lens:?}");
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Figure 13 — initialization-to-compute timelines for Binomial on Batel:
+//! the Xeon Phi driver needs the CPU, so its init stretches from ~1.8 s
+//! (solo) to ~2.7 s under co-execution, imbalancing Static runs.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::{DeviceSpec, SchedulerKind};
+use crate::platform::NodeConfig;
+use crate::runtime::ArtifactRegistry;
+
+use super::runs::run_once;
+
+/// Per-device init/compute segments for one configuration.
+#[derive(Debug, Clone)]
+pub struct InitTimeline {
+    pub config: String,
+    pub devices: Vec<DeviceSegment>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DeviceSegment {
+    pub name: String,
+    pub init_end: Duration,
+    pub first_compute: Duration,
+    pub completion: Duration,
+}
+
+/// The paper's Figure-13 grid: each device solo (base case) plus every
+/// scheduler configuration co-executing all devices.
+pub fn timelines(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    bench: &str,
+) -> Result<Vec<InitTimeline>> {
+    let mut out = Vec::new();
+    // Base cases: one device at a time.
+    for (i, d) in node.devices.iter().enumerate() {
+        let report = run_once(
+            reg,
+            node,
+            bench,
+            vec![DeviceSpec::new(i)],
+            SchedulerKind::static_default(),
+            None,
+        )?;
+        out.push(InitTimeline {
+            config: format!("base {}", d.name),
+            devices: segments(&report),
+        });
+    }
+    // Co-execution configs.
+    let all: Vec<DeviceSpec> = (0..node.devices.len()).map(DeviceSpec::new).collect();
+    for kind in super::runs::paper_schedulers() {
+        let report = run_once(reg, node, bench, all.clone(), kind.clone(), None)?;
+        out.push(InitTimeline { config: kind.label(), devices: segments(&report) });
+    }
+    Ok(out)
+}
+
+fn segments(report: &crate::coordinator::RunReport) -> Vec<DeviceSegment> {
+    report
+        .devices
+        .iter()
+        .map(|d| DeviceSegment {
+            name: d.name.clone(),
+            init_end: d.init_end,
+            first_compute: d.packages.first().map(|p| p.start).unwrap_or(d.init_end),
+            completion: d.completion(),
+        })
+        .collect()
+}

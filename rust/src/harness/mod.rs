@@ -1,0 +1,8 @@
+//! Experiment harness — one runner per paper table/figure (DESIGN.md §6).
+
+pub mod balance;
+pub mod init;
+pub mod overhead;
+pub mod perf;
+pub mod runs;
+pub mod traces;

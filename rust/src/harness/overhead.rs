@@ -1,0 +1,127 @@
+//! Figures 7 & 8 — EngineCL-vs-native overhead on a single device.
+//!
+//! The paper's measurement protocol times the *whole program lifecycle*
+//! ("including initialization, management and releasing", §7.3), so both
+//! sides here do the same work per repetition:
+//!
+//!  * native:  create a PJRT client, compile the needed executables,
+//!             upload inputs, execute, collect results, release — a
+//!             hand-driven `ChunkExecutor` (what `examples/native/*` do).
+//!  * EngineCL: a fresh engine with simulation off (`Configurator::raw()`)
+//!             and lazy compilation (same executables compiled as native).
+//!
+//! The difference is therefore pure coordination cost: worker threads,
+//! channels, scheduler, introspection, result merge.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{DeviceSpec, SchedulerKind};
+use crate::platform::NodeConfig;
+use crate::runtime::{ArtifactRegistry, ChunkExecutor, HostBuf};
+
+use super::runs::build_engine;
+
+#[derive(Debug, Clone)]
+pub struct OverheadPoint {
+    pub bench: String,
+    pub gws: usize,
+    pub native: Duration,
+    pub enginecl: Duration,
+    /// (T_ECL - T_OCL) / T_OCL * 100 (paper §7.3).
+    pub overhead_pct: f64,
+    pub native_std: f64,
+    pub ecl_std: f64,
+}
+
+/// Full-lifecycle native time for a `gws`-item prefix of `bench`:
+/// client + compile + upload + execute + release, per repetition.
+pub fn native_time(
+    reg: &ArtifactRegistry,
+    bench: &str,
+    gws: usize,
+    reps: usize,
+) -> Result<(Duration, f64)> {
+    let manifest = reg.bench(bench)?.clone();
+    let inputs = reg.golden_inputs(&manifest)?;
+    let mut times = Vec::with_capacity(reps);
+    for rep in 0..=reps {
+        let t0 = Instant::now();
+        {
+            let mut exec = ChunkExecutor::new(reg, &manifest, &inputs)?;
+            let mut outs: Vec<HostBuf> = manifest
+                .outputs
+                .iter()
+                .map(|o| HostBuf::zeros_f32(o.elems))
+                .collect();
+            exec.execute_range(0, gws, &mut outs)?;
+            // exec dropped here: client released (the paper's clRelease*).
+        }
+        if rep > 0 {
+            times.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    Ok(summary(&times))
+}
+
+/// Full-lifecycle EngineCL time on one device, simulation off, lazy
+/// compilation (so both sides build the same executables per rep).
+pub fn enginecl_time(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    bench: &str,
+    device: usize,
+    gws: usize,
+    reps: usize,
+) -> Result<(Duration, f64)> {
+    let mut times = Vec::with_capacity(reps);
+    for rep in 0..=reps {
+        let mut engine = build_engine(
+            reg,
+            node,
+            bench,
+            vec![DeviceSpec::new(device)],
+            SchedulerKind::static_default(),
+            Some(gws),
+        )?;
+        *engine.configurator() = crate::coordinator::Configurator::raw();
+        engine.configurator().eager_compile = false;
+        let t0 = Instant::now();
+        engine.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+        if rep > 0 {
+            times.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    Ok(summary(&times))
+}
+
+fn summary(times: &[f64]) -> (Duration, f64) {
+    let med = crate::util::stats::median(times);
+    let std = crate::util::stats::stddev(times);
+    (Duration::from_secs_f64(med), std)
+}
+
+/// One (bench, device, gws) overhead cell.
+pub fn measure(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    bench: &str,
+    device: usize,
+    gws: usize,
+    reps: usize,
+) -> Result<OverheadPoint> {
+    let (native, native_std) = native_time(reg, bench, gws, reps)?;
+    let (ecl, ecl_std) = enginecl_time(reg, node, bench, device, gws, reps)?;
+    let overhead_pct =
+        (ecl.as_secs_f64() - native.as_secs_f64()) / native.as_secs_f64() * 100.0;
+    Ok(OverheadPoint {
+        bench: bench.to_string(),
+        gws,
+        native,
+        enginecl: ecl,
+        overhead_pct,
+        native_std,
+        ecl_std,
+    })
+}

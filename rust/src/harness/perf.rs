@@ -1,0 +1,109 @@
+//! Figures 10, 11, 12 — speedups, efficiency and work distribution, plus
+//! the §8.4 headline aggregation (HGuided mean efficiency per node).
+
+use crate::util::stats;
+
+use super::balance::NodeEvaluation;
+use super::runs::CoexecMetrics;
+
+/// Rows for the speedup/efficiency figures: (bench, scheduler, metrics).
+pub fn perf_rows(eval: &NodeEvaluation) -> &[CoexecMetrics] {
+    &eval.cells
+}
+
+/// Mean efficiency per scheduler label (Figure 11 summary; the paper's
+/// headline is the HGuided row).
+pub fn mean_efficiency_by_scheduler(eval: &NodeEvaluation) -> Vec<(String, f64)> {
+    let mut labels: Vec<String> = Vec::new();
+    for c in &eval.cells {
+        if !labels.contains(&c.scheduler) {
+            labels.push(c.scheduler.clone());
+        }
+    }
+    labels
+        .into_iter()
+        .map(|l| {
+            let effs: Vec<f64> = eval
+                .cells
+                .iter()
+                .filter(|c| c.scheduler == l)
+                .map(|c| c.efficiency)
+                .collect();
+            (l, stats::mean(&effs))
+        })
+        .collect()
+}
+
+/// Geometric-mean efficiency per scheduler (the paper quotes geo-mean for
+/// Dynamic on Batel).
+pub fn geomean_efficiency_by_scheduler(eval: &NodeEvaluation) -> Vec<(String, f64)> {
+    mean_efficiency_by_scheduler(eval)
+        .into_iter()
+        .map(|(l, _)| {
+            let effs: Vec<f64> = eval
+                .cells
+                .iter()
+                .filter(|c| c.scheduler == l)
+                .map(|c| c.efficiency)
+                .collect();
+            (l.clone(), stats::geomean(&effs))
+        })
+        .collect()
+}
+
+/// Work-share rows (Figure 12): bench, scheduler, one share per device.
+pub fn worksize_rows(eval: &NodeEvaluation) -> Vec<(String, String, Vec<f64>)> {
+    eval.cells
+        .iter()
+        .map(|c| (c.bench.clone(), c.scheduler.clone(), c.work_shares.clone()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    fn cell(bench: &str, sched: &str, eff: f64) -> CoexecMetrics {
+        CoexecMetrics {
+            bench: bench.into(),
+            scheduler: sched.into(),
+            balance: 0.9,
+            speedup: eff * 2.0,
+            max_speedup: 2.0,
+            efficiency: eff,
+            work_shares: vec![0.3, 0.7],
+            total_packages: 2,
+            wall: Duration::from_millis(10),
+        }
+    }
+
+    fn eval() -> NodeEvaluation {
+        NodeEvaluation {
+            node: "t".into(),
+            cells: vec![
+                cell("a", "Static", 0.8),
+                cell("a", "HGuided", 0.9),
+                cell("b", "Static", 0.6),
+                cell("b", "HGuided", 0.88),
+            ],
+            solos: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn mean_efficiency_groups_by_scheduler() {
+        let rows = mean_efficiency_by_scheduler(&eval());
+        assert_eq!(rows.len(), 2);
+        let hg = rows.iter().find(|(l, _)| l == "HGuided").unwrap();
+        assert!((hg.1 - 0.89).abs() < 1e-9);
+    }
+
+    #[test]
+    fn worksize_rows_shape() {
+        let rows = worksize_rows(&eval());
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].2.len(), 2);
+    }
+}

@@ -1,0 +1,216 @@
+//! Shared experiment plumbing: standard engine construction, solo-device
+//! baselines and the co-execution metric set (balance / speedup /
+//! efficiency) the paper reports in §7.3.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::{DeviceSpec, Engine, Program, RunReport, SchedulerKind};
+use crate::platform::NodeConfig;
+use crate::runtime::ArtifactRegistry;
+
+/// The scheduler configurations of Figures 9-12, in paper order.
+pub fn paper_schedulers() -> Vec<SchedulerKind> {
+    vec![
+        SchedulerKind::Static { props: None, reversed: false },
+        SchedulerKind::Static { props: None, reversed: true },
+        SchedulerKind::dynamic(50),
+        SchedulerKind::dynamic(150),
+        SchedulerKind::hguided(),
+    ]
+}
+
+/// The benchmark list of the evaluation (ray split into its 3 scenes).
+pub fn paper_benches() -> Vec<&'static str> {
+    vec!["gaussian", "ray1", "ray2", "ray3", "binomial", "mandelbrot", "nbody"]
+}
+
+/// Build a ready-to-run engine for `bench` on `node` with golden inputs.
+pub fn build_engine(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    bench: &str,
+    devices: Vec<DeviceSpec>,
+    scheduler: SchedulerKind,
+    gws: Option<usize>,
+) -> Result<Engine> {
+    let manifest = reg.bench(bench)?.clone();
+    let mut engine = Engine::with_registry(reg.clone());
+    engine.node(node.clone());
+    engine.use_devices(devices);
+    engine.scheduler(scheduler);
+    if let Some(g) = gws {
+        engine.global_work_items(g);
+    }
+    let mut program = Program::new();
+    program.kernel(bench, &manifest.kernel);
+    for buf in reg.golden_inputs(&manifest)? {
+        program.input(buf.as_f32().unwrap().to_vec());
+    }
+    for out in &manifest.outputs {
+        program.output(out.elems);
+    }
+    let (num, den) = manifest.out_pattern;
+    program.out_pattern(num, den);
+    engine.program(program);
+    Ok(engine)
+}
+
+/// Run and return the report.
+pub fn run_once(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    bench: &str,
+    devices: Vec<DeviceSpec>,
+    scheduler: SchedulerKind,
+    gws: Option<usize>,
+) -> Result<RunReport> {
+    let mut engine = build_engine(reg, node, bench, devices, scheduler, gws)?;
+    engine.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(engine.report().unwrap().clone())
+}
+
+/// Solo response time of device `index` (the T_i of the S_max formula):
+/// a single-device run of the full problem, compute phase only (completion
+/// minus init end, matching the paper's "response time" per device).
+pub fn solo_time(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    bench: &str,
+    index: usize,
+) -> Result<Duration> {
+    let report = run_once(
+        reg,
+        node,
+        bench,
+        vec![DeviceSpec::new(index)],
+        SchedulerKind::static_default(),
+        None,
+    )?;
+    Ok(report.device_response(0))
+}
+
+/// Full co-execution metric set for one (bench, scheduler) cell.
+#[derive(Debug, Clone)]
+pub struct CoexecMetrics {
+    pub bench: String,
+    pub scheduler: String,
+    pub balance: f64,
+    pub speedup: f64,
+    pub max_speedup: f64,
+    pub efficiency: f64,
+    pub work_shares: Vec<f64>,
+    pub total_packages: usize,
+    pub wall: Duration,
+}
+
+/// Compute balance/speedup/efficiency for a co-execution report given the
+/// per-device solo times (paper §7.3: baseline = fastest device).
+pub fn coexec_metrics(report: &RunReport, solo: &[Duration]) -> CoexecMetrics {
+    let times: Vec<f64> = solo.iter().map(|d| d.as_secs_f64()).collect();
+    let t_best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let t_max = times.iter().cloned().fold(0.0f64, f64::max);
+    let max_speedup = if t_max > 0.0 { times.iter().sum::<f64>() / t_max } else { 0.0 };
+    // Co-execution response time: from the compute epoch (earliest device
+    // ready) to the last completion — late initializers (Phi, Figure 13)
+    // are charged for their lateness, as in the paper's response times.
+    let t_co = report.response_time().as_secs_f64();
+    let speedup = if t_co > 0.0 { t_best / t_co } else { 0.0 };
+    CoexecMetrics {
+        bench: report.bench.clone(),
+        scheduler: report.scheduler.clone(),
+        balance: report.balance(),
+        speedup,
+        max_speedup,
+        efficiency: if max_speedup > 0.0 { speedup / max_speedup } else { 0.0 },
+        work_shares: report.work_shares(),
+        total_packages: report.total_packages(),
+        wall: report.wall,
+    }
+}
+
+/// Quick-mode switch for benches (ECL_BENCH_QUICK=1 shrinks sweeps).
+pub fn quick_mode() -> bool {
+    std::env::var("ECL_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Problem-size ladder for a bench: multiples of the granule from small
+/// prefixes up to the full size (Figure 7's sweep).
+pub fn size_ladder(reg: &ArtifactRegistry, bench: &str, points: usize) -> Result<Vec<usize>> {
+    let m = reg.bench(bench)?;
+    let total_granules = m.n / m.granule;
+    let mut out = Vec::new();
+    let mut g = (total_granules / (1 << (points - 1))).max(1);
+    while g < total_granules {
+        out.push(g * m.granule);
+        g *= 2;
+    }
+    out.push(m.n);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::introspector::{DeviceTrace, PackageTrace};
+    use crate::platform::DeviceKind;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    fn fake_report(completions: &[u64]) -> RunReport {
+        RunReport {
+            bench: "b".into(),
+            scheduler: "s".into(),
+            gws: 100,
+            wall: ms(*completions.iter().max().unwrap()),
+            devices: completions
+                .iter()
+                .enumerate()
+                .map(|(i, c)| DeviceTrace {
+                    name: format!("d{i}"),
+                    kind: DeviceKind::Cpu,
+                    init_start: ms(0),
+                    init_end: ms(0),
+                    packages: vec![PackageTrace {
+                        device: i,
+                        begin_item: i * 10,
+                        end_item: i * 10 + 10,
+                        start: ms(0),
+                        end: ms(*c),
+                        raw_exec: ms(1),
+                        launches: 1,
+                    }],
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn metrics_ideal_coexec() {
+        // Two devices, equal solo times of 100ms, both finish at 50ms.
+        let report = fake_report(&[50, 50]);
+        let m = coexec_metrics(&report, &[ms(100), ms(100)]);
+        assert!((m.balance - 1.0).abs() < 1e-9);
+        assert!((m.max_speedup - 2.0).abs() < 1e-9);
+        assert!((m.speedup - 2.0).abs() < 1e-9);
+        assert!((m.efficiency - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_imbalanced() {
+        let report = fake_report(&[40, 80]);
+        let m = coexec_metrics(&report, &[ms(100), ms(100)]);
+        assert!((m.balance - 0.5).abs() < 1e-9);
+        assert!((m.speedup - 1.25).abs() < 1e-9);
+        assert!(m.efficiency < 0.7);
+    }
+
+    #[test]
+    fn paper_lists() {
+        assert_eq!(paper_schedulers().len(), 5);
+        assert_eq!(paper_benches().len(), 7);
+    }
+}

@@ -1,0 +1,48 @@
+//! Figures 5 & 6 — Introspector package traces for a regular (Gaussian)
+//! and an irregular (Mandelbrot) benchmark under each scheduler.
+
+use anyhow::Result;
+
+use crate::coordinator::{DeviceSpec, RunReport, SchedulerKind};
+use crate::platform::NodeConfig;
+use crate::runtime::ArtifactRegistry;
+
+use super::runs::run_once;
+
+/// The three algorithms of Figures 5/6 in paper order.
+pub fn trace_schedulers() -> Vec<SchedulerKind> {
+    vec![
+        SchedulerKind::static_default(),
+        SchedulerKind::dynamic(50),
+        SchedulerKind::hguided(),
+    ]
+}
+
+/// One full-device trace run per scheduler for `bench`.
+pub fn collect(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    bench: &str,
+) -> Result<Vec<(String, RunReport)>> {
+    let all: Vec<DeviceSpec> = (0..node.devices.len()).map(DeviceSpec::new).collect();
+    trace_schedulers()
+        .into_iter()
+        .map(|kind| {
+            let label = kind.label();
+            run_once(reg, node, bench, all.clone(), kind, None).map(|r| (label, r))
+        })
+        .collect()
+}
+
+/// Chunk-size-over-time series per device (what Figures 5/6 plot): for
+/// each package, (device, start_ms, items).
+pub fn chunk_series(report: &RunReport) -> Vec<(String, f64, usize)> {
+    let mut rows = Vec::new();
+    for d in &report.devices {
+        for p in &d.packages {
+            rows.push((d.name.clone(), p.start.as_secs_f64() * 1e3, p.items()));
+        }
+    }
+    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    rows
+}

@@ -1,0 +1,61 @@
+//! # enginecl — EngineCL reproduced on a Rust + JAX + Pallas stack
+//!
+//! A faithful reproduction of *EngineCL: Usability and Performance in
+//! Heterogeneous Computing* (Nozal, Bosque, Beivide — FGCS 2020), built as
+//! a three-layer system:
+//!
+//! * **L1** — Pallas kernels (the paper's five OpenCL benchmarks),
+//!   AOT-lowered at build time (`python/compile/kernels/`).
+//! * **L2** — JAX chunk wrappers per (benchmark, chunk size), exported as
+//!   HLO text artifacts (`python/compile/model.py`, `aot.py`).
+//! * **L3** — this crate: the EngineCL coordinator. Tiered API
+//!   ([`Engine`]/[`Program`] = Tier-1; [`DeviceSpec`], [`Configurator`],
+//!   scheduler selection = Tier-2; device worker threads, PJRT runtime,
+//!   work decomposition = Tier-3), with the paper's three pluggable
+//!   schedulers (Static / Dynamic / HGuided) and the Introspector.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! self-contained HLO text + golden data; this crate loads and executes
+//! them through PJRT (`xla` crate).
+//!
+//! ```no_run
+//! use enginecl::prelude::*;
+//!
+//! let mut engine = Engine::new()?;
+//! engine.use_mask(DeviceMask::All);
+//! engine.scheduler(SchedulerKind::hguided());
+//!
+//! let mut program = Program::new();
+//! program.kernel("binomial", "binomial_opts");
+//! let reg = engine.registry().clone();
+//! let bench = reg.bench("binomial")?.clone();
+//! for buf in reg.golden_inputs(&bench)? {
+//!     program.input(buf.as_f32().unwrap().to_vec());
+//! }
+//! program.output(bench.outputs[0].elems);
+//! program.out_pattern(1, 255);
+//!
+//! engine.program(program);
+//! engine.run()?;
+//! let report = engine.report().unwrap();
+//! println!("balance = {:.3}", report.balance());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod coordinator;
+pub mod harness;
+pub mod metrics;
+pub mod platform;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+/// Everything a typical program needs.
+pub mod prelude {
+    pub use crate::coordinator::{
+        Buffer, Configurator, DeviceMask, DeviceSpec, EclError, Engine, Program, RunReport,
+        SchedulerKind,
+    };
+    pub use crate::platform::{DeviceKind, DeviceProfile, NodeConfig};
+    pub use crate::runtime::{ArtifactRegistry, HostBuf};
+}

@@ -1,0 +1,238 @@
+//! `enginecl` CLI — leader entrypoint: device listing, single runs,
+//! experiment regeneration and usability analysis.
+
+use anyhow::Result;
+
+use enginecl::coordinator::{scheduler, DeviceSpec};
+use enginecl::harness::{balance, init, overhead, perf, runs, traces};
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::ArtifactRegistry;
+use enginecl::util::cli::Args;
+
+const USAGE: &str = "\
+enginecl — EngineCL reproduction (Rust + JAX/Pallas AOT over PJRT)
+
+USAGE:
+  enginecl devices [--node batel|remo]
+  enginecl benches
+  enginecl run <bench> [--node N] [--devices 0,1,2|all|gpu|cpu]
+                        [--scheduler static|static-rev|dynamic:N|hguided]
+                        [--gws N] [--timeline] [--csv]
+  enginecl solo <bench> [--node N]         per-device solo times + S_max
+  enginecl overhead <bench> [--device I] [--reps N]
+  enginecl eval [--node N] [--reps N]      balance/speedup/efficiency grid
+  enginecl init-timelines [--bench binomial] [--node batel]
+  enginecl traces <bench> [--node N]       Figures 5/6 package traces
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "devices" => devices(&args),
+        "benches" => benches(),
+        "run" => run(&args),
+        "solo" => solo(&args),
+        "overhead" => overhead_cmd(&args),
+        "eval" => eval(&args),
+        "init-timelines" => init_timelines(&args),
+        "traces" => traces_cmd(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn node_from(args: &Args) -> NodeConfig {
+    let name = args.get("node").unwrap_or("batel");
+    NodeConfig::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown node '{name}', using batel");
+        NodeConfig::batel()
+    })
+}
+
+fn devices(args: &Args) -> Result<()> {
+    let node = node_from(args);
+    println!("node: {}", node.name);
+    for (i, d) in node.devices.iter().enumerate() {
+        println!(
+            "  [{i}] {:<18} kind={:<5} power={:.2} init={:?} pkg-overhead={:?}",
+            d.name,
+            d.kind.label(),
+            d.relative_power,
+            d.init,
+            d.package_overhead
+        );
+    }
+    Ok(())
+}
+
+fn benches() -> Result<()> {
+    let reg = ArtifactRegistry::discover()?;
+    for (name, b) in &reg.benches {
+        println!(
+            "{:<11} n={:<7} granule={:<4} irregular={:<5} in={} out={} chunks={}",
+            name,
+            b.n,
+            b.granule,
+            b.irregular,
+            b.inputs.len(),
+            b.outputs.len(),
+            b.chunks.len()
+        );
+    }
+    Ok(())
+}
+
+fn parse_devices(spec: &str, node: &NodeConfig) -> Vec<DeviceSpec> {
+    match spec {
+        "all" => (0..node.devices.len()).map(DeviceSpec::new).collect(),
+        "cpu" => node
+            .devices
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.kind == enginecl::platform::DeviceKind::Cpu)
+            .map(|(i, _)| DeviceSpec::new(i))
+            .collect(),
+        "gpu" => vec![DeviceSpec::new(node.fastest())],
+        list => list
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .map(DeviceSpec::new)
+            .collect(),
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let bench = args.positional.get(1).map(String::as_str).unwrap_or("binomial");
+    let node = node_from(args);
+    let reg = ArtifactRegistry::discover()?;
+    let devices = parse_devices(args.get("devices").unwrap_or("all"), &node);
+    let kind = scheduler::parse_kind(args.get("scheduler").unwrap_or("hguided"))
+        .ok_or_else(|| anyhow::anyhow!("bad --scheduler"))?;
+    let gws = args.get("gws").and_then(|s| s.parse().ok());
+
+    let report = runs::run_once(&reg, &node, bench, devices, kind, gws)?;
+    println!(
+        "bench={} scheduler={} gws={} wall={:.1}ms balance={:.3} packages={}",
+        report.bench,
+        report.scheduler,
+        report.gws,
+        report.wall.as_secs_f64() * 1e3,
+        report.balance(),
+        report.total_packages()
+    );
+    for (d, share) in report.devices.iter().zip(report.work_shares()) {
+        println!(
+            "  {:<18} items={:<7} share={:>5.1}% init={:>7.1}ms done={:>8.1}ms pkgs={}",
+            d.name,
+            d.items(),
+            share * 100.0,
+            d.init_end.as_secs_f64() * 1e3,
+            d.completion().as_secs_f64() * 1e3,
+            d.packages.len()
+        );
+    }
+    if args.has_flag("timeline") {
+        print!("{}", report.ascii_timeline(72));
+    }
+    if args.has_flag("csv") {
+        print!("{}", report.package_csv());
+    }
+    Ok(())
+}
+
+fn solo(args: &Args) -> Result<()> {
+    let bench = args.positional.get(1).map(String::as_str).unwrap_or("binomial");
+    let node = node_from(args);
+    let reg = ArtifactRegistry::discover()?;
+    let mut times = Vec::new();
+    for (i, d) in node.devices.iter().enumerate() {
+        let t = runs::solo_time(&reg, &node, bench, i)?;
+        println!("  {:<18} T_i = {:>9.1} ms", d.name, t.as_secs_f64() * 1e3);
+        times.push(t.as_secs_f64());
+    }
+    let tmax = times.iter().cloned().fold(0.0f64, f64::max);
+    println!("  S_max = {:.3}", times.iter().sum::<f64>() / tmax);
+    Ok(())
+}
+
+fn overhead_cmd(args: &Args) -> Result<()> {
+    let bench = args.positional.get(1).map(String::as_str).unwrap_or("binomial");
+    let node = node_from(args);
+    let reg = ArtifactRegistry::discover()?;
+    let device = args.get_usize("device", 0);
+    let reps = args.get_usize("reps", 5);
+    let ladder = runs::size_ladder(&reg, bench, 5)?;
+    println!("bench={bench} device={} reps={reps}", node.devices[device].name);
+    println!("{:>9} {:>12} {:>12} {:>9}", "gws", "native(ms)", "enginecl(ms)", "ovh(%)");
+    for gws in ladder {
+        let p = overhead::measure(&reg, &node, bench, device, gws, reps)?;
+        println!(
+            "{:>9} {:>12.2} {:>12.2} {:>9.2}",
+            p.gws,
+            p.native.as_secs_f64() * 1e3,
+            p.enginecl.as_secs_f64() * 1e3,
+            p.overhead_pct
+        );
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let node = node_from(args);
+    let reg = ArtifactRegistry::discover()?;
+    let reps = args.get_usize("reps", 1);
+    let eval = balance::evaluate_node(&reg, &node, None, reps)?;
+    println!("node={}", eval.node);
+    println!(
+        "{:<11} {:<12} {:>8} {:>8} {:>7} {:>6} {:>5}",
+        "bench", "scheduler", "balance", "speedup", "S_max", "eff", "pkgs"
+    );
+    for c in &eval.cells {
+        println!(
+            "{:<11} {:<12} {:>8.3} {:>8.3} {:>7.3} {:>6.3} {:>5}",
+            c.bench, c.scheduler, c.balance, c.speedup, c.max_speedup, c.efficiency,
+            c.total_packages
+        );
+    }
+    println!("\nmean efficiency by scheduler:");
+    for (l, e) in perf::mean_efficiency_by_scheduler(&eval) {
+        println!("  {:<12} {:.3}", l, e);
+    }
+    Ok(())
+}
+
+fn init_timelines(args: &Args) -> Result<()> {
+    let node = node_from(args);
+    let bench = args.get("bench").unwrap_or("binomial");
+    let reg = ArtifactRegistry::discover()?;
+    for tl in init::timelines(&reg, &node, bench)? {
+        println!("{}", tl.config);
+        for d in tl.devices {
+            println!(
+                "  {:<18} init={:>8.1}ms first-compute={:>8.1}ms done={:>8.1}ms",
+                d.name,
+                d.init_end.as_secs_f64() * 1e3,
+                d.first_compute.as_secs_f64() * 1e3,
+                d.completion.as_secs_f64() * 1e3
+            );
+        }
+    }
+    Ok(())
+}
+
+fn traces_cmd(args: &Args) -> Result<()> {
+    let bench = args.positional.get(1).map(String::as_str).unwrap_or("mandelbrot");
+    let node = node_from(args);
+    let reg = ArtifactRegistry::discover()?;
+    for (label, report) in traces::collect(&reg, &node, bench)? {
+        println!("== {label} ==");
+        print!("{}", report.ascii_timeline(72));
+    }
+    Ok(())
+}

@@ -1,0 +1,277 @@
+//! The paper's eight usability metrics (§7.3, Table 3), computed over a
+//! source region (our paired native-vs-EngineCL example programs).
+//!
+//! * CC   — McCabe cyclomatic complexity (1 + decision points).
+//! * TOK  — token count.
+//! * OAC  — Operation Argument Complexity: summed type-complexity of the
+//!          arguments of every call.
+//! * IS   — Interface Size: per-call combination of argument count and
+//!          their type complexity.
+//! * LOC  — non-blank, non-comment lines.
+//! * INST — structs/classes instantiated.
+//! * MET  — distinct methods/functions invoked.
+//! * ERRC — error-control sections.
+//!
+//! Rust/C++ differences are handled lexically: `Result`/`?`/`unwrap` count
+//! as error control like OpenCL's status checks; `::new`/struct-literal
+//! instantiation counts like C++ constructor calls.
+
+use std::collections::BTreeSet;
+
+use super::tokenizer::{loc, tokenize, Token};
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct UsabilityMetrics {
+    pub cc: usize,
+    pub tok: usize,
+    pub oac: usize,
+    pub is: usize,
+    pub loc: usize,
+    pub inst: usize,
+    pub met: usize,
+    pub errc: usize,
+}
+
+impl UsabilityMetrics {
+    /// Per-metric ratio `other / self` (the paper's OpenCL/EngineCL).
+    /// CC is reported as `other:self` (qualitative), so it is returned
+    /// as a plain ratio here too but printed specially by the bench.
+    pub fn ratio_from(&self, other: &UsabilityMetrics) -> [f64; 8] {
+        let r = |a: usize, b: usize| {
+            if b == 0 {
+                0.0
+            } else {
+                a as f64 / b as f64
+            }
+        };
+        [
+            r(other.cc, self.cc),
+            r(other.tok, self.tok),
+            r(other.oac, self.oac),
+            r(other.is, self.is),
+            r(other.loc, self.loc),
+            r(other.inst, self.inst),
+            r(other.met, self.met),
+            r(other.errc, self.errc),
+        ]
+    }
+}
+
+const BRANCH_KEYWORDS: &[&str] = &[
+    "if", "while", "for", "case", "catch", "match", "loop", "&&", "||", "?",
+];
+
+/// Primitive-ish tokens considered "simple" for type complexity; every
+/// other identifier argument scores higher (paper's OAC type weights,
+/// simplified to 3 buckets: literal=1, simple=2, complex=4).
+fn arg_complexity(tokens: &[Token]) -> usize {
+    if tokens.is_empty() {
+        return 0;
+    }
+    let has_complex = tokens.iter().any(|t| {
+        matches!(t, Token::Punct(p) if p == "::" || p == "." || p == "->" || p == "&" || p == "*")
+    });
+    let all_literal = tokens
+        .iter()
+        .all(|t| matches!(t, Token::Number(_) | Token::Str(_) | Token::Char(_)));
+    if all_literal {
+        1
+    } else if has_complex {
+        4
+    } else {
+        2
+    }
+}
+
+/// Find call sites `ident (` and return (name, argument token groups).
+fn call_sites(tokens: &[Token]) -> Vec<(String, Vec<Vec<Token>>)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 1 < tokens.len() {
+        let is_call = matches!(&tokens[i], Token::Ident(id)
+            if !is_keyword(id)) && tokens[i + 1] == Token::Punct("(".into());
+        if !is_call {
+            i += 1;
+            continue;
+        }
+        let name = tokens[i].text().to_string();
+        // Collect balanced args.
+        let mut depth = 0usize;
+        let mut j = i + 1;
+        let mut args: Vec<Vec<Token>> = vec![Vec::new()];
+        loop {
+            if j >= tokens.len() {
+                break;
+            }
+            match &tokens[j] {
+                Token::Punct(p) if p == "(" || p == "[" || p == "{" => {
+                    depth += 1;
+                    if depth > 1 {
+                        args.last_mut().unwrap().push(tokens[j].clone());
+                    }
+                }
+                Token::Punct(p) if p == ")" || p == "]" || p == "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                    args.last_mut().unwrap().push(tokens[j].clone());
+                }
+                Token::Punct(p) if p == "," && depth == 1 => {
+                    args.push(Vec::new());
+                }
+                t => {
+                    if depth >= 1 {
+                        args.last_mut().unwrap().push(t.clone());
+                    }
+                }
+            }
+            j += 1;
+        }
+        if args.len() == 1 && args[0].is_empty() {
+            args.clear();
+        }
+        out.push((name, args));
+        i += 1;
+    }
+    out
+}
+
+fn is_keyword(id: &str) -> bool {
+    matches!(
+        id,
+        "if" | "while" | "for" | "match" | "loop" | "return" | "fn" | "let" | "mut"
+            | "switch" | "case" | "sizeof" | "catch" | "else" | "do" | "struct" | "impl"
+            | "pub" | "use" | "mod" | "const" | "static" | "move" | "unsafe" | "in"
+            | "assert" | "panic" | "println" | "print" | "eprintln" | "format" | "vec"
+            | "write" | "writeln" | "main"
+    )
+}
+
+/// Extract the measured region: between `// ECL:BEGIN` and `// ECL:END`
+/// markers if present, else the whole file. The paper measured only the
+/// runtime-interaction part of each benchmark (setup/teardown around the
+/// kernel), not benchmark-domain code.
+pub fn measured_region(src: &str) -> String {
+    match (src.find("ECL:BEGIN"), src.find("ECL:END")) {
+        (Some(b), Some(e)) if e > b => {
+            let start = src[b..].find('\n').map(|p| b + p + 1).unwrap_or(b);
+            src[start..e].rsplit_once('\n').map(|(s, _)| s.to_string()).unwrap_or_default()
+        }
+        _ => src.to_string(),
+    }
+}
+
+/// Compute all eight metrics over (the measured region of) `src`.
+pub fn analyze_source(src: &str) -> UsabilityMetrics {
+    let region = measured_region(src);
+    let tokens = tokenize(&region);
+
+    // CC: 1 + branch tokens (Rust `?` postfix counted under ERRC too).
+    let cc = 1 + tokens
+        .iter()
+        .filter(|t| BRANCH_KEYWORDS.contains(&t.text()))
+        .count();
+
+    // ERRC: error-control sections — status checks, unwrap/expect chains,
+    // `?` operators, explicit error matches.
+    let mut errc = 0;
+    for (i, t) in tokens.iter().enumerate() {
+        match t.text() {
+            "?" => errc += 1,
+            "unwrap" | "expect" | "unwrap_or" | "unwrap_or_else" | "ok_or" => errc += 1,
+            "Err" | "CL_SUCCESS" | "clGetErrorString" => errc += 1,
+            "err" | "status" | "errcode" => {
+                // Count comparisons of status variables: `err !=`, `status ==`.
+                if let Some(next) = tokens.get(i + 1) {
+                    if matches!(next.text(), "==" | "!=") {
+                        errc += 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let calls = call_sites(&tokens);
+    let mut methods: BTreeSet<String> = BTreeSet::new();
+    let mut insts: BTreeSet<String> = BTreeSet::new();
+    let mut oac = 0usize;
+    let mut is = 0usize;
+    for (name, args) in &calls {
+        methods.insert(name.clone());
+        // Instantiations: `T::new`-style (`new` call preceded by `::`) or
+        // CamelCase constructor-like call.
+        if name == "new"
+            || name
+                .chars()
+                .next()
+                .map(|c| c.is_uppercase())
+                .unwrap_or(false)
+        {
+            insts.insert(name.clone());
+        }
+        let arg_cx: usize = args.iter().map(|a| arg_complexity(a)).sum();
+        oac += arg_cx;
+        is += args.len() + arg_cx;
+    }
+
+    UsabilityMetrics {
+        cc,
+        tok: tokens.len(),
+        oac,
+        is,
+        loc: loc(&region),
+        inst: insts.len(),
+        met: methods.len(),
+        errc,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_branches() {
+        let m = analyze_source("fn f(x: i32) { if x > 0 { } while x < 9 { } }");
+        assert_eq!(m.cc, 3);
+    }
+
+    #[test]
+    fn counts_methods_and_insts() {
+        let m = analyze_source("let e = Engine::new(); e.run(); e.run(); helper(1);");
+        assert_eq!(m.met, 3, "new, run, helper (distinct)");
+        assert_eq!(m.inst, 1, "Engine::new");
+    }
+
+    #[test]
+    fn errc_counts_question_marks_and_unwraps() {
+        let m = analyze_source("let a = f()?; let b = g().unwrap(); if err != 0 {}");
+        assert!(m.errc >= 3, "errc = {}", m.errc);
+    }
+
+    #[test]
+    fn oac_weighs_complex_args_higher() {
+        let simple = analyze_source("f(1, 2);");
+        let complex = analyze_source("f(a.b, c::d);");
+        assert!(complex.oac > simple.oac);
+    }
+
+    #[test]
+    fn measured_region_markers() {
+        let src = "junk();\n// ECL:BEGIN\nreal();\n// ECL:END\nmore_junk();";
+        let m = analyze_source(src);
+        assert_eq!(m.met, 1);
+    }
+
+    #[test]
+    fn ratios() {
+        let a = UsabilityMetrics { cc: 1, tok: 10, oac: 5, is: 8, loc: 4, inst: 1, met: 2, errc: 1 };
+        let b = UsabilityMetrics { cc: 4, tok: 80, oac: 45, is: 64, loc: 20, inst: 5, met: 6, errc: 21 };
+        let r = a.ratio_from(&b);
+        assert_eq!(r[0], 4.0);
+        assert_eq!(r[1], 8.0);
+        assert_eq!(r[7], 21.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Usability metrics engine (paper §7.3, Tables 1 and 3).
+
+pub mod analyze;
+pub mod tokenizer;
+
+pub use analyze::{analyze_source, UsabilityMetrics};

@@ -1,0 +1,233 @@
+//! C-family tokenizer for the usability metrics (paper §7.3).
+//!
+//! Works for both Rust and C/C++-style sources: identifiers, numbers,
+//! strings/chars, comments and punctuation. The paper's TOK metric counts
+//! C++ tokens; we count the same lexical classes over our paired
+//! native-vs-EngineCL sources.
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Token {
+    Ident(String),
+    Number(String),
+    Str(String),
+    Char(String),
+    Punct(String),
+}
+
+impl Token {
+    pub fn text(&self) -> &str {
+        match self {
+            Token::Ident(s) | Token::Number(s) | Token::Str(s) | Token::Char(s)
+            | Token::Punct(s) => s,
+        }
+    }
+}
+
+/// Multi-char operators recognized as single tokens.
+const MULTI_PUNCT: &[&str] = &[
+    "<<=", ">>=", "...", "..=", "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=",
+    "-=", "*=", "/=", "%=", "&=", "|=", "^=", "<<", ">>", "++", "--", "..",
+];
+
+/// Tokenize source text, skipping whitespace and comments.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0;
+    let mut out = Vec::new();
+    while i < n {
+        let c = b[i];
+        // Whitespace.
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (// or #! shebang-ish attribute lines keep tokens).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            i += 2;
+            let mut depth = 1;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // String literal.
+        if c == '"' {
+            let start = i;
+            i += 1;
+            while i < n && b[i] != '"' {
+                if b[i] == '\\' {
+                    i += 1;
+                }
+                i += 1;
+            }
+            i = (i + 1).min(n);
+            out.push(Token::Str(b[start..i.min(n)].iter().collect()));
+            continue;
+        }
+        // Char literal / Rust lifetime. 'a' vs 'static — treat '<ident>
+        // not followed by closing quote as a lifetime identifier.
+        if c == '\'' {
+            if i + 2 < n && b[i + 2] == '\'' {
+                out.push(Token::Char(b[i..i + 3].iter().collect()));
+                i += 3;
+                continue;
+            }
+            if i + 3 < n && b[i + 1] == '\\' && b[i + 3] == '\'' {
+                out.push(Token::Char(b[i..i + 4].iter().collect()));
+                i += 4;
+                continue;
+            }
+            // Lifetime: consume quote + ident.
+            let start = i;
+            i += 1;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.push(Token::Ident(b[start..i].iter().collect()));
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.push(Token::Ident(b[start..i].iter().collect()));
+            continue;
+        }
+        // Number (incl. hex, float, suffixes).
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n
+                && (b[i].is_alphanumeric() || b[i] == '.' || b[i] == '_')
+                && !(b[i] == '.' && i + 1 < n && b[i + 1] == '.')
+            {
+                i += 1;
+            }
+            out.push(Token::Number(b[start..i].iter().collect()));
+            continue;
+        }
+        // Multi-char punctuation.
+        let rest: String = b[i..(i + 3).min(n)].iter().collect();
+        if let Some(op) = MULTI_PUNCT.iter().find(|op| rest.starts_with(**op)) {
+            out.push(Token::Punct(op.to_string()));
+            i += op.len();
+            continue;
+        }
+        out.push(Token::Punct(c.to_string()));
+        i += 1;
+    }
+    out
+}
+
+/// Non-comment, non-blank lines of code (the paper's LOC via tokei).
+pub fn loc(src: &str) -> usize {
+    let mut in_block = false;
+    let mut count = 0;
+    for line in src.lines() {
+        let mut t = line.trim();
+        if in_block {
+            if let Some(pos) = t.find("*/") {
+                t = t[pos + 2..].trim();
+                in_block = false;
+            } else {
+                continue;
+            }
+        }
+        // Strip trailing line comment.
+        let code = match t.find("//") {
+            Some(p) => t[..p].trim(),
+            None => t,
+        };
+        let mut code = code.to_string();
+        while let Some(p) = code.find("/*") {
+            match code[p..].find("*/") {
+                Some(q) => {
+                    let after = code[p + q + 2..].to_string();
+                    code = format!("{}{}", &code[..p], after);
+                }
+                None => {
+                    code = code[..p].to_string();
+                    in_block = true;
+                }
+            }
+        }
+        if !code.trim().is_empty() {
+            count += 1;
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_tokens() {
+        let toks = tokenize("let x = 42 + y_2;");
+        let texts: Vec<&str> = toks.iter().map(|t| t.text()).collect();
+        assert_eq!(texts, vec!["let", "x", "=", "42", "+", "y_2", ";"]);
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let toks = tokenize("a // comment\n/* block\nmore */ b");
+        let texts: Vec<&str> = toks.iter().map(|t| t.text()).collect();
+        assert_eq!(texts, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn strings_are_single_tokens() {
+        let toks = tokenize(r#"f("hello, world", 'c')"#);
+        assert_eq!(toks.len(), 6); // f ( "…" , 'c' )
+        assert!(matches!(toks[2], Token::Str(_)));
+        assert!(matches!(toks[4], Token::Char(_)));
+    }
+
+    #[test]
+    fn multi_char_ops() {
+        let toks = tokenize("a::b->c == d && e <<= f");
+        let texts: Vec<&str> = toks.iter().map(|t| t.text()).collect();
+        assert!(texts.contains(&"::"));
+        assert!(texts.contains(&"->"));
+        assert!(texts.contains(&"=="));
+        assert!(texts.contains(&"&&"));
+        assert!(texts.contains(&"<<="));
+    }
+
+    #[test]
+    fn numbers_with_suffixes() {
+        let toks = tokenize("1.5f32 0xFF 1_000");
+        assert_eq!(toks.len(), 3);
+        assert!(toks.iter().all(|t| matches!(t, Token::Number(_))));
+    }
+
+    #[test]
+    fn loc_ignores_comments_and_blanks() {
+        let src = "\n// c\nlet a = 1; // trailing\n\n/* block\n spans */\nlet b = 2;\n";
+        assert_eq!(loc(src), 2);
+    }
+
+    #[test]
+    fn rust_lifetimes_not_chars() {
+        let toks = tokenize("fn f<'a>(x: &'a str)");
+        assert!(toks.iter().any(|t| t.text() == "'a"));
+    }
+}

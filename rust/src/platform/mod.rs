@@ -1,0 +1,15 @@
+//! Simulated heterogeneous platform.
+//!
+//! The paper evaluates on two physical nodes (Batel: Xeon CPU + K20m GPU +
+//! Xeon Phi; Remo: A10 APU CPU + R7 iGPU + GTX 950). We do not have OpenCL
+//! devices, so each `Device` worker runs the *real* chunk kernels on its
+//! own PJRT CPU client and stretches the measured execution time by a
+//! calibrated factor — scheduling dynamics depend only on relative speeds,
+//! per-package overheads and the content-dependent cost profile, all of
+//! which are preserved (DESIGN.md §4).
+
+pub mod profile;
+pub mod simclock;
+
+pub use profile::{DeviceKind, DeviceProfile, NodeConfig};
+pub use simclock::TimeScaler;

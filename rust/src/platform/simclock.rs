@@ -1,0 +1,127 @@
+//! Time stretching for simulated devices.
+//!
+//! Every device worker measures the *raw* PJRT execution time of each
+//! package (under a global execute lock for clean measurement) and then
+//! holds the package until `raw * BASE_SLOWDOWN / relative_power` wall
+//! time has elapsed *since the package started* (lock wait included).
+//! Because even the fastest device is stretched `BASE_SLOWDOWN`-fold, the
+//! serialized physical executions of up-to-three devices fit inside the
+//! stretched window and contention does not distort completion order —
+//! the wall clock then behaves like the simulated heterogeneous machine.
+
+use std::time::{Duration, Instant};
+
+use crate::util::rng::XorShift;
+
+use super::profile::DeviceProfile;
+
+/// Global stretch applied to the fastest device. Must exceed the number of
+/// concurrently co-executing devices for the absorption argument to hold.
+pub const BASE_SLOWDOWN: f64 = 4.0;
+
+/// Per-device stretcher. Owned by the device worker thread.
+#[derive(Debug)]
+pub struct TimeScaler {
+    factor: f64,
+    package_overhead: Duration,
+    jitter: f64,
+    rng: XorShift,
+}
+
+impl TimeScaler {
+    pub fn new(profile: &DeviceProfile, seed: u64) -> Self {
+        Self {
+            factor: BASE_SLOWDOWN / profile.relative_power.max(1e-6),
+            package_overhead: profile.package_overhead,
+            jitter: profile.jitter,
+            rng: XorShift::new(seed),
+        }
+    }
+
+    /// The stretch factor over raw PJRT time.
+    pub fn factor(&self) -> f64 {
+        self.factor
+    }
+
+    /// Target duration for a package whose raw execution took `raw`.
+    pub fn target(&mut self, raw: Duration, launches: u32) -> Duration {
+        let mut t = raw.as_secs_f64() * self.factor;
+        // Each sub-launch pays the host<->device sync cost once.
+        t += self.package_overhead.as_secs_f64() * launches.max(1) as f64;
+        if self.jitter > 0.0 {
+            // Uniform in [1-j, 1+j].
+            let u = self.rng.next_f64() * 2.0 - 1.0;
+            t *= 1.0 + self.jitter * u;
+        }
+        Duration::from_secs_f64(t)
+    }
+
+    /// Sleep until `started + target` (no-op if already past — i.e. the
+    /// physical wait exceeded the simulated duration, which the
+    /// BASE_SLOWDOWN choice makes rare).
+    pub fn hold(&self, started: Instant, target: Duration) -> Duration {
+        let elapsed = started.elapsed();
+        if elapsed < target {
+            std::thread::sleep(target - elapsed);
+            target
+        } else {
+            elapsed
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::profile::{DeviceKind, DeviceProfile};
+
+    fn prof(power: f64) -> DeviceProfile {
+        DeviceProfile::new("t", DeviceKind::Gpu, power)
+            .with_package_overhead(Duration::from_millis(1))
+    }
+
+    #[test]
+    fn factor_scales_inverse_power() {
+        let a = TimeScaler::new(&prof(1.0), 1);
+        let b = TimeScaler::new(&prof(0.25), 1);
+        assert!((b.factor() / a.factor() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn target_includes_overhead_per_launch() {
+        let mut s = TimeScaler::new(&prof(1.0), 1);
+        let t1 = s.target(Duration::from_millis(10), 1);
+        let t3 = s.target(Duration::from_millis(10), 3);
+        let diff = t3.as_secs_f64() - t1.as_secs_f64();
+        assert!((diff - 0.002).abs() < 1e-9, "2 extra launches = 2ms, got {diff}");
+    }
+
+    #[test]
+    fn jitter_bounded() {
+        let p = prof(1.0).with_jitter(0.05);
+        let mut s = TimeScaler::new(&p, 42);
+        let base = Duration::from_millis(100).as_secs_f64() * s.factor() + 0.001;
+        for _ in 0..200 {
+            let t = s.target(Duration::from_millis(100), 1).as_secs_f64();
+            assert!(t >= base * 0.94 && t <= base * 1.06);
+        }
+    }
+
+    #[test]
+    fn hold_waits_out_the_target() {
+        let s = TimeScaler::new(&prof(1.0), 1);
+        let start = Instant::now();
+        let got = s.hold(start, Duration::from_millis(30));
+        assert!(start.elapsed() >= Duration::from_millis(29));
+        assert!(got >= Duration::from_millis(29));
+    }
+
+    #[test]
+    fn hold_noop_when_past() {
+        let s = TimeScaler::new(&prof(1.0), 1);
+        let start = Instant::now();
+        std::thread::sleep(Duration::from_millis(5));
+        let got = s.hold(start, Duration::from_millis(1));
+        assert!(got >= Duration::from_millis(4));
+    }
+}

@@ -1,0 +1,238 @@
+//! Artifact registry — the Rust view of `artifacts/manifest.json`.
+//!
+//! The manifest is the contract between the Python AOT step (L1/L2) and
+//! the Rust coordinator (L3): problem sizes, scheduling granules, buffer
+//! layouts, baked scalar args and the per-chunk-size HLO files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::host::{read_f32_file, HostBuf};
+
+/// One input or output buffer of a benchmark.
+#[derive(Debug, Clone)]
+pub struct BufferEntry {
+    pub name: String,
+    /// Total flattened f32 elements for the full problem.
+    pub elems: usize,
+    /// Flattened elements contributed per work-item (0 for broadcast
+    /// inputs that are not partitioned, e.g. filter weights, scenes).
+    pub elems_per_item: usize,
+    /// Golden data file, relative to the artifact root.
+    pub file: String,
+}
+
+/// Everything the runtime knows about one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchManifest {
+    pub name: String,
+    /// Global work items (the paper's global work size, in granule units
+    /// see `granule`).
+    pub n: usize,
+    /// Scheduling granule: packages are multiples of this (the paper's
+    /// local work size / work-group).
+    pub granule: usize,
+    pub irregular: bool,
+    /// Paper Table 2 out-pattern (out indexes : work-items), API metadata.
+    pub out_pattern: (usize, usize),
+    /// Kernel family providing the HLO files (ray2/ray3 alias ray1).
+    pub kernel: String,
+    pub scalars: BTreeMap<String, f64>,
+    pub inputs: Vec<BufferEntry>,
+    pub outputs: Vec<BufferEntry>,
+    /// Available chunk sizes (work-items) -> HLO file.
+    pub chunks: BTreeMap<usize, String>,
+}
+
+impl BenchManifest {
+    /// Largest available chunk size ≤ `want`, if any.
+    pub fn chunk_at_most(&self, want: usize) -> Option<usize> {
+        self.chunks.range(..=want).next_back().map(|(s, _)| *s)
+    }
+
+    pub fn hlo_path(&self, root: &Path, size: usize) -> Option<PathBuf> {
+        self.chunks.get(&size).map(|f| root.join(f))
+    }
+}
+
+/// Registry over the artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    pub root: PathBuf,
+    pub benches: BTreeMap<String, BenchManifest>,
+}
+
+fn parse_buffer(j: &Json) -> Result<BufferEntry> {
+    Ok(BufferEntry {
+        name: j.get("name").and_then(Json::as_str).context("buffer.name")?.into(),
+        elems: j.get("elems").and_then(Json::as_usize).context("buffer.elems")?,
+        elems_per_item: j
+            .get("elems_per_item")
+            .and_then(Json::as_usize)
+            .context("buffer.elems_per_item")?,
+        file: j.get("file").and_then(Json::as_str).context("buffer.file")?.into(),
+    })
+}
+
+fn parse_bench(name: &str, j: &Json) -> Result<BenchManifest> {
+    let out_pattern = j
+        .get("out_pattern")
+        .and_then(Json::as_arr)
+        .map(|a| {
+            (
+                a.first().and_then(Json::as_usize).unwrap_or(1),
+                a.get(1).and_then(Json::as_usize).unwrap_or(1),
+            )
+        })
+        .unwrap_or((1, 1));
+    let mut scalars = BTreeMap::new();
+    if let Some(obj) = j.get("scalars").and_then(Json::as_obj) {
+        for (k, v) in obj {
+            scalars.insert(k.clone(), v.as_f64().context("scalar not a number")?);
+        }
+    }
+    let mut chunks = BTreeMap::new();
+    for c in j.get("chunks").and_then(Json::as_arr).context("chunks")? {
+        chunks.insert(
+            c.get("size").and_then(Json::as_usize).context("chunk.size")?,
+            c.get("file").and_then(Json::as_str).context("chunk.file")?.to_string(),
+        );
+    }
+    let parse_bufs = |key: &str| -> Result<Vec<BufferEntry>> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().map(parse_buffer).collect())
+            .unwrap_or_else(|| Ok(vec![]))
+    };
+    Ok(BenchManifest {
+        name: name.to_string(),
+        n: j.get("n").and_then(Json::as_usize).context("n")?,
+        granule: j.get("granule").and_then(Json::as_usize).context("granule")?,
+        irregular: j.get("irregular").and_then(Json::as_bool).unwrap_or(false),
+        out_pattern,
+        kernel: j
+            .get("kernel")
+            .and_then(Json::as_str)
+            .unwrap_or(name)
+            .to_string(),
+        scalars,
+        inputs: parse_bufs("inputs")?,
+        outputs: parse_bufs("outputs")?,
+        chunks,
+    })
+}
+
+impl ArtifactRegistry {
+    /// Load `<root>/manifest.json`. `root` is typically `artifacts/`.
+    pub fn load(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let mut benches = BTreeMap::new();
+        for (name, bj) in j.get("benches").and_then(Json::as_obj).context("benches")? {
+            benches.insert(name.clone(), parse_bench(name, bj)?);
+        }
+        Ok(ArtifactRegistry { root, benches })
+    }
+
+    /// Locate the artifact dir: $ECL_ARTIFACTS, ./artifacts, or
+    /// CARGO_MANIFEST_DIR/artifacts.
+    pub fn discover() -> Result<Self> {
+        if let Ok(p) = std::env::var("ECL_ARTIFACTS") {
+            return Self::load(p);
+        }
+        for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return Self::load(cand);
+            }
+        }
+        anyhow::bail!("no artifacts/manifest.json found; run `make artifacts`")
+    }
+
+    pub fn bench(&self, name: &str) -> Result<&BenchManifest> {
+        self.benches
+            .get(name)
+            .with_context(|| format!("unknown bench '{name}' (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.benches.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Load the golden inputs for a bench (deterministic workload from aot).
+    pub fn golden_inputs(&self, bench: &BenchManifest) -> Result<Vec<HostBuf>> {
+        bench
+            .inputs
+            .iter()
+            .map(|b| Ok(HostBuf::F32(read_f32_file(&self.root.join(&b.file))?)))
+            .collect()
+    }
+
+    /// Load the golden (oracle) outputs for a bench.
+    pub fn golden_outputs(&self, bench: &BenchManifest) -> Result<Vec<HostBuf>> {
+        bench
+            .outputs
+            .iter()
+            .map(|b| Ok(HostBuf::F32(read_f32_file(&self.root.join(&b.file))?)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> &'static str {
+        r#"{"version": 1, "benches": {"toy": {
+            "n": 1024, "granule": 128, "irregular": false,
+            "out_pattern": [1, 1], "kernel": "toy",
+            "scalars": {"steps": 4.0},
+            "inputs": [{"name": "x", "elems": 1024, "elems_per_item": 1, "file": "toy/in.f32"}],
+            "outputs": [{"name": "y", "elems": 1024, "elems_per_item": 1, "file": "toy/out.f32"}],
+            "chunks": [{"size": 128, "file": "toy/c128.hlo.txt"},
+                       {"size": 256, "file": "toy/c256.hlo.txt"},
+                       {"size": 1024, "file": "toy/c1024.hlo.txt"}]
+        }}}"#
+    }
+
+    fn load_mini() -> ArtifactRegistry {
+        let dir = std::env::temp_dir().join(format!("ecl_art_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), mini_manifest()).unwrap();
+        ArtifactRegistry::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let reg = load_mini();
+        let b = reg.bench("toy").unwrap();
+        assert_eq!(b.n, 1024);
+        assert_eq!(b.granule, 128);
+        assert_eq!(b.out_pattern, (1, 1));
+        assert_eq!(b.scalars["steps"], 4.0);
+        assert_eq!(b.inputs.len(), 1);
+        assert_eq!(b.chunks.len(), 3);
+    }
+
+    #[test]
+    fn chunk_at_most_picks_floor() {
+        let reg = load_mini();
+        let b = reg.bench("toy").unwrap();
+        assert_eq!(b.chunk_at_most(128), Some(128));
+        assert_eq!(b.chunk_at_most(300), Some(256));
+        assert_eq!(b.chunk_at_most(5000), Some(1024));
+        assert_eq!(b.chunk_at_most(64), None);
+    }
+
+    #[test]
+    fn unknown_bench_errors() {
+        let reg = load_mini();
+        assert!(reg.bench("nope").is_err());
+    }
+}

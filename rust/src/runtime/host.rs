@@ -1,0 +1,170 @@
+//! Host-side buffers and raw-file IO for the golden workloads.
+//!
+//! Everything on the scheduling path is `f32` (the AOT step fixes dtypes);
+//! `HostBuf` keeps the door open for other element types without templating
+//! the whole coordinator.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A host-resident data buffer handed to/from the engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostBuf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostBuf {
+    pub fn len(&self) -> usize {
+        match self {
+            HostBuf::F32(v) => v.len(),
+            HostBuf::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostBuf::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Option<&mut Vec<f32>> {
+        match self {
+            HostBuf::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn zeros_f32(n: usize) -> HostBuf {
+        HostBuf::F32(vec![0.0; n])
+    }
+}
+
+/// Read a little-endian raw `f32` binary (the `.f32` golden files).
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{}: length {} not a multiple of 4",
+        path.display(),
+        bytes.len()
+    );
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(out)
+}
+
+/// Max |a-b| and max relative error over two slices (for validation).
+pub fn max_abs_rel_err(a: &[f32], b: &[f32]) -> (f64, f64) {
+    assert_eq!(a.len(), b.len());
+    let mut maxabs = 0f64;
+    let mut maxrel = 0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x as f64 - *y as f64).abs();
+        maxabs = maxabs.max(d);
+        let denom = (*x as f64).abs().max((*y as f64).abs()).max(1e-6);
+        maxrel = maxrel.max(d / denom);
+    }
+    (maxabs, maxrel)
+}
+
+/// Fraction of elements with |a-b| > `thresh` (for outputs where a few
+/// boundary elements may legitimately flip: Mandelbrot escape iterations,
+/// chaotic reflective ray paths).
+pub fn mismatch_fraction(a: &[f32], b: &[f32], thresh: f32) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let bad = a
+        .iter()
+        .zip(b)
+        .filter(|(x, y)| (**x - **y).abs() > thresh)
+        .count();
+    bad as f64 / a.len() as f64
+}
+
+/// Tolerance-aware golden comparison: tight relative error for regular
+/// numeric outputs, mismatch-fraction for discrete/chaotic ones.
+pub fn golden_close(bench: &str, got: &[f32], want: &[f32]) -> (bool, f64) {
+    if bench.starts_with("ray") || bench == "mandelbrot" {
+        let frac = mismatch_fraction(got, want, 1e-2);
+        (frac < 0.005, frac)
+    } else {
+        let (_, rel) = max_abs_rel_err(got, want);
+        (rel < 2e-3, rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hostbuf_accessors() {
+        let mut b = HostBuf::zeros_f32(4);
+        assert_eq!(b.len(), 4);
+        assert!(!b.is_empty());
+        b.as_f32_mut().unwrap()[2] = 5.0;
+        assert_eq!(b.as_f32().unwrap()[2], 5.0);
+        let i = HostBuf::I32(vec![1, 2]);
+        assert!(i.as_f32().is_none());
+        assert_eq!(i.len(), 2);
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("ecl_host_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.f32");
+        let data: Vec<f32> = vec![1.0, -2.5, 3.25e7, f32::MIN_POSITIVE];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn f32_file_bad_length() {
+        let dir = std::env::temp_dir().join("ecl_host_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.f32");
+        std::fs::write(&p, [0u8; 7]).unwrap();
+        assert!(read_f32_file(&p).is_err());
+    }
+
+    #[test]
+    fn err_metrics() {
+        let (a, r) = max_abs_rel_err(&[1.0, 2.0], &[1.0, 2.2]);
+        assert!((a - 0.2).abs() < 1e-6);
+        assert!(r > 0.0 && r < 0.12);
+    }
+
+    #[test]
+    fn mismatch_fraction_counts() {
+        let a = [0.0, 1.0, 2.0, 3.0];
+        let b = [0.0, 1.5, 2.0, 3.0];
+        assert!((mismatch_fraction(&a, &b, 0.1) - 0.25).abs() < 1e-12);
+        assert_eq!(mismatch_fraction(&a, &a, 0.0), 0.0);
+    }
+
+    #[test]
+    fn golden_close_dispatches_by_bench() {
+        let a = vec![1.0f32; 1000];
+        let mut b = a.clone();
+        b[0] = 2.0; // one bad element
+        assert!(golden_close("mandelbrot", &a, &b).0, "0.1% mismatch ok");
+        assert!(!golden_close("binomial", &a, &b).0, "rel err too large");
+    }
+}

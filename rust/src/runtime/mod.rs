@@ -1,0 +1,15 @@
+//! Runtime layer — loads the AOT artifacts produced by `python/compile/`
+//! and executes chunk kernels on PJRT.
+//!
+//! This is the only module that touches the `xla` crate. Everything above
+//! (coordinator, schedulers) speaks in work-item ranges and host buffers,
+//! exactly as the paper isolates OpenCL inside its `Device` abstraction
+//! (Figure 1).
+
+pub mod artifact;
+pub mod host;
+pub mod pjrt;
+
+pub use artifact::{ArtifactRegistry, BenchManifest, BufferEntry};
+pub use host::HostBuf;
+pub use pjrt::{ChunkExecutor, ExecTiming};

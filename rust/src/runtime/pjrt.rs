@@ -1,0 +1,350 @@
+//! PJRT chunk executor — one per device worker thread.
+//!
+//! `xla::PjRtClient` is `Rc`-based (not `Send`), so each device thread owns
+//! its own client, compiles its own executables and keeps its own
+//! device-resident copies of the read-only input buffers — exactly the
+//! per-device context/queue/buffer structure an OpenCL co-execution run
+//! sets up, and the reason the paper's Table 1 model scales with `D`.
+//!
+//! Executables are compiled per chunk size (HLO shapes are static). An
+//! arbitrary granule-aligned package is executed by greedy power-of-two
+//! decomposition; the extra launches are part of the per-package cost, the
+//! analogue of the paper's per-package synchronization overhead.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ArtifactRegistry, BenchManifest};
+use super::host::HostBuf;
+
+/// Timing detail for one package execution.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecTiming {
+    /// Pure kernel execution time (sum over sub-launches).
+    pub exec: Duration,
+    /// Host<->device transfer + result write-back time.
+    pub xfer: Duration,
+    /// Lazily-triggered executable compilation time (0 if cached).
+    pub compile: Duration,
+    /// Number of PJRT launches the package decomposed into.
+    pub launches: u32,
+}
+
+impl ExecTiming {
+    pub fn total(&self) -> Duration {
+        self.exec + self.xfer + self.compile
+    }
+
+    pub fn accumulate(&mut self, other: &ExecTiming) {
+        self.exec += other.exec;
+        self.xfer += other.xfer;
+        self.compile += other.compile;
+        self.launches += other.launches;
+    }
+}
+
+/// Per-device executor for one benchmark.
+pub struct ChunkExecutor {
+    client: xla::PjRtClient,
+    bench: BenchManifest,
+    root: PathBuf,
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// Device-resident read-only inputs (uploaded once; paper §5.2's
+    /// buffer optimization). Rebuilt only when inputs change.
+    dev_inputs: Vec<xla::PjRtBuffer>,
+    /// When false, inputs are re-uploaded as literals on every launch
+    /// (the unoptimized path, kept for the ablation bench).
+    resident_inputs: bool,
+    host_inputs: Vec<Vec<f32>>,
+}
+
+impl ChunkExecutor {
+    /// Create a client and upload `inputs` for `bench`.
+    pub fn new(reg: &ArtifactRegistry, bench: &BenchManifest, inputs: &[HostBuf]) -> Result<Self> {
+        Self::with_options(reg, bench, inputs, true)
+    }
+
+    pub fn with_options(
+        reg: &ArtifactRegistry,
+        bench: &BenchManifest,
+        inputs: &[HostBuf],
+        resident_inputs: bool,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            inputs.len() == bench.inputs.len(),
+            "bench '{}' expects {} inputs, got {}",
+            bench.name,
+            bench.inputs.len(),
+            inputs.len()
+        );
+        quiet_xla_logs();
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut me = Self {
+            client,
+            bench: bench.clone(),
+            root: reg.root.clone(),
+            exes: BTreeMap::new(),
+            dev_inputs: Vec::new(),
+            resident_inputs,
+            host_inputs: Vec::new(),
+        };
+        me.set_inputs(inputs)?;
+        Ok(me)
+    }
+
+    pub fn bench(&self) -> &BenchManifest {
+        &self.bench
+    }
+
+    /// (Re)upload the input buffers.
+    pub fn set_inputs(&mut self, inputs: &[HostBuf]) -> Result<()> {
+        self.host_inputs.clear();
+        self.dev_inputs.clear();
+        for (spec, buf) in self.bench.inputs.iter().zip(inputs) {
+            let data = buf
+                .as_f32()
+                .with_context(|| format!("input '{}' must be f32", spec.name))?;
+            anyhow::ensure!(
+                data.len() == spec.elems,
+                "input '{}': expected {} elems, got {}",
+                spec.name,
+                spec.elems,
+                data.len()
+            );
+            self.host_inputs.push(data.to_vec());
+        }
+        if self.resident_inputs {
+            for data in &self.host_inputs {
+                self.dev_inputs.push(self.client.buffer_from_host_buffer::<f32>(
+                    data,
+                    &[data.len()],
+                    None,
+                )?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Ensure the executable for `size` is compiled; returns compile time.
+    pub fn prepare(&mut self, size: usize) -> Result<Duration> {
+        if self.exes.contains_key(&size) {
+            return Ok(Duration::ZERO);
+        }
+        let path = self
+            .bench
+            .hlo_path(&self.root, size)
+            .with_context(|| format!("no chunk size {size} for bench {}", self.bench.name))?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        let dt = t0.elapsed();
+        self.exes.insert(size, exe);
+        Ok(dt)
+    }
+
+    /// Pre-compile every available chunk size (used by latency-sensitive
+    /// callers; normal runs compile lazily).
+    pub fn prepare_all(&mut self) -> Result<Duration> {
+        let sizes: Vec<usize> = self.bench.chunks.keys().copied().collect();
+        let mut total = Duration::ZERO;
+        for s in sizes {
+            total += self.prepare(s)?;
+        }
+        Ok(total)
+    }
+
+    /// Greedy power-of-two decomposition of `[begin, end)` into available
+    /// chunk sizes. Returns (offset, size) sub-launches.
+    pub fn decompose(&self, begin: usize, end: usize) -> Result<Vec<(usize, usize)>> {
+        decompose_range(&self.bench, begin, end)
+    }
+
+    /// Execute work-items `[begin, end)` and write results into `outs`
+    /// (full-problem host buffers).
+    pub fn execute_range(
+        &mut self,
+        begin: usize,
+        end: usize,
+        outs: &mut [HostBuf],
+    ) -> Result<ExecTiming> {
+        anyhow::ensure!(end > begin && end <= self.bench.n, "bad range {begin}..{end}");
+        anyhow::ensure!(
+            outs.len() == self.bench.outputs.len(),
+            "bench '{}' has {} outputs, got {}",
+            self.bench.name,
+            self.bench.outputs.len(),
+            outs.len()
+        );
+        let mut timing = ExecTiming::default();
+        for (off, size) in self.decompose(begin, end)? {
+            timing.compile += self.prepare(size)?;
+            let t = self.execute_one(off, size, outs)?;
+            timing.accumulate(&t);
+        }
+        Ok(timing)
+    }
+
+    fn execute_one(&mut self, off: usize, size: usize, outs: &mut [HostBuf]) -> Result<ExecTiming> {
+        let exe = self.exes.get(&size).expect("prepared above");
+        let mut timing = ExecTiming { launches: 1, ..Default::default() };
+
+        // Offset is the single per-launch argument; inputs stay resident.
+        // Timing split matters for the simulation: `exec` (dispatch +
+        // completion wait) is device compute and gets stretched by the
+        // device profile; `xfer` (argument prep + host write-back) is
+        // host-side management and stays at host speed.
+        let t0 = Instant::now();
+        let results = if self.resident_inputs {
+            let off_buf =
+                self.client.buffer_from_host_buffer::<i32>(&[off as i32], &[], None)?;
+            let mut args: Vec<&xla::PjRtBuffer> = self.dev_inputs.iter().collect();
+            args.push(&off_buf);
+            let t1 = Instant::now();
+            timing.xfer += t1 - t0;
+            let r = exe.execute_b(&args)?;
+            timing.exec += t1.elapsed();
+            r
+        } else {
+            // Ablation path: re-upload all inputs as literals every launch.
+            let mut args: Vec<xla::Literal> = self
+                .host_inputs
+                .iter()
+                .map(|d| xla::Literal::vec1(d))
+                .collect();
+            args.push(xla::Literal::scalar(off as i32));
+            let t1 = Instant::now();
+            timing.xfer += t1 - t0;
+            let r = exe.execute(&args)?;
+            timing.exec += t1.elapsed();
+            r
+        };
+
+        // PJRT dispatch is asynchronous: the completion wait (device
+        // compute) is `to_literal_sync`, so it counts as exec.
+        let t2 = Instant::now();
+        let tuple = results[0][0].to_literal_sync()?;
+        timing.exec += t2.elapsed();
+
+        // Write-back into the host buffers: host-side management (xfer).
+        let t2 = Instant::now();
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == outs.len(),
+            "kernel returned {} outputs, manifest says {}",
+            parts.len(),
+            outs.len()
+        );
+        for ((part, spec), out) in parts.iter().zip(&self.bench.outputs).zip(outs.iter_mut()) {
+            let epi = spec.elems_per_item;
+            let dst = out
+                .as_f32_mut()
+                .with_context(|| format!("output '{}' must be f32", spec.name))?;
+            anyhow::ensure!(dst.len() == spec.elems, "output '{}' wrong size", spec.name);
+            let lo = off * epi;
+            let hi = lo + size * epi;
+            part.copy_raw_to::<f32>(&mut dst[lo..hi])?;
+        }
+        timing.xfer += t2.elapsed();
+        Ok(timing)
+    }
+}
+
+/// Silence the xla_extension INFO chatter (client created/destroyed) the
+/// first time a client is built; honours an explicit user setting.
+fn quiet_xla_logs() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+    });
+}
+
+/// Greedy decomposition of a granule-aligned range into available sizes.
+/// Shared with the coordinator's planning logic and property tests.
+pub fn decompose_range(
+    bench: &BenchManifest,
+    begin: usize,
+    end: usize,
+) -> Result<Vec<(usize, usize)>> {
+    anyhow::ensure!(begin % bench.granule == 0, "begin {begin} not granule-aligned");
+    anyhow::ensure!(
+        (end - begin) % bench.granule == 0,
+        "length {} not granule-aligned",
+        end - begin
+    );
+    let mut plan = Vec::new();
+    let mut off = begin;
+    while off < end {
+        let remaining = end - off;
+        let size = bench
+            .chunk_at_most(remaining)
+            .with_context(|| format!("no chunk size ≤ {remaining}"))?;
+        plan.push((off, size));
+        off += size;
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn bench_with_chunks(granule: usize, sizes: &[usize]) -> BenchManifest {
+        BenchManifest {
+            name: "toy".into(),
+            n: 1 << 20,
+            granule,
+            irregular: false,
+            out_pattern: (1, 1),
+            kernel: "toy".into(),
+            scalars: BTreeMap::new(),
+            inputs: vec![],
+            outputs: vec![],
+            chunks: sizes.iter().map(|s| (*s, format!("c{s}"))).collect(),
+        }
+    }
+
+    #[test]
+    fn decompose_exact_size() {
+        let b = bench_with_chunks(128, &[128, 256, 512]);
+        assert_eq!(decompose_range(&b, 0, 512).unwrap(), vec![(0, 512)]);
+    }
+
+    #[test]
+    fn decompose_greedy() {
+        let b = bench_with_chunks(128, &[128, 256, 512]);
+        // 896 = 512 + 256 + 128
+        assert_eq!(
+            decompose_range(&b, 128, 1024).unwrap(),
+            vec![(128, 512), (640, 256), (896, 128)]
+        );
+    }
+
+    #[test]
+    fn decompose_covers_and_disjoint() {
+        let b = bench_with_chunks(128, &[128, 256, 512, 1024]);
+        for len in (128..=4096).step_by(128) {
+            let plan = decompose_range(&b, 256, 256 + len).unwrap();
+            let mut cursor = 256;
+            for (off, size) in &plan {
+                assert_eq!(*off, cursor, "contiguous");
+                cursor += size;
+            }
+            assert_eq!(cursor, 256 + len, "covers");
+        }
+    }
+
+    #[test]
+    fn decompose_rejects_misaligned() {
+        let b = bench_with_chunks(128, &[128]);
+        assert!(decompose_range(&b, 64, 256).is_err());
+        assert!(decompose_range(&b, 0, 100).is_err());
+    }
+}

@@ -1,0 +1,64 @@
+//! Property-testing mini-framework (offline substitute for proptest).
+//!
+//! `forall` runs a seeded generator N times; on failure it reports the
+//! failing case number and seed so the case can be replayed exactly.
+
+use crate::util::rng::XorShift;
+
+/// Number of cases per property (override with ECL_PROPTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("ECL_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop` on `cases` generated inputs. Panics with seed + case index
+/// on the first failure (generators are deterministic in the seed).
+pub fn forall<T, G, P>(name: &str, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut XorShift) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let cases = default_cases();
+    let base_seed = 0xEC1_0001u64;
+    for case in 0..cases {
+        let mut rng = XorShift::new(base_seed.wrapping_add(case as u64 * 7919));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (seed {base_seed}+{case}*7919):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("x<n", |r| r.below(100), |x| {
+            if *x < 100 { Ok(()) } else { Err("out of range".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn forall_reports_failure() {
+        forall("always-fails", |r| r.below(10), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,96 @@
+//! Tiny CLI argument parser (flag/option/positional) for the `enginecl`
+//! binary and the bench harnesses — clap is not available offline.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `--key value`, `--key=value`, bare `--flag` and positionals.
+    /// A `--key` followed by another `--...` token is treated as a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["run", "binomial", "--scheduler", "hguided", "--n=128"]);
+        assert_eq!(a.positional, vec!["run", "binomial"]);
+        assert_eq!(a.get("scheduler"), Some("hguided"));
+        assert_eq!(a.get_usize("n", 0), 128);
+    }
+
+    #[test]
+    fn flags() {
+        // `--quick x` is (documented) ambiguity: it parses as an option.
+        // Positionals before the flags keep both readable.
+        let a = parse(&["x", "--verbose", "--quick"]);
+        assert!(a.has_flag("verbose"));
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.positional, vec!["x"]);
+    }
+
+    #[test]
+    fn flag_before_option_not_swallowed() {
+        let a = parse(&["--quick", "--scheduler", "static"]);
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.get("scheduler"), Some("static"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_f64("k", 2.5), 2.5);
+        assert!(!a.has_flag("nope"));
+    }
+}

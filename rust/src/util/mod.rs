@@ -1,0 +1,10 @@
+//! Small self-contained utilities.
+//!
+//! The offline registry only carries the `xla` crate's dependency closure,
+//! so serde/clap/rand equivalents are implemented here (documented in
+//! DESIGN.md §4).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

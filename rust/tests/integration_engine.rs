@@ -1,0 +1,285 @@
+//! End-to-end integration: the engine must produce golden-correct results
+//! under every scheduler, and co-execution must agree bit-for-bit with a
+//! single-device run (same executables, disjoint ranges).
+//!
+//! These tests need `make artifacts` to have run.
+
+use enginecl::coordinator::{DeviceSpec, Engine, Program, SchedulerKind};
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::{host::max_abs_rel_err, ArtifactRegistry};
+
+fn registry() -> ArtifactRegistry {
+    ArtifactRegistry::discover().expect("run `make artifacts` before cargo test")
+}
+
+/// Build an engine with golden inputs for `bench`, fast-sim profile
+/// (no init sleeps — keep tests quick, but keep speed stretching so
+/// scheduling behaves heterogeneously).
+fn engine_for(reg: &ArtifactRegistry, bench: &str, devices: Vec<DeviceSpec>) -> Engine {
+    let manifest = reg.bench(bench).unwrap().clone();
+    let mut engine = Engine::with_registry(reg.clone());
+    engine.node(NodeConfig::batel());
+    engine.use_devices(devices);
+    engine.configurator().simulate_init = false;
+    let mut program = Program::new();
+    program.kernel(bench, &manifest.kernel);
+    for buf in reg.golden_inputs(&manifest).unwrap() {
+        program.input(buf.as_f32().unwrap().to_vec());
+    }
+    for out in &manifest.outputs {
+        program.output(out.elems);
+    }
+    engine.program(program);
+    engine
+}
+
+fn check_against_golden(reg: &ArtifactRegistry, bench: &str, engine: &Engine, tol: f64) {
+    let manifest = reg.bench(bench).unwrap();
+    let golden = reg.golden_outputs(manifest).unwrap();
+    for (i, g) in golden.iter().enumerate() {
+        let got = engine.output(i).unwrap();
+        if bench.starts_with("ray") || bench == "mandelbrot" {
+            let (ok, stat) = enginecl::runtime::host::golden_close(bench, got, g.as_f32().unwrap());
+            assert!(ok, "{bench} output {i}: mismatch fraction {stat:.4}");
+        } else {
+            let (abs, rel) = max_abs_rel_err(got, g.as_f32().unwrap());
+            assert!(
+                rel < tol || abs < tol,
+                "{bench} output {i}: max abs {abs:.3e}, rel {rel:.3e} (tol {tol:.0e})"
+            );
+        }
+    }
+}
+
+fn all_devices() -> Vec<DeviceSpec> {
+    (0..3).map(DeviceSpec::new).collect()
+}
+
+// ---- single device vs golden ---------------------------------------
+
+#[test]
+fn binomial_single_device_matches_golden() {
+    let reg = registry();
+    let mut e = engine_for(&reg, "binomial", vec![DeviceSpec::new(1)]);
+    e.run().unwrap();
+    check_against_golden(&reg, "binomial", &e, 1e-3);
+}
+
+#[test]
+fn nbody_single_device_matches_golden() {
+    let reg = registry();
+    let mut e = engine_for(&reg, "nbody", vec![DeviceSpec::new(1)]);
+    e.run().unwrap();
+    check_against_golden(&reg, "nbody", &e, 2e-3);
+}
+
+#[test]
+fn gaussian_single_device_matches_golden() {
+    let reg = registry();
+    let mut e = engine_for(&reg, "gaussian", vec![DeviceSpec::new(0)]);
+    e.run().unwrap();
+    check_against_golden(&reg, "gaussian", &e, 1e-3);
+}
+
+// ---- co-execution under every scheduler vs golden -------------------
+
+fn coexec_matches_golden(bench: &str, kind: SchedulerKind, tol: f64) {
+    let reg = registry();
+    let mut e = engine_for(&reg, bench, all_devices());
+    e.scheduler(kind);
+    e.run().unwrap();
+    check_against_golden(&reg, bench, &e, tol);
+    let report = e.report().unwrap();
+    assert_eq!(report.gws, reg.bench(bench).unwrap().n);
+    // Every device that reports packages must have computed something.
+    let items: usize = report.devices.iter().map(|d| d.items()).sum();
+    assert_eq!(items, report.gws, "all work items computed exactly once");
+}
+
+#[test]
+fn binomial_coexec_static() {
+    coexec_matches_golden("binomial", SchedulerKind::static_default(), 1e-3);
+}
+
+#[test]
+fn binomial_coexec_dynamic() {
+    coexec_matches_golden("binomial", SchedulerKind::dynamic(50), 1e-3);
+}
+
+#[test]
+fn binomial_coexec_hguided() {
+    coexec_matches_golden("binomial", SchedulerKind::hguided(), 1e-3);
+}
+
+#[test]
+fn mandelbrot_coexec_hguided() {
+    // Iteration counts are integers; escape-boundary pixels may flip by
+    // one iteration vs the jnp oracle, so compare with atol ~1.
+    let reg = registry();
+    let mut e = engine_for(&reg, "mandelbrot", all_devices());
+    e.scheduler(SchedulerKind::hguided());
+    e.run().unwrap();
+    let golden = reg.golden_outputs(reg.bench("mandelbrot").unwrap()).unwrap();
+    let got = e.output(0).unwrap();
+    let want = golden[0].as_f32().unwrap();
+    let mismatched = got
+        .iter()
+        .zip(want)
+        .filter(|(a, b)| (**a - **b).abs() > 1.0)
+        .count();
+    assert!(
+        (mismatched as f64) < 0.005 * want.len() as f64,
+        "{mismatched} mandelbrot pixels differ by >1 iteration"
+    );
+}
+
+#[test]
+fn ray_scenes_coexec_dynamic() {
+    for bench in ["ray1", "ray2", "ray3"] {
+        let reg = registry();
+        let mut e = engine_for(&reg, bench, all_devices());
+        e.scheduler(SchedulerKind::dynamic(50));
+        e.run().unwrap();
+        check_against_golden(&reg, bench, &e, 2e-3);
+    }
+}
+
+#[test]
+fn nbody_coexec_static_rev() {
+    coexec_matches_golden(
+        "nbody",
+        SchedulerKind::Static { props: None, reversed: true },
+        2e-3,
+    );
+}
+
+// ---- co-execution == single device, bitwise -------------------------
+
+#[test]
+fn coexec_equals_single_device_bitwise() {
+    let reg = registry();
+    let mut solo = engine_for(&reg, "binomial", vec![DeviceSpec::new(1)]);
+    solo.run().unwrap();
+    let want = solo.output(0).unwrap().to_vec();
+
+    for kind in [
+        SchedulerKind::static_default(),
+        SchedulerKind::dynamic(37),
+        SchedulerKind::hguided(),
+    ] {
+        let mut co = engine_for(&reg, "binomial", all_devices());
+        co.scheduler(kind.clone());
+        co.run().unwrap();
+        assert_eq!(
+            co.output(0).unwrap(),
+            &want[..],
+            "scheduler {} changed results",
+            kind.label()
+        );
+    }
+}
+
+// ---- prefix runs (problem-size sweeps) -------------------------------
+
+#[test]
+fn prefix_gws_only_touches_prefix() {
+    let reg = registry();
+    let manifest = reg.bench("binomial").unwrap().clone();
+    let gws = manifest.granule * 8;
+    let mut e = engine_for(&reg, "binomial", vec![DeviceSpec::new(0)]);
+    e.global_work_items(gws);
+    e.run().unwrap();
+    let out = e.output(0).unwrap();
+    let golden = reg.golden_outputs(&manifest).unwrap();
+    let want = golden[0].as_f32().unwrap();
+    let (_, rel) = max_abs_rel_err(&out[..gws], &want[..gws]);
+    assert!(rel < 1e-3);
+    assert!(out[gws..].iter().all(|&x| x == 0.0), "tail untouched");
+}
+
+// ---- validation / error model ----------------------------------------
+
+#[test]
+fn errors_are_collected_on_engine() {
+    let reg = registry();
+    let mut e = Engine::with_registry(reg.clone());
+    e.use_devices(vec![DeviceSpec::new(0)]);
+    let mut p = Program::new();
+    p.kernel("no-such-kernel", "k");
+    e.program(p);
+    assert!(e.run().is_err());
+    assert!(e.has_errors());
+    assert_eq!(e.get_errors().len(), 1);
+}
+
+#[test]
+fn misaligned_gws_rejected() {
+    let reg = registry();
+    let mut e = engine_for(&reg, "binomial", vec![DeviceSpec::new(0)]);
+    e.global_work_items(100); // granule is 256
+    assert!(e.run().is_err());
+}
+
+#[test]
+fn oversized_gws_rejected() {
+    let reg = registry();
+    let mut e = engine_for(&reg, "binomial", vec![DeviceSpec::new(0)]);
+    e.global_work_items(1 << 30);
+    assert!(e.run().is_err());
+}
+
+#[test]
+fn wrong_input_arity_rejected() {
+    let reg = registry();
+    let mut e = Engine::with_registry(reg.clone());
+    e.use_devices(vec![DeviceSpec::new(0)]);
+    let mut p = Program::new();
+    p.kernel("binomial", "binomial_opts");
+    // No inputs registered; binomial expects 1.
+    p.output(reg.bench("binomial").unwrap().outputs[0].elems);
+    e.program(p);
+    assert!(e.run().is_err());
+}
+
+#[test]
+fn bad_static_proportions_rejected() {
+    let reg = registry();
+    let mut e = engine_for(&reg, "binomial", all_devices());
+    e.scheduler(SchedulerKind::static_with(vec![0.5, 0.5])); // 2 props, 3 devs
+    assert!(e.run().is_err());
+}
+
+#[test]
+fn arg_validation_accepts_baked_and_rejects_unbaked() {
+    let reg = registry();
+    let manifest = reg.bench("binomial").unwrap().clone();
+    // Accept: the baked steps value.
+    let mut e = engine_for(&reg, "binomial", vec![DeviceSpec::new(0)]);
+    {
+        let steps = manifest.scalars["steps"];
+        let mut p = Program::new();
+        p.kernel("binomial", &manifest.kernel);
+        for buf in reg.golden_inputs(&manifest).unwrap() {
+            p.input(buf.as_f32().unwrap().to_vec());
+        }
+        p.output(manifest.outputs[0].elems);
+        p.arg_scalar(0, steps);
+        p.arg_local_alloc(3, 255 * 16);
+        e.program(p);
+    }
+    e.configurator().simulate_init = false;
+    e.run().unwrap();
+
+    // Reject: a steps value the artifact was not compiled with.
+    let mut e2 = Engine::with_registry(reg.clone());
+    e2.use_devices(vec![DeviceSpec::new(0)]);
+    let mut p2 = Program::new();
+    p2.kernel("binomial", &manifest.kernel);
+    for buf in reg.golden_inputs(&manifest).unwrap() {
+        p2.input(buf.as_f32().unwrap().to_vec());
+    }
+    p2.output(manifest.outputs[0].elems);
+    p2.arg_scalar(0, 9999.0);
+    e2.program(p2);
+    assert!(e2.run().is_err());
+}

@@ -1,0 +1,109 @@
+//! Usability-metric engine over the real paired sources: the EngineCL
+//! examples must score drastically better than the native baselines on
+//! every Table-3 metric — the paper's usability claim, as a test.
+
+use std::path::Path;
+
+use enginecl::metrics::analyze_source;
+
+fn read(rel: &str) -> String {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(root.join(rel)).unwrap_or_else(|_| panic!("missing {rel}"))
+}
+
+const PAIRS: &[(&str, &str, &str)] = &[
+    ("binomial", "examples/quickstart.rs", "examples/native/native_binomial.rs"),
+    ("nbody", "examples/nbody_coexec.rs", "examples/native/native_nbody.rs"),
+    ("gaussian", "examples/gaussian_blur.rs", "examples/native/native_gaussian.rs"),
+    ("mandelbrot", "examples/mandelbrot_hguided.rs", "examples/native/native_mandelbrot.rs"),
+    ("ray", "examples/raytrace_scenes.rs", "examples/native/native_ray.rs"),
+];
+
+#[test]
+fn enginecl_beats_native_on_code_density() {
+    for (name, ecl_path, native_path) in PAIRS {
+        let ecl = analyze_source(&read(ecl_path));
+        let native = analyze_source(&read(native_path));
+        assert!(
+            native.tok as f64 >= 2.0 * ecl.tok as f64,
+            "{name}: TOK ratio too small ({} vs {})",
+            native.tok,
+            ecl.tok
+        );
+        assert!(
+            native.loc as f64 >= 1.8 * ecl.loc as f64,
+            "{name}: LOC ratio too small ({} vs {})",
+            native.loc,
+            ecl.loc
+        );
+    }
+}
+
+#[test]
+fn enginecl_reaches_ideal_cyclomatic_complexity() {
+    for (name, ecl_path, native_path) in PAIRS {
+        let ecl = analyze_source(&read(ecl_path));
+        let native = analyze_source(&read(native_path));
+        // Rust's `?` postfix counts as a decision point in our CC
+        // approximation; the EngineCL region has a couple of those.
+        assert!(ecl.cc <= 4, "{name}: EngineCL CC should be ~1-3, got {}", ecl.cc);
+        assert!(native.cc > ecl.cc, "{name}: native CC must exceed EngineCL");
+    }
+}
+
+#[test]
+fn enginecl_minimizes_error_sections() {
+    for (name, ecl_path, native_path) in PAIRS {
+        let ecl = analyze_source(&read(ecl_path));
+        let native = analyze_source(&read(native_path));
+        assert!(
+            ecl.errc <= 2,
+            "{name}: EngineCL region should have <=2 error sections, got {}",
+            ecl.errc
+        );
+        assert!(
+            native.errc >= 5 * ecl.errc.max(1),
+            "{name}: ERRC ratio too small ({} vs {})",
+            native.errc,
+            ecl.errc
+        );
+    }
+}
+
+#[test]
+fn interface_complexity_reduced() {
+    for (name, ecl_path, native_path) in PAIRS {
+        let ecl = analyze_source(&read(ecl_path));
+        let native = analyze_source(&read(native_path));
+        assert!(
+            native.oac > ecl.oac && native.is > ecl.is,
+            "{name}: OAC/IS must shrink (native {}/{} vs ecl {}/{})",
+            native.oac,
+            native.is,
+            ecl.oac,
+            ecl.is
+        );
+    }
+}
+
+#[test]
+fn table1_model_matches_native_counts() {
+    // The paper's Table 1 analytical model: native per-device primitive
+    // management should grow with D; EngineCL needs a single line per
+    // added device. We verify the *model direction* over our native
+    // sources: every native baseline repeats client+compile+upload per
+    // logical device, the EngineCL sources never mention the runtime.
+    for (name, ecl_path, native_path) in PAIRS {
+        let native = read(native_path);
+        let ecl = read(ecl_path);
+        assert!(
+            native.contains("ChunkExecutor") || native.contains("PjRtClient")
+                || native.contains("execute_range"),
+            "{name}: native baseline must drive the runtime directly"
+        );
+        assert!(
+            !ecl.contains("ChunkExecutor") && !ecl.contains("PjRtClient"),
+            "{name}: EngineCL example must not touch the runtime layer"
+        );
+    }
+}

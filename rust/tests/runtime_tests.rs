@@ -1,0 +1,166 @@
+//! Runtime-layer integration: artifact registry over the real manifest,
+//! ChunkExecutor correctness (vs golden), decomposition round-trips and
+//! the resident-vs-literal input ablation.
+
+use enginecl::runtime::{
+    host::max_abs_rel_err, pjrt::decompose_range, ArtifactRegistry, ChunkExecutor, HostBuf,
+};
+
+fn registry() -> ArtifactRegistry {
+    ArtifactRegistry::discover().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn registry_has_all_paper_benches() {
+    let reg = registry();
+    for b in ["gaussian", "binomial", "mandelbrot", "nbody", "ray1", "ray2", "ray3"] {
+        assert!(reg.benches.contains_key(b), "missing {b}");
+    }
+}
+
+#[test]
+fn manifests_are_internally_consistent() {
+    let reg = registry();
+    for (name, b) in &reg.benches {
+        assert!(b.n % b.granule == 0, "{name}: n not granule-aligned");
+        assert!(b.chunks.contains_key(&b.granule), "{name}: no granule chunk");
+        assert!(b.chunks.contains_key(&b.n), "{name}: no full-size chunk");
+        for out in &b.outputs {
+            assert_eq!(out.elems, b.n * out.elems_per_item, "{name}/{}", out.name);
+        }
+        // Greedy decomposition must close over every granule multiple.
+        for mult in 1..=16usize {
+            let len = mult * b.granule;
+            if len <= b.n {
+                let plan = decompose_range(b, 0, len).unwrap();
+                assert_eq!(plan.iter().map(|(_, s)| s).sum::<usize>(), len);
+            }
+        }
+    }
+}
+
+#[test]
+fn executor_full_run_matches_golden() {
+    let reg = registry();
+    let manifest = reg.bench("binomial").unwrap().clone();
+    let inputs = reg.golden_inputs(&manifest).unwrap();
+    let golden = reg.golden_outputs(&manifest).unwrap();
+    let mut exec = ChunkExecutor::new(&reg, &manifest, &inputs).unwrap();
+    let mut outs = vec![HostBuf::zeros_f32(manifest.outputs[0].elems)];
+    let timing = exec.execute_range(0, manifest.n, &mut outs).unwrap();
+    assert_eq!(timing.launches, 1, "full problem is one launch");
+    let (_, rel) = max_abs_rel_err(outs[0].as_f32().unwrap(), golden[0].as_f32().unwrap());
+    assert!(rel < 1e-3, "rel err {rel}");
+}
+
+#[test]
+fn executor_chunked_equals_full() {
+    let reg = registry();
+    let manifest = reg.bench("nbody").unwrap().clone();
+    let inputs = reg.golden_inputs(&manifest).unwrap();
+    let mut exec = ChunkExecutor::new(&reg, &manifest, &inputs).unwrap();
+
+    let mut full = vec![
+        HostBuf::zeros_f32(manifest.outputs[0].elems),
+        HostBuf::zeros_f32(manifest.outputs[1].elems),
+    ];
+    exec.execute_range(0, manifest.n, &mut full).unwrap();
+
+    let mut chunked = vec![
+        HostBuf::zeros_f32(manifest.outputs[0].elems),
+        HostBuf::zeros_f32(manifest.outputs[1].elems),
+    ];
+    let step = manifest.granule * 3; // forces greedy decomposition
+    let mut off = 0;
+    while off < manifest.n {
+        let end = (off + step).min(manifest.n);
+        exec.execute_range(off, end, &mut chunked).unwrap();
+        off = end;
+    }
+    assert_eq!(full[0], chunked[0], "pos outputs identical");
+    assert_eq!(full[1], chunked[1], "vel outputs identical");
+}
+
+#[test]
+fn resident_and_literal_inputs_agree() {
+    let reg = registry();
+    let manifest = reg.bench("gaussian").unwrap().clone();
+    let inputs = reg.golden_inputs(&manifest).unwrap();
+    let gws = manifest.granule * 4;
+
+    let mut a = ChunkExecutor::with_options(&reg, &manifest, &inputs, true).unwrap();
+    let mut outs_a = vec![HostBuf::zeros_f32(manifest.outputs[0].elems)];
+    a.execute_range(0, gws, &mut outs_a).unwrap();
+
+    let mut b = ChunkExecutor::with_options(&reg, &manifest, &inputs, false).unwrap();
+    let mut outs_b = vec![HostBuf::zeros_f32(manifest.outputs[0].elems)];
+    b.execute_range(0, gws, &mut outs_b).unwrap();
+
+    assert_eq!(outs_a[0], outs_b[0]);
+}
+
+#[test]
+fn executor_rejects_bad_ranges() {
+    let reg = registry();
+    let manifest = reg.bench("binomial").unwrap().clone();
+    let inputs = reg.golden_inputs(&manifest).unwrap();
+    let mut exec = ChunkExecutor::new(&reg, &manifest, &inputs).unwrap();
+    let mut outs = vec![HostBuf::zeros_f32(manifest.outputs[0].elems)];
+    assert!(exec.execute_range(0, manifest.n + manifest.granule, &mut outs).is_err());
+    assert!(exec.execute_range(13, 269, &mut outs).is_err()); // misaligned
+    assert!(exec.execute_range(0, manifest.granule, &mut []).is_err()); // arity
+}
+
+#[test]
+fn executor_rejects_wrong_input_shape() {
+    let reg = registry();
+    let manifest = reg.bench("binomial").unwrap().clone();
+    let bad = vec![HostBuf::F32(vec![0.0; 10])];
+    assert!(ChunkExecutor::new(&reg, &manifest, &bad).is_err());
+}
+
+#[test]
+fn mandelbrot_chunk_cost_is_irregular() {
+    // The *raw* execution time of equal-size chunks must differ strongly
+    // between empty and interior regions — the property the dynamic
+    // schedulers exploit (Figures 6, 9).
+    let reg = registry();
+    let manifest = reg.bench("mandelbrot").unwrap().clone();
+    let mut exec = ChunkExecutor::new(&reg, &manifest, &[]).unwrap();
+    let mut outs = vec![HostBuf::zeros_f32(manifest.outputs[0].elems)];
+    let chunk = manifest.n / 8;
+    // Warm up both executables.
+    exec.execute_range(0, chunk, &mut outs).unwrap();
+    let mut times = Vec::new();
+    for i in 0..8 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t = exec
+                .execute_range(i * chunk, (i + 1) * chunk, &mut outs)
+                .unwrap();
+            best = best.min(t.exec.as_secs_f64());
+        }
+        times.push(best);
+    }
+    let max = times.iter().cloned().fold(0.0f64, f64::max);
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(
+        max > 1.5 * min,
+        "mandelbrot rows should have irregular cost: {times:?}"
+    );
+}
+
+#[test]
+fn golden_loaders_shape_check() {
+    let reg = registry();
+    for (_, b) in &reg.benches {
+        let ins = reg.golden_inputs(b).unwrap();
+        for (spec, buf) in b.inputs.iter().zip(&ins) {
+            assert_eq!(buf.len(), spec.elems);
+        }
+        let outs = reg.golden_outputs(b).unwrap();
+        for (spec, buf) in b.outputs.iter().zip(&outs) {
+            assert_eq!(buf.len(), spec.elems);
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Property tests on scheduler invariants (the paper's correctness core:
+//! whatever the algorithm, every work-item is computed exactly once).
+
+use enginecl::coordinator::scheduler::{
+    Dynamic, HGuided, SchedDevice, Scheduler, SchedulerKind, Static,
+};
+use enginecl::prop_assert;
+use enginecl::testing::forall;
+use enginecl::util::rng::XorShift;
+
+#[derive(Debug)]
+struct Case {
+    total_granules: usize,
+    granule: usize,
+    powers: Vec<f64>,
+    sched: usize, // 0 static, 1 static-rev, 2 dynamic, 3 hguided
+    packages: usize,
+    k: f64,
+    min_granules: usize,
+}
+
+fn gen_case(r: &mut XorShift) -> Case {
+    let ndev = r.range(1, 4);
+    Case {
+        total_granules: r.range(1, 2048),
+        granule: [1, 64, 128, 256, 512][r.below(5)],
+        powers: (0..ndev).map(|_| 0.05 + r.next_f64()).collect(),
+        sched: r.below(4),
+        packages: r.range(1, 300),
+        k: 1.0 + r.next_f64() * 4.0,
+        min_granules: r.range(1, 8),
+    }
+}
+
+fn build(case: &Case) -> Box<dyn Scheduler> {
+    match case.sched {
+        0 => Box::new(Static::new(None, false)),
+        1 => Box::new(Static::new(None, true)),
+        2 => Box::new(Dynamic::new(case.packages)),
+        _ => Box::new(HGuided::new(case.k, case.min_granules)),
+    }
+}
+
+fn devices(case: &Case) -> Vec<SchedDevice> {
+    case.powers
+        .iter()
+        .enumerate()
+        .map(|(i, p)| SchedDevice { name: format!("d{i}"), power: *p })
+        .collect()
+}
+
+/// Drain a scheduler round-robin, simulating devices finishing in a
+/// seed-dependent order, and return all assigned ranges per device.
+fn drain(case: &Case, seed: u64) -> Vec<(usize, enginecl::coordinator::Range)> {
+    let mut s = build(case);
+    let devs = devices(case);
+    s.start(case.total_granules, case.granule, &devs);
+    let mut rng = XorShift::new(seed);
+    let mut active: Vec<usize> = (0..devs.len()).collect();
+    let mut out = Vec::new();
+    while !active.is_empty() {
+        let pick = rng.below(active.len());
+        let dev = active[pick];
+        match s.next_package(dev) {
+            Some(r) => out.push((dev, r)),
+            None => {
+                active.remove(pick);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_every_item_assigned_exactly_once() {
+    forall("exactly-once coverage", gen_case, |case| {
+        let assigned = drain(case, 99);
+        let total_items = case.total_granules * case.granule;
+        let mut seen = vec![0u8; total_items];
+        for (_, r) in &assigned {
+            prop_assert!(r.end <= total_items, "range {r:?} exceeds {total_items}");
+            for slot in &mut seen[r.begin..r.end] {
+                prop_assert!(*slot == 0, "item assigned twice in {r:?}");
+                *slot = 1;
+            }
+        }
+        prop_assert!(
+            seen.iter().all(|&s| s == 1),
+            "uncovered items: {}",
+            seen.iter().filter(|&&s| s == 0).count()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packages_are_granule_aligned() {
+    forall("granule alignment", gen_case, |case| {
+        for (_, r) in drain(case, 7) {
+            prop_assert!(r.begin % case.granule == 0, "begin misaligned: {r:?}");
+            prop_assert!(r.len() % case.granule == 0, "length misaligned: {r:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_static_gives_at_most_one_package_per_device() {
+    forall(
+        "static one package",
+        |r| {
+            let mut c = gen_case(r);
+            c.sched = r.below(2);
+            c
+        },
+        |case| {
+            let assigned = drain(case, 3);
+            let ndev = case.powers.len();
+            for d in 0..ndev {
+                let count = assigned.iter().filter(|(dev, _)| *dev == d).count();
+                prop_assert!(count <= 1, "device {d} got {count} packages under Static");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dynamic_package_count_bounded() {
+    forall(
+        "dynamic package count",
+        |r| {
+            let mut c = gen_case(r);
+            c.sched = 2;
+            c
+        },
+        |case| {
+            let assigned = drain(case, 11);
+            prop_assert!(
+                assigned.len() <= case.packages.min(case.total_granules),
+                "dynamic issued {} > {} packages",
+                assigned.len(),
+                case.packages
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hguided_sizes_non_increasing_per_device() {
+    forall(
+        "hguided monotone",
+        |r| {
+            let mut c = gen_case(r);
+            c.sched = 3;
+            c
+        },
+        |case| {
+            // Single-device drain isolates the geometric decrease (multi-
+            // device interleavings change G_r between calls to the same
+            // device, but per-device sizes must still never grow beyond
+            // the clamp).
+            let mut s = HGuided::new(case.k, case.min_granules);
+            s.start(case.total_granules, case.granule, &devices(case)[..1]);
+            let mut last = usize::MAX;
+            while let Some(r) = s.next_package(0) {
+                prop_assert!(
+                    r.len() <= last,
+                    "package grew: {} after {last}",
+                    r.len()
+                );
+                last = r.len();
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hguided_respects_power_ordering_on_first_packets() {
+    forall(
+        "hguided power ordering",
+        |r| {
+            let mut c = gen_case(r);
+            c.sched = 3;
+            // At least 2 devices with distinct powers.
+            c.powers = vec![0.1 + r.next_f64() * 0.3, 0.6 + r.next_f64() * 0.4];
+            c.total_granules = 1000 + r.below(1000);
+            c
+        },
+        |case| {
+            // First packet of the stronger device (fresh schedulers so
+            // both see the full pending set).
+            let devs = devices(case);
+            let mut a = HGuided::new(case.k, case.min_granules);
+            a.start(case.total_granules, case.granule, &devs);
+            let weak = a.next_package(0).unwrap().len();
+            let mut b = HGuided::new(case.k, case.min_granules);
+            b.start(case.total_granules, case.granule, &devs);
+            let strong = b.next_package(1).unwrap().len();
+            prop_assert!(
+                strong >= weak,
+                "stronger device got smaller first packet: {strong} < {weak}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_schedulers_deterministic_for_fixed_order() {
+    forall("determinism", gen_case, |case| {
+        let a = drain(case, 42);
+        let b = drain(case, 42);
+        prop_assert!(a.len() == b.len(), "different package counts");
+        for ((da, ra), (db, rb)) in a.iter().zip(&b) {
+            prop_assert!(da == db && ra == rb, "divergent assignment");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kinds_build_the_right_strategies() {
+    assert_eq!(SchedulerKind::static_default().build().name(), "Static");
+    assert_eq!(SchedulerKind::dynamic(50).build().name(), "Dynamic 50");
+    assert_eq!(SchedulerKind::hguided().build().name(), "HGuided");
+}
