@@ -1,7 +1,10 @@
 //! Figures 10 & 11 — co-execution speedups vs the fastest device (GPU)
 //! and system efficiency (S_real/S_max) per bench × scheduler × node.
 //! Paper headline: HGuided mean efficiency 0.89 (Batel) / 0.82 (Remo).
+//! Extended with a blocking-vs-pipelined pairing per bench (PR-1).
 
+use enginecl::coordinator::{DeviceSpec, SchedulerKind};
+use enginecl::harness::runs::{coexec_metrics, run_once};
 use enginecl::harness::{balance, perf, runs};
 use enginecl::platform::NodeConfig;
 use enginecl::runtime::ArtifactRegistry;
@@ -51,6 +54,29 @@ fn main() -> anyhow::Result<()> {
         println!("### geo-mean efficiency by scheduler ({})", node.name);
         for (l, e) in perf::geomean_efficiency_by_scheduler(&eval) {
             println!("  {l:<12} {e:.3}");
+        }
+
+        // What the package pipeline buys each bench: the same HGuided
+        // co-execution, blocking vs `+pipe`, paired via pipeline_gains.
+        let all: Vec<DeviceSpec> = (0..node.devices.len()).map(DeviceSpec::new).collect();
+        let mut pipe_cells = Vec::new();
+        for (bench, solos) in &eval.solos {
+            for kind in [SchedulerKind::hguided(), SchedulerKind::hguided().pipelined(2)] {
+                let report = run_once(&reg, node, bench, all.clone(), kind, None)?;
+                pipe_cells.push(coexec_metrics(&report, solos));
+            }
+        }
+        println!("### HGuided blocking vs +pipe ({})", node.name);
+        for g in perf::pipeline_gains(&pipe_cells) {
+            println!(
+                "  {:<11} wall {:>7.1}ms -> {:>7.1}ms ({:+.1}%)  eff {:.3} -> {:.3}",
+                g.bench,
+                g.blocking_wall.as_secs_f64() * 1e3,
+                g.pipelined_wall.as_secs_f64() * 1e3,
+                g.wall_delta_pct(),
+                g.blocking_eff,
+                g.pipelined_eff
+            );
         }
         println!();
     }

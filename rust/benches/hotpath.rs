@@ -123,6 +123,36 @@ fn main() -> anyhow::Result<()> {
     });
     println!("  full engine run (4-granule problem): {e2e:>8.2} ms (incl. worker spawn + compile)");
 
+    // ---- blocking vs pipelined dispatch --------------------------------
+    // Same 8-package dynamic schedule; the only difference is the
+    // pipeline depth. The pipelined engine prefetches assignments, so a
+    // package never waits on the master's assign round-trip and the next
+    // package's H2D staging overlaps the current compute window.
+    println!("\n## blocking vs pipelined dispatch (raw config, dynamic:8, binomial)");
+    let dispatch = |depth: usize| {
+        time_ms(if quick { 5 } else { 20 }, || {
+            let mut engine = build_engine(
+                &reg,
+                &node,
+                "binomial",
+                vec![DeviceSpec::new(0)],
+                SchedulerKind::dynamic(8),
+                Some(manifest.granule * 8),
+            )
+            .unwrap();
+            *engine.configurator() = enginecl::coordinator::Configurator::raw();
+            engine.pipeline(depth);
+            engine.run().unwrap();
+        })
+    };
+    let blocking = dispatch(1);
+    let piped = dispatch(2);
+    println!("  depth 1 (blocking):   {blocking:>8.2} ms");
+    println!(
+        "  depth 2 (pipelined):  {piped:>8.2} ms ({:+.1}%)",
+        (piped / blocking - 1.0) * 100.0
+    );
+
     // ---- HGuided parameter sensitivity --------------------------------
     println!("\n## HGuided design-choice ablation (package counts over 64k granules)");
     for (k, min) in [(1.0, 2), (2.0, 2), (3.0, 2), (2.0, 8)] {

@@ -1,21 +1,41 @@
 //! Device abstraction (Tier-2) and the per-device worker thread (Tier-3).
 //!
 //! Exactly as the paper's Figure 1: the low-level runtime (OpenCL there,
-//! PJRT here) is encapsulated inside a `Device` managed by its own thread.
-//! Each worker owns a PJRT client + executables + resident buffers,
-//! simulates its profile's init latency and speed, executes assigned
-//! packages and streams completion events to the engine's master loop.
+//! PJRT / the native executor here) is encapsulated inside a `Device`
+//! managed by its own thread. Each worker owns an executor + resident
+//! buffers, simulates its profile's init latency and speed, executes
+//! assigned packages and streams completion events to the engine's
+//! master loop.
+//!
+//! # Worker pipeline
+//!
+//! With `pipeline_depth <= 1` the worker is the paper's blocking loop:
+//! receive a package, stage its H2D transfer, execute, write back, send
+//! `Done`, wait for the next assignment — every package pays the full
+//! transfer plus a master round-trip of idle time.
+//!
+//! With `pipeline_depth >= 2` the worker double-buffers: the master keeps
+//! a queue of up to `depth` assigned packages per device (the
+//! assignment's `lookahead` ships the second range in the initial
+//! message), and the worker stages package *n+1*'s H2D transfer inside
+//! package *n*'s compute window. `Uploaded` tells the
+//! master that a prefetch landed; `Done` is sent *before* the simulated
+//! compute hold completes, shrinking the assign-on-completion round-trip
+//! to nothing (arXiv:2010.12607's optimization for short loads). The
+//! simulated clock charges `max(compute, overlapped-upload) + write-back`
+//! per package instead of their sum (see `TimeScaler::target_overlapped`).
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::config::Configurator;
 use crate::coordinator::introspector::PackageTrace;
 use crate::coordinator::work::Range;
 use crate::platform::{DeviceKind, DeviceProfile, TimeScaler};
-use crate::runtime::{ArtifactRegistry, BenchManifest, ChunkExecutor, HostBuf};
+use crate::runtime::{ArtifactRegistry, BenchManifest, ChunkExecutor, HostBuf, StagedPackage};
 
 /// Paper-style device selection masks (`ecl::DeviceMask`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,18 +84,40 @@ impl DeviceSpec {
 
 // ---- worker protocol (Tier-3) ---------------------------------------
 
+/// A package assignment, optionally shipping the next package in the
+/// same message so a pipelined worker starts one-ahead immediately.
+pub(crate) struct Assignment {
+    pub range: Range,
+    /// Prefetch range: enqueue behind `range` and pre-stage its H2D
+    /// transfer during `range`'s compute window.
+    pub lookahead: Option<Range>,
+}
+
 pub(crate) enum ToWorker {
-    Assign(Range),
+    Assign(Assignment),
+    /// No more work will be assigned; drain the local queue and exit.
     Finish,
 }
 
 pub(crate) enum FromWorker {
     /// Device initialized (driver sim + input upload + builds done).
-    Ready { dev: usize, init_start: std::time::Duration, init_end: std::time::Duration },
-    /// Package completed; ready for the next assignment.
+    Ready { dev: usize, init_start: Duration, init_end: Duration },
+    /// A prefetched package's H2D staging landed on the device — the
+    /// master may top the pipeline back up.
+    Uploaded { dev: usize },
+    /// Package completed (pipelined workers send this as soon as the
+    /// next package can be decided, shrinking the assign round-trip);
+    /// ready for the next assignment.
     Done { dev: usize },
-    /// Worker exited; full-size output buffers + its package traces.
-    Finished { dev: usize, outputs: Vec<HostBuf>, traces: Vec<PackageTrace> },
+    /// Worker exited; full-size output buffers, the item-ranges it
+    /// computed (always collected — the result merge depends on them,
+    /// unlike the optional introspection traces), and its traces.
+    Finished {
+        dev: usize,
+        outputs: Vec<HostBuf>,
+        ranges: Vec<(usize, usize)>,
+        traces: Vec<PackageTrace>,
+    },
     Failed { dev: usize, message: String },
 }
 
@@ -87,7 +129,7 @@ pub(crate) struct WorkerCtx {
     pub inputs: Arc<Vec<HostBuf>>,
     pub config: Configurator,
     pub epoch: Instant,
-    /// Serializes physical PJRT executions across device threads so raw
+    /// Serializes physical executions across device threads so raw
     /// timings are clean; the stretch absorbs the wait (simclock docs).
     pub exec_lock: Arc<Mutex<()>>,
     /// True when a CPU device co-executes in the same engine — triggers
@@ -99,6 +141,9 @@ pub(crate) struct WorkerCtx {
     /// compile phase would steal cores from another's compute phase —
     /// contention the simulated machine would not have.
     pub init_barrier: Arc<std::sync::Barrier>,
+    /// Packages the master keeps in flight on this device; `<= 1` is the
+    /// blocking worker, `>= 2` the double-buffered pipeline.
+    pub pipeline_depth: usize,
     pub seed: u64,
 }
 
@@ -120,14 +165,40 @@ pub(crate) fn spawn_worker(
         .expect("spawn device worker")
 }
 
+/// Fold one master message into the worker's local state: assignments
+/// (plus their lookahead) enter the queue, `Finish` marks the drain.
+fn absorb(msg: ToWorker, queue: &mut VecDeque<Range>, finishing: &mut bool) {
+    match msg {
+        ToWorker::Assign(a) => {
+            queue.push_back(a.range);
+            if let Some(l) = a.lookahead {
+                queue.push_back(l);
+            }
+        }
+        ToWorker::Finish => *finishing = true,
+    }
+}
+
+/// A package whose H2D staging completed, waiting to execute.
+struct Prefetched {
+    range: Range,
+    staged: StagedPackage,
+    /// Epoch offsets of the staging span.
+    h2d_start: Duration,
+    h2d_end: Duration,
+    /// Wall-clock instant staging began (blocking hold baseline).
+    staged_at: Instant,
+}
+
 fn worker_main(
     ctx: &WorkerCtx,
     to_master: &Sender<FromWorker>,
     from_master: &Receiver<ToWorker>,
 ) -> anyhow::Result<()> {
     let init_start = ctx.epoch.elapsed();
+    let pipelined = ctx.pipeline_depth > 1;
 
-    // 1. Real initialization: client, resident inputs, executable builds.
+    // 1. Real initialization: executor, resident inputs, builds.
     let mut exec = ChunkExecutor::with_options(
         &ctx.registry,
         &ctx.bench,
@@ -161,48 +232,142 @@ fn worker_main(
     let init_end = ctx.epoch.elapsed();
     let mut scaler = TimeScaler::new(&ctx.profile, ctx.seed);
     let mut traces: Vec<PackageTrace> = Vec::new();
+    let mut computed: Vec<(usize, usize)> = Vec::new();
+    let mut queue: VecDeque<Range> = VecDeque::new();
+    let mut staged: Option<Prefetched> = None;
+    let mut finishing = false;
 
     to_master
         .send(FromWorker::Ready { dev: ctx.dev, init_start, init_end })
         .ok();
 
+    // Stage a package's H2D phase (compile + upload under the exec lock).
+    let stage = |exec: &mut ChunkExecutor, range: Range| -> anyhow::Result<Prefetched> {
+        let staged_at = Instant::now();
+        let h2d_start = ctx.epoch.elapsed();
+        let staged = {
+            let _guard = ctx.exec_lock.lock().unwrap();
+            exec.stage(range.begin, range.end)?
+        };
+        let h2d_end = ctx.epoch.elapsed();
+        Ok(Prefetched { range, staged, h2d_start, h2d_end, staged_at })
+    };
+
     // 4. Package loop.
-    while let Ok(msg) = from_master.recv() {
-        match msg {
-            ToWorker::Finish => break,
-            ToWorker::Assign(range) => {
-                let started = Instant::now();
-                let start_off = ctx.epoch.elapsed();
-                let timing = {
-                    let _guard = ctx.exec_lock.lock().unwrap();
-                    exec.execute_range(range.begin, range.end, &mut outputs)?
-                };
-                if ctx.config.simulate_speed {
-                    // Device compute stretches with the profile; host-side
-                    // transfer/management time passes through unstretched.
-                    let target =
-                        scaler.target(timing.exec, timing.launches) + timing.xfer;
-                    scaler.hold(started, target);
+    loop {
+        // Absorb any pending assignments without blocking.
+        loop {
+            match from_master.try_recv() {
+                Ok(msg) => absorb(msg, &mut queue, &mut finishing),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    finishing = true;
+                    break;
                 }
-                let end_off = ctx.epoch.elapsed();
-                if ctx.config.introspect {
-                    traces.push(PackageTrace {
-                        device: ctx.dev,
-                        begin_item: range.begin,
-                        end_item: range.end,
-                        start: start_off,
-                        end: end_off,
-                        raw_exec: timing.exec,
-                        launches: timing.launches,
-                    });
-                }
-                to_master.send(FromWorker::Done { dev: ctx.dev }).ok();
             }
+        }
+
+        // Out of local work: block for more, or exit when finishing.
+        if staged.is_none() && queue.is_empty() {
+            if finishing {
+                break;
+            }
+            match from_master.recv() {
+                Ok(msg) => {
+                    absorb(msg, &mut queue, &mut finishing);
+                    continue;
+                }
+                Err(_) => break,
+            }
+        }
+
+        // Ensure the head package is staged (exposed H2D: nothing to
+        // hide it behind — the pipeline's fill bubble, or blocking mode).
+        let current = match staged.take() {
+            Some(p) => p,
+            None => {
+                let range = queue.pop_front().expect("checked non-empty");
+                let p = stage(&mut exec, range)?;
+                if pipelined {
+                    to_master.send(FromWorker::Uploaded { dev: ctx.dev }).ok();
+                }
+                p
+            }
+        };
+
+        // Execute (raw) and write back.
+        let exec_started = Instant::now();
+        let exec_start = ctx.epoch.elapsed();
+        let timing = {
+            let _guard = ctx.exec_lock.lock().unwrap();
+            exec.execute_staged(current.staged, &mut outputs)?
+        };
+        let exec_end = ctx.epoch.elapsed();
+
+        // Overlap: stage the next package's H2D inside this package's
+        // compute window, and report completion early so the master's
+        // next assignment travels during the hold.
+        let mut overlapped_h2d = Duration::ZERO;
+        if pipelined {
+            if let Some(range) = queue.pop_front() {
+                let p = stage(&mut exec, range)?;
+                overlapped_h2d = p.staged.h2d();
+                staged = Some(p);
+                to_master.send(FromWorker::Uploaded { dev: ctx.dev }).ok();
+            }
+            to_master.send(FromWorker::Done { dev: ctx.dev }).ok();
+        }
+
+        // Hold to the simulated package duration. Device compute
+        // stretches with the profile; transfers pass at host speed —
+        // overlapped uploads hide behind compute entirely. Without
+        // speed simulation the successor's staging ran strictly *after*
+        // this package (single host thread), so the package ends at
+        // `exec_end` and the trace claims no overlap — raw traces stay
+        // honest about what physically happened.
+        let end = if ctx.config.simulate_speed {
+            if pipelined {
+                let target = scaler.target_overlapped(
+                    timing.exec,
+                    timing.launches,
+                    overlapped_h2d,
+                    timing.d2h,
+                );
+                scaler.hold(exec_started, target);
+            } else {
+                let target = scaler.target(timing.exec, timing.launches) + timing.xfer();
+                scaler.hold(current.staged_at, target);
+            }
+            ctx.epoch.elapsed()
+        } else {
+            exec_end
+        };
+        computed.push((current.range.begin, current.range.end));
+
+        if ctx.config.introspect {
+            traces.push(PackageTrace {
+                device: ctx.dev,
+                begin_item: current.range.begin,
+                end_item: current.range.end,
+                // Blocking packages own their staging span; pipelined
+                // packages start at compute (staging ran earlier,
+                // inside the previous package's window).
+                start: if pipelined { exec_start } else { current.h2d_start },
+                end,
+                h2d_start: current.h2d_start,
+                h2d_end: current.h2d_end,
+                exec_start,
+                raw_exec: timing.exec,
+                launches: timing.launches,
+            });
+        }
+        if !pipelined {
+            to_master.send(FromWorker::Done { dev: ctx.dev }).ok();
         }
     }
 
     to_master
-        .send(FromWorker::Finished { dev: ctx.dev, outputs, traces })
+        .send(FromWorker::Finished { dev: ctx.dev, outputs, ranges: computed, traces })
         .ok();
     Ok(())
 }

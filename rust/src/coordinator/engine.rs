@@ -1,10 +1,30 @@
 //! `Engine` — the Tier-1 facade (paper Figure 4): device selection, work
-//! sizes, scheduler choice, program consumption and `run()`.
+//! sizes, scheduler choice, pipeline depth, program consumption and
+//! `run()`.
 //!
 //! `run()` spawns one worker thread per selected device, drives the
 //! master scheduling loop (assign-on-completion, the paper's Scheduler
-//! thread), merges the disjoint result ranges back into the program's
-//! output containers and leaves a full `RunReport` for introspection.
+//! thread — extended with per-device prefetch when pipelining is on),
+//! merges the disjoint result ranges back into the program's output
+//! containers and leaves a full `RunReport` for introspection.
+//!
+//! # Master loop
+//!
+//! The loop is event-driven over the worker channel:
+//!
+//! * `Ready` — device initialized; top its pipeline up to `depth`
+//!   packages (the first assignment carries the second range as a
+//!   `lookahead`, halving the fill round-trips).
+//! * `Uploaded` — a prefetch's H2D staging landed; release the
+//!   device's staging slot (at most two assignments may be un-staged
+//!   at once — back-pressure for slow buses) and top up again.
+//! * `Done` — a package completed; one slot freed, assign the next
+//!   package or send `Finish` when the scheduler is dry for that device.
+//! * `Finished`/`Failed` — worker exited; collect outputs/traces or the
+//!   failure.
+//!
+//! With `depth == 1` this reduces exactly to the paper's blocking
+//! assign-on-completion loop.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Sender};
@@ -13,14 +33,19 @@ use std::time::Instant;
 
 use crate::coordinator::config::Configurator;
 use crate::coordinator::device::{
-    spawn_worker, DeviceMask, DeviceSpec, FromWorker, ToWorker, WorkerCtx,
+    spawn_worker, Assignment, DeviceMask, DeviceSpec, FromWorker, ToWorker, WorkerCtx,
 };
 use crate::coordinator::error::EclError;
 use crate::coordinator::introspector::{DeviceTrace, RunReport};
 use crate::coordinator::program::{Arg, Program};
-use crate::coordinator::scheduler::{SchedDevice, SchedulerKind};
+use crate::coordinator::scheduler::{SchedDevice, Scheduler, SchedulerKind};
 use crate::platform::{DeviceKind, NodeConfig};
-use crate::runtime::{ArtifactRegistry, HostBuf};
+use crate::runtime::{host::merge_ranges, ArtifactRegistry, HostBuf};
+
+/// Most packages a pipelined device keeps in flight. Deeper pipelines buy
+/// nothing (one package computes while one stages) but starve adaptive
+/// schedulers of late sizing decisions.
+pub const MAX_PIPELINE_DEPTH: usize = 8;
 
 /// The paper's `ecl::EngineCL`.
 pub struct Engine {
@@ -28,6 +53,9 @@ pub struct Engine {
     node: NodeConfig,
     selected: Vec<DeviceSpec>,
     scheduler: SchedulerKind,
+    /// Tier-1 pipeline override; `None` defers to the scheduler spec
+    /// (a `Pipelined` wrapper / `+pipe` suffix).
+    pipeline_depth: Option<usize>,
     config: Configurator,
     gws: Option<usize>,
     lws: Option<usize>,
@@ -48,6 +76,7 @@ impl Engine {
             node: NodeConfig::batel(),
             selected: Vec::new(),
             scheduler: SchedulerKind::static_default(),
+            pipeline_depth: None,
             config: Configurator::default(),
             gws: None,
             lws: None,
@@ -111,6 +140,24 @@ impl Engine {
     pub fn scheduler(&mut self, kind: SchedulerKind) -> &mut Self {
         self.scheduler = kind;
         self
+    }
+
+    /// Set the per-device package pipeline depth (Tier-1 access to the
+    /// co-execution pipeline): `1` is the blocking assign-on-completion
+    /// loop, `2` (the sweet spot) double-buffers — each device uploads
+    /// package *n+1* while computing package *n* and never idles on the
+    /// master's round-trip. Values are validated in `run()` against
+    /// [`MAX_PIPELINE_DEPTH`]. Composes with every scheduler; equivalent
+    /// to the `+pipe` scheduler-spec suffix.
+    pub fn pipeline(&mut self, depth: usize) -> &mut Self {
+        self.pipeline_depth = Some(depth);
+        self
+    }
+
+    /// The pipeline depth `run()` will use: the Tier-1 override if set,
+    /// else whatever the scheduler spec carries (1 = blocking).
+    pub fn effective_pipeline_depth(&self) -> usize {
+        self.pipeline_depth.unwrap_or_else(|| self.scheduler.pipeline_depth()).max(1)
     }
 
     /// Tier-2 access to runtime internals.
@@ -209,13 +256,23 @@ impl Engine {
             }
         }
         validate_args(program.args(), &bench.scalars)?;
-        if let SchedulerKind::Static { props: Some(p), .. } = &self.scheduler {
+        if let SchedulerKind::Static { props: Some(p), .. } = self.scheduler.base() {
             if p.len() != self.selected.len() {
                 return Err(EclError::BadProportions {
                     got: p.len(),
                     devices: self.selected.len(),
                 });
             }
+        }
+        // Field-precise equivalent of effective_pipeline_depth(): the
+        // program borrow above outlives this whole function.
+        let depth = match self.pipeline_depth {
+            Some(d) => d,
+            None => self.scheduler.pipeline_depth(),
+        }
+        .max(1);
+        if depth > MAX_PIPELINE_DEPTH {
+            return Err(EclError::BadPipelineDepth { depth, max: MAX_PIPELINE_DEPTH });
         }
 
         // ---- spawn device workers -------------------------------------
@@ -252,6 +309,7 @@ impl Engine {
                 exec_lock: Arc::clone(&exec_lock),
                 contended_init: contended,
                 init_barrier: Arc::clone(&init_barrier),
+                pipeline_depth: depth,
                 seed: 0x9E3779B9 + slot as u64 * 0x85EBCA77,
             };
             handles.push(spawn_worker(ctx, to_master_tx.clone(), rx));
@@ -285,19 +343,63 @@ impl Engine {
                 }
             })
             .collect();
-        let mut worker_outputs: Vec<Option<Vec<HostBuf>>> = (0..ndev).map(|_| None).collect();
+        let mut worker_outputs: Vec<Option<(Vec<HostBuf>, Vec<(usize, usize)>)>> =
+            (0..ndev).map(|_| None).collect();
+        // Packages assigned but not yet reported Done, per device.
+        let mut inflight = vec![0usize; ndev];
+        // Assignments whose H2D staging has not been confirmed by an
+        // Uploaded event yet (pipelined devices only). Capped at 2: one
+        // staging, one queued behind it — back-pressure so a device
+        // with a slow bus is never flooded with un-staged ranges while
+        // an adaptive scheduler could still size them better elsewhere.
+        let mut unstaged = vec![0usize; ndev];
+        let staging_cap = if depth > 1 { 2 } else { usize::MAX };
+        let mut finish_sent = vec![false; ndev];
         let mut finished = 0usize;
         let mut failure: Option<EclError> = None;
 
-        let assign = |dev: usize, scheduler: &mut Box<dyn crate::coordinator::scheduler::Scheduler>,
-                          to_workers: &[Sender<ToWorker>]| {
-            match scheduler.next_package(dev) {
-                Some(range) => {
-                    to_workers[dev].send(ToWorker::Assign(range)).ok();
+        // Top device `dev`'s pipeline up to `depth` packages (and at
+        // most `staging_cap` unconfirmed stagings). The first message
+        // batches two ranges (range + lookahead) so a pipelined worker
+        // starts one-ahead off a single round-trip. Sends Finish
+        // exactly once when the scheduler is dry for this device.
+        let top_up = |dev: usize,
+                      scheduler: &mut Box<dyn Scheduler>,
+                      inflight: &mut [usize],
+                      unstaged: &mut [usize],
+                      finish_sent: &mut [bool],
+                      to_workers: &[Sender<ToWorker>]| {
+            if finish_sent[dev] {
+                return;
+            }
+            while inflight[dev] < depth && unstaged[dev] < staging_cap {
+                let Some(range) = scheduler.next_package(dev) else {
+                    if inflight[dev] == 0 || depth > 1 {
+                        // Blocking workers only see Finish when idle;
+                        // pipelined workers drain their local queue.
+                        to_workers[dev].send(ToWorker::Finish).ok();
+                        finish_sent[dev] = true;
+                    }
+                    return;
+                };
+                inflight[dev] += 1;
+                if depth > 1 {
+                    unstaged[dev] += 1;
                 }
-                None => {
-                    to_workers[dev].send(ToWorker::Finish).ok();
-                }
+                let lookahead = if depth > 1
+                    && inflight[dev] < depth
+                    && unstaged[dev] < staging_cap
+                {
+                    let next = scheduler.next_package(dev);
+                    if next.is_some() {
+                        inflight[dev] += 1;
+                        unstaged[dev] += 1;
+                    }
+                    next
+                } else {
+                    None
+                };
+                to_workers[dev].send(ToWorker::Assign(Assignment { range, lookahead })).ok();
             }
         };
 
@@ -306,14 +408,21 @@ impl Engine {
                 Ok(FromWorker::Ready { dev, init_start, init_end }) => {
                     device_traces[dev].init_start = init_start;
                     device_traces[dev].init_end = init_end;
-                    assign(dev, &mut scheduler, &to_workers);
+                    top_up(dev, &mut scheduler, &mut inflight, &mut unstaged, &mut finish_sent, &to_workers);
+                }
+                Ok(FromWorker::Uploaded { dev }) => {
+                    // A prefetch landed on the device: release its
+                    // staging slot and keep the pipe full.
+                    unstaged[dev] = unstaged[dev].saturating_sub(1);
+                    top_up(dev, &mut scheduler, &mut inflight, &mut unstaged, &mut finish_sent, &to_workers);
                 }
                 Ok(FromWorker::Done { dev }) => {
-                    assign(dev, &mut scheduler, &to_workers);
+                    inflight[dev] = inflight[dev].saturating_sub(1);
+                    top_up(dev, &mut scheduler, &mut inflight, &mut unstaged, &mut finish_sent, &to_workers);
                 }
-                Ok(FromWorker::Finished { dev, outputs, traces }) => {
+                Ok(FromWorker::Finished { dev, outputs, ranges, traces }) => {
                     device_traces[dev].packages = traces;
-                    worker_outputs[dev] = Some(outputs);
+                    worker_outputs[dev] = Some((outputs, ranges));
                     finished += 1;
                 }
                 Ok(FromWorker::Failed { dev, message }) => {
@@ -329,34 +438,47 @@ impl Engine {
         for h in handles {
             let _ = h.join();
         }
+        // A worker that panicked (rather than erred) never sends
+        // Finished/Failed — its channel just drops. Returning Ok here
+        // would silently leave that device's output regions zeroed.
+        if failure.is_none() && finished < ndev {
+            failure = Some(EclError::Runtime(format!(
+                "{} device worker(s) exited without reporting results",
+                ndev - finished
+            )));
+        }
         if let Some(e) = failure {
             return Err(e);
         }
 
         // ---- merge disjoint result ranges back into the program --------
-        for (dev, outs) in worker_outputs.into_iter().enumerate() {
-            let Some(outs) = outs else { continue };
-            let ranges: Vec<(usize, usize)> = device_traces[dev]
-                .packages
-                .iter()
-                .map(|p| (p.begin_item, p.end_item))
-                .collect();
+        // Ranges come from the worker's own record of what it computed,
+        // not from the introspection traces — merging must work with
+        // `introspect` off.
+        for outs in worker_outputs.into_iter().flatten() {
+            let (outs, ranges) = outs;
             for ((src, spec), dst) in
                 outs.iter().zip(&bench.outputs).zip(program.outputs_mut())
             {
                 let src = src.as_f32().expect("worker outputs are f32");
                 let dst = dst.host_mut().as_f32_mut().expect("program outputs are f32");
-                for &(b, e) in &ranges {
-                    let lo = b * spec.elems_per_item;
-                    let hi = e * spec.elems_per_item;
-                    dst[lo..hi].copy_from_slice(&src[lo..hi]);
-                }
+                merge_ranges(dst, src, &ranges, spec.elems_per_item);
             }
         }
 
+        // The label reflects the *effective* depth: a Tier-1
+        // pipeline(1) override on a "+pipe" spec ran blocking, and vice
+        // versa — harness pairings key off this suffix.
+        let mut scheduler_label = scheduler.name();
+        if depth > 1 && !scheduler_label.contains("+pipe") {
+            scheduler_label.push_str("+pipe");
+        } else if depth <= 1 && scheduler_label.ends_with("+pipe") {
+            let len = scheduler_label.len() - "+pipe".len();
+            scheduler_label.truncate(len);
+        }
         Ok(RunReport {
             bench: bench.name.clone(),
-            scheduler: scheduler.name(),
+            scheduler: scheduler_label,
             gws,
             wall: epoch.elapsed(),
             devices: device_traces,
@@ -413,5 +535,35 @@ mod tests {
         args.insert(0, Arg::Scalar(100.0));
         let err = validate_args(&args, &scalars).unwrap_err();
         assert!(matches!(err, EclError::ArgMismatch { .. }));
+    }
+
+    #[test]
+    fn pipeline_depth_resolution() {
+        let mut e = Engine::with_registry(ArtifactRegistry::synthetic());
+        assert_eq!(e.effective_pipeline_depth(), 1, "blocking by default");
+        e.scheduler(SchedulerKind::hguided().pipelined(2));
+        assert_eq!(e.effective_pipeline_depth(), 2, "scheduler spec carries depth");
+        e.pipeline(3);
+        assert_eq!(e.effective_pipeline_depth(), 3, "Tier-1 override wins");
+        e.pipeline(0);
+        assert_eq!(e.effective_pipeline_depth(), 1, "clamped to >= 1");
+    }
+
+    #[test]
+    fn oversized_pipeline_depth_rejected() {
+        let reg = ArtifactRegistry::synthetic();
+        let mut e = Engine::with_registry(reg.clone());
+        e.use_devices(vec![DeviceSpec::new(0)]);
+        e.pipeline(MAX_PIPELINE_DEPTH + 1);
+        let bench = reg.bench("binomial").unwrap().clone();
+        let mut p = Program::new();
+        p.kernel("binomial", &bench.kernel);
+        for buf in reg.golden_inputs(&bench).unwrap() {
+            p.input(buf.as_f32().unwrap().to_vec());
+        }
+        p.output(bench.outputs[0].elems);
+        e.program(p);
+        assert!(e.run().is_err());
+        assert!(matches!(e.get_errors()[0], EclError::BadPipelineDepth { .. }));
     }
 }

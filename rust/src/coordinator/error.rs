@@ -1,50 +1,92 @@
 //! Engine error model — the paper's API collects runtime errors on the
 //! engine (`engine.has_errors()` / `get_errors()`) instead of forcing an
 //! error-check section after every call (the ERRC usability metric).
+//!
+//! `Display` and `std::error::Error` are implemented by hand so the crate
+//! carries no proc-macro dependency (the build must work offline).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+/// Everything `Engine::run` can reject or report.
+#[derive(Debug)]
 pub enum EclError {
-    #[error("no program set: call engine.program(..) before run()")]
+    /// No program set: call `engine.program(..)` before `run()`.
     NoProgram,
-
-    #[error("no devices selected: call engine.use_mask(..) or use_devices(..)")]
+    /// No devices selected: call `engine.use_mask(..)` or `use_devices(..)`.
     NoDevices,
-
-    #[error("unknown benchmark kernel '{0}'")]
+    /// The program names a kernel no artifact provides.
     UnknownKernel(String),
-
-    #[error("global work size {gws} exceeds compiled problem size {n}")]
+    /// Requested global work size exceeds the compiled problem size.
     WorkSizeTooLarge { gws: usize, n: usize },
-
-    #[error("global work size {gws} is not a multiple of the granule {granule}")]
+    /// Requested global work size is not granule-aligned.
     MisalignedWorkSize { gws: usize, granule: usize },
-
-    #[error("program expects {expected} input buffers, got {got}")]
+    /// Wrong number of input buffers.
     InputArity { expected: usize, got: usize },
-
-    #[error("program expects {expected} output buffers, got {got}")]
+    /// Wrong number of output buffers.
     OutputArity { expected: usize, got: usize },
-
-    #[error("buffer '{name}' has {got} elements, manifest expects {expected}")]
+    /// A buffer's element count disagrees with the manifest.
     BufferSize { name: String, expected: usize, got: usize },
-
-    #[error("kernel argument {index} ('{name}') = {got}, artifact was baked with {expected}")]
+    /// A scalar kernel argument differs from the AOT-baked value.
     ArgMismatch { index: usize, name: String, expected: f64, got: f64 },
-
-    #[error("kernel argument {index}: no such baked argument")]
+    /// A kernel argument index with no baked counterpart.
     UnknownArg { index: usize },
-
-    #[error("static scheduler got {got} proportions for {devices} devices")]
+    /// Static proportions don't match the selected device count.
     BadProportions { got: usize, devices: usize },
-
-    #[error("device worker '{device}' failed: {message}")]
+    /// Pipeline depth outside the supported range.
+    BadPipelineDepth { depth: usize, max: usize },
+    /// A device worker thread failed.
     Worker { device: String, message: String },
-
-    #[error("runtime error: {0}")]
+    /// Any other runtime failure, stringified.
     Runtime(String),
 }
+
+impl fmt::Display for EclError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EclError::NoProgram => {
+                write!(f, "no program set: call engine.program(..) before run()")
+            }
+            EclError::NoDevices => {
+                write!(f, "no devices selected: call engine.use_mask(..) or use_devices(..)")
+            }
+            EclError::UnknownKernel(k) => write!(f, "unknown benchmark kernel '{k}'"),
+            EclError::WorkSizeTooLarge { gws, n } => {
+                write!(f, "global work size {gws} exceeds compiled problem size {n}")
+            }
+            EclError::MisalignedWorkSize { gws, granule } => {
+                write!(f, "global work size {gws} is not a multiple of the granule {granule}")
+            }
+            EclError::InputArity { expected, got } => {
+                write!(f, "program expects {expected} input buffers, got {got}")
+            }
+            EclError::OutputArity { expected, got } => {
+                write!(f, "program expects {expected} output buffers, got {got}")
+            }
+            EclError::BufferSize { name, expected, got } => {
+                write!(f, "buffer '{name}' has {got} elements, manifest expects {expected}")
+            }
+            EclError::ArgMismatch { index, name, expected, got } => write!(
+                f,
+                "kernel argument {index} ('{name}') = {got}, artifact was baked with {expected}"
+            ),
+            EclError::UnknownArg { index } => {
+                write!(f, "kernel argument {index}: no such baked argument")
+            }
+            EclError::BadProportions { got, devices } => {
+                write!(f, "static scheduler got {got} proportions for {devices} devices")
+            }
+            EclError::BadPipelineDepth { depth, max } => {
+                write!(f, "pipeline depth {depth} out of range (1..={max})")
+            }
+            EclError::Worker { device, message } => {
+                write!(f, "device worker '{device}' failed: {message}")
+            }
+            EclError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EclError {}
 
 impl From<anyhow::Error> for EclError {
     fn from(e: anyhow::Error) -> Self {
@@ -67,6 +109,8 @@ mod tests {
             got: 100.0,
         };
         assert!(e.to_string().contains("steps"));
+        let e = EclError::BadPipelineDepth { depth: 99, max: 8 };
+        assert!(e.to_string().contains("99"));
     }
 
     #[test]

@@ -1,6 +1,13 @@
 //! Introspector (paper §4.1, Figures 5/6/12/13): per-package execution
 //! traces collected during a run — the custom profiling the authors built
 //! because vendor tools could not observe multi-device co-execution.
+//!
+//! Since the pipelined engine, every package carries transfer/compute
+//! sub-spans: `h2d_start..h2d_end` is the host→device staging window and
+//! `exec_start..end` the compute-and-merge window. With pipelining on,
+//! a package's H2D span sits *inside the previous package's compute
+//! window* — [`RunReport::transfer_overlap_count`] is how the harnesses
+//! verify the overlap actually happened.
 
 use std::time::Duration;
 
@@ -13,10 +20,17 @@ pub struct PackageTrace {
     pub device: usize,
     pub begin_item: usize,
     pub end_item: usize,
-    /// Offsets from the engine's run epoch.
+    /// Offsets from the engine's run epoch: package occupancy window.
+    /// Blocking mode: starts at H2D staging. Pipelined: starts at compute
+    /// (the staging ran during the previous package's window).
     pub start: Duration,
     pub end: Duration,
-    /// Raw (un-stretched) PJRT execution time.
+    /// Host→device staging sub-span (argument/input upload).
+    pub h2d_start: Duration,
+    pub h2d_end: Duration,
+    /// Start of the compute sub-span (`exec_start..end` is compute+merge).
+    pub exec_start: Duration,
+    /// Raw (un-stretched) backend execution time.
     pub raw_exec: Duration,
     /// Sub-launches the package decomposed into.
     pub launches: u32,
@@ -25,6 +39,16 @@ pub struct PackageTrace {
 impl PackageTrace {
     pub fn items(&self) -> usize {
         self.end_item - self.begin_item
+    }
+
+    /// True when this package's H2D staging ran while `other` (another
+    /// package on the same device) was computing — the pipelined
+    /// engine's transfer/compute overlap, visible in the trace.
+    pub fn h2d_overlaps_compute_of(&self, other: &PackageTrace) -> bool {
+        self.h2d_end > self.h2d_start // non-empty transfer span
+            && self.begin_item != other.begin_item // a different package
+            && self.h2d_start < other.end
+            && self.h2d_end > other.exec_start
     }
 }
 
@@ -56,6 +80,15 @@ impl DeviceTrace {
     /// Busy time: sum of package durations.
     pub fn busy(&self) -> Duration {
         self.packages.iter().map(|p| p.end.saturating_sub(p.start)).sum()
+    }
+
+    /// Packages whose H2D staging overlapped another package's compute
+    /// window on this device (0 without pipelining).
+    pub fn overlapped_transfers(&self) -> usize {
+        self.packages
+            .iter()
+            .filter(|p| self.packages.iter().any(|q| p.h2d_overlaps_compute_of(q)))
+            .count()
     }
 }
 
@@ -129,8 +162,22 @@ impl RunReport {
         self.devices.iter().map(|d| d.packages.len()).sum()
     }
 
+    /// Packages (across all devices) whose H2D transfer span overlapped
+    /// another package's compute span on the same device. Nonzero means
+    /// the pipeline actually hid transfers behind compute.
+    pub fn transfer_overlap_count(&self) -> usize {
+        self.devices.iter().map(DeviceTrace::overlapped_transfers).sum()
+    }
+
+    /// Convenience: did any device overlap a transfer with compute?
+    pub fn has_transfer_overlap(&self) -> bool {
+        self.transfer_overlap_count() > 0
+    }
+
     /// ASCII timeline (one row per device) — the Introspector "visual
-    /// representation" of Figures 5/6 for terminals.
+    /// representation" of Figures 5/6 for terminals. `i` marks init,
+    /// `#` compute windows, `u` H2D staging visible outside compute
+    /// (exposed, un-overlapped transfer).
     pub fn ascii_timeline(&self, width: usize) -> String {
         let wall = self.wall.as_secs_f64().max(1e-9);
         let mut out = String::new();
@@ -140,6 +187,15 @@ impl RunReport {
             let ie = ((d.init_end.as_secs_f64() / wall) * width as f64) as usize;
             for c in row.iter_mut().take(ie.min(width)).skip(ib.min(width)) {
                 *c = b'i';
+            }
+            // Exposed uploads first; compute windows overwrite them, so
+            // only transfer time the pipeline failed to hide stays 'u'.
+            for p in &d.packages {
+                let b = ((p.h2d_start.as_secs_f64() / wall) * width as f64) as usize;
+                let e = ((p.h2d_end.as_secs_f64() / wall) * width as f64) as usize;
+                for c in row.iter_mut().take(e.min(width)).skip(b.min(width)) {
+                    *c = b'u';
+                }
             }
             for p in &d.packages {
                 let b = ((p.start.as_secs_f64() / wall) * width as f64) as usize;
@@ -160,20 +216,25 @@ impl RunReport {
         out
     }
 
-    /// CSV of package traces (device,begin,end,start_ms,end_ms,raw_ms) —
-    /// the data behind Figures 5/6.
+    /// CSV of package traces — the data behind Figures 5/6, with the
+    /// pipelined sub-spans.
     pub fn package_csv(&self) -> String {
-        let mut s = String::from("device,kind,begin_item,end_item,start_ms,end_ms,raw_ms,launches\n");
+        let mut s = String::from(
+            "device,kind,begin_item,end_item,start_ms,end_ms,h2d_start_ms,h2d_end_ms,exec_start_ms,raw_ms,launches\n",
+        );
         for d in &self.devices {
             for p in &d.packages {
                 s.push_str(&format!(
-                    "{},{},{},{},{:.3},{:.3},{:.3},{}\n",
+                    "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{}\n",
                     d.name,
                     d.kind.label(),
                     p.begin_item,
                     p.end_item,
                     p.start.as_secs_f64() * 1e3,
                     p.end.as_secs_f64() * 1e3,
+                    p.h2d_start.as_secs_f64() * 1e3,
+                    p.h2d_end.as_secs_f64() * 1e3,
+                    p.exec_start.as_secs_f64() * 1e3,
                     p.raw_exec.as_secs_f64() * 1e3,
                     p.launches
                 ));
@@ -191,16 +252,23 @@ mod tests {
         Duration::from_millis(x)
     }
 
-    fn mk_report() -> RunReport {
-        let mk = |device, b, e, s, t| PackageTrace {
+    /// A blocking-style package: H2D at the window start, compute after.
+    fn mk(device: usize, b: usize, e: usize, s: u64, t: u64) -> PackageTrace {
+        PackageTrace {
             device,
             begin_item: b,
             end_item: e,
             start: ms(s),
             end: ms(t),
+            h2d_start: ms(s),
+            h2d_end: ms(s + 1),
+            exec_start: ms(s + 1),
             raw_exec: ms((t - s) / 4),
             launches: 1,
-        };
+        }
+    }
+
+    fn mk_report() -> RunReport {
         RunReport {
             bench: "toy".into(),
             scheduler: "Static".into(),
@@ -267,5 +335,36 @@ mod tests {
         let tl = r.ascii_timeline(40);
         assert_eq!(tl.lines().count(), 2);
         assert!(tl.contains('#'));
+    }
+
+    #[test]
+    fn blocking_traces_report_no_overlap() {
+        let r = mk_report();
+        assert_eq!(r.transfer_overlap_count(), 0);
+        assert!(!r.has_transfer_overlap());
+    }
+
+    #[test]
+    fn pipelined_traces_report_overlap() {
+        let mut r = mk_report();
+        // Package 2 on the gpu: its H2D ran at 40..45ms, inside package
+        // 1's 6..100ms compute window — a pipelined prefetch.
+        r.devices[1].packages.push(PackageTrace {
+            device: 1,
+            begin_item: 100,
+            end_item: 130,
+            start: ms(100),
+            end: ms(120),
+            h2d_start: ms(40),
+            h2d_end: ms(45),
+            exec_start: ms(100),
+            raw_exec: ms(5),
+            launches: 1,
+        });
+        assert_eq!(r.transfer_overlap_count(), 1);
+        assert!(r.has_transfer_overlap());
+        // The overlap is one-directional: package 1's own H2D (5..6ms)
+        // precedes every compute window, so it is not counted.
+        assert_eq!(r.devices[0].overlapped_transfers(), 0);
     }
 }

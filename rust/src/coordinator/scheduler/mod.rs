@@ -2,16 +2,20 @@
 //!
 //! A scheduler hands out granule-ranges to devices on request. The engine
 //! calls `start` once with the work size and device descriptions, then
-//! `next_package(dev)` every time device `dev` is idle; `None` is terminal
-//! for that device. All three of the paper's algorithms are implemented;
-//! new ones plug in through the same trait.
+//! `next_package(dev)` every time device `dev` has a free pipeline slot;
+//! `None` is terminal for that device. All three of the paper's
+//! algorithms are implemented; new ones plug in through the same trait,
+//! and the [`Pipelined`] wrapper composes package pipelining with any of
+//! them (spec suffix `+pipe`).
 
 pub mod dynamic;
 pub mod hguided;
+pub mod pipelined;
 pub mod static_sched;
 
 pub use dynamic::Dynamic;
 pub use hguided::HGuided;
+pub use pipelined::Pipelined;
 pub use static_sched::Static;
 
 use crate::coordinator::work::Range;
@@ -35,6 +39,14 @@ pub trait Scheduler: Send {
     /// The next package for device `dev` (indexes `devices` from `start`),
     /// in *work-items*. `None` = no more work for this device, ever.
     fn next_package(&mut self, dev: usize) -> Option<Range>;
+
+    /// Packages the engine keeps in flight per device. The default `1`
+    /// is the paper's blocking assign-on-completion loop; the
+    /// [`Pipelined`] wrapper raises it to enable transfer/compute
+    /// overlap in the device workers.
+    fn pipeline_depth(&self) -> usize {
+        1
+    }
 }
 
 /// Engine-facing configuration enum (Tier-2 API); materialized into a
@@ -49,6 +61,8 @@ pub enum SchedulerKind {
     Dynamic { packages: usize },
     /// Geometrically decreasing packages weighted by device power.
     HGuided { k: f64, min_granules: usize },
+    /// Any base strategy with per-device package pipelining of `depth`.
+    Pipelined { inner: Box<SchedulerKind>, depth: usize },
 }
 
 impl SchedulerKind {
@@ -68,6 +82,33 @@ impl SchedulerKind {
         SchedulerKind::HGuided { k: 2.0, min_granules: 2 }
     }
 
+    /// Wrap this strategy with package pipelining of `depth` (2 =
+    /// double-buffered, the sweet spot).
+    pub fn pipelined(self, depth: usize) -> Self {
+        SchedulerKind::Pipelined { inner: Box::new(self), depth }
+    }
+
+    /// The base (unwrapped) strategy — what partitioning validation
+    /// inspects regardless of pipelining.
+    pub fn base(&self) -> &SchedulerKind {
+        match self {
+            SchedulerKind::Pipelined { inner, .. } => inner.base(),
+            other => other,
+        }
+    }
+
+    /// The pipeline depth this spec requests (1 = blocking). A
+    /// `Pipelined` wrapper always means at least double-buffering,
+    /// matching the clamp in [`Pipelined::new`].
+    pub fn pipeline_depth(&self) -> usize {
+        match self {
+            SchedulerKind::Pipelined { inner, depth } => {
+                (*depth).max(inner.pipeline_depth()).max(2)
+            }
+            _ => 1,
+        }
+    }
+
     pub fn build(&self) -> Box<dyn Scheduler> {
         match self {
             SchedulerKind::Static { props, reversed } => {
@@ -76,6 +117,9 @@ impl SchedulerKind {
             SchedulerKind::Dynamic { packages } => Box::new(Dynamic::new(*packages)),
             SchedulerKind::HGuided { k, min_granules } => {
                 Box::new(HGuided::new(*k, *min_granules))
+            }
+            SchedulerKind::Pipelined { inner, depth } => {
+                Box::new(Pipelined::new(inner.build(), *depth))
             }
         }
     }
@@ -86,13 +130,25 @@ impl SchedulerKind {
             SchedulerKind::Static { reversed: true, .. } => "Static rev".into(),
             SchedulerKind::Dynamic { packages } => format!("Dynamic {packages}"),
             SchedulerKind::HGuided { .. } => "HGuided".into(),
+            SchedulerKind::Pipelined { inner, .. } => format!("{}+pipe", inner.label()),
         }
     }
 }
 
 /// Parse a CLI scheduler spec: `static`, `static-rev`, `dynamic:N`,
-/// `hguided`, `hguided:k=3,min=4`.
+/// `hguided`, `hguided:k=…,min=…` — each optionally with a `+pipe`
+/// suffix (`+pipe` = depth 2, `+pipeN` = depth N) enabling the package
+/// pipeline, e.g. `hguided+pipe` or `dynamic:150+pipe3`.
 pub fn parse_kind(s: &str) -> Option<SchedulerKind> {
+    if let Some(idx) = s.rfind("+pipe") {
+        let (base, suffix) = s.split_at(idx);
+        let digits = &suffix["+pipe".len()..];
+        let depth = if digits.is_empty() { 2 } else { digits.parse().ok()? };
+        if depth < 2 {
+            return None;
+        }
+        return parse_kind(base).map(|k| k.pipelined(depth));
+    }
     let (head, tail) = s.split_once(':').unwrap_or((s, ""));
     match head {
         "static" => Some(SchedulerKind::Static { props: None, reversed: false }),
@@ -131,6 +187,7 @@ mod tests {
             SchedulerKind::Static { props: None, reversed: true }.label(),
             "Static rev"
         );
+        assert_eq!(SchedulerKind::hguided().pipelined(2).label(), "HGuided+pipe");
     }
 
     #[test]
@@ -148,5 +205,30 @@ mod tests {
         }
         assert!(parse_kind("nope").is_none());
         assert!(parse_kind("hguided:bogus=1").is_none());
+    }
+
+    #[test]
+    fn parse_pipe_suffix() {
+        let k = parse_kind("hguided+pipe").unwrap();
+        assert_eq!(k.pipeline_depth(), 2);
+        assert!(matches!(k.base(), SchedulerKind::HGuided { .. }));
+
+        let k = parse_kind("dynamic:150+pipe3").unwrap();
+        assert_eq!(k.pipeline_depth(), 3);
+        assert!(matches!(k.base(), SchedulerKind::Dynamic { packages: 150 }));
+
+        let k = parse_kind("static-rev+pipe").unwrap();
+        assert_eq!(k.label(), "Static rev+pipe");
+
+        assert!(parse_kind("+pipe").is_none(), "needs a base spec");
+        assert!(parse_kind("hguided+pipe1").is_none(), "depth < 2 is not a pipeline");
+        assert!(parse_kind("hguided+pipex").is_none());
+    }
+
+    #[test]
+    fn base_unwraps_nesting() {
+        let k = SchedulerKind::dynamic(7).pipelined(2).pipelined(3);
+        assert!(matches!(k.base(), SchedulerKind::Dynamic { packages: 7 }));
+        assert_eq!(k.pipeline_depth(), 3);
     }
 }

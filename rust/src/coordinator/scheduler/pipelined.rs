@@ -1,0 +1,98 @@
+//! `Pipelined` — a strategy *wrapper* that composes package pipelining
+//! with any base scheduling algorithm.
+//!
+//! The wrapper delegates every sizing decision to the inner strategy, so
+//! all partitioning invariants (disjoint granule-aligned ranges exactly
+//! covering `[0, gws)`) are inherited unchanged — the property tests
+//! assert this for all three paper schedulers. What it adds is the
+//! *pipeline depth*: the engine reads it and keeps each device `depth`
+//! packages ahead, so workers overlap the next package's H2D transfer
+//! with the current package's compute (see the worker docs in
+//! `coordinator::device`).
+//!
+//! Interaction with adaptive strategies: prefetching asks the inner
+//! scheduler for a package *earlier* than assign-on-completion would
+//! have, so Dynamic/HGuided size decisions see a slightly larger pending
+//! set. This trades a little end-of-run balance for transfer overlap and
+//! a shorter assign round-trip — the paper's follow-up (arXiv:2010.12607)
+//! shows the trade wins on short, transfer-heavy loads.
+
+use crate::coordinator::work::Range;
+
+use super::{SchedDevice, Scheduler};
+
+/// Composes a base strategy with a per-device package pipeline.
+pub struct Pipelined {
+    inner: Box<dyn Scheduler>,
+    depth: usize,
+}
+
+impl Pipelined {
+    /// Wrap `inner`, keeping each device up to `depth` packages ahead
+    /// (`depth` is clamped to at least 2 — 1 would be the blocking loop).
+    pub fn new(inner: Box<dyn Scheduler>, depth: usize) -> Self {
+        Self { inner, depth: depth.max(2) }
+    }
+}
+
+impl Scheduler for Pipelined {
+    fn name(&self) -> String {
+        format!("{}+pipe", self.inner.name())
+    }
+
+    fn start(&mut self, total_granules: usize, granule: usize, devices: &[SchedDevice]) {
+        self.inner.start(total_granules, granule, devices);
+    }
+
+    fn next_package(&mut self, dev: usize) -> Option<Range> {
+        self.inner.next_package(dev)
+    }
+
+    fn pipeline_depth(&self) -> usize {
+        self.depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Dynamic, HGuided, SchedulerKind, Static};
+    use super::*;
+
+    fn devs(n: usize) -> Vec<SchedDevice> {
+        (0..n).map(|i| SchedDevice { name: format!("d{i}"), power: 0.5 + i as f64 }).collect()
+    }
+
+    #[test]
+    fn delegates_ranges_unchanged() {
+        let mut plain = Dynamic::new(10);
+        let mut piped = Pipelined::new(Box::new(Dynamic::new(10)), 2);
+        plain.start(100, 8, &devs(2));
+        piped.start(100, 8, &devs(2));
+        loop {
+            let a = plain.next_package(0);
+            let b = piped.next_package(0);
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn reports_depth_and_name() {
+        let p = Pipelined::new(Box::new(Static::new(None, false)), 3);
+        assert_eq!(p.pipeline_depth(), 3);
+        assert_eq!(p.name(), "Static+pipe");
+        let p = Pipelined::new(Box::new(HGuided::new(2.0, 2)), 0);
+        assert_eq!(p.pipeline_depth(), 2, "clamped up to double-buffering");
+    }
+
+    #[test]
+    fn kind_builds_wrapped_strategy() {
+        let kind = SchedulerKind::dynamic(50).pipelined(2);
+        let s = kind.build();
+        assert_eq!(s.name(), "Dynamic 50+pipe");
+        assert_eq!(s.pipeline_depth(), 2);
+        assert_eq!(kind.label(), "Dynamic 50+pipe");
+    }
+}

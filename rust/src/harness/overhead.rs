@@ -1,17 +1,29 @@
-//! Figures 7 & 8 — EngineCL-vs-native overhead on a single device.
+//! Figures 7 & 8 — EngineCL-vs-native overhead on a single device, plus
+//! the blocking-vs-pipelined engine comparison.
 //!
 //! The paper's measurement protocol times the *whole program lifecycle*
-//! ("including initialization, management and releasing", §7.3), so both
+//! ("including initialization, management and releasing", §7.3), so all
 //! sides here do the same work per repetition:
 //!
-//!  * native:  create a PJRT client, compile the needed executables,
-//!             upload inputs, execute, collect results, release — a
-//!             hand-driven `ChunkExecutor` (what `examples/native/*` do).
-//!  * EngineCL: a fresh engine with simulation off (`Configurator::raw()`)
-//!             and lazy compilation (same executables compiled as native).
+//!  * native:    create an executor, compile the needed executables,
+//!               upload inputs, execute, collect results, release — a
+//!               hand-driven `ChunkExecutor` (what `examples/native/*`
+//!               do over the raw runtime).
+//!  * EngineCL:  a fresh engine with simulation off (`Configurator::
+//!               raw()`) and lazy compilation (same executables compiled
+//!               as native), Static schedule, blocking loop — the
+//!               paper's protocol; `overhead_pct` is its number.
+//!  * pipe base / EngineCL+pipe: the same engine on a fine-grained
+//!               Dynamic schedule, blocking (`pipeline(1)`) vs
+//!               double-buffered (`pipeline(2)`). Same schedule, same
+//!               package count — the only delta is the pipeline, so
+//!               this pair isolates what prefetch + overlapped staging
+//!               buys: package *n+1*'s H2D hides inside package *n*'s
+//!               window and the assign round-trip leaves the critical
+//!               path (arXiv:2010.12607's sub-second-load optimization).
 //!
-//! The difference is therefore pure coordination cost: worker threads,
-//! channels, scheduler, introspection, result merge.
+//! The native/EngineCL difference is pure coordination cost: worker
+//! threads, channels, scheduler, introspection, result merge.
 
 use std::time::{Duration, Instant};
 
@@ -28,15 +40,27 @@ pub struct OverheadPoint {
     pub bench: String,
     pub gws: usize,
     pub native: Duration,
+    /// The paper's measurement: blocking engine, Static schedule
+    /// (one package).
     pub enginecl: Duration,
-    /// (T_ECL - T_OCL) / T_OCL * 100 (paper §7.3).
+    /// Blocking engine on the multi-package Dynamic schedule — the
+    /// like-for-like baseline for `pipelined` (same schedule, same
+    /// package count, only the pipeline differs).
+    pub pipe_base: Duration,
+    /// Same Dynamic schedule, pipeline depth 2.
+    pub pipelined: Duration,
+    /// (T_ECL - T_OCL) / T_OCL * 100 (paper §7.3), Static blocking.
     pub overhead_pct: f64,
+    /// Multi-package blocking engine vs native.
+    pub pipe_base_pct: f64,
+    /// Multi-package pipelined engine vs native.
+    pub pipelined_pct: f64,
     pub native_std: f64,
     pub ecl_std: f64,
 }
 
 /// Full-lifecycle native time for a `gws`-item prefix of `bench`:
-/// client + compile + upload + execute + release, per repetition.
+/// executor + compile + upload + execute + release, per repetition.
 pub fn native_time(
     reg: &ArtifactRegistry,
     bench: &str,
@@ -65,15 +89,18 @@ pub fn native_time(
     Ok(summary(&times))
 }
 
-/// Full-lifecycle EngineCL time on one device, simulation off, lazy
-/// compilation (so both sides build the same executables per rep).
-pub fn enginecl_time(
+/// Full-lifecycle EngineCL time on one device with the given scheduler
+/// and pipeline depth, simulation off, lazy compilation (so every side
+/// builds the same executables per rep).
+fn enginecl_time_with(
     reg: &ArtifactRegistry,
     node: &NodeConfig,
     bench: &str,
     device: usize,
     gws: usize,
     reps: usize,
+    scheduler: SchedulerKind,
+    depth: usize,
 ) -> Result<(Duration, f64)> {
     let mut times = Vec::with_capacity(reps);
     for rep in 0..=reps {
@@ -82,11 +109,12 @@ pub fn enginecl_time(
             node,
             bench,
             vec![DeviceSpec::new(device)],
-            SchedulerKind::static_default(),
+            scheduler.clone(),
             Some(gws),
         )?;
         *engine.configurator() = crate::coordinator::Configurator::raw();
         engine.configurator().eager_compile = false;
+        engine.pipeline(depth);
         let t0 = Instant::now();
         engine.run().map_err(|e| anyhow::anyhow!("{e}"))?;
         if rep > 0 {
@@ -96,13 +124,54 @@ pub fn enginecl_time(
     Ok(summary(&times))
 }
 
+/// Blocking-engine time under the paper's measurement protocol
+/// (Static schedule: one package covering the whole prefix).
+pub fn enginecl_time(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    bench: &str,
+    device: usize,
+    gws: usize,
+    reps: usize,
+) -> Result<(Duration, f64)> {
+    enginecl_time_with(reg, node, bench, device, gws, reps, SchedulerKind::static_default(), 1)
+}
+
+/// Engine time on the fine-grained Dynamic schedule the pipeline
+/// comparison uses (short loads still get multiple packages), with the
+/// given pipeline depth (1 = blocking baseline, 2 = double-buffered).
+pub fn enginecl_time_with_depth(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    bench: &str,
+    device: usize,
+    gws: usize,
+    reps: usize,
+    depth: usize,
+) -> Result<(Duration, f64)> {
+    let manifest = reg.bench(bench)?.clone();
+    let packages = (gws / manifest.granule).clamp(1, 8);
+    enginecl_time_with(
+        reg,
+        node,
+        bench,
+        device,
+        gws,
+        reps,
+        SchedulerKind::dynamic(packages),
+        depth,
+    )
+}
+
 fn summary(times: &[f64]) -> (Duration, f64) {
     let med = crate::util::stats::median(times);
     let std = crate::util::stats::stddev(times);
     (Duration::from_secs_f64(med), std)
 }
 
-/// One (bench, device, gws) overhead cell.
+/// One (bench, device, gws) overhead cell: native vs the paper's
+/// Static blocking engine (`overhead_pct`), plus the blocking-vs-
+/// pipelined pair on the multi-package Dynamic schedule.
 pub fn measure(
     reg: &ArtifactRegistry,
     node: &NodeConfig,
@@ -113,14 +182,19 @@ pub fn measure(
 ) -> Result<OverheadPoint> {
     let (native, native_std) = native_time(reg, bench, gws, reps)?;
     let (ecl, ecl_std) = enginecl_time(reg, node, bench, device, gws, reps)?;
-    let overhead_pct =
-        (ecl.as_secs_f64() - native.as_secs_f64()) / native.as_secs_f64() * 100.0;
+    let (base, _) = enginecl_time_with_depth(reg, node, bench, device, gws, reps, 1)?;
+    let (piped, _) = enginecl_time_with_depth(reg, node, bench, device, gws, reps, 2)?;
+    let pct = |t: Duration| (t.as_secs_f64() - native.as_secs_f64()) / native.as_secs_f64() * 100.0;
     Ok(OverheadPoint {
         bench: bench.to_string(),
         gws,
         native,
         enginecl: ecl,
-        overhead_pct,
+        pipe_base: base,
+        pipelined: piped,
+        overhead_pct: pct(ecl),
+        pipe_base_pct: pct(base),
+        pipelined_pct: pct(piped),
         native_std,
         ecl_std,
     })

@@ -51,6 +51,52 @@ pub fn geomean_efficiency_by_scheduler(eval: &NodeEvaluation) -> Vec<(String, f6
         .collect()
 }
 
+/// One blocking-vs-pipelined pairing from an evaluation grid.
+#[derive(Debug, Clone)]
+pub struct PipelineGain {
+    pub bench: String,
+    /// Base scheduler label (without the `+pipe` suffix).
+    pub scheduler: String,
+    pub blocking_wall: std::time::Duration,
+    pub pipelined_wall: std::time::Duration,
+    pub blocking_eff: f64,
+    pub pipelined_eff: f64,
+}
+
+impl PipelineGain {
+    /// Wall-time change, pipelined vs blocking (negative = faster).
+    pub fn wall_delta_pct(&self) -> f64 {
+        let b = self.blocking_wall.as_secs_f64();
+        if b <= 0.0 {
+            return 0.0;
+        }
+        (self.pipelined_wall.as_secs_f64() - b) / b * 100.0
+    }
+}
+
+/// Pair every `X+pipe` cell in an evaluation with its blocking `X` cell
+/// on the same bench — the harness view of what the package pipeline
+/// buys each scheduler.
+pub fn pipeline_gains(cells: &[CoexecMetrics]) -> Vec<PipelineGain> {
+    let mut out = Vec::new();
+    for piped in cells.iter().filter(|c| c.scheduler.ends_with("+pipe")) {
+        let base = piped.scheduler.trim_end_matches("+pipe");
+        if let Some(blocking) =
+            cells.iter().find(|c| c.bench == piped.bench && c.scheduler == base)
+        {
+            out.push(PipelineGain {
+                bench: piped.bench.clone(),
+                scheduler: base.to_string(),
+                blocking_wall: blocking.wall,
+                pipelined_wall: piped.wall,
+                blocking_eff: blocking.efficiency,
+                pipelined_eff: piped.efficiency,
+            });
+        }
+    }
+    out
+}
+
 /// Work-share rows (Figure 12): bench, scheduler, one share per device.
 pub fn worksize_rows(eval: &NodeEvaluation) -> Vec<(String, String, Vec<f64>)> {
     eval.cells
@@ -90,6 +136,20 @@ mod tests {
             ],
             solos: BTreeMap::new(),
         }
+    }
+
+    #[test]
+    fn pipeline_gains_pair_up() {
+        let mut e = eval();
+        let mut piped = cell("a", "HGuided+pipe", 0.92);
+        piped.wall = Duration::from_millis(8);
+        e.cells.push(piped);
+        let gains = pipeline_gains(&e.cells);
+        assert_eq!(gains.len(), 1);
+        let g = &gains[0];
+        assert_eq!(g.bench, "a");
+        assert_eq!(g.scheduler, "HGuided");
+        assert!(g.wall_delta_pct() < 0.0, "pipelined cell was faster");
     }
 
     #[test]

@@ -180,6 +180,9 @@ mod tests {
                         end_item: i * 10 + 10,
                         start: ms(0),
                         end: ms(*c),
+                        h2d_start: ms(0),
+                        h2d_end: ms(0),
+                        exec_start: ms(0),
                         raw_exec: ms(1),
                         launches: 1,
                     }],

@@ -1,32 +1,42 @@
 //! # enginecl — EngineCL reproduced on a Rust + JAX + Pallas stack
 //!
-//! A faithful reproduction of *EngineCL: Usability and Performance in
-//! Heterogeneous Computing* (Nozal, Bosque, Beivide — FGCS 2020), built as
-//! a three-layer system:
+//! A reproduction of *EngineCL: Usability and Performance in
+//! Heterogeneous Computing* (Nozal, Bosque, Beivide — FGCS 2020), built
+//! as a three-layer system:
 //!
 //! * **L1** — Pallas kernels (the paper's five OpenCL benchmarks),
 //!   AOT-lowered at build time (`python/compile/kernels/`).
 //! * **L2** — JAX chunk wrappers per (benchmark, chunk size), exported as
 //!   HLO text artifacts (`python/compile/model.py`, `aot.py`).
 //! * **L3** — this crate: the EngineCL coordinator. Tiered API
-//!   ([`Engine`]/[`Program`] = Tier-1; [`DeviceSpec`], [`Configurator`],
-//!   scheduler selection = Tier-2; device worker threads, PJRT runtime,
-//!   work decomposition = Tier-3), with the paper's three pluggable
-//!   schedulers (Static / Dynamic / HGuided) and the Introspector.
+//!   ([`Engine`](coordinator::Engine)/[`Program`](coordinator::Program)
+//!   = Tier-1; [`DeviceSpec`](coordinator::DeviceSpec),
+//!   [`Configurator`](coordinator::Configurator), scheduler selection =
+//!   Tier-2; device worker threads, the runtime backends, work
+//!   decomposition = Tier-3), with the paper's three
+//!   pluggable schedulers (Static / Dynamic / HGuided), a composable
+//!   package **pipeline** (`Engine::pipeline(depth)` / the `+pipe`
+//!   scheduler suffix) that overlaps host↔device transfers with compute,
+//!   and the Introspector.
 //!
 //! Python never runs on the request path: `make artifacts` produces
-//! self-contained HLO text + golden data; this crate loads and executes
-//! them through PJRT (`xla` crate).
+//! self-contained HLO text + golden data which the `pjrt` feature
+//! executes through PJRT (`xla` crate). Without that feature (the
+//! offline default) a pure-Rust native executor runs the same kernels
+//! over the same scheduling machinery, and a synthetic artifact registry
+//! generates the golden workloads in-process — `cargo test` and every
+//! example work with no Python and no network.
 //!
-//! ```no_run
+//! ```
 //! use enginecl::prelude::*;
 //!
 //! let mut engine = Engine::new()?;
 //! engine.use_mask(DeviceMask::All);
 //! engine.scheduler(SchedulerKind::hguided());
+//! engine.pipeline(2); // overlap package n+1's upload with package n
 //!
 //! let mut program = Program::new();
-//! program.kernel("binomial", "binomial_opts");
+//! program.kernel("binomial", "binomial");
 //! let reg = engine.registry().clone();
 //! let bench = reg.bench("binomial")?.clone();
 //! for buf in reg.golden_inputs(&bench)? {

@@ -18,6 +18,9 @@ USAGE:
   enginecl run <bench> [--node N] [--devices 0,1,2|all|gpu|cpu]
                         [--scheduler static|static-rev|dynamic:N|hguided]
                         [--gws N] [--timeline] [--csv]
+                        (any scheduler spec takes a +pipe[N] suffix to
+                         enable the transfer/compute pipeline, e.g.
+                         --scheduler hguided+pipe or dynamic:150+pipe3)
   enginecl solo <bench> [--node N]         per-device solo times + S_max
   enginecl overhead <bench> [--device I] [--reps N]
   enginecl eval [--node N] [--reps N]      balance/speedup/efficiency grid
@@ -169,15 +172,21 @@ fn overhead_cmd(args: &Args) -> Result<()> {
     let reps = args.get_usize("reps", 5);
     let ladder = runs::size_ladder(&reg, bench, 5)?;
     println!("bench={bench} device={} reps={reps}", node.devices[device].name);
-    println!("{:>9} {:>12} {:>12} {:>9}", "gws", "native(ms)", "enginecl(ms)", "ovh(%)");
+    println!(
+        "{:>9} {:>12} {:>12} {:>9} {:>12} {:>11} {:>9}",
+        "gws", "native(ms)", "enginecl(ms)", "ovh(%)", "dyn-base(ms)", "+pipe(ms)", "Δpipe(%)"
+    );
     for gws in ladder {
         let p = overhead::measure(&reg, &node, bench, device, gws, reps)?;
         println!(
-            "{:>9} {:>12.2} {:>12.2} {:>9.2}",
+            "{:>9} {:>12.2} {:>12.2} {:>9.2} {:>12.2} {:>11.2} {:>9.2}",
             p.gws,
             p.native.as_secs_f64() * 1e3,
             p.enginecl.as_secs_f64() * 1e3,
-            p.overhead_pct
+            p.overhead_pct,
+            p.pipe_base.as_secs_f64() * 1e3,
+            p.pipelined.as_secs_f64() * 1e3,
+            p.pipelined_pct - p.pipe_base_pct
         );
     }
     Ok(())

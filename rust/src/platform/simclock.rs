@@ -56,6 +56,26 @@ impl TimeScaler {
         Duration::from_secs_f64(t)
     }
 
+    /// Target duration for a *pipelined* package: the device computes
+    /// while the host DMA engine stages the next package's H2D transfer,
+    /// so the package window is the *maximum* of stretched compute and
+    /// the overlapped upload, plus the result write-back (`d2h`), which
+    /// stays serial at host speed (the merge buffers are host memory).
+    ///
+    /// This is the honest overlap model: a transfer can hide behind
+    /// compute but never make it faster, and a transfer longer than the
+    /// compute window stalls the pipeline (the package cannot complete
+    /// before its successor's upload finished occupying the bus).
+    pub fn target_overlapped(
+        &mut self,
+        raw: Duration,
+        launches: u32,
+        overlapped_h2d: Duration,
+        d2h: Duration,
+    ) -> Duration {
+        self.target(raw, launches).max(overlapped_h2d) + d2h
+    }
+
     /// Sleep until `started + target` (no-op if already past — i.e. the
     /// physical wait exceeded the simulated duration, which the
     /// BASE_SLOWDOWN choice makes rare).
@@ -105,6 +125,26 @@ mod tests {
             let t = s.target(Duration::from_millis(100), 1).as_secs_f64();
             assert!(t >= base * 0.94 && t <= base * 1.06);
         }
+    }
+
+    #[test]
+    fn overlapped_target_hides_short_transfers() {
+        let mut s = TimeScaler::new(&prof(1.0), 1);
+        let exec = Duration::from_millis(10);
+        let blocking = s.target(exec, 1) + Duration::from_millis(3) + Duration::from_millis(1);
+        let short = s.target_overlapped(exec, 1, Duration::from_millis(3), Duration::from_millis(1));
+        // A 3ms upload hides entirely behind 40ms stretched compute.
+        assert!(short < blocking, "{short:?} !< {blocking:?}");
+        assert_eq!(short, s.target(exec, 1) + Duration::from_millis(1));
+    }
+
+    #[test]
+    fn overlapped_target_stalls_on_long_transfers() {
+        let mut s = TimeScaler::new(&prof(1.0), 1);
+        let exec = Duration::from_millis(1);
+        let long_h2d = Duration::from_millis(500);
+        let t = s.target_overlapped(exec, 1, long_h2d, Duration::ZERO);
+        assert_eq!(t, long_h2d, "transfer-bound package is bus-limited");
     }
 
     #[test]

@@ -1,8 +1,18 @@
-//! Artifact registry — the Rust view of `artifacts/manifest.json`.
+//! Artifact registry — the Rust view of `artifacts/manifest.json`, plus a
+//! synthetic in-memory fallback so the crate is fully usable offline.
 //!
 //! The manifest is the contract between the Python AOT step (L1/L2) and
 //! the Rust coordinator (L3): problem sizes, scheduling granules, buffer
 //! layouts, baked scalar args and the per-chunk-size HLO files.
+//!
+//! When no `artifacts/` directory exists (no Python toolchain ran),
+//! [`ArtifactRegistry::discover`] falls back to
+//! [`ArtifactRegistry::synthetic`]: the same seven benchmarks at reduced
+//! problem sizes, with
+//! deterministic generated inputs and golden outputs computed by the
+//! native kernels in [`super::kernels`]. Everything above the runtime —
+//! engine, schedulers, harnesses, tests — behaves identically against
+//! either source.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -10,6 +20,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::util::json::Json;
+use crate::util::rng::XorShift;
 
 use super::host::{read_f32_file, HostBuf};
 
@@ -22,7 +33,8 @@ pub struct BufferEntry {
     /// Flattened elements contributed per work-item (0 for broadcast
     /// inputs that are not partitioned, e.g. filter weights, scenes).
     pub elems_per_item: usize,
-    /// Golden data file, relative to the artifact root.
+    /// Golden data file, relative to the artifact root (synthetic
+    /// registries generate data instead; the name is informational).
     pub file: String,
 }
 
@@ -39,7 +51,7 @@ pub struct BenchManifest {
     pub irregular: bool,
     /// Paper Table 2 out-pattern (out indexes : work-items), API metadata.
     pub out_pattern: (usize, usize),
-    /// Kernel family providing the HLO files (ray2/ray3 alias ray1).
+    /// Kernel family providing the executables (ray2/ray3 alias ray1).
     pub kernel: String,
     pub scalars: BTreeMap<String, f64>,
     pub inputs: Vec<BufferEntry>,
@@ -59,11 +71,13 @@ impl BenchManifest {
     }
 }
 
-/// Registry over the artifact directory.
+/// Registry over the artifact directory (or the synthetic workloads).
 #[derive(Debug, Clone)]
 pub struct ArtifactRegistry {
     pub root: PathBuf,
     pub benches: BTreeMap<String, BenchManifest>,
+    /// True when this registry generates data instead of reading files.
+    pub synthetic: bool,
 }
 
 fn parse_buffer(j: &Json) -> Result<BufferEntry> {
@@ -138,13 +152,33 @@ impl ArtifactRegistry {
         for (name, bj) in j.get("benches").and_then(Json::as_obj).context("benches")? {
             benches.insert(name.clone(), parse_bench(name, bj)?);
         }
-        Ok(ArtifactRegistry { root, benches })
+        Ok(ArtifactRegistry { root, benches, synthetic: false })
     }
 
-    /// Locate the artifact dir: $ECL_ARTIFACTS, ./artifacts, or
-    /// CARGO_MANIFEST_DIR/artifacts.
+    /// Locate the artifact dir: `$ECL_ARTIFACTS` (the literal value
+    /// `synthetic` forces the generated workloads), `./artifacts`,
+    /// `CARGO_MANIFEST_DIR/artifacts`, else the synthetic registry.
+    ///
+    /// The PJRT backend executes on-disk HLO artifacts, so under the
+    /// `pjrt` feature the synthetic fallback is an error, not a silent
+    /// substitution — the old actionable "run `make artifacts`" message
+    /// is preserved there.
     pub fn discover() -> Result<Self> {
+        let synthetic_or_bail = || -> Result<Self> {
+            if cfg!(feature = "pjrt") {
+                anyhow::bail!(
+                    "no artifacts/manifest.json found; run `make artifacts` \
+                     (the pjrt backend executes HLO artifacts and cannot use \
+                     the synthetic registry)"
+                )
+            } else {
+                Ok(Self::synthetic())
+            }
+        };
         if let Ok(p) = std::env::var("ECL_ARTIFACTS") {
+            if p == "synthetic" {
+                return synthetic_or_bail();
+            }
             return Self::load(p);
         }
         for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
@@ -152,7 +186,17 @@ impl ArtifactRegistry {
                 return Self::load(cand);
             }
         }
-        anyhow::bail!("no artifacts/manifest.json found; run `make artifacts`")
+        synthetic_or_bail()
+    }
+
+    /// The built-in workload set: the paper's seven benchmarks at reduced
+    /// problem sizes, fully generated in-process (no files, no Python).
+    pub fn synthetic() -> Self {
+        let mut benches = BTreeMap::new();
+        for b in synthetic_benches() {
+            benches.insert(b.name.clone(), b);
+        }
+        ArtifactRegistry { root: PathBuf::from("<synthetic>"), benches, synthetic: true }
     }
 
     pub fn bench(&self, name: &str) -> Result<&BenchManifest> {
@@ -165,8 +209,11 @@ impl ArtifactRegistry {
         self.benches.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Load the golden inputs for a bench (deterministic workload from aot).
+    /// Load the golden inputs for a bench (deterministic workload).
     pub fn golden_inputs(&self, bench: &BenchManifest) -> Result<Vec<HostBuf>> {
+        if self.synthetic {
+            return Ok(synthetic_inputs(bench));
+        }
         bench
             .inputs
             .iter()
@@ -174,13 +221,234 @@ impl ArtifactRegistry {
             .collect()
     }
 
-    /// Load the golden (oracle) outputs for a bench.
+    /// Load the golden (oracle) outputs for a bench. Synthetic registries
+    /// compute them with the native kernels; disk registries read the
+    /// files the Python AOT step wrote.
     pub fn golden_outputs(&self, bench: &BenchManifest) -> Result<Vec<HostBuf>> {
+        if self.synthetic {
+            let inputs: Vec<Vec<f32>> = synthetic_inputs(bench)
+                .into_iter()
+                .map(|b| b.as_f32().unwrap().to_vec())
+                .collect();
+            let mut outs: Vec<Vec<f32>> = bench
+                .outputs
+                .iter()
+                .map(|o| vec![0.0f32; bench.n * o.elems_per_item])
+                .collect();
+            super::kernels::compute_range(bench, &inputs, 0, bench.n, &mut outs)?;
+            return Ok(outs.into_iter().map(HostBuf::F32).collect());
+        }
         bench
             .outputs
             .iter()
             .map(|b| Ok(HostBuf::F32(read_f32_file(&self.root.join(&b.file))?)))
             .collect()
+    }
+}
+
+// ---- synthetic workloads ---------------------------------------------
+
+fn ladder(granule: usize, n: usize) -> BTreeMap<usize, String> {
+    // granule * 4^k up to the full size, plus the full size — the same
+    // ladder the AOT step compiles (model.py chunk_sizes()).
+    let mut chunks = BTreeMap::new();
+    let mut s = granule;
+    while s < n {
+        chunks.insert(s, format!("synthetic/c{s}"));
+        s *= 4;
+    }
+    chunks.insert(n, format!("synthetic/c{n}"));
+    chunks
+}
+
+fn buf(name: &str, elems: usize, elems_per_item: usize) -> BufferEntry {
+    BufferEntry {
+        name: name.into(),
+        elems,
+        elems_per_item,
+        file: format!("synthetic/{name}.f32"),
+    }
+}
+
+fn scalars(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+/// Reduced-size counterparts of `python/compile/model.py`'s BENCHES —
+/// small enough that debug-mode test runs stay fast, large enough that
+/// every scheduler produces multi-package co-executions.
+fn synthetic_benches() -> Vec<BenchManifest> {
+    let mut out = Vec::new();
+
+    // Gaussian: 128x128 image, 9-tap separable blur. Regular.
+    let (gw, gh) = (128usize, 128usize);
+    out.push(BenchManifest {
+        name: "gaussian".into(),
+        n: gw * gh,
+        granule: 4 * gw,
+        irregular: false,
+        out_pattern: (1, 1),
+        kernel: "gaussian".into(),
+        scalars: scalars(&[("width", gw as f64), ("height", gh as f64), ("ksize", 9.0)]),
+        inputs: vec![buf("img", gw * gh, 1), buf("filt", 9, 0)],
+        outputs: vec![buf("blur", gw * gh, 1)],
+        chunks: ladder(4 * gw, gw * gh),
+    });
+
+    // Binomial: 1024 options on a 126-step lattice. Regular, compute-heavy.
+    let bn = 1024usize;
+    out.push(BenchManifest {
+        name: "binomial".into(),
+        n: bn,
+        granule: 64,
+        irregular: false,
+        out_pattern: (1, 255),
+        kernel: "binomial".into(),
+        scalars: scalars(&[("steps", 126.0)]),
+        inputs: vec![buf("prices", bn, 1)],
+        outputs: vec![buf("value", bn, 1)],
+        chunks: ladder(64, bn),
+    });
+
+    // Mandelbrot: 128x128 pixels over a mixed interior/exterior view.
+    let (mw, mh) = (128usize, 128usize);
+    out.push(BenchManifest {
+        name: "mandelbrot".into(),
+        n: mw * mh,
+        granule: 256,
+        irregular: true,
+        out_pattern: (4, 1),
+        kernel: "mandelbrot".into(),
+        scalars: scalars(&[
+            ("width", mw as f64),
+            ("height", mh as f64),
+            ("maxiter", 128.0),
+            ("x0", -2.0),
+            ("y0", -1.25),
+            ("x1", 0.5),
+            ("y1", 1.25),
+        ]),
+        inputs: vec![],
+        outputs: vec![buf("iters", mw * mh, 1)],
+        chunks: ladder(256, mw * mh),
+    });
+
+    // NBody: 1024 bodies, one integration step. Regular, O(n^2).
+    let nb = 1024usize;
+    out.push(BenchManifest {
+        name: "nbody".into(),
+        n: nb,
+        granule: 256,
+        irregular: false,
+        out_pattern: (1, 1),
+        kernel: "nbody".into(),
+        scalars: scalars(&[("dt", 0.005), ("eps2", 50.0), ("bodies", nb as f64)]),
+        inputs: vec![buf("pos", nb * 4, 4), buf("vel", nb * 4, 4)],
+        outputs: vec![buf("opos", nb * 4, 4), buf("ovel", nb * 4, 4)],
+        chunks: ladder(256, nb),
+    });
+
+    // Ray: 96x96 pixels, 16 spheres, three scenes of growing complexity.
+    let (rw, rh, rns) = (96usize, 96usize, 16usize);
+    for which in 1..=3u32 {
+        out.push(BenchManifest {
+            name: format!("ray{which}"),
+            n: rw * rh,
+            granule: 256,
+            irregular: true,
+            out_pattern: (1, 1),
+            kernel: "ray1".into(),
+            scalars: scalars(&[
+                ("width", rw as f64),
+                ("height", rh as f64),
+                ("nspheres", rns as f64),
+                ("maxbounce", 8.0),
+                ("scene", which as f64),
+            ]),
+            inputs: vec![buf("spheres", rns * 8, 0)],
+            outputs: vec![buf("rgba", rw * rh * 4, 4)],
+            chunks: ladder(256, rw * rh),
+        });
+    }
+    out
+}
+
+/// Deterministic generated inputs, mirroring `model.py`'s distributions
+/// (different RNG, same shapes and ranges).
+fn synthetic_inputs(bench: &BenchManifest) -> Vec<HostBuf> {
+    match bench.kernel.as_str() {
+        "gaussian" => {
+            let mut r = XorShift::new(11);
+            let img: Vec<f32> =
+                (0..bench.inputs[0].elems).map(|_| r.next_f32() * 255.0).collect();
+            let k = bench.scalars["ksize"] as usize;
+            let sigma = 1.5f32;
+            let mut filt: Vec<f32> = (0..k)
+                .map(|i| {
+                    let ax = i as f32 - (k / 2) as f32;
+                    (-(ax * ax) / (2.0 * sigma * sigma)).exp()
+                })
+                .collect();
+            let sum: f32 = filt.iter().sum();
+            for f in &mut filt {
+                *f /= sum;
+            }
+            vec![HostBuf::F32(img), HostBuf::F32(filt)]
+        }
+        "binomial" => {
+            let mut r = XorShift::new(12);
+            vec![HostBuf::F32((0..bench.n).map(|_| r.next_f32()).collect())]
+        }
+        "mandelbrot" => vec![],
+        "nbody" => {
+            let mut r = XorShift::new(13);
+            let n = bench.n;
+            let mut pos = Vec::with_capacity(n * 4);
+            let mut vel = Vec::with_capacity(n * 4);
+            for _ in 0..n {
+                pos.push((r.next_f32() - 0.5) * 200.0);
+                pos.push((r.next_f32() - 0.5) * 200.0);
+                pos.push((r.next_f32() - 0.5) * 200.0);
+                pos.push(r.next_f32() * 10.0 + 1.0); // mass
+            }
+            for _ in 0..n {
+                vel.push((r.next_f32() - 0.5) * 2.0);
+                vel.push((r.next_f32() - 0.5) * 2.0);
+                vel.push((r.next_f32() - 0.5) * 2.0);
+                vel.push(0.0);
+            }
+            vec![HostBuf::F32(pos), HostBuf::F32(vel)]
+        }
+        _ => {
+            // ray1/2/3: scene geometry — model.py's make_scene(which).
+            let which = bench.scalars.get("scene").copied().unwrap_or(1.0) as u32;
+            let ns = bench.scalars["nspheres"] as usize;
+            let mut r = XorShift::new(100 + which as u64);
+            let mut s = vec![0.0f32; ns * 8];
+            // Ground-ish large sphere.
+            s[..8].copy_from_slice(&[
+                0.0,
+                -103.0,
+                10.0,
+                100.0,
+                0.6,
+                0.6,
+                0.6,
+                0.05 * which as f32,
+            ]);
+            let spread = 14.0 / which as f32;
+            for i in 1..ns {
+                s[i * 8] = (r.next_f32() - 0.5) * spread;
+                s[i * 8 + 1] = (r.next_f32() - 0.5) * spread * 0.5;
+                s[i * 8 + 2] = 6.0 + r.next_f32() * 10.0 / which as f32;
+                s[i * 8 + 3] = 0.6 + r.next_f32() * 1.2;
+                s[i * 8 + 4] = r.next_f32() * 0.9 + 0.1;
+                s[i * 8 + 5] = r.next_f32() * 0.9 + 0.1;
+                s[i * 8 + 6] = r.next_f32() * 0.9 + 0.1;
+                s[i * 8 + 7] = (r.next_f32() * 0.3 * which as f32).min(0.9);
+            }
+            vec![HostBuf::F32(s)]
+        }
     }
 }
 
@@ -211,6 +479,7 @@ mod tests {
     #[test]
     fn parses_manifest() {
         let reg = load_mini();
+        assert!(!reg.synthetic);
         let b = reg.bench("toy").unwrap();
         assert_eq!(b.n, 1024);
         assert_eq!(b.granule, 128);
@@ -234,5 +503,45 @@ mod tests {
     fn unknown_bench_errors() {
         let reg = load_mini();
         assert!(reg.bench("nope").is_err());
+    }
+
+    #[test]
+    fn synthetic_has_all_paper_benches() {
+        let reg = ArtifactRegistry::synthetic();
+        for name in ["gaussian", "binomial", "mandelbrot", "nbody", "ray1", "ray2", "ray3"] {
+            let b = reg.bench(name).unwrap();
+            assert!(b.n % b.granule == 0, "{name}: n granule-aligned");
+            assert!(b.chunks.contains_key(&b.granule), "{name}: granule chunk");
+            assert!(b.chunks.contains_key(&b.n), "{name}: full-size chunk");
+        }
+    }
+
+    #[test]
+    fn synthetic_inputs_match_manifest_shapes() {
+        let reg = ArtifactRegistry::synthetic();
+        for b in reg.benches.values() {
+            let ins = reg.golden_inputs(b).unwrap();
+            assert_eq!(ins.len(), b.inputs.len(), "{}", b.name);
+            for (spec, data) in b.inputs.iter().zip(&ins) {
+                assert_eq!(data.len(), spec.elems, "{}.{}", b.name, spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_inputs_deterministic() {
+        let reg = ArtifactRegistry::synthetic();
+        let b = reg.bench("nbody").unwrap();
+        let a = reg.golden_inputs(b).unwrap();
+        let c = reg.golden_inputs(b).unwrap();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn ray_scenes_differ() {
+        let reg = ArtifactRegistry::synthetic();
+        let s1 = reg.golden_inputs(reg.bench("ray1").unwrap()).unwrap();
+        let s3 = reg.golden_inputs(reg.bench("ray3").unwrap()).unwrap();
+        assert_ne!(s1, s3);
     }
 }

@@ -1,0 +1,150 @@
+//! Backend-neutral execution types shared by the PJRT executor and the
+//! native (pure-Rust) executor: package timing breakdown and the greedy
+//! chunk decomposition both backends plan with.
+//!
+//! The timing split matters for the pipelined engine: `h2d` (argument
+//! staging / input upload) is what the double-buffered worker overlaps
+//! with the previous package's compute, `exec` is device compute that the
+//! simulated clock stretches per device profile, and `d2h` (result
+//! write-back into the host merge buffers) stays serial at host speed.
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::artifact::BenchManifest;
+
+/// Timing detail for one package execution.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecTiming {
+    /// Pure kernel execution time (sum over sub-launches).
+    pub exec: Duration,
+    /// Host→device staging: argument prep / input upload.
+    pub h2d: Duration,
+    /// Device→host result write-back into the merge buffers.
+    pub d2h: Duration,
+    /// Lazily-triggered executable compilation time (0 if cached).
+    pub compile: Duration,
+    /// Number of launches the package decomposed into.
+    pub launches: u32,
+}
+
+impl ExecTiming {
+    /// Total transfer time (both directions).
+    pub fn xfer(&self) -> Duration {
+        self.h2d + self.d2h
+    }
+
+    pub fn total(&self) -> Duration {
+        self.exec + self.h2d + self.d2h + self.compile
+    }
+
+    pub fn accumulate(&mut self, other: &ExecTiming) {
+        self.exec += other.exec;
+        self.h2d += other.h2d;
+        self.d2h += other.d2h;
+        self.compile += other.compile;
+        self.launches += other.launches;
+    }
+}
+
+/// Greedy decomposition of a granule-aligned range into available sizes.
+/// Shared with the coordinator's planning logic and property tests.
+pub fn decompose_range(
+    bench: &BenchManifest,
+    begin: usize,
+    end: usize,
+) -> Result<Vec<(usize, usize)>> {
+    anyhow::ensure!(begin % bench.granule == 0, "begin {begin} not granule-aligned");
+    anyhow::ensure!(
+        (end - begin) % bench.granule == 0,
+        "length {} not granule-aligned",
+        end - begin
+    );
+    let mut plan = Vec::new();
+    let mut off = begin;
+    while off < end {
+        let remaining = end - off;
+        let size = bench
+            .chunk_at_most(remaining)
+            .with_context(|| format!("no chunk size ≤ {remaining}"))?;
+        plan.push((off, size));
+        off += size;
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn bench_with_chunks(granule: usize, sizes: &[usize]) -> BenchManifest {
+        BenchManifest {
+            name: "toy".into(),
+            n: 1 << 20,
+            granule,
+            irregular: false,
+            out_pattern: (1, 1),
+            kernel: "toy".into(),
+            scalars: BTreeMap::new(),
+            inputs: vec![],
+            outputs: vec![],
+            chunks: sizes.iter().map(|s| (*s, format!("c{s}"))).collect(),
+        }
+    }
+
+    #[test]
+    fn decompose_exact_size() {
+        let b = bench_with_chunks(128, &[128, 256, 512]);
+        assert_eq!(decompose_range(&b, 0, 512).unwrap(), vec![(0, 512)]);
+    }
+
+    #[test]
+    fn decompose_greedy() {
+        let b = bench_with_chunks(128, &[128, 256, 512]);
+        // 896 = 512 + 256 + 128
+        assert_eq!(
+            decompose_range(&b, 128, 1024).unwrap(),
+            vec![(128, 512), (640, 256), (896, 128)]
+        );
+    }
+
+    #[test]
+    fn decompose_covers_and_disjoint() {
+        let b = bench_with_chunks(128, &[128, 256, 512, 1024]);
+        for len in (128..=4096).step_by(128) {
+            let plan = decompose_range(&b, 256, 256 + len).unwrap();
+            let mut cursor = 256;
+            for (off, size) in &plan {
+                assert_eq!(*off, cursor, "contiguous");
+                cursor += size;
+            }
+            assert_eq!(cursor, 256 + len, "covers");
+        }
+    }
+
+    #[test]
+    fn decompose_rejects_misaligned() {
+        let b = bench_with_chunks(128, &[128]);
+        assert!(decompose_range(&b, 64, 256).is_err());
+        assert!(decompose_range(&b, 0, 100).is_err());
+    }
+
+    #[test]
+    fn timing_accumulates_and_totals() {
+        let ms = Duration::from_millis;
+        let mut t = ExecTiming {
+            exec: ms(10),
+            h2d: ms(2),
+            d2h: ms(3),
+            compile: ms(0),
+            launches: 1,
+        };
+        t.accumulate(&ExecTiming { exec: ms(5), h2d: ms(1), d2h: ms(1), compile: ms(4), launches: 2 });
+        assert_eq!(t.exec, ms(15));
+        assert_eq!(t.xfer(), ms(7));
+        assert_eq!(t.total(), ms(26));
+        assert_eq!(t.launches, 3);
+    }
+}

@@ -47,6 +47,19 @@ impl HostBuf {
     }
 }
 
+/// Scatter the item-ranges a device computed from its full-size output
+/// copy into the program's output container: for each `(begin, end)`
+/// item range, copy `elems_per_item` elements per item. The engine's
+/// merge step — disjoint ranges by the scheduler invariant, so devices
+/// never overwrite each other.
+pub fn merge_ranges(dst: &mut [f32], src: &[f32], ranges: &[(usize, usize)], elems_per_item: usize) {
+    for &(b, e) in ranges {
+        let lo = b * elems_per_item;
+        let hi = e * elems_per_item;
+        dst[lo..hi].copy_from_slice(&src[lo..hi]);
+    }
+}
+
 /// Read a little-endian raw `f32` binary (the `.f32` golden files).
 pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
     let mut bytes = Vec::new();
@@ -142,6 +155,14 @@ mod tests {
         let p = dir.join("bad.f32");
         std::fs::write(&p, [0u8; 7]).unwrap();
         assert!(read_f32_file(&p).is_err());
+    }
+
+    #[test]
+    fn merge_ranges_scatter() {
+        let src = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let mut dst = [0.0f32; 8];
+        merge_ranges(&mut dst, &src, &[(0, 1), (3, 4)], 2);
+        assert_eq!(dst, [1.0, 2.0, 0.0, 0.0, 0.0, 0.0, 7.0, 8.0]);
     }
 
     #[test]

@@ -1,0 +1,390 @@
+//! Native (pure-Rust) implementations of the five paper benchmarks —
+//! item-for-item ports of `python/compile/kernels/*.py` and the pure-jnp
+//! oracles in `ref.py`.
+//!
+//! These serve two roles:
+//!
+//! 1. The compute backend of [`super::native::NativeExecutor`], used when
+//!    the crate is built without the `pjrt` feature (the offline default).
+//! 2. The oracle for synthetic golden outputs when no `artifacts/`
+//!    directory exists (see [`super::ArtifactRegistry::synthetic`]).
+//!
+//! Every kernel is strictly per-item deterministic: the value of item `i`
+//! depends only on the inputs and `i`, never on which chunk or device
+//! computed it. That property is what makes co-execution bit-identical to
+//! a single-device run — the correctness core the integration tests
+//! assert.
+
+use anyhow::{Context, Result};
+
+use super::artifact::BenchManifest;
+
+/// Compute work-items `[begin, end)` of `bench` into `chunk_outs` —
+/// one chunk-local `Vec<f32>` per output buffer, each of length
+/// `(end - begin) * elems_per_item`.
+pub fn compute_range(
+    bench: &BenchManifest,
+    inputs: &[Vec<f32>],
+    begin: usize,
+    end: usize,
+    chunk_outs: &mut [Vec<f32>],
+) -> Result<()> {
+    anyhow::ensure!(end > begin && end <= bench.n, "bad range {begin}..{end}");
+    let family = if bench.kernel.is_empty() { &bench.name } else { &bench.kernel };
+    match family.as_str() {
+        "binomial" => binomial(bench, inputs, begin, end, chunk_outs),
+        "gaussian" => gaussian(bench, inputs, begin, end, chunk_outs),
+        "mandelbrot" => mandelbrot(bench, begin, end, chunk_outs),
+        "nbody" => nbody(bench, inputs, begin, end, chunk_outs),
+        f if f.starts_with("ray") => ray(bench, inputs, begin, end, chunk_outs),
+        other => anyhow::bail!("no native kernel for '{other}'"),
+    }
+}
+
+fn scalar(bench: &BenchManifest, key: &str) -> Result<f64> {
+    bench
+        .scalars
+        .get(key)
+        .copied()
+        .with_context(|| format!("bench '{}' missing scalar '{key}'", bench.name))
+}
+
+// ---- binomial: European call on a `steps`-step lattice ----------------
+
+fn binomial(
+    bench: &BenchManifest,
+    inputs: &[Vec<f32>],
+    begin: usize,
+    end: usize,
+    outs: &mut [Vec<f32>],
+) -> Result<()> {
+    let steps = scalar(bench, "steps")? as usize;
+    let prices = inputs.first().context("binomial needs a price input")?;
+    let strike = 50.0f32;
+    let dt = 1.0f32 / steps as f32;
+    let vsdt = 0.30f32 * dt.sqrt(); // VOLATILITY
+    let rdt = (0.02f32 * dt).exp(); // RISK_FREE
+    let u = vsdt.exp();
+    let d = 1.0 / u;
+    let pu = (rdt - d) / (u - d);
+    let pd = 1.0 - pu;
+    let pu_by_r = pu / rdt;
+    let pd_by_r = pd / rdt;
+
+    let width = steps + 1;
+    let mut v = vec![0.0f32; width];
+    let out = &mut outs[0];
+    for i in begin..end {
+        let s = 10.0 + prices[i] * 90.0;
+        for (j, vj) in v.iter_mut().enumerate() {
+            let st = s * (vsdt * (2.0 * j as f32 - steps as f32)).exp();
+            *vj = (st - strike).max(0.0);
+        }
+        // Backward induction, width shrinking each step (ref.py form).
+        for w in (1..width).rev() {
+            for j in 0..w {
+                v[j] = pu_by_r * v[j + 1] + pd_by_r * v[j];
+            }
+        }
+        out[i - begin] = v[0];
+    }
+    Ok(())
+}
+
+// ---- gaussian: separable K-tap clamped-border blur --------------------
+
+fn gaussian(
+    bench: &BenchManifest,
+    inputs: &[Vec<f32>],
+    begin: usize,
+    end: usize,
+    outs: &mut [Vec<f32>],
+) -> Result<()> {
+    let w = scalar(bench, "width")? as usize;
+    let h = scalar(bench, "height")? as usize;
+    let k = scalar(bench, "ksize")? as usize;
+    let r = k / 2;
+    let img = inputs.first().context("gaussian needs an image input")?;
+    let filt = inputs.get(1).context("gaussian needs a filter input")?;
+    anyhow::ensure!(img.len() == w * h, "image size mismatch");
+    anyhow::ensure!(filt.len() == k, "filter size mismatch");
+
+    // Row pass at clamped (y, x), then column pass at the output pixel —
+    // the exact clamp-then-separate border semantics of the Pallas kernel.
+    let row_pass = |y: usize, x: usize| -> f32 {
+        let mut acc = 0.0f32;
+        for dx in 0..k {
+            let xi = (x + dx).saturating_sub(r).min(w - 1);
+            acc += img[y * w + xi] * filt[dx];
+        }
+        acc
+    };
+    let out = &mut outs[0];
+    for p in begin..end {
+        let y = p / w;
+        let x = p % w;
+        let mut acc = 0.0f32;
+        for dy in 0..k {
+            let yi = (y + dy).saturating_sub(r).min(h - 1);
+            acc += row_pass(yi, x) * filt[dy];
+        }
+        out[p - begin] = acc;
+    }
+    Ok(())
+}
+
+// ---- mandelbrot: escape iterations per pixel --------------------------
+
+fn mandelbrot(
+    bench: &BenchManifest,
+    begin: usize,
+    end: usize,
+    outs: &mut [Vec<f32>],
+) -> Result<()> {
+    let w = scalar(bench, "width")? as usize;
+    let h = scalar(bench, "height")? as usize;
+    let maxiter = scalar(bench, "maxiter")? as u32;
+    let x0 = scalar(bench, "x0")? as f32;
+    let y0 = scalar(bench, "y0")? as f32;
+    let x1 = scalar(bench, "x1")? as f32;
+    let y1 = scalar(bench, "y1")? as f32;
+
+    let out = &mut outs[0];
+    for p in begin..end {
+        let cre = x0 + (p % w) as f32 * ((x1 - x0) / w as f32);
+        let cim = y0 + (p / w) as f32 * ((y1 - y0) / h as f32);
+        let mut zre = 0.0f32;
+        let mut zim = 0.0f32;
+        let mut iters = maxiter as f32;
+        for it in 0..maxiter {
+            let nre = zre * zre - zim * zim + cre;
+            let nim = 2.0 * zre * zim + cim;
+            zre = nre;
+            zim = nim;
+            if zre * zre + zim * zim > 4.0 {
+                iters = (it + 1) as f32;
+                break;
+            }
+        }
+        out[p - begin] = iters;
+    }
+    Ok(())
+}
+
+// ---- nbody: one leapfrog step of all-pairs gravity --------------------
+
+fn nbody(
+    bench: &BenchManifest,
+    inputs: &[Vec<f32>],
+    begin: usize,
+    end: usize,
+    outs: &mut [Vec<f32>],
+) -> Result<()> {
+    let dt = scalar(bench, "dt")? as f32;
+    let eps2 = scalar(bench, "eps2")? as f32;
+    let n = scalar(bench, "bodies")? as usize;
+    let pos = inputs.first().context("nbody needs a position input")?;
+    let vel = inputs.get(1).context("nbody needs a velocity input")?;
+    anyhow::ensure!(pos.len() == n * 4 && vel.len() == n * 4, "nbody buffer size mismatch");
+
+    let (opos, ovel) = {
+        let (a, b) = outs.split_at_mut(1);
+        (&mut a[0], &mut b[0])
+    };
+    for i in begin..end {
+        let (pix, piy, piz) = (pos[i * 4], pos[i * 4 + 1], pos[i * 4 + 2]);
+        let mut ax = 0.0f32;
+        let mut ay = 0.0f32;
+        let mut az = 0.0f32;
+        for j in 0..n {
+            let dx = pos[j * 4] - pix;
+            let dy = pos[j * 4 + 1] - piy;
+            let dz = pos[j * 4 + 2] - piz;
+            let dist2 = dx * dx + dy * dy + dz * dz + eps2;
+            let inv = 1.0 / dist2.sqrt();
+            let inv3 = inv * inv * inv * pos[j * 4 + 3]; // * mass_j
+            ax += dx * inv3;
+            ay += dy * inv3;
+            az += dz * inv3;
+        }
+        let nvx = vel[i * 4] + ax * dt;
+        let nvy = vel[i * 4 + 1] + ay * dt;
+        let nvz = vel[i * 4 + 2] + az * dt;
+        let o = (i - begin) * 4;
+        opos[o] = pix + nvx * dt;
+        opos[o + 1] = piy + nvy * dt;
+        opos[o + 2] = piz + nvz * dt;
+        opos[o + 3] = pos[i * 4 + 3]; // mass carried through
+        ovel[o] = nvx;
+        ovel[o + 1] = nvy;
+        ovel[o + 2] = nvz;
+        ovel[o + 3] = vel[i * 4 + 3];
+    }
+    Ok(())
+}
+
+// ---- ray: sphere raytracer with reflective bounces --------------------
+
+fn ray(
+    bench: &BenchManifest,
+    inputs: &[Vec<f32>],
+    begin: usize,
+    end: usize,
+    outs: &mut [Vec<f32>],
+) -> Result<()> {
+    let w = scalar(bench, "width")? as usize;
+    let h = scalar(bench, "height")? as usize;
+    let ns = scalar(bench, "nspheres")? as usize;
+    let maxbounce = scalar(bench, "maxbounce")? as u32;
+    let spheres = inputs.first().context("ray needs a scene input")?;
+    anyhow::ensure!(spheres.len() == ns * 8, "scene size mismatch");
+    const AMBIENT: f32 = 0.1;
+    const LIGHT: (f32, f32, f32) = (5.0, 5.0, -2.0);
+
+    let out = &mut outs[0];
+    for p in begin..end {
+        let px = (p % w) as f32;
+        let py = (p / w) as f32;
+        // Camera ray: screen plane at z=1, fov ~90deg (kernel geometry).
+        let mut dx = (px + 0.5) / w as f32 * 2.0 - 1.0;
+        let mut dy = ((py + 0.5) / h as f32 * 2.0 - 1.0) * (h as f32 / w as f32);
+        let mut dz = 1.0f32;
+        let inv = 1.0 / (dx * dx + dy * dy + dz * dz).sqrt();
+        dx *= inv;
+        dy *= inv;
+        dz *= inv;
+        let (mut ox, mut oy, mut oz) = (0.0f32, 0.0f32, -4.0f32);
+        let (mut cr, mut cg, mut cb) = (0.0f32, 0.0f32, 0.0f32);
+        let mut att = 1.0f32;
+
+        for _ in 0..maxbounce {
+            // Nearest positive intersection over all spheres.
+            let mut tmin = f32::INFINITY;
+            let mut idx = 0usize;
+            for s in 0..ns {
+                let b = &spheres[s * 8..s * 8 + 8];
+                let lx = b[0] - ox;
+                let ly = b[1] - oy;
+                let lz = b[2] - oz;
+                let bb = lx * dx + ly * dy + lz * dz;
+                let cc = lx * lx + ly * ly + lz * lz - b[3] * b[3];
+                let disc = bb * bb - cc;
+                if disc > 0.0 {
+                    let sq = disc.sqrt();
+                    let t0 = bb - sq;
+                    let t = if t0 > 1e-3 { t0 } else { bb + sq };
+                    if t > 1e-3 && t < tmin {
+                        tmin = t;
+                        idx = s;
+                    }
+                }
+            }
+            if !tmin.is_finite() {
+                break; // missed everything
+            }
+            let b = &spheres[idx * 8..idx * 8 + 8];
+            let hx = ox + dx * tmin;
+            let hy = oy + dy * tmin;
+            let hz = oz + dz * tmin;
+            let nr = (hx - b[0]) / b[3];
+            let ng = (hy - b[1]) / b[3];
+            let nb = (hz - b[2]) / b[3];
+            // Lambert shading toward the point light (no shadow rays —
+            // same simplification as the Pallas kernel).
+            let mut tlx = LIGHT.0 - hx;
+            let mut tly = LIGHT.1 - hy;
+            let mut tlz = LIGHT.2 - hz;
+            let linv = 1.0 / (tlx * tlx + tly * tly + tlz * tlz).sqrt();
+            tlx *= linv;
+            tly *= linv;
+            tlz *= linv;
+            let lam = (nr * tlx + ng * tly + nb * tlz).max(0.0);
+            let shade = AMBIENT + lam * (1.0 - AMBIENT);
+            let refl = b[7];
+            let contrib = att * (1.0 - refl);
+            cr += contrib * b[4] * shade;
+            cg += contrib * b[5] * shade;
+            cb += contrib * b[6] * shade;
+            if refl <= 0.01 {
+                break; // diffuse hit terminates the path
+            }
+            let dn = dx * nr + dy * ng + dz * nb;
+            dx -= 2.0 * dn * nr;
+            dy -= 2.0 * dn * ng;
+            dz -= 2.0 * dn * nb;
+            ox = hx + nr * 1e-2;
+            oy = hy + ng * 1e-2;
+            oz = hz + nb * 1e-2;
+            att *= refl;
+        }
+        let o = (p - begin) * 4;
+        out[o] = cr.clamp(0.0, 1.0);
+        out[o + 1] = cg.clamp(0.0, 1.0);
+        out[o + 2] = cb.clamp(0.0, 1.0);
+        out[o + 3] = 1.0;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactRegistry;
+
+    fn chunk_outs(bench: &BenchManifest, items: usize) -> Vec<Vec<f32>> {
+        bench.outputs.iter().map(|o| vec![0.0f32; items * o.elems_per_item]).collect()
+    }
+
+    fn full_inputs(reg: &ArtifactRegistry, bench: &BenchManifest) -> Vec<Vec<f32>> {
+        reg.golden_inputs(bench)
+            .unwrap()
+            .into_iter()
+            .map(|b| b.as_f32().unwrap().to_vec())
+            .collect()
+    }
+
+    /// Per-item determinism: computing a sub-range must equal the matching
+    /// slice of a full-range computation, bit for bit, for every bench.
+    #[test]
+    fn chunks_match_full_computation() {
+        let reg = ArtifactRegistry::synthetic();
+        for name in ["binomial", "gaussian", "mandelbrot", "nbody", "ray1"] {
+            let bench = reg.bench(name).unwrap().clone();
+            let inputs = full_inputs(&reg, &bench);
+            let mut full = chunk_outs(&bench, bench.n);
+            compute_range(&bench, &inputs, 0, bench.n, &mut full).unwrap();
+
+            let begin = bench.granule;
+            let end = (3 * bench.granule).min(bench.n);
+            let mut part = chunk_outs(&bench, end - begin);
+            compute_range(&bench, &inputs, begin, end, &mut part).unwrap();
+            for (spec, (fo, po)) in bench.outputs.iter().zip(full.iter().zip(&part)) {
+                let lo = begin * spec.elems_per_item;
+                let hi = end * spec.elems_per_item;
+                assert_eq!(&fo[lo..hi], &po[..], "{name}: chunk differs from full run");
+            }
+        }
+    }
+
+    #[test]
+    fn mandelbrot_interior_hits_maxiter() {
+        let reg = ArtifactRegistry::synthetic();
+        let bench = reg.bench("mandelbrot").unwrap().clone();
+        let maxiter = bench.scalars["maxiter"] as f32;
+        let mut outs = chunk_outs(&bench, bench.n);
+        compute_range(&bench, &[], 0, bench.n, &mut outs).unwrap();
+        let vals = &outs[0];
+        assert!(vals.iter().any(|&v| v == maxiter), "some pixels in the set");
+        assert!(vals.iter().any(|&v| v < maxiter), "some pixels escape");
+        assert!(vals.iter().all(|&v| (1.0..=maxiter).contains(&v)));
+    }
+
+    #[test]
+    fn unknown_kernel_rejected() {
+        let reg = ArtifactRegistry::synthetic();
+        let mut bench = reg.bench("binomial").unwrap().clone();
+        bench.kernel = "no-such-kernel".into();
+        let mut outs = chunk_outs(&bench, bench.granule);
+        assert!(compute_range(&bench, &[], 0, bench.granule, &mut outs).is_err());
+    }
+}

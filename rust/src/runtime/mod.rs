@@ -1,15 +1,35 @@
 //! Runtime layer — loads the AOT artifacts produced by `python/compile/`
-//! and executes chunk kernels on PJRT.
+//! (or the synthetic fallback workloads) and executes chunk kernels.
 //!
-//! This is the only module that touches the `xla` crate. Everything above
+//! Two interchangeable backends provide the `ChunkExecutor` /
+//! [`StagedPackage`] pair the coordinator drives:
+//!
+//! * **native** (default) — pure-Rust ports of the five benchmark
+//!   kernels ([`kernels`]), no external dependencies. What `cargo build`
+//!   gives you offline.
+//! * **pjrt** (feature `pjrt`) — the real PJRT/XLA path over the
+//!   AOT-lowered HLO artifacts; requires the `xla` crate and
+//!   `make artifacts`.
+//!
+//! Only the backend modules touch execution machinery. Everything above
 //! (coordinator, schedulers) speaks in work-item ranges and host buffers,
 //! exactly as the paper isolates OpenCL inside its `Device` abstraction
 //! (Figure 1).
 
 pub mod artifact;
+pub mod exec;
 pub mod host;
+pub mod kernels;
+pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use artifact::{ArtifactRegistry, BenchManifest, BufferEntry};
+pub use exec::{decompose_range, ExecTiming};
 pub use host::HostBuf;
-pub use pjrt::{ChunkExecutor, ExecTiming};
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{ChunkExecutor, StagedPackage};
+
+#[cfg(not(feature = "pjrt"))]
+pub use native::{NativeExecutor as ChunkExecutor, StagedPackage};

@@ -1,4 +1,5 @@
-//! PJRT chunk executor — one per device worker thread.
+//! PJRT chunk executor — one per device worker thread (requires the
+//! `pjrt` feature and the `xla` dependency).
 //!
 //! `xla::PjRtClient` is `Rc`-based (not `Send`), so each device thread owns
 //! its own client, compiles its own executables and keeps its own
@@ -10,6 +11,12 @@
 //! arbitrary granule-aligned package is executed by greedy power-of-two
 //! decomposition; the extra launches are part of the per-package cost, the
 //! analogue of the paper's per-package synchronization overhead.
+//!
+//! The staged API splits a package into its H2D phase
+//! ([`ChunkExecutor::stage`]: compile + argument upload) and its
+//! execute/write-back phase ([`ChunkExecutor::execute_staged`]) so the
+//! pipelined worker can overlap
+//! the next package's staging with the current package's compute.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -18,31 +25,40 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::artifact::{ArtifactRegistry, BenchManifest};
+use super::exec::{decompose_range, ExecTiming};
 use super::host::HostBuf;
 
-/// Timing detail for one package execution.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct ExecTiming {
-    /// Pure kernel execution time (sum over sub-launches).
-    pub exec: Duration,
-    /// Host<->device transfer + result write-back time.
-    pub xfer: Duration,
-    /// Lazily-triggered executable compilation time (0 if cached).
-    pub compile: Duration,
-    /// Number of PJRT launches the package decomposed into.
-    pub launches: u32,
+/// One staged sub-launch: offset buffer uploaded, inputs resolved.
+enum StagedArgs {
+    /// Resident mode: only the offset scalar goes up per launch.
+    Resident { off_buf: xla::PjRtBuffer },
+    /// Ablation mode: full input literals re-uploaded per launch.
+    Literals { args: Vec<xla::Literal> },
 }
 
-impl ExecTiming {
-    pub fn total(&self) -> Duration {
-        self.exec + self.xfer + self.compile
+/// A package whose H2D phase has completed (executables compiled, launch
+/// arguments uploaded), ready to execute.
+pub struct StagedPackage {
+    begin: usize,
+    end: usize,
+    /// (offset, size) sub-launches with their staged arguments.
+    plan: Vec<(usize, usize, StagedArgs)>,
+    h2d: Duration,
+    compile: Duration,
+}
+
+impl StagedPackage {
+    pub fn range(&self) -> (usize, usize) {
+        (self.begin, self.end)
     }
 
-    pub fn accumulate(&mut self, other: &ExecTiming) {
-        self.exec += other.exec;
-        self.xfer += other.xfer;
-        self.compile += other.compile;
-        self.launches += other.launches;
+    /// Host→device staging time this package already paid.
+    pub fn h2d(&self) -> Duration {
+        self.h2d
+    }
+
+    pub fn launches(&self) -> u32 {
+        self.plan.len() as u32
     }
 }
 
@@ -164,15 +180,41 @@ impl ChunkExecutor {
         decompose_range(&self.bench, begin, end)
     }
 
-    /// Execute work-items `[begin, end)` and write results into `outs`
-    /// (full-problem host buffers).
-    pub fn execute_range(
+    /// Stage the H2D phase of `[begin, end)`: compile what is missing and
+    /// upload the per-launch arguments.
+    pub fn stage(&mut self, begin: usize, end: usize) -> Result<StagedPackage> {
+        anyhow::ensure!(end > begin && end <= self.bench.n, "bad range {begin}..{end}");
+        let plan = self.decompose(begin, end)?;
+        let mut compile = Duration::ZERO;
+        let mut h2d = Duration::ZERO;
+        let mut staged = Vec::with_capacity(plan.len());
+        for (off, size) in plan {
+            compile += self.prepare(size)?;
+            let t0 = Instant::now();
+            let args = if self.resident_inputs {
+                let off_buf =
+                    self.client.buffer_from_host_buffer::<i32>(&[off as i32], &[], None)?;
+                StagedArgs::Resident { off_buf }
+            } else {
+                let mut args: Vec<xla::Literal> =
+                    self.host_inputs.iter().map(|d| xla::Literal::vec1(d)).collect();
+                args.push(xla::Literal::scalar(off as i32));
+                StagedArgs::Literals { args }
+            };
+            h2d += t0.elapsed();
+            staged.push((off, size, args));
+        }
+        Ok(StagedPackage { begin, end, plan: staged, h2d, compile })
+    }
+
+    /// Execute a staged package and write results into `outs`
+    /// (full-problem host buffers). The returned timing includes the
+    /// staging `h2d` the package already paid.
+    pub fn execute_staged(
         &mut self,
-        begin: usize,
-        end: usize,
+        staged: StagedPackage,
         outs: &mut [HostBuf],
     ) -> Result<ExecTiming> {
-        anyhow::ensure!(end > begin && end <= self.bench.n, "bad range {begin}..{end}");
         anyhow::ensure!(
             outs.len() == self.bench.outputs.len(),
             "bench '{}' has {} outputs, got {}",
@@ -180,77 +222,63 @@ impl ChunkExecutor {
             self.bench.outputs.len(),
             outs.len()
         );
-        let mut timing = ExecTiming::default();
-        for (off, size) in self.decompose(begin, end)? {
-            timing.compile += self.prepare(size)?;
-            let t = self.execute_one(off, size, outs)?;
-            timing.accumulate(&t);
+        let mut timing = ExecTiming {
+            h2d: staged.h2d,
+            compile: staged.compile,
+            launches: staged.launches(),
+            ..Default::default()
+        };
+        for (off, size, args) in &staged.plan {
+            let exe = self.exes.get(size).expect("compiled during stage()");
+
+            // PJRT dispatch is asynchronous: the completion wait (device
+            // compute) is `to_literal_sync`, so both count as exec.
+            let t0 = Instant::now();
+            let results = match args {
+                StagedArgs::Resident { off_buf } => {
+                    let mut bufs: Vec<&xla::PjRtBuffer> = self.dev_inputs.iter().collect();
+                    bufs.push(off_buf);
+                    exe.execute_b(&bufs)?
+                }
+                StagedArgs::Literals { args } => exe.execute(args)?,
+            };
+            let tuple = results[0][0].to_literal_sync()?;
+            timing.exec += t0.elapsed();
+
+            // Write-back into the host buffers: D2H.
+            let t1 = Instant::now();
+            let parts = tuple.to_tuple()?;
+            anyhow::ensure!(
+                parts.len() == outs.len(),
+                "kernel returned {} outputs, manifest says {}",
+                parts.len(),
+                outs.len()
+            );
+            for ((part, spec), out) in parts.iter().zip(&self.bench.outputs).zip(outs.iter_mut()) {
+                let epi = spec.elems_per_item;
+                let dst = out
+                    .as_f32_mut()
+                    .with_context(|| format!("output '{}' must be f32", spec.name))?;
+                anyhow::ensure!(dst.len() == spec.elems, "output '{}' wrong size", spec.name);
+                let lo = off * epi;
+                let hi = lo + size * epi;
+                part.copy_raw_to::<f32>(&mut dst[lo..hi])?;
+            }
+            timing.d2h += t1.elapsed();
         }
         Ok(timing)
     }
 
-    fn execute_one(&mut self, off: usize, size: usize, outs: &mut [HostBuf]) -> Result<ExecTiming> {
-        let exe = self.exes.get(&size).expect("prepared above");
-        let mut timing = ExecTiming { launches: 1, ..Default::default() };
-
-        // Offset is the single per-launch argument; inputs stay resident.
-        // Timing split matters for the simulation: `exec` (dispatch +
-        // completion wait) is device compute and gets stretched by the
-        // device profile; `xfer` (argument prep + host write-back) is
-        // host-side management and stays at host speed.
-        let t0 = Instant::now();
-        let results = if self.resident_inputs {
-            let off_buf =
-                self.client.buffer_from_host_buffer::<i32>(&[off as i32], &[], None)?;
-            let mut args: Vec<&xla::PjRtBuffer> = self.dev_inputs.iter().collect();
-            args.push(&off_buf);
-            let t1 = Instant::now();
-            timing.xfer += t1 - t0;
-            let r = exe.execute_b(&args)?;
-            timing.exec += t1.elapsed();
-            r
-        } else {
-            // Ablation path: re-upload all inputs as literals every launch.
-            let mut args: Vec<xla::Literal> = self
-                .host_inputs
-                .iter()
-                .map(|d| xla::Literal::vec1(d))
-                .collect();
-            args.push(xla::Literal::scalar(off as i32));
-            let t1 = Instant::now();
-            timing.xfer += t1 - t0;
-            let r = exe.execute(&args)?;
-            timing.exec += t1.elapsed();
-            r
-        };
-
-        // PJRT dispatch is asynchronous: the completion wait (device
-        // compute) is `to_literal_sync`, so it counts as exec.
-        let t2 = Instant::now();
-        let tuple = results[0][0].to_literal_sync()?;
-        timing.exec += t2.elapsed();
-
-        // Write-back into the host buffers: host-side management (xfer).
-        let t2 = Instant::now();
-        let parts = tuple.to_tuple()?;
-        anyhow::ensure!(
-            parts.len() == outs.len(),
-            "kernel returned {} outputs, manifest says {}",
-            parts.len(),
-            outs.len()
-        );
-        for ((part, spec), out) in parts.iter().zip(&self.bench.outputs).zip(outs.iter_mut()) {
-            let epi = spec.elems_per_item;
-            let dst = out
-                .as_f32_mut()
-                .with_context(|| format!("output '{}' must be f32", spec.name))?;
-            anyhow::ensure!(dst.len() == spec.elems, "output '{}' wrong size", spec.name);
-            let lo = off * epi;
-            let hi = lo + size * epi;
-            part.copy_raw_to::<f32>(&mut dst[lo..hi])?;
-        }
-        timing.xfer += t2.elapsed();
-        Ok(timing)
+    /// Execute work-items `[begin, end)` and write results into `outs` —
+    /// the blocking path: stage then execute back-to-back.
+    pub fn execute_range(
+        &mut self,
+        begin: usize,
+        end: usize,
+        outs: &mut [HostBuf],
+    ) -> Result<ExecTiming> {
+        let staged = self.stage(begin, end)?;
+        self.execute_staged(staged, outs)
     }
 }
 
@@ -263,88 +291,4 @@ fn quiet_xla_logs() {
             std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
         }
     });
-}
-
-/// Greedy decomposition of a granule-aligned range into available sizes.
-/// Shared with the coordinator's planning logic and property tests.
-pub fn decompose_range(
-    bench: &BenchManifest,
-    begin: usize,
-    end: usize,
-) -> Result<Vec<(usize, usize)>> {
-    anyhow::ensure!(begin % bench.granule == 0, "begin {begin} not granule-aligned");
-    anyhow::ensure!(
-        (end - begin) % bench.granule == 0,
-        "length {} not granule-aligned",
-        end - begin
-    );
-    let mut plan = Vec::new();
-    let mut off = begin;
-    while off < end {
-        let remaining = end - off;
-        let size = bench
-            .chunk_at_most(remaining)
-            .with_context(|| format!("no chunk size ≤ {remaining}"))?;
-        plan.push((off, size));
-        off += size;
-    }
-    Ok(plan)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use std::collections::BTreeMap;
-
-    fn bench_with_chunks(granule: usize, sizes: &[usize]) -> BenchManifest {
-        BenchManifest {
-            name: "toy".into(),
-            n: 1 << 20,
-            granule,
-            irregular: false,
-            out_pattern: (1, 1),
-            kernel: "toy".into(),
-            scalars: BTreeMap::new(),
-            inputs: vec![],
-            outputs: vec![],
-            chunks: sizes.iter().map(|s| (*s, format!("c{s}"))).collect(),
-        }
-    }
-
-    #[test]
-    fn decompose_exact_size() {
-        let b = bench_with_chunks(128, &[128, 256, 512]);
-        assert_eq!(decompose_range(&b, 0, 512).unwrap(), vec![(0, 512)]);
-    }
-
-    #[test]
-    fn decompose_greedy() {
-        let b = bench_with_chunks(128, &[128, 256, 512]);
-        // 896 = 512 + 256 + 128
-        assert_eq!(
-            decompose_range(&b, 128, 1024).unwrap(),
-            vec![(128, 512), (640, 256), (896, 128)]
-        );
-    }
-
-    #[test]
-    fn decompose_covers_and_disjoint() {
-        let b = bench_with_chunks(128, &[128, 256, 512, 1024]);
-        for len in (128..=4096).step_by(128) {
-            let plan = decompose_range(&b, 256, 256 + len).unwrap();
-            let mut cursor = 256;
-            for (off, size) in &plan {
-                assert_eq!(*off, cursor, "contiguous");
-                cursor += size;
-            }
-            assert_eq!(cursor, 256 + len, "covers");
-        }
-    }
-
-    #[test]
-    fn decompose_rejects_misaligned() {
-        let b = bench_with_chunks(128, &[128]);
-        assert!(decompose_range(&b, 64, 256).is_err());
-        assert!(decompose_range(&b, 0, 100).is_err());
-    }
 }

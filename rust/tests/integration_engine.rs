@@ -179,6 +179,114 @@ fn coexec_equals_single_device_bitwise() {
     }
 }
 
+// ---- pipelined co-execution ------------------------------------------
+
+/// The tentpole invariant: enabling the transfer/compute pipeline must
+/// not change a single output bit, under every base scheduler.
+#[test]
+fn pipelined_outputs_bit_identical_to_blocking() {
+    let reg = registry();
+    for kind in [
+        SchedulerKind::static_default(),
+        SchedulerKind::dynamic(16),
+        SchedulerKind::hguided(),
+    ] {
+        let mut blocking = engine_for(&reg, "binomial", all_devices());
+        blocking.scheduler(kind.clone());
+        blocking.pipeline(1);
+        blocking.run().unwrap();
+        let want = blocking.output(0).unwrap().to_vec();
+
+        let mut piped = engine_for(&reg, "binomial", all_devices());
+        piped.scheduler(kind.clone());
+        piped.pipeline(2);
+        piped.run().unwrap();
+        assert_eq!(
+            piped.output(0).unwrap(),
+            &want[..],
+            "pipelining changed results under {}",
+            kind.label()
+        );
+        let report = piped.report().unwrap();
+        let items: usize = report.devices.iter().map(|d| d.items()).sum();
+        assert_eq!(items, report.gws, "all work items computed exactly once");
+        assert!(report.scheduler.contains("+pipe"), "report labels the pipeline");
+    }
+}
+
+/// The `+pipe` scheduler-spec path (what the CLI uses) must behave like
+/// the Tier-1 `Engine::pipeline` call and still match the golden oracle.
+#[test]
+fn pipe_suffix_spec_matches_golden() {
+    let reg = registry();
+    let kind = enginecl::coordinator::scheduler::parse_kind("hguided+pipe").unwrap();
+    let mut e = engine_for(&reg, "mandelbrot", all_devices());
+    e.scheduler(kind);
+    e.run().unwrap();
+    check_against_golden(&reg, "mandelbrot", &e, 1e-3);
+    assert_eq!(e.report().unwrap().scheduler, "HGuided+pipe");
+}
+
+/// The overlap must be visible in the introspector: with pipelining on,
+/// at least one package's H2D staging span sits inside another package's
+/// compute window on the same device; with pipelining off, none do.
+#[test]
+fn pipelined_traces_show_transfer_compute_overlap() {
+    let reg = registry();
+    let mut piped = engine_for(&reg, "binomial", vec![DeviceSpec::new(1)]);
+    piped.scheduler(SchedulerKind::dynamic(8));
+    piped.pipeline(2);
+    piped.run().unwrap();
+    let report = piped.report().unwrap();
+    assert!(
+        report.has_transfer_overlap(),
+        "no overlapped transfer in pipelined traces:\n{}",
+        report.package_csv()
+    );
+
+    let mut blocking = engine_for(&reg, "binomial", vec![DeviceSpec::new(1)]);
+    blocking.scheduler(SchedulerKind::dynamic(8));
+    blocking.run().unwrap();
+    assert_eq!(
+        blocking.report().unwrap().transfer_overlap_count(),
+        0,
+        "blocking run must not report overlap"
+    );
+}
+
+/// The result merge must not depend on the optional introspection
+/// traces: with `introspect` off the outputs still come back complete
+/// (regression test for the trace-driven merge coupling).
+#[test]
+fn outputs_merge_with_introspection_disabled() {
+    let reg = registry();
+    for depth in [1usize, 2] {
+        let mut e = engine_for(&reg, "binomial", all_devices());
+        e.scheduler(SchedulerKind::dynamic(8));
+        e.pipeline(depth);
+        e.configurator().introspect = false;
+        e.run().unwrap();
+        check_against_golden(&reg, "binomial", &e, 1e-3);
+        assert_eq!(
+            e.report().unwrap().total_packages(),
+            0,
+            "no traces collected with introspection off"
+        );
+    }
+}
+
+/// Deeper pipelines are valid up to the engine bound and keep results
+/// correct on an adaptive scheduler.
+#[test]
+fn deep_pipeline_matches_golden() {
+    let reg = registry();
+    let mut e = engine_for(&reg, "binomial", all_devices());
+    e.scheduler(SchedulerKind::dynamic(16));
+    e.pipeline(4);
+    e.run().unwrap();
+    check_against_golden(&reg, "binomial", &e, 1e-3);
+}
+
 // ---- prefix runs (problem-size sweeps) -------------------------------
 
 #[test]

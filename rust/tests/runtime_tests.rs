@@ -3,7 +3,7 @@
 //! the resident-vs-literal input ablation.
 
 use enginecl::runtime::{
-    host::max_abs_rel_err, pjrt::decompose_range, ArtifactRegistry, ChunkExecutor, HostBuf,
+    decompose_range, host::max_abs_rel_err, ArtifactRegistry, ChunkExecutor, HostBuf,
 };
 
 fn registry() -> ArtifactRegistry {

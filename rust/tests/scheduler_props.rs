@@ -2,7 +2,7 @@
 //! whatever the algorithm, every work-item is computed exactly once).
 
 use enginecl::coordinator::scheduler::{
-    Dynamic, HGuided, SchedDevice, Scheduler, SchedulerKind, Static,
+    Dynamic, HGuided, Pipelined, SchedDevice, Scheduler, SchedulerKind, Static,
 };
 use enginecl::prop_assert;
 use enginecl::testing::forall;
@@ -17,6 +17,9 @@ struct Case {
     packages: usize,
     k: f64,
     min_granules: usize,
+    /// Wrap the base strategy in the Pipelined composition.
+    pipelined: bool,
+    depth: usize,
 }
 
 fn gen_case(r: &mut XorShift) -> Case {
@@ -29,15 +32,25 @@ fn gen_case(r: &mut XorShift) -> Case {
         packages: r.range(1, 300),
         k: 1.0 + r.next_f64() * 4.0,
         min_granules: r.range(1, 8),
+        pipelined: r.below(2) == 1,
+        depth: r.range(2, 4),
     }
 }
 
-fn build(case: &Case) -> Box<dyn Scheduler> {
+fn build_base(case: &Case) -> Box<dyn Scheduler> {
     match case.sched {
         0 => Box::new(Static::new(None, false)),
         1 => Box::new(Static::new(None, true)),
         2 => Box::new(Dynamic::new(case.packages)),
         _ => Box::new(HGuided::new(case.k, case.min_granules)),
+    }
+}
+
+fn build(case: &Case) -> Box<dyn Scheduler> {
+    if case.pipelined {
+        Box::new(Pipelined::new(build_base(case), case.depth))
+    } else {
+        build_base(case)
     }
 }
 
@@ -226,4 +239,66 @@ fn kinds_build_the_right_strategies() {
     assert_eq!(SchedulerKind::static_default().build().name(), "Static");
     assert_eq!(SchedulerKind::dynamic(50).build().name(), "Dynamic 50");
     assert_eq!(SchedulerKind::hguided().build().name(), "HGuided");
+    assert_eq!(SchedulerKind::hguided().pipelined(2).build().name(), "HGuided+pipe");
+    assert_eq!(SchedulerKind::hguided().pipelined(3).build().pipeline_depth(), 3);
+}
+
+/// The ISSUE-1 pipeline invariant, explicitly: for every base strategy,
+/// the Pipelined wrapper still yields disjoint granule-aligned ranges
+/// exactly covering [0, gws) under arbitrary completion interleavings.
+#[test]
+fn prop_pipelined_wrapper_preserves_exact_coverage() {
+    forall(
+        "pipelined exactly-once coverage",
+        |r| {
+            let mut c = gen_case(r);
+            c.pipelined = true;
+            c
+        },
+        |case| {
+            let assigned = drain(case, 17);
+            let total_items = case.total_granules * case.granule;
+            let mut seen = vec![0u8; total_items];
+            for (_, r) in &assigned {
+                prop_assert!(r.begin % case.granule == 0, "begin misaligned: {r:?}");
+                prop_assert!(r.len() % case.granule == 0, "length misaligned: {r:?}");
+                prop_assert!(r.end <= total_items, "range {r:?} exceeds {total_items}");
+                for slot in &mut seen[r.begin..r.end] {
+                    prop_assert!(*slot == 0, "item assigned twice in {r:?}");
+                    *slot = 1;
+                }
+            }
+            prop_assert!(
+                seen.iter().all(|&s| s == 1),
+                "uncovered items: {}",
+                seen.iter().filter(|&&s| s == 0).count()
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Pipelining changes *when* packages are requested, never *what* the
+/// base strategy hands out: for an identical request order the wrapped
+/// and unwrapped schedulers produce the same assignment sequence.
+#[test]
+fn prop_pipelined_wrapper_is_transparent() {
+    forall("pipelined transparency", gen_case, |case| {
+        let devs = devices(case);
+        let mut base = build_base(case);
+        let mut piped = Pipelined::new(build_base(case), 2);
+        base.start(case.total_granules, case.granule, &devs);
+        piped.start(case.total_granules, case.granule, &devs);
+        let mut rng = XorShift::new(23);
+        for _ in 0..2 * case.total_granules + 4 {
+            let dev = rng.below(devs.len());
+            let a = base.next_package(dev);
+            let b = piped.next_package(dev);
+            prop_assert!(a == b, "diverged on dev {dev}: {a:?} vs {b:?}");
+            if a.is_none() {
+                break;
+            }
+        }
+        Ok(())
+    });
 }
