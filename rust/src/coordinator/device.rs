@@ -2,15 +2,35 @@
 //!
 //! Exactly as the paper's Figure 1: the low-level runtime (OpenCL there,
 //! PJRT / the native executor here) is encapsulated inside a `Device`
-//! managed by its own thread. Each worker owns an executor + resident
-//! buffers, simulates its profile's init latency and speed, executes
-//! assigned packages and streams completion events to the engine's
-//! master loop.
+//! managed by its own thread. Each worker owns an executor over the
+//! engine's shared input views, claims disjoint windows of the run's
+//! output arena, simulates its profile's init latency and speed,
+//! executes assigned packages and streams completion events to the
+//! engine's master loop.
+//!
+//! # Memory model
+//!
+//! Workers hold no per-device copies of anything sized O(N): inputs are
+//! shared [`InputView`]s (pointer bumps) and results go straight into
+//! the [`OutputArena`]'s claim-checked disjoint windows — there is no
+//! full-size per-worker output buffer and no end-of-run merge. Device
+//! compute runs *genuinely in parallel* across worker threads: the seed's
+//! global `exec_lock` (which physically serialized all executions so raw
+//! timings stayed clean) is gone. The trade is explicit: **results** are
+//! timing-independent (disjoint writes, per-item-deterministic kernels —
+//! bit-identical under any interleaving), while **raw timings** now
+//! include physical core contention, so on an oversubscribed host the
+//! simulated durations of contended packages inflate and adaptive
+//! schedules can shift with machine load. That is the same trade a real
+//! co-executing node makes (devices there contend for the bus and host
+//! cores too); the `BASE_SLOWDOWN` stretch keeps wall-clock overlap
+//! absorbed, and the serialization it replaced made multi-device
+//! wall-clock numbers meaningless.
 //!
 //! # Worker pipeline
 //!
 //! With `pipeline_depth <= 1` the worker is the paper's blocking loop:
-//! receive a package, stage its H2D transfer, execute, write back, send
+//! receive a package, stage its H2D transfer, execute, send
 //! `Done`, wait for the next assignment — every package pays the full
 //! transfer plus a master round-trip of idle time.
 //!
@@ -27,15 +47,17 @@
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::config::Configurator;
-use crate::coordinator::introspector::PackageTrace;
+use crate::coordinator::introspector::{PackageTrace, TransferStats};
 use crate::coordinator::work::Range;
 use crate::platform::{DeviceKind, DeviceProfile, TimeScaler};
-use crate::runtime::{ArtifactRegistry, BenchManifest, ChunkExecutor, HostBuf, StagedPackage};
+use crate::runtime::{
+    ArtifactRegistry, BenchManifest, ChunkExecutor, InputView, OutputArena, StagedPackage,
+};
 
 /// Paper-style device selection masks (`ecl::DeviceMask`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,7 +122,7 @@ pub(crate) enum ToWorker {
 }
 
 pub(crate) enum FromWorker {
-    /// Device initialized (driver sim + input upload + builds done).
+    /// Device initialized (driver sim + input binding + builds done).
     Ready { dev: usize, init_start: Duration, init_end: Duration },
     /// A prefetched package's H2D staging landed on the device — the
     /// master may top the pipeline back up.
@@ -109,15 +131,10 @@ pub(crate) enum FromWorker {
     /// next package can be decided, shrinking the assign round-trip);
     /// ready for the next assignment.
     Done { dev: usize },
-    /// Worker exited; full-size output buffers, the item-ranges it
-    /// computed (always collected — the result merge depends on them,
-    /// unlike the optional introspection traces), and its traces.
-    Finished {
-        dev: usize,
-        outputs: Vec<HostBuf>,
-        ranges: Vec<(usize, usize)>,
-        traces: Vec<PackageTrace>,
-    },
+    /// Worker exited. Results are already in the output arena (written
+    /// in place, package by package); only the introspection traces and
+    /// the per-run transfer byte counts travel back.
+    Finished { dev: usize, traces: Vec<PackageTrace>, xfer: TransferStats },
     Failed { dev: usize, message: String },
 }
 
@@ -126,12 +143,12 @@ pub(crate) struct WorkerCtx {
     pub profile: DeviceProfile,
     pub registry: ArtifactRegistry,
     pub bench: BenchManifest,
-    pub inputs: Arc<Vec<HostBuf>>,
+    /// Shared immutable input views (pointer bumps, not copies).
+    pub inputs: Vec<InputView>,
+    /// The run's output arena; this worker claims disjoint windows of it.
+    pub arena: Arc<OutputArena>,
     pub config: Configurator,
     pub epoch: Instant,
-    /// Serializes physical executions across device threads so raw
-    /// timings are clean; the stretch absorbs the wait (simclock docs).
-    pub exec_lock: Arc<Mutex<()>>,
     /// True when a CPU device co-executes in the same engine — triggers
     /// the profile's `init_contention` (the paper's Phi driver effect).
     pub contended_init: bool,
@@ -198,8 +215,9 @@ fn worker_main(
     let init_start = ctx.epoch.elapsed();
     let pipelined = ctx.pipeline_depth > 1;
 
-    // 1. Real initialization: executor, resident inputs, builds.
-    let mut exec = ChunkExecutor::with_options(
+    // 1. Real initialization: executor over the shared input views (a
+    // pointer bump per input in resident mode — no per-device copy).
+    let mut exec = ChunkExecutor::with_views(
         &ctx.registry,
         &ctx.bench,
         &ctx.inputs,
@@ -208,12 +226,10 @@ fn worker_main(
     if ctx.config.eager_compile {
         exec.prepare_all()?;
     }
-    let mut outputs: Vec<HostBuf> = ctx
-        .bench
-        .outputs
-        .iter()
-        .map(|o| HostBuf::zeros_f32(o.elems))
-        .collect();
+    let mut xfer = TransferStats {
+        input_upload_bytes: exec.input_upload_bytes(),
+        ..Default::default()
+    };
 
     // 2. Rendezvous: no device starts computing while another is still
     // burning physical cores on compilation (see WorkerCtx::init_barrier).
@@ -232,7 +248,6 @@ fn worker_main(
     let init_end = ctx.epoch.elapsed();
     let mut scaler = TimeScaler::new(&ctx.profile, ctx.seed);
     let mut traces: Vec<PackageTrace> = Vec::new();
-    let mut computed: Vec<(usize, usize)> = Vec::new();
     let mut queue: VecDeque<Range> = VecDeque::new();
     let mut staged: Option<Prefetched> = None;
     let mut finishing = false;
@@ -241,14 +256,13 @@ fn worker_main(
         .send(FromWorker::Ready { dev: ctx.dev, init_start, init_end })
         .ok();
 
-    // Stage a package's H2D phase (compile + upload under the exec lock).
+    // Stage a package's H2D phase. No lock: staging is a host-side copy
+    // (or a no-op in resident mode) that a real bus would also run
+    // concurrently with other devices' compute.
     let stage = |exec: &mut ChunkExecutor, range: Range| -> anyhow::Result<Prefetched> {
         let staged_at = Instant::now();
         let h2d_start = ctx.epoch.elapsed();
-        let staged = {
-            let _guard = ctx.exec_lock.lock().unwrap();
-            exec.stage(range.begin, range.end)?
-        };
+        let staged = exec.stage(range.begin, range.end)?;
         let h2d_end = ctx.epoch.elapsed();
         Ok(Prefetched { range, staged, h2d_start, h2d_end, staged_at })
     };
@@ -295,14 +309,23 @@ fn worker_main(
             }
         };
 
-        // Execute (raw) and write back.
+        // Claim this package's disjoint arena windows and execute the
+        // kernels straight into them — truly parallel with every other
+        // device (no exec lock), no scratch, no write-back copy.
+        let mut windows = ctx
+            .arena
+            .claim(current.range.begin, current.range.end)
+            .map_err(|e| anyhow::anyhow!("arena claim failed: {e}"))?;
         let exec_started = Instant::now();
         let exec_start = ctx.epoch.elapsed();
         let timing = {
-            let _guard = ctx.exec_lock.lock().unwrap();
-            exec.execute_staged(current.staged, &mut outputs)?
+            let mut slices: Vec<&mut [f32]> =
+                windows.iter_mut().map(|w| w.as_mut_slice()).collect();
+            exec.execute_staged(current.staged, &mut slices)?
         };
         let exec_end = ctx.epoch.elapsed();
+        xfer.h2d_bytes += timing.h2d_bytes;
+        xfer.d2h_bytes += timing.d2h_bytes;
 
         // Overlap: stage the next package's H2D inside this package's
         // compute window, and report completion early so the master's
@@ -342,7 +365,6 @@ fn worker_main(
         } else {
             exec_end
         };
-        computed.push((current.range.begin, current.range.end));
 
         if ctx.config.introspect {
             traces.push(PackageTrace {
@@ -359,6 +381,8 @@ fn worker_main(
                 exec_start,
                 raw_exec: timing.exec,
                 launches: timing.launches,
+                h2d_bytes: timing.h2d_bytes,
+                d2h_bytes: timing.d2h_bytes,
             });
         }
         if !pipelined {
@@ -367,7 +391,7 @@ fn worker_main(
     }
 
     to_master
-        .send(FromWorker::Finished { dev: ctx.dev, outputs, ranges: computed, traces })
+        .send(FromWorker::Finished { dev: ctx.dev, traces, xfer })
         .ok();
     Ok(())
 }

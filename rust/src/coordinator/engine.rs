@@ -2,11 +2,14 @@
 //! sizes, scheduler choice, pipeline depth, program consumption and
 //! `run()`.
 //!
-//! `run()` spawns one worker thread per selected device, drives the
-//! master scheduling loop (assign-on-completion, the paper's Scheduler
-//! thread — extended with per-device prefetch when pipelining is on),
-//! merges the disjoint result ranges back into the program's output
-//! containers and leaves a full `RunReport` for introspection.
+//! `run()` materializes the program's inputs into shared views and its
+//! outputs into the run's output arena, spawns one worker thread per
+//! selected device, drives the master scheduling loop
+//! (assign-on-completion, the paper's Scheduler thread — extended with
+//! per-device prefetch when pipelining is on), recovers the arena
+//! buffers back into the program's output containers (zero-copy — the
+//! workers already wrote every result in place) and leaves a full
+//! `RunReport` for introspection.
 //!
 //! # Master loop
 //!
@@ -20,15 +23,15 @@
 //!   at once — back-pressure for slow buses) and top up again.
 //! * `Done` — a package completed; one slot freed, assign the next
 //!   package or send `Finish` when the scheduler is dry for that device.
-//! * `Finished`/`Failed` — worker exited; collect outputs/traces or the
-//!   failure.
+//! * `Finished`/`Failed` — worker exited; collect its traces and
+//!   transfer stats (results are already in the arena) or the failure.
 //!
 //! With `depth == 1` this reduces exactly to the paper's blocking
 //! assign-on-completion loop.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::config::Configurator;
@@ -40,7 +43,7 @@ use crate::coordinator::introspector::{DeviceTrace, RunReport};
 use crate::coordinator::program::{Arg, Program};
 use crate::coordinator::scheduler::{SchedDevice, Scheduler, SchedulerKind};
 use crate::platform::{DeviceKind, NodeConfig};
-use crate::runtime::{host::merge_ranges, ArtifactRegistry, HostBuf};
+use crate::runtime::{input_views, ArtifactRegistry, HostBuf, InputView, OutputArena};
 
 /// Most packages a pipelined device keeps in flight. Deeper pipelines buy
 /// nothing (one package computes while one stages) but starve adaptive
@@ -254,6 +257,29 @@ impl Engine {
                     got: buf.len(),
                 });
             }
+            // Validated *before* any buffer is moved into the arena: a
+            // failure here must not destroy outputs already taken.
+            if buf.host().as_f32().is_none() {
+                return Err(EclError::Runtime(format!(
+                    "output buffer '{}' must be f32",
+                    spec.name
+                )));
+            }
+            // The arena windows are item-addressed, so the manifest
+            // geometry must be internally consistent before we commit
+            // the program's buffers to it.
+            if spec.elems != bench.n * spec.elems_per_item {
+                return Err(EclError::Runtime(format!(
+                    "manifest output '{}' inconsistent: {} elems for {} items x {} per item",
+                    spec.name, spec.elems, bench.n, spec.elems_per_item
+                )));
+            }
+        }
+        if bench.granule == 0 || bench.n % bench.granule != 0 {
+            return Err(EclError::Runtime(format!(
+                "manifest geometry inconsistent: n={} granule={}",
+                bench.n, bench.granule
+            )));
         }
         validate_args(program.args(), &bench.scalars)?;
         if let SchedulerKind::Static { props: Some(p), .. } = self.scheduler.base() {
@@ -275,11 +301,31 @@ impl Engine {
             return Err(EclError::BadPipelineDepth { depth, max: MAX_PIPELINE_DEPTH });
         }
 
+        // ---- zero-copy buffer setup ------------------------------------
+        // Inputs: one shared immutable view per program input (a single
+        // O(N) materialization; every worker shares the allocation).
+        let inputs: Vec<InputView> = input_views(program.inputs().iter().map(|b| b.host()))
+            .map_err(|e| EclError::Runtime(format!("{e:#}")))?;
+        // Outputs: move the program's buffers into the run's arena.
+        // Workers claim disjoint granule-aligned windows and write
+        // results in place; the buffers come back after the join. All
+        // outputs were already validated f32 above, so this loop is
+        // infallible — it can never abandon a half-taken program.
+        let mut arena_bufs: Vec<(Vec<f32>, usize)> = Vec::with_capacity(bench.outputs.len());
+        for (spec, out) in bench.outputs.iter().zip(program.outputs_mut()) {
+            let data = out
+                .host_mut()
+                .as_f32_mut()
+                .expect("outputs validated f32 above");
+            arena_bufs.push((std::mem::take(data), spec.elems_per_item));
+        }
+        let arena = Arc::new(
+            OutputArena::new(arena_bufs, bench.granule, bench.n)
+                .map_err(|e| EclError::Runtime(format!("{e:#}")))?,
+        );
+
         // ---- spawn device workers -------------------------------------
-        let inputs: Arc<Vec<HostBuf>> =
-            Arc::new(program.inputs().iter().map(|b| b.host().clone()).collect());
         let epoch = Instant::now();
-        let exec_lock = Arc::new(Mutex::new(()));
         let has_cpu = self
             .selected
             .iter()
@@ -303,10 +349,10 @@ impl Engine {
                 profile,
                 registry: self.registry.clone(),
                 bench: bench.clone(),
-                inputs: Arc::clone(&inputs),
+                inputs: inputs.clone(),
+                arena: Arc::clone(&arena),
                 config: self.config.clone(),
                 epoch,
-                exec_lock: Arc::clone(&exec_lock),
                 contended_init: contended,
                 init_barrier: Arc::clone(&init_barrier),
                 pipeline_depth: depth,
@@ -340,11 +386,10 @@ impl Engine {
                     init_start: Default::default(),
                     init_end: Default::default(),
                     packages: Vec::new(),
+                    xfer: Default::default(),
                 }
             })
             .collect();
-        let mut worker_outputs: Vec<Option<(Vec<HostBuf>, Vec<(usize, usize)>)>> =
-            (0..ndev).map(|_| None).collect();
         // Packages assigned but not yet reported Done, per device.
         let mut inflight = vec![0usize; ndev];
         // Assignments whose H2D staging has not been confirmed by an
@@ -420,9 +465,9 @@ impl Engine {
                     inflight[dev] = inflight[dev].saturating_sub(1);
                     top_up(dev, &mut scheduler, &mut inflight, &mut unstaged, &mut finish_sent, &to_workers);
                 }
-                Ok(FromWorker::Finished { dev, outputs, ranges, traces }) => {
+                Ok(FromWorker::Finished { dev, traces, xfer }) => {
                     device_traces[dev].packages = traces;
-                    worker_outputs[dev] = Some((outputs, ranges));
+                    device_traces[dev].xfer = xfer;
                     finished += 1;
                 }
                 Ok(FromWorker::Failed { dev, message }) => {
@@ -447,23 +492,27 @@ impl Engine {
                 ndev - finished
             )));
         }
+
+        // ---- recover the arena: results are already in place -----------
+        // Every worker wrote its packages directly into disjoint arena
+        // windows, so "collecting results" is handing the allocations
+        // back to the program's containers — no merge, no copy. Done
+        // before the failure return so partial results survive a worker
+        // failure, matching the seed's semantics.
+        match Arc::try_unwrap(arena) {
+            Ok(arena) => {
+                for (buf, out) in arena.into_buffers().into_iter().zip(program.outputs_mut()) {
+                    out.store(HostBuf::F32(buf));
+                }
+            }
+            Err(_) => {
+                failure.get_or_insert(EclError::Runtime(
+                    "output arena still shared after worker join".into(),
+                ));
+            }
+        }
         if let Some(e) = failure {
             return Err(e);
-        }
-
-        // ---- merge disjoint result ranges back into the program --------
-        // Ranges come from the worker's own record of what it computed,
-        // not from the introspection traces — merging must work with
-        // `introspect` off.
-        for outs in worker_outputs.into_iter().flatten() {
-            let (outs, ranges) = outs;
-            for ((src, spec), dst) in
-                outs.iter().zip(&bench.outputs).zip(program.outputs_mut())
-            {
-                let src = src.as_f32().expect("worker outputs are f32");
-                let dst = dst.host_mut().as_f32_mut().expect("program outputs are f32");
-                merge_ranges(dst, src, &ranges, spec.elems_per_item);
-            }
         }
 
         // The label reflects the *effective* depth: a Tier-1

@@ -8,6 +8,12 @@
 //! a package's H2D span sits *inside the previous package's compute
 //! window* — [`RunReport::transfer_overlap_count`] is how the harnesses
 //! verify the overlap actually happened.
+//!
+//! Since the zero-copy memory subsystem, every trace also counts bytes
+//! moved per direction ([`TransferStats`], [`RunReport::h2d_bytes`] /
+//! [`RunReport::d2h_bytes`] / [`RunReport::input_upload_bytes`]), so the
+//! elimination of per-device input copies and the d2h scatter is a
+//! measurable number, not a claim.
 
 use std::time::Duration;
 
@@ -28,12 +34,18 @@ pub struct PackageTrace {
     /// Host→device staging sub-span (argument/input upload).
     pub h2d_start: Duration,
     pub h2d_end: Duration,
-    /// Start of the compute sub-span (`exec_start..end` is compute+merge).
+    /// Start of the compute sub-span (`exec_start..end` is compute).
     pub exec_start: Duration,
     /// Raw (un-stretched) backend execution time.
     pub raw_exec: Duration,
     /// Sub-launches the package decomposed into.
     pub launches: u32,
+    /// Bytes the package's H2D staging moved (offset args in resident
+    /// mode, input windows in the §5.2 re-upload ablation).
+    pub h2d_bytes: usize,
+    /// Bytes the package's D2H phase moved; 0 = results written in
+    /// place through the output arena (the zero-copy path).
+    pub d2h_bytes: usize,
 }
 
 impl PackageTrace {
@@ -52,6 +64,22 @@ impl PackageTrace {
     }
 }
 
+/// Bytes a device worker moved between host and device over a whole
+/// run. Collected unconditionally (unlike the per-package traces, which
+/// honor the `introspect` flag) because the overhead harness counts the
+/// zero-copy win with introspection off.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    /// Bytes copied to make the run's inputs visible to this device.
+    /// 0 = the worker shared the engine's input views (zero-copy).
+    pub input_upload_bytes: usize,
+    /// Bytes moved host→device across all packages (staging).
+    pub h2d_bytes: usize,
+    /// Bytes moved device→host across all packages. 0 = every result
+    /// was written directly into the output arena.
+    pub d2h_bytes: usize,
+}
+
 /// Per-device timeline.
 #[derive(Debug, Clone)]
 pub struct DeviceTrace {
@@ -63,6 +91,8 @@ pub struct DeviceTrace {
     pub init_start: Duration,
     pub init_end: Duration,
     pub packages: Vec<PackageTrace>,
+    /// Bytes moved per direction over the whole run.
+    pub xfer: TransferStats,
 }
 
 impl DeviceTrace {
@@ -174,6 +204,24 @@ impl RunReport {
         self.transfer_overlap_count() > 0
     }
 
+    /// Total bytes moved host→device across all devices (staging).
+    pub fn h2d_bytes(&self) -> usize {
+        self.devices.iter().map(|d| d.xfer.h2d_bytes).sum()
+    }
+
+    /// Total bytes moved device→host across all devices. 0 means every
+    /// result was written in place through the output arena.
+    pub fn d2h_bytes(&self) -> usize {
+        self.devices.iter().map(|d| d.xfer.d2h_bytes).sum()
+    }
+
+    /// Total bytes copied to make inputs device-visible. 0 means every
+    /// worker shared the engine's input views — O(N) per run instead of
+    /// the seed's O(devices × N).
+    pub fn input_upload_bytes(&self) -> usize {
+        self.devices.iter().map(|d| d.xfer.input_upload_bytes).sum()
+    }
+
     /// ASCII timeline (one row per device) — the Introspector "visual
     /// representation" of Figures 5/6 for terminals. `i` marks init,
     /// `#` compute windows, `u` H2D staging visible outside compute
@@ -220,12 +268,12 @@ impl RunReport {
     /// pipelined sub-spans.
     pub fn package_csv(&self) -> String {
         let mut s = String::from(
-            "device,kind,begin_item,end_item,start_ms,end_ms,h2d_start_ms,h2d_end_ms,exec_start_ms,raw_ms,launches\n",
+            "device,kind,begin_item,end_item,start_ms,end_ms,h2d_start_ms,h2d_end_ms,exec_start_ms,raw_ms,launches,h2d_bytes,d2h_bytes\n",
         );
         for d in &self.devices {
             for p in &d.packages {
                 s.push_str(&format!(
-                    "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{}\n",
+                    "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{},{},{}\n",
                     d.name,
                     d.kind.label(),
                     p.begin_item,
@@ -236,7 +284,9 @@ impl RunReport {
                     p.h2d_end.as_secs_f64() * 1e3,
                     p.exec_start.as_secs_f64() * 1e3,
                     p.raw_exec.as_secs_f64() * 1e3,
-                    p.launches
+                    p.launches,
+                    p.h2d_bytes,
+                    p.d2h_bytes
                 ));
             }
         }
@@ -265,6 +315,8 @@ mod tests {
             exec_start: ms(s + 1),
             raw_exec: ms((t - s) / 4),
             launches: 1,
+            h2d_bytes: 4,
+            d2h_bytes: 0,
         }
     }
 
@@ -281,6 +333,7 @@ mod tests {
                     init_start: ms(0),
                     init_end: ms(10),
                     packages: vec![mk(0, 0, 30, 10, 80)],
+                    xfer: TransferStats { input_upload_bytes: 0, h2d_bytes: 4, d2h_bytes: 0 },
                 },
                 DeviceTrace {
                     name: "gpu".into(),
@@ -288,6 +341,7 @@ mod tests {
                     init_start: ms(0),
                     init_end: ms(5),
                     packages: vec![mk(1, 30, 100, 5, 100)],
+                    xfer: TransferStats { input_upload_bytes: 0, h2d_bytes: 4, d2h_bytes: 0 },
                 },
             ],
         }
@@ -345,6 +399,19 @@ mod tests {
     }
 
     #[test]
+    fn bytes_moved_aggregate_across_devices() {
+        let mut r = mk_report();
+        r.devices[0].xfer =
+            TransferStats { input_upload_bytes: 100, h2d_bytes: 8, d2h_bytes: 16 };
+        assert_eq!(r.h2d_bytes(), 12);
+        assert_eq!(r.d2h_bytes(), 16);
+        assert_eq!(r.input_upload_bytes(), 100);
+        let csv = r.package_csv();
+        assert!(csv.starts_with("device,"));
+        assert!(csv.lines().next().unwrap().ends_with("h2d_bytes,d2h_bytes"));
+    }
+
+    #[test]
     fn pipelined_traces_report_overlap() {
         let mut r = mk_report();
         // Package 2 on the gpu: its H2D ran at 40..45ms, inside package
@@ -360,6 +427,8 @@ mod tests {
             exec_start: ms(100),
             raw_exec: ms(5),
             launches: 1,
+            h2d_bytes: 4,
+            d2h_bytes: 0,
         });
         assert_eq!(r.transfer_overlap_count(), 1);
         assert!(r.has_transfer_overlap());

@@ -5,8 +5,14 @@
 //! host<->device synchronization point — with many packages the overhead
 //! shows, with few a slow device can grab too large a tail package
 //! (Figure 9's Binomial/Dynamic-50 imbalance).
-
-use std::collections::VecDeque;
+//!
+//! Hot-loop note: the seed materialized the whole schedule into a
+//! `VecDeque<Range>` at `start` (an O(packages) allocation rebuilt every
+//! run, popped on the master's `Done` hot path). Packages of an equal
+//! split are pure arithmetic, so the scheduler now keeps O(1) state and
+//! computes each package on demand — `next_package` allocates nothing,
+//! and the ranges are bit-identical to `equal_split`'s (asserted by a
+//! unit test below).
 
 use crate::coordinator::work::{equal_split, Range};
 
@@ -14,13 +20,36 @@ use super::{SchedDevice, Scheduler};
 
 #[derive(Debug)]
 pub struct Dynamic {
+    /// Requested package count (≥ 1).
     packages: usize,
-    queue: VecDeque<Range>,
+    // ---- per-run state (O(1), reset in `start`) ----------------------
+    /// Effective package count (≤ total granules, as in `equal_split`).
+    effective: usize,
+    /// Granules per package (floor); the first `extra` packages get one
+    /// more granule.
+    base: usize,
+    extra: usize,
+    granule: usize,
+    /// Next package index to hand out.
+    next: usize,
 }
 
 impl Dynamic {
     pub fn new(packages: usize) -> Self {
-        Self { packages: packages.max(1), queue: VecDeque::new() }
+        Self {
+            packages: packages.max(1),
+            effective: 0,
+            base: 0,
+            extra: 0,
+            granule: 1,
+            next: 0,
+        }
+    }
+
+    /// Begin granule of package `i` under the largest-remainder split:
+    /// the first `extra` packages are `base + 1` granules long.
+    fn begin_granule(&self, i: usize) -> usize {
+        i * self.base + i.min(self.extra)
     }
 }
 
@@ -30,15 +59,26 @@ impl Scheduler for Dynamic {
     }
 
     fn start(&mut self, total_granules: usize, granule: usize, _devices: &[SchedDevice]) {
-        self.queue = equal_split(total_granules, self.packages)
-            .into_iter()
-            .filter(|(b, e)| e > b)
-            .map(|(b, e)| Range::new(b * granule, e * granule))
-            .collect();
+        self.effective = if total_granules == 0 {
+            0
+        } else {
+            self.packages.min(total_granules)
+        };
+        self.base = if self.effective == 0 { 0 } else { total_granules / self.effective };
+        self.extra = if self.effective == 0 { 0 } else { total_granules % self.effective };
+        self.granule = granule;
+        self.next = 0;
     }
 
     fn next_package(&mut self, _dev: usize) -> Option<Range> {
-        self.queue.pop_front()
+        if self.next >= self.effective {
+            return None;
+        }
+        let i = self.next;
+        self.next += 1;
+        let b = self.begin_granule(i);
+        let e = self.begin_granule(i + 1);
+        Some(Range::new(b * self.granule, e * self.granule))
     }
 }
 
@@ -91,5 +131,34 @@ mod tests {
         }
         assert_eq!(total, 48);
         assert_eq!(n, 3, "at most one package per granule");
+    }
+
+    #[test]
+    fn zero_granules_yields_nothing() {
+        let mut s = Dynamic::new(10);
+        s.start(0, 8, &devs(1));
+        assert!(s.next_package(0).is_none());
+    }
+
+    /// The on-demand arithmetic must reproduce `equal_split` exactly —
+    /// the allocation-free rewrite may not move a single boundary.
+    #[test]
+    fn matches_equal_split_bit_for_bit() {
+        for (total, packages, granule) in
+            [(100usize, 7usize, 8usize), (5, 5, 1), (3, 10, 16), (1024, 50, 128), (1, 300, 64)]
+        {
+            let want: Vec<(usize, usize)> = equal_split(total, packages)
+                .into_iter()
+                .filter(|(b, e)| e > b)
+                .map(|(b, e)| (b * granule, e * granule))
+                .collect();
+            let mut s = Dynamic::new(packages);
+            s.start(total, granule, &devs(2));
+            let mut got = Vec::new();
+            while let Some(r) = s.next_package(0) {
+                got.push((r.begin, r.end));
+            }
+            assert_eq!(got, want, "total={total} packages={packages}");
+        }
     }
 }

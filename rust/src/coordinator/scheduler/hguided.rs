@@ -7,6 +7,13 @@
 //!
 //! clamped below by a per-device minimum that also scales with power
 //! ("giving bigger package sizes in the most powerful devices").
+//!
+//! Hot-loop note: `next_package` runs on the master's `Done` path for
+//! every package, so it must not allocate — it is pure arithmetic over
+//! the per-run state (`powers` is built once per `start`; sizing reads
+//! it in place). Keep it that way: no per-package `Vec`s or `String`s
+//! (the audit that turned `Dynamic`'s materialized queue into O(1)
+//! arithmetic applies here too).
 
 use crate::coordinator::work::Range;
 

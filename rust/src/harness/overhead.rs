@@ -92,6 +92,7 @@ pub fn native_time(
 /// Full-lifecycle EngineCL time on one device with the given scheduler
 /// and pipeline depth, simulation off, lazy compilation (so every side
 /// builds the same executables per rep).
+#[allow(clippy::too_many_arguments)]
 fn enginecl_time_with(
     reg: &ArtifactRegistry,
     node: &NodeConfig,
@@ -161,6 +162,30 @@ pub fn enginecl_time_with_depth(
         SchedulerKind::dynamic(packages),
         depth,
     )
+}
+
+/// Byte counters from one default-config engine run (resident shared
+/// inputs, arena outputs) on the paper's Static protocol — makes the
+/// zero-copy win a countable number in the harness output.
+pub fn transfer_stats(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    bench: &str,
+    device: usize,
+    gws: usize,
+) -> Result<(usize, usize, usize)> {
+    let mut engine = build_engine(
+        reg,
+        node,
+        bench,
+        vec![DeviceSpec::new(device)],
+        SchedulerKind::static_default(),
+        Some(gws),
+    )?;
+    *engine.configurator() = crate::coordinator::Configurator::raw();
+    engine.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let report = engine.report().expect("run succeeded");
+    Ok((report.input_upload_bytes(), report.h2d_bytes(), report.d2h_bytes()))
 }
 
 fn summary(times: &[f64]) -> (Duration, f64) {

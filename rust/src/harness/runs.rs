@@ -185,7 +185,10 @@ mod tests {
                         exec_start: ms(0),
                         raw_exec: ms(1),
                         launches: 1,
+                        h2d_bytes: 4,
+                        d2h_bytes: 0,
                     }],
+                    xfer: Default::default(),
                 })
                 .collect(),
         }

@@ -1,13 +1,20 @@
 //! Time stretching for simulated devices.
 //!
-//! Every device worker measures the *raw* PJRT execution time of each
-//! package (under a global execute lock for clean measurement) and then
-//! holds the package until `raw * BASE_SLOWDOWN / relative_power` wall
-//! time has elapsed *since the package started* (lock wait included).
-//! Because even the fastest device is stretched `BASE_SLOWDOWN`-fold, the
-//! serialized physical executions of up-to-three devices fit inside the
-//! stretched window and contention does not distort completion order —
-//! the wall clock then behaves like the simulated heterogeneous machine.
+//! Every device worker measures the *raw* backend execution time of each
+//! package and then holds the package until
+//! `raw * BASE_SLOWDOWN / relative_power` wall time has elapsed *since
+//! the package started*. Device threads compute genuinely in parallel
+//! (the seed's global execute lock is gone), which changes what `raw`
+//! means: on a host with fewer free cores than device threads it
+//! includes physical core contention, so contended packages' simulated
+//! durations inflate — non-uniformly, if the OS favors one thread. The
+//! model accepts that deliberately: outputs are bit-identical under any
+//! timing (disjoint arena writes, per-item-deterministic kernels), the
+//! `BASE_SLOWDOWN` stretch keeps short contention stalls inside the
+//! stretched window on adequately-provisioned hosts, and a real
+//! co-executing machine's devices contend for shared resources too —
+//! whereas the lock made "co-execution" physically sequential and every
+//! multi-device wall-clock number a fiction.
 
 use std::time::{Duration, Instant};
 
@@ -15,8 +22,9 @@ use crate::util::rng::XorShift;
 
 use super::profile::DeviceProfile;
 
-/// Global stretch applied to the fastest device. Must exceed the number of
-/// concurrently co-executing devices for the absorption argument to hold.
+/// Global stretch applied to the fastest device. Must exceed the number
+/// of concurrently co-executing devices so that physical core contention
+/// between truly-parallel workers is absorbed by the stretched window.
 pub const BASE_SLOWDOWN: f64 = 4.0;
 
 /// Per-device stretcher. Owned by the device worker thread.

@@ -1,0 +1,281 @@
+//! Output arena — one allocation per run, split into granule-aligned
+//! disjoint windows that device workers write into directly.
+//!
+//! The seed engine gave every worker its own full-size output buffers
+//! (O(devices × N) host memory), had the executor scatter chunk-local
+//! scratch into them, and serially merged the disjoint ranges back into
+//! the program's containers after the run. On a shared host-memory
+//! machine all of that is redundant copying: the scheduler already
+//! guarantees each work-item is assigned to exactly one device, so the
+//! workers can write straight into the final buffers — if something
+//! *enforces* the disjointness the scheduler promises.
+//!
+//! [`OutputArena`] is that enforcement point. It owns the run's output
+//! buffers (taken from the program, returned after the run — no new
+//! allocation on the happy path) and hands out [`ArenaWindow`]s: raw
+//! disjoint sub-slices covering exactly the claimed item range. A claim
+//! ledger rejects any overlapping, misaligned, or out-of-bounds claim
+//! *before* a window exists, which is what makes the aliasing-free
+//! `unsafe` windows sound: two successfully claimed windows can never
+//! touch the same element.
+//!
+//! Determinism: every kernel is per-item deterministic (the value of
+//! item `i` depends only on the inputs and `i`), so concurrent writers
+//! into disjoint windows produce bit-identical results to the seed's
+//! copy-then-merge path — the integration tests assert this across all
+//! native kernels and scheduler specs.
+
+use std::cell::UnsafeCell;
+use std::marker::PhantomData;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// One output buffer held by the arena.
+struct Slot {
+    data: UnsafeCell<Vec<f32>>,
+    /// Heap base of `data`, captured at construction while the `Vec`
+    /// was uniquely owned. Window pointers are derived from this raw
+    /// pointer with pure pointer arithmetic — `claim` never materializes
+    /// a `&mut Vec` (two threads doing so concurrently would be
+    /// aliasing exclusive references, UB even with disjoint elements).
+    /// Stays valid because the heap allocation never moves: the arena
+    /// only ever moves the `Vec` *header*, never resizes it.
+    base: *mut f32,
+    /// Output elements per work-item (window geometry).
+    elems_per_item: usize,
+}
+
+/// The per-run output arena. Shared across device workers via `Arc`;
+/// recovered (and its buffers returned to the program) once every
+/// worker has exited.
+pub struct OutputArena {
+    slots: Vec<Slot>,
+    granule: usize,
+    /// Total work-items the buffers cover.
+    items: usize,
+    /// Claimed item-ranges, checked for overlap on every claim.
+    claims: Mutex<Vec<(usize, usize)>>,
+}
+
+// SAFETY: the only mutable access to `slots` goes through windows handed
+// out by `claim`, which the claim ledger proves pairwise disjoint; reads
+// happen only in `into_buffers`, which takes the arena by value — and
+// because every window borrows the arena (`ArenaWindow<'_>`), the borrow
+// checker forbids consuming or dropping it while any window is alive.
+unsafe impl Sync for OutputArena {}
+unsafe impl Send for OutputArena {}
+
+impl OutputArena {
+    /// Build an arena over `buffers`, one `(data, elems_per_item)` pair
+    /// per output. Every buffer must hold `items * elems_per_item`
+    /// elements and `items` must be granule-aligned.
+    pub fn new(buffers: Vec<(Vec<f32>, usize)>, granule: usize, items: usize) -> Result<Self> {
+        anyhow::ensure!(granule > 0, "granule must be positive");
+        anyhow::ensure!(items % granule == 0, "items {items} not granule-aligned");
+        let mut slots = Vec::with_capacity(buffers.len());
+        for (i, (mut data, epi)) in buffers.into_iter().enumerate() {
+            anyhow::ensure!(
+                data.len() == items * epi,
+                "output {i}: buffer has {} elems, want {} ({} items x {} per item)",
+                data.len(),
+                items * epi,
+                items,
+                epi
+            );
+            let base = data.as_mut_ptr();
+            slots.push(Slot { data: UnsafeCell::new(data), base, elems_per_item: epi });
+        }
+        Ok(Self { slots, granule, items, claims: Mutex::new(Vec::new()) })
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn granule(&self) -> usize {
+        self.granule
+    }
+
+    pub fn items(&self) -> usize {
+        self.items
+    }
+
+    /// Claim the item range `[begin, end)` and return one window per
+    /// output covering exactly that range. Fails (without handing out
+    /// any window) when the range is empty, out of bounds, not
+    /// granule-aligned, or overlaps a previous claim — the violations
+    /// that would make the direct-write path unsound.
+    pub fn claim(&self, begin: usize, end: usize) -> Result<Vec<ArenaWindow<'_>>> {
+        anyhow::ensure!(end > begin, "empty claim {begin}..{end}");
+        anyhow::ensure!(end <= self.items, "claim {begin}..{end} exceeds {} items", self.items);
+        anyhow::ensure!(
+            begin % self.granule == 0 && end % self.granule == 0,
+            "claim {begin}..{end} not aligned to granule {}",
+            self.granule
+        );
+        {
+            let mut claims = self.claims.lock().unwrap();
+            for &(b, e) in claims.iter() {
+                anyhow::ensure!(
+                    end <= b || begin >= e,
+                    "claim {begin}..{end} overlaps prior claim {b}..{e}"
+                );
+            }
+            claims.push((begin, end));
+        }
+        Ok(self
+            .slots
+            .iter()
+            .map(|slot| {
+                // SAFETY: `slot.base` is the heap base captured at
+                // construction (pure pointer arithmetic — no `&mut Vec`
+                // is ever formed here, so concurrent claims never alias
+                // an exclusive reference); the offset stays in bounds by
+                // the `end <= items` check above; and the window's
+                // borrow of `self` keeps the allocation alive for as
+                // long as the pointer can be used. The ledger guarantees
+                // no other window covers any element of `[begin, end)`.
+                let ptr = unsafe { slot.base.add(begin * slot.elems_per_item) };
+                ArenaWindow {
+                    ptr,
+                    len: (end - begin) * slot.elems_per_item,
+                    _arena: PhantomData,
+                }
+            })
+            .collect())
+    }
+
+    /// Item-ranges claimed so far (sorted), for coverage checks.
+    pub fn claimed_ranges(&self) -> Vec<(usize, usize)> {
+        let mut v = self.claims.lock().unwrap().clone();
+        v.sort_unstable();
+        v
+    }
+
+    /// Total items covered by claims so far.
+    pub fn claimed_items(&self) -> usize {
+        self.claims.lock().unwrap().iter().map(|(b, e)| e - b).sum()
+    }
+
+    /// Consume the arena and hand the output buffers back (the engine
+    /// returns them to the program's containers — zero-copy publish).
+    pub fn into_buffers(self) -> Vec<Vec<f32>> {
+        self.slots.into_iter().map(|s| s.data.into_inner()).collect()
+    }
+}
+
+/// A mutable window into one arena output, covering exactly one claimed
+/// item-range. Borrows the arena (so the allocation provably outlives
+/// the pointer — the arena cannot be dropped or consumed while a window
+/// exists), is `Send` so workers can carry their windows across thread
+/// boundaries, and is never `Clone`, so a claim yields exactly one
+/// writer.
+pub struct ArenaWindow<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _arena: PhantomData<&'a OutputArena>,
+}
+
+// SAFETY: the window is an exclusive view of a claim-ledger-verified
+// disjoint region; moving it to another thread moves the exclusivity.
+unsafe impl Send for ArenaWindow<'_> {}
+
+impl ArenaWindow<'_> {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The window as a plain mutable slice (what the executors write
+    /// kernel results into).
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: ptr/len come from a live Vec the arena keeps alive;
+        // disjointness is guaranteed by the claim ledger.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn arena(n: usize, granule: usize, epis: &[usize]) -> OutputArena {
+        OutputArena::new(
+            epis.iter().map(|&e| (vec![0.0f32; n * e], e)).collect(),
+            granule,
+            n,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn claim_windows_have_right_geometry() {
+        let a = arena(64, 8, &[1, 4]);
+        let mut w = a.claim(8, 24).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].len(), 16);
+        assert_eq!(w[1].len(), 64);
+        assert!(!w[0].is_empty());
+        w[0].as_mut_slice().fill(1.0);
+        w[1].as_mut_slice().fill(2.0);
+        drop(w); // windows borrow the arena; release before consuming it
+        let bufs = a.into_buffers();
+        assert!(bufs[0][..8].iter().all(|&x| x == 0.0));
+        assert!(bufs[0][8..24].iter().all(|&x| x == 1.0));
+        assert!(bufs[0][24..].iter().all(|&x| x == 0.0));
+        assert!(bufs[1][32..96].iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn overlapping_claims_rejected() {
+        let a = arena(64, 8, &[1]);
+        a.claim(0, 32).unwrap();
+        assert!(a.claim(24, 40).is_err(), "overlap");
+        assert!(a.claim(0, 8).is_err(), "contained");
+        a.claim(32, 64).unwrap();
+        assert_eq!(a.claimed_items(), 64);
+        assert_eq!(a.claimed_ranges(), vec![(0, 32), (32, 64)]);
+    }
+
+    #[test]
+    fn bad_claims_rejected() {
+        let a = arena(64, 8, &[1]);
+        assert!(a.claim(8, 8).is_err(), "empty");
+        assert!(a.claim(0, 72).is_err(), "out of bounds");
+        assert!(a.claim(4, 12).is_err(), "misaligned begin");
+        assert!(a.claim(0, 12).is_err(), "misaligned end");
+    }
+
+    #[test]
+    fn misshapen_buffers_rejected() {
+        assert!(OutputArena::new(vec![(vec![0.0; 10], 1)], 8, 64).is_err());
+        assert!(OutputArena::new(vec![(vec![0.0; 60], 1)], 8, 60).is_err(), "items misaligned");
+    }
+
+    #[test]
+    fn concurrent_disjoint_writes_land() {
+        let a = Arc::new(arena(1024, 16, &[2]));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let a = Arc::clone(&a);
+            handles.push(std::thread::spawn(move || {
+                let begin = t * 256;
+                let mut w = a.claim(begin, begin + 256).unwrap();
+                w[0].as_mut_slice().fill(t as f32 + 1.0);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let bufs = Arc::try_unwrap(a).ok().unwrap().into_buffers();
+        for t in 0..4usize {
+            let lo = t * 512;
+            assert!(bufs[0][lo..lo + 512].iter().all(|&x| x == t as f32 + 1.0));
+        }
+    }
+}

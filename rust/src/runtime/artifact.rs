@@ -235,7 +235,7 @@ impl ArtifactRegistry {
                 .iter()
                 .map(|o| vec![0.0f32; bench.n * o.elems_per_item])
                 .collect();
-            super::kernels::compute_range(bench, &inputs, 0, bench.n, &mut outs)?;
+            super::kernels::compute_range_vecs(bench, &inputs, 0, bench.n, &mut outs)?;
             return Ok(outs.into_iter().map(HostBuf::F32).collect());
         }
         bench

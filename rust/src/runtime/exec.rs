@@ -12,7 +12,8 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::artifact::BenchManifest;
+use super::artifact::{BenchManifest, BufferEntry};
+use super::host::HostBuf;
 
 /// Timing detail for one package execution.
 #[derive(Debug, Clone, Copy, Default)]
@@ -21,12 +22,21 @@ pub struct ExecTiming {
     pub exec: Duration,
     /// Host→device staging: argument prep / input upload.
     pub h2d: Duration,
-    /// Device→host result write-back into the merge buffers.
+    /// Device→host result write-back. Zero on the native zero-copy path
+    /// (kernels write directly into the output arena windows); nonzero
+    /// on backends that really move results (PJRT literal copy-out).
     pub d2h: Duration,
     /// Lazily-triggered executable compilation time (0 if cached).
     pub compile: Duration,
     /// Number of launches the package decomposed into.
     pub launches: u32,
+    /// Bytes the H2D phase actually moved (staged input windows plus
+    /// per-launch offset arguments). Resident mode over shared views
+    /// stages only offsets, so this stays O(launches), not O(N).
+    pub h2d_bytes: usize,
+    /// Bytes the D2H phase actually moved; 0 = results were written in
+    /// place (the zero-copy arena win the overhead harness counts).
+    pub d2h_bytes: usize,
 }
 
 impl ExecTiming {
@@ -45,6 +55,8 @@ impl ExecTiming {
         self.d2h += other.d2h;
         self.compile += other.compile;
         self.launches += other.launches;
+        self.h2d_bytes += other.h2d_bytes;
+        self.d2h_bytes += other.d2h_bytes;
     }
 }
 
@@ -72,6 +84,60 @@ pub fn decompose_range(
         off += size;
     }
     Ok(plan)
+}
+
+/// Validate that per-output windows cover exactly `items` work-items of
+/// the manifest's output geometry — the `execute_staged` precondition
+/// both backends enforce identically.
+pub fn validate_windows(
+    outputs: &[BufferEntry],
+    outs: &[&mut [f32]],
+    bench_name: &str,
+    items: usize,
+) -> Result<()> {
+    anyhow::ensure!(
+        outs.len() == outputs.len(),
+        "bench '{bench_name}' has {} outputs, got {}",
+        outputs.len(),
+        outs.len()
+    );
+    for (spec, w) in outputs.iter().zip(outs.iter()) {
+        anyhow::ensure!(
+            w.len() == items * spec.elems_per_item,
+            "output '{}': window has {} elems, want {}",
+            spec.name,
+            w.len(),
+            items * spec.elems_per_item
+        );
+    }
+    Ok(())
+}
+
+/// Slice the `[begin, end)` package windows out of full-problem host
+/// buffers — the hand-driven baseline path (`execute_staged_into_host`)
+/// shared by both backends.
+pub fn host_output_windows<'o>(
+    outputs: &[BufferEntry],
+    outs: &'o mut [HostBuf],
+    begin: usize,
+    end: usize,
+) -> Result<Vec<&'o mut [f32]>> {
+    anyhow::ensure!(
+        outs.len() == outputs.len(),
+        "expected {} outputs, got {}",
+        outputs.len(),
+        outs.len()
+    );
+    let mut windows = Vec::with_capacity(outs.len());
+    for (spec, out) in outputs.iter().zip(outs.iter_mut()) {
+        let epi = spec.elems_per_item;
+        let dst = out
+            .as_f32_mut()
+            .with_context(|| format!("output '{}' must be f32", spec.name))?;
+        anyhow::ensure!(dst.len() == spec.elems, "output '{}' wrong size", spec.name);
+        windows.push(&mut dst[begin * epi..end * epi]);
+    }
+    Ok(windows)
 }
 
 #[cfg(test)]
@@ -140,11 +206,23 @@ mod tests {
             d2h: ms(3),
             compile: ms(0),
             launches: 1,
+            h2d_bytes: 100,
+            d2h_bytes: 0,
         };
-        t.accumulate(&ExecTiming { exec: ms(5), h2d: ms(1), d2h: ms(1), compile: ms(4), launches: 2 });
+        t.accumulate(&ExecTiming {
+            exec: ms(5),
+            h2d: ms(1),
+            d2h: ms(1),
+            compile: ms(4),
+            launches: 2,
+            h2d_bytes: 28,
+            d2h_bytes: 64,
+        });
         assert_eq!(t.exec, ms(15));
         assert_eq!(t.xfer(), ms(7));
         assert_eq!(t.total(), ms(26));
         assert_eq!(t.launches, 3);
+        assert_eq!(t.h2d_bytes, 128);
+        assert_eq!(t.d2h_bytes, 64);
     }
 }

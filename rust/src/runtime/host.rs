@@ -6,8 +6,33 @@
 
 use std::io::Read;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
+
+/// A shared, immutable view of one input buffer. Cloning is a pointer
+/// bump: the engine materializes each program input once and every
+/// device worker shares the same allocation — the zero-copy equivalent
+/// of the paper's device-resident read-only buffers (§5.2) on a shared
+/// host-memory machine. O(N) per run instead of O(devices × N).
+pub type InputView = Arc<[f32]>;
+
+/// Materialize host buffers into shared input views (one O(N) copy in
+/// total; every subsequent share is a refcount increment). Takes any
+/// iterator of buffer references so callers (executors over `HostBuf`
+/// slices, the engine over program buffers) share one implementation.
+pub fn input_views<'a, I>(bufs: I) -> Result<Vec<InputView>>
+where
+    I: IntoIterator<Item = &'a HostBuf>,
+{
+    bufs.into_iter()
+        .map(|b| {
+            b.as_f32()
+                .map(InputView::from)
+                .context("input buffers on the scheduling path must be f32")
+        })
+        .collect()
+}
 
 /// A host-resident data buffer handed to/from the engine.
 #[derive(Debug, Clone, PartialEq)]
@@ -47,11 +72,15 @@ impl HostBuf {
     }
 }
 
-/// Scatter the item-ranges a device computed from its full-size output
-/// copy into the program's output container: for each `(begin, end)`
-/// item range, copy `elems_per_item` elements per item. The engine's
-/// merge step — disjoint ranges by the scheduler invariant, so devices
-/// never overwrite each other.
+/// Scatter the item-ranges a device computed from a full-size output
+/// copy into a destination container: for each `(begin, end)` item
+/// range, copy `elems_per_item` elements per item.
+///
+/// This was the engine's end-of-run merge step before the output arena
+/// (workers now write directly into disjoint windows of the final
+/// buffers, so there is nothing left to merge). It is kept as the
+/// reference "seed merge path" the bit-identity tests compare the arena
+/// against, and as a utility for offline trace tooling.
 pub fn merge_ranges(dst: &mut [f32], src: &[f32], ranges: &[(usize, usize)], elems_per_item: usize) {
     for &(b, e) in ranges {
         let lo = b * elems_per_item;

@@ -20,14 +20,19 @@ use anyhow::{Context, Result};
 use super::artifact::BenchManifest;
 
 /// Compute work-items `[begin, end)` of `bench` into `chunk_outs` —
-/// one chunk-local `Vec<f32>` per output buffer, each of length
-/// `(end - begin) * elems_per_item`.
+/// one mutable slice per output buffer, each of length
+/// `(end - begin) * elems_per_item`, indexed relative to `begin`.
+///
+/// Slice-based so callers choose the destination: the executors hand in
+/// windows of the run's output arena (kernels write straight into the
+/// final buffers — no chunk-local scratch, no scatter copy), tests hand
+/// in plain vectors.
 pub fn compute_range(
     bench: &BenchManifest,
-    inputs: &[Vec<f32>],
+    inputs: &[&[f32]],
     begin: usize,
     end: usize,
-    chunk_outs: &mut [Vec<f32>],
+    chunk_outs: &mut [&mut [f32]],
 ) -> Result<()> {
     anyhow::ensure!(end > begin && end <= bench.n, "bad range {begin}..{end}");
     let family = if bench.kernel.is_empty() { &bench.name } else { &bench.kernel };
@@ -39,6 +44,20 @@ pub fn compute_range(
         f if f.starts_with("ray") => ray(bench, inputs, begin, end, chunk_outs),
         other => anyhow::bail!("no native kernel for '{other}'"),
     }
+}
+
+/// [`compute_range`] over `Vec`-backed storage — the convenience form
+/// the synthetic golden-oracle generation and tests use.
+pub fn compute_range_vecs(
+    bench: &BenchManifest,
+    inputs: &[Vec<f32>],
+    begin: usize,
+    end: usize,
+    outs: &mut [Vec<f32>],
+) -> Result<()> {
+    let ins: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let mut windows: Vec<&mut [f32]> = outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+    compute_range(bench, &ins, begin, end, &mut windows)
 }
 
 fn scalar(bench: &BenchManifest, key: &str) -> Result<f64> {
@@ -53,10 +72,10 @@ fn scalar(bench: &BenchManifest, key: &str) -> Result<f64> {
 
 fn binomial(
     bench: &BenchManifest,
-    inputs: &[Vec<f32>],
+    inputs: &[&[f32]],
     begin: usize,
     end: usize,
-    outs: &mut [Vec<f32>],
+    outs: &mut [&mut [f32]],
 ) -> Result<()> {
     let steps = scalar(bench, "steps")? as usize;
     let prices = inputs.first().context("binomial needs a price input")?;
@@ -95,10 +114,10 @@ fn binomial(
 
 fn gaussian(
     bench: &BenchManifest,
-    inputs: &[Vec<f32>],
+    inputs: &[&[f32]],
     begin: usize,
     end: usize,
-    outs: &mut [Vec<f32>],
+    outs: &mut [&mut [f32]],
 ) -> Result<()> {
     let w = scalar(bench, "width")? as usize;
     let h = scalar(bench, "height")? as usize;
@@ -139,7 +158,7 @@ fn mandelbrot(
     bench: &BenchManifest,
     begin: usize,
     end: usize,
-    outs: &mut [Vec<f32>],
+    outs: &mut [&mut [f32]],
 ) -> Result<()> {
     let w = scalar(bench, "width")? as usize;
     let h = scalar(bench, "height")? as usize;
@@ -175,10 +194,10 @@ fn mandelbrot(
 
 fn nbody(
     bench: &BenchManifest,
-    inputs: &[Vec<f32>],
+    inputs: &[&[f32]],
     begin: usize,
     end: usize,
-    outs: &mut [Vec<f32>],
+    outs: &mut [&mut [f32]],
 ) -> Result<()> {
     let dt = scalar(bench, "dt")? as f32;
     let eps2 = scalar(bench, "eps2")? as f32;
@@ -227,10 +246,10 @@ fn nbody(
 
 fn ray(
     bench: &BenchManifest,
-    inputs: &[Vec<f32>],
+    inputs: &[&[f32]],
     begin: usize,
     end: usize,
-    outs: &mut [Vec<f32>],
+    outs: &mut [&mut [f32]],
 ) -> Result<()> {
     let w = scalar(bench, "width")? as usize;
     let h = scalar(bench, "height")? as usize;
@@ -352,12 +371,12 @@ mod tests {
             let bench = reg.bench(name).unwrap().clone();
             let inputs = full_inputs(&reg, &bench);
             let mut full = chunk_outs(&bench, bench.n);
-            compute_range(&bench, &inputs, 0, bench.n, &mut full).unwrap();
+            compute_range_vecs(&bench, &inputs, 0, bench.n, &mut full).unwrap();
 
             let begin = bench.granule;
             let end = (3 * bench.granule).min(bench.n);
             let mut part = chunk_outs(&bench, end - begin);
-            compute_range(&bench, &inputs, begin, end, &mut part).unwrap();
+            compute_range_vecs(&bench, &inputs, begin, end, &mut part).unwrap();
             for (spec, (fo, po)) in bench.outputs.iter().zip(full.iter().zip(&part)) {
                 let lo = begin * spec.elems_per_item;
                 let hi = end * spec.elems_per_item;
@@ -372,7 +391,7 @@ mod tests {
         let bench = reg.bench("mandelbrot").unwrap().clone();
         let maxiter = bench.scalars["maxiter"] as f32;
         let mut outs = chunk_outs(&bench, bench.n);
-        compute_range(&bench, &[], 0, bench.n, &mut outs).unwrap();
+        compute_range_vecs(&bench, &[], 0, bench.n, &mut outs).unwrap();
         let vals = &outs[0];
         assert!(vals.iter().any(|&v| v == maxiter), "some pixels in the set");
         assert!(vals.iter().any(|&v| v < maxiter), "some pixels escape");
@@ -385,6 +404,6 @@ mod tests {
         let mut bench = reg.bench("binomial").unwrap().clone();
         bench.kernel = "no-such-kernel".into();
         let mut outs = chunk_outs(&bench, bench.granule);
-        assert!(compute_range(&bench, &[], 0, bench.granule, &mut outs).is_err());
+        assert!(compute_range_vecs(&bench, &[], 0, bench.granule, &mut outs).is_err());
     }
 }

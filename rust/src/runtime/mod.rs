@@ -15,7 +15,13 @@
 //! (coordinator, schedulers) speaks in work-item ranges and host buffers,
 //! exactly as the paper isolates OpenCL inside its `Device` abstraction
 //! (Figure 1).
+//!
+//! The zero-copy memory subsystem lives here too: [`host::InputView`]
+//! (shared immutable inputs, one materialization per run) and
+//! [`arena::OutputArena`] (one output allocation per run, split into
+//! claim-checked disjoint windows the workers write into directly).
 
+pub mod arena;
 pub mod artifact;
 pub mod exec;
 pub mod host;
@@ -24,9 +30,10 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+pub use arena::{ArenaWindow, OutputArena};
 pub use artifact::{ArtifactRegistry, BenchManifest, BufferEntry};
 pub use exec::{decompose_range, ExecTiming};
-pub use host::HostBuf;
+pub use host::{input_views, HostBuf, InputView};
 
 #[cfg(feature = "pjrt")]
 pub use pjrt::{ChunkExecutor, StagedPackage};

@@ -2,38 +2,59 @@
 //!
 //! Mirrors the PJRT executor's shape exactly (per-device instance, chunk
 //! ladder, greedy decomposition, per-launch costs, resident-vs-reupload
-//! input modes, and the staged H2D → execute → D2H package pipeline) but
+//! input modes, and the staged H2D → execute package pipeline) but
 //! computes with the pure-Rust kernels in [`super::kernels`]. The
 //! coordinator above cannot tell the backends apart: both export the
 //! `ChunkExecutor` / `StagedPackage` pair with the same API.
 //!
-//! Cost model notes:
-//!  * `h2d` staging cost is real memcpy work: in resident mode only the
-//!    per-launch offset argument is staged (cheap), in re-upload mode the
-//!    full input buffers are copied per launch — the §5.2 ablation.
-//!  * `exec` is the kernel computation into chunk-local scratch.
-//!  * `d2h` is the scatter of chunk results into the full-size host
-//!    merge buffers, the same write-back the PJRT path performs.
+//! Zero-copy memory model:
+//!  * Inputs are shared immutable [`InputView`]s (`Arc<[f32]>`). The
+//!    engine materializes each program input once; `set_input_views` is
+//!    a pointer bump per buffer, so "uploading" resident inputs to D
+//!    devices costs O(N) total instead of O(D × N). Constructing from
+//!    plain [`HostBuf`]s (the hand-driven native-baseline path) still
+//!    pays a real copy, counted in [`NativeExecutor::input_upload_bytes`].
+//!  * Outputs are written directly into caller-provided windows (slices
+//!    of the engine's per-run output arena, or of full-size host buffers
+//!    for the baseline path) — no chunk-local scratch, no scatter copy,
+//!    `d2h == 0` and `d2h_bytes == 0` by construction.
+//!  * The §5.2 re-upload ablation stages each launch's proportional
+//!    input *window* (real memcpy work, counted in `h2d_bytes`) instead
+//!    of cloning every full-size input per launch; compute always reads
+//!    the shared views, so both modes are bit-identical.
 
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::artifact::{ArtifactRegistry, BenchManifest};
-use super::exec::{decompose_range, ExecTiming};
-use super::host::HostBuf;
+use super::exec::{decompose_range, host_output_windows, validate_windows, ExecTiming};
+use super::host::{input_views, HostBuf, InputView};
 use super::kernels;
 
+/// The input-elements window a launch over items `[begin, end)` of an
+/// `n`-item problem would upload: the proportional slice of an
+/// `elems`-element buffer. Windows of a disjoint item cover are
+/// themselves disjoint and cover the buffer (integer floor is monotone
+/// and shared between a range's end and its successor's begin).
+fn launch_window(elems: usize, n: usize, begin: usize, end: usize) -> (usize, usize) {
+    (elems * begin / n, elems * end / n)
+}
+
 /// A package whose host→device staging has completed: compiled plan plus
-/// per-launch staged arguments, ready to execute.
+/// staged per-launch arguments, ready to execute.
 pub struct StagedPackage {
     begin: usize,
     end: usize,
     /// (offset, size) sub-launches from greedy decomposition.
     plan: Vec<(usize, usize)>,
-    /// Staged per-launch input copies (re-upload mode only).
-    staged_inputs: Option<Vec<Vec<f32>>>,
+    /// Staged per-launch input windows (re-upload ablation only) — the
+    /// device-side staging memory a real per-launch upload would occupy,
+    /// held until the package executes. Cost model only: compute reads
+    /// the shared views, so outputs are identical in both modes.
+    staged_windows: Vec<Vec<f32>>,
     h2d: Duration,
+    h2d_bytes: usize,
     compile: Duration,
 }
 
@@ -47,6 +68,18 @@ impl StagedPackage {
         self.h2d
     }
 
+    /// Bytes the staging phase moved (input windows + offset args).
+    pub fn h2d_bytes(&self) -> usize {
+        self.h2d_bytes
+    }
+
+    /// Bytes of staged input windows currently held (re-upload mode;
+    /// 0 in resident mode). Stays proportional to the package size —
+    /// the quadratic full-clone-per-launch blow-up is gone.
+    pub fn staged_window_bytes(&self) -> usize {
+        self.staged_windows.iter().map(|w| 4 * w.len()).sum()
+    }
+
     pub fn launches(&self) -> u32 {
         self.plan.len() as u32
     }
@@ -55,40 +88,53 @@ impl StagedPackage {
 /// Per-device executor for one benchmark (native backend).
 pub struct NativeExecutor {
     bench: BenchManifest,
-    /// Device-resident read-only inputs (uploaded once; paper §5.2).
-    inputs: Vec<Vec<f32>>,
-    /// When false, inputs are re-copied per launch (ablation path).
+    /// Shared immutable input views — the zero-copy stand-in for
+    /// device-resident read-only buffers (paper §5.2).
+    inputs: Vec<InputView>,
+    /// When false, per-launch input windows are re-staged (ablation).
     resident_inputs: bool,
-    /// Chunk-local scratch, reused across packages.
-    scratch: Vec<Vec<f32>>,
+    /// Bytes copied to make the inputs visible to this executor: 0 when
+    /// sharing the engine's views, the full input size when constructed
+    /// from host buffers (the native baseline's upload).
+    input_upload_bytes: usize,
 }
 
 impl NativeExecutor {
-    /// Create an executor and "upload" `inputs` for `bench`.
+    /// Create an executor and "upload" `inputs` for `bench` (pays one
+    /// full input copy — the hand-driven baseline path; engine workers
+    /// use [`NativeExecutor::with_views`] instead).
     pub fn new(reg: &ArtifactRegistry, bench: &BenchManifest, inputs: &[HostBuf]) -> Result<Self> {
         Self::with_options(reg, bench, inputs, true)
     }
 
     pub fn with_options(
-        _reg: &ArtifactRegistry,
+        reg: &ArtifactRegistry,
         bench: &BenchManifest,
         inputs: &[HostBuf],
         resident_inputs: bool,
     ) -> Result<Self> {
-        anyhow::ensure!(
-            inputs.len() == bench.inputs.len(),
-            "bench '{}' expects {} inputs, got {}",
-            bench.name,
-            bench.inputs.len(),
-            inputs.len()
-        );
+        let views = input_views(inputs)?;
+        let mut me = Self::with_views(reg, bench, &views, resident_inputs)?;
+        // Building views from host buffers copied every element once.
+        me.input_upload_bytes = me.inputs.iter().map(|v| 4 * v.len()).sum();
+        Ok(me)
+    }
+
+    /// Create an executor over shared input views — zero-copy: the
+    /// "upload" is a refcount bump per buffer.
+    pub fn with_views(
+        _reg: &ArtifactRegistry,
+        bench: &BenchManifest,
+        inputs: &[InputView],
+        resident_inputs: bool,
+    ) -> Result<Self> {
         let mut me = Self {
             bench: bench.clone(),
             inputs: Vec::new(),
             resident_inputs,
-            scratch: Vec::new(),
+            input_upload_bytes: 0,
         };
-        me.set_inputs(inputs)?;
+        me.set_input_views(inputs)?;
         Ok(me)
     }
 
@@ -96,23 +142,42 @@ impl NativeExecutor {
         &self.bench
     }
 
-    /// (Re)upload the input buffers.
+    /// (Re)upload input buffers (copies; resets the upload byte count).
     pub fn set_inputs(&mut self, inputs: &[HostBuf]) -> Result<()> {
-        self.inputs.clear();
-        for (spec, buf) in self.bench.inputs.iter().zip(inputs) {
-            let data = buf
-                .as_f32()
-                .with_context(|| format!("input '{}' must be f32", spec.name))?;
+        let views = input_views(inputs)?;
+        self.set_input_views(&views)?;
+        self.input_upload_bytes = self.inputs.iter().map(|v| 4 * v.len()).sum();
+        Ok(())
+    }
+
+    /// Share already-materialized input views (pointer bumps only).
+    pub fn set_input_views(&mut self, inputs: &[InputView]) -> Result<()> {
+        anyhow::ensure!(
+            inputs.len() == self.bench.inputs.len(),
+            "bench '{}' expects {} inputs, got {}",
+            self.bench.name,
+            self.bench.inputs.len(),
+            inputs.len()
+        );
+        for (spec, view) in self.bench.inputs.iter().zip(inputs) {
             anyhow::ensure!(
-                data.len() == spec.elems,
+                view.len() == spec.elems,
                 "input '{}': expected {} elems, got {}",
                 spec.name,
                 spec.elems,
-                data.len()
+                view.len()
             );
-            self.inputs.push(data.to_vec());
         }
+        self.inputs.clear();
+        self.inputs.extend(inputs.iter().cloned());
+        self.input_upload_bytes = 0;
         Ok(())
+    }
+
+    /// Bytes copied to make the current inputs device-visible (0 when
+    /// the executor shares the engine's views).
+    pub fn input_upload_bytes(&self) -> usize {
+        self.input_upload_bytes
     }
 
     /// Ensure the executable for `size` exists; native kernels have no
@@ -152,70 +217,82 @@ impl NativeExecutor {
             compile += self.prepare(*size)?;
         }
         let t0 = Instant::now();
-        let staged_inputs = if self.resident_inputs {
-            None
+        let mut staged_windows = Vec::new();
+        let mut h2d_bytes = 0usize;
+        if self.resident_inputs {
+            // Resident inputs are the shared views — already visible.
+            // Each launch stages only its i32 offset argument.
+            h2d_bytes = 4 * plan.len();
         } else {
-            // Ablation path: re-upload all inputs once per launch.
-            let mut copies = Vec::with_capacity(self.inputs.len() * plan.len());
-            for _ in &plan {
-                for data in &self.inputs {
-                    copies.push(data.clone());
+            // §5.2 ablation: stage each launch's proportional input
+            // window — the bytes a per-launch upload would move. (The
+            // seed cloned every *full* input once per launch: O(launches
+            // × N) memory and time that modelled nothing.)
+            staged_windows.reserve(plan.len() * self.inputs.len());
+            for (off, size) in &plan {
+                for view in &self.inputs {
+                    let (lo, hi) = launch_window(view.len(), self.bench.n, *off, off + size);
+                    let copy = view[lo..hi].to_vec();
+                    h2d_bytes += 4 * copy.len();
+                    staged_windows.push(copy);
                 }
+                h2d_bytes += 4; // offset argument
             }
-            Some(copies)
-        };
+        }
         let h2d = t0.elapsed();
-        Ok(StagedPackage { begin, end, plan, staged_inputs, h2d, compile })
+        Ok(StagedPackage { begin, end, plan, staged_windows, h2d, h2d_bytes, compile })
     }
 
-    /// Execute a staged package and write results into `outs`
-    /// (full-problem host buffers). The returned timing includes the
-    /// staging `h2d` the package already paid.
+    /// Execute a staged package into per-output windows covering exactly
+    /// the package's item range (`(end - begin) * elems_per_item`
+    /// elements each, indexed relative to `begin`). Kernels write
+    /// straight into the windows — typically disjoint slices of the
+    /// run's output arena — so there is no d2h copy at all.
     pub fn execute_staged(
         &mut self,
         staged: StagedPackage,
-        outs: &mut [HostBuf],
+        outs: &mut [&mut [f32]],
     ) -> Result<ExecTiming> {
-        anyhow::ensure!(
-            outs.len() == self.bench.outputs.len(),
-            "bench '{}' has {} outputs, got {}",
-            self.bench.name,
-            self.bench.outputs.len(),
-            outs.len()
-        );
+        validate_windows(&self.bench.outputs, outs, &self.bench.name, staged.end - staged.begin)?;
+        debug_assert!(staged.staged_window_bytes() <= staged.h2d_bytes);
         let mut timing = ExecTiming {
             h2d: staged.h2d,
             compile: staged.compile,
             launches: staged.launches(),
+            h2d_bytes: staged.h2d_bytes,
             ..Default::default()
         };
-        let ninputs = self.inputs.len();
-        for (launch, (off, size)) in staged.plan.iter().enumerate() {
-            // Kernel execution into chunk-local scratch.
-            let t0 = Instant::now();
-            self.ensure_scratch(*size);
-            let inputs: &[Vec<f32>] = match &staged.staged_inputs {
-                Some(copies) => &copies[launch * ninputs..(launch + 1) * ninputs],
-                None => &self.inputs,
-            };
-            kernels::compute_range(&self.bench, inputs, *off, off + size, &mut self.scratch)?;
-            timing.exec += t0.elapsed();
-
-            // Write-back into the host merge buffers.
-            let t1 = Instant::now();
-            for (i, spec) in self.bench.outputs.iter().enumerate() {
-                let epi = spec.elems_per_item;
-                let dst = outs[i]
-                    .as_f32_mut()
-                    .with_context(|| format!("output '{}' must be f32", spec.name))?;
-                anyhow::ensure!(dst.len() == spec.elems, "output '{}' wrong size", spec.name);
-                let lo = off * epi;
-                let hi = lo + size * epi;
-                dst[lo..hi].copy_from_slice(&self.scratch[i][..size * epi]);
-            }
-            timing.d2h += t1.elapsed();
+        let ins: Vec<&[f32]> = self.inputs.iter().map(|v| v.as_ref()).collect();
+        let t0 = Instant::now();
+        for (off, size) in &staged.plan {
+            let rel = off - staged.begin;
+            let mut louts: Vec<&mut [f32]> = self
+                .bench
+                .outputs
+                .iter()
+                .zip(outs.iter_mut())
+                .map(|(spec, w)| {
+                    let epi = spec.elems_per_item;
+                    &mut w[rel * epi..(rel + size) * epi]
+                })
+                .collect();
+            kernels::compute_range(&self.bench, &ins, *off, off + size, &mut louts)?;
         }
+        timing.exec = t0.elapsed();
+        // Results landed in place: the zero-copy d2h (0 bytes moved).
         Ok(timing)
+    }
+
+    /// Execute a staged package into full-problem host buffers, slicing
+    /// the package windows out of them — the hand-driven baseline path.
+    pub fn execute_staged_into_host(
+        &mut self,
+        staged: StagedPackage,
+        outs: &mut [HostBuf],
+    ) -> Result<ExecTiming> {
+        let (begin, end) = staged.range();
+        let mut windows = host_output_windows(&self.bench.outputs, outs, begin, end)?;
+        self.execute_staged(staged, &mut windows)
     }
 
     /// Execute work-items `[begin, end)` and write results into `outs` —
@@ -227,21 +304,7 @@ impl NativeExecutor {
         outs: &mut [HostBuf],
     ) -> Result<ExecTiming> {
         let staged = self.stage(begin, end)?;
-        self.execute_staged(staged, outs)
-    }
-
-    fn ensure_scratch(&mut self, size: usize) {
-        if self.scratch.len() != self.bench.outputs.len() {
-            self.scratch =
-                self.bench.outputs.iter().map(|o| vec![0.0f32; size * o.elems_per_item]).collect();
-            return;
-        }
-        for (buf, spec) in self.scratch.iter_mut().zip(&self.bench.outputs) {
-            let want = size * spec.elems_per_item;
-            if buf.len() < want {
-                buf.resize(want, 0.0);
-            }
-        }
+        self.execute_staged_into_host(staged, outs)
     }
 }
 
@@ -279,19 +342,88 @@ mod tests {
             bench.outputs.iter().map(|o| HostBuf::zeros_f32(o.elems)).collect();
         let staged = b.stage(0, 3 * g).unwrap();
         assert_eq!(staged.range(), (0, 3 * g));
-        let timing = b.execute_staged(staged, &mut outs2).unwrap();
+        let timing = b.execute_staged_into_host(staged, &mut outs2).unwrap();
         assert!(timing.launches >= 1);
         assert_eq!(outs2[0].as_f32().unwrap(), &want[..]);
     }
 
     #[test]
-    fn reupload_mode_pays_h2d() {
+    fn shared_views_are_zero_copy_and_agree_with_uploads() {
+        let (reg, bench, ins, mut outs) = setup("binomial");
+        let views = input_views(&ins).unwrap();
+        let mut shared = NativeExecutor::with_views(&reg, &bench, &views, true).unwrap();
+        assert_eq!(shared.input_upload_bytes(), 0, "views are pointer bumps");
+        shared.execute_range(0, bench.n, &mut outs).unwrap();
+        let a = outs[0].as_f32().unwrap().to_vec();
+
+        let mut uploaded = NativeExecutor::new(&reg, &bench, &ins).unwrap();
+        let expected: usize = ins.iter().map(|b| 4 * b.len()).sum();
+        assert_eq!(uploaded.input_upload_bytes(), expected, "host-buf path pays the copy");
+        let mut outs2: Vec<HostBuf> =
+            bench.outputs.iter().map(|o| HostBuf::zeros_f32(o.elems)).collect();
+        uploaded.execute_range(0, bench.n, &mut outs2).unwrap();
+        assert_eq!(outs2[0].as_f32().unwrap(), &a[..]);
+    }
+
+    #[test]
+    fn reupload_mode_stages_windows_not_full_clones() {
         let (reg, bench, ins, mut outs) = setup("gaussian");
         let g = bench.granule;
+        let total_input_bytes: usize = ins.iter().map(|b| 4 * b.len()).sum();
         let mut lit = NativeExecutor::with_options(&reg, &bench, &ins, false).unwrap();
-        let t = lit.execute_range(0, g, &mut outs).unwrap();
-        // Re-upload mode must actually copy the 16k-element image.
-        assert!(t.h2d > Duration::ZERO);
+
+        // A one-granule launch stages ~g/n of the inputs, not all of them.
+        let staged = lit.stage(0, g).unwrap();
+        let staged_bytes = staged.staged_window_bytes();
+        assert!(staged_bytes > 0, "re-upload mode must copy real input bytes");
+        assert!(
+            staged_bytes <= total_input_bytes / 4,
+            "window staging must be proportional: staged {staged_bytes} of {total_input_bytes}"
+        );
+        let t = lit.execute_staged_into_host(staged, &mut outs).unwrap();
+        assert!(t.h2d_bytes >= staged_bytes, "h2d_bytes counts the staged windows");
+
+        // Over a full disjoint cover the windows sum to the input size
+        // (plus one offset arg per launch) — linear, never quadratic.
+        let mut covered = 0usize;
+        let mut off = 0;
+        while off < bench.n {
+            let end = (off + 4 * g).min(bench.n);
+            let s = lit.stage(off, end).unwrap();
+            covered += s.staged_window_bytes();
+            lit.execute_staged_into_host(s, &mut outs).unwrap();
+            off = end;
+        }
+        assert_eq!(covered, total_input_bytes, "windows of a cover tile the inputs exactly");
+    }
+
+    #[test]
+    fn resident_mode_stages_only_offsets() {
+        let (reg, bench, ins, mut outs) = setup("binomial");
+        let mut exec = NativeExecutor::new(&reg, &bench, &ins).unwrap();
+        let t = exec.execute_range(0, bench.n, &mut outs).unwrap();
+        assert_eq!(t.h2d_bytes, 4 * t.launches as usize, "one i32 offset per launch");
+        assert_eq!(t.d2h_bytes, 0, "results are written in place");
+    }
+
+    #[test]
+    fn launch_windows_tile_disjointly() {
+        // Awkward elems/n ratios must still yield disjoint covering
+        // windows for any contiguous item cover.
+        for (elems, n) in [(7usize, 64usize), (16384, 16384), (9, 16384), (65536, 1024)] {
+            let mut cursor = 0usize;
+            let mut covered = 0usize;
+            let step = n / 8;
+            while cursor < n {
+                let end = (cursor + step).min(n);
+                let (lo, hi) = launch_window(elems, n, cursor, end);
+                assert!(lo <= hi && hi <= elems);
+                assert_eq!(lo, covered, "windows contiguous at item {cursor}");
+                covered = hi;
+                cursor = end;
+            }
+            assert_eq!(covered, elems, "windows cover the buffer");
+        }
     }
 
     #[test]
@@ -301,5 +433,16 @@ mod tests {
         assert!(exec.execute_range(0, bench.n + bench.granule, &mut outs).is_err());
         assert!(exec.execute_range(7, 13, &mut outs).is_err());
         assert!(exec.prepare(13).is_err());
+    }
+
+    #[test]
+    fn wrong_window_geometry_rejected() {
+        let (reg, bench, ins, _) = setup("binomial");
+        let g = bench.granule;
+        let mut exec = NativeExecutor::new(&reg, &bench, &ins).unwrap();
+        let staged = exec.stage(0, g).unwrap();
+        let mut short = vec![0.0f32; g - 1];
+        let mut windows: Vec<&mut [f32]> = vec![&mut short[..]];
+        assert!(exec.execute_staged(staged, &mut windows).is_err());
     }
 }

@@ -15,8 +15,15 @@
 //! The staged API splits a package into its H2D phase
 //! ([`ChunkExecutor::stage`]: compile + argument upload) and its
 //! execute/write-back phase ([`ChunkExecutor::execute_staged`]) so the
-//! pipelined worker can overlap
-//! the next package's staging with the current package's compute.
+//! pipelined worker can overlap the next package's staging with the
+//! current package's compute.
+//!
+//! Zero-copy interplay: the executor's *host-side* inputs are shared
+//! [`InputView`]s (no per-device host copies); the device upload
+//! (`buffer_from_host_buffer`) is a real copy this backend must pay and
+//! counts in `input_upload_bytes`. Results are written directly into the
+//! caller's output windows (arena slices), so the only d2h cost is the
+//! literal copy-out PJRT itself requires — counted in `d2h_bytes`.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -25,8 +32,8 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::artifact::{ArtifactRegistry, BenchManifest};
-use super::exec::{decompose_range, ExecTiming};
-use super::host::HostBuf;
+use super::exec::{decompose_range, host_output_windows, validate_windows, ExecTiming};
+use super::host::{input_views, HostBuf, InputView};
 
 /// One staged sub-launch: offset buffer uploaded, inputs resolved.
 enum StagedArgs {
@@ -44,6 +51,7 @@ pub struct StagedPackage {
     /// (offset, size) sub-launches with their staged arguments.
     plan: Vec<(usize, usize, StagedArgs)>,
     h2d: Duration,
+    h2d_bytes: usize,
     compile: Duration,
 }
 
@@ -55,6 +63,11 @@ impl StagedPackage {
     /// Host→device staging time this package already paid.
     pub fn h2d(&self) -> Duration {
         self.h2d
+    }
+
+    /// Bytes the staging phase moved.
+    pub fn h2d_bytes(&self) -> usize {
+        self.h2d_bytes
     }
 
     pub fn launches(&self) -> u32 {
@@ -74,7 +87,10 @@ pub struct ChunkExecutor {
     /// When false, inputs are re-uploaded as literals on every launch
     /// (the unoptimized path, kept for the ablation bench).
     resident_inputs: bool,
-    host_inputs: Vec<Vec<f32>>,
+    /// Shared host-side input views (no per-device host copies).
+    host_inputs: Vec<InputView>,
+    /// Bytes moved to put inputs on the device (the resident upload).
+    input_upload_bytes: usize,
 }
 
 impl ChunkExecutor {
@@ -89,13 +105,19 @@ impl ChunkExecutor {
         inputs: &[HostBuf],
         resident_inputs: bool,
     ) -> Result<Self> {
-        anyhow::ensure!(
-            inputs.len() == bench.inputs.len(),
-            "bench '{}' expects {} inputs, got {}",
-            bench.name,
-            bench.inputs.len(),
-            inputs.len()
-        );
+        let views = input_views(inputs)?;
+        Self::with_views(reg, bench, &views, resident_inputs)
+    }
+
+    /// Create an executor over shared input views. Host memory is
+    /// shared (zero-copy); the device upload in resident mode is a real
+    /// transfer this backend pays once per device.
+    pub fn with_views(
+        reg: &ArtifactRegistry,
+        bench: &BenchManifest,
+        inputs: &[InputView],
+        resident_inputs: bool,
+    ) -> Result<Self> {
         quiet_xla_logs();
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         let mut me = Self {
@@ -106,8 +128,9 @@ impl ChunkExecutor {
             dev_inputs: Vec::new(),
             resident_inputs,
             host_inputs: Vec::new(),
+            input_upload_bytes: 0,
         };
-        me.set_inputs(inputs)?;
+        me.set_input_views(inputs)?;
         Ok(me)
     }
 
@@ -117,21 +140,33 @@ impl ChunkExecutor {
 
     /// (Re)upload the input buffers.
     pub fn set_inputs(&mut self, inputs: &[HostBuf]) -> Result<()> {
-        self.host_inputs.clear();
-        self.dev_inputs.clear();
-        for (spec, buf) in self.bench.inputs.iter().zip(inputs) {
-            let data = buf
-                .as_f32()
-                .with_context(|| format!("input '{}' must be f32", spec.name))?;
+        let views = input_views(inputs)?;
+        self.set_input_views(&views)
+    }
+
+    /// Share already-materialized input views; re-runs the resident
+    /// device upload when enabled.
+    pub fn set_input_views(&mut self, inputs: &[InputView]) -> Result<()> {
+        anyhow::ensure!(
+            inputs.len() == self.bench.inputs.len(),
+            "bench '{}' expects {} inputs, got {}",
+            self.bench.name,
+            self.bench.inputs.len(),
+            inputs.len()
+        );
+        for (spec, view) in self.bench.inputs.iter().zip(inputs) {
             anyhow::ensure!(
-                data.len() == spec.elems,
+                view.len() == spec.elems,
                 "input '{}': expected {} elems, got {}",
                 spec.name,
                 spec.elems,
-                data.len()
+                view.len()
             );
-            self.host_inputs.push(data.to_vec());
         }
+        self.host_inputs.clear();
+        self.host_inputs.extend(inputs.iter().cloned());
+        self.dev_inputs.clear();
+        self.input_upload_bytes = 0;
         if self.resident_inputs {
             for data in &self.host_inputs {
                 self.dev_inputs.push(self.client.buffer_from_host_buffer::<f32>(
@@ -139,9 +174,15 @@ impl ChunkExecutor {
                     &[data.len()],
                     None,
                 )?);
+                self.input_upload_bytes += 4 * data.len();
             }
         }
         Ok(())
+    }
+
+    /// Bytes moved to put the current inputs on the device.
+    pub fn input_upload_bytes(&self) -> usize {
+        self.input_upload_bytes
     }
 
     /// Ensure the executable for `size` is compiled; returns compile time.
@@ -187,6 +228,7 @@ impl ChunkExecutor {
         let plan = self.decompose(begin, end)?;
         let mut compile = Duration::ZERO;
         let mut h2d = Duration::ZERO;
+        let mut h2d_bytes = 0usize;
         let mut staged = Vec::with_capacity(plan.len());
         for (off, size) in plan {
             compile += self.prepare(size)?;
@@ -194,38 +236,38 @@ impl ChunkExecutor {
             let args = if self.resident_inputs {
                 let off_buf =
                     self.client.buffer_from_host_buffer::<i32>(&[off as i32], &[], None)?;
+                h2d_bytes += 4;
                 StagedArgs::Resident { off_buf }
             } else {
                 let mut args: Vec<xla::Literal> =
                     self.host_inputs.iter().map(|d| xla::Literal::vec1(d)).collect();
+                h2d_bytes += self.host_inputs.iter().map(|d| 4 * d.len()).sum::<usize>();
                 args.push(xla::Literal::scalar(off as i32));
+                h2d_bytes += 4;
                 StagedArgs::Literals { args }
             };
             h2d += t0.elapsed();
             staged.push((off, size, args));
         }
-        Ok(StagedPackage { begin, end, plan: staged, h2d, compile })
+        Ok(StagedPackage { begin, end, plan: staged, h2d, h2d_bytes, compile })
     }
 
-    /// Execute a staged package and write results into `outs`
-    /// (full-problem host buffers). The returned timing includes the
-    /// staging `h2d` the package already paid.
+    /// Execute a staged package into per-output windows covering exactly
+    /// the package's item range (`(end - begin) * elems_per_item`
+    /// elements each, indexed relative to `begin` — typically disjoint
+    /// slices of the run's output arena). The returned timing includes
+    /// the staging `h2d` the package already paid.
     pub fn execute_staged(
         &mut self,
         staged: StagedPackage,
-        outs: &mut [HostBuf],
+        outs: &mut [&mut [f32]],
     ) -> Result<ExecTiming> {
-        anyhow::ensure!(
-            outs.len() == self.bench.outputs.len(),
-            "bench '{}' has {} outputs, got {}",
-            self.bench.name,
-            self.bench.outputs.len(),
-            outs.len()
-        );
+        validate_windows(&self.bench.outputs, outs, &self.bench.name, staged.end - staged.begin)?;
         let mut timing = ExecTiming {
             h2d: staged.h2d,
             compile: staged.compile,
             launches: staged.launches(),
+            h2d_bytes: staged.h2d_bytes,
             ..Default::default()
         };
         for (off, size, args) in &staged.plan {
@@ -245,7 +287,8 @@ impl ChunkExecutor {
             let tuple = results[0][0].to_literal_sync()?;
             timing.exec += t0.elapsed();
 
-            // Write-back into the host buffers: D2H.
+            // Copy-out into the caller's windows: the one d2h transfer
+            // this backend cannot avoid (device literal → host window).
             let t1 = Instant::now();
             let parts = tuple.to_tuple()?;
             anyhow::ensure!(
@@ -254,19 +297,29 @@ impl ChunkExecutor {
                 parts.len(),
                 outs.len()
             );
+            let rel = off - staged.begin;
             for ((part, spec), out) in parts.iter().zip(&self.bench.outputs).zip(outs.iter_mut()) {
                 let epi = spec.elems_per_item;
-                let dst = out
-                    .as_f32_mut()
-                    .with_context(|| format!("output '{}' must be f32", spec.name))?;
-                anyhow::ensure!(dst.len() == spec.elems, "output '{}' wrong size", spec.name);
-                let lo = off * epi;
+                let lo = rel * epi;
                 let hi = lo + size * epi;
-                part.copy_raw_to::<f32>(&mut dst[lo..hi])?;
+                part.copy_raw_to::<f32>(&mut out[lo..hi])?;
+                timing.d2h_bytes += 4 * (hi - lo);
             }
             timing.d2h += t1.elapsed();
         }
         Ok(timing)
+    }
+
+    /// Execute a staged package into full-problem host buffers, slicing
+    /// the package windows out of them — the hand-driven baseline path.
+    pub fn execute_staged_into_host(
+        &mut self,
+        staged: StagedPackage,
+        outs: &mut [HostBuf],
+    ) -> Result<ExecTiming> {
+        let (begin, end) = staged.range();
+        let mut windows = host_output_windows(&self.bench.outputs, outs, begin, end)?;
+        self.execute_staged(staged, &mut windows)
     }
 
     /// Execute work-items `[begin, end)` and write results into `outs` —
@@ -278,7 +331,7 @@ impl ChunkExecutor {
         outs: &mut [HostBuf],
     ) -> Result<ExecTiming> {
         let staged = self.stage(begin, end)?;
-        self.execute_staged(staged, outs)
+        self.execute_staged_into_host(staged, outs)
     }
 }
 

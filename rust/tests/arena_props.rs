@@ -1,0 +1,184 @@
+//! Property tests for the zero-copy output arena: for *arbitrary*
+//! schedules produced by the real schedulers, the claimed windows must
+//! be pairwise disjoint, granule-aligned, and exactly cover `[0, n)` —
+//! the invariants that make the workers' direct (lock-free) writes into
+//! shared memory sound.
+
+use enginecl::coordinator::scheduler::{
+    Dynamic, HGuided, Pipelined, SchedDevice, Scheduler, Static,
+};
+use enginecl::coordinator::Range;
+use enginecl::prop_assert;
+use enginecl::runtime::OutputArena;
+use enginecl::testing::forall;
+use enginecl::util::rng::XorShift;
+
+#[derive(Debug)]
+struct Case {
+    total_granules: usize,
+    granule: usize,
+    powers: Vec<f64>,
+    sched: usize, // 0 static, 1 static-rev, 2 dynamic, 3 hguided
+    packages: usize,
+    k: f64,
+    min_granules: usize,
+    pipelined: bool,
+    /// Output geometry: elems per item, per output buffer.
+    epis: Vec<usize>,
+    seed: u64,
+}
+
+fn gen_case(r: &mut XorShift) -> Case {
+    let ndev = r.range(1, 4);
+    let nouts = r.range(1, 3);
+    Case {
+        total_granules: r.range(1, 1024),
+        granule: [1, 16, 64, 256][r.below(4)],
+        powers: (0..ndev).map(|_| 0.05 + r.next_f64()).collect(),
+        sched: r.below(4),
+        packages: r.range(1, 200),
+        k: 1.0 + r.next_f64() * 4.0,
+        min_granules: r.range(1, 8),
+        pipelined: r.below(2) == 1,
+        epis: (0..nouts).map(|_| r.range(1, 5)).collect(),
+        seed: r.next_u64(),
+    }
+}
+
+fn build(case: &Case) -> Box<dyn Scheduler> {
+    let base: Box<dyn Scheduler> = match case.sched {
+        0 => Box::new(Static::new(None, false)),
+        1 => Box::new(Static::new(None, true)),
+        2 => Box::new(Dynamic::new(case.packages)),
+        _ => Box::new(HGuided::new(case.k, case.min_granules)),
+    };
+    if case.pipelined {
+        Box::new(Pipelined::new(base, 2))
+    } else {
+        base
+    }
+}
+
+/// Drain the scheduler with a random device interleaving (devices
+/// "finish" in seed-dependent order), returning all assigned ranges.
+fn drain(case: &Case) -> Vec<Range> {
+    let devs: Vec<SchedDevice> = case
+        .powers
+        .iter()
+        .enumerate()
+        .map(|(i, p)| SchedDevice { name: format!("d{i}"), power: *p })
+        .collect();
+    let mut s = build(case);
+    s.start(case.total_granules, case.granule, &devs);
+    let mut rng = XorShift::new(case.seed);
+    let mut active: Vec<usize> = (0..devs.len()).collect();
+    let mut out = Vec::new();
+    while !active.is_empty() {
+        let pick = rng.below(active.len());
+        match s.next_package(active[pick]) {
+            Some(r) => out.push(r),
+            None => {
+                active.remove(pick);
+            }
+        }
+    }
+    out
+}
+
+fn arena_for(case: &Case) -> OutputArena {
+    let n = case.total_granules * case.granule;
+    OutputArena::new(
+        case.epis.iter().map(|&e| (vec![0.0f32; n * e], e)).collect(),
+        case.granule,
+        n,
+    )
+    .unwrap()
+}
+
+#[test]
+fn prop_arena_accepts_every_scheduler_cover() {
+    forall("arena accepts scheduler covers", gen_case, |case| {
+        let n = case.total_granules * case.granule;
+        let arena = arena_for(case);
+        for r in drain(case) {
+            // Every claim must succeed: the schedulers promise disjoint
+            // granule-aligned ranges, and the arena enforces exactly that.
+            if let Err(e) = arena.claim(r.begin, r.end) {
+                return Err(format!("claim {r:?} rejected: {e:#}"));
+            }
+        }
+        prop_assert!(
+            arena.claimed_items() == n,
+            "claims cover {} of {n} items",
+            arena.claimed_items()
+        );
+        // Sorted claims must tile [0, n) exactly: contiguous, aligned,
+        // no gaps, no overlaps.
+        let mut cursor = 0usize;
+        for (b, e) in arena.claimed_ranges() {
+            prop_assert!(b == cursor, "gap or overlap at {b} (expected {cursor})");
+            prop_assert!(
+                b % case.granule == 0 && e % case.granule == 0,
+                "claim {b}..{e} misaligned to granule {}",
+                case.granule
+            );
+            cursor = e;
+        }
+        prop_assert!(cursor == n, "claims stop at {cursor}, want {n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arena_rejects_any_double_claim() {
+    forall("arena rejects double claims", gen_case, |case| {
+        let arena = arena_for(case);
+        let ranges = drain(case);
+        for r in &ranges {
+            arena.claim(r.begin, r.end).map_err(|e| format!("{e:#}"))?;
+        }
+        // Re-claiming any already-claimed range (a buggy scheduler
+        // double-assigning work) must be rejected, not silently aliased.
+        let mut rng = XorShift::new(case.seed ^ 0xDEAD);
+        for _ in 0..ranges.len().min(8) {
+            let r = &ranges[rng.below(ranges.len())];
+            prop_assert!(
+                arena.claim(r.begin, r.end).is_err(),
+                "double claim {r:?} accepted"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_windows_map_to_exactly_once_memory() {
+    forall("window writes land exactly once", gen_case, |case| {
+        let n = case.total_granules * case.granule;
+        let arena = arena_for(case);
+        // Write package-index markers through every window; each output
+        // element must end up written exactly once with its range's
+        // marker — the memory-level statement of the exactly-once
+        // scheduling invariant.
+        let ranges = drain(case);
+        for (idx, r) in ranges.iter().enumerate() {
+            let mut windows = arena.claim(r.begin, r.end).map_err(|e| format!("{e:#}"))?;
+            for w in &mut windows {
+                w.as_mut_slice().fill(idx as f32 + 1.0);
+            }
+        }
+        let bufs = arena.into_buffers();
+        for (buf, &epi) in bufs.iter().zip(&case.epis) {
+            prop_assert!(buf.len() == n * epi, "buffer length changed");
+            for (idx, r) in ranges.iter().enumerate() {
+                let lo = r.begin * epi;
+                let hi = r.end * epi;
+                prop_assert!(
+                    buf[lo..hi].iter().all(|&x| x == idx as f32 + 1.0),
+                    "range {r:?} not fully owned by its writer"
+                );
+            }
+        }
+        Ok(())
+    });
+}
