@@ -1,6 +1,8 @@
 //! Configurator (Tier-2, paper Figure 3): knobs for the runtime internals
 //! and access to execution statistics.
 
+use crate::platform::fault::FaultPlan;
+
 /// Tunables for `Engine::run`. Defaults reproduce the optimized runtime;
 /// the ablation benches flip individual flags.
 #[derive(Debug, Clone)]
@@ -21,6 +23,14 @@ pub struct Configurator {
     pub simulate_speed: bool,
     /// Collect per-package traces (Introspector).
     pub introspect: bool,
+    /// Recover from device-worker failures: revoke the dead device's
+    /// unfinished arena claims and requeue the work to survivors. Off =
+    /// the seed's abort-on-failure behavior (first failure ends the run
+    /// with `EclError::Worker` once all workers have drained).
+    pub fault_tolerant: bool,
+    /// Deterministic fault injection schedule (chaos testing). `None`
+    /// (the default) injects nothing.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl Default for Configurator {
@@ -31,6 +41,8 @@ impl Default for Configurator {
             simulate_init: true,
             simulate_speed: true,
             introspect: true,
+            fault_tolerant: true,
+            fault_plan: None,
         }
     }
 }
@@ -51,6 +63,8 @@ mod tests {
     fn defaults_are_optimized() {
         let c = Configurator::default();
         assert!(c.resident_inputs && c.eager_compile && c.simulate_init && c.simulate_speed);
+        assert!(c.fault_tolerant, "recovery is on by default");
+        assert!(c.fault_plan.is_none(), "no injection by default");
     }
 
     #[test]

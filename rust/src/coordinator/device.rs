@@ -44,6 +44,20 @@
 //! to nothing (arXiv:2010.12607's optimization for short loads). The
 //! simulated clock charges `max(compute, overlapped-upload) + write-back`
 //! per package instead of their sum (see `TimeScaler::target_overlapped`).
+//!
+//! # Fault injection and failure reporting
+//!
+//! Each worker polls its [`FaultInjector`] once per package boundary
+//! (`platform::fault`): *Kill* claims the package's arena windows,
+//! poisons them, executes half the sub-launches and dies (a device lost
+//! mid-package); *Panic* unwinds (caught in the `spawn_worker` shell
+//! and converted into a `Failed` event); *Vanish* exits silently so the
+//! engine's liveness sweep has to notice the dead thread; *Stall*
+//! sleeps; *Slowdown* degrades the worker's [`TimeScaler`]. A failing
+//! worker ships the traces of its *completed* packages with the
+//! `Failed` event — those results are already in the arena and stay
+//! attributed — while its unfinished ranges are the master's to revoke
+//! and requeue.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
@@ -54,7 +68,9 @@ use std::time::{Duration, Instant};
 use crate::coordinator::config::Configurator;
 use crate::coordinator::introspector::{PackageTrace, TransferStats};
 use crate::coordinator::work::Range;
+use crate::platform::fault::{FaultInjector, FaultKind};
 use crate::platform::{DeviceKind, DeviceProfile, TimeScaler};
+use crate::runtime::exec::{poison_windows, FAULT_POISON};
 use crate::runtime::{
     ArtifactRegistry, BenchManifest, ChunkExecutor, InputView, OutputArena, StagedPackage,
 };
@@ -113,6 +129,9 @@ pub(crate) struct Assignment {
     /// Prefetch range: enqueue behind `range` and pre-stage its H2D
     /// transfer during `range`'s compute window.
     pub lookahead: Option<Range>,
+    /// `range` is recovered work reclaimed from a dead device (marks
+    /// the package's trace so recovery is visible in the introspector).
+    pub requeued: bool,
 }
 
 pub(crate) enum ToWorker {
@@ -129,13 +148,19 @@ pub(crate) enum FromWorker {
     Uploaded { dev: usize },
     /// Package completed (pipelined workers send this as soon as the
     /// next package can be decided, shrinking the assign round-trip);
-    /// ready for the next assignment.
+    /// ready for the next assignment. By the time `Done` is sent the
+    /// package's results are fully written into the arena (only the
+    /// simulated hold may still be pending), so the master can safely
+    /// consider the range finished for recovery bookkeeping.
     Done { dev: usize },
     /// Worker exited. Results are already in the output arena (written
     /// in place, package by package); only the introspection traces and
     /// the per-run transfer byte counts travel back.
     Finished { dev: usize, traces: Vec<PackageTrace>, xfer: TransferStats },
-    Failed { dev: usize, message: String },
+    /// Worker died (error or caught panic). Traces of the packages it
+    /// *completed* travel back — their results are in the arena and
+    /// must stay attributed; the failing package is not among them.
+    Failed { dev: usize, message: String, traces: Vec<PackageTrace>, xfer: TransferStats },
 }
 
 pub(crate) struct WorkerCtx {
@@ -162,21 +187,63 @@ pub(crate) struct WorkerCtx {
     /// blocking worker, `>= 2` the double-buffered pipeline.
     pub pipeline_depth: usize,
     pub seed: u64,
+    /// Deterministic fault schedule for this device (chaos layer);
+    /// polled once per package boundary. Empty when no plan is set.
+    pub injector: FaultInjector,
+}
+
+/// How a worker's package loop ended (errors are a third, `Err`, exit).
+enum WorkerExit {
+    /// Clean drain: every assigned package completed.
+    Finished,
+    /// Injected silent death: exit without sending *any* event — the
+    /// engine's liveness detection must notice the dead thread.
+    Vanished,
 }
 
 pub(crate) fn spawn_worker(
-    ctx: WorkerCtx,
+    mut ctx: WorkerCtx,
     to_master: Sender<FromWorker>,
     from_master: Receiver<ToWorker>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("ecl-dev-{}", ctx.profile.name))
         .spawn(move || {
-            if let Err(e) = worker_main(&ctx, &to_master, &from_master) {
-                let _ = to_master.send(FromWorker::Failed {
-                    dev: ctx.dev,
-                    message: format!("{e:#}"),
-                });
+            let dev = ctx.dev;
+            let mut traces: Vec<PackageTrace> = Vec::new();
+            let mut xfer = TransferStats::default();
+            // A panicking worker (a kernel bug, an injected Panic fault)
+            // must not just drop its channel: catch the unwind and
+            // convert it into a Failed event so the master can recover
+            // immediately instead of waiting for liveness detection.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                worker_loop(&mut ctx, &to_master, &from_master, &mut traces, &mut xfer)
+            }));
+            match result {
+                Ok(Ok(WorkerExit::Finished)) => {
+                    to_master.send(FromWorker::Finished { dev, traces, xfer }).ok();
+                }
+                Ok(Ok(WorkerExit::Vanished)) => {}
+                Ok(Err(e)) => {
+                    to_master
+                        .send(FromWorker::Failed { dev, message: format!("{e:#}"), traces, xfer })
+                        .ok();
+                }
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&'static str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "worker thread panicked".to_string());
+                    to_master
+                        .send(FromWorker::Failed {
+                            dev,
+                            message: format!("panic: {msg}"),
+                            traces,
+                            xfer,
+                        })
+                        .ok();
+                }
             }
         })
         .expect("spawn device worker")
@@ -184,12 +251,12 @@ pub(crate) fn spawn_worker(
 
 /// Fold one master message into the worker's local state: assignments
 /// (plus their lookahead) enter the queue, `Finish` marks the drain.
-fn absorb(msg: ToWorker, queue: &mut VecDeque<Range>, finishing: &mut bool) {
+fn absorb(msg: ToWorker, queue: &mut VecDeque<(Range, bool)>, finishing: &mut bool) {
     match msg {
         ToWorker::Assign(a) => {
-            queue.push_back(a.range);
+            queue.push_back((a.range, a.requeued));
             if let Some(l) = a.lookahead {
-                queue.push_back(l);
+                queue.push_back((l, false));
             }
         }
         ToWorker::Finish => *finishing = true,
@@ -199,6 +266,7 @@ fn absorb(msg: ToWorker, queue: &mut VecDeque<Range>, finishing: &mut bool) {
 /// A package whose H2D staging completed, waiting to execute.
 struct Prefetched {
     range: Range,
+    requeued: bool,
     staged: StagedPackage,
     /// Epoch offsets of the staging span.
     h2d_start: Duration,
@@ -207,12 +275,32 @@ struct Prefetched {
     staged_at: Instant,
 }
 
-fn worker_main(
-    ctx: &WorkerCtx,
+/// Stage a package's H2D phase. No lock: staging is a host-side copy
+/// (or a no-op in resident mode) that a real bus would also run
+/// concurrently with other devices' compute.
+fn stage_package(
+    exec: &mut ChunkExecutor,
+    epoch: Instant,
+    range: Range,
+    requeued: bool,
+) -> anyhow::Result<Prefetched> {
+    let staged_at = Instant::now();
+    let h2d_start = epoch.elapsed();
+    let staged = exec.stage(range.begin, range.end)?;
+    let h2d_end = epoch.elapsed();
+    Ok(Prefetched { range, requeued, staged, h2d_start, h2d_end, staged_at })
+}
+
+fn worker_loop(
+    ctx: &mut WorkerCtx,
     to_master: &Sender<FromWorker>,
     from_master: &Receiver<ToWorker>,
-) -> anyhow::Result<()> {
-    let init_start = ctx.epoch.elapsed();
+    traces: &mut Vec<PackageTrace>,
+    xfer: &mut TransferStats,
+) -> anyhow::Result<WorkerExit> {
+    let dev = ctx.dev;
+    let epoch = ctx.epoch;
+    let init_start = epoch.elapsed();
     let pipelined = ctx.pipeline_depth > 1;
 
     // 1. Real initialization: executor over the shared input views (a
@@ -226,10 +314,7 @@ fn worker_main(
     if ctx.config.eager_compile {
         exec.prepare_all()?;
     }
-    let mut xfer = TransferStats {
-        input_upload_bytes: exec.input_upload_bytes(),
-        ..Default::default()
-    };
+    xfer.input_upload_bytes = exec.input_upload_bytes();
 
     // 2. Rendezvous: no device starts computing while another is still
     // burning physical cores on compilation (see WorkerCtx::init_barrier).
@@ -245,27 +330,15 @@ fn worker_main(
         std::thread::sleep(wait);
     }
 
-    let init_end = ctx.epoch.elapsed();
+    let init_end = epoch.elapsed();
     let mut scaler = TimeScaler::new(&ctx.profile, ctx.seed);
-    let mut traces: Vec<PackageTrace> = Vec::new();
-    let mut queue: VecDeque<Range> = VecDeque::new();
+    let mut queue: VecDeque<(Range, bool)> = VecDeque::new();
     let mut staged: Option<Prefetched> = None;
     let mut finishing = false;
+    // Packages started on this device (the fault triggers' ordinal).
+    let mut ordinal = 0usize;
 
-    to_master
-        .send(FromWorker::Ready { dev: ctx.dev, init_start, init_end })
-        .ok();
-
-    // Stage a package's H2D phase. No lock: staging is a host-side copy
-    // (or a no-op in resident mode) that a real bus would also run
-    // concurrently with other devices' compute.
-    let stage = |exec: &mut ChunkExecutor, range: Range| -> anyhow::Result<Prefetched> {
-        let staged_at = Instant::now();
-        let h2d_start = ctx.epoch.elapsed();
-        let staged = exec.stage(range.begin, range.end)?;
-        let h2d_end = ctx.epoch.elapsed();
-        Ok(Prefetched { range, staged, h2d_start, h2d_end, staged_at })
-    };
+    to_master.send(FromWorker::Ready { dev, init_start, init_end }).ok();
 
     // 4. Package loop.
     loop {
@@ -300,14 +373,46 @@ fn worker_main(
         let current = match staged.take() {
             Some(p) => p,
             None => {
-                let range = queue.pop_front().expect("checked non-empty");
-                let p = stage(&mut exec, range)?;
+                let (range, requeued) = queue.pop_front().expect("checked non-empty");
+                let p = stage_package(&mut exec, epoch, range, requeued)?;
                 if pipelined {
-                    to_master.send(FromWorker::Uploaded { dev: ctx.dev }).ok();
+                    to_master.send(FromWorker::Uploaded { dev }).ok();
                 }
                 p
             }
         };
+
+        // Deterministic fault injection (package boundary; chaos layer).
+        match ctx.injector.on_package(ordinal, epoch.elapsed()) {
+            Some(FaultKind::Kill) => {
+                // A device lost mid-package: claim the windows (the
+                // ledger now records a claim no completion will ever
+                // follow), scribble poison over them, run only a prefix
+                // of the sub-launches, and die. Recovery must revoke
+                // the claim and fully rewrite the range.
+                let (b, e) = (current.range.begin, current.range.end);
+                let mut windows = ctx
+                    .arena
+                    .claim(b, e)
+                    .map_err(|err| anyhow::anyhow!("arena claim failed: {err}"))?;
+                let mut slices: Vec<&mut [f32]> =
+                    windows.iter_mut().map(|w| w.as_mut_slice()).collect();
+                poison_windows(&mut slices, FAULT_POISON);
+                let prefix = current.staged.launches() as usize / 2;
+                if prefix > 0 {
+                    exec.execute_staged_prefix(current.staged, &mut slices, prefix)?;
+                }
+                anyhow::bail!("fault injection: killed at package {ordinal} (items {b}..{e})");
+            }
+            Some(FaultKind::Panic) => {
+                panic!("fault injection: panic at package {ordinal}");
+            }
+            Some(FaultKind::Vanish) => return Ok(WorkerExit::Vanished),
+            Some(FaultKind::Stall(d)) => std::thread::sleep(d),
+            Some(FaultKind::Slowdown(f)) => scaler.degrade(f),
+            None => {}
+        }
+        ordinal += 1;
 
         // Claim this package's disjoint arena windows and execute the
         // kernels straight into them — truly parallel with every other
@@ -317,13 +422,13 @@ fn worker_main(
             .claim(current.range.begin, current.range.end)
             .map_err(|e| anyhow::anyhow!("arena claim failed: {e}"))?;
         let exec_started = Instant::now();
-        let exec_start = ctx.epoch.elapsed();
+        let exec_start = epoch.elapsed();
         let timing = {
             let mut slices: Vec<&mut [f32]> =
                 windows.iter_mut().map(|w| w.as_mut_slice()).collect();
             exec.execute_staged(current.staged, &mut slices)?
         };
-        let exec_end = ctx.epoch.elapsed();
+        let exec_end = epoch.elapsed();
         xfer.h2d_bytes += timing.h2d_bytes;
         xfer.d2h_bytes += timing.d2h_bytes;
 
@@ -332,13 +437,13 @@ fn worker_main(
         // next assignment travels during the hold.
         let mut overlapped_h2d = Duration::ZERO;
         if pipelined {
-            if let Some(range) = queue.pop_front() {
-                let p = stage(&mut exec, range)?;
+            if let Some((range, requeued)) = queue.pop_front() {
+                let p = stage_package(&mut exec, epoch, range, requeued)?;
                 overlapped_h2d = p.staged.h2d();
                 staged = Some(p);
-                to_master.send(FromWorker::Uploaded { dev: ctx.dev }).ok();
+                to_master.send(FromWorker::Uploaded { dev }).ok();
             }
-            to_master.send(FromWorker::Done { dev: ctx.dev }).ok();
+            to_master.send(FromWorker::Done { dev }).ok();
         }
 
         // Hold to the simulated package duration. Device compute
@@ -361,14 +466,14 @@ fn worker_main(
                 let target = scaler.target(timing.exec, timing.launches) + timing.xfer();
                 scaler.hold(current.staged_at, target);
             }
-            ctx.epoch.elapsed()
+            epoch.elapsed()
         } else {
             exec_end
         };
 
         if ctx.config.introspect {
             traces.push(PackageTrace {
-                device: ctx.dev,
+                device: dev,
                 begin_item: current.range.begin,
                 end_item: current.range.end,
                 // Blocking packages own their staging span; pipelined
@@ -383,17 +488,15 @@ fn worker_main(
                 launches: timing.launches,
                 h2d_bytes: timing.h2d_bytes,
                 d2h_bytes: timing.d2h_bytes,
+                requeued: current.requeued,
             });
         }
         if !pipelined {
-            to_master.send(FromWorker::Done { dev: ctx.dev }).ok();
+            to_master.send(FromWorker::Done { dev }).ok();
         }
     }
 
-    to_master
-        .send(FromWorker::Finished { dev: ctx.dev, traces, xfer })
-        .ok();
-    Ok(())
+    Ok(WorkerExit::Finished)
 }
 
 #[cfg(test)]

@@ -28,20 +28,42 @@
 //!
 //! With `depth == 1` this reduces exactly to the paper's blocking
 //! assign-on-completion loop.
+//!
+//! # Fault tolerance
+//!
+//! The loop tracks, per device, every range assigned but not yet
+//! reported `Done` (by the time a worker sends `Done`, the package's
+//! results are fully in the arena). When a worker dies — it reports
+//! `Failed`, or the liveness sweep finds its thread exited without
+//! reporting — the master *recovers* instead of aborting (default;
+//! `Configurator::fault_tolerant = false` restores abort-on-failure):
+//! the dead device's unfinished ranges plus any scheduler reservation
+//! (`Scheduler::reclaim_device` — Static's pre-split share) are
+//! reclaimed, their arena claims revoked ([`OutputArena::revoke`]), and
+//! the ranges are requeued — split so every survivor can pull a piece.
+//! Survivors drain the requeue queue before asking the scheduler, so
+//! Dynamic/HGuided absorb the lost work adaptively and Static degrades
+//! to a documented re-split (survivors run extra packages). `Finish` is
+//! deferred until all work is provably complete — a failure can then
+//! never strand requeued work on a device that was already told to
+//! exit. Every failure is recorded as a [`FaultEvent`] on the
+//! `RunReport`, and requeued packages are flagged in their traces.
 
-use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Sender};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::config::Configurator;
 use crate::coordinator::device::{
     spawn_worker, Assignment, DeviceMask, DeviceSpec, FromWorker, ToWorker, WorkerCtx,
 };
 use crate::coordinator::error::EclError;
-use crate::coordinator::introspector::{DeviceTrace, RunReport};
+use crate::coordinator::introspector::{DeviceTrace, FaultEvent, RunReport};
 use crate::coordinator::program::{Arg, Program};
 use crate::coordinator::scheduler::{SchedDevice, Scheduler, SchedulerKind};
+use crate::coordinator::work::{split_range, Range};
+use crate::platform::fault::FaultPlan;
 use crate::platform::{DeviceKind, NodeConfig};
 use crate::runtime::{input_views, ArtifactRegistry, HostBuf, InputView, OutputArena};
 
@@ -168,6 +190,16 @@ impl Engine {
         &mut self.config
     }
 
+    /// Install a deterministic fault-injection plan for subsequent runs
+    /// (chaos testing the recovery path) — Tier-1 sugar for
+    /// `configurator().fault_plan`. Device indices in the plan refer to
+    /// the *selected* device slots. Clear with
+    /// `engine.configurator().fault_plan = None`.
+    pub fn fault_plan(&mut self, plan: FaultPlan) -> &mut Self {
+        self.config.fault_plan = Some(plan);
+        self
+    }
+
     /// Consume the program (paper: `engine.program(std::move(program))`).
     pub fn program(&mut self, program: Program) -> &mut Self {
         self.program = Some(program);
@@ -290,6 +322,20 @@ impl Engine {
                 });
             }
         }
+        // A fault plan naming a device slot outside the selection would
+        // silently never fire — the chaos run would "pass" without ever
+        // exercising recovery. Reject it up front.
+        if let Some(plan) = &self.config.fault_plan {
+            for spec in &plan.faults {
+                if spec.device >= self.selected.len() {
+                    return Err(EclError::Runtime(format!(
+                        "fault plan targets device slot {} but only {} device(s) are selected",
+                        spec.device,
+                        self.selected.len()
+                    )));
+                }
+            }
+        }
         // Field-precise equivalent of effective_pipeline_depth(): the
         // program borrow above outlives this whole function.
         let depth = match self.pipeline_depth {
@@ -357,6 +403,12 @@ impl Engine {
                 init_barrier: Arc::clone(&init_barrier),
                 pipeline_depth: depth,
                 seed: 0x9E3779B9 + slot as u64 * 0x85EBCA77,
+                injector: self
+                    .config
+                    .fault_plan
+                    .as_ref()
+                    .map(|p| p.injector_for(slot))
+                    .unwrap_or_default(),
             };
             handles.push(spawn_worker(ctx, to_master_tx.clone(), rx));
         }
@@ -390,107 +442,105 @@ impl Engine {
                 }
             })
             .collect();
-        // Packages assigned but not yet reported Done, per device.
-        let mut inflight = vec![0usize; ndev];
         // Assignments whose H2D staging has not been confirmed by an
-        // Uploaded event yet (pipelined devices only). Capped at 2: one
-        // staging, one queued behind it — back-pressure so a device
+        // Uploaded event yet (pipelined devices only) are capped at 2:
+        // one staging, one queued behind it — back-pressure so a device
         // with a slow bus is never flooded with un-staged ranges while
         // an adaptive scheduler could still size them better elsewhere.
-        let mut unstaged = vec![0usize; ndev];
         let staging_cap = if depth > 1 { 2 } else { usize::MAX };
-        let mut finish_sent = vec![false; ndev];
+        let mut master = MasterState {
+            depth,
+            staging_cap,
+            granule: bench.granule,
+            fault_tolerant: self.config.fault_tolerant,
+            scheduler,
+            to_workers,
+            pending: vec![VecDeque::new(); ndev],
+            unstaged: vec![0usize; ndev],
+            finish_sent: vec![false; ndev],
+            failed: vec![false; ndev],
+            dry: vec![false; ndev],
+            reclaimed: VecDeque::new(),
+        };
+        let mut reported = vec![false; ndev];
         let mut finished = 0usize;
         let mut failure: Option<EclError> = None;
+        let mut faults: Vec<FaultEvent> = Vec::new();
 
-        // Top device `dev`'s pipeline up to `depth` packages (and at
-        // most `staging_cap` unconfirmed stagings). The first message
-        // batches two ranges (range + lookahead) so a pipelined worker
-        // starts one-ahead off a single round-trip. Sends Finish
-        // exactly once when the scheduler is dry for this device.
-        let top_up = |dev: usize,
-                      scheduler: &mut Box<dyn Scheduler>,
-                      inflight: &mut [usize],
-                      unstaged: &mut [usize],
-                      finish_sent: &mut [bool],
-                      to_workers: &[Sender<ToWorker>]| {
-            if finish_sent[dev] {
-                return;
-            }
-            while inflight[dev] < depth && unstaged[dev] < staging_cap {
-                let Some(range) = scheduler.next_package(dev) else {
-                    if inflight[dev] == 0 || depth > 1 {
-                        // Blocking workers only see Finish when idle;
-                        // pipelined workers drain their local queue.
-                        to_workers[dev].send(ToWorker::Finish).ok();
-                        finish_sent[dev] = true;
-                    }
-                    return;
-                };
-                inflight[dev] += 1;
-                if depth > 1 {
-                    unstaged[dev] += 1;
-                }
-                let lookahead = if depth > 1
-                    && inflight[dev] < depth
-                    && unstaged[dev] < staging_cap
-                {
-                    let next = scheduler.next_package(dev);
-                    if next.is_some() {
-                        inflight[dev] += 1;
-                        unstaged[dev] += 1;
-                    }
-                    next
-                } else {
-                    None
-                };
-                to_workers[dev].send(ToWorker::Assign(Assignment { range, lookahead })).ok();
-            }
-        };
+        // How often the idle master sweeps for worker threads that died
+        // without reporting (panics are caught and converted to Failed
+        // events in the worker shell; the sweep catches *silent* exits —
+        // the chaos layer's "vanish" mode, a segfaulting driver).
+        const LIVENESS_POLL: Duration = Duration::from_millis(25);
 
         while finished < ndev {
-            match from_workers.recv() {
-                Ok(FromWorker::Ready { dev, init_start, init_end }) => {
-                    device_traces[dev].init_start = init_start;
-                    device_traces[dev].init_end = init_end;
-                    top_up(dev, &mut scheduler, &mut inflight, &mut unstaged, &mut finish_sent, &to_workers);
+            match from_workers.recv_timeout(LIVENESS_POLL) {
+                Ok(ev) => handle_event(
+                    ev,
+                    &mut master,
+                    arena.as_ref(),
+                    &mut device_traces,
+                    &mut reported,
+                    &mut finished,
+                    &mut faults,
+                    &mut failure,
+                    epoch,
+                ),
+                Err(err) => {
+                    // Idle, or the channel died. Sweep for workers that
+                    // exited without reporting. A disconnected channel
+                    // means no worker can ever report again, so every
+                    // unreported device is dead regardless of the (racy)
+                    // thread-finished flag. Order matters: snapshot the
+                    // exited-but-unreported workers *first*, then drain
+                    // the channel — a worker that finished cleanly in
+                    // the race window between the timeout and the
+                    // snapshot sent its Finished/Failed *before* its
+                    // thread exited, so the drain honors it; only what
+                    // is still unreported after the drain is a genuine
+                    // silent death.
+                    let disconnected = err == RecvTimeoutError::Disconnected;
+                    let dead: Vec<usize> = (0..ndev)
+                        .filter(|&d| !reported[d] && (disconnected || handles[d].is_finished()))
+                        .collect();
+                    while let Ok(ev) = from_workers.try_recv() {
+                        handle_event(
+                            ev,
+                            &mut master,
+                            arena.as_ref(),
+                            &mut device_traces,
+                            &mut reported,
+                            &mut finished,
+                            &mut faults,
+                            &mut failure,
+                            epoch,
+                        );
+                    }
+                    for dev in dead {
+                        if !reported[dev] {
+                            reported[dev] = true;
+                            finished += 1;
+                            register_failure(
+                                &mut master,
+                                arena.as_ref(),
+                                &device_traces,
+                                &mut faults,
+                                &mut failure,
+                                epoch,
+                                dev,
+                                "worker exited without reporting a result (dead channel)"
+                                    .to_string(),
+                            );
+                        }
+                    }
                 }
-                Ok(FromWorker::Uploaded { dev }) => {
-                    // A prefetch landed on the device: release its
-                    // staging slot and keep the pipe full.
-                    unstaged[dev] = unstaged[dev].saturating_sub(1);
-                    top_up(dev, &mut scheduler, &mut inflight, &mut unstaged, &mut finish_sent, &to_workers);
-                }
-                Ok(FromWorker::Done { dev }) => {
-                    inflight[dev] = inflight[dev].saturating_sub(1);
-                    top_up(dev, &mut scheduler, &mut inflight, &mut unstaged, &mut finish_sent, &to_workers);
-                }
-                Ok(FromWorker::Finished { dev, traces, xfer }) => {
-                    device_traces[dev].packages = traces;
-                    device_traces[dev].xfer = xfer;
-                    finished += 1;
-                }
-                Ok(FromWorker::Failed { dev, message }) => {
-                    failure.get_or_insert(EclError::Worker {
-                        device: device_traces[dev].name.clone(),
-                        message,
-                    });
-                    finished += 1;
-                }
-                Err(_) => break,
             }
+            // Fault-tolerant mode defers Finish until every range is
+            // provably complete (see MasterState::finish_if_complete).
+            master.finish_if_complete();
         }
         for h in handles {
             let _ = h.join();
-        }
-        // A worker that panicked (rather than erred) never sends
-        // Finished/Failed — its channel just drops. Returning Ok here
-        // would silently leave that device's output regions zeroed.
-        if failure.is_none() && finished < ndev {
-            failure = Some(EclError::Runtime(format!(
-                "{} device worker(s) exited without reporting results",
-                ndev - finished
-            )));
         }
 
         // ---- recover the arena: results are already in place -----------
@@ -518,7 +568,7 @@ impl Engine {
         // The label reflects the *effective* depth: a Tier-1
         // pipeline(1) override on a "+pipe" spec ran blocking, and vice
         // versa — harness pairings key off this suffix.
-        let mut scheduler_label = scheduler.name();
+        let mut scheduler_label = master.scheduler.name();
         if depth > 1 && !scheduler_label.contains("+pipe") {
             scheduler_label.push_str("+pipe");
         } else if depth <= 1 && scheduler_label.ends_with("+pipe") {
@@ -531,8 +581,275 @@ impl Engine {
             gws,
             wall: epoch.elapsed(),
             devices: device_traces,
+            faults,
         })
     }
+}
+
+/// Recovery-aware assignment state for the master loop: per-device
+/// in-flight ranges (what recovery must reclaim when a device dies),
+/// staging back-pressure counters, and the shared queue of reclaimed
+/// ranges that survivors drain before asking the scheduler.
+struct MasterState {
+    depth: usize,
+    staging_cap: usize,
+    granule: usize,
+    fault_tolerant: bool,
+    scheduler: Box<dyn Scheduler>,
+    to_workers: Vec<Sender<ToWorker>>,
+    /// Ranges assigned but not yet reported `Done`, per device, in
+    /// execution (assignment) order.
+    pending: Vec<VecDeque<Range>>,
+    unstaged: Vec<usize>,
+    finish_sent: Vec<bool>,
+    failed: Vec<bool>,
+    /// The scheduler returned `None` for this device (terminal, per the
+    /// trait contract).
+    dry: Vec<bool>,
+    /// Reclaimed ranges awaiting requeue.
+    reclaimed: VecDeque<Range>,
+}
+
+/// What `MasterState::handle_failure` did, for the fault event record.
+struct FailureOutcome {
+    reclaimed_items: usize,
+    revoked_claims: usize,
+    recovered: bool,
+}
+
+impl MasterState {
+    fn ndev(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn next_scheduler_range(&mut self, dev: usize) -> Option<Range> {
+        if self.dry[dev] {
+            return None;
+        }
+        let r = self.scheduler.next_package(dev);
+        if r.is_none() {
+            self.dry[dev] = true;
+        }
+        r
+    }
+
+    /// The next range for `dev`: reclaimed (requeued) work first, then
+    /// the scheduler. Returns the range plus its requeued flag.
+    fn next_range(&mut self, dev: usize) -> Option<(Range, bool)> {
+        if let Some(r) = self.reclaimed.pop_front() {
+            return Some((r, true));
+        }
+        self.next_scheduler_range(dev).map(|r| (r, false))
+    }
+
+    /// Top device `dev`'s pipeline up to `depth` packages (and at most
+    /// `staging_cap` unconfirmed stagings). The first message batches
+    /// two ranges (range + lookahead) so a pipelined worker starts
+    /// one-ahead off a single round-trip.
+    fn top_up(&mut self, dev: usize) {
+        if self.finish_sent[dev] || self.failed[dev] {
+            return;
+        }
+        while self.pending[dev].len() < self.depth && self.unstaged[dev] < self.staging_cap {
+            let Some((range, requeued)) = self.next_range(dev) else {
+                // Legacy abort-on-failure mode finishes a device the
+                // moment it runs dry (blocking workers only when idle;
+                // pipelined workers drain their local queue). The
+                // fault-tolerant loop instead defers Finish to
+                // `finish_if_complete`: a later failure may still
+                // requeue work onto this device.
+                if !self.fault_tolerant && (self.pending[dev].is_empty() || self.depth > 1) {
+                    self.to_workers[dev].send(ToWorker::Finish).ok();
+                    self.finish_sent[dev] = true;
+                }
+                return;
+            };
+            self.pending[dev].push_back(range);
+            if self.depth > 1 {
+                self.unstaged[dev] += 1;
+            }
+            let lookahead = if self.depth > 1
+                && self.pending[dev].len() < self.depth
+                && self.unstaged[dev] < self.staging_cap
+                && self.reclaimed.is_empty()
+            {
+                let next = self.next_scheduler_range(dev);
+                if let Some(n) = next {
+                    self.pending[dev].push_back(n);
+                    self.unstaged[dev] += 1;
+                }
+                next
+            } else {
+                None
+            };
+            self.to_workers[dev]
+                .send(ToWorker::Assign(Assignment { range, lookahead, requeued }))
+                .ok();
+        }
+    }
+
+    /// All work provably done: nothing reclaimed waits, nothing is in
+    /// flight, and the scheduler is dry for every live device. Only
+    /// then can no future failure surface new work (dead devices have
+    /// nothing pending), so Finish is safe to broadcast.
+    fn complete(&self) -> bool {
+        self.reclaimed.is_empty()
+            && self.pending.iter().all(|q| q.is_empty())
+            && (0..self.ndev()).all(|d| self.failed[d] || self.dry[d])
+    }
+
+    /// Fault-tolerant finish: broadcast Finish to every live device
+    /// once the run is complete. No-op in legacy mode (per-device
+    /// Finish already happened in `top_up`).
+    fn finish_if_complete(&mut self) {
+        if !self.fault_tolerant || !self.complete() {
+            return;
+        }
+        for dev in 0..self.ndev() {
+            if !self.failed[dev] && !self.finish_sent[dev] {
+                self.to_workers[dev].send(ToWorker::Finish).ok();
+                self.finish_sent[dev] = true;
+            }
+        }
+    }
+
+    /// Device `dev`'s worker died. Reclaim its unfinished assignments
+    /// plus any scheduler reservation, revoke their arena claims, and
+    /// requeue the ranges — each split so every survivor can pull a
+    /// piece (a Static share would otherwise land whole on a single
+    /// survivor). Legacy mode reclaims nothing (abort semantics).
+    fn handle_failure(&mut self, dev: usize, arena: &OutputArena) -> FailureOutcome {
+        self.failed[dev] = true;
+        let mut ranges: Vec<Range> = self.pending[dev].drain(..).collect();
+        ranges.extend(self.scheduler.reclaim_device(dev));
+        let reclaimed_items: usize = ranges.iter().map(Range::len).sum();
+        if !self.fault_tolerant {
+            return FailureOutcome { reclaimed_items, revoked_claims: 0, recovered: false };
+        }
+        let survivors = (0..self.ndev())
+            .filter(|&d| !self.failed[d] && !self.finish_sent[d])
+            .count();
+        let recovered = reclaimed_items == 0 || survivors > 0;
+        let mut revoked_claims = 0usize;
+        for r in &ranges {
+            // SAFETY: the failed worker has exited (liveness sweep) or
+            // reported failure after dropping its windows on the error
+            // path, so no live window covers any of these ranges.
+            if unsafe { arena.revoke(r.begin, r.end) } {
+                revoked_claims += 1;
+            }
+            if survivors > 0 {
+                for piece in split_range(r.begin, r.end, survivors, self.granule) {
+                    self.reclaimed.push_back(piece);
+                }
+            }
+        }
+        if !self.reclaimed.is_empty() {
+            for d in 0..self.ndev() {
+                if !self.failed[d] {
+                    self.top_up(d);
+                }
+            }
+        }
+        FailureOutcome { reclaimed_items, revoked_claims, recovered }
+    }
+}
+
+/// Fold one worker event into the master loop's state. Called from the
+/// blocking receive and from the liveness sweep's channel drain (which
+/// must process every already-sent event before declaring an exited
+/// worker silently dead).
+#[allow(clippy::too_many_arguments)]
+fn handle_event(
+    ev: FromWorker,
+    master: &mut MasterState,
+    arena: &OutputArena,
+    device_traces: &mut [DeviceTrace],
+    reported: &mut [bool],
+    finished: &mut usize,
+    faults: &mut Vec<FaultEvent>,
+    failure: &mut Option<EclError>,
+    epoch: Instant,
+) {
+    match ev {
+        FromWorker::Ready { dev, init_start, init_end } => {
+            device_traces[dev].init_start = init_start;
+            device_traces[dev].init_end = init_end;
+            master.top_up(dev);
+        }
+        FromWorker::Uploaded { dev } => {
+            // A prefetch landed on the device: release its staging slot
+            // and keep the pipe full.
+            master.unstaged[dev] = master.unstaged[dev].saturating_sub(1);
+            master.top_up(dev);
+        }
+        FromWorker::Done { dev } => {
+            // Workers execute in assignment order, so the front pending
+            // range is the completed one; its results are fully in the
+            // arena by the time Done is sent.
+            master.pending[dev].pop_front();
+            master.top_up(dev);
+        }
+        FromWorker::Finished { dev, traces, xfer } => {
+            device_traces[dev].packages = traces;
+            device_traces[dev].xfer = xfer;
+            if !reported[dev] {
+                reported[dev] = true;
+                *finished += 1;
+            }
+        }
+        FromWorker::Failed { dev, message, traces, xfer } => {
+            // The packages the worker *completed* stay attributed to it
+            // — their results are already in the arena.
+            device_traces[dev].packages = traces;
+            device_traces[dev].xfer = xfer;
+            if !reported[dev] {
+                reported[dev] = true;
+                *finished += 1;
+                register_failure(
+                    master,
+                    arena,
+                    device_traces,
+                    faults,
+                    failure,
+                    epoch,
+                    dev,
+                    message,
+                );
+            }
+        }
+    }
+}
+
+/// Fold one worker failure into the master state: reclaim + requeue (or
+/// record the abort), and append the introspector's fault event.
+#[allow(clippy::too_many_arguments)]
+fn register_failure(
+    master: &mut MasterState,
+    arena: &OutputArena,
+    device_traces: &[DeviceTrace],
+    faults: &mut Vec<FaultEvent>,
+    failure: &mut Option<EclError>,
+    epoch: Instant,
+    dev: usize,
+    message: String,
+) {
+    let outcome = master.handle_failure(dev, arena);
+    if !outcome.recovered {
+        failure.get_or_insert(EclError::Worker {
+            device: device_traces[dev].name.clone(),
+            message: message.clone(),
+        });
+    }
+    faults.push(FaultEvent {
+        device: dev,
+        device_name: device_traces[dev].name.clone(),
+        message,
+        at: epoch.elapsed(),
+        reclaimed_items: outcome.reclaimed_items,
+        revoked_claims: outcome.revoked_claims,
+        recovered: outcome.recovered,
+    });
 }
 
 /// Validate recorded scalar args against the baked manifest scalars.

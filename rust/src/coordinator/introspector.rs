@@ -46,6 +46,9 @@ pub struct PackageTrace {
     /// Bytes the package's D2H phase moved; 0 = results written in
     /// place through the output arena (the zero-copy path).
     pub d2h_bytes: usize,
+    /// True when this package is recovered work: its range was reclaimed
+    /// from a dead device's unfinished assignments and requeued here.
+    pub requeued: bool,
 }
 
 impl PackageTrace {
@@ -62,6 +65,30 @@ impl PackageTrace {
             && self.h2d_start < other.end
             && self.h2d_end > other.exec_start
     }
+}
+
+/// One observed device failure and what the engine did about it — the
+/// introspector's record of the fault-tolerance path (injected faults
+/// and real worker deaths look identical here).
+#[derive(Debug, Clone)]
+pub struct FaultEvent {
+    /// Index into `RunReport::devices`.
+    pub device: usize,
+    pub device_name: String,
+    /// The worker's failure message (or the engine's liveness verdict
+    /// for workers that died without reporting).
+    pub message: String,
+    /// Run-epoch offset at which the master observed the failure.
+    pub at: Duration,
+    /// Work-items reclaimed from the dead device (unfinished
+    /// assignments plus any scheduler reservation) and requeued.
+    pub reclaimed_items: usize,
+    /// Arena claims revoked (the dead device had claimed but never
+    /// completed these ranges — their windows held partial writes).
+    pub revoked_claims: usize,
+    /// True when survivors absorbed the reclaimed work and the run
+    /// completed; false when the failure aborted the run.
+    pub recovered: bool,
 }
 
 /// Bytes a device worker moved between host and device over a whole
@@ -131,6 +158,10 @@ pub struct RunReport {
     /// Wall time of `Engine::run` (epoch -> all results merged).
     pub wall: Duration,
     pub devices: Vec<DeviceTrace>,
+    /// Device failures observed during the run, in observation order.
+    /// Empty on a clean run; a non-empty list on a *successful* run
+    /// means every failure was recovered (work requeued to survivors).
+    pub faults: Vec<FaultEvent>,
 }
 
 impl RunReport {
@@ -204,6 +235,32 @@ impl RunReport {
         self.transfer_overlap_count() > 0
     }
 
+    /// Packages (across all devices) that were recovered work — ranges
+    /// reclaimed from a dead device and requeued to a survivor.
+    pub fn requeued_packages(&self) -> usize {
+        self.devices
+            .iter()
+            .flat_map(|d| d.packages.iter())
+            .filter(|p| p.requeued)
+            .count()
+    }
+
+    /// Work-items executed as recovered (requeued) packages.
+    pub fn requeued_items(&self) -> usize {
+        self.devices
+            .iter()
+            .flat_map(|d| d.packages.iter())
+            .filter(|p| p.requeued)
+            .map(PackageTrace::items)
+            .sum()
+    }
+
+    /// True when the run saw at least one device failure and every one
+    /// of them was recovered.
+    pub fn recovered(&self) -> bool {
+        !self.faults.is_empty() && self.faults.iter().all(|f| f.recovered)
+    }
+
     /// Total bytes moved host→device across all devices (staging).
     pub fn h2d_bytes(&self) -> usize {
         self.devices.iter().map(|d| d.xfer.h2d_bytes).sum()
@@ -268,12 +325,12 @@ impl RunReport {
     /// pipelined sub-spans.
     pub fn package_csv(&self) -> String {
         let mut s = String::from(
-            "device,kind,begin_item,end_item,start_ms,end_ms,h2d_start_ms,h2d_end_ms,exec_start_ms,raw_ms,launches,h2d_bytes,d2h_bytes\n",
+            "device,kind,begin_item,end_item,start_ms,end_ms,h2d_start_ms,h2d_end_ms,exec_start_ms,raw_ms,launches,h2d_bytes,d2h_bytes,requeued\n",
         );
         for d in &self.devices {
             for p in &d.packages {
                 s.push_str(&format!(
-                    "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{},{},{}\n",
+                    "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{},{},{},{}\n",
                     d.name,
                     d.kind.label(),
                     p.begin_item,
@@ -286,7 +343,8 @@ impl RunReport {
                     p.raw_exec.as_secs_f64() * 1e3,
                     p.launches,
                     p.h2d_bytes,
-                    p.d2h_bytes
+                    p.d2h_bytes,
+                    u8::from(p.requeued)
                 ));
             }
         }
@@ -317,6 +375,7 @@ mod tests {
             launches: 1,
             h2d_bytes: 4,
             d2h_bytes: 0,
+            requeued: false,
         }
     }
 
@@ -344,6 +403,7 @@ mod tests {
                     xfer: TransferStats { input_upload_bytes: 0, h2d_bytes: 4, d2h_bytes: 0 },
                 },
             ],
+            faults: Vec::new(),
         }
     }
 
@@ -408,7 +468,45 @@ mod tests {
         assert_eq!(r.input_upload_bytes(), 100);
         let csv = r.package_csv();
         assert!(csv.starts_with("device,"));
-        assert!(csv.lines().next().unwrap().ends_with("h2d_bytes,d2h_bytes"));
+        assert!(csv.lines().next().unwrap().ends_with("h2d_bytes,d2h_bytes,requeued"));
+    }
+
+    #[test]
+    fn fault_and_requeue_accounting() {
+        let mut r = mk_report();
+        assert!(!r.recovered(), "no faults, nothing recovered");
+        assert_eq!(r.requeued_packages(), 0);
+
+        // The gpu picks up a reclaimed package from a dead cpu.
+        let mut requeued = mk(1, 0, 30, 85, 95);
+        requeued.requeued = true;
+        r.devices[1].packages.push(requeued);
+        r.devices[0].packages.clear();
+        r.faults.push(FaultEvent {
+            device: 0,
+            device_name: "cpu".into(),
+            message: "fault injection: killed at package 0".into(),
+            at: ms(80),
+            reclaimed_items: 30,
+            revoked_claims: 1,
+            recovered: true,
+        });
+        assert!(r.recovered());
+        assert_eq!(r.requeued_packages(), 1);
+        assert_eq!(r.requeued_items(), 30);
+        let csv = r.package_csv();
+        assert!(csv.lines().any(|l| l.ends_with(",1")), "requeued column set");
+
+        r.faults.push(FaultEvent {
+            device: 1,
+            device_name: "gpu".into(),
+            message: "cascade".into(),
+            at: ms(90),
+            reclaimed_items: 10,
+            revoked_claims: 0,
+            recovered: false,
+        });
+        assert!(!r.recovered(), "one unrecovered fault poisons the run");
     }
 
     #[test]
@@ -429,6 +527,7 @@ mod tests {
             launches: 1,
             h2d_bytes: 4,
             d2h_bytes: 0,
+            requeued: false,
         });
         assert_eq!(r.transfer_overlap_count(), 1);
         assert!(r.has_transfer_overlap());

@@ -20,7 +20,7 @@ pub use config::Configurator;
 pub use device::{DeviceMask, DeviceSpec};
 pub use engine::Engine;
 pub use error::EclError;
-pub use introspector::{DeviceTrace, PackageTrace, RunReport, TransferStats};
+pub use introspector::{DeviceTrace, FaultEvent, PackageTrace, RunReport, TransferStats};
 pub use program::{Arg, Program};
 pub use scheduler::SchedulerKind;
 pub use work::Range;

@@ -47,6 +47,18 @@ pub trait Scheduler: Send {
     fn pipeline_depth(&self) -> usize {
         1
     }
+
+    /// Hand back any ranges this scheduler has *reserved* for device
+    /// `dev` but not yet delivered — called by the engine's recovery
+    /// path when `dev`'s worker dies, so reserved work can be requeued
+    /// to survivors. Pool-based schedulers (Dynamic, HGuided) reserve
+    /// nothing per device — survivors simply drain the shared pool — so
+    /// the default returns nothing. Static overrides it: its pre-split
+    /// package for a device that died before pulling it would otherwise
+    /// be stranded forever.
+    fn reclaim_device(&mut self, _dev: usize) -> Vec<Range> {
+        Vec::new()
+    }
 }
 
 /// Engine-facing configuration enum (Tier-2 API); materialized into a

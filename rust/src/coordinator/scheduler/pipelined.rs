@@ -51,6 +51,10 @@ impl Scheduler for Pipelined {
     fn pipeline_depth(&self) -> usize {
         self.depth
     }
+
+    fn reclaim_device(&mut self, dev: usize) -> Vec<Range> {
+        self.inner.reclaim_device(dev)
+    }
 }
 
 #[cfg(test)]

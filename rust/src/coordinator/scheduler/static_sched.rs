@@ -62,6 +62,15 @@ impl Scheduler for Static {
     fn next_package(&mut self, dev: usize) -> Option<Range> {
         self.packages.get_mut(dev).and_then(|p| p.take())
     }
+
+    /// The pre-split package of a dead device that never pulled it.
+    /// Without this the engine's recovery path could never re-split a
+    /// Static share lost to an init-time failure (the documented Static
+    /// degradation: after a fault the run is no longer one-package-per-
+    /// device — survivors execute the reclaimed share as extra packages).
+    fn reclaim_device(&mut self, dev: usize) -> Vec<Range> {
+        self.packages.get_mut(dev).and_then(|p| p.take()).into_iter().collect()
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +128,20 @@ mod tests {
         let b = s.next_package(1).unwrap();
         assert_eq!(a.len(), 25);
         assert_eq!(b.len(), 75);
+    }
+
+    #[test]
+    fn reclaim_returns_untaken_package_once() {
+        let mut s = Static::new(Some(vec![0.5, 0.5]), false);
+        s.start(10, 1, &devs(&[1.0, 1.0]));
+        let reclaimed = s.reclaim_device(1);
+        assert_eq!(reclaimed.len(), 1);
+        assert_eq!(reclaimed[0].len(), 5);
+        assert!(s.next_package(1).is_none(), "reclaimed package is gone");
+        assert!(s.reclaim_device(1).is_empty(), "second reclaim finds nothing");
+        // A package already delivered cannot be reclaimed from the scheduler.
+        s.next_package(0).unwrap();
+        assert!(s.reclaim_device(0).is_empty());
     }
 
     #[test]

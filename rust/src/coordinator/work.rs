@@ -59,6 +59,22 @@ pub fn proportional_split(total_granules: usize, props: &[f64]) -> Vec<(usize, u
     out
 }
 
+/// Split the granule-aligned work-item range `[begin, end)` into at
+/// most `parts` near-equal contiguous granule-aligned pieces (empty
+/// pieces are dropped). The engine's recovery path uses this to break a
+/// dead device's reclaimed ranges into pieces every survivor can pull —
+/// one Static-sized package would otherwise land whole on a single
+/// survivor.
+pub fn split_range(begin: usize, end: usize, parts: usize, granule: usize) -> Vec<Range> {
+    debug_assert!(granule > 0 && begin % granule == 0 && (end - begin) % granule == 0);
+    let total_granules = (end - begin) / granule;
+    equal_split(total_granules, parts.max(1))
+        .into_iter()
+        .filter(|(a, b)| b > a)
+        .map(|(a, b)| Range::new(begin + a * granule, begin + b * granule))
+        .collect()
+}
+
 /// Split `total_granules` into `packages` near-equal contiguous slices
 /// (first `total % packages` slices get one extra granule).
 pub fn equal_split(total_granules: usize, packages: usize) -> Vec<(usize, usize)> {
@@ -117,6 +133,27 @@ mod tests {
         let parts = proportional_split(10, &[0.0, 1.0]);
         assert_eq!(parts[0], (0, 0));
         assert_eq!(parts[1], (0, 10));
+    }
+
+    #[test]
+    fn split_range_partitions_and_aligns() {
+        for (begin, end, parts, granule) in
+            [(0usize, 1024usize, 3usize, 64usize), (256, 320, 4, 8), (128, 256, 1, 128), (0, 8, 5, 8)]
+        {
+            let pieces = split_range(begin, end, parts, granule);
+            assert!(!pieces.is_empty());
+            assert!(pieces.len() <= parts.max(1));
+            assert_eq!(pieces[0].begin, begin);
+            assert_eq!(pieces.last().unwrap().end, end);
+            for w in pieces.windows(2) {
+                assert_eq!(w[0].end, w[1].begin, "contiguous");
+            }
+            for p in &pieces {
+                assert_eq!(p.begin % granule, 0);
+                assert_eq!(p.len() % granule, 0);
+                assert!(!p.is_empty());
+            }
+        }
     }
 
     #[test]

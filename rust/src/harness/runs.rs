@@ -187,10 +187,12 @@ mod tests {
                         launches: 1,
                         h2d_bytes: 4,
                         d2h_bytes: 0,
+                        requeued: false,
                     }],
                     xfer: Default::default(),
                 })
                 .collect(),
+            faults: Vec::new(),
         }
     }
 

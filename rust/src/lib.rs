@@ -63,9 +63,9 @@ pub mod util;
 /// Everything a typical program needs.
 pub mod prelude {
     pub use crate::coordinator::{
-        Buffer, Configurator, DeviceMask, DeviceSpec, EclError, Engine, Program, RunReport,
-        SchedulerKind,
+        Buffer, Configurator, DeviceMask, DeviceSpec, EclError, Engine, FaultEvent, Program,
+        RunReport, SchedulerKind,
     };
-    pub use crate::platform::{DeviceKind, DeviceProfile, NodeConfig};
+    pub use crate::platform::{DeviceKind, DeviceProfile, FaultKind, FaultPlan, NodeConfig};
     pub use crate::runtime::{ArtifactRegistry, HostBuf};
 }

@@ -5,7 +5,7 @@ use anyhow::Result;
 
 use enginecl::coordinator::{scheduler, DeviceSpec};
 use enginecl::harness::{balance, init, overhead, perf, runs, traces};
-use enginecl::platform::NodeConfig;
+use enginecl::platform::{FaultPlan, NodeConfig};
 use enginecl::runtime::ArtifactRegistry;
 use enginecl::util::cli::Args;
 
@@ -18,9 +18,16 @@ USAGE:
   enginecl run <bench> [--node N] [--devices 0,1,2|all|gpu|cpu]
                         [--scheduler static|static-rev|dynamic:N|hguided]
                         [--gws N] [--timeline] [--csv]
+                        [--fault SPEC] [--no-recovery]
                         (any scheduler spec takes a +pipe[N] suffix to
                          enable the transfer/compute pipeline, e.g.
-                         --scheduler hguided+pipe or dynamic:150+pipe3)
+                         --scheduler hguided+pipe or dynamic:150+pipe3;
+                         --fault injects deterministic faults, e.g.
+                         kill:dev1@pkg2, stall:dev0@pkg1:250ms,
+                         slow:dev2@pkg0:4, panic:dev1@pkg0,
+                         vanish:dev1@pkg0 — comma-separate several.
+                         Survivors requeue a dead device's work unless
+                         --no-recovery restores abort-on-failure)
   enginecl solo <bench> [--node N]         per-device solo times + S_max
   enginecl overhead <bench> [--device I] [--reps N]
   enginecl eval [--node N] [--reps N]      balance/speedup/efficiency grid
@@ -119,7 +126,17 @@ fn run(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bad --scheduler"))?;
     let gws = args.get("gws").and_then(|s| s.parse().ok());
 
-    let report = runs::run_once(&reg, &node, bench, devices, kind, gws)?;
+    let mut engine = runs::build_engine(&reg, &node, bench, devices, kind, gws)?;
+    if let Some(spec) = args.get("fault") {
+        let plan = FaultPlan::parse(spec)
+            .ok_or_else(|| anyhow::anyhow!("bad --fault spec '{spec}' (e.g. kill:dev1@pkg2)"))?;
+        engine.fault_plan(plan);
+    }
+    if args.has_flag("no-recovery") {
+        engine.configurator().fault_tolerant = false;
+    }
+    engine.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let report = engine.report().unwrap().clone();
     println!(
         "bench={} scheduler={} gws={} wall={:.1}ms balance={:.3} packages={}",
         report.bench,
@@ -138,6 +155,24 @@ fn run(args: &Args) -> Result<()> {
             d.init_end.as_secs_f64() * 1e3,
             d.completion().as_secs_f64() * 1e3,
             d.packages.len()
+        );
+    }
+    for f in &report.faults {
+        println!(
+            "  fault: {} at {:.1}ms — {} ({} items reclaimed, {} claim(s) revoked, {})",
+            f.device_name,
+            f.at.as_secs_f64() * 1e3,
+            f.message,
+            f.reclaimed_items,
+            f.revoked_claims,
+            if f.recovered { "recovered by survivors" } else { "not recovered" }
+        );
+    }
+    if report.requeued_packages() > 0 {
+        println!(
+            "  recovery: {} requeued package(s) covering {} items",
+            report.requeued_packages(),
+            report.requeued_items()
         );
     }
     if args.has_flag("timeline") {

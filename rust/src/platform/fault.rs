@@ -1,0 +1,345 @@
+//! Deterministic fault injection (the chaos layer).
+//!
+//! A [`FaultPlan`] describes, ahead of a run, exactly where devices
+//! misbehave: *kill* (the worker dies mid-package, leaving a claimed,
+//! partially-written arena window behind), *stall* (a transient hang),
+//! *slow* (permanent throughput degradation — thermal throttling),
+//! *panic* (the worker thread unwinds) and *vanish* (the worker exits
+//! silently, sending no completion event at all — a segfaulting driver).
+//!
+//! Faults trigger at **package boundaries**, either by per-device package
+//! ordinal (`pkg2` = just before that device executes its third package)
+//! or by simclock offset (`350ms` = the first package boundary at or
+//! after that instant from the run epoch). Package-ordinal triggers are
+//! fully deterministic: the same plan fires at the same point on every
+//! run. Simclock triggers are deterministic only insofar as the
+//! simulated holds dominate wall time.
+//!
+//! The plan is engine-agnostic data; each device worker derives a
+//! [`FaultInjector`] from it and polls [`FaultInjector::on_package`]
+//! once per package. Recovery — revoking the dead device's arena claims
+//! and requeuing its work onto survivors — lives in the coordinator
+//! (`coordinator::engine`); this module only decides *when* and *how*
+//! a device fails.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::util::rng::XorShift;
+
+/// What goes wrong.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// The worker claims the package's arena windows, scribbles a poison
+    /// pattern over them, executes only a prefix of the sub-launches and
+    /// dies with an error — a device lost mid-package.
+    Kill,
+    /// The worker sleeps for the given duration before the package —
+    /// a transient hang (adaptive schedulers shift work away from it).
+    Stall(Duration),
+    /// The worker's simulated throughput degrades by this factor from
+    /// the package on (≥ 1 slows it down) — thermal throttling.
+    Slowdown(f64),
+    /// The worker thread panics (exercises the engine's unwind-to-event
+    /// conversion).
+    Panic,
+    /// The worker exits silently without reporting anything (exercises
+    /// the engine's dead-channel liveness detection).
+    Vanish,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultKind::Kill => write!(f, "kill"),
+            FaultKind::Stall(d) => write!(f, "stall {}ms", d.as_millis()),
+            FaultKind::Slowdown(x) => write!(f, "slow {x}x"),
+            FaultKind::Panic => write!(f, "panic"),
+            FaultKind::Vanish => write!(f, "vanish"),
+        }
+    }
+}
+
+/// When it goes wrong (checked at each package boundary).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultTrigger {
+    /// Before the device executes its n-th package (0-based, counted
+    /// per device). Fully deterministic.
+    Package(usize),
+    /// At the first package boundary at or after this offset from the
+    /// run epoch. Deterministic only up to scheduling noise.
+    At(Duration),
+}
+
+/// One planned fault on one device.
+///
+/// `device` indexes the engine's *selected* device list (the worker
+/// slot), not the node's full device table — `dev1` in a 2-device run
+/// is the second selected device whatever its node index is.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub device: usize,
+    pub kind: FaultKind,
+    pub trigger: FaultTrigger,
+}
+
+/// A full, deterministic fault schedule for one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Add any fault (builder-style).
+    pub fn with(mut self, device: usize, kind: FaultKind, trigger: FaultTrigger) -> Self {
+        self.faults.push(FaultSpec { device, kind, trigger });
+        self
+    }
+
+    /// Kill `device` just before its `pkg`-th package.
+    pub fn kill(device: usize, pkg: usize) -> Self {
+        Self::new().with(device, FaultKind::Kill, FaultTrigger::Package(pkg))
+    }
+
+    /// Panic `device`'s worker thread at its `pkg`-th package.
+    pub fn panic_at(device: usize, pkg: usize) -> Self {
+        Self::new().with(device, FaultKind::Panic, FaultTrigger::Package(pkg))
+    }
+
+    /// Silently lose `device` at its `pkg`-th package.
+    pub fn vanish(device: usize, pkg: usize) -> Self {
+        Self::new().with(device, FaultKind::Vanish, FaultTrigger::Package(pkg))
+    }
+
+    /// Stall `device` for `dur` before its `pkg`-th package.
+    pub fn stall(device: usize, pkg: usize, dur: Duration) -> Self {
+        Self::new().with(device, FaultKind::Stall(dur), FaultTrigger::Package(pkg))
+    }
+
+    /// Degrade `device`'s simulated speed by `factor` from its `pkg`-th
+    /// package on.
+    pub fn slowdown(device: usize, pkg: usize, factor: f64) -> Self {
+        Self::new().with(device, FaultKind::Slowdown(factor), FaultTrigger::Package(pkg))
+    }
+
+    /// A seed-derived single-kill plan for chaos sweeps: kills one of
+    /// `devices` at one of the first `max_pkg` package ordinals. The
+    /// same seed always produces the same plan, so a failing sweep case
+    /// is reproducible from its logged seed alone.
+    pub fn seeded_kill(seed: u64, devices: usize, max_pkg: usize) -> Self {
+        let mut rng = XorShift::new(seed);
+        let device = rng.below(devices.max(1));
+        let pkg = rng.below(max_pkg.max(1));
+        Self::kill(device, pkg)
+    }
+
+    /// Parse a comma-separated CLI fault spec. Grammar, per fault:
+    ///
+    /// ```text
+    ///   kill:dev<D>@pkg<N>          kill device D at its N-th package
+    ///   kill:dev<D>@<T>ms           kill at the first boundary ≥ T ms
+    ///   stall:dev<D>@pkg<N>:<T>ms   stall T ms before the N-th package
+    ///   slow:dev<D>@pkg<N>:<F>      degrade speed by factor F (≥ 1)
+    ///   panic:dev<D>@pkg<N>         panic the worker thread
+    ///   vanish:dev<D>@pkg<N>        exit silently (no completion event)
+    /// ```
+    ///
+    /// e.g. `--fault kill:dev1@pkg2` or
+    /// `--fault stall:dev0@pkg1:250ms,slow:dev2@pkg0:4`.
+    pub fn parse(spec: &str) -> Option<Self> {
+        let mut plan = FaultPlan::new();
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let (kind_str, rest) = part.split_once(':')?;
+            let (target, extra) = match rest.split_once(':') {
+                Some((t, x)) => (t, Some(x)),
+                None => (rest, None),
+            };
+            let (dev_str, trig_str) = target.split_once('@')?;
+            let device: usize = dev_str.strip_prefix("dev")?.parse().ok()?;
+            let trigger = if let Some(pkg) = trig_str.strip_prefix("pkg") {
+                FaultTrigger::Package(pkg.parse().ok()?)
+            } else {
+                let ms: u64 = trig_str.strip_suffix("ms")?.parse().ok()?;
+                FaultTrigger::At(Duration::from_millis(ms))
+            };
+            let kind = match (kind_str, extra) {
+                ("kill", None) => FaultKind::Kill,
+                ("panic", None) => FaultKind::Panic,
+                ("vanish", None) => FaultKind::Vanish,
+                ("stall", Some(x)) => {
+                    let ms: u64 = x.strip_suffix("ms").unwrap_or(x).parse().ok()?;
+                    FaultKind::Stall(Duration::from_millis(ms))
+                }
+                ("slow", Some(x)) => {
+                    let f: f64 = x.parse().ok()?;
+                    // Finite and positive: `inf` would make the scaler's
+                    // Duration::from_secs_f64 panic, `nan` silently no-op.
+                    if !f.is_finite() || f <= 0.0 {
+                        return None;
+                    }
+                    FaultKind::Slowdown(f)
+                }
+                _ => return None,
+            };
+            plan.faults.push(FaultSpec { device, kind, trigger });
+        }
+        if plan.is_empty() {
+            None
+        } else {
+            Some(plan)
+        }
+    }
+
+    /// The injector a worker in slot `device` polls at package
+    /// boundaries.
+    pub fn injector_for(&self, device: usize) -> FaultInjector {
+        FaultInjector {
+            faults: self
+                .faults
+                .iter()
+                .filter(|f| f.device == device)
+                .map(|f| (f.trigger, f.kind.clone(), false))
+                .collect(),
+        }
+    }
+}
+
+/// Per-worker fault state derived from a [`FaultPlan`]: polled once per
+/// package boundary, fires each planned fault at most once.
+#[derive(Debug, Clone, Default)]
+pub struct FaultInjector {
+    /// (trigger, kind, fired).
+    faults: Vec<(FaultTrigger, FaultKind, bool)>,
+}
+
+impl FaultInjector {
+    /// An injector that never fires (no plan).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Called by the worker just before executing its `ordinal`-th
+    /// package at simclock offset `now`. Returns the first planned,
+    /// not-yet-fired fault whose trigger matches, marking it fired.
+    pub fn on_package(&mut self, ordinal: usize, now: Duration) -> Option<FaultKind> {
+        for (trigger, kind, fired) in self.faults.iter_mut() {
+            if *fired {
+                continue;
+            }
+            let hit = match trigger {
+                FaultTrigger::Package(p) => *p == ordinal,
+                FaultTrigger::At(t) => now >= *t,
+            };
+            if hit {
+                *fired = true;
+                return Some(kind.clone());
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    #[test]
+    fn parse_kill_at_package() {
+        let p = FaultPlan::parse("kill:dev1@pkg2").unwrap();
+        assert_eq!(p, FaultPlan::kill(1, 2));
+    }
+
+    #[test]
+    fn parse_kill_at_time() {
+        let p = FaultPlan::parse("kill:dev0@350ms").unwrap();
+        assert_eq!(p.faults[0].trigger, FaultTrigger::At(ms(350)));
+        assert_eq!(p.faults[0].kind, FaultKind::Kill);
+    }
+
+    #[test]
+    fn parse_multi_fault_spec() {
+        let p = FaultPlan::parse("stall:dev0@pkg1:250ms,slow:dev2@pkg0:4,vanish:dev1@pkg3")
+            .unwrap();
+        assert_eq!(p.faults.len(), 3);
+        assert_eq!(p.faults[0].kind, FaultKind::Stall(ms(250)));
+        assert_eq!(p.faults[1].kind, FaultKind::Slowdown(4.0));
+        assert_eq!(p.faults[1].device, 2);
+        assert_eq!(p.faults[2].kind, FaultKind::Vanish);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "", "kill", "kill:dev1", "kill:devx@pkg2", "kill:dev1@pkg", "boom:dev1@pkg2",
+            "slow:dev1@pkg2", "slow:dev1@pkg2:0", "stall:dev1@pkg2", "kill:dev1@2s",
+            "slow:dev1@pkg2:inf", "slow:dev1@pkg2:nan", "slow:dev1@pkg2:-3",
+        ] {
+            assert!(FaultPlan::parse(bad).is_none(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn injector_fires_once_at_the_right_package() {
+        let plan = FaultPlan::kill(1, 2);
+        let mut inj = plan.injector_for(1);
+        assert_eq!(inj.on_package(0, ms(0)), None);
+        assert_eq!(inj.on_package(1, ms(0)), None);
+        assert_eq!(inj.on_package(2, ms(0)), Some(FaultKind::Kill));
+        assert_eq!(inj.on_package(3, ms(0)), None, "fires at most once");
+        // Other devices get an empty injector.
+        let mut other = plan.injector_for(0);
+        assert!(other.is_empty());
+        assert_eq!(other.on_package(2, ms(0)), None);
+    }
+
+    #[test]
+    fn injector_time_trigger_fires_at_first_boundary_after() {
+        let plan = FaultPlan::new().with(0, FaultKind::Kill, FaultTrigger::At(ms(100)));
+        let mut inj = plan.injector_for(0);
+        assert_eq!(inj.on_package(0, ms(40)), None);
+        assert_eq!(inj.on_package(1, ms(120)), Some(FaultKind::Kill));
+        assert_eq!(inj.on_package(2, ms(300)), None);
+    }
+
+    #[test]
+    fn seeded_kill_is_deterministic_and_in_range() {
+        let a = FaultPlan::seeded_kill(42, 3, 4);
+        let b = FaultPlan::seeded_kill(42, 3, 4);
+        assert_eq!(a, b);
+        let FaultSpec { device, kind, trigger } = &a.faults[0];
+        assert!(*device < 3);
+        assert_eq!(*kind, FaultKind::Kill);
+        match trigger {
+            FaultTrigger::Package(p) => assert!(*p < 4),
+            other => panic!("unexpected trigger {other:?}"),
+        }
+        let distinct: std::collections::BTreeSet<String> = (0..32)
+            .map(|s| format!("{:?}", FaultPlan::seeded_kill(s, 3, 4).faults[0]))
+            .collect();
+        assert!(distinct.len() > 1, "seeds must actually vary the plan");
+    }
+
+    #[test]
+    fn display_labels() {
+        assert_eq!(FaultKind::Kill.to_string(), "kill");
+        assert_eq!(FaultKind::Stall(ms(250)).to_string(), "stall 250ms");
+        assert_eq!(FaultKind::Slowdown(4.0).to_string(), "slow 4x");
+        assert_eq!(FaultKind::Vanish.to_string(), "vanish");
+    }
+}

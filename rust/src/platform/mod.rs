@@ -8,8 +8,10 @@
 //! per-package overheads and the content-dependent cost profile, all of
 //! which are preserved (DESIGN.md §4).
 
+pub mod fault;
 pub mod profile;
 pub mod simclock;
 
+pub use fault::{FaultInjector, FaultKind, FaultPlan, FaultSpec, FaultTrigger};
 pub use profile::{DeviceKind, DeviceProfile, NodeConfig};
 pub use simclock::TimeScaler;

@@ -51,6 +51,17 @@ impl TimeScaler {
         self.factor
     }
 
+    /// Permanently degrade this device's simulated throughput by
+    /// `factor` (≥ 1 slows it down) — the fault layer's `Slowdown`
+    /// injection (thermal throttling, a dying fan). Every subsequent
+    /// package target stretches by the degraded factor, so adaptive
+    /// schedulers see the device get slower and shift work away.
+    pub fn degrade(&mut self, factor: f64) {
+        if factor > 0.0 {
+            self.factor *= factor;
+        }
+    }
+
     /// Target duration for a package whose raw execution took `raw`.
     pub fn target(&mut self, raw: Duration, launches: u32) -> Duration {
         let mut t = raw.as_secs_f64() * self.factor;
@@ -162,6 +173,22 @@ mod tests {
         let got = s.hold(start, Duration::from_millis(30));
         assert!(start.elapsed() >= Duration::from_millis(29));
         assert!(got >= Duration::from_millis(29));
+    }
+
+    #[test]
+    fn degrade_multiplies_factor() {
+        let mut s = TimeScaler::new(&prof(1.0), 1);
+        let base = s.target(Duration::from_millis(10), 1);
+        s.degrade(3.0);
+        let slowed = s.target(Duration::from_millis(10), 1);
+        // Compute stretches 3x; the per-launch overhead term does not.
+        let overhead = Duration::from_millis(1).as_secs_f64();
+        let want = (base.as_secs_f64() - overhead) * 3.0 + overhead;
+        assert!((slowed.as_secs_f64() - want).abs() < 1e-9, "{slowed:?} vs {want}");
+        // Non-positive factors are ignored, not inverted.
+        s.degrade(0.0);
+        s.degrade(-2.0);
+        assert_eq!(s.target(Duration::from_millis(10), 1), slowed);
     }
 
     #[test]

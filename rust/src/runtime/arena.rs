@@ -146,6 +146,29 @@ impl OutputArena {
             .collect())
     }
 
+    /// Revoke the exact claim `[begin, end)` so a surviving device can
+    /// re-claim (and fully rewrite) the range — the engine's recovery
+    /// path for a worker that died after claiming but before completing
+    /// a package. Returns `false` (and changes nothing) when no such
+    /// claim exists — the dead worker never got as far as claiming.
+    ///
+    /// # Safety
+    ///
+    /// The windows handed out for this claim must be dead: the claiming
+    /// worker has exited (its thread finished, or it reported failure
+    /// after dropping its windows on the error path). Revoking a range
+    /// whose windows are still writable would let a re-claim alias live
+    /// exclusive slices — exactly the UB the ledger exists to prevent.
+    pub unsafe fn revoke(&self, begin: usize, end: usize) -> bool {
+        let mut claims = self.claims.lock().unwrap();
+        if let Some(i) = claims.iter().position(|&(b, e)| b == begin && e == end) {
+            claims.swap_remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
     /// Item-ranges claimed so far (sorted), for coverage checks.
     pub fn claimed_ranges(&self) -> Vec<(usize, usize)> {
         let mut v = self.claims.lock().unwrap().clone();
@@ -249,6 +272,28 @@ mod tests {
         assert!(a.claim(0, 72).is_err(), "out of bounds");
         assert!(a.claim(4, 12).is_err(), "misaligned begin");
         assert!(a.claim(0, 12).is_err(), "misaligned end");
+    }
+
+    #[test]
+    fn revoke_reopens_exactly_that_range() {
+        let a = arena(64, 8, &[1]);
+        {
+            let mut w = a.claim(0, 32).unwrap();
+            w[0].as_mut_slice().fill(7.0); // "partial" write by the dead worker
+        }
+        // SAFETY: the windows above were dropped before the revoke.
+        assert!(unsafe { a.revoke(0, 32) });
+        assert!(!unsafe { a.revoke(0, 32) }, "second revoke finds nothing");
+        assert!(!unsafe { a.revoke(32, 64) }, "never-claimed range finds nothing");
+        // The exact range is claimable again; a different overlap is not
+        // unless it matches what remains free.
+        let mut w = a.claim(0, 32).unwrap();
+        w[0].as_mut_slice().fill(9.0);
+        drop(w);
+        a.claim(32, 64).unwrap();
+        assert_eq!(a.claimed_items(), 64);
+        let bufs = a.into_buffers();
+        assert!(bufs[0][..32].iter().all(|&x| x == 9.0), "rewrite overwrote the poison");
     }
 
     #[test]

@@ -113,6 +113,23 @@ pub fn validate_windows(
     Ok(())
 }
 
+/// Sentinel a killed worker scribbles over its claimed-but-unfinished
+/// arena windows before dying. Finite (so bitwise output comparisons
+/// behave) and absurdly out of range for every kernel — any surviving
+/// poison after recovery is a loud, unambiguous bug.
+pub const FAULT_POISON: f32 = 3.0e33;
+
+/// Overwrite every element of the per-output windows with `value` —
+/// the fault layer's stand-in for the indeterminate state a real device
+/// leaves behind when it dies mid-package. Recovery must fully rewrite
+/// the range, which the chaos suite verifies by checking no poison
+/// survives into the final outputs.
+pub fn poison_windows(outs: &mut [&mut [f32]], value: f32) {
+    for w in outs.iter_mut() {
+        w.fill(value);
+    }
+}
+
 /// Slice the `[begin, end)` package windows out of full-problem host
 /// buffers — the hand-driven baseline path (`execute_staged_into_host`)
 /// shared by both backends.
@@ -195,6 +212,18 @@ mod tests {
         let b = bench_with_chunks(128, &[128]);
         assert!(decompose_range(&b, 64, 256).is_err());
         assert!(decompose_range(&b, 0, 100).is_err());
+    }
+
+    #[test]
+    fn poison_fills_every_window() {
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![1.0f32; 4];
+        {
+            let mut outs: Vec<&mut [f32]> = vec![&mut a[..], &mut b[..]];
+            poison_windows(&mut outs, FAULT_POISON);
+        }
+        assert!(a.iter().chain(b.iter()).all(|&x| x == FAULT_POISON));
+        assert!(FAULT_POISON.is_finite(), "poison must compare bitwise-stably");
     }
 
     #[test]

@@ -253,18 +253,34 @@ impl NativeExecutor {
         staged: StagedPackage,
         outs: &mut [&mut [f32]],
     ) -> Result<ExecTiming> {
+        let all = staged.plan.len();
+        self.execute_staged_prefix(staged, outs, all)
+    }
+
+    /// Execute only the first `max_launches` sub-launches of a staged
+    /// package — the fault layer's model of a device dying mid-package:
+    /// the executed prefix is real partial output, the rest of the
+    /// windows keeps whatever was there (the worker poisons it first).
+    /// The windows must still cover the *full* package range; the
+    /// returned timing counts only the launches that actually ran.
+    pub fn execute_staged_prefix(
+        &mut self,
+        staged: StagedPackage,
+        outs: &mut [&mut [f32]],
+        max_launches: usize,
+    ) -> Result<ExecTiming> {
         validate_windows(&self.bench.outputs, outs, &self.bench.name, staged.end - staged.begin)?;
         debug_assert!(staged.staged_window_bytes() <= staged.h2d_bytes);
         let mut timing = ExecTiming {
             h2d: staged.h2d,
             compile: staged.compile,
-            launches: staged.launches(),
+            launches: staged.plan.len().min(max_launches) as u32,
             h2d_bytes: staged.h2d_bytes,
             ..Default::default()
         };
         let ins: Vec<&[f32]> = self.inputs.iter().map(|v| v.as_ref()).collect();
         let t0 = Instant::now();
-        for (off, size) in &staged.plan {
+        for (off, size) in staged.plan.iter().take(max_launches) {
             let rel = off - staged.begin;
             let mut louts: Vec<&mut [f32]> = self
                 .bench
@@ -345,6 +361,45 @@ mod tests {
         let timing = b.execute_staged_into_host(staged, &mut outs2).unwrap();
         assert!(timing.launches >= 1);
         assert_eq!(outs2[0].as_f32().unwrap(), &want[..]);
+    }
+
+    #[test]
+    fn prefix_execution_touches_only_the_prefix() {
+        let (reg, bench, ins, _) = setup("binomial");
+        let g = bench.granule;
+        let mut exec = NativeExecutor::new(&reg, &bench, &ins).unwrap();
+
+        // Full reference over 4 granules.
+        let items = 4 * g;
+        let epi = bench.outputs[0].elems_per_item;
+        let mut full = vec![0.0f32; items * epi];
+        let staged = exec.stage(0, items).unwrap();
+        let total_launches = staged.launches() as usize;
+        {
+            let mut w: Vec<&mut [f32]> = vec![&mut full[..]];
+            exec.execute_staged(staged, &mut w).unwrap();
+        }
+
+        // A half-prefix executes a strict subset of launches and leaves
+        // the tail of the windows untouched.
+        let sentinel = -1234.5f32;
+        let mut part = vec![sentinel; items * epi];
+        let staged = exec.stage(0, items).unwrap();
+        let prefix = (total_launches / 2).max(1);
+        let t = {
+            let mut w: Vec<&mut [f32]> = vec![&mut part[..]];
+            exec.execute_staged_prefix(staged, &mut w, prefix).unwrap()
+        };
+        assert_eq!(t.launches as usize, prefix.min(total_launches));
+        let written = part.iter().filter(|&&x| x != sentinel).count();
+        if prefix < total_launches {
+            assert!(written < items * epi, "prefix must not write the whole range");
+        }
+        assert!(written > 0, "prefix must write something");
+        // Whatever it wrote agrees with the full execution.
+        for (i, (&p, &f)) in part.iter().zip(&full).enumerate() {
+            assert!(p == sentinel || p == f, "elem {i}: partial {p} vs full {f}");
+        }
     }
 
     #[test]

@@ -262,15 +262,30 @@ impl ChunkExecutor {
         staged: StagedPackage,
         outs: &mut [&mut [f32]],
     ) -> Result<ExecTiming> {
+        let all = staged.plan.len();
+        self.execute_staged_prefix(staged, outs, all)
+    }
+
+    /// Execute only the first `max_launches` sub-launches of a staged
+    /// package — the fault layer's model of a device dying mid-package
+    /// (API parity with the native backend). The windows must still
+    /// cover the full package range; the returned timing counts only
+    /// the launches that actually ran.
+    pub fn execute_staged_prefix(
+        &mut self,
+        staged: StagedPackage,
+        outs: &mut [&mut [f32]],
+        max_launches: usize,
+    ) -> Result<ExecTiming> {
         validate_windows(&self.bench.outputs, outs, &self.bench.name, staged.end - staged.begin)?;
         let mut timing = ExecTiming {
             h2d: staged.h2d,
             compile: staged.compile,
-            launches: staged.launches(),
+            launches: staged.plan.len().min(max_launches) as u32,
             h2d_bytes: staged.h2d_bytes,
             ..Default::default()
         };
-        for (off, size, args) in &staged.plan {
+        for (off, size, args) in staged.plan.iter().take(max_launches) {
             let exe = self.exes.get(size).expect("compiled during stage()");
 
             // PJRT dispatch is asynchronous: the completion wait (device

@@ -1,9 +1,78 @@
-//! Property-testing mini-framework (offline substitute for proptest).
+//! Property-testing mini-framework (offline substitute for proptest)
+//! plus the chaos-suite harness helpers.
 //!
 //! `forall` runs a seeded generator N times; on failure it reports the
 //! failing case number and seed so the case can be replayed exactly.
+//! [`chaos_engine`] builds the standard fast-sim engine the fault tests
+//! drive, and [`assert_exactly_once`] is the arena-ledger oracle: the
+//! traced packages of a run must tile `[0, gws)` exactly.
 
+use crate::coordinator::{DeviceSpec, Engine, RunReport, SchedulerKind};
+use crate::harness::runs::build_engine;
+use crate::platform::fault::FaultPlan;
+use crate::platform::NodeConfig;
+use crate::runtime::ArtifactRegistry;
 use crate::util::rng::XorShift;
+
+/// Chaos-suite seed: `ECL_CHAOS_SEED` (CI pins it so a failing sweep is
+/// reproducible from the log), default fixed.
+pub fn chaos_seed() -> u64 {
+    std::env::var("ECL_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Build a ready-to-run engine over `bench`'s golden inputs on the
+/// first `ndev` batel devices: no init sleeps, no speed stretching
+/// (chaos sweeps care about recovery correctness, not timing), with an
+/// optional fault plan installed.
+pub fn chaos_engine(
+    reg: &ArtifactRegistry,
+    bench: &str,
+    ndev: usize,
+    kind: SchedulerKind,
+    plan: Option<FaultPlan>,
+) -> Engine {
+    // Same program wiring as every harness run (single source of truth),
+    // with the chaos knobs flipped on top.
+    let mut engine = build_engine(
+        reg,
+        &NodeConfig::batel(),
+        bench,
+        (0..ndev).map(DeviceSpec::new).collect(),
+        kind,
+        None,
+    )
+    .expect("build chaos engine");
+    engine.configurator().simulate_init = false;
+    engine.configurator().simulate_speed = false;
+    engine.configurator().fault_plan = plan;
+    engine
+}
+
+/// The exactly-once oracle: every traced package range, across all
+/// devices (including a dead device's completed packages and the
+/// survivors' requeued ones), must tile `[0, gws)` with no gap and no
+/// overlap. Panics with the offending boundary otherwise.
+pub fn assert_exactly_once(report: &RunReport) {
+    let mut ranges: Vec<(usize, usize)> = report
+        .devices
+        .iter()
+        .flat_map(|d| d.packages.iter().map(|p| (p.begin_item, p.end_item)))
+        .collect();
+    ranges.sort_unstable();
+    let mut cursor = 0usize;
+    for (b, e) in &ranges {
+        assert!(
+            *b == cursor && e > b,
+            "package ranges must tile [0, {}) exactly: at item {cursor} found range {b}..{e}\n{ranges:?}",
+            report.gws
+        );
+        cursor = *e;
+    }
+    assert_eq!(cursor, report.gws, "package ranges must cover all of [0, gws)");
+}
 
 /// Number of cases per property (override with ECL_PROPTEST_CASES).
 pub fn default_cases() -> usize {

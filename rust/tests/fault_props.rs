@@ -1,0 +1,488 @@
+//! Chaos suite: deterministic fault injection against the engine's
+//! recovery path.
+//!
+//! The acceptance invariant: for every kernel × scheduler spec (the
+//! three paper schedulers and their `+pipe` variants) × a single-device
+//! kill point, the faulted run **completes**, its outputs are
+//! **bit-identical** to the fault-free run, and the trace ledger is
+//! **exactly-once** (the surviving packages plus the requeued ones tile
+//! `[0, gws)` with no gap and no overlap).
+//!
+//! Seeded sweeps log `ECL_CHAOS_SEED` so a CI failure is reproducible
+//! locally by exporting the same value.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use enginecl::coordinator::scheduler::{SchedDevice, SchedulerKind};
+use enginecl::coordinator::work::{split_range, Range};
+use enginecl::coordinator::{EclError, Engine};
+use enginecl::platform::fault::{FaultKind, FaultPlan, FaultTrigger};
+use enginecl::runtime::exec::FAULT_POISON;
+use enginecl::runtime::ArtifactRegistry;
+use enginecl::testing::{assert_exactly_once, chaos_engine, chaos_seed, forall};
+use enginecl::util::rng::XorShift;
+
+fn registry() -> ArtifactRegistry {
+    ArtifactRegistry::discover().expect("artifact registry (synthetic fallback)")
+}
+
+const KERNELS: [&str; 5] = ["binomial", "gaussian", "mandelbrot", "nbody", "ray1"];
+
+/// Fault-free reference outputs for `bench` under `kind` (3 devices).
+fn baseline_outputs(reg: &ArtifactRegistry, bench: &str, kind: &SchedulerKind) -> Vec<Vec<f32>> {
+    let mut e = chaos_engine(reg, bench, 3, kind.clone(), None);
+    e.run().expect("fault-free baseline run");
+    let n = reg.bench(bench).unwrap().outputs.len();
+    (0..n).map(|i| e.output(i).unwrap().to_vec()).collect()
+}
+
+/// Run `bench` under `kind` with `plan` injected and assert the
+/// recovery contract against precomputed fault-free outputs.
+/// `expect_revoked = Some(n)`: the plan *must* fire exactly one fault
+/// that revoked `n` arena claims; `None`: the fault may or may not fire
+/// (late kill points on adaptive schedulers), assert conditionally.
+fn check_faulted_against(
+    reg: &ArtifactRegistry,
+    bench: &str,
+    kind: &SchedulerKind,
+    plan: FaultPlan,
+    expect_revoked: Option<usize>,
+    want: &[Vec<f32>],
+) {
+    let label = kind.label();
+    let mut e = chaos_engine(reg, bench, 3, kind.clone(), Some(plan.clone()));
+    e.run().unwrap_or_else(|err| {
+        panic!("{bench}/{label}: faulted run must recover (plan {plan:?}): {err}")
+    });
+    let report = e.report().unwrap().clone();
+    for (i, w) in want.iter().enumerate() {
+        let got = e.output(i).unwrap();
+        assert!(
+            got == &w[..],
+            "{bench}/{label}: output {i} not bit-identical to the fault-free run (plan {plan:?})"
+        );
+        assert!(got.iter().all(|&x| x != FAULT_POISON), "{bench}/{label}: poison survived");
+    }
+    assert_exactly_once(&report);
+    match expect_revoked {
+        Some(revoked) => {
+            assert_eq!(report.faults.len(), 1, "{bench}/{label}: exactly one fault event");
+            let f = &report.faults[0];
+            assert!(f.recovered, "{bench}/{label}: fault must be recovered");
+            assert!(f.reclaimed_items > 0, "{bench}/{label}: a killed package reclaims work");
+            assert_eq!(f.revoked_claims, revoked, "{bench}/{label}: revoked claims");
+            assert!(report.recovered());
+            assert!(
+                report.requeued_packages() >= 1,
+                "{bench}/{label}: reclaimed work must surface as requeued packages"
+            );
+            assert_eq!(report.requeued_items(), f.reclaimed_items);
+        }
+        None => {
+            for f in &report.faults {
+                assert!(f.recovered, "{bench}/{label}: {:?} not recovered", f.message);
+            }
+        }
+    }
+}
+
+fn check_faulted(
+    reg: &ArtifactRegistry,
+    bench: &str,
+    kind: SchedulerKind,
+    plan: FaultPlan,
+    expect_revoked: Option<usize>,
+) {
+    let want = baseline_outputs(reg, bench, &kind);
+    check_faulted_against(reg, bench, &kind, plan, expect_revoked, &want);
+}
+
+/// The acceptance sweep body: kill the second device at its first
+/// package, for every kernel.
+fn kill_sweep(kind: SchedulerKind) {
+    let reg = registry();
+    for bench in KERNELS {
+        check_faulted(&reg, bench, kind.clone(), FaultPlan::kill(1, 0), Some(1));
+    }
+}
+
+#[test]
+fn kill_recovery_static() {
+    kill_sweep(SchedulerKind::static_default());
+}
+
+#[test]
+fn kill_recovery_dynamic() {
+    kill_sweep(SchedulerKind::dynamic(12));
+}
+
+#[test]
+fn kill_recovery_hguided() {
+    kill_sweep(SchedulerKind::hguided());
+}
+
+#[test]
+fn kill_recovery_static_pipe() {
+    kill_sweep(SchedulerKind::static_default().pipelined(2));
+}
+
+#[test]
+fn kill_recovery_dynamic_pipe() {
+    kill_sweep(SchedulerKind::dynamic(12).pipelined(2));
+}
+
+#[test]
+fn kill_recovery_hguided_pipe() {
+    kill_sweep(SchedulerKind::hguided().pipelined(2));
+}
+
+/// Any device may die, and at a later package too (late kill points may
+/// not fire on adaptive schedulers — then the run is simply fault-free,
+/// which the conditional contract accepts).
+#[test]
+fn kill_any_device_any_early_point() {
+    let reg = registry();
+    for kind in [SchedulerKind::dynamic(12), SchedulerKind::hguided()] {
+        let want = baseline_outputs(&reg, "binomial", &kind);
+        for dev in 0..3usize {
+            for pkg in [0usize, 1] {
+                let expect = if pkg == 0 { Some(1) } else { None };
+                check_faulted_against(
+                    &reg,
+                    "binomial",
+                    &kind,
+                    FaultPlan::kill(dev, pkg),
+                    expect,
+                    &want,
+                );
+            }
+        }
+    }
+}
+
+/// Seeded chaos: the kill point is derived from `ECL_CHAOS_SEED`
+/// (logged, so a CI failure reproduces locally with the same env).
+#[test]
+fn seeded_chaos_sweep_reproducible_from_logged_seed() {
+    let reg = registry();
+    let seed = chaos_seed();
+    eprintln!("chaos sweep: ECL_CHAOS_SEED={seed} (export to reproduce)");
+    let kinds = [
+        SchedulerKind::dynamic(12),
+        SchedulerKind::hguided(),
+        SchedulerKind::dynamic(8).pipelined(2),
+    ];
+    for (i, kind) in kinds.iter().enumerate() {
+        let plan = FaultPlan::seeded_kill(seed.wrapping_add(i as u64), 3, 2);
+        eprintln!("  case {i}: scheduler={} plan={plan:?}", kind.label());
+        check_faulted(&reg, "gaussian", kind.clone(), plan, None);
+    }
+}
+
+// ---- golden-trace determinism ----------------------------------------
+
+fn trace_signature(e: &Engine) -> Vec<Vec<(usize, usize, bool)>> {
+    e.report()
+        .unwrap()
+        .devices
+        .iter()
+        .map(|d| d.packages.iter().map(|p| (p.begin_item, p.end_item, p.requeued)).collect())
+        .collect()
+}
+
+/// Same seed + same `FaultPlan` ⇒ identical `RunReport` package
+/// sequences across repeated multi-threaded runs, for configurations
+/// whose package→device binding is structurally deterministic: Static's
+/// pre-split with a *single* survivor (it pulls every reclaimed piece
+/// in queue order), and single-device runs (pure FIFO).
+#[test]
+fn golden_trace_determinism_under_fixed_plan() {
+    let reg = registry();
+
+    // Two devices, Static, kill the second at its first package.
+    let mut sigs = Vec::new();
+    for _ in 0..4 {
+        let mut e = chaos_engine(
+            &reg,
+            "binomial",
+            2,
+            SchedulerKind::static_default(),
+            Some(FaultPlan::kill(1, 0)),
+        );
+        e.run().expect("2-device static kill recovers");
+        assert!(e.report().unwrap().recovered());
+        sigs.push(trace_signature(&e));
+    }
+    for (i, s) in sigs.iter().enumerate().skip(1) {
+        assert_eq!(s, &sigs[0], "static-kill trace diverged on repetition {i}");
+    }
+    // The survivor ran its own share plus exactly one reclaimed piece
+    // (single survivor → the dead share is not split). Whether the own
+    // package or the reclaimed piece executes first is OS-scheduling
+    // dependent, so only the content is asserted here — the cross-run
+    // equality above is what pins the sequence.
+    let survivor = &sigs[0][0];
+    assert!(survivor.len() >= 2);
+    assert_eq!(
+        survivor.iter().filter(|p| p.2).count(),
+        1,
+        "exactly one reclaimed piece for a single survivor"
+    );
+    assert!(sigs[0][1].is_empty(), "the killed device completed nothing");
+
+    // Single device, transient faults: FIFO, trivially reproducible —
+    // but it must actually reproduce, stalls and slowdowns included.
+    let mut sigs = Vec::new();
+    for _ in 0..3 {
+        let plan = FaultPlan::stall(0, 2, Duration::from_millis(5)).with(
+            0,
+            FaultKind::Slowdown(2.0),
+            FaultTrigger::Package(4),
+        );
+        let mut e = chaos_engine(&reg, "gaussian", 1, SchedulerKind::dynamic(9), Some(plan));
+        e.run().expect("transient faults never fail a run");
+        sigs.push(trace_signature(&e));
+    }
+    for s in &sigs[1..] {
+        assert_eq!(s, &sigs[0], "single-device trace must reproduce");
+    }
+}
+
+// ---- failure-mode regressions ----------------------------------------
+
+/// A worker panic is caught, surfaced as `EclError::Worker`, and leaves
+/// the engine reusable: the next `run()` succeeds (regression for the
+/// seed's silent hang-then-generic-error on panicking workers).
+#[test]
+fn panic_surfaces_worker_error_and_engine_stays_usable() {
+    let reg = registry();
+    let kind = SchedulerKind::dynamic(6);
+    let mut e = chaos_engine(&reg, "binomial", 1, kind.clone(), Some(FaultPlan::panic_at(0, 1)));
+    assert!(e.run().is_err(), "a single-device panic cannot be recovered");
+    match &e.get_errors()[0] {
+        EclError::Worker { message, .. } => {
+            assert!(message.contains("panic"), "panic payload surfaced: {message}")
+        }
+        other => panic!("want EclError::Worker, got: {other}"),
+    }
+    // Reusable: clear the plan, run again, results are correct.
+    e.configurator().fault_plan = None;
+    e.run().expect("engine must be reusable after a worker failure");
+    let want = baseline_outputs(&reg, "binomial", &kind);
+    assert_eq!(e.output(0).unwrap(), &want[0][..]);
+}
+
+/// A worker that exits without sending *anything* (the "vanish" mode —
+/// a segfaulting driver) is noticed by the master's liveness sweep and
+/// its work recovered by the survivors.
+#[test]
+fn vanished_worker_is_detected_and_recovered() {
+    let reg = registry();
+    // Vanish at package 0: no claim was taken (revoked = 0), but the
+    // assigned range must still be reclaimed and requeued.
+    check_faulted(&reg, "gaussian", SchedulerKind::dynamic(10), FaultPlan::vanish(1, 0), Some(0));
+}
+
+/// With no survivors, a vanished worker surfaces as a dead-channel
+/// `EclError::Worker` — and the engine stays reusable.
+#[test]
+fn vanish_single_device_is_a_dead_channel_worker_error() {
+    let reg = registry();
+    let mut e =
+        chaos_engine(&reg, "binomial", 1, SchedulerKind::dynamic(4), Some(FaultPlan::vanish(0, 0)));
+    assert!(e.run().is_err());
+    match &e.get_errors()[0] {
+        EclError::Worker { message, .. } => {
+            assert!(message.contains("without reporting"), "{message}")
+        }
+        other => panic!("want EclError::Worker, got: {other}"),
+    }
+    e.configurator().fault_plan = None;
+    e.run().expect("engine must be reusable after a silent worker death");
+}
+
+/// `fault_tolerant = false` restores the seed's abort-on-failure
+/// semantics: the run errors with `EclError::Worker`.
+#[test]
+fn fault_tolerance_off_restores_abort_semantics() {
+    let reg = registry();
+    let mut e = chaos_engine(
+        &reg,
+        "binomial",
+        3,
+        SchedulerKind::dynamic(8),
+        Some(FaultPlan::kill(1, 0)),
+    );
+    e.configurator().fault_tolerant = false;
+    assert!(e.run().is_err());
+    assert!(
+        matches!(&e.get_errors()[0], EclError::Worker { .. }),
+        "want EclError::Worker, got {:?}",
+        e.get_errors()
+    );
+}
+
+/// A plan naming a device slot outside the selection is a
+/// configuration error, not a silently-clean run — the chaos run would
+/// otherwise "pass" without ever exercising recovery.
+#[test]
+fn fault_plan_for_missing_device_is_rejected() {
+    let reg = registry();
+    let mut e = chaos_engine(
+        &reg,
+        "binomial",
+        3,
+        SchedulerKind::dynamic(8),
+        Some(FaultPlan::kill(5, 0)),
+    );
+    assert!(e.run().is_err());
+    assert!(
+        e.get_errors()[0].to_string().contains("fault plan targets device slot 5"),
+        "got: {:?}",
+        e.get_errors()
+    );
+}
+
+/// Stalls and slowdowns are transient: timing changes, results do not,
+/// and no fault event is recorded (nothing failed).
+#[test]
+fn transient_faults_change_timing_not_results() {
+    let reg = registry();
+    let kind = SchedulerKind::dynamic(10);
+    let want = baseline_outputs(&reg, "binomial", &kind);
+    let plan = FaultPlan::stall(1, 0, Duration::from_millis(20)).with(
+        2,
+        FaultKind::Slowdown(3.0),
+        FaultTrigger::Package(0),
+    );
+    let mut e = chaos_engine(&reg, "binomial", 3, kind, Some(plan));
+    e.run().expect("transient faults must not fail the run");
+    assert_eq!(e.output(0).unwrap(), &want[0][..]);
+    let report = e.report().unwrap();
+    assert!(report.faults.is_empty(), "stall/slowdown are not failures");
+    assert_exactly_once(report);
+}
+
+// ---- requeue partition property --------------------------------------
+
+/// Simulate the master's requeue protocol against a scheduler (the same
+/// `split_range` + reclaim logic the engine uses) and check the
+/// partition invariant directly, over randomized device counts,
+/// granules, problem sizes, schedulers and kill points.
+fn simulate_cover_with_kill(
+    kind: &SchedulerKind,
+    powers: &[f64],
+    total_granules: usize,
+    granule: usize,
+    kill_dev: usize,
+    kill_ordinal: usize,
+) -> Result<(), String> {
+    let ndev = powers.len();
+    let mut sched = kind.build();
+    let devs: Vec<SchedDevice> = powers
+        .iter()
+        .enumerate()
+        .map(|(i, p)| SchedDevice { name: format!("d{i}"), power: *p })
+        .collect();
+    sched.start(total_granules, granule, &devs);
+
+    let mut alive = vec![true; ndev];
+    let mut started = vec![0usize; ndev];
+    let mut requeue: VecDeque<Range> = VecDeque::new();
+    let mut executed: Vec<(usize, usize)> = Vec::new();
+    loop {
+        let mut progress = false;
+        for d in 0..ndev {
+            if !alive[d] {
+                continue;
+            }
+            let next = requeue.pop_front().or_else(|| sched.next_package(d));
+            let Some(r) = next else { continue };
+            progress = true;
+            if d == kill_dev && started[d] == kill_ordinal {
+                // d dies holding r: reclaim it plus any scheduler
+                // reservation, split among the survivors.
+                alive[d] = false;
+                let mut reclaimed = vec![r];
+                reclaimed.extend(sched.reclaim_device(d));
+                let survivors = alive.iter().filter(|&&a| a).count();
+                if survivors == 0 {
+                    return Err("kill left no survivors".into());
+                }
+                for rr in reclaimed {
+                    for piece in split_range(rr.begin, rr.end, survivors, granule) {
+                        requeue.push_back(piece);
+                    }
+                }
+            } else {
+                started[d] += 1;
+                executed.push((r.begin, r.end));
+            }
+        }
+        if !progress {
+            break;
+        }
+    }
+
+    executed.sort_unstable();
+    let mut cursor = 0usize;
+    for (b, e) in &executed {
+        if *b != cursor || e <= b {
+            return Err(format!("gap/overlap at item {cursor}: range {b}..{e}"));
+        }
+        cursor = *e;
+    }
+    let total = total_granules * granule;
+    if cursor != total {
+        return Err(format!("cover ends at {cursor}, want {total}"));
+    }
+    Ok(())
+}
+
+#[derive(Debug)]
+struct CoverCase {
+    kind: SchedulerKind,
+    powers: Vec<f64>,
+    total_granules: usize,
+    granule: usize,
+    kill_dev: usize,
+    kill_ordinal: usize,
+}
+
+/// Property: HGuided and Dynamic (and Static, with `reclaim_device`)
+/// always produce a complete, non-overlapping cover of `[0, gws)` —
+/// including after a mid-run kill and requeue.
+#[test]
+fn schedulers_cover_exactly_even_after_requeue() {
+    let gen = |rng: &mut XorShift| {
+        let kind = match rng.below(3) {
+            0 => SchedulerKind::static_default(),
+            1 => SchedulerKind::dynamic(rng.range(1, 40)),
+            _ => SchedulerKind::HGuided {
+                k: 1.0 + rng.next_f64() * 3.0,
+                min_granules: rng.range(1, 4),
+            },
+        };
+        let ndev = rng.range(2, 4);
+        let powers: Vec<f64> = (0..ndev).map(|_| 0.1 + rng.next_f64()).collect();
+        CoverCase {
+            kind,
+            powers,
+            total_granules: rng.range(1, 300),
+            granule: [1, 8, 64][rng.below(3)],
+            kill_dev: rng.below(ndev),
+            kill_ordinal: rng.below(4),
+        }
+    };
+    forall("cover-after-requeue", gen, |c: &CoverCase| {
+        simulate_cover_with_kill(
+            &c.kind,
+            &c.powers,
+            c.total_granules,
+            c.granule,
+            c.kill_dev,
+            c.kill_ordinal,
+        )
+    });
+}
