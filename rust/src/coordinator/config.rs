@@ -31,6 +31,13 @@ pub struct Configurator {
     /// Deterministic fault injection schedule (chaos testing). `None`
     /// (the default) injects nothing.
     pub fault_plan: Option<FaultPlan>,
+    /// Base seed for the run's simclock jitter streams (each device
+    /// worker derives its own stream from it). `0` means "unset": solo
+    /// engine runs keep the legacy fixed seed, and the persistent
+    /// runtime fills in a per-session seed derived from its own seed
+    /// and the session id — so a fixed runtime seed plus a fixed
+    /// admission order reproduces every session's timing draws.
+    pub rng_seed: u64,
 }
 
 impl Default for Configurator {
@@ -43,6 +50,7 @@ impl Default for Configurator {
             introspect: true,
             fault_tolerant: true,
             fault_plan: None,
+            rng_seed: 0,
         }
     }
 }
@@ -65,6 +73,7 @@ mod tests {
         assert!(c.resident_inputs && c.eager_compile && c.simulate_init && c.simulate_speed);
         assert!(c.fault_tolerant, "recovery is on by default");
         assert!(c.fault_plan.is_none(), "no injection by default");
+        assert_eq!(c.rng_seed, 0, "seed unset by default (legacy stream)");
     }
 
     #[test]

@@ -45,6 +45,24 @@
 //! simulated clock charges `max(compute, overlapped-upload) + write-back`
 //! per package instead of their sum (see `TimeScaler::target_overlapped`).
 //!
+//! # Device leasing
+//!
+//! Since the persistent runtime, a device may be shared by several
+//! concurrent run sessions. Each worker therefore holds its device's
+//! whole-device *lease* (`coordinator::lease`) for exactly one package
+//! occupancy window — staging, compute and the simulated hold — and
+//! releases it between packages, so other sessions' packages interleave
+//! on the device instead of overlapping (which would simulate more
+//! throughput than the profile has). In a pipelined worker the prefetch
+//! of package *n+1* stages under package *n*'s lease; the staged data
+//! survives the lease gap in the executor. Time spent *waiting* for the
+//! lease is never charged to the package's simulated duration (the
+//! device was simply busy with another session) but is accumulated and
+//! reported per device (`DeviceTrace::lease_wait`). Both the lease
+//! guard and the rotation registration are RAII, so any worker exit —
+//! clean, error, panic or silent vanish — frees the device for the
+//! other sessions.
+//!
 //! # Fault injection and failure reporting
 //!
 //! Each worker polls its [`FaultInjector`] once per package boundary
@@ -67,6 +85,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::config::Configurator;
 use crate::coordinator::introspector::{PackageTrace, TransferStats};
+use crate::coordinator::lease::DeviceRegistration;
 use crate::coordinator::work::Range;
 use crate::platform::fault::{FaultInjector, FaultKind};
 use crate::platform::{DeviceKind, DeviceProfile, TimeScaler};
@@ -154,13 +173,20 @@ pub(crate) enum FromWorker {
     /// consider the range finished for recovery bookkeeping.
     Done { dev: usize },
     /// Worker exited. Results are already in the output arena (written
-    /// in place, package by package); only the introspection traces and
-    /// the per-run transfer byte counts travel back.
-    Finished { dev: usize, traces: Vec<PackageTrace>, xfer: TransferStats },
+    /// in place, package by package); only the introspection traces,
+    /// the per-run transfer byte counts and the total time spent
+    /// waiting for device leases travel back.
+    Finished { dev: usize, traces: Vec<PackageTrace>, xfer: TransferStats, lease_wait: Duration },
     /// Worker died (error or caught panic). Traces of the packages it
     /// *completed* travel back — their results are in the arena and
     /// must stay attributed; the failing package is not among them.
-    Failed { dev: usize, message: String, traces: Vec<PackageTrace>, xfer: TransferStats },
+    Failed {
+        dev: usize,
+        message: String,
+        traces: Vec<PackageTrace>,
+        xfer: TransferStats,
+        lease_wait: Duration,
+    },
 }
 
 pub(crate) struct WorkerCtx {
@@ -190,6 +216,10 @@ pub(crate) struct WorkerCtx {
     /// Deterministic fault schedule for this device (chaos layer);
     /// polled once per package boundary. Empty when no plan is set.
     pub injector: FaultInjector,
+    /// This worker's registration with the runtime's lease arbiter:
+    /// acquired once per package occupancy window, deregistered (RAII)
+    /// when the worker exits however it exits.
+    pub lease: DeviceRegistration,
 }
 
 /// How a worker's package loop ended (errors are a third, `Err`, exit).
@@ -212,21 +242,41 @@ pub(crate) fn spawn_worker(
             let dev = ctx.dev;
             let mut traces: Vec<PackageTrace> = Vec::new();
             let mut xfer = TransferStats::default();
+            let mut lease_wait = Duration::ZERO;
             // A panicking worker (a kernel bug, an injected Panic fault)
             // must not just drop its channel: catch the unwind and
             // convert it into a Failed event so the master can recover
             // immediately instead of waiting for liveness detection.
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                worker_loop(&mut ctx, &to_master, &from_master, &mut traces, &mut xfer)
+                worker_loop(
+                    &mut ctx,
+                    &to_master,
+                    &from_master,
+                    &mut traces,
+                    &mut xfer,
+                    &mut lease_wait,
+                )
             }));
+            // The unwind (or the loop's error return) already dropped
+            // any held lease guard; dropping the ctx below retires the
+            // arbiter registration itself, so a dead worker can never
+            // hold a device or a rotation turn hostage.
             match result {
                 Ok(Ok(WorkerExit::Finished)) => {
-                    to_master.send(FromWorker::Finished { dev, traces, xfer }).ok();
+                    to_master
+                        .send(FromWorker::Finished { dev, traces, xfer, lease_wait })
+                        .ok();
                 }
                 Ok(Ok(WorkerExit::Vanished)) => {}
                 Ok(Err(e)) => {
                     to_master
-                        .send(FromWorker::Failed { dev, message: format!("{e:#}"), traces, xfer })
+                        .send(FromWorker::Failed {
+                            dev,
+                            message: format!("{e:#}"),
+                            traces,
+                            xfer,
+                            lease_wait,
+                        })
                         .ok();
                 }
                 Err(payload) => {
@@ -241,6 +291,7 @@ pub(crate) fn spawn_worker(
                             message: format!("panic: {msg}"),
                             traces,
                             xfer,
+                            lease_wait,
                         })
                         .ok();
                 }
@@ -297,6 +348,7 @@ fn worker_loop(
     from_master: &Receiver<ToWorker>,
     traces: &mut Vec<PackageTrace>,
     xfer: &mut TransferStats,
+    lease_wait: &mut Duration,
 ) -> anyhow::Result<WorkerExit> {
     let dev = ctx.dev;
     let epoch = ctx.epoch;
@@ -367,6 +419,17 @@ fn worker_loop(
                 Err(_) => break,
             }
         }
+
+        // Check the device out of the shared arbiter for this package's
+        // occupancy window (staging + compute + simulated hold).
+        // Concurrent sessions interleave here, one whole-device window
+        // at a time. The wait is the device serving other sessions and
+        // is never charged to this package's simulated duration; the
+        // guard drops at the end of the loop iteration, freeing the
+        // device between packages.
+        let wait_started = Instant::now();
+        let _lease = ctx.lease.acquire();
+        *lease_wait += wait_started.elapsed();
 
         // Ensure the head package is staged (exposed H2D: nothing to
         // hide it behind — the pipeline's fill bubble, or blocking mode).

@@ -2,70 +2,28 @@
 //! sizes, scheduler choice, pipeline depth, program consumption and
 //! `run()`.
 //!
-//! `run()` materializes the program's inputs into shared views and its
-//! outputs into the run's output arena, spawns one worker thread per
-//! selected device, drives the master scheduling loop
-//! (assign-on-completion, the paper's Scheduler thread — extended with
-//! per-device prefetch when pipelining is on), recovers the arena
-//! buffers back into the program's output containers (zero-copy — the
-//! workers already wrote every result in place) and leaves a full
-//! `RunReport` for introspection.
-//!
-//! # Master loop
-//!
-//! The loop is event-driven over the worker channel:
-//!
-//! * `Ready` — device initialized; top its pipeline up to `depth`
-//!   packages (the first assignment carries the second range as a
-//!   `lookahead`, halving the fill round-trips).
-//! * `Uploaded` — a prefetch's H2D staging landed; release the
-//!   device's staging slot (at most two assignments may be un-staged
-//!   at once — back-pressure for slow buses) and top up again.
-//! * `Done` — a package completed; one slot freed, assign the next
-//!   package or send `Finish` when the scheduler is dry for that device.
-//! * `Finished`/`Failed` — worker exited; collect its traces and
-//!   transfer stats (results are already in the arena) or the failure.
-//!
-//! With `depth == 1` this reduces exactly to the paper's blocking
-//! assign-on-completion loop.
-//!
-//! # Fault tolerance
-//!
-//! The loop tracks, per device, every range assigned but not yet
-//! reported `Done` (by the time a worker sends `Done`, the package's
-//! results are fully in the arena). When a worker dies — it reports
-//! `Failed`, or the liveness sweep finds its thread exited without
-//! reporting — the master *recovers* instead of aborting (default;
-//! `Configurator::fault_tolerant = false` restores abort-on-failure):
-//! the dead device's unfinished ranges plus any scheduler reservation
-//! (`Scheduler::reclaim_device` — Static's pre-split share) are
-//! reclaimed, their arena claims revoked ([`OutputArena::revoke`]), and
-//! the ranges are requeued — split so every survivor can pull a piece.
-//! Survivors drain the requeue queue before asking the scheduler, so
-//! Dynamic/HGuided absorb the lost work adaptively and Static degrades
-//! to a documented re-split (survivors run extra packages). `Finish` is
-//! deferred until all work is provably complete — a failure can then
-//! never strand requeued work on a device that was already told to
-//! exit. Every failure is recorded as a [`FaultEvent`] on the
-//! `RunReport`, and requeued packages are flagged in their traces.
-
-use std::collections::{BTreeMap, VecDeque};
-use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+//! Since the persistent runtime landed, the engine no longer owns the
+//! execution machinery: `run()` is a thin one-session wrapper over the
+//! session execution core in `coordinator::runtime` (`SessionExec`) —
+//! the same validation, zero-copy buffer setup, device workers, master
+//! scheduling loop and fault recovery that concurrent
+//! [`Runtime`](crate::coordinator::runtime::Runtime) sessions use, fed
+//! a private single-participant lease arbiter (whose grants are
+//! therefore always immediate). See `runtime.rs` for the master-loop
+//! and fault-tolerance mechanics, and `lease.rs` for how concurrent
+//! sessions share devices.
 
 use crate::coordinator::config::Configurator;
-use crate::coordinator::device::{
-    spawn_worker, Assignment, DeviceMask, DeviceSpec, FromWorker, ToWorker, WorkerCtx,
-};
+use crate::coordinator::device::{DeviceMask, DeviceSpec};
 use crate::coordinator::error::EclError;
-use crate::coordinator::introspector::{DeviceTrace, FaultEvent, RunReport};
-use crate::coordinator::program::{Arg, Program};
-use crate::coordinator::scheduler::{SchedDevice, Scheduler, SchedulerKind};
-use crate::coordinator::work::{split_range, Range};
+use crate::coordinator::introspector::RunReport;
+use crate::coordinator::lease::{LeaseArbiter, LeasePolicy};
+use crate::coordinator::program::Program;
+use crate::coordinator::runtime::{check_device_selection, SessionExec, SessionLeases};
+use crate::coordinator::scheduler::SchedulerKind;
 use crate::platform::fault::FaultPlan;
-use crate::platform::{DeviceKind, NodeConfig};
-use crate::runtime::{input_views, ArtifactRegistry, HostBuf, InputView, OutputArena};
+use crate::platform::NodeConfig;
+use crate::runtime::ArtifactRegistry;
 
 /// Most packages a pipelined device keeps in flight. Deeper pipelines buy
 /// nothing (one package computes while one stages) but starve adaptive
@@ -215,6 +173,8 @@ impl Engine {
     }
 
     /// Introspection data of the last run (paper's Configurator stats).
+    /// `None` until a run succeeds — a failed run clears it rather than
+    /// leaving the *previous* run's report visible.
     pub fn report(&self) -> Option<&RunReport> {
         self.report.as_ref()
     }
@@ -227,6 +187,10 @@ impl Engine {
     /// Run the program on the selected devices. Errors are both returned
     /// and collected on the engine (paper's error model).
     pub fn run(&mut self) -> Result<(), EclError> {
+        // Clear prior-run introspection *before* anything can fail: a
+        // failed run must never leave a stale report (or stale success
+        // state) from an earlier run visible through `report()`.
+        self.report = None;
         match self.run_inner() {
             Ok(report) => {
                 self.report = Some(report);
@@ -240,668 +204,42 @@ impl Engine {
         }
     }
 
+    /// One-session wrapper over the runtime's session execution core: a
+    /// private arbiter with this engine as the only participant, so
+    /// every lease acquire is immediate and behavior is exactly the
+    /// pre-runtime engine's.
     fn run_inner(&mut self) -> Result<RunReport, EclError> {
         let program = self.program.as_mut().ok_or(EclError::NoProgram)?;
         if self.selected.is_empty() {
             return Err(EclError::NoDevices);
         }
-        let kernel = program.kernel_name().ok_or(EclError::NoProgram)?.to_string();
-        let bench = self
-            .registry
-            .bench(&kernel)
-            .map_err(|_| EclError::UnknownKernel(kernel.clone()))?
-            .clone();
-
-        // ---- validation (the checks OpenCL leaves to the programmer) --
-        let gws = self.gws.unwrap_or(bench.n);
-        if gws > bench.n {
-            return Err(EclError::WorkSizeTooLarge { gws, n: bench.n });
-        }
-        if gws % bench.granule != 0 {
-            return Err(EclError::MisalignedWorkSize { gws, granule: bench.granule });
-        }
-        if program.inputs().len() != bench.inputs.len() {
-            return Err(EclError::InputArity {
-                expected: bench.inputs.len(),
-                got: program.inputs().len(),
-            });
-        }
-        if program.outputs().len() != bench.outputs.len() {
-            return Err(EclError::OutputArity {
-                expected: bench.outputs.len(),
-                got: program.outputs().len(),
-            });
-        }
-        for (spec, buf) in bench.inputs.iter().zip(program.inputs()) {
-            if buf.len() != spec.elems {
-                return Err(EclError::BufferSize {
-                    name: spec.name.clone(),
-                    expected: spec.elems,
-                    got: buf.len(),
-                });
-            }
-        }
-        for (spec, buf) in bench.outputs.iter().zip(program.outputs()) {
-            if buf.len() != spec.elems {
-                return Err(EclError::BufferSize {
-                    name: spec.name.clone(),
-                    expected: spec.elems,
-                    got: buf.len(),
-                });
-            }
-            // Validated *before* any buffer is moved into the arena: a
-            // failure here must not destroy outputs already taken.
-            if buf.host().as_f32().is_none() {
-                return Err(EclError::Runtime(format!(
-                    "output buffer '{}' must be f32",
-                    spec.name
-                )));
-            }
-            // The arena windows are item-addressed, so the manifest
-            // geometry must be internally consistent before we commit
-            // the program's buffers to it.
-            if spec.elems != bench.n * spec.elems_per_item {
-                return Err(EclError::Runtime(format!(
-                    "manifest output '{}' inconsistent: {} elems for {} items x {} per item",
-                    spec.name, spec.elems, bench.n, spec.elems_per_item
-                )));
-            }
-        }
-        if bench.granule == 0 || bench.n % bench.granule != 0 {
-            return Err(EclError::Runtime(format!(
-                "manifest geometry inconsistent: n={} granule={}",
-                bench.n, bench.granule
-            )));
-        }
-        validate_args(program.args(), &bench.scalars)?;
-        if let SchedulerKind::Static { props: Some(p), .. } = self.scheduler.base() {
-            if p.len() != self.selected.len() {
-                return Err(EclError::BadProportions {
-                    got: p.len(),
-                    devices: self.selected.len(),
-                });
-            }
-        }
-        // A fault plan naming a device slot outside the selection would
-        // silently never fire — the chaos run would "pass" without ever
-        // exercising recovery. Reject it up front.
-        if let Some(plan) = &self.config.fault_plan {
-            for spec in &plan.faults {
-                if spec.device >= self.selected.len() {
-                    return Err(EclError::Runtime(format!(
-                        "fault plan targets device slot {} but only {} device(s) are selected",
-                        spec.device,
-                        self.selected.len()
-                    )));
-                }
-            }
-        }
-        // Field-precise equivalent of effective_pipeline_depth(): the
-        // program borrow above outlives this whole function.
-        let depth = match self.pipeline_depth {
-            Some(d) => d,
-            None => self.scheduler.pipeline_depth(),
-        }
-        .max(1);
-        if depth > MAX_PIPELINE_DEPTH {
-            return Err(EclError::BadPipelineDepth { depth, max: MAX_PIPELINE_DEPTH });
-        }
-
-        // ---- zero-copy buffer setup ------------------------------------
-        // Inputs: one shared immutable view per program input (a single
-        // O(N) materialization; every worker shares the allocation).
-        let inputs: Vec<InputView> = input_views(program.inputs().iter().map(|b| b.host()))
-            .map_err(|e| EclError::Runtime(format!("{e:#}")))?;
-        // Outputs: move the program's buffers into the run's arena.
-        // Workers claim disjoint granule-aligned windows and write
-        // results in place; the buffers come back after the join. All
-        // outputs were already validated f32 above, so this loop is
-        // infallible — it can never abandon a half-taken program.
-        let mut arena_bufs: Vec<(Vec<f32>, usize)> = Vec::with_capacity(bench.outputs.len());
-        for (spec, out) in bench.outputs.iter().zip(program.outputs_mut()) {
-            let data = out
-                .host_mut()
-                .as_f32_mut()
-                .expect("outputs validated f32 above");
-            arena_bufs.push((std::mem::take(data), spec.elems_per_item));
-        }
-        let arena = Arc::new(
-            OutputArena::new(arena_bufs, bench.granule, bench.n)
-                .map_err(|e| EclError::Runtime(format!("{e:#}")))?,
-        );
-
-        // ---- spawn device workers -------------------------------------
-        let epoch = Instant::now();
-        let has_cpu = self
+        // Checked here (not just in SessionExec) because registering
+        // with the arbiter below indexes the device table.
+        check_device_selection(&self.node, &self.selected)?;
+        let arbiter = LeaseArbiter::new(self.node.devices.len(), LeasePolicy::Rotation);
+        let registrations: Vec<_> = self
             .selected
             .iter()
-            .any(|s| self.node.devices[s.index].kind == DeviceKind::Cpu);
-        let coexec = self.selected.len() > 1;
-
-        let (to_master_tx, from_workers) = channel::<FromWorker>();
-        let mut to_workers: Vec<Sender<ToWorker>> = Vec::new();
-        let mut handles = Vec::new();
-        let init_barrier = Arc::new(std::sync::Barrier::new(self.selected.len()));
-        for (slot, spec) in self.selected.iter().enumerate() {
-            let profile = self.node.devices[spec.index].clone();
-            let contended = coexec
-                && has_cpu
-                && profile.kind == DeviceKind::Accelerator
-                && self.config.simulate_init;
-            let (tx, rx) = channel::<ToWorker>();
-            to_workers.push(tx);
-            let ctx = WorkerCtx {
-                dev: slot,
-                profile,
-                registry: self.registry.clone(),
-                bench: bench.clone(),
-                inputs: inputs.clone(),
-                arena: Arc::clone(&arena),
-                config: self.config.clone(),
-                epoch,
-                contended_init: contended,
-                init_barrier: Arc::clone(&init_barrier),
-                pipeline_depth: depth,
-                seed: 0x9E3779B9 + slot as u64 * 0x85EBCA77,
-                injector: self
-                    .config
-                    .fault_plan
-                    .as_ref()
-                    .map(|p| p.injector_for(slot))
-                    .unwrap_or_default(),
-            };
-            handles.push(spawn_worker(ctx, to_master_tx.clone(), rx));
-        }
-        drop(to_master_tx);
-
-        // ---- master scheduling loop ------------------------------------
-        let sched_devices: Vec<SchedDevice> = self
-            .selected
-            .iter()
-            .map(|s| {
-                let d = &self.node.devices[s.index];
-                SchedDevice { name: d.name.clone(), power: d.relative_power }
-            })
+            .map(|s| arbiter.register(s.index, 0))
             .collect();
-        let mut scheduler = self.scheduler.build();
-        scheduler.start(gws / bench.granule, bench.granule, &sched_devices);
-
-        let ndev = self.selected.len();
-        let mut device_traces: Vec<DeviceTrace> = self
-            .selected
-            .iter()
-            .map(|s| {
-                let d = &self.node.devices[s.index];
-                DeviceTrace {
-                    name: d.name.clone(),
-                    kind: d.kind,
-                    init_start: Default::default(),
-                    init_end: Default::default(),
-                    packages: Vec::new(),
-                    xfer: Default::default(),
-                }
-            })
-            .collect();
-        // Assignments whose H2D staging has not been confirmed by an
-        // Uploaded event yet (pipelined devices only) are capped at 2:
-        // one staging, one queued behind it — back-pressure so a device
-        // with a slow bus is never flooded with un-staged ranges while
-        // an adaptive scheduler could still size them better elsewhere.
-        let staging_cap = if depth > 1 { 2 } else { usize::MAX };
-        let mut master = MasterState {
-            depth,
-            staging_cap,
-            granule: bench.granule,
-            fault_tolerant: self.config.fault_tolerant,
-            scheduler,
-            to_workers,
-            pending: vec![VecDeque::new(); ndev],
-            unstaged: vec![0usize; ndev],
-            finish_sent: vec![false; ndev],
-            failed: vec![false; ndev],
-            dry: vec![false; ndev],
-            reclaimed: VecDeque::new(),
+        let exec = SessionExec {
+            registry: self.registry.clone(),
+            node: self.node.clone(),
+            selected: self.selected.clone(),
+            scheduler: self.scheduler.clone(),
+            pipeline_depth: self.pipeline_depth,
+            config: self.config.clone(),
+            gws: self.gws,
+            session: 0,
+            leases: SessionLeases { arbiter, registrations },
         };
-        let mut reported = vec![false; ndev];
-        let mut finished = 0usize;
-        let mut failure: Option<EclError> = None;
-        let mut faults: Vec<FaultEvent> = Vec::new();
-
-        // How often the idle master sweeps for worker threads that died
-        // without reporting (panics are caught and converted to Failed
-        // events in the worker shell; the sweep catches *silent* exits —
-        // the chaos layer's "vanish" mode, a segfaulting driver).
-        const LIVENESS_POLL: Duration = Duration::from_millis(25);
-
-        while finished < ndev {
-            match from_workers.recv_timeout(LIVENESS_POLL) {
-                Ok(ev) => handle_event(
-                    ev,
-                    &mut master,
-                    arena.as_ref(),
-                    &mut device_traces,
-                    &mut reported,
-                    &mut finished,
-                    &mut faults,
-                    &mut failure,
-                    epoch,
-                ),
-                Err(err) => {
-                    // Idle, or the channel died. Sweep for workers that
-                    // exited without reporting. A disconnected channel
-                    // means no worker can ever report again, so every
-                    // unreported device is dead regardless of the (racy)
-                    // thread-finished flag. Order matters: snapshot the
-                    // exited-but-unreported workers *first*, then drain
-                    // the channel — a worker that finished cleanly in
-                    // the race window between the timeout and the
-                    // snapshot sent its Finished/Failed *before* its
-                    // thread exited, so the drain honors it; only what
-                    // is still unreported after the drain is a genuine
-                    // silent death.
-                    let disconnected = err == RecvTimeoutError::Disconnected;
-                    let dead: Vec<usize> = (0..ndev)
-                        .filter(|&d| !reported[d] && (disconnected || handles[d].is_finished()))
-                        .collect();
-                    while let Ok(ev) = from_workers.try_recv() {
-                        handle_event(
-                            ev,
-                            &mut master,
-                            arena.as_ref(),
-                            &mut device_traces,
-                            &mut reported,
-                            &mut finished,
-                            &mut faults,
-                            &mut failure,
-                            epoch,
-                        );
-                    }
-                    for dev in dead {
-                        if !reported[dev] {
-                            reported[dev] = true;
-                            finished += 1;
-                            register_failure(
-                                &mut master,
-                                arena.as_ref(),
-                                &device_traces,
-                                &mut faults,
-                                &mut failure,
-                                epoch,
-                                dev,
-                                "worker exited without reporting a result (dead channel)"
-                                    .to_string(),
-                            );
-                        }
-                    }
-                }
-            }
-            // Fault-tolerant mode defers Finish until every range is
-            // provably complete (see MasterState::finish_if_complete).
-            master.finish_if_complete();
-        }
-        for h in handles {
-            let _ = h.join();
-        }
-
-        // ---- recover the arena: results are already in place -----------
-        // Every worker wrote its packages directly into disjoint arena
-        // windows, so "collecting results" is handing the allocations
-        // back to the program's containers — no merge, no copy. Done
-        // before the failure return so partial results survive a worker
-        // failure, matching the seed's semantics.
-        match Arc::try_unwrap(arena) {
-            Ok(arena) => {
-                for (buf, out) in arena.into_buffers().into_iter().zip(program.outputs_mut()) {
-                    out.store(HostBuf::F32(buf));
-                }
-            }
-            Err(_) => {
-                failure.get_or_insert(EclError::Runtime(
-                    "output arena still shared after worker join".into(),
-                ));
-            }
-        }
-        if let Some(e) = failure {
-            return Err(e);
-        }
-
-        // The label reflects the *effective* depth: a Tier-1
-        // pipeline(1) override on a "+pipe" spec ran blocking, and vice
-        // versa — harness pairings key off this suffix.
-        let mut scheduler_label = master.scheduler.name();
-        if depth > 1 && !scheduler_label.contains("+pipe") {
-            scheduler_label.push_str("+pipe");
-        } else if depth <= 1 && scheduler_label.ends_with("+pipe") {
-            let len = scheduler_label.len() - "+pipe".len();
-            scheduler_label.truncate(len);
-        }
-        Ok(RunReport {
-            bench: bench.name.clone(),
-            scheduler: scheduler_label,
-            gws,
-            wall: epoch.elapsed(),
-            devices: device_traces,
-            faults,
-        })
+        exec.run(program)
     }
-}
-
-/// Recovery-aware assignment state for the master loop: per-device
-/// in-flight ranges (what recovery must reclaim when a device dies),
-/// staging back-pressure counters, and the shared queue of reclaimed
-/// ranges that survivors drain before asking the scheduler.
-struct MasterState {
-    depth: usize,
-    staging_cap: usize,
-    granule: usize,
-    fault_tolerant: bool,
-    scheduler: Box<dyn Scheduler>,
-    to_workers: Vec<Sender<ToWorker>>,
-    /// Ranges assigned but not yet reported `Done`, per device, in
-    /// execution (assignment) order.
-    pending: Vec<VecDeque<Range>>,
-    unstaged: Vec<usize>,
-    finish_sent: Vec<bool>,
-    failed: Vec<bool>,
-    /// The scheduler returned `None` for this device (terminal, per the
-    /// trait contract).
-    dry: Vec<bool>,
-    /// Reclaimed ranges awaiting requeue.
-    reclaimed: VecDeque<Range>,
-}
-
-/// What `MasterState::handle_failure` did, for the fault event record.
-struct FailureOutcome {
-    reclaimed_items: usize,
-    revoked_claims: usize,
-    recovered: bool,
-}
-
-impl MasterState {
-    fn ndev(&self) -> usize {
-        self.pending.len()
-    }
-
-    fn next_scheduler_range(&mut self, dev: usize) -> Option<Range> {
-        if self.dry[dev] {
-            return None;
-        }
-        let r = self.scheduler.next_package(dev);
-        if r.is_none() {
-            self.dry[dev] = true;
-        }
-        r
-    }
-
-    /// The next range for `dev`: reclaimed (requeued) work first, then
-    /// the scheduler. Returns the range plus its requeued flag.
-    fn next_range(&mut self, dev: usize) -> Option<(Range, bool)> {
-        if let Some(r) = self.reclaimed.pop_front() {
-            return Some((r, true));
-        }
-        self.next_scheduler_range(dev).map(|r| (r, false))
-    }
-
-    /// Top device `dev`'s pipeline up to `depth` packages (and at most
-    /// `staging_cap` unconfirmed stagings). The first message batches
-    /// two ranges (range + lookahead) so a pipelined worker starts
-    /// one-ahead off a single round-trip.
-    fn top_up(&mut self, dev: usize) {
-        if self.finish_sent[dev] || self.failed[dev] {
-            return;
-        }
-        while self.pending[dev].len() < self.depth && self.unstaged[dev] < self.staging_cap {
-            let Some((range, requeued)) = self.next_range(dev) else {
-                // Legacy abort-on-failure mode finishes a device the
-                // moment it runs dry (blocking workers only when idle;
-                // pipelined workers drain their local queue). The
-                // fault-tolerant loop instead defers Finish to
-                // `finish_if_complete`: a later failure may still
-                // requeue work onto this device.
-                if !self.fault_tolerant && (self.pending[dev].is_empty() || self.depth > 1) {
-                    self.to_workers[dev].send(ToWorker::Finish).ok();
-                    self.finish_sent[dev] = true;
-                }
-                return;
-            };
-            self.pending[dev].push_back(range);
-            if self.depth > 1 {
-                self.unstaged[dev] += 1;
-            }
-            let lookahead = if self.depth > 1
-                && self.pending[dev].len() < self.depth
-                && self.unstaged[dev] < self.staging_cap
-                && self.reclaimed.is_empty()
-            {
-                let next = self.next_scheduler_range(dev);
-                if let Some(n) = next {
-                    self.pending[dev].push_back(n);
-                    self.unstaged[dev] += 1;
-                }
-                next
-            } else {
-                None
-            };
-            self.to_workers[dev]
-                .send(ToWorker::Assign(Assignment { range, lookahead, requeued }))
-                .ok();
-        }
-    }
-
-    /// All work provably done: nothing reclaimed waits, nothing is in
-    /// flight, and the scheduler is dry for every live device. Only
-    /// then can no future failure surface new work (dead devices have
-    /// nothing pending), so Finish is safe to broadcast.
-    fn complete(&self) -> bool {
-        self.reclaimed.is_empty()
-            && self.pending.iter().all(|q| q.is_empty())
-            && (0..self.ndev()).all(|d| self.failed[d] || self.dry[d])
-    }
-
-    /// Fault-tolerant finish: broadcast Finish to every live device
-    /// once the run is complete. No-op in legacy mode (per-device
-    /// Finish already happened in `top_up`).
-    fn finish_if_complete(&mut self) {
-        if !self.fault_tolerant || !self.complete() {
-            return;
-        }
-        for dev in 0..self.ndev() {
-            if !self.failed[dev] && !self.finish_sent[dev] {
-                self.to_workers[dev].send(ToWorker::Finish).ok();
-                self.finish_sent[dev] = true;
-            }
-        }
-    }
-
-    /// Device `dev`'s worker died. Reclaim its unfinished assignments
-    /// plus any scheduler reservation, revoke their arena claims, and
-    /// requeue the ranges — each split so every survivor can pull a
-    /// piece (a Static share would otherwise land whole on a single
-    /// survivor). Legacy mode reclaims nothing (abort semantics).
-    fn handle_failure(&mut self, dev: usize, arena: &OutputArena) -> FailureOutcome {
-        self.failed[dev] = true;
-        let mut ranges: Vec<Range> = self.pending[dev].drain(..).collect();
-        ranges.extend(self.scheduler.reclaim_device(dev));
-        let reclaimed_items: usize = ranges.iter().map(Range::len).sum();
-        if !self.fault_tolerant {
-            return FailureOutcome { reclaimed_items, revoked_claims: 0, recovered: false };
-        }
-        let survivors = (0..self.ndev())
-            .filter(|&d| !self.failed[d] && !self.finish_sent[d])
-            .count();
-        let recovered = reclaimed_items == 0 || survivors > 0;
-        let mut revoked_claims = 0usize;
-        for r in &ranges {
-            // SAFETY: the failed worker has exited (liveness sweep) or
-            // reported failure after dropping its windows on the error
-            // path, so no live window covers any of these ranges.
-            if unsafe { arena.revoke(r.begin, r.end) } {
-                revoked_claims += 1;
-            }
-            if survivors > 0 {
-                for piece in split_range(r.begin, r.end, survivors, self.granule) {
-                    self.reclaimed.push_back(piece);
-                }
-            }
-        }
-        if !self.reclaimed.is_empty() {
-            for d in 0..self.ndev() {
-                if !self.failed[d] {
-                    self.top_up(d);
-                }
-            }
-        }
-        FailureOutcome { reclaimed_items, revoked_claims, recovered }
-    }
-}
-
-/// Fold one worker event into the master loop's state. Called from the
-/// blocking receive and from the liveness sweep's channel drain (which
-/// must process every already-sent event before declaring an exited
-/// worker silently dead).
-#[allow(clippy::too_many_arguments)]
-fn handle_event(
-    ev: FromWorker,
-    master: &mut MasterState,
-    arena: &OutputArena,
-    device_traces: &mut [DeviceTrace],
-    reported: &mut [bool],
-    finished: &mut usize,
-    faults: &mut Vec<FaultEvent>,
-    failure: &mut Option<EclError>,
-    epoch: Instant,
-) {
-    match ev {
-        FromWorker::Ready { dev, init_start, init_end } => {
-            device_traces[dev].init_start = init_start;
-            device_traces[dev].init_end = init_end;
-            master.top_up(dev);
-        }
-        FromWorker::Uploaded { dev } => {
-            // A prefetch landed on the device: release its staging slot
-            // and keep the pipe full.
-            master.unstaged[dev] = master.unstaged[dev].saturating_sub(1);
-            master.top_up(dev);
-        }
-        FromWorker::Done { dev } => {
-            // Workers execute in assignment order, so the front pending
-            // range is the completed one; its results are fully in the
-            // arena by the time Done is sent.
-            master.pending[dev].pop_front();
-            master.top_up(dev);
-        }
-        FromWorker::Finished { dev, traces, xfer } => {
-            device_traces[dev].packages = traces;
-            device_traces[dev].xfer = xfer;
-            if !reported[dev] {
-                reported[dev] = true;
-                *finished += 1;
-            }
-        }
-        FromWorker::Failed { dev, message, traces, xfer } => {
-            // The packages the worker *completed* stay attributed to it
-            // — their results are already in the arena.
-            device_traces[dev].packages = traces;
-            device_traces[dev].xfer = xfer;
-            if !reported[dev] {
-                reported[dev] = true;
-                *finished += 1;
-                register_failure(
-                    master,
-                    arena,
-                    device_traces,
-                    faults,
-                    failure,
-                    epoch,
-                    dev,
-                    message,
-                );
-            }
-        }
-    }
-}
-
-/// Fold one worker failure into the master state: reclaim + requeue (or
-/// record the abort), and append the introspector's fault event.
-#[allow(clippy::too_many_arguments)]
-fn register_failure(
-    master: &mut MasterState,
-    arena: &OutputArena,
-    device_traces: &[DeviceTrace],
-    faults: &mut Vec<FaultEvent>,
-    failure: &mut Option<EclError>,
-    epoch: Instant,
-    dev: usize,
-    message: String,
-) {
-    let outcome = master.handle_failure(dev, arena);
-    if !outcome.recovered {
-        failure.get_or_insert(EclError::Worker {
-            device: device_traces[dev].name.clone(),
-            message: message.clone(),
-        });
-    }
-    faults.push(FaultEvent {
-        device: dev,
-        device_name: device_traces[dev].name.clone(),
-        message,
-        at: epoch.elapsed(),
-        reclaimed_items: outcome.reclaimed_items,
-        revoked_claims: outcome.revoked_claims,
-        recovered: outcome.recovered,
-    });
-}
-
-/// Validate recorded scalar args against the baked manifest scalars.
-fn validate_args(args: &BTreeMap<usize, Arg>, scalars: &BTreeMap<String, f64>) -> Result<(), EclError> {
-    let baked: Vec<(&String, &f64)> = scalars.iter().collect();
-    let mut scalar_idx = 0usize;
-    for (index, arg) in args {
-        if let Arg::Scalar(v) = arg {
-            // Scalars must match some baked value (AOT kernels cannot take
-            // new scalar values at run time — the paper's JIT could).
-            let matched = baked.iter().any(|(_, bv)| (*bv - v).abs() < 1e-9);
-            if !matched {
-                let (name, expected) = baked
-                    .get(scalar_idx.min(baked.len().saturating_sub(1)))
-                    .map(|(n, v)| ((*n).clone(), **v))
-                    .unwrap_or(("<none>".into(), f64::NAN));
-                return Err(EclError::ArgMismatch { index: *index, name, expected, got: *v });
-            }
-            scalar_idx += 1;
-        }
-    }
-    if scalar_idx > scalars.len() {
-        return Err(EclError::UnknownArg { index: scalar_idx });
-    }
-    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn validate_args_accepts_baked_values() {
-        let mut scalars = BTreeMap::new();
-        scalars.insert("steps".to_string(), 254.0);
-        scalars.insert("dt".to_string(), 0.005);
-        let mut args = BTreeMap::new();
-        args.insert(0, Arg::Scalar(254.0));
-        args.insert(1, Arg::BufferRef);
-        args.insert(2, Arg::LocalAlloc(1024));
-        assert!(validate_args(&args, &scalars).is_ok());
-    }
-
-    #[test]
-    fn validate_args_rejects_unbaked_scalar() {
-        let mut scalars = BTreeMap::new();
-        scalars.insert("steps".to_string(), 254.0);
-        let mut args = BTreeMap::new();
-        args.insert(0, Arg::Scalar(100.0));
-        let err = validate_args(&args, &scalars).unwrap_err();
-        assert!(matches!(err, EclError::ArgMismatch { .. }));
-    }
 
     #[test]
     fn pipeline_depth_resolution() {
@@ -921,15 +259,18 @@ mod tests {
         let mut e = Engine::with_registry(reg.clone());
         e.use_devices(vec![DeviceSpec::new(0)]);
         e.pipeline(MAX_PIPELINE_DEPTH + 1);
-        let bench = reg.bench("binomial").unwrap().clone();
-        let mut p = Program::new();
-        p.kernel("binomial", &bench.kernel);
-        for buf in reg.golden_inputs(&bench).unwrap() {
-            p.input(buf.as_f32().unwrap().to_vec());
-        }
-        p.output(bench.outputs[0].elems);
-        e.program(p);
+        e.program(crate::harness::runs::build_program(&reg, "binomial").unwrap());
         assert!(e.run().is_err());
         assert!(matches!(e.get_errors()[0], EclError::BadPipelineDepth { .. }));
+    }
+
+    #[test]
+    fn out_of_range_device_rejected() {
+        let reg = ArtifactRegistry::synthetic();
+        let mut e = Engine::with_registry(reg.clone());
+        e.use_devices(vec![DeviceSpec::new(42)]);
+        e.program(crate::harness::runs::build_program(&reg, "binomial").unwrap());
+        let err = e.run().unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 }

@@ -120,6 +120,10 @@ pub struct DeviceTrace {
     pub packages: Vec<PackageTrace>,
     /// Bytes moved per direction over the whole run.
     pub xfer: TransferStats,
+    /// Total time this device's worker spent waiting for the device
+    /// lease — i.e., the device serving *other* sessions' package
+    /// windows. Zero in a solo run (single-participant arbiter).
+    pub lease_wait: Duration,
 }
 
 impl DeviceTrace {
@@ -154,6 +158,10 @@ impl DeviceTrace {
 pub struct RunReport {
     pub bench: String,
     pub scheduler: String,
+    /// Id of the run session this report belongs to (0 for solo
+    /// `Engine::run` sessions; admission-ordered ids under a
+    /// [`Runtime`](crate::coordinator::runtime::Runtime)).
+    pub session: u64,
     pub gws: usize,
     /// Wall time of `Engine::run` (epoch -> all results merged).
     pub wall: Duration,
@@ -279,6 +287,13 @@ impl RunReport {
         self.devices.iter().map(|d| d.xfer.input_upload_bytes).sum()
     }
 
+    /// Total time this session's workers spent waiting for device
+    /// leases (the devices serving other sessions). Zero in a solo run;
+    /// under a concurrent runtime it is the session's contention bill.
+    pub fn lease_wait_total(&self) -> Duration {
+        self.devices.iter().map(|d| d.lease_wait).sum()
+    }
+
     /// ASCII timeline (one row per device) — the Introspector "visual
     /// representation" of Figures 5/6 for terminals. `i` marks init,
     /// `#` compute windows, `u` H2D staging visible outside compute
@@ -383,6 +398,7 @@ mod tests {
         RunReport {
             bench: "toy".into(),
             scheduler: "Static".into(),
+            session: 0,
             gws: 100,
             wall: ms(100),
             devices: vec![
@@ -393,6 +409,7 @@ mod tests {
                     init_end: ms(10),
                     packages: vec![mk(0, 0, 30, 10, 80)],
                     xfer: TransferStats { input_upload_bytes: 0, h2d_bytes: 4, d2h_bytes: 0 },
+                    lease_wait: ms(0),
                 },
                 DeviceTrace {
                     name: "gpu".into(),
@@ -401,6 +418,7 @@ mod tests {
                     init_end: ms(5),
                     packages: vec![mk(1, 30, 100, 5, 100)],
                     xfer: TransferStats { input_upload_bytes: 0, h2d_bytes: 4, d2h_bytes: 0 },
+                    lease_wait: ms(0),
                 },
             ],
             faults: Vec::new(),
@@ -466,6 +484,10 @@ mod tests {
         assert_eq!(r.h2d_bytes(), 12);
         assert_eq!(r.d2h_bytes(), 16);
         assert_eq!(r.input_upload_bytes(), 100);
+        assert_eq!(r.lease_wait_total(), ms(0), "solo traces carry no lease wait");
+        r.devices[0].lease_wait = ms(7);
+        r.devices[1].lease_wait = ms(5);
+        assert_eq!(r.lease_wait_total(), ms(12));
         let csv = r.package_csv();
         assert!(csv.starts_with("device,"));
         assert!(csv.lines().next().unwrap().ends_with("h2d_bytes,d2h_bytes,requeued"));

@@ -1,0 +1,546 @@
+//! Device lease arbiter — how concurrent run sessions share the node.
+//!
+//! A persistent runtime admits many [`RunSession`](crate::coordinator::runtime::RunSession)s
+//! at once, but a simulated device can only honestly execute one
+//! session's package at a time (the workers' simclock holds are
+//! wall-clock sleeps — two sessions occupying one device simultaneously
+//! would simulate a device twice as fast as its profile). The arbiter is
+//! the enforcement point: every device worker must hold that device's
+//! *lease* for the whole occupancy window of a package (staging +
+//! compute + simulated hold) and release it between packages, so
+//! concurrent sessions interleave per package window across the device
+//! set instead of overlapping on one device.
+//!
+//! # Participants, not sessions
+//!
+//! Registration is per *worker* (a `(session, device)` pair), keyed by a
+//! unique token — a session that selects the same node device twice gets
+//! two independent participants. Registration is RAII
+//! ([`DeviceRegistration`]): when a worker exits — cleanly, by error, by
+//! a caught panic, or by the chaos layer's silent *vanish* — its
+//! registration drops and the arbiter forgets it, so a dead session can
+//! never hold a turn (or a lease: [`LeaseGuard`] is RAII too) hostage.
+//!
+//! # Policies
+//!
+//! * [`LeasePolicy::Rotation`] (default) — deterministic turn-taking:
+//!   each device cycles through its registered participants in
+//!   registration order (= admission order, since the runtime registers
+//!   whole batches under one lock). The device *waits* for the
+//!   turn-holder rather than leapfrogging it, so the grant sequence is a
+//!   pure function of each session's own request/park/deregister
+//!   sequence — never of wall-clock arrival races. That is what makes
+//!   concurrent golden-trace tests reproducible. The cost is utilization:
+//!   a device can idle while a slow turn-holder initializes.
+//!
+//!   To keep turn-taking deadlock-free with the fault-tolerant engine
+//!   (which holds dry devices open in case a failure requeues work), a
+//!   session's master *parks* a participant that provably has nothing to
+//!   request (scheduler dry, nothing in flight, nothing reclaimed);
+//!   parked participants are skipped by the rotation and un-parked the
+//!   moment work is assigned to them again. Parking can only delay a
+//!   grant decision (the rotation waits, then skips), never reorder it.
+//!
+//! * [`LeasePolicy::Fifo`] — first-come-first-served ticket queue:
+//!   maximal utilization (a free device goes to whoever asked first),
+//!   starvation-free, but contended grant order follows wall-clock
+//!   arrival and is not reproducible across executions.
+//!
+//! Every grant is appended to a global journal ([`GrantRecord`]) — the
+//! observable the concurrency battery uses to pin interleavings.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Identifies one admitted run session within a runtime.
+pub type SessionId = u64;
+
+/// How a device arbitrates between sessions competing for it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeasePolicy {
+    /// Deterministic round-robin turn-taking over registered
+    /// participants (skipping parked ones). Reproducible interleavings;
+    /// a device may idle waiting for its turn-holder.
+    Rotation,
+    /// First-come-first-served ticket queue. Maximal utilization;
+    /// contended grant order follows wall-clock arrival.
+    Fifo,
+}
+
+/// One granted lease, in global grant order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GrantRecord {
+    /// Global grant sequence number (across all devices).
+    pub serial: u64,
+    /// Node device index.
+    pub device: usize,
+    pub session: SessionId,
+}
+
+#[derive(Debug)]
+struct Entry {
+    token: u64,
+    session: SessionId,
+    /// Parked participants provably have nothing to request and are
+    /// skipped by the rotation until un-parked.
+    parked: bool,
+}
+
+#[derive(Debug, Default)]
+struct DeviceState {
+    /// Participants in registration order (the rotation order).
+    entries: Vec<Entry>,
+    /// Index into `entries` of the participant whose turn it is.
+    turn: usize,
+    /// Token currently holding the device, if any.
+    holder: Option<u64>,
+    /// Waiting tokens in arrival order (Fifo policy only).
+    queue: VecDeque<u64>,
+    grants: u64,
+}
+
+impl DeviceState {
+    /// Advance `turn` past parked entries (at most one full cycle; if
+    /// every entry is parked the cursor stays put — nothing is eligible
+    /// until an un-park or a new registration).
+    fn normalize(&mut self) {
+        let n = self.entries.len();
+        if n == 0 {
+            self.turn = 0;
+            return;
+        }
+        if self.turn >= n {
+            self.turn = 0;
+        }
+        for _ in 0..n {
+            if !self.entries[self.turn].parked {
+                return;
+            }
+            self.turn = (self.turn + 1) % n;
+        }
+    }
+
+    fn position(&self, token: u64) -> Option<usize> {
+        self.entries.iter().position(|e| e.token == token)
+    }
+}
+
+#[derive(Debug)]
+struct ArbState {
+    devices: Vec<DeviceState>,
+    serial: u64,
+    next_token: u64,
+    journal: Vec<GrantRecord>,
+}
+
+/// The shared arbiter. One per runtime (and one per solo `Engine::run`,
+/// where its single registered session makes every acquire immediate).
+#[derive(Debug)]
+pub struct LeaseArbiter {
+    policy: LeasePolicy,
+    state: Mutex<ArbState>,
+    cv: Condvar,
+}
+
+impl LeaseArbiter {
+    pub fn new(devices: usize, policy: LeasePolicy) -> Arc<Self> {
+        Arc::new(Self {
+            policy,
+            state: Mutex::new(ArbState {
+                devices: (0..devices).map(|_| DeviceState::default()).collect(),
+                serial: 0,
+                next_token: 1,
+                journal: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Poison-tolerant lock: the arbiter's critical sections never
+    /// panic, but RAII releases run during *worker* unwinds (injected
+    /// panics) and must never double-panic.
+    fn lock(&self) -> MutexGuard<'_, ArbState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn policy(&self) -> LeasePolicy {
+        self.policy
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.lock().devices.len()
+    }
+
+    /// Register a participant (one worker of `session`) on `device`.
+    /// Registration order is the rotation order; the runtime registers
+    /// admitted batches under one lock so it equals admission order.
+    pub fn register(self: &Arc<Self>, device: usize, session: SessionId) -> DeviceRegistration {
+        let token = {
+            let mut st = self.lock();
+            let token = st.next_token;
+            st.next_token += 1;
+            st.devices[device].entries.push(Entry { token, session, parked: false });
+            token
+        };
+        self.cv.notify_all();
+        DeviceRegistration { arb: Arc::clone(self), device, session, token }
+    }
+
+    /// Session currently holding `device`'s lease.
+    pub fn holder(&self, device: usize) -> Option<SessionId> {
+        let st = self.lock();
+        let d = &st.devices[device];
+        d.holder.and_then(|t| d.entries.iter().find(|e| e.token == t).map(|e| e.session))
+    }
+
+    /// Sessions registered on `device`, in rotation order.
+    pub fn registered_sessions(&self, device: usize) -> Vec<SessionId> {
+        self.lock().devices[device].entries.iter().map(|e| e.session).collect()
+    }
+
+    /// Leases granted on `device` so far.
+    pub fn grant_count(&self, device: usize) -> u64 {
+        self.lock().devices[device].grants
+    }
+
+    /// The global grant journal (all devices, grant order).
+    pub fn journal(&self) -> Vec<GrantRecord> {
+        self.lock().journal.clone()
+    }
+
+    /// Grants of `session` only, in grant order.
+    pub fn journal_for(&self, session: SessionId) -> Vec<GrantRecord> {
+        self.lock().journal.iter().filter(|g| g.session == session).copied().collect()
+    }
+
+    /// Mark a participant as having provably nothing to request
+    /// (`parked = true`) or as active again. Called by session masters;
+    /// un-parking always precedes the assignment that makes the worker
+    /// request again, so a parked turn-holder can never be waited on.
+    pub(crate) fn set_parked(&self, device: usize, token: u64, parked: bool) {
+        {
+            let mut st = self.lock();
+            let d = &mut st.devices[device];
+            if let Some(pos) = d.position(token) {
+                if d.entries[pos].parked != parked {
+                    d.entries[pos].parked = parked;
+                    if self.policy == LeasePolicy::Rotation {
+                        d.normalize();
+                    }
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    fn acquire_token(&self, device: usize, token: u64, session: SessionId) {
+        let mut st = self.lock();
+        {
+            // A request is intent: a participant that asks again while
+            // parked (defensive — masters un-park before assigning)
+            // re-enters the rotation.
+            let d = &mut st.devices[device];
+            if let Some(pos) = d.position(token) {
+                if d.entries[pos].parked {
+                    d.entries[pos].parked = false;
+                }
+            }
+            if self.policy == LeasePolicy::Fifo {
+                d.queue.push_back(token);
+            }
+        }
+        loop {
+            let eligible = {
+                let d = &mut st.devices[device];
+                if d.holder.is_some() {
+                    false
+                } else {
+                    match self.policy {
+                        LeasePolicy::Rotation => {
+                            d.normalize();
+                            match d.entries.get(d.turn) {
+                                Some(e) => e.token == token,
+                                // Defensive: an unregistered acquire on
+                                // an otherwise-empty device proceeds.
+                                None => true,
+                            }
+                        }
+                        LeasePolicy::Fifo => d.queue.front() == Some(&token),
+                    }
+                }
+            };
+            if eligible {
+                let d = &mut st.devices[device];
+                d.holder = Some(token);
+                d.grants += 1;
+                if self.policy == LeasePolicy::Fifo {
+                    d.queue.pop_front();
+                }
+                let serial = st.serial;
+                st.serial += 1;
+                st.journal.push(GrantRecord { serial, device, session });
+                return;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn release_token(&self, device: usize, token: u64) {
+        {
+            let mut st = self.lock();
+            let d = &mut st.devices[device];
+            if d.holder == Some(token) {
+                d.holder = None;
+                if self.policy == LeasePolicy::Rotation {
+                    // The releasing participant's window is over: the
+                    // turn moves to the next registered entry.
+                    if let Some(pos) = d.position(token) {
+                        d.turn = (pos + 1) % d.entries.len().max(1);
+                    }
+                    d.normalize();
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    fn deregister_token(&self, device: usize, token: u64) {
+        {
+            let mut st = self.lock();
+            let d = &mut st.devices[device];
+            if d.holder == Some(token) {
+                // Defensive: a registration should outlive its guards,
+                // but a dying worker must never strand the device.
+                d.holder = None;
+            }
+            if let Some(pos) = d.position(token) {
+                d.entries.remove(pos);
+                if pos < d.turn {
+                    d.turn -= 1;
+                }
+                d.normalize();
+            }
+            d.queue.retain(|t| *t != token);
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// A worker's registration on one device. Dropping it (worker exit —
+/// clean or not) removes the participant from the rotation and releases
+/// any lease it still holds, which is how leases are reclaimed when a
+/// session's device is killed by a fault plan.
+#[derive(Debug)]
+pub struct DeviceRegistration {
+    arb: Arc<LeaseArbiter>,
+    device: usize,
+    session: SessionId,
+    token: u64,
+}
+
+impl DeviceRegistration {
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    pub fn session(&self) -> SessionId {
+        self.session
+    }
+
+    /// Opaque participant token (what masters pass to `set_parked`).
+    pub fn token(&self) -> u64 {
+        self.token
+    }
+
+    /// Block until this participant is granted the device, covering one
+    /// package occupancy window. Release by dropping the guard.
+    pub fn acquire(&self) -> LeaseGuard {
+        self.arb.acquire_token(self.device, self.token, self.session);
+        LeaseGuard {
+            arb: Arc::clone(&self.arb),
+            device: self.device,
+            token: self.token,
+        }
+    }
+}
+
+impl Drop for DeviceRegistration {
+    fn drop(&mut self) {
+        self.arb.deregister_token(self.device, self.token);
+    }
+}
+
+/// A held whole-device lease for one package window (RAII release).
+#[derive(Debug)]
+pub struct LeaseGuard {
+    arb: Arc<LeaseArbiter>,
+    device: usize,
+    token: u64,
+}
+
+impl Drop for LeaseGuard {
+    fn drop(&mut self) {
+        self.arb.release_token(self.device, self.token);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+    #[test]
+    fn solo_session_always_granted() {
+        let arb = LeaseArbiter::new(2, LeasePolicy::Rotation);
+        let reg = arb.register(0, 7);
+        for _ in 0..3 {
+            let g = reg.acquire();
+            assert_eq!(arb.holder(0), Some(7));
+            drop(g);
+            assert_eq!(arb.holder(0), None);
+        }
+        assert_eq!(arb.grant_count(0), 3);
+        assert_eq!(arb.grant_count(1), 0);
+        let j = arb.journal();
+        assert_eq!(j.len(), 3);
+        assert!(j.iter().all(|g| g.device == 0 && g.session == 7));
+        assert_eq!(j[0].serial, 0);
+        assert_eq!(j[2].serial, 2);
+    }
+
+    #[test]
+    fn rotation_alternates_in_registration_order() {
+        let arb = LeaseArbiter::new(1, LeasePolicy::Rotation);
+        let a = arb.register(0, 1);
+        let b = arb.register(0, 2);
+        // a leads (registered first); after each release the turn moves
+        // to the next participant, so windows strictly alternate.
+        drop(a.acquire());
+        drop(b.acquire());
+        drop(a.acquire());
+        drop(b.acquire());
+        let sessions: Vec<SessionId> = arb.journal().iter().map(|g| g.session).collect();
+        assert_eq!(sessions, vec![1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn rotation_skips_parked_participants() {
+        let arb = LeaseArbiter::new(1, LeasePolicy::Rotation);
+        let a = arb.register(0, 1);
+        let b = arb.register(0, 2);
+        // Park a: b can acquire repeatedly without waiting for a.
+        arb.set_parked(0, a.token(), true);
+        for _ in 0..3 {
+            drop(b.acquire());
+        }
+        // Un-park a: it gets the next turn after b's window.
+        arb.set_parked(0, a.token(), false);
+        drop(b.acquire());
+        drop(a.acquire());
+        let sessions: Vec<SessionId> = arb.journal().iter().map(|g| g.session).collect();
+        assert_eq!(sessions, vec![2, 2, 2, 2, 1]);
+        drop(a);
+        drop(b);
+        assert!(arb.registered_sessions(0).is_empty());
+    }
+
+    #[test]
+    fn deregistration_unblocks_the_rotation() {
+        let arb = LeaseArbiter::new(1, LeasePolicy::Rotation);
+        let a = arb.register(0, 1);
+        let b = arb.register(0, 2);
+        drop(a.acquire()); // turn -> b
+        drop(b); // b exits without ever acquiring
+        // a can immediately go again — the rotation skips the ghost.
+        drop(a.acquire());
+        assert_eq!(arb.grant_count(0), 2);
+        assert_eq!(arb.registered_sessions(0), vec![1]);
+    }
+
+    #[test]
+    fn dropped_registration_releases_held_lease() {
+        let arb = LeaseArbiter::new(1, LeasePolicy::Rotation);
+        let a = arb.register(0, 1);
+        let g = a.acquire();
+        assert_eq!(arb.holder(0), Some(1));
+        // Worker death drops both, guard first in a real unwind; the
+        // reverse (defensive) order must also leave the device free.
+        drop(a);
+        assert_eq!(arb.holder(0), None);
+        drop(g); // releasing a deregistered token is a no-op
+        assert_eq!(arb.holder(0), None);
+    }
+
+    /// Mutual exclusion under a many-thread hammer, both policies: at
+    /// most one holder per device at any instant, and every requester
+    /// eventually completes all its windows (no starvation).
+    ///
+    /// Participation contract per policy: under Rotation a registered
+    /// participant must keep requesting (or park/deregister) — the
+    /// engine's masters guarantee that via parking — so each hammer
+    /// thread registers on exactly one device and requests it until it
+    /// deregisters. Fifo has no turns, so threads may roam devices.
+    #[test]
+    fn mutual_exclusion_and_progress_under_contention() {
+        for policy in [LeasePolicy::Rotation, LeasePolicy::Fifo] {
+            let ndev = 2;
+            let nthreads = 5;
+            let rounds = 20;
+            let arb = LeaseArbiter::new(ndev, policy);
+            let busy: Arc<Vec<AtomicBool>> =
+                Arc::new((0..ndev).map(|_| AtomicBool::new(false)).collect());
+            let completed = Arc::new(AtomicUsize::new(0));
+            let mut handles = Vec::new();
+            for t in 0..nthreads {
+                let regs: Vec<DeviceRegistration> = match policy {
+                    LeasePolicy::Rotation => vec![arb.register(t % ndev, t as SessionId)],
+                    LeasePolicy::Fifo => {
+                        (0..ndev).map(|d| arb.register(d, t as SessionId)).collect()
+                    }
+                };
+                let busy = Arc::clone(&busy);
+                let completed = Arc::clone(&completed);
+                handles.push(std::thread::spawn(move || {
+                    for r in 0..rounds {
+                        let reg = &regs[(t + r) % regs.len()];
+                        let d = reg.device();
+                        let g = reg.acquire();
+                        assert!(
+                            !busy[d].swap(true, Ordering::SeqCst),
+                            "two holders on device {d}"
+                        );
+                        std::thread::yield_now();
+                        busy[d].store(false, Ordering::SeqCst);
+                        drop(g);
+                        completed.fetch_add(1, Ordering::SeqCst);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(completed.load(Ordering::SeqCst), nthreads * rounds);
+            let total: u64 = (0..ndev).map(|d| arb.grant_count(d)).sum();
+            assert_eq!(total as usize, nthreads * rounds);
+            for d in 0..ndev {
+                assert_eq!(arb.holder(d), None);
+                assert!(arb.registered_sessions(d).is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn journal_projection_matches_per_session_grants() {
+        let arb = LeaseArbiter::new(1, LeasePolicy::Rotation);
+        let a = arb.register(0, 10);
+        let b = arb.register(0, 20);
+        drop(a.acquire());
+        drop(b.acquire());
+        drop(a.acquire());
+        let ja = arb.journal_for(10);
+        assert_eq!(ja.len(), 2);
+        assert!(ja.iter().all(|g| g.session == 10));
+        assert_eq!(arb.journal_for(20).len(), 1);
+        assert_eq!(arb.journal_for(99).len(), 0);
+    }
+}

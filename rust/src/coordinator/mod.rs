@@ -1,8 +1,10 @@
 //! The coordinator — EngineCL's contribution, re-implemented in Rust.
 //!
 //! Tier-1 (paper Figure 3): [`Engine`] and [`Program`] — the facade most
-//! programs need. Tier-2: [`DeviceSpec`], [`Configurator`], scheduler
-//! selection. Tier-3 (internal): device worker threads, work
+//! programs need — plus the persistent [`Runtime`] for concurrent
+//! [`RunSession`]s over one device set. Tier-2: [`DeviceSpec`],
+//! [`Configurator`], scheduler selection, the lease policy. Tier-3
+//! (internal): device worker threads, the lease arbiter, work
 //! decomposition, the runtime layer and the introspector.
 
 pub mod buffer;
@@ -11,7 +13,9 @@ pub mod device;
 pub mod engine;
 pub mod error;
 pub mod introspector;
+pub mod lease;
 pub mod program;
+pub mod runtime;
 pub mod scheduler;
 pub mod work;
 
@@ -21,6 +25,8 @@ pub use device::{DeviceMask, DeviceSpec};
 pub use engine::Engine;
 pub use error::EclError;
 pub use introspector::{DeviceTrace, FaultEvent, PackageTrace, RunReport, TransferStats};
+pub use lease::{GrantRecord, LeaseArbiter, LeasePolicy, SessionId};
 pub use program::{Arg, Program};
+pub use runtime::{RunSession, Runtime, SessionHandle, SessionOutcome};
 pub use scheduler::SchedulerKind;
 pub use work::Range;

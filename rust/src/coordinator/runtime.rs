@@ -1,0 +1,1338 @@
+//! The persistent multi-run runtime: concurrent run sessions over one
+//! device set, arbitrated by whole-device leases.
+//!
+//! The paper's `Engine::run()` is one-shot: spawn a worker per device,
+//! execute one kernel, tear everything down. A runtime *system* serves
+//! many kernels at once: clients build a [`RunSession`] (program + work
+//! size + scheduler spec + optional deadline), submit it to the
+//! [`Runtime`], and get a [`SessionHandle`] that resolves to the
+//! session's [`RunReport`] — any number of sessions may be in flight
+//! simultaneously, genuinely co-executing across the device set because
+//! every device worker checks the device out of the shared
+//! [`LeaseArbiter`] for exactly one package window at a time (see
+//! `coordinator::lease`).
+//!
+//! # Layers
+//!
+//! * `SessionExec` (crate-private) — the execution core: validation,
+//!   zero-copy buffer setup, one worker thread per selected device, and
+//!   the event-driven master scheduling loop (pipelining, staging
+//!   back-pressure, fault recovery — the documentation of record for
+//!   the loop's mechanics). This is the code that used to live inside
+//!   `Engine::run`; the engine is now a thin one-session wrapper that
+//!   feeds it a single-participant arbiter.
+//! * [`Runtime`] — admission and arbitration: a submit queue (FIFO, but
+//!   sessions carrying deadlines are admitted earliest-deadline-first),
+//!   an in-flight cap, per-session seeds for the simclock jitter, and
+//!   the shared lease arbiter plus its grant journal.
+//!
+//! Each session keeps its own [`OutputArena`], scheduler state, fault
+//! plan and recovery machinery — a device killed in one session is
+//! reclaimed (leases included, via RAII registrations) without the
+//! other sessions noticing anything but freed device time.
+//!
+//! # Master loop
+//!
+//! The per-session loop is event-driven over the worker channel:
+//!
+//! * `Ready` — device initialized; top its pipeline up to `depth`
+//!   packages (the first assignment carries the second range as a
+//!   `lookahead`, halving the fill round-trips).
+//! * `Uploaded` — a prefetch's H2D staging landed; release the
+//!   device's staging slot (at most two assignments may be un-staged
+//!   at once — back-pressure for slow buses) and top up again.
+//! * `Done` — a package completed; one slot freed, assign the next
+//!   package or send `Finish` when the scheduler is dry for that device.
+//! * `Finished`/`Failed` — worker exited; collect its traces and
+//!   transfer stats (results are already in the arena) or the failure.
+//!
+//! With `depth == 1` this reduces exactly to the paper's blocking
+//! assign-on-completion loop.
+//!
+//! # Fault tolerance
+//!
+//! The loop tracks, per device, every range assigned but not yet
+//! reported `Done`. When a worker dies — it reports `Failed`, or the
+//! liveness sweep finds its thread exited without reporting — the
+//! master recovers instead of aborting (default;
+//! `Configurator::fault_tolerant = false` restores abort-on-failure):
+//! the dead device's unfinished ranges plus any scheduler reservation
+//! (`Scheduler::reclaim_device` — Static's pre-split share) are
+//! reclaimed, their arena claims revoked ([`OutputArena::revoke`]), and
+//! the ranges are requeued — split so every survivor can pull a piece.
+//! Survivors drain the requeue queue before asking the scheduler, so
+//! Dynamic/HGuided absorb the lost work adaptively and Static degrades
+//! to a documented re-split. `Finish` is deferred until all work is
+//! provably complete. Every failure is recorded as a [`FaultEvent`] on
+//! the `RunReport`, and requeued packages are flagged in their traces.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::config::Configurator;
+use crate::coordinator::device::{
+    spawn_worker, Assignment, DeviceSpec, FromWorker, ToWorker, WorkerCtx,
+};
+use crate::coordinator::engine::MAX_PIPELINE_DEPTH;
+use crate::coordinator::error::EclError;
+use crate::coordinator::introspector::{DeviceTrace, FaultEvent, RunReport};
+use crate::coordinator::lease::{
+    DeviceRegistration, GrantRecord, LeaseArbiter, LeasePolicy, SessionId,
+};
+use crate::coordinator::program::{Arg, Program};
+use crate::coordinator::scheduler::{SchedDevice, Scheduler, SchedulerKind};
+use crate::coordinator::work::{split_range, Range};
+use crate::platform::{DeviceKind, NodeConfig};
+use crate::runtime::{input_views, ArtifactRegistry, HostBuf, InputView, OutputArena};
+
+// ---- sessions ---------------------------------------------------------
+
+/// One unit of admission: a program plus everything the runtime needs
+/// to execute it. Built by clients, consumed by [`Runtime::submit`].
+#[derive(Debug)]
+pub struct RunSession {
+    pub program: Program,
+    /// Node devices to co-execute on; empty = every device in the node.
+    pub devices: Vec<DeviceSpec>,
+    pub scheduler: SchedulerKind,
+    /// Tier-1 pipeline override; `None` defers to the scheduler spec.
+    pub pipeline_depth: Option<usize>,
+    pub gws: Option<usize>,
+    pub config: Configurator,
+    /// Soft completion target. Queued sessions with deadlines are
+    /// admitted earliest-deadline-first; the outcome records whether the
+    /// session's makespan met it ([`SessionOutcome::met_deadline`]).
+    pub deadline: Option<Duration>,
+    /// Human-readable tag for reports; defaults to `session-<id>`.
+    pub label: String,
+}
+
+impl RunSession {
+    pub fn new(program: Program) -> Self {
+        Self {
+            program,
+            devices: Vec::new(),
+            scheduler: SchedulerKind::static_default(),
+            pipeline_depth: None,
+            gws: None,
+            config: Configurator::default(),
+            deadline: None,
+            label: String::new(),
+        }
+    }
+
+    pub fn devices(mut self, devices: Vec<DeviceSpec>) -> Self {
+        self.devices = devices;
+        self
+    }
+
+    pub fn scheduler(mut self, kind: SchedulerKind) -> Self {
+        self.scheduler = kind;
+        self
+    }
+
+    pub fn pipeline(mut self, depth: usize) -> Self {
+        self.pipeline_depth = Some(depth);
+        self
+    }
+
+    pub fn gws(mut self, gws: usize) -> Self {
+        self.gws = Some(gws);
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn label(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        self
+    }
+
+    pub fn config(mut self, config: Configurator) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Tweak the configurator in place (builder-style).
+    pub fn configure(mut self, f: impl FnOnce(&mut Configurator)) -> Self {
+        f(&mut self.config);
+        self
+    }
+}
+
+/// Everything a finished session hands back: the program (its output
+/// containers hold the results — zero-copy publish, exactly as
+/// `Engine::run`), and the report or the error.
+#[derive(Debug)]
+pub struct SessionOutcome {
+    pub session: SessionId,
+    pub label: String,
+    pub deadline: Option<Duration>,
+    pub program: Program,
+    pub result: Result<RunReport, EclError>,
+}
+
+impl SessionOutcome {
+    pub fn report(&self) -> Option<&RunReport> {
+        self.result.as_ref().ok()
+    }
+
+    /// Computed output `i` (from the returned program's containers).
+    pub fn output(&self, i: usize) -> Option<&[f32]> {
+        self.program.outputs().get(i).map(|b| b.as_f32())
+    }
+
+    /// `Some(true)` when the session had a deadline and its makespan
+    /// met it; `Some(false)` on a miss (or a failed run); `None` when
+    /// no deadline was set.
+    pub fn met_deadline(&self) -> Option<bool> {
+        self.deadline.map(|d| match &self.result {
+            Ok(report) => report.wall <= d,
+            Err(_) => false,
+        })
+    }
+}
+
+/// Handle to an in-flight (or queued) session. Resolves to the
+/// [`SessionOutcome`] once the session completes.
+pub struct SessionHandle {
+    session: SessionId,
+    label: String,
+    rx: Receiver<SessionOutcome>,
+}
+
+impl SessionHandle {
+    pub fn id(&self) -> SessionId {
+        self.session
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Block until the session completes. Never panics: a session
+    /// thread that dies without reporting yields an error outcome.
+    pub fn wait(self) -> SessionOutcome {
+        match self.rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => SessionOutcome {
+                session: self.session,
+                label: self.label,
+                deadline: None,
+                program: Program::new(),
+                result: Err(EclError::Runtime(
+                    "session thread terminated without reporting an outcome".into(),
+                )),
+            },
+        }
+    }
+}
+
+// ---- the runtime ------------------------------------------------------
+
+struct QueuedSession {
+    session: SessionId,
+    spec: RunSession,
+    tx: Sender<SessionOutcome>,
+}
+
+/// A session that cleared admission: registered with the arbiter (in
+/// admission order, under the runtime lock) and ready to spawn.
+struct Admitted {
+    session: SessionId,
+    spec: RunSession,
+    tx: Sender<SessionOutcome>,
+    selected: Vec<DeviceSpec>,
+    registrations: Vec<DeviceRegistration>,
+}
+
+struct RtState {
+    next_session: SessionId,
+    in_flight: usize,
+    queue: VecDeque<QueuedSession>,
+}
+
+struct RuntimeShared {
+    registry: ArtifactRegistry,
+    node: NodeConfig,
+    arbiter: Arc<LeaseArbiter>,
+    /// Base simclock seed: each session's jitter RNG derives from it
+    /// and the session id, so a fixed runtime seed + fixed admission
+    /// order reproduces every session's timing draws.
+    seed: u64,
+    max_in_flight: usize,
+    state: Mutex<RtState>,
+    idle: Condvar,
+}
+
+/// The persistent multi-run runtime (see module docs).
+pub struct Runtime {
+    shared: Arc<RuntimeShared>,
+}
+
+impl Runtime {
+    /// A runtime over `node` with the deterministic rotation lease
+    /// policy, no in-flight cap and seed 0.
+    pub fn new(registry: ArtifactRegistry, node: NodeConfig) -> Self {
+        Self::configured(registry, node, LeasePolicy::Rotation, usize::MAX, 0)
+    }
+
+    pub fn configured(
+        registry: ArtifactRegistry,
+        node: NodeConfig,
+        policy: LeasePolicy,
+        max_in_flight: usize,
+        seed: u64,
+    ) -> Self {
+        let arbiter = LeaseArbiter::new(node.devices.len(), policy);
+        Self {
+            shared: Arc::new(RuntimeShared {
+                registry,
+                node,
+                arbiter,
+                seed,
+                max_in_flight: max_in_flight.max(1),
+                state: Mutex::new(RtState {
+                    next_session: 0,
+                    in_flight: 0,
+                    queue: VecDeque::new(),
+                }),
+                idle: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn node(&self) -> &NodeConfig {
+        &self.shared.node
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.shared.registry
+    }
+
+    /// The shared lease arbiter (journal, holders — the concurrency
+    /// battery's observables).
+    pub fn arbiter(&self) -> &Arc<LeaseArbiter> {
+        &self.shared.arbiter
+    }
+
+    /// The global lease-grant journal so far.
+    pub fn lease_journal(&self) -> Vec<GrantRecord> {
+        self.shared.arbiter.journal()
+    }
+
+    /// Submit one session. Admission is immediate when a slot is free,
+    /// else the session queues (FIFO; deadlines jump the queue,
+    /// earliest first).
+    pub fn submit(&self, session: RunSession) -> SessionHandle {
+        self.submit_all(vec![session]).pop().expect("one handle per session")
+    }
+
+    /// Submit a batch atomically: every session is enqueued — and every
+    /// admissible one *registered with the lease arbiter* — under a
+    /// single lock before any of them spawns. This is what makes batch
+    /// lease rotation deterministic: the rotation order is the batch
+    /// order, never the wall-clock order in which session threads
+    /// happen to start.
+    pub fn submit_all(&self, sessions: Vec<RunSession>) -> Vec<SessionHandle> {
+        let mut handles = Vec::with_capacity(sessions.len());
+        let ready = {
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            for mut spec in sessions {
+                let session = st.next_session;
+                st.next_session += 1;
+                if spec.label.is_empty() {
+                    spec.label = format!("session-{session}");
+                }
+                let (tx, rx) = channel();
+                handles.push(SessionHandle { session, label: spec.label.clone(), rx });
+                st.queue.push_back(QueuedSession { session, spec, tx });
+            }
+            admit(&self.shared, &mut st)
+        };
+        for adm in ready {
+            spawn_session(&self.shared, adm);
+        }
+        handles
+    }
+
+    /// Block until no session is running or queued.
+    pub fn wait_idle(&self) {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.in_flight > 0 || !st.queue.is_empty() {
+            st = self.shared.idle.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Pull admissible sessions off the queue (EDF among deadlined
+/// sessions, then FIFO) and register their workers with the arbiter.
+/// Runs under the runtime lock; returns the batch for the caller to
+/// spawn after unlocking.
+fn admit(shared: &Arc<RuntimeShared>, st: &mut RtState) -> Vec<Admitted> {
+    let mut out = Vec::new();
+    while st.in_flight < shared.max_in_flight && !st.queue.is_empty() {
+        let pick = (0..st.queue.len())
+            .min_by_key(|&i| (st.queue[i].spec.deadline.unwrap_or(Duration::MAX), i))
+            .expect("queue checked non-empty");
+        let q = st.queue.remove(pick).expect("index from live range");
+        let selected: Vec<DeviceSpec> = if q.spec.devices.is_empty() {
+            (0..shared.node.devices.len()).map(DeviceSpec::new).collect()
+        } else {
+            q.spec.devices.clone()
+        };
+        // Bounds-check before touching the arbiter: a bad device index
+        // is a client error surfaced on the handle, not a panic inside
+        // the admission path.
+        if let Err(err) = check_device_selection(&shared.node, &selected) {
+            q.tx.send(SessionOutcome {
+                session: q.session,
+                label: q.spec.label.clone(),
+                deadline: q.spec.deadline,
+                program: q.spec.program,
+                result: Err(err),
+            })
+            .ok();
+            continue;
+        }
+        let registrations: Vec<DeviceRegistration> = selected
+            .iter()
+            .map(|s| shared.arbiter.register(s.index, q.session))
+            .collect();
+        st.in_flight += 1;
+        out.push(Admitted {
+            session: q.session,
+            spec: q.spec,
+            tx: q.tx,
+            selected,
+            registrations,
+        });
+    }
+    out
+}
+
+fn spawn_session(shared: &Arc<RuntimeShared>, adm: Admitted) {
+    let shared = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name(format!("ecl-session-{}", adm.session))
+        .spawn(move || {
+            let Admitted { session, spec, tx, selected, registrations } = adm;
+            let RunSession {
+                mut program,
+                devices: _,
+                scheduler,
+                pipeline_depth,
+                gws,
+                mut config,
+                deadline,
+                label,
+            } = spec;
+            if config.rng_seed == 0 {
+                // Per-session jitter stream, derived deterministically
+                // from the runtime seed and the admission-ordered id.
+                config.rng_seed =
+                    shared.seed ^ session.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            }
+            let exec = SessionExec {
+                registry: shared.registry.clone(),
+                node: shared.node.clone(),
+                selected,
+                scheduler,
+                pipeline_depth,
+                config,
+                gws,
+                session,
+                leases: SessionLeases {
+                    arbiter: Arc::clone(&shared.arbiter),
+                    registrations,
+                },
+            };
+            // A panicking session must not leak its admission slot
+            // (queued sessions would never admit and wait_idle would
+            // hang): catch the unwind, surface it as an error outcome,
+            // and fall through to the slot bookkeeping below.
+            let result = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                exec.run(&mut program)
+            })) {
+                Ok(result) => result,
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&'static str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "session execution panicked".to_string());
+                    Err(EclError::Runtime(format!("session panicked: {msg}")))
+                }
+            };
+            tx.send(SessionOutcome { session, label, deadline, program, result }).ok();
+
+            // This slot is free: admit the next queued session(s).
+            let ready = {
+                let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+                st.in_flight -= 1;
+                admit(&shared, &mut st)
+            };
+            for next in ready {
+                spawn_session(&shared, next);
+            }
+            shared.idle.notify_all();
+        })
+        .expect("spawn session thread");
+}
+
+// ---- the session execution core ---------------------------------------
+
+/// The lease context a session executes under: the shared arbiter plus
+/// one registration per selected device slot (made at admission, in
+/// admission order).
+pub(crate) struct SessionLeases {
+    pub arbiter: Arc<LeaseArbiter>,
+    pub registrations: Vec<DeviceRegistration>,
+}
+
+/// One session's execution plan — the code that used to be
+/// `Engine::run_inner`, parameterized by the lease context so engine
+/// (solo) and runtime (concurrent) sessions share every line of the
+/// validation, worker and master-loop machinery.
+pub(crate) struct SessionExec {
+    pub registry: ArtifactRegistry,
+    pub node: NodeConfig,
+    pub selected: Vec<DeviceSpec>,
+    pub scheduler: SchedulerKind,
+    pub pipeline_depth: Option<usize>,
+    pub config: Configurator,
+    pub gws: Option<usize>,
+    pub session: SessionId,
+    pub leases: SessionLeases,
+}
+
+impl SessionExec {
+    pub(crate) fn run(self, program: &mut Program) -> Result<RunReport, EclError> {
+        let SessionExec {
+            registry,
+            node,
+            selected,
+            scheduler,
+            pipeline_depth,
+            config,
+            gws,
+            session,
+            leases,
+        } = self;
+        let SessionLeases { arbiter, registrations } = leases;
+        debug_assert_eq!(registrations.len(), selected.len());
+
+        if selected.is_empty() {
+            return Err(EclError::NoDevices);
+        }
+        check_device_selection(&node, &selected)?;
+        let kernel = program.kernel_name().ok_or(EclError::NoProgram)?.to_string();
+        let bench = registry
+            .bench(&kernel)
+            .map_err(|_| EclError::UnknownKernel(kernel.clone()))?
+            .clone();
+
+        // ---- validation (the checks OpenCL leaves to the programmer) --
+        let gws = gws.unwrap_or(bench.n);
+        if gws > bench.n {
+            return Err(EclError::WorkSizeTooLarge { gws, n: bench.n });
+        }
+        if gws % bench.granule != 0 {
+            return Err(EclError::MisalignedWorkSize { gws, granule: bench.granule });
+        }
+        if program.inputs().len() != bench.inputs.len() {
+            return Err(EclError::InputArity {
+                expected: bench.inputs.len(),
+                got: program.inputs().len(),
+            });
+        }
+        if program.outputs().len() != bench.outputs.len() {
+            return Err(EclError::OutputArity {
+                expected: bench.outputs.len(),
+                got: program.outputs().len(),
+            });
+        }
+        for (spec, buf) in bench.inputs.iter().zip(program.inputs()) {
+            if buf.len() != spec.elems {
+                return Err(EclError::BufferSize {
+                    name: spec.name.clone(),
+                    expected: spec.elems,
+                    got: buf.len(),
+                });
+            }
+        }
+        for (spec, buf) in bench.outputs.iter().zip(program.outputs()) {
+            if buf.len() != spec.elems {
+                return Err(EclError::BufferSize {
+                    name: spec.name.clone(),
+                    expected: spec.elems,
+                    got: buf.len(),
+                });
+            }
+            // Validated *before* any buffer is moved into the arena: a
+            // failure here must not destroy outputs already taken.
+            if buf.host().as_f32().is_none() {
+                return Err(EclError::Runtime(format!(
+                    "output buffer '{}' must be f32",
+                    spec.name
+                )));
+            }
+            // The arena windows are item-addressed, so the manifest
+            // geometry must be internally consistent before we commit
+            // the program's buffers to it.
+            if spec.elems != bench.n * spec.elems_per_item {
+                return Err(EclError::Runtime(format!(
+                    "manifest output '{}' inconsistent: {} elems for {} items x {} per item",
+                    spec.name, spec.elems, bench.n, spec.elems_per_item
+                )));
+            }
+        }
+        if bench.granule == 0 || bench.n % bench.granule != 0 {
+            return Err(EclError::Runtime(format!(
+                "manifest geometry inconsistent: n={} granule={}",
+                bench.n, bench.granule
+            )));
+        }
+        validate_args(program.args(), &bench.scalars)?;
+        if let SchedulerKind::Static { props: Some(p), .. } = scheduler.base() {
+            if p.len() != selected.len() {
+                return Err(EclError::BadProportions {
+                    got: p.len(),
+                    devices: selected.len(),
+                });
+            }
+        }
+        // A fault plan naming a device slot outside the selection would
+        // silently never fire — the chaos run would "pass" without ever
+        // exercising recovery. Reject it up front.
+        if let Some(plan) = &config.fault_plan {
+            for spec in &plan.faults {
+                if spec.device >= selected.len() {
+                    return Err(EclError::Runtime(format!(
+                        "fault plan targets device slot {} but only {} device(s) are selected",
+                        spec.device,
+                        selected.len()
+                    )));
+                }
+            }
+        }
+        let depth = match pipeline_depth {
+            Some(d) => d,
+            None => scheduler.pipeline_depth(),
+        }
+        .max(1);
+        if depth > MAX_PIPELINE_DEPTH {
+            return Err(EclError::BadPipelineDepth { depth, max: MAX_PIPELINE_DEPTH });
+        }
+
+        // ---- zero-copy buffer setup ------------------------------------
+        // Inputs: one shared immutable view per program input (a single
+        // O(N) materialization; every worker shares the allocation).
+        let inputs: Vec<InputView> = input_views(program.inputs().iter().map(|b| b.host()))
+            .map_err(|e| EclError::Runtime(format!("{e:#}")))?;
+        // Outputs: move the program's buffers into the run's arena.
+        // Workers claim disjoint granule-aligned windows and write
+        // results in place; the buffers come back after the join. All
+        // outputs were already validated f32 above, so this loop is
+        // infallible — it can never abandon a half-taken program.
+        let mut arena_bufs: Vec<(Vec<f32>, usize)> = Vec::with_capacity(bench.outputs.len());
+        for (spec, out) in bench.outputs.iter().zip(program.outputs_mut()) {
+            let data = out
+                .host_mut()
+                .as_f32_mut()
+                .expect("outputs validated f32 above");
+            arena_bufs.push((std::mem::take(data), spec.elems_per_item));
+        }
+        let arena = Arc::new(
+            OutputArena::new(arena_bufs, bench.granule, bench.n)
+                .map_err(|e| EclError::Runtime(format!("{e:#}")))?,
+        );
+
+        // ---- spawn device workers -------------------------------------
+        let epoch = Instant::now();
+        let has_cpu = selected
+            .iter()
+            .any(|s| node.devices[s.index].kind == DeviceKind::Cpu);
+        let coexec = selected.len() > 1;
+
+        // Master parking handles: tokens collected before the
+        // registrations move into their workers.
+        let tokens: Vec<u64> = registrations.iter().map(|r| r.token()).collect();
+        let node_devs: Vec<usize> = selected.iter().map(|s| s.index).collect();
+
+        let (to_master_tx, from_workers) = channel::<FromWorker>();
+        let mut to_workers: Vec<Sender<ToWorker>> = Vec::new();
+        let mut handles = Vec::new();
+        let init_barrier = Arc::new(std::sync::Barrier::new(selected.len()));
+        for ((slot, spec), lease) in selected.iter().enumerate().zip(registrations) {
+            let profile = node.devices[spec.index].clone();
+            let contended = coexec
+                && has_cpu
+                && profile.kind == DeviceKind::Accelerator
+                && config.simulate_init;
+            let (tx, rx) = channel::<ToWorker>();
+            to_workers.push(tx);
+            let ctx = WorkerCtx {
+                dev: slot,
+                profile,
+                registry: registry.clone(),
+                bench: bench.clone(),
+                inputs: inputs.clone(),
+                arena: Arc::clone(&arena),
+                config: config.clone(),
+                epoch,
+                contended_init: contended,
+                init_barrier: Arc::clone(&init_barrier),
+                pipeline_depth: depth,
+                seed: (0x9E3779B9u64 ^ config.rng_seed)
+                    .wrapping_add((slot as u64).wrapping_mul(0x85EBCA77)),
+                injector: config
+                    .fault_plan
+                    .as_ref()
+                    .map(|p| p.injector_for(slot))
+                    .unwrap_or_default(),
+                lease,
+            };
+            handles.push(spawn_worker(ctx, to_master_tx.clone(), rx));
+        }
+        drop(to_master_tx);
+
+        // ---- master scheduling loop ------------------------------------
+        let sched_devices: Vec<SchedDevice> = selected
+            .iter()
+            .map(|s| {
+                let d = &node.devices[s.index];
+                SchedDevice { name: d.name.clone(), power: d.relative_power }
+            })
+            .collect();
+        let mut sched = scheduler.build();
+        sched.start(gws / bench.granule, bench.granule, &sched_devices);
+
+        let ndev = selected.len();
+        let mut device_traces: Vec<DeviceTrace> = selected
+            .iter()
+            .map(|s| {
+                let d = &node.devices[s.index];
+                DeviceTrace {
+                    name: d.name.clone(),
+                    kind: d.kind,
+                    init_start: Default::default(),
+                    init_end: Default::default(),
+                    packages: Vec::new(),
+                    xfer: Default::default(),
+                    lease_wait: Default::default(),
+                }
+            })
+            .collect();
+        // Assignments whose H2D staging has not been confirmed by an
+        // Uploaded event yet (pipelined devices only) are capped at 2:
+        // one staging, one queued behind it — back-pressure so a device
+        // with a slow bus is never flooded with un-staged ranges while
+        // an adaptive scheduler could still size them better elsewhere.
+        let staging_cap = if depth > 1 { 2 } else { usize::MAX };
+        let mut master = MasterState {
+            depth,
+            staging_cap,
+            granule: bench.granule,
+            fault_tolerant: config.fault_tolerant,
+            scheduler: sched,
+            to_workers,
+            pending: vec![VecDeque::new(); ndev],
+            unstaged: vec![0usize; ndev],
+            finish_sent: vec![false; ndev],
+            failed: vec![false; ndev],
+            dry: vec![false; ndev],
+            reclaimed: VecDeque::new(),
+            parker: MasterParker {
+                arbiter,
+                tokens,
+                node_devs,
+                parked: vec![false; ndev],
+            },
+        };
+        let mut reported = vec![false; ndev];
+        let mut finished = 0usize;
+        let mut failure: Option<EclError> = None;
+        let mut faults: Vec<FaultEvent> = Vec::new();
+
+        // How often the idle master sweeps for worker threads that died
+        // without reporting (panics are caught and converted to Failed
+        // events in the worker shell; the sweep catches *silent* exits —
+        // the chaos layer's "vanish" mode, a segfaulting driver).
+        const LIVENESS_POLL: Duration = Duration::from_millis(25);
+
+        while finished < ndev {
+            match from_workers.recv_timeout(LIVENESS_POLL) {
+                Ok(ev) => handle_event(
+                    ev,
+                    &mut master,
+                    arena.as_ref(),
+                    &mut device_traces,
+                    &mut reported,
+                    &mut finished,
+                    &mut faults,
+                    &mut failure,
+                    epoch,
+                ),
+                Err(err) => {
+                    // Idle, or the channel died. Sweep for workers that
+                    // exited without reporting. A disconnected channel
+                    // means no worker can ever report again, so every
+                    // unreported device is dead regardless of the (racy)
+                    // thread-finished flag. Order matters: snapshot the
+                    // exited-but-unreported workers *first*, then drain
+                    // the channel — a worker that finished cleanly in
+                    // the race window between the timeout and the
+                    // snapshot sent its Finished/Failed *before* its
+                    // thread exited, so the drain honors it; only what
+                    // is still unreported after the drain is a genuine
+                    // silent death.
+                    let disconnected = err == RecvTimeoutError::Disconnected;
+                    let dead: Vec<usize> = (0..ndev)
+                        .filter(|&d| !reported[d] && (disconnected || handles[d].is_finished()))
+                        .collect();
+                    while let Ok(ev) = from_workers.try_recv() {
+                        handle_event(
+                            ev,
+                            &mut master,
+                            arena.as_ref(),
+                            &mut device_traces,
+                            &mut reported,
+                            &mut finished,
+                            &mut faults,
+                            &mut failure,
+                            epoch,
+                        );
+                    }
+                    for dev in dead {
+                        if !reported[dev] {
+                            reported[dev] = true;
+                            finished += 1;
+                            register_failure(
+                                &mut master,
+                                arena.as_ref(),
+                                &device_traces,
+                                &mut faults,
+                                &mut failure,
+                                epoch,
+                                dev,
+                                "worker exited without reporting a result (dead channel)"
+                                    .to_string(),
+                            );
+                        }
+                    }
+                }
+            }
+            // Fault-tolerant mode defers Finish until every range is
+            // provably complete (see MasterState::finish_if_complete).
+            master.finish_if_complete();
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+
+        // ---- recover the arena: results are already in place -----------
+        // Every worker wrote its packages directly into disjoint arena
+        // windows, so "collecting results" is handing the allocations
+        // back to the program's containers — no merge, no copy. Done
+        // before the failure return so partial results survive a worker
+        // failure, matching the seed's semantics.
+        match Arc::try_unwrap(arena) {
+            Ok(arena) => {
+                for (buf, out) in arena.into_buffers().into_iter().zip(program.outputs_mut()) {
+                    out.store(HostBuf::F32(buf));
+                }
+            }
+            Err(_) => {
+                failure.get_or_insert(EclError::Runtime(
+                    "output arena still shared after worker join".into(),
+                ));
+            }
+        }
+        if let Some(e) = failure {
+            return Err(e);
+        }
+
+        // The label reflects the *effective* depth: a Tier-1
+        // pipeline(1) override on a "+pipe" spec ran blocking, and vice
+        // versa — harness pairings key off this suffix.
+        let mut scheduler_label = master.scheduler.name();
+        if depth > 1 && !scheduler_label.contains("+pipe") {
+            scheduler_label.push_str("+pipe");
+        } else if depth <= 1 && scheduler_label.ends_with("+pipe") {
+            let len = scheduler_label.len() - "+pipe".len();
+            scheduler_label.truncate(len);
+        }
+        Ok(RunReport {
+            bench: bench.name.clone(),
+            scheduler: scheduler_label,
+            session,
+            gws,
+            wall: epoch.elapsed(),
+            devices: device_traces,
+            faults,
+        })
+    }
+}
+
+/// The master's view of its session's lease participation: one token
+/// per device slot, parked while that slot provably has nothing to
+/// request (so the rotation never waits on a finished session).
+struct MasterParker {
+    arbiter: Arc<LeaseArbiter>,
+    tokens: Vec<u64>,
+    node_devs: Vec<usize>,
+    parked: Vec<bool>,
+}
+
+impl MasterParker {
+    fn set(&mut self, slot: usize, parked: bool) {
+        if self.parked[slot] != parked {
+            self.parked[slot] = parked;
+            self.arbiter.set_parked(self.node_devs[slot], self.tokens[slot], parked);
+        }
+    }
+}
+
+/// Recovery-aware assignment state for the master loop: per-device
+/// in-flight ranges (what recovery must reclaim when a device dies),
+/// staging back-pressure counters, and the shared queue of reclaimed
+/// ranges that survivors drain before asking the scheduler.
+struct MasterState {
+    depth: usize,
+    staging_cap: usize,
+    granule: usize,
+    fault_tolerant: bool,
+    scheduler: Box<dyn Scheduler>,
+    to_workers: Vec<Sender<ToWorker>>,
+    /// Ranges assigned but not yet reported `Done`, per device, in
+    /// execution (assignment) order.
+    pending: Vec<VecDeque<Range>>,
+    unstaged: Vec<usize>,
+    finish_sent: Vec<bool>,
+    failed: Vec<bool>,
+    /// The scheduler returned `None` for this device (terminal, per the
+    /// trait contract).
+    dry: Vec<bool>,
+    /// Reclaimed ranges awaiting requeue.
+    reclaimed: VecDeque<Range>,
+    parker: MasterParker,
+}
+
+/// What `MasterState::handle_failure` did, for the fault event record.
+struct FailureOutcome {
+    reclaimed_items: usize,
+    revoked_claims: usize,
+    recovered: bool,
+}
+
+impl MasterState {
+    fn ndev(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn next_scheduler_range(&mut self, dev: usize) -> Option<Range> {
+        if self.dry[dev] {
+            return None;
+        }
+        let r = self.scheduler.next_package(dev);
+        if r.is_none() {
+            self.dry[dev] = true;
+        }
+        r
+    }
+
+    /// The next range for `dev`: reclaimed (requeued) work first, then
+    /// the scheduler. Returns the range plus its requeued flag.
+    fn next_range(&mut self, dev: usize) -> Option<(Range, bool)> {
+        if let Some(r) = self.reclaimed.pop_front() {
+            return Some((r, true));
+        }
+        self.next_scheduler_range(dev).map(|r| (r, false))
+    }
+
+    /// Top device `dev`'s pipeline up to `depth` packages (and at most
+    /// `staging_cap` unconfirmed stagings). The first message batches
+    /// two ranges (range + lookahead) so a pipelined worker starts
+    /// one-ahead off a single round-trip.
+    fn top_up(&mut self, dev: usize) {
+        if self.finish_sent[dev] || self.failed[dev] {
+            return;
+        }
+        while self.pending[dev].len() < self.depth && self.unstaged[dev] < self.staging_cap {
+            let Some((range, requeued)) = self.next_range(dev) else {
+                // Legacy abort-on-failure mode finishes a device the
+                // moment it runs dry (blocking workers only when idle;
+                // pipelined workers drain their local queue). The
+                // fault-tolerant loop instead defers Finish to
+                // `finish_if_complete`: a later failure may still
+                // requeue work onto this device.
+                if !self.fault_tolerant && (self.pending[dev].is_empty() || self.depth > 1) {
+                    self.to_workers[dev].send(ToWorker::Finish).ok();
+                    self.finish_sent[dev] = true;
+                }
+                break;
+            };
+            // Un-park strictly before the Assign travels: the arbiter
+            // must consider this slot active by the time its worker
+            // requests the device lease for the new package.
+            self.parker.set(dev, false);
+            self.pending[dev].push_back(range);
+            if self.depth > 1 {
+                self.unstaged[dev] += 1;
+            }
+            let lookahead = if self.depth > 1
+                && self.pending[dev].len() < self.depth
+                && self.unstaged[dev] < self.staging_cap
+                && self.reclaimed.is_empty()
+            {
+                let next = self.next_scheduler_range(dev);
+                if let Some(n) = next {
+                    self.pending[dev].push_back(n);
+                    self.unstaged[dev] += 1;
+                }
+                next
+            } else {
+                None
+            };
+            self.to_workers[dev]
+                .send(ToWorker::Assign(Assignment { range, lookahead, requeued }))
+                .ok();
+        }
+        // Park the slot once it provably has nothing left to request:
+        // scheduler dry, nothing in flight, nothing reclaimed pending.
+        // A later failure that requeues work un-parks it (above).
+        let idle =
+            self.dry[dev] && self.pending[dev].is_empty() && self.reclaimed.is_empty();
+        self.parker.set(dev, idle);
+    }
+
+    /// All work provably done: nothing reclaimed waits, nothing is in
+    /// flight, and the scheduler is dry for every live device. Only
+    /// then can no future failure surface new work (dead devices have
+    /// nothing pending), so Finish is safe to broadcast.
+    fn complete(&self) -> bool {
+        self.reclaimed.is_empty()
+            && self.pending.iter().all(|q| q.is_empty())
+            && (0..self.ndev()).all(|d| self.failed[d] || self.dry[d])
+    }
+
+    /// Fault-tolerant finish: broadcast Finish to every live device
+    /// once the run is complete. No-op in legacy mode (per-device
+    /// Finish already happened in `top_up`).
+    fn finish_if_complete(&mut self) {
+        if !self.fault_tolerant || !self.complete() {
+            return;
+        }
+        for dev in 0..self.ndev() {
+            if !self.failed[dev] && !self.finish_sent[dev] {
+                self.to_workers[dev].send(ToWorker::Finish).ok();
+                self.finish_sent[dev] = true;
+            }
+        }
+    }
+
+    /// Device `dev`'s worker died. Reclaim its unfinished assignments
+    /// plus any scheduler reservation, revoke their arena claims, and
+    /// requeue the ranges — each split so every survivor can pull a
+    /// piece (a Static share would otherwise land whole on a single
+    /// survivor). Legacy mode reclaims nothing (abort semantics). The
+    /// dead worker's lease and rotation entry release themselves (RAII
+    /// registration drop on thread exit).
+    fn handle_failure(&mut self, dev: usize, arena: &OutputArena) -> FailureOutcome {
+        self.failed[dev] = true;
+        let mut ranges: Vec<Range> = self.pending[dev].drain(..).collect();
+        ranges.extend(self.scheduler.reclaim_device(dev));
+        let reclaimed_items: usize = ranges.iter().map(Range::len).sum();
+        if !self.fault_tolerant {
+            return FailureOutcome { reclaimed_items, revoked_claims: 0, recovered: false };
+        }
+        let survivors = (0..self.ndev())
+            .filter(|&d| !self.failed[d] && !self.finish_sent[d])
+            .count();
+        let recovered = reclaimed_items == 0 || survivors > 0;
+        let mut revoked_claims = 0usize;
+        for r in &ranges {
+            // SAFETY: the failed worker has exited (liveness sweep) or
+            // reported failure after dropping its windows on the error
+            // path, so no live window covers any of these ranges.
+            if unsafe { arena.revoke(r.begin, r.end) } {
+                revoked_claims += 1;
+            }
+            if survivors > 0 {
+                for piece in split_range(r.begin, r.end, survivors, self.granule) {
+                    self.reclaimed.push_back(piece);
+                }
+            }
+        }
+        if !self.reclaimed.is_empty() {
+            for d in 0..self.ndev() {
+                if !self.failed[d] {
+                    self.top_up(d);
+                }
+            }
+        }
+        FailureOutcome { reclaimed_items, revoked_claims, recovered }
+    }
+}
+
+/// Fold one worker event into the master loop's state. Called from the
+/// blocking receive and from the liveness sweep's channel drain (which
+/// must process every already-sent event before declaring an exited
+/// worker silently dead).
+#[allow(clippy::too_many_arguments)]
+fn handle_event(
+    ev: FromWorker,
+    master: &mut MasterState,
+    arena: &OutputArena,
+    device_traces: &mut [DeviceTrace],
+    reported: &mut [bool],
+    finished: &mut usize,
+    faults: &mut Vec<FaultEvent>,
+    failure: &mut Option<EclError>,
+    epoch: Instant,
+) {
+    match ev {
+        FromWorker::Ready { dev, init_start, init_end } => {
+            device_traces[dev].init_start = init_start;
+            device_traces[dev].init_end = init_end;
+            master.top_up(dev);
+        }
+        FromWorker::Uploaded { dev } => {
+            // A prefetch landed on the device: release its staging slot
+            // and keep the pipe full.
+            master.unstaged[dev] = master.unstaged[dev].saturating_sub(1);
+            master.top_up(dev);
+        }
+        FromWorker::Done { dev } => {
+            // Workers execute in assignment order, so the front pending
+            // range is the completed one; its results are fully in the
+            // arena by the time Done is sent.
+            master.pending[dev].pop_front();
+            master.top_up(dev);
+        }
+        FromWorker::Finished { dev, traces, xfer, lease_wait } => {
+            device_traces[dev].packages = traces;
+            device_traces[dev].xfer = xfer;
+            device_traces[dev].lease_wait = lease_wait;
+            if !reported[dev] {
+                reported[dev] = true;
+                *finished += 1;
+            }
+        }
+        FromWorker::Failed { dev, message, traces, xfer, lease_wait } => {
+            // The packages the worker *completed* stay attributed to it
+            // — their results are already in the arena.
+            device_traces[dev].packages = traces;
+            device_traces[dev].xfer = xfer;
+            device_traces[dev].lease_wait = lease_wait;
+            if !reported[dev] {
+                reported[dev] = true;
+                *finished += 1;
+                register_failure(
+                    master,
+                    arena,
+                    device_traces,
+                    faults,
+                    failure,
+                    epoch,
+                    dev,
+                    message,
+                );
+            }
+        }
+    }
+}
+
+/// Fold one worker failure into the master state: reclaim + requeue (or
+/// record the abort), and append the introspector's fault event.
+#[allow(clippy::too_many_arguments)]
+fn register_failure(
+    master: &mut MasterState,
+    arena: &OutputArena,
+    device_traces: &[DeviceTrace],
+    faults: &mut Vec<FaultEvent>,
+    failure: &mut Option<EclError>,
+    epoch: Instant,
+    dev: usize,
+    message: String,
+) {
+    let outcome = master.handle_failure(dev, arena);
+    if !outcome.recovered {
+        failure.get_or_insert(EclError::Worker {
+            device: device_traces[dev].name.clone(),
+            message: message.clone(),
+        });
+    }
+    faults.push(FaultEvent {
+        device: dev,
+        device_name: device_traces[dev].name.clone(),
+        message,
+        at: epoch.elapsed(),
+        reclaimed_items: outcome.reclaimed_items,
+        revoked_claims: outcome.revoked_claims,
+        recovered: outcome.recovered,
+    });
+}
+
+/// The single formatting of the out-of-range device-selection error,
+/// shared by every validation site: the engine wrapper and the
+/// admission path (which must check *before* registering with the
+/// arbiter — registration indexes the device table) and the session
+/// core (defensive).
+pub(crate) fn check_device_selection(
+    node: &NodeConfig,
+    selected: &[DeviceSpec],
+) -> Result<(), EclError> {
+    match selected.iter().find(|s| s.index >= node.devices.len()) {
+        Some(bad) => Err(EclError::Runtime(format!(
+            "device index {} out of range: node '{}' has {} device(s)",
+            bad.index,
+            node.name,
+            node.devices.len()
+        ))),
+        None => Ok(()),
+    }
+}
+
+/// Validate recorded scalar args against the baked manifest scalars.
+pub(crate) fn validate_args(
+    args: &BTreeMap<usize, Arg>,
+    scalars: &BTreeMap<String, f64>,
+) -> Result<(), EclError> {
+    let baked: Vec<(&String, &f64)> = scalars.iter().collect();
+    let mut scalar_idx = 0usize;
+    for (index, arg) in args {
+        if let Arg::Scalar(v) = arg {
+            // Scalars must match some baked value (AOT kernels cannot take
+            // new scalar values at run time — the paper's JIT could).
+            let matched = baked.iter().any(|(_, bv)| (*bv - v).abs() < 1e-9);
+            if !matched {
+                let (name, expected) = baked
+                    .get(scalar_idx.min(baked.len().saturating_sub(1)))
+                    .map(|(n, v)| ((*n).clone(), **v))
+                    .unwrap_or(("<none>".into(), f64::NAN));
+                return Err(EclError::ArgMismatch { index: *index, name, expected, got: *v });
+            }
+            scalar_idx += 1;
+        }
+    }
+    if scalar_idx > scalars.len() {
+        return Err(EclError::UnknownArg { index: scalar_idx });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_args_accepts_baked_values() {
+        let mut scalars = BTreeMap::new();
+        scalars.insert("steps".to_string(), 254.0);
+        scalars.insert("dt".to_string(), 0.005);
+        let mut args = BTreeMap::new();
+        args.insert(0, Arg::Scalar(254.0));
+        args.insert(1, Arg::BufferRef);
+        args.insert(2, Arg::LocalAlloc(1024));
+        assert!(validate_args(&args, &scalars).is_ok());
+    }
+
+    #[test]
+    fn validate_args_rejects_unbaked_scalar() {
+        let mut scalars = BTreeMap::new();
+        scalars.insert("steps".to_string(), 254.0);
+        let mut args = BTreeMap::new();
+        args.insert(0, Arg::Scalar(100.0));
+        let err = validate_args(&args, &scalars).unwrap_err();
+        assert!(matches!(err, EclError::ArgMismatch { .. }));
+    }
+
+    fn session_for(reg: &ArtifactRegistry, bench: &str) -> RunSession {
+        let program =
+            crate::harness::runs::build_program(reg, bench).expect("build test program");
+        RunSession::new(program).configure(|c| {
+            c.simulate_init = false;
+            c.simulate_speed = false;
+        })
+    }
+
+    #[test]
+    fn builder_defaults_and_chaining() {
+        let s = RunSession::new(Program::new())
+            .scheduler(SchedulerKind::hguided())
+            .pipeline(2)
+            .gws(512)
+            .deadline(Duration::from_millis(100))
+            .label("smoke");
+        assert!(s.devices.is_empty(), "empty selection = whole node");
+        assert_eq!(s.pipeline_depth, Some(2));
+        assert_eq!(s.gws, Some(512));
+        assert_eq!(s.deadline, Some(Duration::from_millis(100)));
+        assert_eq!(s.label, "smoke");
+    }
+
+    #[test]
+    fn single_session_through_runtime_completes() {
+        let reg = ArtifactRegistry::synthetic();
+        let rt = Runtime::new(reg.clone(), NodeConfig::batel());
+        let handle = rt.submit(
+            session_for(&reg, "binomial")
+                .scheduler(SchedulerKind::dynamic(8))
+                .label("solo"),
+        );
+        assert_eq!(handle.label(), "solo");
+        let outcome = handle.wait();
+        let report = outcome.result.as_ref().expect("session completes");
+        assert_eq!(report.session, outcome.session);
+        let items: usize = report.devices.iter().map(|d| d.items()).sum();
+        assert_eq!(items, report.gws, "all work computed exactly once");
+        assert!(outcome.output(0).is_some());
+        rt.wait_idle();
+        // Every registration retired with its worker.
+        for d in 0..rt.node().devices.len() {
+            assert!(rt.arbiter().registered_sessions(d).is_empty());
+            assert_eq!(rt.arbiter().holder(d), None);
+        }
+        assert!(!rt.lease_journal().is_empty(), "grants were journaled");
+    }
+
+    #[test]
+    fn bad_device_index_is_an_error_outcome_not_a_panic() {
+        let reg = ArtifactRegistry::synthetic();
+        let rt = Runtime::new(reg.clone(), NodeConfig::batel());
+        let handle = rt.submit(
+            session_for(&reg, "binomial").devices(vec![DeviceSpec::new(17)]),
+        );
+        let outcome = handle.wait();
+        let err = outcome.result.expect_err("out-of-range device must fail");
+        assert!(err.to_string().contains("device index 17"), "{err}");
+        rt.wait_idle();
+    }
+
+    #[test]
+    fn met_deadline_accounting() {
+        let ok = SessionOutcome {
+            session: 0,
+            label: "x".into(),
+            deadline: Some(Duration::from_secs(3600)),
+            program: Program::new(),
+            result: Err(EclError::NoProgram),
+        };
+        assert_eq!(ok.met_deadline(), Some(false), "failed run misses its deadline");
+        let none = SessionOutcome {
+            session: 0,
+            label: "x".into(),
+            deadline: None,
+            program: Program::new(),
+            result: Err(EclError::NoProgram),
+        };
+        assert_eq!(none.met_deadline(), None);
+    }
+}

@@ -1,0 +1,256 @@
+//! Concurrent-session harness (the CLI's `--concurrent N` mode): run
+//! every session solo for a baseline, then submit the whole batch to
+//! one [`Runtime`] and report per-session makespans, lease-wait bills,
+//! aggregate throughput and the speedup over running the sessions
+//! back-to-back. Each concurrent session's outputs are checked
+//! bit-identical to its solo run — co-execution must never change
+//! results, only timing.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::lease::LeasePolicy;
+use crate::coordinator::runtime::{RunSession, Runtime, SessionOutcome};
+use crate::coordinator::{Configurator, SchedulerKind};
+use crate::harness::runs::build_program;
+use crate::platform::NodeConfig;
+use crate::runtime::ArtifactRegistry;
+
+/// One session of a concurrent batch.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    pub bench: String,
+    pub scheduler: SchedulerKind,
+    pub gws: Option<usize>,
+}
+
+/// Per-session measurement: solo vs concurrent.
+#[derive(Debug, Clone)]
+pub struct SessionStat {
+    pub label: String,
+    pub bench: String,
+    pub scheduler: String,
+    /// Simclock makespan of the session run alone on the full node.
+    pub solo: Duration,
+    /// Simclock makespan of the same session inside the batch.
+    pub concurrent: Duration,
+    /// Time the session's workers spent waiting for device leases (the
+    /// devices serving the other sessions).
+    pub lease_wait: Duration,
+    pub items: usize,
+    pub packages: usize,
+    /// Concurrent outputs were bit-identical to the solo outputs.
+    pub outputs_match: bool,
+}
+
+/// Outcome of one `--concurrent` measurement.
+#[derive(Debug, Clone)]
+pub struct ConcurrentReport {
+    pub sessions: Vec<SessionStat>,
+    /// Wall time from batch submission to the last session outcome.
+    pub batch_wall: Duration,
+    /// Sum of the solo makespans — the serial (one-at-a-time) baseline.
+    pub solo_sum: Duration,
+}
+
+impl ConcurrentReport {
+    /// How much faster the batch finished than running its sessions
+    /// back-to-back (solo-sum / batch-wall; > 1 means the sessions
+    /// genuinely co-executed across the device set).
+    pub fn speedup_vs_serial(&self) -> f64 {
+        let batch = self.batch_wall.as_secs_f64();
+        if batch > 0.0 {
+            self.solo_sum.as_secs_f64() / batch
+        } else {
+            0.0
+        }
+    }
+
+    /// Aggregate batch throughput in work-items per second.
+    pub fn throughput_items_per_sec(&self) -> f64 {
+        let batch = self.batch_wall.as_secs_f64();
+        let items: usize = self.sessions.iter().map(|s| s.items).sum();
+        if batch > 0.0 {
+            items as f64 / batch
+        } else {
+            0.0
+        }
+    }
+
+    /// Every session's concurrent outputs matched its solo outputs.
+    pub fn all_outputs_match(&self) -> bool {
+        self.sessions.iter().all(|s| s.outputs_match)
+    }
+}
+
+/// The measurement configuration: simulated device speeds ON (the
+/// makespans under comparison are simclock makespans) but init sleeps
+/// OFF (a constant per session that would pad both sides equally).
+pub fn measure_config() -> Configurator {
+    Configurator { simulate_init: false, ..Default::default() }
+}
+
+/// The jitter seed for spec `index`, set explicitly on *both* the solo
+/// baseline and the batch session so the two runs under comparison draw
+/// identical timing streams (nonzero: 0 is the "unset" sentinel the
+/// runtime would override per-session).
+fn session_seed(seed: u64, index: usize) -> u64 {
+    (seed ^ (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)).max(1)
+}
+
+fn session_for(
+    reg: &ArtifactRegistry,
+    spec: &SessionSpec,
+    label: &str,
+    config: &Configurator,
+    rng_seed: u64,
+) -> Result<RunSession> {
+    let mut s = RunSession::new(build_program(reg, &spec.bench)?)
+        .scheduler(spec.scheduler.clone())
+        .label(label)
+        .config(Configurator { rng_seed, ..config.clone() });
+    if let Some(g) = spec.gws {
+        s = s.gws(g);
+    }
+    Ok(s)
+}
+
+/// Measure `specs` solo and as one concurrent batch on `node`.
+pub fn run_concurrent(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    specs: &[SessionSpec],
+    policy: LeasePolicy,
+    seed: u64,
+    config: Configurator,
+) -> Result<ConcurrentReport> {
+    anyhow::ensure!(!specs.is_empty(), "need at least one session spec");
+
+    // Solo baselines: each session alone on a fresh runtime with the
+    // same policy and the same per-spec jitter seed the batch run will
+    // use, so the only variable in the comparison is the presence of
+    // the other sessions.
+    let mut solo_walls: Vec<Duration> = Vec::with_capacity(specs.len());
+    let mut solo_outputs: Vec<Vec<Vec<f32>>> = Vec::with_capacity(specs.len());
+    for (i, spec) in specs.iter().enumerate() {
+        let rt = Runtime::configured(reg.clone(), node.clone(), policy, usize::MAX, seed);
+        let outcome = rt
+            .submit(session_for(reg, spec, &format!("solo-{i}"), &config, session_seed(seed, i))?)
+            .wait();
+        let report = outcome
+            .result
+            .as_ref()
+            .map_err(|e| anyhow::anyhow!("solo run of '{}' failed: {e}", spec.bench))?;
+        solo_walls.push(report.wall);
+        let nouts = outcome.program.outputs().len();
+        solo_outputs
+            .push((0..nouts).map(|j| outcome.output(j).unwrap().to_vec()).collect());
+        rt.wait_idle();
+    }
+
+    // The concurrent batch: one submit_all so admission (and the lease
+    // rotation order) is the spec order.
+    let rt = Runtime::configured(reg.clone(), node.clone(), policy, usize::MAX, seed);
+    let sessions: Vec<RunSession> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            session_for(reg, s, &format!("{}-{i}", s.bench), &config, session_seed(seed, i))
+        })
+        .collect::<Result<_>>()?;
+    let started = Instant::now();
+    let handles = rt.submit_all(sessions);
+    // Drain every outcome before doing any O(N) output comparison: the
+    // batch makespan must measure submit -> last session completion,
+    // not the bookkeeping between waits (the solo side, report.wall,
+    // carries no such padding either).
+    let outcomes: Vec<(String, SessionOutcome)> = handles
+        .into_iter()
+        .map(|h| {
+            let label = h.label().to_string();
+            (label, h.wait())
+        })
+        .collect();
+    let batch_wall = started.elapsed();
+    rt.wait_idle();
+
+    let mut stats = Vec::with_capacity(specs.len());
+    for (((label, outcome), spec), (solo, want)) in outcomes
+        .into_iter()
+        .zip(specs)
+        .zip(solo_walls.iter().zip(&solo_outputs))
+    {
+        let report = outcome
+            .result
+            .as_ref()
+            .map_err(|e| anyhow::anyhow!("concurrent session '{label}' failed: {e}"))?;
+        let outputs_match = (0..want.len()).all(|j| {
+            outcome.output(j).map(|o| o == want[j].as_slice()).unwrap_or(false)
+        });
+        stats.push(SessionStat {
+            label,
+            bench: spec.bench.clone(),
+            scheduler: report.scheduler.clone(),
+            solo: *solo,
+            concurrent: report.wall,
+            lease_wait: report.lease_wait_total(),
+            items: report.gws,
+            packages: report.total_packages(),
+            outputs_match,
+        });
+    }
+
+    Ok(ConcurrentReport {
+        sessions: stats,
+        batch_wall,
+        solo_sum: solo_walls.iter().sum(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fast-sim smoke: two sessions, correctness bookkeeping only (the
+    /// makespan acceptance lives in the concurrency battery with the
+    /// full simclock on).
+    #[test]
+    fn concurrent_harness_checks_outputs() {
+        let reg = ArtifactRegistry::discover().expect("registry");
+        let specs = vec![
+            SessionSpec {
+                bench: "binomial".into(),
+                scheduler: SchedulerKind::dynamic(6),
+                gws: None,
+            },
+            SessionSpec {
+                bench: "gaussian".into(),
+                scheduler: SchedulerKind::hguided(),
+                gws: None,
+            },
+        ];
+        let config = Configurator {
+            simulate_init: false,
+            simulate_speed: false,
+            ..Default::default()
+        };
+        let report = run_concurrent(
+            &reg,
+            &NodeConfig::batel(),
+            &specs,
+            LeasePolicy::Rotation,
+            11,
+            config,
+        )
+        .expect("harness completes");
+        assert_eq!(report.sessions.len(), 2);
+        assert!(report.all_outputs_match(), "co-execution changed results");
+        assert!(report.batch_wall > Duration::ZERO);
+        assert!(report.solo_sum > Duration::ZERO);
+        assert!(report.throughput_items_per_sec() > 0.0);
+        for s in &report.sessions {
+            assert!(s.items > 0 && s.packages > 0);
+        }
+    }
+}

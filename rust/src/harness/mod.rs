@@ -1,6 +1,7 @@
 //! Experiment harness — one runner per paper table/figure (DESIGN.md §6).
 
 pub mod balance;
+pub mod concurrent;
 pub mod init;
 pub mod overhead;
 pub mod perf;

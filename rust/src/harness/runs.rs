@@ -26,23 +26,10 @@ pub fn paper_benches() -> Vec<&'static str> {
     vec!["gaussian", "ray1", "ray2", "ray3", "binomial", "mandelbrot", "nbody"]
 }
 
-/// Build a ready-to-run engine for `bench` on `node` with golden inputs.
-pub fn build_engine(
-    reg: &ArtifactRegistry,
-    node: &NodeConfig,
-    bench: &str,
-    devices: Vec<DeviceSpec>,
-    scheduler: SchedulerKind,
-    gws: Option<usize>,
-) -> Result<Engine> {
+/// Build a golden-input program for `bench` — the standard wiring every
+/// harness run (engine or runtime session) starts from.
+pub fn build_program(reg: &ArtifactRegistry, bench: &str) -> Result<Program> {
     let manifest = reg.bench(bench)?.clone();
-    let mut engine = Engine::with_registry(reg.clone());
-    engine.node(node.clone());
-    engine.use_devices(devices);
-    engine.scheduler(scheduler);
-    if let Some(g) = gws {
-        engine.global_work_items(g);
-    }
     let mut program = Program::new();
     program.kernel(bench, &manifest.kernel);
     for buf in reg.golden_inputs(&manifest)? {
@@ -53,7 +40,26 @@ pub fn build_engine(
     }
     let (num, den) = manifest.out_pattern;
     program.out_pattern(num, den);
-    engine.program(program);
+    Ok(program)
+}
+
+/// Build a ready-to-run engine for `bench` on `node` with golden inputs.
+pub fn build_engine(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    bench: &str,
+    devices: Vec<DeviceSpec>,
+    scheduler: SchedulerKind,
+    gws: Option<usize>,
+) -> Result<Engine> {
+    let mut engine = Engine::with_registry(reg.clone());
+    engine.node(node.clone());
+    engine.use_devices(devices);
+    engine.scheduler(scheduler);
+    if let Some(g) = gws {
+        engine.global_work_items(g);
+    }
+    engine.program(build_program(reg, bench)?);
     Ok(engine)
 }
 
@@ -164,6 +170,7 @@ mod tests {
         RunReport {
             bench: "b".into(),
             scheduler: "s".into(),
+            session: 0,
             gws: 100,
             wall: ms(*completions.iter().max().unwrap()),
             devices: completions
@@ -190,6 +197,7 @@ mod tests {
                         requeued: false,
                     }],
                     xfer: Default::default(),
+                    lease_wait: Default::default(),
                 })
                 .collect(),
             faults: Vec::new(),

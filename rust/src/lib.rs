@@ -17,6 +17,9 @@
 //!   pluggable schedulers (Static / Dynamic / HGuided), a composable
 //!   package **pipeline** (`Engine::pipeline(depth)` / the `+pipe`
 //!   scheduler suffix) that overlaps host↔device transfers with compute,
+//!   a persistent **runtime** ([`Runtime`](coordinator::Runtime)) that
+//!   admits concurrent [`RunSession`](coordinator::RunSession)s and
+//!   co-executes them across the device set under whole-device leases,
 //!   and the Introspector.
 //!
 //! Python never runs on the request path: `make artifacts` produces
@@ -63,8 +66,9 @@ pub mod util;
 /// Everything a typical program needs.
 pub mod prelude {
     pub use crate::coordinator::{
-        Buffer, Configurator, DeviceMask, DeviceSpec, EclError, Engine, FaultEvent, Program,
-        RunReport, SchedulerKind,
+        Buffer, Configurator, DeviceMask, DeviceSpec, EclError, Engine, FaultEvent,
+        LeasePolicy, Program, RunReport, RunSession, Runtime, SchedulerKind, SessionHandle,
+        SessionOutcome,
     };
     pub use crate::platform::{DeviceKind, DeviceProfile, FaultKind, FaultPlan, NodeConfig};
     pub use crate::runtime::{ArtifactRegistry, HostBuf};

@@ -3,8 +3,8 @@
 
 use anyhow::Result;
 
-use enginecl::coordinator::{scheduler, DeviceSpec};
-use enginecl::harness::{balance, init, overhead, perf, runs, traces};
+use enginecl::coordinator::{scheduler, DeviceSpec, LeasePolicy};
+use enginecl::harness::{balance, concurrent, init, overhead, perf, runs, traces};
 use enginecl::platform::{FaultPlan, NodeConfig};
 use enginecl::runtime::ArtifactRegistry;
 use enginecl::util::cli::Args;
@@ -28,6 +28,13 @@ USAGE:
                          vanish:dev1@pkg0 — comma-separate several.
                          Survivors requeue a dead device's work unless
                          --no-recovery restores abort-on-failure)
+                        [--concurrent N] submits N sessions to one
+                         persistent runtime and reports per-session
+                         makespans vs solo plus aggregate throughput.
+                         [--benches b1,b2] cycles benches across the N
+                         sessions; [--lease rotation|fifo] picks the
+                         device-lease policy; [--seed S] pins the
+                         simclock seed.
   enginecl solo <bench> [--node N]         per-device solo times + S_max
   enginecl overhead <bench> [--device I] [--reps N]
   enginecl eval [--node N] [--reps N]      balance/speedup/efficiency grid
@@ -118,6 +125,27 @@ fn parse_devices(spec: &str, node: &NodeConfig) -> Vec<DeviceSpec> {
 }
 
 fn run(args: &Args) -> Result<()> {
+    if let Some(raw) = args.get("concurrent") {
+        let n: usize = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --concurrent '{raw}' (want a session count)"))?;
+        anyhow::ensure!(n >= 1, "--concurrent needs at least 1 session, got {n}");
+        // Options that would silently change the experiment are rejected
+        // rather than ignored: concurrent sessions always span the whole
+        // node and run fault-free.
+        for unsupported in ["devices", "fault"] {
+            anyhow::ensure!(
+                args.get(unsupported).is_none(),
+                "--{unsupported} is not supported with --concurrent \
+                 (sessions span the whole node, fault-free)"
+            );
+        }
+        anyhow::ensure!(
+            !args.has_flag("no-recovery"),
+            "--no-recovery is not supported with --concurrent"
+        );
+        return concurrent_cmd(args, n);
+    }
     let bench = args.positional.get(1).map(String::as_str).unwrap_or("binomial");
     let node = node_from(args);
     let reg = ArtifactRegistry::discover()?;
@@ -180,6 +208,77 @@ fn run(args: &Args) -> Result<()> {
     }
     if args.has_flag("csv") {
         print!("{}", report.package_csv());
+    }
+    Ok(())
+}
+
+/// `run ... --concurrent N`: N sessions through one persistent runtime.
+fn concurrent_cmd(args: &Args, n: usize) -> Result<()> {
+    let node = node_from(args);
+    let reg = ArtifactRegistry::discover()?;
+    let kind = scheduler::parse_kind(args.get("scheduler").unwrap_or("hguided"))
+        .ok_or_else(|| anyhow::anyhow!("bad --scheduler"))?;
+    let gws = args.get("gws").and_then(|s| s.parse().ok());
+    let default_bench = args.positional.get(1).map(String::as_str).unwrap_or("binomial");
+    let benches: Vec<String> = match args.get("benches") {
+        Some(csv) => csv
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect(),
+        None => vec![default_bench.to_string()],
+    };
+    anyhow::ensure!(!benches.is_empty(), "--benches must name at least one bench");
+    let specs: Vec<concurrent::SessionSpec> = (0..n)
+        .map(|i| concurrent::SessionSpec {
+            bench: benches[i % benches.len()].clone(),
+            scheduler: kind.clone(),
+            gws,
+        })
+        .collect();
+    let policy = match args.get("lease").unwrap_or("rotation") {
+        "fifo" => LeasePolicy::Fifo,
+        _ => LeasePolicy::Rotation,
+    };
+    let seed = args.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let report = concurrent::run_concurrent(
+        &reg,
+        &node,
+        &specs,
+        policy,
+        seed,
+        concurrent::measure_config(),
+    )?;
+    println!(
+        "concurrent sessions={} node={} lease={policy:?} seed={seed}",
+        specs.len(),
+        node.name
+    );
+    println!(
+        "{:<16} {:<14} {:>10} {:>11} {:>13} {:>6} {:>4}",
+        "session", "scheduler", "solo(ms)", "coexec(ms)", "lease-wait(ms)", "pkgs", "ok"
+    );
+    for s in &report.sessions {
+        println!(
+            "{:<16} {:<14} {:>10.1} {:>11.1} {:>13.1} {:>6} {:>4}",
+            s.label,
+            s.scheduler,
+            s.solo.as_secs_f64() * 1e3,
+            s.concurrent.as_secs_f64() * 1e3,
+            s.lease_wait.as_secs_f64() * 1e3,
+            s.packages,
+            if s.outputs_match { "yes" } else { "NO" }
+        );
+    }
+    println!(
+        "batch makespan {:.1} ms vs serial sum {:.1} ms — speedup {:.2}x, {:.0} items/s",
+        report.batch_wall.as_secs_f64() * 1e3,
+        report.solo_sum.as_secs_f64() * 1e3,
+        report.speedup_vs_serial(),
+        report.throughput_items_per_sec()
+    );
+    if !report.all_outputs_match() {
+        anyhow::bail!("concurrent outputs diverged from solo outputs");
     }
     Ok(())
 }

@@ -7,8 +7,10 @@
 //! drive, and [`assert_exactly_once`] is the arena-ledger oracle: the
 //! traced packages of a run must tile `[0, gws)` exactly.
 
+use crate::coordinator::lease::LeasePolicy;
+use crate::coordinator::runtime::{RunSession, Runtime};
 use crate::coordinator::{DeviceSpec, Engine, RunReport, SchedulerKind};
-use crate::harness::runs::build_engine;
+use crate::harness::runs::{build_engine, build_program};
 use crate::platform::fault::FaultPlan;
 use crate::platform::NodeConfig;
 use crate::runtime::ArtifactRegistry;
@@ -49,6 +51,47 @@ pub fn chaos_engine(
     engine.configurator().simulate_speed = false;
     engine.configurator().fault_plan = plan;
     engine
+}
+
+/// The runtime-session twin of [`chaos_engine`]: a fast-sim
+/// [`RunSession`] over `bench`'s golden inputs on the first `ndev`
+/// batel devices, with an optional fault plan installed.
+pub fn chaos_session(
+    reg: &ArtifactRegistry,
+    bench: &str,
+    ndev: usize,
+    kind: SchedulerKind,
+    plan: Option<FaultPlan>,
+) -> RunSession {
+    let program = build_program(reg, bench).expect("build chaos program");
+    let label = format!("{bench}/{}", kind.label());
+    RunSession::new(program)
+        .devices((0..ndev).map(DeviceSpec::new).collect())
+        .scheduler(kind)
+        .label(&label)
+        .configure(|c| {
+            c.simulate_init = false;
+            c.simulate_speed = false;
+            c.fault_plan = plan;
+        })
+}
+
+/// A persistent runtime over the batel node for concurrency tests
+/// (uncapped admission; pass the lease policy and simclock seed).
+pub fn chaos_runtime(reg: &ArtifactRegistry, policy: LeasePolicy, seed: u64) -> Runtime {
+    Runtime::configured(reg.clone(), NodeConfig::batel(), policy, usize::MAX, seed)
+}
+
+/// Per-device package streams of a report — (begin, end, requeued) per
+/// package in execution order. The golden-trace determinism signature:
+/// two executions of the same seeded configuration must produce equal
+/// signatures.
+pub fn trace_signature(report: &RunReport) -> Vec<Vec<(usize, usize, bool)>> {
+    report
+        .devices
+        .iter()
+        .map(|d| d.packages.iter().map(|p| (p.begin_item, p.end_item, p.requeued)).collect())
+        .collect()
 }
 
 /// The exactly-once oracle: every traced package range, across all

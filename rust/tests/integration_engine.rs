@@ -500,6 +500,35 @@ fn bad_static_proportions_rejected() {
     assert!(e.run().is_err());
 }
 
+/// Regression: a failed run must clear the previous run's report
+/// instead of leaving it visible through `report()` — callers that
+/// ignore the error and read introspection would silently get the
+/// *prior* run's numbers.
+#[test]
+fn failed_run_clears_stale_report() {
+    use enginecl::platform::FaultPlan;
+    let reg = registry();
+    let mut e = engine_for(&reg, "binomial", vec![DeviceSpec::new(0)]);
+    e.configurator().simulate_speed = false;
+    e.run().unwrap();
+    assert!(e.report().is_some(), "successful run leaves a report");
+    let first_wall = e.report().unwrap().wall;
+
+    // A single-device panic cannot be recovered: the run fails.
+    e.fault_plan(FaultPlan::panic_at(0, 0));
+    assert!(e.run().is_err());
+    assert!(
+        e.report().is_none(),
+        "failed run must clear the stale report (was wall={first_wall:?})"
+    );
+
+    // And the engine stays reusable: clearing the plan restores runs
+    // (and the report).
+    e.configurator().fault_plan = None;
+    e.run().unwrap();
+    assert!(e.report().is_some());
+}
+
 #[test]
 fn arg_validation_accepts_baked_and_rejects_unbaked() {
     let reg = registry();

@@ -1,0 +1,372 @@
+//! Concurrency battery: the persistent runtime's concurrent run
+//! sessions over one device set.
+//!
+//! The contract under test, per session: outputs **bit-identical** to
+//! the same session run solo, an **exactly-once** trace ledger (the
+//! packages tile `[0, gws)` with no gap and no overlap), and — across
+//! sessions — device leases that are mutually exclusive, starvation-free,
+//! reclaimed on worker death, and (under the rotation policy)
+//! deterministic per device for a fixed seed and admission order.
+//!
+//! Seeded sweeps log `ECL_CHAOS_SEED` so a CI failure is reproducible
+//! locally by exporting the same value.
+
+use std::time::Duration;
+
+use enginecl::coordinator::lease::{GrantRecord, LeasePolicy, SessionId};
+use enginecl::coordinator::runtime::RunSession;
+use enginecl::coordinator::SchedulerKind;
+use enginecl::harness::concurrent::{measure_config, run_concurrent, SessionSpec};
+use enginecl::platform::fault::FaultPlan;
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::ArtifactRegistry;
+use enginecl::testing::{
+    assert_exactly_once, chaos_engine, chaos_runtime, chaos_seed, chaos_session,
+    trace_signature,
+};
+use enginecl::util::rng::XorShift;
+
+fn registry() -> ArtifactRegistry {
+    ArtifactRegistry::discover().expect("artifact registry (synthetic fallback)")
+}
+
+/// Solo (single-session) reference outputs for `bench` under `kind` on
+/// 3 devices — computed through the *engine* path, which also pins the
+/// engine-as-thin-runtime-wrapper equivalence.
+fn solo_outputs(reg: &ArtifactRegistry, bench: &str, kind: &SchedulerKind) -> Vec<Vec<f32>> {
+    let mut e = chaos_engine(reg, bench, 3, kind.clone(), None);
+    e.run().expect("solo baseline run");
+    let n = reg.bench(bench).unwrap().outputs.len();
+    (0..n).map(|i| e.output(i).unwrap().to_vec()).collect()
+}
+
+/// The soak mix: 8 sessions across 5 kernels and
+/// `{static,dynamic,hguided} × {blocking,+pipe}`.
+fn soak_combos() -> Vec<(&'static str, SchedulerKind)> {
+    vec![
+        ("binomial", SchedulerKind::static_default()),
+        ("gaussian", SchedulerKind::dynamic(12)),
+        ("mandelbrot", SchedulerKind::hguided()),
+        ("nbody", SchedulerKind::static_default().pipelined(2)),
+        ("ray1", SchedulerKind::dynamic(10).pipelined(2)),
+        ("binomial", SchedulerKind::hguided().pipelined(2)),
+        ("gaussian", SchedulerKind::static_default()),
+        ("mandelbrot", SchedulerKind::dynamic(8)),
+    ]
+}
+
+fn soak(policy: LeasePolicy, seed: u64) {
+    let reg = registry();
+    let combos = soak_combos();
+    let want: Vec<Vec<Vec<f32>>> =
+        combos.iter().map(|(b, k)| solo_outputs(&reg, b, k)).collect();
+
+    let rt = chaos_runtime(&reg, policy, seed);
+    let sessions: Vec<RunSession> = combos
+        .iter()
+        .map(|(b, k)| chaos_session(&reg, b, 3, k.clone(), None))
+        .collect();
+    let handles = rt.submit_all(sessions);
+    assert_eq!(handles.len(), combos.len());
+    for ((handle, (bench, kind)), want) in handles.into_iter().zip(&combos).zip(&want) {
+        let label = format!("{bench}/{}", kind.label());
+        let outcome = handle.wait();
+        let report = outcome
+            .result
+            .as_ref()
+            .unwrap_or_else(|e| panic!("{label}: concurrent session failed: {e}"));
+        assert_exactly_once(report);
+        for (i, w) in want.iter().enumerate() {
+            assert!(
+                outcome.output(i).unwrap() == &w[..],
+                "{label}: output {i} not bit-identical to its solo run"
+            );
+        }
+        assert!(report.faults.is_empty(), "{label}: clean run records no faults");
+    }
+    rt.wait_idle();
+    for d in 0..rt.node().devices.len() {
+        assert_eq!(rt.arbiter().holder(d), None, "no lease survives the batch");
+        assert!(
+            rt.arbiter().registered_sessions(d).is_empty(),
+            "every registration retired with its worker"
+        );
+    }
+}
+
+/// 8 mixed-kernel sessions under the deterministic rotation policy.
+#[test]
+fn soak_eight_mixed_sessions_rotation() {
+    soak(LeasePolicy::Rotation, 0x50AC);
+}
+
+/// The same mix under first-come-first-served leasing.
+#[test]
+fn soak_eight_mixed_sessions_fifo() {
+    soak(LeasePolicy::Fifo, 0x50AD);
+}
+
+/// Every admitted session completes under a capped runtime and a
+/// seeded random admission order — no starvation, no lost handles.
+#[test]
+fn no_starvation_under_seeded_random_admission_order() {
+    let reg = registry();
+    let seed = chaos_seed();
+    eprintln!("admission shuffle: ECL_CHAOS_SEED={seed} (export to reproduce)");
+    let mut rng = XorShift::new(seed | 1);
+    let mut combos = soak_combos();
+    combos.truncate(6);
+    // Fisher–Yates with the logged seed.
+    for i in (1..combos.len()).rev() {
+        let j = rng.below(i + 1);
+        combos.swap(i, j);
+    }
+    let rt = enginecl::coordinator::Runtime::configured(
+        reg.clone(),
+        NodeConfig::batel(),
+        LeasePolicy::Rotation,
+        2, // at most two sessions in flight: the queue must drain
+        seed,
+    );
+    let sessions: Vec<RunSession> = combos
+        .iter()
+        .enumerate()
+        .map(|(i, (b, k))| {
+            let s = chaos_session(&reg, b, 3, k.clone(), None);
+            // Sprinkle deadlines so admission exercises the EDF branch.
+            if i % 2 == 0 {
+                s.deadline(Duration::from_secs(120))
+            } else {
+                s
+            }
+        })
+        .collect();
+    let handles = rt.submit_all(sessions);
+    for handle in handles {
+        let label = handle.label().to_string();
+        let outcome = handle.wait();
+        let report = outcome
+            .result
+            .as_ref()
+            .unwrap_or_else(|e| panic!("{label}: session starved or failed: {e}"));
+        assert_exactly_once(report);
+        if let Some(met) = outcome.met_deadline() {
+            assert!(met, "{label}: generous deadline must be met");
+        }
+    }
+    rt.wait_idle();
+}
+
+/// With an in-flight cap of 1, a queued session carrying a deadline is
+/// admitted before an earlier plain submission (EDF), and the two
+/// sessions' lease grants do not interleave (cap-1 serializes).
+#[test]
+fn deadlined_session_admitted_first_when_capped() {
+    let reg = registry();
+    let rt = enginecl::coordinator::Runtime::configured(
+        reg.clone(),
+        NodeConfig::batel(),
+        LeasePolicy::Rotation,
+        1,
+        3,
+    );
+    let plain = chaos_session(&reg, "binomial", 2, SchedulerKind::dynamic(4), None);
+    let urgent = chaos_session(&reg, "gaussian", 2, SchedulerKind::dynamic(4), None)
+        .deadline(Duration::from_secs(60));
+    let handles = rt.submit_all(vec![plain, urgent]);
+    let ids: Vec<SessionId> = handles.iter().map(|h| h.id()).collect();
+    let outcomes: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    for o in &outcomes {
+        assert!(o.result.is_ok(), "{}: {:?}", o.label, o.result.as_ref().err());
+    }
+    assert_eq!(outcomes[1].met_deadline(), Some(true));
+    rt.wait_idle();
+    let journal = rt.lease_journal();
+    assert!(!journal.is_empty());
+    assert_eq!(
+        journal[0].session, ids[1],
+        "the deadlined session must be admitted (and granted) first"
+    );
+    let first_plain = journal
+        .iter()
+        .position(|g| g.session == ids[0])
+        .expect("plain session ran too");
+    let last_urgent = journal
+        .iter()
+        .rposition(|g| g.session == ids[1])
+        .expect("urgent session ran");
+    assert!(
+        last_urgent < first_plain,
+        "cap-1 admission must fully serialize the two sessions' grants"
+    );
+}
+
+/// A `FaultPlan` kill inside one session: that session recovers
+/// (requeue to survivors, outputs still bit-identical), the *other*
+/// session never notices, and the dead worker's lease/rotation entry is
+/// reclaimed — no device is left held or blocked.
+#[test]
+fn killed_device_leases_reclaimed_and_other_session_unaffected() {
+    let reg = registry();
+    let kind = SchedulerKind::dynamic(10);
+    let want_a = solo_outputs(&reg, "binomial", &kind);
+    let want_b = solo_outputs(&reg, "gaussian", &kind);
+
+    let rt = chaos_runtime(&reg, LeasePolicy::Rotation, 5);
+    let faulted =
+        chaos_session(&reg, "binomial", 3, kind.clone(), Some(FaultPlan::kill(1, 0)));
+    let clean = chaos_session(&reg, "gaussian", 3, kind, None);
+    let handles = rt.submit_all(vec![faulted, clean]);
+    let outcomes: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+
+    let fault_o = &outcomes[0];
+    let fr = fault_o.result.as_ref().expect("faulted session must recover");
+    assert!(fr.recovered(), "the kill was recovered by survivors");
+    assert!(fr.requeued_packages() >= 1, "reclaimed work surfaced as requeued packages");
+    assert_exactly_once(fr);
+    for (i, w) in want_a.iter().enumerate() {
+        assert!(
+            fault_o.output(i).unwrap() == &w[..],
+            "faulted session output {i} differs from its solo run"
+        );
+    }
+
+    let clean_o = &outcomes[1];
+    let cr = clean_o.result.as_ref().expect("clean session unaffected by the kill");
+    assert!(cr.faults.is_empty(), "the fault must not leak across sessions");
+    assert_exactly_once(cr);
+    for (i, w) in want_b.iter().enumerate() {
+        assert!(
+            clean_o.output(i).unwrap() == &w[..],
+            "clean session output {i} differs from its solo run"
+        );
+    }
+
+    rt.wait_idle();
+    for d in 0..rt.node().devices.len() {
+        assert_eq!(rt.arbiter().holder(d), None, "dead worker's lease reclaimed");
+        assert!(
+            rt.arbiter().registered_sessions(d).is_empty(),
+            "dead worker's rotation entry reclaimed"
+        );
+    }
+}
+
+/// Per-session golden-trace signature (see `testing::trace_signature`).
+type Signature = Vec<Vec<(usize, usize, bool)>>;
+
+/// One golden batch: two 3-device Static sessions (structurally
+/// deterministic package→device binding) plus a single-device Dynamic
+/// session contending on device 0.
+fn golden_batch(reg: &ArtifactRegistry, seed: u64) -> (Vec<Signature>, Vec<GrantRecord>) {
+    let rt = chaos_runtime(reg, LeasePolicy::Rotation, seed);
+    let sessions = vec![
+        chaos_session(reg, "binomial", 3, SchedulerKind::static_default(), None),
+        chaos_session(reg, "gaussian", 3, SchedulerKind::static_default(), None),
+        chaos_session(reg, "mandelbrot", 1, SchedulerKind::dynamic(6), None),
+    ];
+    let handles = rt.submit_all(sessions);
+    let sigs = handles
+        .into_iter()
+        .map(|h| {
+            let label = h.label().to_string();
+            let o = h.wait();
+            let report = o
+                .result
+                .as_ref()
+                .unwrap_or_else(|e| panic!("{label}: golden batch session failed: {e}"));
+            trace_signature(report)
+        })
+        .collect();
+    rt.wait_idle();
+    (sigs, rt.lease_journal())
+}
+
+/// The per-device grant sequence (sessions in grant order). The
+/// *global* journal interleaving across devices is wall-clock ordered,
+/// but each device's own sequence is what rotation pins.
+fn per_device_grants(journal: &[GrantRecord], ndev: usize) -> Vec<Vec<SessionId>> {
+    (0..ndev)
+        .map(|d| journal.iter().filter(|g| g.device == d).map(|g| g.session).collect())
+        .collect()
+}
+
+/// Golden-trace determinism for concurrent runs: fixed simclock seed +
+/// fixed admission order ⇒ identical per-session `PackageTrace` streams
+/// and identical per-device lease-grant sequences across two
+/// executions.
+#[test]
+fn golden_concurrent_trace_determinism() {
+    let reg = registry();
+    let (sig1, j1) = golden_batch(&reg, 42);
+    let (sig2, j2) = golden_batch(&reg, 42);
+    assert_eq!(sig1, sig2, "per-session package streams must reproduce exactly");
+    assert_eq!(
+        per_device_grants(&j1, 3),
+        per_device_grants(&j2, 3),
+        "per-device lease interleavings must reproduce exactly"
+    );
+    // Structure sanity: rotation leads with the first-admitted session
+    // on every device, and device 0 carries all 6 dynamic packages of
+    // the single-device session after the two static windows.
+    let grants = per_device_grants(&j1, 3);
+    assert_eq!(&grants[0][..2], &[0, 1][..], "admission order leads the rotation");
+    assert_eq!(grants[0].iter().filter(|&&s| s == 2).count(), 6);
+    for d in 1..3 {
+        assert_eq!(
+            grants[d].as_slice(),
+            &[0, 1][..],
+            "static sessions take one window each off device {d}"
+        );
+    }
+}
+
+/// Acceptance: two sessions submitted together on the 3-device batel
+/// node finish with simclock makespan strictly less than the sum of
+/// their solo makespans, while each session's outputs stay
+/// bit-identical to its solo run. (Coarse dynamic packages leave each
+/// solo run with a tail-imbalance idle window; co-execution fills it.)
+#[test]
+fn two_concurrent_sessions_beat_serial_execution() {
+    let reg = registry();
+    // Quarter-size problems keep the simclock holds short while still
+    // dominating the dispatch overheads.
+    let quarter = |bench: &str| {
+        let m = reg.bench(bench).unwrap();
+        let granules = (m.n / m.granule / 4).max(1);
+        Some(granules * m.granule)
+    };
+    let specs = vec![
+        SessionSpec {
+            bench: "binomial".into(),
+            scheduler: SchedulerKind::dynamic(5),
+            gws: quarter("binomial"),
+        },
+        SessionSpec {
+            bench: "gaussian".into(),
+            scheduler: SchedulerKind::dynamic(5),
+            gws: quarter("gaussian"),
+        },
+    ];
+    let report = run_concurrent(
+        &reg,
+        &NodeConfig::batel(),
+        &specs,
+        LeasePolicy::Rotation,
+        9,
+        measure_config(),
+    )
+    .expect("concurrent harness completes");
+    assert!(report.all_outputs_match(), "co-execution changed results");
+    assert!(
+        report.batch_wall < report.solo_sum,
+        "batch makespan {:?} must be strictly less than the serial sum {:?}",
+        report.batch_wall,
+        report.solo_sum
+    );
+    let contention: Duration = report.sessions.iter().map(|s| s.lease_wait).sum();
+    assert!(
+        contention > Duration::ZERO,
+        "sharing three devices between two sessions must show some lease wait"
+    );
+}
