@@ -41,21 +41,37 @@ fn main() -> anyhow::Result<()> {
         SchedulerKind::static_default(),
         SchedulerKind::dynamic(10_000),
         SchedulerKind::hguided(),
+        SchedulerKind::adaptive(),
     ] {
         let devs: Vec<SchedDevice> = (0..3)
-            .map(|i| SchedDevice { name: format!("d{i}"), power: 0.3 + i as f64 * 0.3 })
+            .map(|i| SchedDevice::new(format!("d{i}"), 0.3 + i as f64 * 0.3))
             .collect();
         let mut total = 0usize;
         let t0 = Instant::now();
         let mut s = kind.build();
         s.start(10_000, 256, &devs);
-        let mut dev = 0;
-        while let Some(r) = s.next_package(dev % 3) {
-            total += r.len();
-            dev += 1;
+        // Active-set drain: Adaptive may go terminal for a straggler
+        // near the tail (its cutoff), which must not end the sweep for
+        // the remaining devices.
+        let mut dry = [false; 3];
+        let mut turn = 0usize;
+        let mut pkgs = 0usize;
+        while !dry.iter().all(|&d| d) {
+            let dev = turn % 3;
+            turn += 1;
+            if dry[dev] {
+                continue;
+            }
+            match s.next_package(dev) {
+                Some(r) => {
+                    total += r.len();
+                    pkgs += 1;
+                }
+                None => dry[dev] = true,
+            }
         }
-        let ns = t0.elapsed().as_nanos() as f64 / dev.max(1) as f64;
-        println!("  {:<12} {ns:>8.0} ns/package ({dev} packages, {total} items)", kind.label());
+        let ns = t0.elapsed().as_nanos() as f64 / pkgs.max(1) as f64;
+        println!("  {:<12} {ns:>8.0} ns/package ({pkgs} packages, {total} items)", kind.label());
     }
 
     // ---- per-launch runtime overhead ---------------------------------
@@ -220,9 +236,9 @@ fn main() -> anyhow::Result<()> {
     for (k, min) in [(1.0, 2), (2.0, 2), (3.0, 2), (2.0, 8)] {
         let mut s = enginecl::coordinator::scheduler::HGuided::new(k, min);
         let devs: Vec<SchedDevice> = vec![
-            SchedDevice { name: "cpu".into(), power: 0.3 },
-            SchedDevice { name: "gpu".into(), power: 1.0 },
-            SchedDevice { name: "acc".into(), power: 0.42 },
+            SchedDevice::new("cpu", 0.3),
+            SchedDevice::new("gpu", 1.0),
+            SchedDevice::new("acc", 0.42),
         ];
         s.start(65_536, 1, &devs);
         let mut n = 0;

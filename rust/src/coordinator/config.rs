@@ -31,6 +31,12 @@ pub struct Configurator {
     /// Deterministic fault injection schedule (chaos testing). `None`
     /// (the default) injects nothing.
     pub fault_plan: Option<FaultPlan>,
+    /// Seed feedback-capable schedulers (HGuided, Adaptive) from the
+    /// performance-model store's cross-session throughput estimates at
+    /// run start. Off = every run cold-starts from the profile priors
+    /// (observations are still *recorded* either way — the knob gates
+    /// consumption, not learning).
+    pub warm_start: bool,
     /// Base seed for the run's simclock jitter streams (each device
     /// worker derives its own stream from it). `0` means "unset": solo
     /// engine runs keep the legacy fixed seed, and the persistent
@@ -50,6 +56,7 @@ impl Default for Configurator {
             introspect: true,
             fault_tolerant: true,
             fault_plan: None,
+            warm_start: true,
             rng_seed: 0,
         }
     }
@@ -73,6 +80,7 @@ mod tests {
         assert!(c.resident_inputs && c.eager_compile && c.simulate_init && c.simulate_speed);
         assert!(c.fault_tolerant, "recovery is on by default");
         assert!(c.fault_plan.is_none(), "no injection by default");
+        assert!(c.warm_start, "cross-session warm start is on by default");
         assert_eq!(c.rng_seed, 0, "seed unset by default (legacy stream)");
     }
 

@@ -45,6 +45,18 @@
 //! simulated clock charges `max(compute, overlapped-upload) + write-back`
 //! per package instead of their sum (see `TimeScaler::target_overlapped`).
 //!
+//! # Timing feedback
+//!
+//! Every `Done` event carries the completed package's
+//! [`PackageTiming`] — its simulated occupancy span, decided before the
+//! hold sleeps it out — which the master routes into
+//! `Scheduler::observe` so adaptive strategies re-size subsequent
+//! packages from *measured* throughput. Workers also keep a per-run
+//! observation ledger (range + timing per completed package, collected
+//! regardless of the `introspect` flag) shipped with `Finished`/`Failed`;
+//! the session folds it into the persistent performance-model store at
+//! session end, failure or not.
+//!
 //! # Device leasing
 //!
 //! Since the persistent runtime, a device may be shared by several
@@ -86,6 +98,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::config::Configurator;
 use crate::coordinator::introspector::{PackageTrace, TransferStats};
 use crate::coordinator::lease::DeviceRegistration;
+use crate::coordinator::scheduler::{PackageObservation, PackageTiming};
 use crate::coordinator::work::Range;
 use crate::platform::fault::{FaultInjector, FaultKind};
 use crate::platform::{DeviceKind, DeviceProfile, TimeScaler};
@@ -170,20 +183,31 @@ pub(crate) enum FromWorker {
     /// ready for the next assignment. By the time `Done` is sent the
     /// package's results are fully written into the arena (only the
     /// simulated hold may still be pending), so the master can safely
-    /// consider the range finished for recovery bookkeeping.
-    Done { dev: usize },
+    /// consider the range finished for recovery bookkeeping. `timing`
+    /// is the package's simulated occupancy — the feedback the master
+    /// routes into `Scheduler::observe` before sizing the next package.
+    Done { dev: usize, timing: PackageTiming },
     /// Worker exited. Results are already in the output arena (written
     /// in place, package by package); only the introspection traces,
-    /// the per-run transfer byte counts and the total time spent
-    /// waiting for device leases travel back.
-    Finished { dev: usize, traces: Vec<PackageTrace>, xfer: TransferStats, lease_wait: Duration },
-    /// Worker died (error or caught panic). Traces of the packages it
-    /// *completed* travel back — their results are in the arena and
-    /// must stay attributed; the failing package is not among them.
+    /// the per-run observation ledger (for the performance-model
+    /// store), the per-run transfer byte counts and the total time
+    /// spent waiting for device leases travel back.
+    Finished {
+        dev: usize,
+        traces: Vec<PackageTrace>,
+        observations: Vec<PackageObservation>,
+        xfer: TransferStats,
+        lease_wait: Duration,
+    },
+    /// Worker died (error or caught panic). Traces and observations of
+    /// the packages it *completed* travel back — their results are in
+    /// the arena and must stay attributed (and the store still learns
+    /// from them); the failing package is not among them.
     Failed {
         dev: usize,
         message: String,
         traces: Vec<PackageTrace>,
+        observations: Vec<PackageObservation>,
         xfer: TransferStats,
         lease_wait: Duration,
     },
@@ -241,6 +265,7 @@ pub(crate) fn spawn_worker(
         .spawn(move || {
             let dev = ctx.dev;
             let mut traces: Vec<PackageTrace> = Vec::new();
+            let mut observations: Vec<PackageObservation> = Vec::new();
             let mut xfer = TransferStats::default();
             let mut lease_wait = Duration::ZERO;
             // A panicking worker (a kernel bug, an injected Panic fault)
@@ -253,6 +278,7 @@ pub(crate) fn spawn_worker(
                     &to_master,
                     &from_master,
                     &mut traces,
+                    &mut observations,
                     &mut xfer,
                     &mut lease_wait,
                 )
@@ -264,7 +290,7 @@ pub(crate) fn spawn_worker(
             match result {
                 Ok(Ok(WorkerExit::Finished)) => {
                     to_master
-                        .send(FromWorker::Finished { dev, traces, xfer, lease_wait })
+                        .send(FromWorker::Finished { dev, traces, observations, xfer, lease_wait })
                         .ok();
                 }
                 Ok(Ok(WorkerExit::Vanished)) => {}
@@ -274,6 +300,7 @@ pub(crate) fn spawn_worker(
                             dev,
                             message: format!("{e:#}"),
                             traces,
+                            observations,
                             xfer,
                             lease_wait,
                         })
@@ -290,6 +317,7 @@ pub(crate) fn spawn_worker(
                             dev,
                             message: format!("panic: {msg}"),
                             traces,
+                            observations,
                             xfer,
                             lease_wait,
                         })
@@ -347,6 +375,7 @@ fn worker_loop(
     to_master: &Sender<FromWorker>,
     from_master: &Receiver<ToWorker>,
     traces: &mut Vec<PackageTrace>,
+    observations: &mut Vec<PackageObservation>,
     xfer: &mut TransferStats,
     lease_wait: &mut Duration,
 ) -> anyhow::Result<WorkerExit> {
@@ -506,7 +535,6 @@ fn worker_loop(
                 staged = Some(p);
                 to_master.send(FromWorker::Uploaded { dev }).ok();
             }
-            to_master.send(FromWorker::Done { dev }).ok();
         }
 
         // Hold to the simulated package duration. Device compute
@@ -516,7 +544,14 @@ fn worker_loop(
         // this package (single host thread), so the package ends at
         // `exec_end` and the trace claims no overlap — raw traces stay
         // honest about what physically happened.
-        let end = if ctx.config.simulate_speed {
+        //
+        // The package's occupancy `span` — the feedback the schedulers
+        // and the performance-model store consume — is decided *before*
+        // the hold sleeps it out (the simulated target is pure
+        // arithmetic), so a pipelined worker still sends its early
+        // `Done` with the timing attached and the master sizes the next
+        // package from this one's span while the hold is still pending.
+        let (end, span) = if ctx.config.simulate_speed {
             if pipelined {
                 let target = scaler.target_overlapped(
                     timing.exec,
@@ -524,15 +559,41 @@ fn worker_loop(
                     overlapped_h2d,
                     timing.d2h,
                 );
+                to_master
+                    .send(FromWorker::Done {
+                        dev,
+                        timing: PackageTiming { span: target, raw_exec: timing.exec },
+                    })
+                    .ok();
                 scaler.hold(exec_started, target);
+                (epoch.elapsed(), target)
             } else {
                 let target = scaler.target(timing.exec, timing.launches) + timing.xfer();
                 scaler.hold(current.staged_at, target);
+                let end = epoch.elapsed();
+                (end, end.saturating_sub(current.h2d_start))
             }
-            epoch.elapsed()
         } else {
-            exec_end
+            // No speed simulation: the span is the physical one —
+            // compute window for pipelined packages, staging + compute
+            // for blocking ones.
+            let span = if pipelined {
+                exec_end.saturating_sub(exec_start)
+            } else {
+                exec_end.saturating_sub(current.h2d_start)
+            };
+            if pipelined {
+                to_master
+                    .send(FromWorker::Done {
+                        dev,
+                        timing: PackageTiming { span, raw_exec: timing.exec },
+                    })
+                    .ok();
+            }
+            (exec_end, span)
         };
+        let pkg_timing = PackageTiming { span, raw_exec: timing.exec };
+        observations.push(PackageObservation { range: current.range, timing: pkg_timing });
 
         if ctx.config.introspect {
             traces.push(PackageTrace {
@@ -555,7 +616,7 @@ fn worker_loop(
             });
         }
         if !pipelined {
-            to_master.send(FromWorker::Done { dev }).ok();
+            to_master.send(FromWorker::Done { dev, timing: pkg_timing }).ok();
         }
     }
 

@@ -20,8 +20,11 @@ use crate::coordinator::introspector::RunReport;
 use crate::coordinator::lease::{LeaseArbiter, LeasePolicy};
 use crate::coordinator::program::Program;
 use crate::coordinator::runtime::{check_device_selection, SessionExec, SessionLeases};
+use std::sync::Arc;
+
 use crate::coordinator::scheduler::SchedulerKind;
 use crate::platform::fault::FaultPlan;
+use crate::platform::perfmodel::PerfModelStore;
 use crate::platform::NodeConfig;
 use crate::runtime::ArtifactRegistry;
 
@@ -45,6 +48,10 @@ pub struct Engine {
     program: Option<Program>,
     report: Option<RunReport>,
     errors: Vec<EclError>,
+    /// Cross-run performance model: repeated `run()`s on one engine
+    /// warm-start their schedulers from earlier runs' observed
+    /// throughput (see `platform::perfmodel`).
+    perf: Arc<PerfModelStore>,
 }
 
 impl Engine {
@@ -66,6 +73,7 @@ impl Engine {
             program: None,
             report: None,
             errors: Vec::new(),
+            perf: Arc::new(PerfModelStore::new()),
         }
     }
 
@@ -146,6 +154,15 @@ impl Engine {
     /// Tier-2 access to runtime internals.
     pub fn configurator(&mut self) -> &mut Configurator {
         &mut self.config
+    }
+
+    /// This engine's cross-run performance model: per-(kernel, device)
+    /// throughput estimates accumulated by every `run()` so far —
+    /// feedback-capable schedulers warm-start from it (disable via
+    /// `configurator().warm_start`), and [`PerfModelStore::clear`]
+    /// cold-restarts it.
+    pub fn perf_model(&self) -> &Arc<PerfModelStore> {
+        &self.perf
     }
 
     /// Install a deterministic fault-injection plan for subsequent runs
@@ -232,6 +249,7 @@ impl Engine {
             gws: self.gws,
             session: 0,
             leases: SessionLeases { arbiter, registrations },
+            perf: Some(Arc::clone(&self.perf)),
         };
         exec.run(program)
     }

@@ -217,6 +217,32 @@ impl RunReport {
         }
     }
 
+    /// Per-run balance *efficiency* (the Fig. 13 busy-time metric):
+    /// mean device busy-time over max device busy-time, across devices
+    /// that computed work. 1.0 = every device was busy equally long; a
+    /// low value means one device carried the run while others idled —
+    /// the signature of a mis-calibrated profile or a degraded device
+    /// that a static schedule kept over-feeding. (Equivalently the
+    /// inverse of the max/mean ratio; reported in [0, 1] so "higher is
+    /// better" matches `balance()` and the efficiency figures.)
+    pub fn balance_efficiency(&self) -> f64 {
+        let busys: Vec<f64> = self
+            .devices
+            .iter()
+            .filter(|d| !d.packages.is_empty())
+            .map(|d| d.busy().as_secs_f64())
+            .collect();
+        if busys.len() < 2 {
+            return 1.0;
+        }
+        let max = busys.iter().cloned().fold(0.0f64, f64::max);
+        if max <= 0.0 {
+            return 1.0;
+        }
+        let mean = busys.iter().sum::<f64>() / busys.len() as f64;
+        mean / max
+    }
+
     /// Work-share per device, normalized to 1.0 (Figure 12).
     pub fn work_shares(&self) -> Vec<f64> {
         let total: usize = self.devices.iter().map(DeviceTrace::items).sum();
@@ -433,6 +459,19 @@ mod tests {
         assert_eq!(r.compute_epoch(), ms(5));
         assert_eq!(r.response_time(), ms(95));
         assert_eq!(r.device_response(0), ms(75));
+    }
+
+    #[test]
+    fn balance_efficiency_mean_over_max() {
+        let r = mk_report();
+        // Busy times: cpu 70ms, gpu 95ms => mean 82.5 / max 95.
+        assert!((r.balance_efficiency() - 82.5 / 95.0).abs() < 1e-9);
+        let mut solo = mk_report();
+        solo.devices.truncate(1);
+        assert_eq!(solo.balance_efficiency(), 1.0, "one device is trivially balanced");
+        let mut idle = mk_report();
+        idle.devices[0].packages.clear();
+        assert_eq!(idle.balance_efficiency(), 1.0, "idle devices are excluded");
     }
 
     #[test]

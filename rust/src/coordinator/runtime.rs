@@ -41,10 +41,15 @@
 //! * `Uploaded` — a prefetch's H2D staging landed; release the
 //!   device's staging slot (at most two assignments may be un-staged
 //!   at once — back-pressure for slow buses) and top up again.
-//! * `Done` — a package completed; one slot freed, assign the next
-//!   package or send `Finish` when the scheduler is dry for that device.
-//! * `Finished`/`Failed` — worker exited; collect its traces and
-//!   transfer stats (results are already in the arena) or the failure.
+//! * `Done` — a package completed; the completed range and its timing
+//!   are fed to `Scheduler::observe` (the feedback loop: adaptive
+//!   strategies re-size from measured throughput), then one slot is
+//!   freed and the next package assigned — or `Finish` sent when the
+//!   scheduler is dry for that device.
+//! * `Finished`/`Failed` — worker exited; collect its traces,
+//!   observation ledger (folded into the performance-model store at
+//!   session end) and transfer stats (results are already in the
+//!   arena) or the failure.
 //!
 //! With `depth == 1` this reduces exactly to the paper's blocking
 //! assign-on-completion loop.
@@ -82,8 +87,11 @@ use crate::coordinator::lease::{
     DeviceRegistration, GrantRecord, LeaseArbiter, LeasePolicy, SessionId,
 };
 use crate::coordinator::program::{Arg, Program};
-use crate::coordinator::scheduler::{SchedDevice, Scheduler, SchedulerKind};
+use crate::coordinator::scheduler::{
+    PackageObservation, SchedDevice, Scheduler, SchedulerKind,
+};
 use crate::coordinator::work::{split_range, Range};
+use crate::platform::perfmodel::PerfModelStore;
 use crate::platform::{DeviceKind, NodeConfig};
 use crate::runtime::{input_views, ArtifactRegistry, HostBuf, InputView, OutputArena};
 
@@ -261,6 +269,11 @@ struct RuntimeShared {
     registry: ArtifactRegistry,
     node: NodeConfig,
     arbiter: Arc<LeaseArbiter>,
+    /// The cross-session performance model: every session's completed
+    /// packages are folded in at session end, and every session's
+    /// schedulers warm-start from the estimates accumulated so far
+    /// (see `platform::perfmodel`).
+    perf: Arc<PerfModelStore>,
     /// Base simclock seed: each session's jitter RNG derives from it
     /// and the session id, so a fixed runtime seed + fixed admission
     /// order reproduces every session's timing draws.
@@ -295,6 +308,7 @@ impl Runtime {
                 registry,
                 node,
                 arbiter,
+                perf: Arc::new(PerfModelStore::new()),
                 seed,
                 max_in_flight: max_in_flight.max(1),
                 state: Mutex::new(RtState {
@@ -324,6 +338,13 @@ impl Runtime {
     /// The global lease-grant journal so far.
     pub fn lease_journal(&self) -> Vec<GrantRecord> {
         self.shared.arbiter.journal()
+    }
+
+    /// The runtime's persistent performance model: per-(kernel, device)
+    /// throughput estimates accumulated across every session this
+    /// runtime has executed — what later sessions warm-start from.
+    pub fn perf_model(&self) -> &Arc<PerfModelStore> {
+        &self.shared.perf
     }
 
     /// Submit one session. Admission is immediate when a slot is free,
@@ -451,6 +472,7 @@ fn spawn_session(shared: &Arc<RuntimeShared>, adm: Admitted) {
                     arbiter: Arc::clone(&shared.arbiter),
                     registrations,
                 },
+                perf: Some(Arc::clone(&shared.perf)),
             };
             // A panicking session must not leak its admission slot
             // (queued sessions would never admit and wait_idle would
@@ -509,6 +531,11 @@ pub(crate) struct SessionExec {
     pub gws: Option<usize>,
     pub session: SessionId,
     pub leases: SessionLeases,
+    /// The cross-session performance model (the runtime's, or the
+    /// engine's for solo runs): queried for scheduler warm-start rates
+    /// when `config.warm_start` is on, and fed this session's
+    /// observation ledger at the end of the run — failure or not.
+    pub perf: Option<Arc<PerfModelStore>>,
 }
 
 impl SessionExec {
@@ -523,6 +550,7 @@ impl SessionExec {
             gws,
             session,
             leases,
+            perf,
         } = self;
         let SessionLeases { arbiter, registrations } = leases;
         debug_assert_eq!(registrations.len(), selected.len());
@@ -703,11 +731,24 @@ impl SessionExec {
         drop(to_master_tx);
 
         // ---- master scheduling loop ------------------------------------
+        // Feedback-capable schedulers warm-start from the performance
+        // model's cross-session estimates: the first package of this
+        // run is already sized for the throughput earlier sessions
+        // *measured*, not the profile's static prior. The store key
+        // carries the execution mode: pipelined spans exclude the
+        // staging they overlap, blocking spans include it, so the two
+        // must never seed each other's warm start.
+        let store_key = if depth > 1 { format!("{kernel}+pipe") } else { kernel.clone() };
         let sched_devices: Vec<SchedDevice> = selected
             .iter()
             .map(|s| {
                 let d = &node.devices[s.index];
-                SchedDevice { name: d.name.clone(), power: d.relative_power }
+                let warm = if config.warm_start {
+                    perf.as_ref().and_then(|p| p.estimate(&store_key, &d.name))
+                } else {
+                    None
+                };
+                SchedDevice::new(d.name.clone(), d.relative_power).with_warm_rate(warm)
             })
             .collect();
         let mut sched = scheduler.build();
@@ -759,6 +800,10 @@ impl SessionExec {
         let mut finished = 0usize;
         let mut failure: Option<EclError> = None;
         let mut faults: Vec<FaultEvent> = Vec::new();
+        // Per-slot observation ledgers (range + timing per completed
+        // package), collected from Finished/Failed events and folded
+        // into the performance model after the join.
+        let mut observations: Vec<Vec<PackageObservation>> = vec![Vec::new(); ndev];
 
         // How often the idle master sweeps for worker threads that died
         // without reporting (panics are caught and converted to Failed
@@ -773,6 +818,7 @@ impl SessionExec {
                     &mut master,
                     arena.as_ref(),
                     &mut device_traces,
+                    &mut observations,
                     &mut reported,
                     &mut finished,
                     &mut faults,
@@ -802,6 +848,7 @@ impl SessionExec {
                             &mut master,
                             arena.as_ref(),
                             &mut device_traces,
+                            &mut observations,
                             &mut reported,
                             &mut finished,
                             &mut faults,
@@ -834,6 +881,29 @@ impl SessionExec {
         }
         for h in handles {
             let _ = h.join();
+        }
+
+        // ---- feed the performance model --------------------------------
+        // One transactional ingest per session (a single lock hold in
+        // `record_session`): device slots in order, packages in
+        // completion order — concurrent sessions serialize at session
+        // granularity and never interleave mid-ledger. Runs *before*
+        // the failure return below — a fault-recovered (or even failed)
+        // run still contributes every package it completed, so the
+        // store's estimates survive device failures.
+        if let Some(store) = &perf {
+            let granule = bench.granule.max(1) as f64;
+            let ledger: Vec<(&str, f64, Duration)> = observations
+                .iter()
+                .enumerate()
+                .flat_map(|(slot, obs)| {
+                    let device = device_traces[slot].name.as_str();
+                    obs.iter().map(move |o| {
+                        (device, o.range.len() as f64 / granule, o.timing.span)
+                    })
+                })
+                .collect();
+            store.record_session(session, &store_key, &ledger);
         }
 
         // ---- recover the arena: results are already in place -----------
@@ -1091,6 +1161,7 @@ fn handle_event(
     master: &mut MasterState,
     arena: &OutputArena,
     device_traces: &mut [DeviceTrace],
+    observations: &mut [Vec<PackageObservation>],
     reported: &mut [bool],
     finished: &mut usize,
     faults: &mut Vec<FaultEvent>,
@@ -1109,28 +1180,35 @@ fn handle_event(
             master.unstaged[dev] = master.unstaged[dev].saturating_sub(1);
             master.top_up(dev);
         }
-        FromWorker::Done { dev } => {
+        FromWorker::Done { dev, timing } => {
             // Workers execute in assignment order, so the front pending
             // range is the completed one; its results are fully in the
-            // arena by the time Done is sent.
-            master.pending[dev].pop_front();
+            // arena by the time Done is sent. Close the feedback loop
+            // *before* topping up: the next `next_package` for this
+            // device must already see the completed package's span.
+            if let Some(range) = master.pending[dev].pop_front() {
+                master.scheduler.observe(dev, range, timing);
+            }
             master.top_up(dev);
         }
-        FromWorker::Finished { dev, traces, xfer, lease_wait } => {
+        FromWorker::Finished { dev, traces, observations: obs, xfer, lease_wait } => {
             device_traces[dev].packages = traces;
             device_traces[dev].xfer = xfer;
             device_traces[dev].lease_wait = lease_wait;
+            observations[dev] = obs;
             if !reported[dev] {
                 reported[dev] = true;
                 *finished += 1;
             }
         }
-        FromWorker::Failed { dev, message, traces, xfer, lease_wait } => {
+        FromWorker::Failed { dev, message, traces, observations: obs, xfer, lease_wait } => {
             // The packages the worker *completed* stay attributed to it
-            // — their results are already in the arena.
+            // — their results are already in the arena (and their
+            // observations still feed the performance model).
             device_traces[dev].packages = traces;
             device_traces[dev].xfer = xfer;
             device_traces[dev].lease_wait = lease_wait;
+            observations[dev] = obs;
             if !reported[dev] {
                 reported[dev] = true;
                 *finished += 1;
@@ -1294,6 +1372,16 @@ mod tests {
         let items: usize = report.devices.iter().map(|d| d.items()).sum();
         assert_eq!(items, report.gws, "all work computed exactly once");
         assert!(outcome.output(0).is_some());
+        // The session fed the runtime's performance model: every device
+        // that computed packages has a (kernel, device) estimate now.
+        assert!(rt.perf_model().total_samples() > 0, "session observations ingested");
+        for d in report.devices.iter().filter(|d| !d.packages.is_empty()) {
+            assert!(
+                rt.perf_model().estimate("binomial", &d.name).is_some(),
+                "estimate for {} missing",
+                d.name
+            );
+        }
         rt.wait_idle();
         // Every registration retired with its worker.
         for d in 0..rt.node().devices.len() {

@@ -1,0 +1,436 @@
+//! `Adaptive` — the feedback-driven scheduler (spec `adaptive`,
+//! composable with `+pipe`): a closed-loop guided self-scheduler that
+//! starts from a profile (or warm-start) prior, re-estimates every
+//! device's throughput online from completed-package timings, and sizes
+//! packages with a decaying chunk schedule plus a minimum-package
+//! clamp.
+//!
+//! Compared to [`HGuided`](super::HGuided), which inherits the paper's
+//! formula and (since the feedback refactor) merely swaps powers for
+//! observed rates, `Adaptive` is built around the loop:
+//!
+//! * **Probe first.** Packages assigned to a device that has no
+//!   measured estimate yet (no warm-start, nothing observed) are
+//!   deliberately small — half the regular chunk, capped at the
+//!   equal-share size. The probe sizing covers the first *two*
+//!   pre-observation packages, not just the first, because under
+//!   `+pipe` (depth 2) the master requests the lookahead package
+//!   before the probe's observation can possibly return — so a
+//!   mis-calibrated profile costs at most a double-buffer's worth of
+//!   probes before real measurements take over.
+//! * **EWMA re-estimation.** Every `observe` folds the package's
+//!   granules/sec into the device's estimate with weight `alpha`
+//!   (default 0.5 — responsive enough to track a `slow:` fault's
+//!   mid-run degradation within a couple of packages).
+//! * **Decaying chunks.** Package sizes follow the guided schedule
+//!   `remaining * share / k` split across devices, so early packages
+//!   are large (few sync points) and late ones small (devices converge
+//!   on a common finish line even when an estimate was stale).
+//! * **Minimum clamp.** An absolute floor of `min_granules` bounds the
+//!   tail's package count; unlike HGuided's power-scaled floor it does
+//!   not trust the profile, because the profile may be wrong — that is
+//!   the whole point of this scheduler.
+//! * **Tail cutoff.** A chunk is *refused* (terminal `None` for that
+//!   device) when the rest of the live devices would drain the entire
+//!   pending pool faster than this device finishes just its chunk —
+//!   the clamp-sized tail package that HGuided is obliged to hand a
+//!   straggler is exactly what stretches its last-device completion.
+//!   The cutoff never fires while the pool is large (chunk time is a
+//!   `1/(k·n)` fraction of pool time), never fires on the last live
+//!   device (someone must drain the pool), and a refused device still
+//!   executes requeued recovery work (the requeue path bypasses the
+//!   scheduler by design).
+//!
+//! Like Dynamic/HGuided it is pool-based: packages are carved off one
+//! shared cursor on demand, so the exactly-once cover invariant is
+//! structural (asserted by the scheduler property suite) and feedback
+//! can never change *what* is computed — only how big the pieces are
+//! and who computes them. The one recovery wrinkle the cutoff adds is
+//! handled in `reclaim_device`: when the *last* live device dies, the
+//! undelivered remainder of the pool is handed back to the engine so
+//! the requeue path can split it over the remaining (refused but
+//! healthy) workers instead of stranding it.
+//!
+//! `next_package` stays off the allocation path; the only non-O(1)
+//! piece is the tail-cutoff's live-rate sum, an O(ndev) fold over a
+//! handful of devices (the estimates it reads are maintained
+//! incrementally by [`ThroughputModel`]).
+
+use crate::coordinator::work::Range;
+
+use super::{PackageTiming, SchedDevice, Scheduler, ThroughputModel};
+
+/// Chunk decay divisor: each request takes `share/k` of the remainder.
+pub const DEFAULT_K: f64 = 2.0;
+/// Absolute minimum package size, in granules.
+pub const DEFAULT_MIN_GRANULES: usize = 1;
+/// EWMA weight of the newest observation.
+pub const DEFAULT_ALPHA: f64 = 0.5;
+
+/// Tail-cutoff threshold: refuse a chunk when the device would need
+/// longer for it than the rest of the live node needs for the *whole*
+/// pending pool (scaled by this factor).
+const TAIL_BETA: f64 = 1.0;
+
+#[derive(Debug)]
+pub struct Adaptive {
+    k: f64,
+    min_granules: usize,
+    alpha: f64,
+    // ---- per-run state (reset in `start`) ----------------------------
+    granule: usize,
+    total: usize,
+    /// Next unassigned granule.
+    cursor: usize,
+    ndev: usize,
+    model: ThroughputModel,
+    /// Packages assigned so far per device (probe bookkeeping).
+    assigned: Vec<usize>,
+    /// Devices this scheduler has gone terminal for: tail-cutoff
+    /// refusals plus devices reclaimed by the recovery path.
+    terminal: Vec<bool>,
+}
+
+impl Adaptive {
+    pub fn new(k: f64, min_granules: usize, alpha: f64) -> Self {
+        Self {
+            k: if k <= 0.0 { DEFAULT_K } else { k },
+            min_granules: min_granules.max(1),
+            alpha: if alpha > 0.0 && alpha <= 1.0 { alpha } else { DEFAULT_ALPHA },
+            granule: 1,
+            total: 0,
+            cursor: 0,
+            ndev: 0,
+            model: ThroughputModel::new(DEFAULT_ALPHA),
+            assigned: Vec::new(),
+            terminal: Vec::new(),
+        }
+    }
+
+    /// Package size in granules for device `dev` given `pending`
+    /// unassigned granules.
+    fn packet_granules(&self, dev: usize, pending: usize) -> usize {
+        let n = self.ndev as f64;
+        let share = self.model.share(dev);
+        let raw = if self.assigned[dev] < 2 && !self.model.observed(dev) {
+            // Probe: half the regular chunk, capped at the equal-share
+            // size in case the prior *over*-rates the device — one
+            // cheap observation beats one wrong commitment. (The cap
+            // works both ways: a prior-weak device probes below its
+            // share so the tail cutoff never mistakes the probe itself
+            // for a straggler chunk.) Covers the first two
+            // pre-observation packages: a `+pipe` lookahead is
+            // requested before the probe's observation can return.
+            pending as f64 * share.min(1.0 / n) / (2.0 * self.k * n)
+        } else {
+            pending as f64 * share / (self.k * n)
+        };
+        (raw.floor() as usize).max(self.min_granules).min(pending)
+    }
+
+    /// Estimated throughput of the live devices other than `dev`.
+    fn live_rest_rate(&self, dev: usize) -> f64 {
+        (0..self.ndev)
+            .filter(|&d| d != dev && !self.terminal[d])
+            .map(|d| self.model.rate(d))
+            .sum()
+    }
+}
+
+impl Scheduler for Adaptive {
+    fn name(&self) -> String {
+        "Adaptive".into()
+    }
+
+    fn start(&mut self, total_granules: usize, granule: usize, devices: &[SchedDevice]) {
+        self.granule = granule;
+        self.total = total_granules;
+        self.cursor = 0;
+        self.ndev = devices.len();
+        self.model = ThroughputModel::new(self.alpha);
+        self.model.start(devices);
+        self.assigned = vec![0; devices.len()];
+        self.terminal = vec![false; devices.len()];
+    }
+
+    fn next_package(&mut self, dev: usize) -> Option<Range> {
+        let pending = self.total - self.cursor;
+        if pending == 0 {
+            return None;
+        }
+        if self.terminal.get(dev).copied().unwrap_or(true) {
+            return None;
+        }
+        let take = self.packet_granules(dev, pending);
+        // Tail cutoff (see module docs): refuse when the rest of the
+        // live node drains the whole pending pool faster than this
+        // device finishes its chunk. `rest == 0` means this is the last
+        // live device — it must take the work.
+        let rest = self.live_rest_rate(dev);
+        if rest > 0.0 {
+            let time_dev = take as f64 / self.model.rate(dev).max(1e-12);
+            let time_rest = pending as f64 / rest;
+            if time_dev > TAIL_BETA * time_rest {
+                self.terminal[dev] = true;
+                return None;
+            }
+        }
+        self.assigned[dev] += 1;
+        let begin = self.cursor;
+        self.cursor += take;
+        Some(Range::new(begin * self.granule, self.cursor * self.granule))
+    }
+
+    fn observe(&mut self, dev: usize, range: Range, timing: PackageTiming) {
+        let granules = range.len() as f64 / self.granule.max(1) as f64;
+        self.model.observe(dev, granules, timing.span);
+    }
+
+    /// Recovery: mark the dead device terminal so the tail cutoff never
+    /// counts it as a live drain — and, when *no* live device remains,
+    /// hand the undelivered remainder of the pool back to the engine so
+    /// the requeue path (which bypasses the scheduler) can split it
+    /// over the surviving, possibly tail-refused, workers instead of
+    /// stranding it.
+    fn reclaim_device(&mut self, dev: usize) -> Vec<Range> {
+        if dev < self.ndev {
+            self.terminal[dev] = true;
+        }
+        if self.cursor < self.total && (0..self.ndev).all(|d| self.terminal[d]) {
+            let r = Range::new(self.cursor * self.granule, self.total * self.granule);
+            self.cursor = self.total;
+            return vec![r];
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+
+    fn devs(powers: &[f64]) -> Vec<SchedDevice> {
+        powers
+            .iter()
+            .enumerate()
+            .map(|(i, p)| SchedDevice::new(format!("d{i}"), *p))
+            .collect()
+    }
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    fn timing(span: Duration) -> PackageTiming {
+        PackageTiming { span, raw_exec: span / 4 }
+    }
+
+    /// Drain with an active set (a refused device is terminal, the
+    /// others keep pulling) and return the ranges in assignment order.
+    fn drain(s: &mut Adaptive, ndev: usize, observe_span: impl Fn(usize) -> Duration) -> Vec<Range> {
+        let mut active: Vec<usize> = (0..ndev).collect();
+        let mut out = Vec::new();
+        let mut turn = 0usize;
+        while !active.is_empty() {
+            let dev = active[turn % active.len()];
+            match s.next_package(dev) {
+                Some(r) => {
+                    s.observe(dev, r, timing(observe_span(dev)));
+                    out.push(r);
+                    turn += 1;
+                }
+                None => {
+                    let idx = turn % active.len();
+                    active.remove(idx);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn covers_everything_with_refusals_allowed() {
+        let mut s = Adaptive::new(2.0, 2, 0.5);
+        s.start(1000, 64, &devs(&[0.3, 1.0, 0.42]));
+        let ranges = drain(&mut s, 3, |_| ms(5));
+        let mut cursor = 0;
+        for r in &ranges {
+            assert_eq!(r.begin, cursor, "contiguous cover");
+            assert_eq!(r.begin % 64, 0);
+            assert_eq!(r.len() % 64, 0);
+            cursor = r.end;
+        }
+        assert_eq!(cursor, 1000 * 64, "whole pool covered");
+    }
+
+    #[test]
+    fn pre_observation_packages_are_probes() {
+        let mut s = Adaptive::new(2.0, 1, 0.5);
+        s.start(10_000, 1, &devs(&[1.0, 1.0]));
+        // Probe = pending / (2*k*n*n) = 10_000 / 16 = 625.
+        let probe = s.next_package(0).unwrap();
+        assert_eq!(probe.len(), 625);
+        // The second pre-observation request (the `+pipe` lookahead
+        // case) is still probe-sized: the mis-commitment bound holds
+        // for a double-buffered device too.
+        let second = s.next_package(0).unwrap();
+        assert!(
+            second.len() <= probe.len(),
+            "unobserved lookahead stays probe-sized: {} vs {}",
+            second.len(),
+            probe.len()
+        );
+        // Once observed, sizing switches to the (larger) share formula.
+        s.observe(0, probe, timing(ms(100)));
+        let third = s.next_package(0).unwrap().len();
+        assert!(third > probe.len(), "post-observation package grows: {third}");
+    }
+
+    #[test]
+    fn shares_follow_observed_throughput_not_priors() {
+        // Priors claim equal devices; observations say device 1 is 4x
+        // slower. After the probes, device 0's packages must be several
+        // times larger than device 1's.
+        let mut s = Adaptive::new(2.0, 1, 0.5);
+        s.start(100_000, 1, &devs(&[1.0, 1.0]));
+        for dev in 0..2 {
+            let r = s.next_package(dev).unwrap();
+            let span = if dev == 1 { ms(400) } else { ms(100) };
+            s.observe(dev, r, timing(span));
+        }
+        let fast = s.next_package(0).unwrap().len();
+        let slow = s.next_package(1).unwrap().len();
+        assert!(
+            fast > slow * 3,
+            "observed 4x speed gap must show in sizing: fast {fast} vs slow {slow}"
+        );
+    }
+
+    #[test]
+    fn warm_start_skips_the_probe() {
+        let mut d = devs(&[1.0, 1.0]);
+        d[0].warm_rate = Some(1000.0);
+        d[1].warm_rate = Some(250.0);
+        let mut s = Adaptive::new(2.0, 1, 0.5);
+        s.start(10_000, 1, &d);
+        let a = s.next_package(0).unwrap().len();
+        let b = s.next_package(1).unwrap().len();
+        // Warm rates are trusted immediately: 4x ratio, no probe sizing.
+        assert!(a > b * 2, "warm-started shares: {a} vs {b}");
+        assert!(a > 625, "no probe clamp on a warm device: {a}");
+    }
+
+    #[test]
+    fn respects_min_granules_and_terminates() {
+        let mut s = Adaptive::new(2.0, 4, 0.5);
+        s.start(1000, 1, &devs(&[1.0, 1.0]));
+        let sizes: Vec<usize> = drain(&mut s, 2, |_| ms(10)).iter().map(Range::len).collect();
+        for &sz in &sizes[..sizes.len() - 1] {
+            assert!(sz >= 4, "package below the clamp: {sz}");
+        }
+        assert_eq!(sizes.iter().sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn degradation_mid_run_shifts_work_away() {
+        // Both devices observed fast; then device 1 degrades 4x. Its
+        // next packages must shrink relative to device 0's.
+        let mut s = Adaptive::new(2.0, 1, 0.5);
+        s.start(1_000_000, 1, &devs(&[1.0, 1.0]));
+        for round in 0..6 {
+            for dev in 0..2 {
+                let r = s.next_package(dev).unwrap();
+                let per_granule = if dev == 1 && round >= 2 { 4 } else { 1 };
+                let span = Duration::from_micros((r.len() * per_granule) as u64);
+                s.observe(dev, r, timing(span));
+            }
+        }
+        let fast = s.next_package(0).unwrap().len();
+        let slow = s.next_package(1).unwrap().len();
+        assert!(
+            fast > slow * 2,
+            "post-degradation sizing must shift work: fast {fast} vs slow {slow}"
+        );
+    }
+
+    /// The tail cutoff: on a tiny pool, a device whose estimated rate
+    /// is far below the node's is refused (terminal) instead of being
+    /// handed a clamp-sized chunk that would outlive the whole pool —
+    /// and the last live device is never refused.
+    #[test]
+    fn tail_cutoff_refuses_stragglers_but_never_the_last_device() {
+        // 4-granule pool (the nbody shape) over batel-like powers.
+        let mut s = Adaptive::new(2.0, 2, 0.5);
+        s.start(4, 256, &devs(&[0.3, 1.0, 0.42]));
+        assert!(s.next_package(0).is_none(), "cpu chunk outlives the pool: refused");
+        assert!(s.next_package(2).is_none(), "acc likewise");
+        let r = s.next_package(1).expect("the fast device must be granted");
+        assert!(!r.is_empty());
+        // The refusals are terminal...
+        assert!(s.next_package(0).is_none());
+        // ...and the last live device drains the rest alone.
+        let mut cursor = r.end;
+        while let Some(r) = s.next_package(1) {
+            assert_eq!(r.begin, cursor);
+            cursor = r.end;
+        }
+        assert_eq!(cursor, 4 * 256, "gpu drained the whole pool");
+    }
+
+    #[test]
+    fn cutoff_never_fires_on_a_large_pool() {
+        let mut s = Adaptive::new(2.0, 1, 0.5);
+        s.start(10_000, 1, &devs(&[0.05, 1.0]));
+        // Even a 20x-weaker prior is granted while the pool is deep.
+        assert!(s.next_package(0).is_some(), "weak device still served mid-run");
+    }
+
+    /// Recovery contract: when the last live device dies, the
+    /// undelivered pool remainder is handed back (exactly once) so the
+    /// requeue path can cover it; with live devices left, nothing is.
+    #[test]
+    fn reclaim_returns_remainder_only_when_no_live_device_is_left() {
+        let mut s = Adaptive::new(2.0, 2, 0.5);
+        s.start(4, 256, &devs(&[0.3, 1.0, 0.42]));
+        assert!(s.next_package(0).is_none(), "cpu tail-refused");
+        assert!(s.next_package(2).is_none(), "acc tail-refused");
+        let first = s.next_package(1).expect("gpu granted");
+        // gpu dies holding `first`; it was the last live device, so the
+        // scheduler must surrender the undelivered remainder.
+        let reclaimed = s.reclaim_device(1);
+        assert_eq!(reclaimed.len(), 1);
+        assert_eq!(reclaimed[0].begin, first.end);
+        assert_eq!(reclaimed[0].end, 4 * 256);
+        assert!(s.reclaim_device(1).is_empty(), "remainder handed back once");
+        assert!(s.next_package(1).is_none(), "reclaimed device is terminal");
+
+        // With another live device, a death reclaims nothing — the
+        // survivor keeps draining the shared pool.
+        let mut s = Adaptive::new(2.0, 1, 0.5);
+        s.start(100, 1, &devs(&[1.0, 1.0]));
+        s.next_package(0).unwrap();
+        assert!(s.reclaim_device(0).is_empty(), "dev1 still drains the pool");
+        let mut total = 0;
+        while let Some(r) = s.next_package(1) {
+            total += r.len();
+        }
+        assert!(total > 0, "survivor pulled the remaining pool");
+    }
+
+    #[test]
+    fn zero_granules_yields_nothing() {
+        let mut s = Adaptive::new(2.0, 2, 0.5);
+        s.start(0, 8, &devs(&[1.0]));
+        assert!(s.next_package(0).is_none());
+    }
+
+    #[test]
+    fn bad_knobs_fall_back_to_defaults() {
+        let s = Adaptive::new(-1.0, 0, 7.0);
+        assert!((s.k - DEFAULT_K).abs() < 1e-12);
+        assert_eq!(s.min_granules, 1);
+        assert!((s.alpha - DEFAULT_ALPHA).abs() < 1e-12);
+    }
+}

@@ -87,7 +87,7 @@ mod tests {
     use super::*;
 
     fn devs(n: usize) -> Vec<SchedDevice> {
-        (0..n).map(|i| SchedDevice { name: format!("d{i}"), power: 1.0 }).collect()
+        (0..n).map(|i| SchedDevice::new(format!("d{i}"), 1.0)).collect()
     }
 
     #[test]

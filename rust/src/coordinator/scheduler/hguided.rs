@@ -1,32 +1,57 @@
 //! HGuided scheduler (paper §5.3) — the best performer in the paper's
 //! evaluation: guided self-scheduling weighted by heterogeneous device
-//! powers. Large packages early (few synchronization points), shrinking
-//! toward the end (all devices finish together), sized per device:
+//! throughputs. Large packages early (few synchronization points),
+//! shrinking toward the end (all devices finish together), sized per
+//! device:
 //!
-//!   packet_size_i = floor( G_r * P_i / (k * n * sum_j P_j) )
+//!   packet_size_i = floor( G_r * R_i / (k * n * sum_j R_j) )
 //!
-//! clamped below by a per-device minimum that also scales with power
+//! clamped below by a per-device minimum that scales with profile power
 //! ("giving bigger package sizes in the most powerful devices").
 //!
-//! Hot-loop note: `next_package` runs on the master's `Done` path for
-//! every package, so it must not allocate — it is pure arithmetic over
-//! the per-run state (`powers` is built once per `start`; sizing reads
-//! it in place). Keep it that way: no per-package `Vec`s or `String`s
-//! (the audit that turned `Dynamic`'s materialized queue into O(1)
-//! arithmetic applies here too).
+//! Since the adaptive-scheduling refactor, `R_i` is the device's
+//! *observed* throughput — an EWMA of granules/sec fed back through
+//! [`Scheduler::observe`] on every completed package (seeded from the
+//! performance-model store's warm rates when available) — instead of
+//! the static `DeviceProfile::relative_power` prior. With no
+//! observations the [`ThroughputModel`] degrades to the powers exactly,
+//! so sizing is bit-identical to the paper's original static-profile
+//! formula (the regression test below asserts this against an
+//! independent reimplementation of the old code). `feedback = false`
+//! (spec `hguided:feedback=0`) pins that static behavior for ablations
+//! and for comparing against [`Adaptive`](super::Adaptive).
+//!
+//! Hot-loop note (PR-2 audit, discharged): `next_package` runs on the
+//! master's `Done` path for every package, so it is O(1) and
+//! allocation-free — pure arithmetic over per-run state. The
+//! observed-throughput sums are maintained *incrementally* by
+//! `observe` (`ThroughputModel`), never recomputed by a scan of the
+//! remaining pool or the device list. Keep it that way: no per-package
+//! `Vec`s, `String`s or O(ndev) reductions.
 
 use crate::coordinator::work::Range;
 
-use super::{SchedDevice, Scheduler};
+use super::{PackageTiming, SchedDevice, Scheduler, ThroughputModel};
+
+/// EWMA weight of the newest observation. More conservative than
+/// [`Adaptive`](super::Adaptive)'s default: HGuided's geometric decay
+/// already limits per-package risk, so it smooths harder against
+/// content-dependent cost wobble (Mandelbrot regions).
+const FEEDBACK_ALPHA: f64 = 0.3;
 
 #[derive(Debug)]
 pub struct HGuided {
     k: f64,
     min_granules: usize,
+    /// Consume observed throughput (default). Off = the paper's static
+    /// profile-power sizing, byte-for-byte.
+    feedback: bool,
     granule: usize,
+    /// Static profile priors: the minimum clamp stays power-scaled even
+    /// under feedback (it is a floor heuristic, not an estimate).
     powers: Vec<f64>,
-    power_sum: f64,
     power_max: f64,
+    model: ThroughputModel,
     /// Next unassigned granule.
     cursor: usize,
     total: usize,
@@ -34,24 +59,30 @@ pub struct HGuided {
 
 impl HGuided {
     pub fn new(k: f64, min_granules: usize) -> Self {
+        Self::with_feedback(k, min_granules, true)
+    }
+
+    pub fn with_feedback(k: f64, min_granules: usize, feedback: bool) -> Self {
         Self {
             k: if k <= 0.0 { 2.0 } else { k },
             min_granules: min_granules.max(1),
+            feedback,
             granule: 1,
             powers: Vec::new(),
-            power_sum: 0.0,
             power_max: 0.0,
+            model: ThroughputModel::new(FEEDBACK_ALPHA),
             cursor: 0,
             total: 0,
         }
     }
 
     /// Package size (in granules) for device `dev` given `pending`
-    /// unassigned granules — the paper's formula plus the minimum clamp.
+    /// unassigned granules — the paper's formula over the model's
+    /// throughput estimates, plus the minimum clamp.
     fn packet_granules(&self, dev: usize, pending: usize) -> usize {
         let n = self.powers.len() as f64;
+        let raw = (pending as f64 * self.model.rate(dev)) / (self.k * n * self.model.rate_sum());
         let p = self.powers[dev];
-        let raw = (pending as f64 * p) / (self.k * n * self.power_sum);
         let min_i =
             ((self.min_granules as f64 * p / self.power_max).round() as usize).max(1);
         (raw.floor() as usize).max(min_i).min(pending)
@@ -60,14 +91,22 @@ impl HGuided {
 
 impl Scheduler for HGuided {
     fn name(&self) -> String {
-        "HGuided".into()
+        if self.feedback { "HGuided".into() } else { "HGuided-static".into() }
     }
 
     fn start(&mut self, total_granules: usize, granule: usize, devices: &[SchedDevice]) {
         self.granule = granule;
         self.powers = devices.iter().map(|d| d.power.max(1e-6)).collect();
-        self.power_sum = self.powers.iter().sum();
         self.power_max = self.powers.iter().cloned().fold(f64::MIN, f64::max);
+        self.model = ThroughputModel::new(FEEDBACK_ALPHA);
+        if self.feedback {
+            self.model.start(devices);
+        } else {
+            // Strip warm rates: static mode must see priors only.
+            let cold: Vec<SchedDevice> =
+                devices.iter().map(|d| SchedDevice::new(d.name.clone(), d.power)).collect();
+            self.model.start(&cold);
+        }
         self.cursor = 0;
         self.total = total_granules;
     }
@@ -82,17 +121,27 @@ impl Scheduler for HGuided {
         self.cursor += take;
         Some(Range::new(begin * self.granule, self.cursor * self.granule))
     }
+
+    fn observe(&mut self, dev: usize, range: Range, timing: PackageTiming) {
+        if !self.feedback {
+            return;
+        }
+        let granules = range.len() as f64 / self.granule.max(1) as f64;
+        self.model.observe(dev, granules, timing.span);
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use std::time::Duration;
+
     use super::*;
 
     fn devs(powers: &[f64]) -> Vec<SchedDevice> {
         powers
             .iter()
             .enumerate()
-            .map(|(i, p)| SchedDevice { name: format!("d{i}"), power: *p })
+            .map(|(i, p)| SchedDevice::new(format!("d{i}"), *p))
             .collect()
     }
 
@@ -158,5 +207,136 @@ mod tests {
         let mut b = HGuided::new(4.0, 1);
         b.start(1000, 1, &devs(&[1.0]));
         assert!(a.next_package(0).unwrap().len() > b.next_package(0).unwrap().len());
+    }
+
+    /// The paper's original static-profile sizing, reimplemented
+    /// independently as the regression oracle: the feedback rewrite may
+    /// not move a single boundary while no observation has been fed.
+    struct OldHGuided {
+        k: f64,
+        min_granules: usize,
+        granule: usize,
+        powers: Vec<f64>,
+        power_sum: f64,
+        power_max: f64,
+        cursor: usize,
+        total: usize,
+    }
+
+    impl OldHGuided {
+        fn start(k: f64, min_granules: usize, total: usize, granule: usize, d: &[SchedDevice]) -> Self {
+            let powers: Vec<f64> = d.iter().map(|x| x.power.max(1e-6)).collect();
+            let power_sum = powers.iter().sum();
+            let power_max = powers.iter().cloned().fold(f64::MIN, f64::max);
+            Self { k, min_granules, granule, powers, power_sum, power_max, cursor: 0, total }
+        }
+
+        fn next_package(&mut self, dev: usize) -> Option<(usize, usize)> {
+            let pending = self.total - self.cursor;
+            if pending == 0 {
+                return None;
+            }
+            let n = self.powers.len() as f64;
+            let p = self.powers[dev];
+            let raw = (pending as f64 * p) / (self.k * n * self.power_sum);
+            let min_i =
+                ((self.min_granules as f64 * p / self.power_max).round() as usize).max(1);
+            let take = (raw.floor() as usize).max(min_i).min(pending);
+            let begin = self.cursor;
+            self.cursor += take;
+            Some((begin * self.granule, self.cursor * self.granule))
+        }
+    }
+
+    /// PR-2 audit regression: without observations, the rewritten
+    /// (O(1), feedback-capable) HGuided produces bit-identical covers
+    /// to the old static-profile implementation — same boundaries, same
+    /// order, for feedback on *and* off, across power sets, k, min and
+    /// interleavings.
+    #[test]
+    fn matches_old_static_formula_bit_for_bit() {
+        let cases: &[(&[f64], f64, usize, usize, usize)] = &[
+            (&[0.3, 1.0, 0.42], 2.0, 2, 1000, 64),
+            (&[1.0], 1.0, 1, 777, 1),
+            (&[0.2, 1.0], 3.5, 4, 4096, 8),
+            (&[0.05, 0.5, 0.95, 1.0], 2.0, 2, 513, 128),
+            (&[1.0, 1.0], 4.0, 8, 10_000, 1),
+        ];
+        for &(powers, k, min, total, granule) in cases {
+            for feedback in [true, false] {
+                let d = devs(powers);
+                let mut new = HGuided::with_feedback(k, min, feedback);
+                new.start(total, granule, &d);
+                let mut old = OldHGuided::start(k, min, total, granule, &d);
+                let mut dev = 0usize;
+                loop {
+                    let a = new.next_package(dev % powers.len()).map(|r| (r.begin, r.end));
+                    let b = old.next_package(dev % powers.len());
+                    assert_eq!(
+                        a, b,
+                        "boundary moved (powers {powers:?} k={k} min={min} feedback={feedback})"
+                    );
+                    if a.is_none() {
+                        break;
+                    }
+                    dev += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn feedback_shifts_shares_static_mode_does_not() {
+        let slow_obs = PackageTiming { span: Duration::from_millis(400), raw_exec: Duration::from_millis(100) };
+        let fast_obs = PackageTiming { span: Duration::from_millis(100), raw_exec: Duration::from_millis(25) };
+        for (feedback, expect_shift) in [(true, true), (false, false)] {
+            let mut s = HGuided::with_feedback(2.0, 1, feedback);
+            s.start(100_000, 1, &devs(&[1.0, 1.0]));
+            // Equal priors; observations say device 1 is 4x slower.
+            for _ in 0..4 {
+                let r0 = s.next_package(0).unwrap();
+                s.observe(0, r0, fast_obs);
+                let r1 = s.next_package(1).unwrap();
+                s.observe(1, r1, slow_obs);
+            }
+            let fast = s.next_package(0).unwrap().len();
+            let slow = s.next_package(1).unwrap().len();
+            if expect_shift {
+                assert!(
+                    fast > slow * 2,
+                    "feedback must shift sizing: fast {fast} vs slow {slow}"
+                );
+            } else {
+                // Static mode keeps the ~equal-power ratio (the next
+                // pending shrinks between the two calls, so allow the
+                // geometric decay, not a throughput shift).
+                assert!(
+                    fast < slow * 2,
+                    "static mode must not shift sizing: fast {fast} vs slow {slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn warm_rates_seed_feedback_but_not_static_mode() {
+        let mut d = devs(&[1.0, 1.0]);
+        d[0].warm_rate = Some(400.0);
+        d[1].warm_rate = Some(100.0);
+        let mut warm = HGuided::with_feedback(2.0, 1, true);
+        warm.start(10_000, 1, &d);
+        let a = warm.next_package(0).unwrap().len();
+        let mut warm_b = HGuided::with_feedback(2.0, 1, true);
+        warm_b.start(10_000, 1, &d);
+        let b = warm_b.next_package(1).unwrap().len();
+        assert!(a > b * 2, "warm rates drive sizing: {a} vs {b}");
+
+        let mut cold = HGuided::with_feedback(2.0, 1, false);
+        cold.start(10_000, 1, &d);
+        let c = cold.next_package(0).unwrap().len();
+        let mut cold_b = HGuided::with_feedback(2.0, 1, false);
+        cold_b.start(10_000, 1, &d);
+        let e = cold_b.next_package(1).unwrap().len();
+        assert_eq!(c, e, "static mode ignores warm rates");
     }
 }

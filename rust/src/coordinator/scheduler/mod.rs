@@ -1,22 +1,44 @@
-//! Pluggable scheduling system (paper Figure 4: Strategy pattern).
+//! Pluggable scheduling system (paper Figure 4: Strategy pattern),
+//! closed into a feedback loop since the adaptive-scheduling refactor.
 //!
 //! A scheduler hands out granule-ranges to devices on request. The engine
 //! calls `start` once with the work size and device descriptions, then
-//! `next_package(dev)` every time device `dev` has a free pipeline slot;
-//! `None` is terminal for that device. All three of the paper's
-//! algorithms are implemented; new ones plug in through the same trait,
-//! and the [`Pipelined`] wrapper composes package pipelining with any of
+//! `next_package(dev)` every time device `dev` has a free pipeline slot
+//! (`None` is terminal for that device) — and, new in the feedback loop,
+//! `observe(dev, range, timing)` every time a package *completes*, so
+//! adaptive strategies can re-estimate device throughput online instead
+//! of trusting the static `DeviceProfile::relative_power` priors. All
+//! three of the paper's algorithms are implemented plus the online
+//! [`Adaptive`] strategy; new ones plug in through the same trait, and
+//! the [`Pipelined`] wrapper composes package pipelining with any of
 //! them (spec suffix `+pipe`).
+//!
+//! The feedback data flow (see docs/ARCHITECTURE.md):
+//!
+//! ```text
+//!   worker ──Done{timing}──▶ master ──observe(dev, range, timing)──▶ scheduler
+//!      └──Finished{observations}──▶ master ──record──▶ PerfModelStore
+//! ```
+//!
+//! Completed-package timings drive the run's own scheduler immediately;
+//! the per-run observation ledger is folded into the persistent
+//! [`PerfModelStore`](crate::platform::perfmodel::PerfModelStore) at
+//! session end, so *later* sessions warm-start from what earlier
+//! sessions measured ([`SchedDevice::warm_rate`]).
 
+pub mod adaptive;
 pub mod dynamic;
 pub mod hguided;
 pub mod pipelined;
 pub mod static_sched;
 
+pub use adaptive::Adaptive;
 pub use dynamic::Dynamic;
 pub use hguided::HGuided;
 pub use pipelined::Pipelined;
 pub use static_sched::Static;
+
+use std::time::Duration;
 
 use crate::coordinator::work::Range;
 
@@ -26,6 +48,46 @@ pub struct SchedDevice {
     pub name: String,
     /// Relative computing power (HGuided's P_i; Static's default props).
     pub power: f64,
+    /// Warm-start prior from the performance-model store: the EWMA
+    /// granules/sec earlier sessions observed for this kernel on this
+    /// device. `None` = cold start from `power` alone.
+    pub warm_rate: Option<f64>,
+}
+
+impl SchedDevice {
+    pub fn new(name: impl Into<String>, power: f64) -> Self {
+        Self { name: name.into(), power, warm_rate: None }
+    }
+
+    pub fn with_warm_rate(mut self, rate: Option<f64>) -> Self {
+        self.warm_rate = rate;
+        self
+    }
+}
+
+/// Timing of one completed package, as fed back to the scheduler (and,
+/// at session end, to the performance-model store). `span` is the
+/// package's simulated occupancy of the device — compute window plus
+/// the stretched hold, including staging in blocking mode — i.e. the
+/// duration that determines when the device is free again, which is
+/// exactly what load balancing needs to predict.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PackageTiming {
+    /// Simulated device-occupancy span of the package.
+    pub span: Duration,
+    /// Raw (un-stretched) backend execution time.
+    pub raw_exec: Duration,
+}
+
+/// One completed package plus its timing — the per-run observation
+/// ledger entry workers ship with `Finished`/`Failed` (collected
+/// regardless of the `introspect` flag, like [`TransferStats`]).
+///
+/// [`TransferStats`]: crate::coordinator::introspector::TransferStats
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PackageObservation {
+    pub range: Range,
+    pub timing: PackageTiming,
 }
 
 /// The Strategy interface.
@@ -40,6 +102,14 @@ pub trait Scheduler: Send {
     /// in *work-items*. `None` = no more work for this device, ever.
     fn next_package(&mut self, dev: usize) -> Option<Range>;
 
+    /// Feedback: device `dev` completed `range` in `timing.span`. Called
+    /// by the master loop on every `Done` event, *before* the next
+    /// `next_package` for that device, so adaptive strategies size the
+    /// following packages from observed throughput. Strategies whose
+    /// partitioning is fixed up front (Static's pre-split, Dynamic's
+    /// equal chunks) ignore it — the default is a no-op.
+    fn observe(&mut self, _dev: usize, _range: Range, _timing: PackageTiming) {}
+
     /// Packages the engine keeps in flight per device. The default `1`
     /// is the paper's blocking assign-on-completion loop; the
     /// [`Pipelined`] wrapper raises it to enable transfer/compute
@@ -51,19 +121,143 @@ pub trait Scheduler: Send {
     /// Hand back any ranges this scheduler has *reserved* for device
     /// `dev` but not yet delivered — called by the engine's recovery
     /// path when `dev`'s worker dies, so reserved work can be requeued
-    /// to survivors. Pool-based schedulers (Dynamic, HGuided) reserve
-    /// nothing per device — survivors simply drain the shared pool — so
-    /// the default returns nothing. Static overrides it: its pre-split
-    /// package for a device that died before pulling it would otherwise
-    /// be stranded forever.
+    /// to survivors. Pool-based schedulers (Dynamic, HGuided, Adaptive)
+    /// reserve nothing per device — survivors simply drain the shared
+    /// pool — so the default returns nothing. Static overrides it: its
+    /// pre-split package for a device that died before pulling it would
+    /// otherwise be stranded forever.
     fn reclaim_device(&mut self, _dev: usize) -> Vec<Range> {
         Vec::new()
     }
 }
 
+/// Online per-device throughput estimator shared by the feedback-driven
+/// strategies (HGuided, Adaptive): an EWMA of observed granules/sec per
+/// device, with profile-power imputation for devices that have not been
+/// observed yet.
+///
+/// Observed rates are absolute (granules/sec); profile powers are
+/// relative (fractions of the fastest device). The model bridges the
+/// two scales through the *implied rate per unit power* of the observed
+/// devices, so a half-observed device set still yields comparable
+/// estimates. Until anything is observed the estimates degrade to the
+/// powers themselves — sizing formulas that consume only estimate
+/// *ratios* are then bit-identical to their static-profile ancestors
+/// (asserted by HGuided's regression test).
+///
+/// All queries are O(1): the observed/unobserved sums are maintained
+/// incrementally by `observe`, never recomputed by scans — this is what
+/// keeps `next_package` off the master's `Done` hot path allocation- and
+/// scan-free (the PR-2 hot-loop audit, discharged).
+#[derive(Debug, Default)]
+pub struct ThroughputModel {
+    alpha: f64,
+    /// Static profile priors (relative power), clamped positive.
+    powers: Vec<f64>,
+    /// EWMA observed rate (granules/sec); `None` until first observation.
+    rates: Vec<Option<f64>>,
+    sum_obs_rate: f64,
+    sum_obs_power: f64,
+    sum_unobs_power: f64,
+}
+
+impl ThroughputModel {
+    /// `alpha` is the EWMA smoothing factor: the weight of the newest
+    /// sample (1.0 = trust only the last package, 0 → frozen; clamped
+    /// into (0, 1]).
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha: alpha.clamp(0.01, 1.0), ..Default::default() }
+    }
+
+    /// Reset for a run. Warm-start rates (the store's cross-session
+    /// estimates) seed the observed state when present, so the very
+    /// first package is already sized from measured throughput.
+    pub fn start(&mut self, devices: &[SchedDevice]) {
+        self.powers = devices.iter().map(|d| d.power.max(1e-6)).collect();
+        self.rates = devices
+            .iter()
+            .map(|d| d.warm_rate.filter(|r| r.is_finite() && *r > 0.0))
+            .collect();
+        self.sum_obs_rate = 0.0;
+        self.sum_obs_power = 0.0;
+        self.sum_unobs_power = 0.0;
+        for (i, r) in self.rates.iter().enumerate() {
+            match r {
+                Some(rate) => {
+                    self.sum_obs_rate += rate;
+                    self.sum_obs_power += self.powers[i];
+                }
+                None => self.sum_unobs_power += self.powers[i],
+            }
+        }
+    }
+
+    /// Fold one completed package: `granules` granules over `span`.
+    pub fn observe(&mut self, dev: usize, granules: f64, span: Duration) {
+        if dev >= self.rates.len() || !granules.is_finite() || granules <= 0.0 {
+            return;
+        }
+        let secs = span.as_secs_f64();
+        if secs <= 0.0 {
+            return;
+        }
+        let sample = granules / secs;
+        match self.rates[dev] {
+            Some(prev) => {
+                let next = self.alpha * sample + (1.0 - self.alpha) * prev;
+                self.sum_obs_rate += next - prev;
+                self.rates[dev] = Some(next);
+            }
+            None => {
+                self.rates[dev] = Some(sample);
+                self.sum_obs_rate += sample;
+                self.sum_obs_power += self.powers[dev];
+                self.sum_unobs_power = (self.sum_unobs_power - self.powers[dev]).max(0.0);
+            }
+        }
+    }
+
+    /// True once `dev` has an estimate grounded in a measurement
+    /// (in-run observation or warm-start prior).
+    pub fn observed(&self, dev: usize) -> bool {
+        self.rates.get(dev).map(|r| r.is_some()).unwrap_or(false)
+    }
+
+    /// Granules/sec per unit of profile power implied by the observed
+    /// devices (1.0 until anything is observed) — the bridge that puts
+    /// observed absolute rates and unobserved relative priors on one
+    /// scale.
+    fn implied_rate_per_power(&self) -> f64 {
+        if self.sum_obs_power > 0.0 {
+            (self.sum_obs_rate / self.sum_obs_power).max(1e-9)
+        } else {
+            1.0
+        }
+    }
+
+    /// Current throughput estimate for `dev`, comparable across devices.
+    pub fn rate(&self, dev: usize) -> f64 {
+        match self.rates.get(dev).copied().flatten() {
+            Some(r) => r.max(1e-9),
+            None => self.powers[dev] * self.implied_rate_per_power(),
+        }
+    }
+
+    /// Sum of all devices' estimates — O(1), maintained incrementally.
+    pub fn rate_sum(&self) -> f64 {
+        (self.sum_obs_rate.max(0.0) + self.sum_unobs_power * self.implied_rate_per_power())
+            .max(1e-9)
+    }
+
+    /// `dev`'s share of the estimated node throughput, in (0, 1].
+    pub fn share(&self, dev: usize) -> f64 {
+        (self.rate(dev) / self.rate_sum()).clamp(1e-9, 1.0)
+    }
+}
+
 /// Engine-facing configuration enum (Tier-2 API); materialized into a
 /// boxed Strategy at run time.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum SchedulerKind {
     /// One package per device, proportional to `props` (or to device
     /// powers when `None`). `reversed` flips the delivery order
@@ -71,8 +265,15 @@ pub enum SchedulerKind {
     Static { props: Option<Vec<f64>>, reversed: bool },
     /// `packages` equal chunks, first-come-first-served.
     Dynamic { packages: usize },
-    /// Geometrically decreasing packages weighted by device power.
-    HGuided { k: f64, min_granules: usize },
+    /// Geometrically decreasing packages weighted by device throughput:
+    /// observed EWMA granules/sec when `feedback` is on (the default),
+    /// the static profile powers when off (the paper's original
+    /// formulation, kept for ablation as `hguided:feedback=0`).
+    HGuided { k: f64, min_granules: usize, feedback: bool },
+    /// Fully feedback-driven: profile/warm-start prior, per-device
+    /// probe packages, online EWMA re-estimation (`alpha`), decaying
+    /// chunk schedule (`k`) with an absolute minimum-package clamp.
+    Adaptive { k: f64, min_granules: usize, alpha: f64 },
     /// Any base strategy with per-device package pipelining of `depth`.
     Pipelined { inner: Box<SchedulerKind>, depth: usize },
 }
@@ -91,13 +292,29 @@ impl SchedulerKind {
     }
 
     pub fn hguided() -> Self {
-        SchedulerKind::HGuided { k: 2.0, min_granules: 2 }
+        SchedulerKind::HGuided { k: 2.0, min_granules: 2, feedback: true }
+    }
+
+    /// The paper's original static-profile HGuided (no throughput
+    /// feedback) — the ablation baseline the adaptive acceptance runs
+    /// compare against.
+    pub fn hguided_static() -> Self {
+        SchedulerKind::HGuided { k: 2.0, min_granules: 2, feedback: false }
+    }
+
+    pub fn adaptive() -> Self {
+        SchedulerKind::Adaptive {
+            k: adaptive::DEFAULT_K,
+            min_granules: adaptive::DEFAULT_MIN_GRANULES,
+            alpha: adaptive::DEFAULT_ALPHA,
+        }
     }
 
     /// Wrap this strategy with package pipelining of `depth` (2 =
-    /// double-buffered, the sweet spot).
+    /// double-buffered, the sweet spot; clamped up to 2, matching
+    /// [`Pipelined::new`]).
     pub fn pipelined(self, depth: usize) -> Self {
-        SchedulerKind::Pipelined { inner: Box::new(self), depth }
+        SchedulerKind::Pipelined { inner: Box::new(self), depth: depth.max(2) }
     }
 
     /// The base (unwrapped) strategy — what partitioning validation
@@ -127,8 +344,11 @@ impl SchedulerKind {
                 Box::new(Static::new(props.clone(), *reversed))
             }
             SchedulerKind::Dynamic { packages } => Box::new(Dynamic::new(*packages)),
-            SchedulerKind::HGuided { k, min_granules } => {
-                Box::new(HGuided::new(*k, *min_granules))
+            SchedulerKind::HGuided { k, min_granules, feedback } => {
+                Box::new(HGuided::with_feedback(*k, *min_granules, *feedback))
+            }
+            SchedulerKind::Adaptive { k, min_granules, alpha } => {
+                Box::new(Adaptive::new(*k, *min_granules, *alpha))
             }
             SchedulerKind::Pipelined { inner, depth } => {
                 Box::new(Pipelined::new(inner.build(), *depth))
@@ -141,49 +361,162 @@ impl SchedulerKind {
             SchedulerKind::Static { reversed: false, .. } => "Static".into(),
             SchedulerKind::Static { reversed: true, .. } => "Static rev".into(),
             SchedulerKind::Dynamic { packages } => format!("Dynamic {packages}"),
-            SchedulerKind::HGuided { .. } => "HGuided".into(),
+            SchedulerKind::HGuided { feedback: true, .. } => "HGuided".into(),
+            SchedulerKind::HGuided { feedback: false, .. } => "HGuided-static".into(),
+            SchedulerKind::Adaptive { .. } => "Adaptive".into(),
             SchedulerKind::Pipelined { inner, .. } => format!("{}+pipe", inner.label()),
+        }
+    }
+
+    /// The canonical CLI spec for this kind — `parse_spec(k.spec())`
+    /// round-trips to an equal kind for every expressible configuration
+    /// (explicit Static `props` have no spec syntax and format as plain
+    /// `static`).
+    pub fn spec(&self) -> String {
+        match self {
+            SchedulerKind::Static { reversed: false, .. } => "static".into(),
+            SchedulerKind::Static { reversed: true, .. } => "static-rev".into(),
+            SchedulerKind::Dynamic { packages } => format!("dynamic:{packages}"),
+            SchedulerKind::HGuided { k, min_granules, feedback } => {
+                let mut s = format!("hguided:k={k},min={min_granules}");
+                if !*feedback {
+                    s.push_str(",feedback=0");
+                }
+                s
+            }
+            SchedulerKind::Adaptive { k, min_granules, alpha } => {
+                format!("adaptive:k={k},min={min_granules},alpha={alpha}")
+            }
+            SchedulerKind::Pipelined { inner, depth } => {
+                format!("{}+pipe{depth}", inner.spec())
+            }
         }
     }
 }
 
+/// Every valid CLI scheduler spec, for error messages.
+pub const VALID_SPECS: &str = "static, static-rev, dynamic[:N], \
+     hguided[:k=F,min=N,feedback=0|1], adaptive[:k=F,min=N,alpha=F] \
+     — each optionally with a +pipe[N] suffix (N >= 2), e.g. \
+     hguided+pipe, dynamic:150+pipe3, adaptive+pipe";
+
 /// Parse a CLI scheduler spec: `static`, `static-rev`, `dynamic:N`,
-/// `hguided`, `hguided:k=…,min=…` — each optionally with a `+pipe`
-/// suffix (`+pipe` = depth 2, `+pipeN` = depth N) enabling the package
-/// pipeline, e.g. `hguided+pipe` or `dynamic:150+pipe3`.
-pub fn parse_kind(s: &str) -> Option<SchedulerKind> {
+/// `hguided[:k=…,min=…,feedback=0|1]`, `adaptive[:k=…,min=…,alpha=…]` —
+/// each optionally with a `+pipe` suffix (`+pipe` = depth 2, `+pipeN` =
+/// depth N) enabling the package pipeline, e.g. `hguided+pipe`,
+/// `adaptive+pipe` or `dynamic:150+pipe3`. Unknown names, knobs or
+/// malformed values are rejected with an error naming the valid specs —
+/// never a silent fallback.
+pub fn parse_spec(s: &str) -> Result<SchedulerKind, String> {
     if let Some(idx) = s.rfind("+pipe") {
         let (base, suffix) = s.split_at(idx);
         let digits = &suffix["+pipe".len()..];
-        let depth = if digits.is_empty() { 2 } else { digits.parse().ok()? };
-        if depth < 2 {
-            return None;
+        if base.is_empty() {
+            return Err(format!("'+pipe' needs a base spec; valid specs: {VALID_SPECS}"));
         }
-        return parse_kind(base).map(|k| k.pipelined(depth));
+        let depth: usize = if digits.is_empty() {
+            2
+        } else {
+            digits
+                .parse()
+                .map_err(|_| format!("bad pipeline depth '{digits}' in '{s}' (want +pipe or +pipeN, N >= 2)"))?
+        };
+        if depth < 2 {
+            return Err(format!(
+                "pipeline depth {depth} in '{s}' is not a pipeline (need N >= 2; depth 1 is the blocking loop — drop the suffix)"
+            ));
+        }
+        return parse_spec(base).map(|k| k.pipelined(depth));
     }
     let (head, tail) = s.split_once(':').unwrap_or((s, ""));
+    let parse_f64 = |key: &str, val: &str| -> Result<f64, String> {
+        val.parse::<f64>()
+            .ok()
+            .filter(|v| v.is_finite() && *v > 0.0)
+            .ok_or_else(|| format!("bad value '{val}' for '{key}' in '{s}' (want a positive number)"))
+    };
+    let parse_usize = |key: &str, val: &str| -> Result<usize, String> {
+        val.parse::<usize>()
+            .map_err(|_| format!("bad value '{val}' for '{key}' in '{s}' (want a non-negative integer)"))
+    };
     match head {
-        "static" => Some(SchedulerKind::Static { props: None, reversed: false }),
-        "static-rev" => Some(SchedulerKind::Static { props: None, reversed: true }),
+        "static" => Ok(SchedulerKind::Static { props: None, reversed: false }),
+        "static-rev" => Ok(SchedulerKind::Static { props: None, reversed: true }),
         "dynamic" => {
-            let packages = if tail.is_empty() { 50 } else { tail.parse().ok()? };
-            Some(SchedulerKind::Dynamic { packages })
+            let packages = if tail.is_empty() {
+                50
+            } else {
+                parse_usize("dynamic", tail)?
+            };
+            Ok(SchedulerKind::Dynamic { packages })
         }
         "hguided" => {
             let mut k = 2.0;
             let mut min = 2;
+            let mut feedback = true;
             for part in tail.split(',').filter(|p| !p.is_empty()) {
-                let (key, val) = part.split_once('=')?;
+                let (key, val) = part
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad knob '{part}' in '{s}' (want key=value)"))?;
                 match key {
-                    "k" => k = val.parse().ok()?,
-                    "min" => min = val.parse().ok()?,
-                    _ => return None,
+                    "k" => k = parse_f64("k", val)?,
+                    "min" => min = parse_usize("min", val)?,
+                    "feedback" => {
+                        feedback = match val {
+                            "1" => true,
+                            "0" => false,
+                            other => {
+                                return Err(format!(
+                                    "bad value '{other}' for 'feedback' in '{s}' (want 0 or 1)"
+                                ))
+                            }
+                        }
+                    }
+                    other => {
+                        return Err(format!(
+                            "unknown hguided knob '{other}' in '{s}' (valid: k, min, feedback)"
+                        ))
+                    }
                 }
             }
-            Some(SchedulerKind::HGuided { k, min_granules: min })
+            Ok(SchedulerKind::HGuided { k, min_granules: min, feedback })
         }
-        _ => None,
+        "adaptive" => {
+            let mut k = adaptive::DEFAULT_K;
+            let mut min = adaptive::DEFAULT_MIN_GRANULES;
+            let mut alpha = adaptive::DEFAULT_ALPHA;
+            for part in tail.split(',').filter(|p| !p.is_empty()) {
+                let (key, val) = part
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad knob '{part}' in '{s}' (want key=value)"))?;
+                match key {
+                    "k" => k = parse_f64("k", val)?,
+                    "min" => min = parse_usize("min", val)?,
+                    "alpha" => {
+                        alpha = parse_f64("alpha", val)?;
+                        if alpha > 1.0 {
+                            return Err(format!(
+                                "bad value '{val}' for 'alpha' in '{s}' (want a weight in (0, 1])"
+                            ));
+                        }
+                    }
+                    other => {
+                        return Err(format!(
+                            "unknown adaptive knob '{other}' in '{s}' (valid: k, min, alpha)"
+                        ))
+                    }
+                }
+            }
+            Ok(SchedulerKind::Adaptive { k, min_granules: min, alpha })
+        }
+        other => Err(format!("unknown scheduler '{other}'; valid specs: {VALID_SPECS}")),
     }
+}
+
+/// `Option` shim over [`parse_spec`] for callers that only care whether
+/// the spec is valid (the error text is what the CLI surfaces).
+pub fn parse_kind(s: &str) -> Option<SchedulerKind> {
+    parse_spec(s).ok()
 }
 
 #[cfg(test)]
@@ -195,11 +528,14 @@ mod tests {
         assert_eq!(SchedulerKind::static_default().label(), "Static");
         assert_eq!(SchedulerKind::dynamic(150).label(), "Dynamic 150");
         assert_eq!(SchedulerKind::hguided().label(), "HGuided");
+        assert_eq!(SchedulerKind::hguided_static().label(), "HGuided-static");
+        assert_eq!(SchedulerKind::adaptive().label(), "Adaptive");
         assert_eq!(
             SchedulerKind::Static { props: None, reversed: true }.label(),
             "Static rev"
         );
         assert_eq!(SchedulerKind::hguided().pipelined(2).label(), "HGuided+pipe");
+        assert_eq!(SchedulerKind::adaptive().pipelined(2).label(), "Adaptive+pipe");
     }
 
     #[test]
@@ -209,14 +545,48 @@ mod tests {
         assert!(matches!(parse_kind("dynamic:150"), Some(SchedulerKind::Dynamic { packages: 150 })));
         assert!(matches!(parse_kind("dynamic"), Some(SchedulerKind::Dynamic { packages: 50 })));
         match parse_kind("hguided:k=3.5,min=4") {
-            Some(SchedulerKind::HGuided { k, min_granules }) => {
+            Some(SchedulerKind::HGuided { k, min_granules, feedback }) => {
                 assert!((k - 3.5).abs() < 1e-9);
                 assert_eq!(min_granules, 4);
+                assert!(feedback, "feedback defaults on");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse_kind("hguided:feedback=0"),
+            Some(SchedulerKind::HGuided { feedback: false, .. })
+        ));
+        match parse_kind("adaptive:k=3,min=4,alpha=0.25") {
+            Some(SchedulerKind::Adaptive { k, min_granules, alpha }) => {
+                assert!((k - 3.0).abs() < 1e-9);
+                assert_eq!(min_granules, 4);
+                assert!((alpha - 0.25).abs() < 1e-9);
             }
             other => panic!("{other:?}"),
         }
         assert!(parse_kind("nope").is_none());
         assert!(parse_kind("hguided:bogus=1").is_none());
+        assert!(parse_kind("adaptive:alpha=2").is_none(), "alpha > 1 rejected");
+        assert!(parse_kind("adaptive:alpha=0").is_none(), "alpha 0 rejected");
+    }
+
+    #[test]
+    fn parse_errors_name_the_valid_specs() {
+        let err = parse_spec("guided").unwrap_err();
+        assert!(err.contains("unknown scheduler 'guided'"), "{err}");
+        assert!(err.contains("adaptive"), "lists valid specs: {err}");
+        let err = parse_spec("hguided:q=1").unwrap_err();
+        assert!(err.contains("unknown hguided knob 'q'"), "{err}");
+        let err = parse_spec("adaptive:k=-1").unwrap_err();
+        assert!(err.contains("bad value '-1'"), "{err}");
+        let err = parse_spec("dynamic:x").unwrap_err();
+        assert!(err.contains("bad value 'x'"), "{err}");
+        let err = parse_spec("+pipe").unwrap_err();
+        assert!(err.contains("needs a base spec"), "{err}");
+        let err = parse_spec("hguided+pipe1").unwrap_err();
+        assert!(err.contains("depth 1"), "{err}");
+        let err = parse_spec("hguided+pipex").unwrap_err();
+        assert!(err.contains("bad pipeline depth"), "{err}");
     }
 
     #[test]
@@ -232,9 +602,42 @@ mod tests {
         let k = parse_kind("static-rev+pipe").unwrap();
         assert_eq!(k.label(), "Static rev+pipe");
 
+        let k = parse_kind("adaptive+pipe").unwrap();
+        assert_eq!(k.pipeline_depth(), 2);
+        assert!(matches!(k.base(), SchedulerKind::Adaptive { .. }));
+
         assert!(parse_kind("+pipe").is_none(), "needs a base spec");
         assert!(parse_kind("hguided+pipe1").is_none(), "depth < 2 is not a pipeline");
         assert!(parse_kind("hguided+pipex").is_none());
+    }
+
+    /// Every expressible spec must round-trip `parse_spec(k.spec()) == k`
+    /// — the CLI satellite's parse/format contract.
+    #[test]
+    fn specs_round_trip() {
+        let kinds = vec![
+            SchedulerKind::static_default(),
+            SchedulerKind::Static { props: None, reversed: true },
+            SchedulerKind::dynamic(50),
+            SchedulerKind::dynamic(150),
+            SchedulerKind::hguided(),
+            SchedulerKind::hguided_static(),
+            SchedulerKind::HGuided { k: 3.5, min_granules: 4, feedback: true },
+            SchedulerKind::adaptive(),
+            SchedulerKind::Adaptive { k: 1.5, min_granules: 8, alpha: 0.25 },
+            SchedulerKind::static_default().pipelined(2),
+            SchedulerKind::dynamic(150).pipelined(3),
+            SchedulerKind::hguided().pipelined(2),
+            SchedulerKind::hguided_static().pipelined(4),
+            SchedulerKind::adaptive().pipelined(2),
+            SchedulerKind::adaptive().pipelined(3),
+        ];
+        for k in kinds {
+            let spec = k.spec();
+            let parsed = parse_spec(&spec)
+                .unwrap_or_else(|e| panic!("spec '{spec}' of {k:?} failed to parse: {e}"));
+            assert_eq!(parsed, k, "round trip through '{spec}'");
+        }
     }
 
     #[test]
@@ -242,5 +645,87 @@ mod tests {
         let k = SchedulerKind::dynamic(7).pipelined(2).pipelined(3);
         assert!(matches!(k.base(), SchedulerKind::Dynamic { packages: 7 }));
         assert_eq!(k.pipeline_depth(), 3);
+    }
+
+    // ---- ThroughputModel ------------------------------------------------
+
+    fn devs(powers: &[f64]) -> Vec<SchedDevice> {
+        powers
+            .iter()
+            .enumerate()
+            .map(|(i, p)| SchedDevice::new(format!("d{i}"), *p))
+            .collect()
+    }
+
+    #[test]
+    fn model_cold_start_degrades_to_powers() {
+        let mut m = ThroughputModel::new(0.5);
+        m.start(&devs(&[0.3, 1.0, 0.42]));
+        assert!((m.rate(0) - 0.3).abs() < 1e-12);
+        assert!((m.rate(1) - 1.0).abs() < 1e-12);
+        assert!((m.rate_sum() - 1.72).abs() < 1e-12);
+        assert!(!m.observed(0));
+        assert!((m.share(1) - 1.0 / 1.72).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_observation_replaces_prior_then_ewma() {
+        let mut m = ThroughputModel::new(0.5);
+        m.start(&devs(&[1.0, 1.0]));
+        m.observe(0, 100.0, Duration::from_secs(1));
+        assert!(m.observed(0));
+        assert!((m.rate(0) - 100.0).abs() < 1e-9, "first sample replaces the prior");
+        m.observe(0, 50.0, Duration::from_secs(1));
+        assert!((m.rate(0) - 75.0).abs() < 1e-9, "EWMA with alpha 0.5");
+    }
+
+    #[test]
+    fn model_imputes_unobserved_devices_from_observed_scale() {
+        let mut m = ThroughputModel::new(0.5);
+        m.start(&devs(&[0.5, 1.0]));
+        // Device 1 (power 1.0) observed at 200 granules/sec => implied
+        // 200/power-unit => device 0 (power 0.5) imputed at 100.
+        m.observe(1, 200.0, Duration::from_secs(1));
+        assert!((m.rate(0) - 100.0).abs() < 1e-9, "got {}", m.rate(0));
+        assert!((m.rate_sum() - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_warm_start_counts_as_observed() {
+        let mut m = ThroughputModel::new(0.5);
+        let mut d = devs(&[0.5, 1.0]);
+        d[0].warm_rate = Some(80.0);
+        m.start(&d);
+        assert!(m.observed(0));
+        assert!(!m.observed(1));
+        assert!((m.rate(0) - 80.0).abs() < 1e-9);
+        // Implied scale from the warm device: 80 / 0.5 = 160 per power.
+        assert!((m.rate(1) - 160.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_ignores_degenerate_observations() {
+        let mut m = ThroughputModel::new(0.5);
+        m.start(&devs(&[1.0]));
+        m.observe(0, 0.0, Duration::from_secs(1));
+        m.observe(0, 10.0, Duration::ZERO);
+        m.observe(7, 10.0, Duration::from_secs(1));
+        assert!(!m.observed(0), "degenerate samples are dropped");
+        assert!((m.rate(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_tracks_degradation() {
+        let mut m = ThroughputModel::new(0.5);
+        m.start(&devs(&[1.0, 1.0]));
+        m.observe(0, 100.0, Duration::from_secs(1));
+        m.observe(1, 100.0, Duration::from_secs(1));
+        // Device 1 degrades 4x; after a few packages its estimate drops
+        // toward 25 and its share toward 1/5.
+        for _ in 0..6 {
+            m.observe(1, 25.0, Duration::from_secs(1));
+        }
+        assert!(m.rate(1) < 30.0, "degraded estimate converged: {}", m.rate(1));
+        assert!(m.share(1) < 0.25, "share shifted away: {}", m.share(1));
     }
 }

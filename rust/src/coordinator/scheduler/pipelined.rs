@@ -19,7 +19,7 @@
 
 use crate::coordinator::work::Range;
 
-use super::{SchedDevice, Scheduler};
+use super::{PackageTiming, SchedDevice, Scheduler};
 
 /// Composes a base strategy with a per-device package pipeline.
 pub struct Pipelined {
@@ -48,6 +48,14 @@ impl Scheduler for Pipelined {
         self.inner.next_package(dev)
     }
 
+    /// Feedback passes straight through: `adaptive+pipe` (and
+    /// feedback-HGuided under `+pipe`) re-estimate throughput exactly
+    /// as their blocking counterparts do — prefetching only changes
+    /// *when* sizing decisions happen, never what they learn from.
+    fn observe(&mut self, dev: usize, range: Range, timing: PackageTiming) {
+        self.inner.observe(dev, range, timing);
+    }
+
     fn pipeline_depth(&self) -> usize {
         self.depth
     }
@@ -63,7 +71,7 @@ mod tests {
     use super::*;
 
     fn devs(n: usize) -> Vec<SchedDevice> {
-        (0..n).map(|i| SchedDevice { name: format!("d{i}"), power: 0.5 + i as f64 }).collect()
+        (0..n).map(|i| SchedDevice::new(format!("d{i}"), 0.5 + i as f64)).collect()
     }
 
     #[test]
@@ -98,5 +106,35 @@ mod tests {
         assert_eq!(s.name(), "Dynamic 50+pipe");
         assert_eq!(s.pipeline_depth(), 2);
         assert_eq!(kind.label(), "Dynamic 50+pipe");
+    }
+
+    /// `observe` reaches the wrapped strategy: a wrapped and an
+    /// unwrapped Adaptive fed the same assignments and observations
+    /// stay in lockstep — the feedback loop composes with `+pipe`.
+    #[test]
+    fn observe_forwards_to_inner() {
+        use super::super::{Adaptive, PackageTiming};
+        use std::time::Duration;
+
+        let equal: Vec<SchedDevice> =
+            (0..2).map(|i| SchedDevice::new(format!("d{i}"), 1.0)).collect();
+        let mut plain = Adaptive::new(2.0, 1, 0.5);
+        let mut piped = Pipelined::new(Box::new(Adaptive::new(2.0, 1, 0.5)), 2);
+        plain.start(100_000, 1, &equal);
+        piped.start(100_000, 1, &equal);
+        for round in 0..6 {
+            for dev in 0..2 {
+                let a = plain.next_package(dev);
+                let b = piped.next_package(dev);
+                assert_eq!(a, b, "diverged at round {round} dev {dev}");
+                let Some(r) = a else { return };
+                // Device 1 is observed 4x slower; both schedulers must
+                // fold the same feedback and keep producing equal sizes.
+                let span = Duration::from_micros((r.len() * if dev == 1 { 4 } else { 1 }) as u64);
+                let t = PackageTiming { span, raw_exec: span / 4 };
+                plain.observe(dev, r, t);
+                piped.observe(dev, r, t);
+            }
+        }
     }
 }

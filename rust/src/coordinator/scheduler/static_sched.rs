@@ -81,7 +81,7 @@ mod tests {
         powers
             .iter()
             .enumerate()
-            .map(|(i, p)| SchedDevice { name: format!("d{i}"), power: *p })
+            .map(|(i, p)| SchedDevice::new(format!("d{i}"), *p))
             .collect()
     }
 

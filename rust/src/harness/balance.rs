@@ -1,16 +1,25 @@
 //! Figure 9 — load balance per benchmark × scheduler × node, plus the
-//! shared co-execution runner used by Figures 10/11/12.
+//! shared co-execution runner used by Figures 10/11/12, plus the PR-5
+//! balance-efficiency harness behind `enginecl run --balance`: the
+//! per-scheduler busy-time efficiency grid over the five kernels,
+//! emitted as `BENCH_balance.json` with an optional CI guard
+//! (`ECL_BENCH_GUARD=1`) that fails when `adaptive` drops below
+//! `hguided` on the reference node.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::coordinator::DeviceSpec;
+use crate::coordinator::scheduler::parse_spec;
+use crate::coordinator::{Configurator, DeviceSpec};
 use crate::platform::NodeConfig;
 use crate::runtime::ArtifactRegistry;
 
-use super::runs::{coexec_metrics, paper_benches, paper_schedulers, run_once, solo_time, CoexecMetrics};
+use super::runs::{
+    build_engine, coexec_metrics, paper_benches, paper_schedulers, run_once, solo_time,
+    CoexecMetrics,
+};
 
 /// All (bench × scheduler) co-execution cells for one node, with solo
 /// baselines computed once per (bench, device).
@@ -81,4 +90,225 @@ pub fn balance_rows(eval: &NodeEvaluation) -> Vec<(String, Vec<(String, f64)>)> 
         }
     }
     rows
+}
+
+// ---- PR-5: the balance-efficiency harness (`run --balance`) -----------
+
+/// The five kernels of the efficiency grid (one ray scene stands in for
+/// the three — they share a kernel and differ only in content).
+pub fn balance_kernels() -> Vec<&'static str> {
+    vec!["gaussian", "ray1", "binomial", "mandelbrot", "nbody"]
+}
+
+/// The scheduler specs of the efficiency grid. Spec strings (parsed
+/// through the CLI grammar) so the emitted JSON names reproducible
+/// configurations; `hguided:feedback=0` is the static-profile ablation
+/// baseline.
+pub fn balance_specs() -> Vec<&'static str> {
+    vec!["static", "dynamic:50", "hguided", "hguided:feedback=0", "adaptive", "adaptive+pipe"]
+}
+
+/// One (bench, scheduler spec) cell of the efficiency grid.
+#[derive(Debug, Clone)]
+pub struct BalancePoint {
+    pub bench: String,
+    pub spec: String,
+    /// Busy-time balance efficiency (`RunReport::balance_efficiency`).
+    pub efficiency: f64,
+    /// Completion-ratio balance (`RunReport::balance`), for reference.
+    pub balance: f64,
+    pub wall: Duration,
+    pub packages: usize,
+}
+
+/// The full `run --balance` result.
+#[derive(Debug, Clone)]
+pub struct BalanceBench {
+    pub node: String,
+    pub quick: bool,
+    pub points: Vec<BalancePoint>,
+}
+
+impl BalanceBench {
+    /// Mean balance efficiency of one scheduler spec across kernels.
+    pub fn mean_efficiency(&self, spec: &str) -> Option<f64> {
+        let effs: Vec<f64> = self
+            .points
+            .iter()
+            .filter(|p| p.spec == spec)
+            .map(|p| p.efficiency)
+            .collect();
+        if effs.is_empty() {
+            None
+        } else {
+            Some(effs.iter().sum::<f64>() / effs.len() as f64)
+        }
+    }
+
+    /// The `BENCH_balance.json` artifact: per-cell efficiencies plus
+    /// per-spec means (hand-rolled JSON like the hotpath baseline —
+    /// no serde offline).
+    pub fn json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"node\": \"{}\",\n", self.node));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str("  \"cells\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"bench\": \"{}\", \"scheduler\": \"{}\", \"efficiency\": {:.4}, \
+                 \"balance\": {:.4}, \"wall_ms\": {:.2}, \"packages\": {}}}{}\n",
+                p.bench,
+                p.spec,
+                p.efficiency,
+                p.balance,
+                p.wall.as_secs_f64() * 1e3,
+                p.packages,
+                if i + 1 < self.points.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"mean_efficiency\": {\n");
+        let specs = balance_specs();
+        for (i, spec) in specs.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {:.4}{}\n",
+                spec,
+                self.mean_efficiency(spec).unwrap_or(0.0),
+                if i + 1 < specs.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+
+    /// The CI guard (`ECL_BENCH_GUARD=1`): `adaptive` must not fall
+    /// below `hguided` (0.05 slack for timing jitter) and must clear an
+    /// absolute efficiency floor — 0.85 on a full-size run (the PR-5
+    /// acceptance bar), relaxed to 0.70 in quick mode where per-package
+    /// overheads weigh disproportionately.
+    pub fn guard(&self) -> Result<()> {
+        let adaptive = self
+            .mean_efficiency("adaptive")
+            .ok_or_else(|| anyhow::anyhow!("no adaptive cells in the balance bench"))?;
+        let hguided = self
+            .mean_efficiency("hguided")
+            .ok_or_else(|| anyhow::anyhow!("no hguided cells in the balance bench"))?;
+        anyhow::ensure!(
+            adaptive + 0.05 >= hguided,
+            "balance regression: adaptive mean efficiency {adaptive:.3} below hguided {hguided:.3}"
+        );
+        let floor = if self.quick { 0.70 } else { 0.85 };
+        anyhow::ensure!(
+            adaptive >= floor,
+            "balance regression: adaptive mean efficiency {adaptive:.3} below the {floor:.2} floor"
+        );
+        Ok(())
+    }
+}
+
+/// The measurement configuration: simulated speeds ON (efficiency is a
+/// simclock property), init sleeps OFF (a constant that pads every
+/// scheduler equally), cold store per engine (each cell measures one
+/// self-contained run).
+fn balance_config() -> Configurator {
+    Configurator { simulate_init: false, ..Default::default() }
+}
+
+/// Run the efficiency grid on `node`. `quick` shrinks every kernel to a
+/// quarter of its problem size (granule-aligned) for CI smoke runs.
+pub fn run_balance(reg: &ArtifactRegistry, node: &NodeConfig, quick: bool) -> Result<BalanceBench> {
+    let all_devices: Vec<DeviceSpec> = (0..node.devices.len()).map(DeviceSpec::new).collect();
+    let mut points = Vec::new();
+    for bench in balance_kernels() {
+        let m = reg.bench(bench)?.clone();
+        let gws = if quick {
+            ((m.n / m.granule / 4).max(1)) * m.granule
+        } else {
+            m.n
+        };
+        for spec in balance_specs() {
+            let kind = parse_spec(spec).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let mut engine =
+                build_engine(reg, node, bench, all_devices.clone(), kind, Some(gws))?;
+            *engine.configurator() = balance_config();
+            engine.run().map_err(|e| anyhow::anyhow!("{bench}/{spec}: {e}"))?;
+            let report = engine.report().expect("successful run has a report");
+            points.push(BalancePoint {
+                bench: bench.to_string(),
+                spec: spec.to_string(),
+                efficiency: report.balance_efficiency(),
+                balance: report.balance(),
+                wall: report.wall,
+                packages: report.total_packages(),
+            });
+        }
+    }
+    Ok(BalanceBench { node: node.name.clone(), quick, points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(bench: &str, spec: &str, eff: f64) -> BalancePoint {
+        BalancePoint {
+            bench: bench.into(),
+            spec: spec.into(),
+            efficiency: eff,
+            balance: eff,
+            wall: Duration::from_millis(10),
+            packages: 4,
+        }
+    }
+
+    fn bench_with(adaptive: f64, hguided: f64, quick: bool) -> BalanceBench {
+        BalanceBench {
+            node: "batel".into(),
+            quick,
+            points: vec![
+                point("binomial", "adaptive", adaptive),
+                point("nbody", "adaptive", adaptive),
+                point("binomial", "hguided", hguided),
+                point("nbody", "hguided", hguided),
+            ],
+        }
+    }
+
+    #[test]
+    fn mean_efficiency_groups_by_spec() {
+        let b = bench_with(0.9, 0.8, false);
+        assert!((b.mean_efficiency("adaptive").unwrap() - 0.9).abs() < 1e-12);
+        assert!((b.mean_efficiency("hguided").unwrap() - 0.8).abs() < 1e-12);
+        assert!(b.mean_efficiency("nope").is_none());
+    }
+
+    #[test]
+    fn guard_accepts_adaptive_at_or_above_hguided() {
+        assert!(bench_with(0.90, 0.88, false).guard().is_ok());
+        // Within the 0.05 jitter slack.
+        assert!(bench_with(0.86, 0.90, false).guard().is_ok());
+    }
+
+    #[test]
+    fn guard_rejects_regressions() {
+        let err = bench_with(0.70, 0.90, false).guard().unwrap_err();
+        assert!(err.to_string().contains("below hguided"), "{err}");
+        // Above hguided but below the absolute full-run floor.
+        let err = bench_with(0.80, 0.75, false).guard().unwrap_err();
+        assert!(err.to_string().contains("floor"), "{err}");
+        // The quick floor is laxer.
+        assert!(bench_with(0.80, 0.75, true).guard().is_ok());
+    }
+
+    #[test]
+    fn json_artifact_is_parseable() {
+        let b = bench_with(0.9, 0.8, true);
+        let parsed = crate::util::json::Json::parse(&b.json()).expect("valid json");
+        assert_eq!(parsed.get("node").unwrap().as_str(), Some("batel"));
+        assert_eq!(parsed.get("quick").unwrap().as_bool(), Some(true));
+        assert_eq!(parsed.get("cells").unwrap().as_arr().unwrap().len(), 4);
+        let means = parsed.get("mean_efficiency").unwrap();
+        assert!((means.get("adaptive").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-3);
+    }
 }

@@ -14,7 +14,10 @@
 //!   [`Configurator`](coordinator::Configurator), scheduler selection =
 //!   Tier-2; device worker threads, the runtime backends, work
 //!   decomposition = Tier-3), with the paper's three
-//!   pluggable schedulers (Static / Dynamic / HGuided), a composable
+//!   pluggable schedulers (Static / Dynamic / HGuided) plus the
+//!   feedback-driven **Adaptive** scheduler (all closed into a loop by
+//!   `Scheduler::observe`, backed by a persistent cross-session
+//!   performance model — `platform::perfmodel`), a composable
 //!   package **pipeline** (`Engine::pipeline(depth)` / the `+pipe`
 //!   scheduler suffix) that overlaps host↔device transfers with compute,
 //!   a persistent **runtime** ([`Runtime`](coordinator::Runtime)) that
@@ -70,6 +73,8 @@ pub mod prelude {
         LeasePolicy, Program, RunReport, RunSession, Runtime, SchedulerKind, SessionHandle,
         SessionOutcome,
     };
-    pub use crate::platform::{DeviceKind, DeviceProfile, FaultKind, FaultPlan, NodeConfig};
+    pub use crate::platform::{
+        DeviceKind, DeviceProfile, FaultKind, FaultPlan, NodeConfig, PerfModelStore,
+    };
     pub use crate::runtime::{ArtifactRegistry, HostBuf};
 }

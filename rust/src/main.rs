@@ -16,12 +16,16 @@ USAGE:
   enginecl devices [--node batel|remo]
   enginecl benches
   enginecl run <bench> [--node N] [--devices 0,1,2|all|gpu|cpu]
-                        [--scheduler static|static-rev|dynamic:N|hguided]
+                        [--scheduler static|static-rev|dynamic:N|hguided|adaptive]
                         [--gws N] [--timeline] [--csv]
-                        [--fault SPEC] [--no-recovery]
+                        [--fault SPEC] [--no-recovery] [--no-warm-start]
                         (any scheduler spec takes a +pipe[N] suffix to
                          enable the transfer/compute pipeline, e.g.
-                         --scheduler hguided+pipe or dynamic:150+pipe3;
+                         --scheduler hguided+pipe, adaptive+pipe or
+                         dynamic:150+pipe3; hguided takes
+                         k=F,min=N,feedback=0|1 knobs and adaptive
+                         k=F,min=N,alpha=F — bad specs are rejected
+                         with the valid list, never silently defaulted;
                          --fault injects deterministic faults, e.g.
                          kill:dev1@pkg2, stall:dev0@pkg1:250ms,
                          slow:dev2@pkg0:4, panic:dev1@pkg0,
@@ -35,6 +39,12 @@ USAGE:
                          sessions; [--lease rotation|fifo] picks the
                          device-lease policy; [--seed S] pins the
                          simclock seed.
+                        [--balance] runs the balance-efficiency grid
+                         (5 kernels x scheduler specs incl. adaptive),
+                         writes BENCH_balance.json, and with
+                         ECL_BENCH_GUARD=1 fails if adaptive efficiency
+                         drops below hguided (ECL_BENCH_QUICK=1 or
+                         --quick shrinks problems for smoke runs).
   enginecl solo <bench> [--node N]         per-device solo times + S_max
   enginecl overhead <bench> [--device I] [--reps N]
   enginecl eval [--node N] [--reps N]      balance/speedup/efficiency grid
@@ -124,7 +134,17 @@ fn parse_devices(spec: &str, node: &NodeConfig) -> Vec<DeviceSpec> {
     }
 }
 
+/// Parse a `--scheduler` spec, surfacing the grammar's own error text
+/// (which names the valid specs) instead of a generic "bad" message.
+fn scheduler_from(args: &Args) -> Result<enginecl::coordinator::SchedulerKind> {
+    scheduler::parse_spec(args.get("scheduler").unwrap_or("hguided"))
+        .map_err(|e| anyhow::anyhow!("--scheduler: {e}"))
+}
+
 fn run(args: &Args) -> Result<()> {
+    if args.has_flag("balance") {
+        return balance_cmd(args);
+    }
     if let Some(raw) = args.get("concurrent") {
         let n: usize = raw
             .parse()
@@ -150,8 +170,7 @@ fn run(args: &Args) -> Result<()> {
     let node = node_from(args);
     let reg = ArtifactRegistry::discover()?;
     let devices = parse_devices(args.get("devices").unwrap_or("all"), &node);
-    let kind = scheduler::parse_kind(args.get("scheduler").unwrap_or("hguided"))
-        .ok_or_else(|| anyhow::anyhow!("bad --scheduler"))?;
+    let kind = scheduler_from(args)?;
     let gws = args.get("gws").and_then(|s| s.parse().ok());
 
     let mut engine = runs::build_engine(&reg, &node, bench, devices, kind, gws)?;
@@ -162,6 +181,9 @@ fn run(args: &Args) -> Result<()> {
     }
     if args.has_flag("no-recovery") {
         engine.configurator().fault_tolerant = false;
+    }
+    if args.has_flag("no-warm-start") {
+        engine.configurator().warm_start = false;
     }
     engine.run().map_err(|e| anyhow::anyhow!("{e}"))?;
     let report = engine.report().unwrap().clone();
@@ -212,12 +234,51 @@ fn run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `run --balance`: the PR-5 balance-efficiency grid — per-scheduler
+/// busy-time efficiency across the five kernels, the
+/// `BENCH_balance.json` artifact, and the `ECL_BENCH_GUARD=1` adaptive
+/// ≥ hguided regression guard.
+fn balance_cmd(args: &Args) -> Result<()> {
+    let node = node_from(args);
+    let reg = ArtifactRegistry::discover()?;
+    let quick = args.has_flag("quick") || runs::quick_mode();
+    let bench = balance::run_balance(&reg, &node, quick)?;
+    println!("balance-efficiency grid: node={} quick={}", bench.node, bench.quick);
+    println!(
+        "{:<11} {:<22} {:>10} {:>8} {:>9} {:>5}",
+        "bench", "scheduler", "busy-eff", "balance", "wall(ms)", "pkgs"
+    );
+    for p in &bench.points {
+        println!(
+            "{:<11} {:<22} {:>10.3} {:>8.3} {:>9.1} {:>5}",
+            p.bench,
+            p.spec,
+            p.efficiency,
+            p.balance,
+            p.wall.as_secs_f64() * 1e3,
+            p.packages
+        );
+    }
+    println!("\nmean balance efficiency by scheduler:");
+    for spec in balance::balance_specs() {
+        println!("  {:<22} {:.3}", spec, bench.mean_efficiency(spec).unwrap_or(0.0));
+    }
+    let json_path =
+        std::env::var("ECL_BENCH_JSON").unwrap_or_else(|_| "BENCH_balance.json".into());
+    std::fs::write(&json_path, bench.json())?;
+    println!("baseline artifact written to {json_path}");
+    if std::env::var("ECL_BENCH_GUARD").map(|v| v == "1").unwrap_or(false) {
+        bench.guard()?;
+        println!("guard passed: adaptive holds the hguided efficiency bar");
+    }
+    Ok(())
+}
+
 /// `run ... --concurrent N`: N sessions through one persistent runtime.
 fn concurrent_cmd(args: &Args, n: usize) -> Result<()> {
     let node = node_from(args);
     let reg = ArtifactRegistry::discover()?;
-    let kind = scheduler::parse_kind(args.get("scheduler").unwrap_or("hguided"))
-        .ok_or_else(|| anyhow::anyhow!("bad --scheduler"))?;
+    let kind = scheduler_from(args)?;
     let gws = args.get("gws").and_then(|s| s.parse().ok());
     let default_bench = args.positional.get(1).map(String::as_str).unwrap_or("binomial");
     let benches: Vec<String> = match args.get("benches") {

@@ -9,9 +9,11 @@
 //! which are preserved (DESIGN.md §4).
 
 pub mod fault;
+pub mod perfmodel;
 pub mod profile;
 pub mod simclock;
 
 pub use fault::{FaultInjector, FaultKind, FaultPlan, FaultSpec, FaultTrigger};
+pub use perfmodel::{ObservationRecord, PerfEstimate, PerfModelStore};
 pub use profile::{DeviceKind, DeviceProfile, NodeConfig};
 pub use simclock::TimeScaler;

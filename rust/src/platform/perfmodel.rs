@@ -1,0 +1,348 @@
+//! Persistent cross-session performance model: per-(kernel, device)
+//! throughput estimates learned from completed-package timings.
+//!
+//! The store lives on the persistent [`Runtime`] (and on each
+//! [`Engine`], for repeated solo runs), so sessions executed *later*
+//! warm-start their schedulers from what sessions executed *earlier*
+//! measured: `SessionExec` queries [`PerfModelStore::estimate`] for
+//! every selected device at scheduler-start time and passes the result
+//! as `SchedDevice::warm_rate`, then folds the session's observation
+//! ledger back in at session end ([`PerfModelStore::record_session`],
+//! the whole ledger under one lock hold). A mis-calibrated
+//! `DeviceProfile::relative_power`, a device degraded by a `slow:`
+//! fault in a previous run, or sustained lease contention all show up
+//! here as a lower estimate — and the next session's first package is
+//! already sized for the device that actually exists, not the one the
+//! profile describes.
+//!
+//! **Units.** Estimates are granules/sec keyed by kernel, so they are
+//! only ever compared within one kernel (granule sizes and per-granule
+//! cost differ across kernels; the model never mixes them).
+//!
+//! **Fault tolerance.** Observations come from the per-worker ledgers
+//! shipped with both `Finished` and `Failed` events, so a
+//! fault-recovered run still contributes every package it completed —
+//! the estimates survive (and reflect) device failures.
+//!
+//! **Determinism.** Every accepted observation is journaled in
+//! ingestion order. Sessions ingest transactionally —
+//! [`PerfModelStore::record_session`] holds the lock *once* for the
+//! whole session ledger (devices in slot order, packages in completion
+//! order), so concurrent sessions serialize at session granularity and
+//! never interleave mid-ledger. A fixed seed and a *sequential* session
+//! order reproduce the journal exactly; concurrent sessions ingest in
+//! session-completion order, which is whatever the (seeded) simclock
+//! produced. The journal is the audit trail that makes a warm-started
+//! schedule explainable after the fact; it is a bounded ring (the most
+//! recent [`JOURNAL_CAP`] records, [`PerfModelStore::journal_dropped`]
+//! counts evictions) so a long-lived runtime's memory does not grow
+//! with every package it ever executed — the EWMA estimates carry the
+//! long-term state.
+//!
+//! **Keys.** Estimates are keyed by the kernel *and* execution mode:
+//! pipelined sessions record under `<kernel>+pipe` (see
+//! `SessionExec`), because a pipelined package's span excludes the
+//! staging it overlapped while a blocking package's includes it —
+//! mixing the two would let one mode's throughput mis-seed the other's
+//! warm start.
+//!
+//! [`Runtime`]: crate::coordinator::runtime::Runtime
+//! [`Engine`]: crate::coordinator::engine::Engine
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// EWMA weight of the newest cross-session sample. Deliberately lower
+/// than the in-run models' weights: the store spans sessions, where a
+/// single outlier run should nudge, not overwrite, the estimate.
+pub const STORE_ALPHA: f64 = 0.25;
+
+/// Most journal records kept (a ring: oldest evicted first). Bounds a
+/// persistent runtime's memory; the estimates keep the long-term state.
+pub const JOURNAL_CAP: usize = 16_384;
+
+/// One accepted observation, as journaled.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObservationRecord {
+    /// Session the observation came from.
+    pub session: u64,
+    pub kernel: String,
+    pub device: String,
+    /// Package size, in granules.
+    pub granules: f64,
+    /// Simulated device-occupancy span of the package.
+    pub span: Duration,
+    /// The estimate *after* folding this observation in.
+    pub estimate: f64,
+}
+
+/// Current estimate for one (kernel, device) pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfEstimate {
+    /// EWMA granules/sec.
+    pub rate: f64,
+    /// Observations folded in so far.
+    pub samples: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    estimates: BTreeMap<(String, String), PerfEstimate>,
+    journal: VecDeque<ObservationRecord>,
+    /// Journal records evicted by the ring cap.
+    dropped: u64,
+}
+
+/// The store itself: interior-mutable and `Sync` so one instance is
+/// shared by every session of a runtime (and every run of an engine).
+#[derive(Debug)]
+pub struct PerfModelStore {
+    alpha: f64,
+    inner: Mutex<Inner>,
+}
+
+impl Default for PerfModelStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PerfModelStore {
+    pub fn new() -> Self {
+        Self::with_alpha(STORE_ALPHA)
+    }
+
+    pub fn with_alpha(alpha: f64) -> Self {
+        Self { alpha: alpha.clamp(0.01, 1.0), inner: Mutex::new(Inner::default()) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The current warm-start estimate for `kernel` on `device`
+    /// (granules/sec), if any session has observed the pair.
+    pub fn estimate(&self, kernel: &str, device: &str) -> Option<f64> {
+        self.lock()
+            .estimates
+            .get(&(kernel.to_string(), device.to_string()))
+            .map(|e| e.rate)
+    }
+
+    /// Full estimate record (rate + sample count) for a pair.
+    pub fn estimate_record(&self, kernel: &str, device: &str) -> Option<PerfEstimate> {
+        self.lock()
+            .estimates
+            .get(&(kernel.to_string(), device.to_string()))
+            .copied()
+    }
+
+    /// Fold one observation into the (locked) store state. Degenerate
+    /// samples (empty packages, zero/negative spans, NaNs) are dropped,
+    /// not journaled.
+    fn fold(
+        inner: &mut Inner,
+        alpha: f64,
+        session: u64,
+        kernel: &str,
+        device: &str,
+        granules: f64,
+        span: Duration,
+    ) {
+        let secs = span.as_secs_f64();
+        if !granules.is_finite() || granules <= 0.0 || secs <= 0.0 {
+            return;
+        }
+        let sample = granules / secs;
+        let e = inner
+            .estimates
+            .entry((kernel.to_string(), device.to_string()))
+            .or_insert(PerfEstimate { rate: 0.0, samples: 0 });
+        e.rate = if e.samples == 0 {
+            sample
+        } else {
+            alpha * sample + (1.0 - alpha) * e.rate
+        };
+        e.samples += 1;
+        let estimate = e.rate;
+        if inner.journal.len() == JOURNAL_CAP {
+            inner.journal.pop_front();
+            inner.dropped += 1;
+        }
+        inner.journal.push_back(ObservationRecord {
+            session,
+            kernel: kernel.to_string(),
+            device: device.to_string(),
+            granules,
+            span,
+            estimate,
+        });
+    }
+
+    /// Fold one completed package in: `granules` granules over `span`.
+    pub fn record(&self, session: u64, kernel: &str, device: &str, granules: f64, span: Duration) {
+        let mut inner = self.lock();
+        Self::fold(&mut inner, self.alpha, session, kernel, device, granules, span);
+    }
+
+    /// Fold a whole session's ledger in under **one** lock hold — the
+    /// transactional ingest `SessionExec` uses, so concurrent sessions
+    /// serialize at session granularity and their EWMA folds and
+    /// journal entries never interleave mid-ledger.
+    pub fn record_session(
+        &self,
+        session: u64,
+        kernel: &str,
+        ledger: &[(&str, f64, Duration)],
+    ) {
+        let mut inner = self.lock();
+        for &(device, granules, span) in ledger {
+            Self::fold(&mut inner, self.alpha, session, kernel, device, granules, span);
+        }
+    }
+
+    /// Every (kernel, device) pair with an estimate, in key order.
+    pub fn keys(&self) -> Vec<(String, String)> {
+        self.lock().estimates.keys().cloned().collect()
+    }
+
+    /// Snapshot of the observation journal (the most recent
+    /// [`JOURNAL_CAP`] records).
+    pub fn journal(&self) -> Vec<ObservationRecord> {
+        self.lock().journal.iter().cloned().collect()
+    }
+
+    pub fn journal_len(&self) -> usize {
+        self.lock().journal.len()
+    }
+
+    /// Records evicted by the journal ring so far (0 until the cap is
+    /// reached; the estimates are unaffected by eviction).
+    pub fn journal_dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+
+    /// Total samples folded in across all pairs.
+    pub fn total_samples(&self) -> u64 {
+        self.lock().estimates.values().map(|e| e.samples).sum()
+    }
+
+    /// Drop every estimate and the journal (a cold restart).
+    pub fn clear(&self) {
+        let mut inner = self.lock();
+        inner.estimates.clear();
+        inner.journal.clear();
+        inner.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    #[test]
+    fn empty_store_has_no_estimates() {
+        let s = PerfModelStore::new();
+        assert_eq!(s.estimate("binomial", "gpu"), None);
+        assert_eq!(s.journal_len(), 0);
+        assert_eq!(s.total_samples(), 0);
+        assert!(s.keys().is_empty());
+    }
+
+    #[test]
+    fn first_sample_sets_rate_then_ewma() {
+        let s = PerfModelStore::with_alpha(0.25);
+        s.record(0, "binomial", "gpu", 100.0, ms(100));
+        assert!((s.estimate("binomial", "gpu").unwrap() - 1000.0).abs() < 1e-9);
+        s.record(0, "binomial", "gpu", 50.0, ms(100));
+        // 0.25 * 500 + 0.75 * 1000 = 875.
+        let e = s.estimate_record("binomial", "gpu").unwrap();
+        assert!((e.rate - 875.0).abs() < 1e-9);
+        assert_eq!(e.samples, 2);
+    }
+
+    #[test]
+    fn pairs_are_isolated_by_kernel_and_device() {
+        let s = PerfModelStore::new();
+        s.record(0, "binomial", "gpu", 100.0, ms(100));
+        s.record(1, "nbody", "gpu", 10.0, ms(100));
+        s.record(2, "binomial", "cpu", 30.0, ms(100));
+        assert_eq!(s.keys().len(), 3);
+        assert!((s.estimate("nbody", "gpu").unwrap() - 100.0).abs() < 1e-9);
+        assert!((s.estimate("binomial", "cpu").unwrap() - 300.0).abs() < 1e-9);
+        assert_eq!(s.estimate("nbody", "cpu"), None);
+    }
+
+    #[test]
+    fn degenerate_samples_are_dropped() {
+        let s = PerfModelStore::new();
+        s.record(0, "b", "d", 0.0, ms(100));
+        s.record(0, "b", "d", 10.0, Duration::ZERO);
+        s.record(0, "b", "d", f64::NAN, ms(100));
+        assert_eq!(s.estimate("b", "d"), None);
+        assert_eq!(s.journal_len(), 0, "dropped samples are not journaled");
+    }
+
+    #[test]
+    fn record_session_matches_per_package_records() {
+        let a = PerfModelStore::with_alpha(0.5);
+        let b = PerfModelStore::with_alpha(0.5);
+        let ledger: Vec<(&str, f64, Duration)> = vec![
+            ("gpu", 100.0, ms(100)),
+            ("gpu", 50.0, ms(100)),
+            ("cpu", 30.0, ms(100)),
+            ("cpu", 0.0, ms(100)), // degenerate, dropped
+        ];
+        a.record_session(7, "binomial", &ledger);
+        for &(d, g, s) in &ledger {
+            b.record(7, "binomial", d, g, s);
+        }
+        assert_eq!(
+            a.estimate_record("binomial", "gpu"),
+            b.estimate_record("binomial", "gpu")
+        );
+        assert_eq!(
+            a.estimate_record("binomial", "cpu"),
+            b.estimate_record("binomial", "cpu")
+        );
+        assert_eq!(a.journal_len(), 3, "degenerate sample not journaled");
+        assert_eq!(a.journal(), b.journal());
+    }
+
+    #[test]
+    fn journal_is_a_bounded_ring() {
+        let s = PerfModelStore::new();
+        let extra = 10u64;
+        for i in 0..(JOURNAL_CAP as u64 + extra) {
+            s.record(i, "b", "d", 10.0, ms(10));
+        }
+        assert_eq!(s.journal_len(), JOURNAL_CAP);
+        assert_eq!(s.journal_dropped(), extra);
+        // The ring keeps the newest records; the estimates keep counting.
+        assert_eq!(s.journal().first().unwrap().session, extra);
+        assert_eq!(s.total_samples(), JOURNAL_CAP as u64 + extra);
+        s.clear();
+        assert_eq!(s.journal_dropped(), 0);
+    }
+
+    #[test]
+    fn journal_records_ingestion_order_and_estimates() {
+        let s = PerfModelStore::with_alpha(0.5);
+        s.record(3, "b", "d", 100.0, ms(1000));
+        s.record(4, "b", "d", 300.0, ms(1000));
+        let j = s.journal();
+        assert_eq!(j.len(), 2);
+        assert_eq!(j[0].session, 3);
+        assert!((j[0].estimate - 100.0).abs() < 1e-9);
+        assert!((j[1].estimate - 200.0).abs() < 1e-9, "EWMA after the second sample");
+        assert_eq!(s.total_samples(), 2);
+        s.clear();
+        assert_eq!(s.journal_len(), 0);
+        assert_eq!(s.estimate("b", "d"), None);
+    }
+}

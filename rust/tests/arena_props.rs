@@ -5,7 +5,7 @@
 //! shared memory sound.
 
 use enginecl::coordinator::scheduler::{
-    Dynamic, HGuided, Pipelined, SchedDevice, Scheduler, Static,
+    Adaptive, Dynamic, HGuided, Pipelined, SchedDevice, Scheduler, Static,
 };
 use enginecl::coordinator::Range;
 use enginecl::prop_assert;
@@ -18,7 +18,7 @@ struct Case {
     total_granules: usize,
     granule: usize,
     powers: Vec<f64>,
-    sched: usize, // 0 static, 1 static-rev, 2 dynamic, 3 hguided
+    sched: usize, // 0 static, 1 static-rev, 2 dynamic, 3 adaptive, 4 hguided
     packages: usize,
     k: f64,
     min_granules: usize,
@@ -35,7 +35,7 @@ fn gen_case(r: &mut XorShift) -> Case {
         total_granules: r.range(1, 1024),
         granule: [1, 16, 64, 256][r.below(4)],
         powers: (0..ndev).map(|_| 0.05 + r.next_f64()).collect(),
-        sched: r.below(4),
+        sched: r.below(5),
         packages: r.range(1, 200),
         k: 1.0 + r.next_f64() * 4.0,
         min_granules: r.range(1, 8),
@@ -50,6 +50,7 @@ fn build(case: &Case) -> Box<dyn Scheduler> {
         0 => Box::new(Static::new(None, false)),
         1 => Box::new(Static::new(None, true)),
         2 => Box::new(Dynamic::new(case.packages)),
+        3 => Box::new(Adaptive::new(case.k, case.min_granules, 0.5)),
         _ => Box::new(HGuided::new(case.k, case.min_granules)),
     };
     if case.pipelined {
@@ -66,7 +67,7 @@ fn drain(case: &Case) -> Vec<Range> {
         .powers
         .iter()
         .enumerate()
-        .map(|(i, p)| SchedDevice { name: format!("d{i}"), power: *p })
+        .map(|(i, p)| SchedDevice::new(format!("d{i}"), *p))
         .collect();
     let mut s = build(case);
     s.start(case.total_granules, case.granule, &devs);
@@ -75,8 +76,23 @@ fn drain(case: &Case) -> Vec<Range> {
     let mut out = Vec::new();
     while !active.is_empty() {
         let pick = rng.below(active.len());
-        match s.next_package(active[pick]) {
-            Some(r) => out.push(r),
+        let dev = active[pick];
+        match s.next_package(dev) {
+            Some(r) => {
+                // Feed seed-dependent feedback so adaptive strategies
+                // exercise their re-sizing paths — the cover invariants
+                // must hold whatever the observations say.
+                let span = std::time::Duration::from_micros(1 + rng.below(5_000) as u64);
+                s.observe(
+                    dev,
+                    r,
+                    enginecl::coordinator::scheduler::PackageTiming {
+                        span,
+                        raw_exec: span / 4,
+                    },
+                );
+                out.push(r);
+            }
             None => {
                 active.remove(pick);
             }

@@ -383,7 +383,7 @@ fn simulate_cover_with_kill(
     let devs: Vec<SchedDevice> = powers
         .iter()
         .enumerate()
-        .map(|(i, p)| SchedDevice { name: format!("d{i}"), power: *p })
+        .map(|(i, p)| SchedDevice::new(format!("d{i}"), *p))
         .collect();
     sched.start(total_granules, granule, &devs);
 
@@ -456,12 +456,18 @@ struct CoverCase {
 #[test]
 fn schedulers_cover_exactly_even_after_requeue() {
     let gen = |rng: &mut XorShift| {
-        let kind = match rng.below(3) {
+        let kind = match rng.below(4) {
             0 => SchedulerKind::static_default(),
             1 => SchedulerKind::dynamic(rng.range(1, 40)),
+            2 => SchedulerKind::Adaptive {
+                k: 1.0 + rng.next_f64() * 3.0,
+                min_granules: rng.range(1, 4),
+                alpha: 0.5,
+            },
             _ => SchedulerKind::HGuided {
                 k: 1.0 + rng.next_f64() * 3.0,
                 min_granules: rng.range(1, 4),
+                feedback: rng.below(2) == 1,
             },
         };
         let ndev = rng.range(2, 4);

@@ -1,8 +1,11 @@
 //! Property tests on scheduler invariants (the paper's correctness core:
 //! whatever the algorithm, every work-item is computed exactly once).
 
+use std::time::Duration;
+
 use enginecl::coordinator::scheduler::{
-    Dynamic, HGuided, Pipelined, SchedDevice, Scheduler, SchedulerKind, Static,
+    Adaptive, Dynamic, HGuided, PackageTiming, Pipelined, SchedDevice, Scheduler,
+    SchedulerKind, Static,
 };
 use enginecl::prop_assert;
 use enginecl::testing::forall;
@@ -13,7 +16,7 @@ struct Case {
     total_granules: usize,
     granule: usize,
     powers: Vec<f64>,
-    sched: usize, // 0 static, 1 static-rev, 2 dynamic, 3 hguided
+    sched: usize, // 0 static, 1 static-rev, 2 dynamic, 3 hguided, 4 adaptive
     packages: usize,
     k: f64,
     min_granules: usize,
@@ -28,7 +31,7 @@ fn gen_case(r: &mut XorShift) -> Case {
         total_granules: r.range(1, 2048),
         granule: [1, 64, 128, 256, 512][r.below(5)],
         powers: (0..ndev).map(|_| 0.05 + r.next_f64()).collect(),
-        sched: r.below(4),
+        sched: r.below(5),
         packages: r.range(1, 300),
         k: 1.0 + r.next_f64() * 4.0,
         min_granules: r.range(1, 8),
@@ -42,7 +45,8 @@ fn build_base(case: &Case) -> Box<dyn Scheduler> {
         0 => Box::new(Static::new(None, false)),
         1 => Box::new(Static::new(None, true)),
         2 => Box::new(Dynamic::new(case.packages)),
-        _ => Box::new(HGuided::new(case.k, case.min_granules)),
+        3 => Box::new(HGuided::new(case.k, case.min_granules)),
+        _ => Box::new(Adaptive::new(case.k, case.min_granules, 0.5)),
     }
 }
 
@@ -58,12 +62,14 @@ fn devices(case: &Case) -> Vec<SchedDevice> {
     case.powers
         .iter()
         .enumerate()
-        .map(|(i, p)| SchedDevice { name: format!("d{i}"), power: *p })
+        .map(|(i, p)| SchedDevice::new(format!("d{i}"), *p))
         .collect()
 }
 
 /// Drain a scheduler round-robin, simulating devices finishing in a
-/// seed-dependent order, and return all assigned ranges per device.
+/// seed-dependent order — and completing with seed-dependent timings
+/// fed back through `observe`, so the feedback loop is live during
+/// every invariant check — returning all assigned ranges per device.
 fn drain(case: &Case, seed: u64) -> Vec<(usize, enginecl::coordinator::Range)> {
     let mut s = build(case);
     let devs = devices(case);
@@ -75,7 +81,11 @@ fn drain(case: &Case, seed: u64) -> Vec<(usize, enginecl::coordinator::Range)> {
         let pick = rng.below(active.len());
         let dev = active[pick];
         match s.next_package(dev) {
-            Some(r) => out.push((dev, r)),
+            Some(r) => {
+                let span = Duration::from_micros(1 + rng.below(10_000) as u64);
+                s.observe(dev, r, PackageTiming { span, raw_exec: span / 4 });
+                out.push((dev, r));
+            }
             None => {
                 active.remove(pick);
             }
@@ -239,7 +249,10 @@ fn kinds_build_the_right_strategies() {
     assert_eq!(SchedulerKind::static_default().build().name(), "Static");
     assert_eq!(SchedulerKind::dynamic(50).build().name(), "Dynamic 50");
     assert_eq!(SchedulerKind::hguided().build().name(), "HGuided");
+    assert_eq!(SchedulerKind::hguided_static().build().name(), "HGuided-static");
+    assert_eq!(SchedulerKind::adaptive().build().name(), "Adaptive");
     assert_eq!(SchedulerKind::hguided().pipelined(2).build().name(), "HGuided+pipe");
+    assert_eq!(SchedulerKind::adaptive().pipelined(2).build().name(), "Adaptive+pipe");
     assert_eq!(SchedulerKind::hguided().pipelined(3).build().pipeline_depth(), 3);
 }
 
