@@ -250,6 +250,7 @@ impl Engine {
             session: 0,
             leases: SessionLeases { arbiter, registrations },
             perf: Some(Arc::clone(&self.perf)),
+            qos: None,
         };
         exec.run(program)
     }

@@ -36,6 +36,11 @@ pub enum EclError {
     BadPipelineDepth { depth: usize, max: usize },
     /// A device worker thread failed.
     Worker { device: String, message: String },
+    /// QoS admission control rejected the session up front: the
+    /// performance model priced its makespan above the deadline with
+    /// margin to spare (only ever raised on fully warm estimates — a
+    /// cold store never rejects; see `coordinator::qos`).
+    AdmissionRejected { label: String, predicted: std::time::Duration, deadline: std::time::Duration },
     /// Any other runtime failure, stringified.
     Runtime(String),
 }
@@ -81,6 +86,12 @@ impl fmt::Display for EclError {
             EclError::Worker { device, message } => {
                 write!(f, "device worker '{device}' failed: {message}")
             }
+            EclError::AdmissionRejected { label, predicted, deadline } => write!(
+                f,
+                "session '{label}' rejected at admission: predicted makespan {}ms cannot fit deadline {}ms",
+                predicted.as_millis(),
+                deadline.as_millis()
+            ),
             EclError::Runtime(msg) => write!(f, "runtime error: {msg}"),
         }
     }
@@ -111,6 +122,13 @@ mod tests {
         assert!(e.to_string().contains("steps"));
         let e = EclError::BadPipelineDepth { depth: 99, max: 8 };
         assert!(e.to_string().contains("99"));
+        let e = EclError::AdmissionRejected {
+            label: "video-frame".into(),
+            predicted: std::time::Duration::from_millis(250),
+            deadline: std::time::Duration::from_millis(100),
+        };
+        let s = e.to_string();
+        assert!(s.contains("video-frame") && s.contains("250") && s.contains("100"), "{s}");
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod error;
 pub mod introspector;
 pub mod lease;
 pub mod program;
+pub mod qos;
 pub mod runtime;
 pub mod scheduler;
 pub mod work;
@@ -27,6 +28,7 @@ pub use error::EclError;
 pub use introspector::{DeviceTrace, FaultEvent, PackageTrace, RunReport, TransferStats};
 pub use lease::{GrantRecord, LeaseArbiter, LeasePolicy, SessionId};
 pub use program::{Arg, Program};
+pub use qos::{QosClass, QosController, QosEvent, QosPolicy};
 pub use runtime::{RunSession, Runtime, SessionHandle, SessionOutcome};
 pub use scheduler::SchedulerKind;
 pub use work::Range;

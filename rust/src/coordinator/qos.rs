@@ -1,0 +1,350 @@
+//! QoS control for the persistent runtime: predictive admission,
+//! deterministic load shedding, and the seeded EDF tie-break.
+//!
+//! # State machine (see docs/ARCHITECTURE.md "QoS & admission control")
+//!
+//! Every session a QoS-enabled runtime admits is registered here as
+//! `Deadlined` or `BestEffort`. A deadlined session's master reports
+//! its predicted slack on every completed package; the controller
+//! drives three transitions:
+//!
+//! * **slack < 0, not yet at risk** → the session enters the at-risk
+//!   set and one *shed* fires: a seeded, deterministic pick among the
+//!   running, unpaused best-effort sessions is paused (its master stops
+//!   assigning packages and parks its lease slots, freeing device time
+//!   for the at-risk session). While any session is at risk, queued
+//!   best-effort sessions are also held back at admission.
+//! * **slack >= 0, was at risk** → the session leaves the at-risk set;
+//!   when the set empties, every paused victim resumes.
+//! * **session ends** (deregister) → same cleanup; a victim is never
+//!   left paused behind a departed cause.
+//!
+//! All decisions draw from one [`XorShift`] seeded at construction and
+//! are journaled as [`QosEvent`]s, so a fixed seed plus a fixed event
+//! order replays the identical pause/resume/reject sequence — the
+//! chaos suite's determinism contract.
+//!
+//! # Admission rejection
+//!
+//! When the [`MakespanPredictor`](crate::platform::MakespanPredictor)
+//! prices a deadlined session's makespan above
+//! `reject_factor * deadline` on a *fully warm* estimate, admission
+//! fails the session up front with `EclError::AdmissionRejected`
+//! instead of letting it burn device time it provably cannot use. Cold
+//! or half-warm estimates never reject (the predictor property suite
+//! pins this).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::lease::SessionId;
+use crate::util::rng::XorShift;
+
+/// Admissions a FIFO-queue head may lose to later-submitted deadlined
+/// sessions before it is admitted unconditionally — the bounded-wait
+/// guarantee that keeps a stream of deadlined sessions from starving
+/// best-effort work forever.
+pub const STARVATION_BOUND: usize = 4;
+
+/// Deterministic tie-break rank for equal-deadline admissions: a
+/// seeded hash of the session label, so the admit order of an
+/// equal-deadline group depends on the runtime seed — never on
+/// submission order (satellite: the shuffle regression test).
+pub fn admission_tiebreak(seed: u64, label: &str) -> u64 {
+    // FNV-1a over the label folded into splitmix64 with the seed.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in label.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let mut z = h ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Runtime-level QoS knobs (`Runtime::qos_configured`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QosPolicy {
+    /// Master switch: off (the default) leaves every admission and
+    /// master-loop path exactly as the pre-QoS runtime.
+    pub enabled: bool,
+    /// Reject a deadlined session at admission when its fully-warm
+    /// predicted makespan exceeds `reject_factor * deadline`. The
+    /// margin (> 1) keeps borderline predictions from spuriously
+    /// rejecting sessions that could still make it.
+    pub reject_factor: f64,
+    /// Pause best-effort sessions while a deadlined session's slack is
+    /// negative.
+    pub shed: bool,
+}
+
+impl Default for QosPolicy {
+    fn default() -> Self {
+        Self { enabled: false, reject_factor: 1.5, shed: true }
+    }
+}
+
+impl QosPolicy {
+    /// The reference QoS configuration: admission rejection and
+    /// shedding both armed.
+    pub fn enabled() -> Self {
+        Self { enabled: true, ..Self::default() }
+    }
+}
+
+/// Priority class of a registered session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QosClass {
+    Deadlined,
+    BestEffort,
+}
+
+/// One journaled QoS decision (the replayability observable).
+#[derive(Debug, Clone, PartialEq)]
+pub enum QosEvent {
+    /// Admission rejected `session` outright.
+    Rejected { session: SessionId, label: String, predicted: Duration, deadline: Duration },
+    /// `session`'s predicted slack went negative.
+    AtRisk { session: SessionId },
+    /// `session`'s slack recovered while still running.
+    Cleared { session: SessionId },
+    /// Best-effort `victim` paused to free device time for `cause`.
+    Paused { victim: SessionId, cause: SessionId },
+    /// `victim` resumed (every at-risk session cleared or ended).
+    Resumed { victim: SessionId },
+}
+
+#[derive(Debug)]
+struct CtlState {
+    rng: XorShift,
+    running: BTreeMap<SessionId, QosClass>,
+    at_risk: BTreeSet<SessionId>,
+    paused: BTreeSet<SessionId>,
+    journal: Vec<QosEvent>,
+}
+
+/// The runtime's shed/preempt brain (one per [`Runtime`]); see the
+/// module docs for the state machine.
+///
+/// [`Runtime`]: crate::coordinator::runtime::Runtime
+#[derive(Debug)]
+pub struct QosController {
+    shed: bool,
+    state: Mutex<CtlState>,
+}
+
+impl QosController {
+    pub fn new(seed: u64, policy: QosPolicy) -> Self {
+        Self {
+            shed: policy.shed,
+            state: Mutex::new(CtlState {
+                rng: XorShift::new(seed ^ 0x51A0_C0DE),
+                running: BTreeMap::new(),
+                at_risk: BTreeSet::new(),
+                paused: BTreeSet::new(),
+                journal: Vec::new(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, CtlState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// A session cleared admission.
+    pub fn register(&self, session: SessionId, class: QosClass) {
+        self.lock().running.insert(session, class);
+    }
+
+    /// A session ended (any outcome). Clears its risk/pause state and
+    /// resumes victims if it was the last at-risk session.
+    pub fn deregister(&self, session: SessionId) {
+        let mut st = self.lock();
+        st.running.remove(&session);
+        st.paused.remove(&session);
+        if st.at_risk.remove(&session) && st.at_risk.is_empty() {
+            Self::resume_all(&mut st);
+        }
+    }
+
+    /// A deadlined session's master reports its predicted slack (secs).
+    /// Negative slack marks it at risk and sheds one best-effort
+    /// victim; recovered slack clears it (and resumes victims once no
+    /// session is at risk).
+    pub fn report_slack(&self, session: SessionId, slack_secs: f64) {
+        let mut st = self.lock();
+        if slack_secs < 0.0 {
+            if st.at_risk.insert(session) {
+                st.journal.push(QosEvent::AtRisk { session });
+                if self.shed {
+                    // Seeded, deterministic victim pick over the
+                    // BTreeMap's sorted ids — replayable for a fixed
+                    // seed and event order.
+                    let candidates: Vec<SessionId> = st
+                        .running
+                        .iter()
+                        .filter(|(id, class)| {
+                            **class == QosClass::BestEffort && !st.paused.contains(*id)
+                        })
+                        .map(|(id, _)| *id)
+                        .collect();
+                    if !candidates.is_empty() {
+                        let victim = candidates[st.rng.below(candidates.len())];
+                        st.paused.insert(victim);
+                        st.journal.push(QosEvent::Paused { victim, cause: session });
+                    }
+                }
+            }
+        } else if st.at_risk.remove(&session) {
+            st.journal.push(QosEvent::Cleared { session });
+            if st.at_risk.is_empty() {
+                Self::resume_all(&mut st);
+            }
+        }
+    }
+
+    fn resume_all(st: &mut CtlState) {
+        let victims: Vec<SessionId> = st.paused.iter().copied().collect();
+        st.paused.clear();
+        for victim in victims {
+            st.journal.push(QosEvent::Resumed { victim });
+        }
+    }
+
+    /// Checked by best-effort session masters every loop iteration.
+    pub fn is_paused(&self, session: SessionId) -> bool {
+        self.lock().paused.contains(&session)
+    }
+
+    /// Any deadlined session currently at risk? (Admission holds queued
+    /// best-effort sessions back while true.)
+    pub fn any_at_risk(&self) -> bool {
+        !self.lock().at_risk.is_empty()
+    }
+
+    /// Journal an admission rejection (the typed error travels on the
+    /// session handle; this is the controller-side record).
+    pub fn record_rejection(
+        &self,
+        session: SessionId,
+        label: &str,
+        predicted: Duration,
+        deadline: Duration,
+    ) {
+        self.lock().journal.push(QosEvent::Rejected {
+            session,
+            label: label.to_string(),
+            predicted,
+            deadline,
+        });
+    }
+
+    /// The decision journal so far.
+    pub fn journal(&self) -> Vec<QosEvent> {
+        self.lock().journal.clone()
+    }
+
+    /// Paused-victim count right now (test observable).
+    pub fn paused_count(&self) -> usize {
+        self.lock().paused.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    #[test]
+    fn tiebreak_is_deterministic_and_seed_sensitive() {
+        assert_eq!(admission_tiebreak(7, "a"), admission_tiebreak(7, "a"));
+        assert_ne!(admission_tiebreak(7, "a"), admission_tiebreak(8, "a"));
+        assert_ne!(admission_tiebreak(7, "a"), admission_tiebreak(7, "b"));
+    }
+
+    #[test]
+    fn negative_slack_sheds_one_best_effort_victim() {
+        let ctl = QosController::new(7, QosPolicy::enabled());
+        ctl.register(0, QosClass::Deadlined);
+        ctl.register(1, QosClass::BestEffort);
+        ctl.register(2, QosClass::BestEffort);
+        ctl.report_slack(0, -0.5);
+        assert!(ctl.any_at_risk());
+        assert_eq!(ctl.paused_count(), 1, "exactly one victim per at-risk entry");
+        let paused_first = ctl.is_paused(1);
+        let paused_second = ctl.is_paused(2);
+        assert!(paused_first ^ paused_second, "one of the two best-effort sessions");
+        // Repeated negative reports do not shed again.
+        ctl.report_slack(0, -1.0);
+        assert_eq!(ctl.paused_count(), 1);
+    }
+
+    #[test]
+    fn victim_choice_is_seed_deterministic() {
+        let run = |seed: u64| {
+            let ctl = QosController::new(seed, QosPolicy::enabled());
+            ctl.register(0, QosClass::Deadlined);
+            for s in 1..=5 {
+                ctl.register(s, QosClass::BestEffort);
+            }
+            ctl.report_slack(0, -0.1);
+            ctl.journal()
+        };
+        assert_eq!(run(42), run(42), "same seed, same journal");
+    }
+
+    #[test]
+    fn recovered_slack_resumes_victims() {
+        let ctl = QosController::new(7, QosPolicy::enabled());
+        ctl.register(0, QosClass::Deadlined);
+        ctl.register(1, QosClass::BestEffort);
+        ctl.report_slack(0, -0.5);
+        assert_eq!(ctl.paused_count(), 1);
+        ctl.report_slack(0, 0.2);
+        assert!(!ctl.any_at_risk());
+        assert_eq!(ctl.paused_count(), 0, "victims resume when the risk clears");
+        let journal = ctl.journal();
+        assert!(matches!(journal.last(), Some(QosEvent::Resumed { victim: 1 })), "{journal:?}");
+    }
+
+    #[test]
+    fn departed_cause_never_leaves_victims_paused() {
+        let ctl = QosController::new(7, QosPolicy::enabled());
+        ctl.register(0, QosClass::Deadlined);
+        ctl.register(1, QosClass::BestEffort);
+        ctl.report_slack(0, -0.5);
+        assert_eq!(ctl.paused_count(), 1);
+        ctl.deregister(0);
+        assert_eq!(ctl.paused_count(), 0, "session end releases its victims");
+    }
+
+    #[test]
+    fn shedding_can_be_disarmed() {
+        let ctl = QosController::new(7, QosPolicy { shed: false, ..QosPolicy::enabled() });
+        ctl.register(0, QosClass::Deadlined);
+        ctl.register(1, QosClass::BestEffort);
+        ctl.report_slack(0, -0.5);
+        assert!(ctl.any_at_risk(), "risk is still tracked");
+        assert_eq!(ctl.paused_count(), 0, "but nothing is paused");
+    }
+
+    #[test]
+    fn rejection_is_journaled() {
+        let ctl = QosController::new(7, QosPolicy::enabled());
+        ctl.record_rejection(3, "batch", ms(500), ms(100));
+        match &ctl.journal()[0] {
+            QosEvent::Rejected { session, label, predicted, deadline } => {
+                assert_eq!(*session, 3);
+                assert_eq!(label, "batch");
+                assert_eq!(*predicted, ms(500));
+                assert_eq!(*deadline, ms(100));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

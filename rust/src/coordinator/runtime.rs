@@ -87,11 +87,15 @@ use crate::coordinator::lease::{
     DeviceRegistration, GrantRecord, LeaseArbiter, LeasePolicy, SessionId,
 };
 use crate::coordinator::program::{Arg, Program};
+use crate::coordinator::qos::{
+    admission_tiebreak, QosClass, QosController, QosEvent, QosPolicy, STARVATION_BOUND,
+};
 use crate::coordinator::scheduler::{
-    PackageObservation, SchedDevice, Scheduler, SchedulerKind,
+    PackageObservation, QosHint, SchedDevice, Scheduler, SchedulerKind,
 };
 use crate::coordinator::work::{split_range, Range};
 use crate::platform::perfmodel::PerfModelStore;
+use crate::platform::qos::{DeviceLoad, MakespanEstimate, MakespanPredictor};
 use crate::platform::{DeviceKind, NodeConfig};
 use crate::runtime::{input_views, ArtifactRegistry, HostBuf, InputView, OutputArena};
 
@@ -247,6 +251,10 @@ struct QueuedSession {
     session: SessionId,
     spec: RunSession,
     tx: Sender<SessionOutcome>,
+    /// Admissions this (FIFO-ordered) entry lost to later-submitted
+    /// deadlined sessions — the anti-starvation aging counter. At
+    /// [`STARVATION_BOUND`] the queue head is admitted unconditionally.
+    bypassed: usize,
 }
 
 /// A session that cleared admission: registered with the arbiter (in
@@ -257,12 +265,18 @@ struct Admitted {
     tx: Sender<SessionOutcome>,
     selected: Vec<DeviceSpec>,
     registrations: Vec<DeviceRegistration>,
+    /// Admission-time makespan prediction (QoS-enabled runtimes only) —
+    /// seeds the schedulers' QoS hint.
+    predicted: Option<MakespanEstimate>,
 }
 
 struct RtState {
     next_session: SessionId,
     in_flight: usize,
     queue: VecDeque<QueuedSession>,
+    /// Sessions in the order admission granted them (the EDF/aging
+    /// observable the starvation and tie-break tests assert on).
+    admitted_order: Vec<SessionId>,
 }
 
 struct RuntimeShared {
@@ -279,6 +293,11 @@ struct RuntimeShared {
     /// order reproduces every session's timing draws.
     seed: u64,
     max_in_flight: usize,
+    /// QoS knobs; `enabled: false` (the default) keeps every admission
+    /// and master-loop path byte-identical to the pre-QoS runtime.
+    qos: QosPolicy,
+    /// The shed/preempt controller (inert while `qos.enabled` is off).
+    qos_ctl: Arc<QosController>,
     state: Mutex<RtState>,
     idle: Condvar,
 }
@@ -302,6 +321,20 @@ impl Runtime {
         max_in_flight: usize,
         seed: u64,
     ) -> Self {
+        Self::qos_configured(registry, node, policy, max_in_flight, seed, QosPolicy::default())
+    }
+
+    /// [`Runtime::configured`] plus a [`QosPolicy`]: predictive
+    /// admission rejection, best-effort shedding and scheduler QoS
+    /// hints (all inert under `QosPolicy::default()`).
+    pub fn qos_configured(
+        registry: ArtifactRegistry,
+        node: NodeConfig,
+        policy: LeasePolicy,
+        max_in_flight: usize,
+        seed: u64,
+        qos: QosPolicy,
+    ) -> Self {
         let arbiter = LeaseArbiter::new(node.devices.len(), policy);
         Self {
             shared: Arc::new(RuntimeShared {
@@ -311,10 +344,13 @@ impl Runtime {
                 perf: Arc::new(PerfModelStore::new()),
                 seed,
                 max_in_flight: max_in_flight.max(1),
+                qos,
+                qos_ctl: Arc::new(QosController::new(seed, qos)),
                 state: Mutex::new(RtState {
                     next_session: 0,
                     in_flight: 0,
                     queue: VecDeque::new(),
+                    admitted_order: Vec::new(),
                 }),
                 idle: Condvar::new(),
             }),
@@ -347,6 +383,33 @@ impl Runtime {
         &self.shared.perf
     }
 
+    /// The QoS shed/preempt controller (its journal is the
+    /// replayability observable of every pause/resume/reject decision).
+    pub fn qos(&self) -> &Arc<QosController> {
+        &self.shared.qos_ctl
+    }
+
+    pub fn qos_policy(&self) -> QosPolicy {
+        self.shared.qos
+    }
+
+    /// Sessions in admission-grant order — what the EDF tie-break and
+    /// starvation tests assert on.
+    pub fn admission_order(&self) -> Vec<SessionId> {
+        self.shared.state.lock().unwrap_or_else(|e| e.into_inner()).admitted_order.clone()
+    }
+
+    /// Price a session as admission would right now: the performance
+    /// model's rates for its kernel key (contention-degraded by current
+    /// lease registrations) over its selected devices. `None` when the
+    /// spec is malformed (unknown kernel, bad device index) — admission
+    /// surfaces those as their own errors.
+    pub fn predict_session(&self, spec: &RunSession) -> Option<MakespanEstimate> {
+        let selected = resolve_devices(&self.shared.node, spec);
+        check_device_selection(&self.shared.node, &selected).ok()?;
+        predict_for(&self.shared, spec, &selected)
+    }
+
     /// Submit one session. Admission is immediate when a slot is free,
     /// else the session queues (FIFO; deadlines jump the queue,
     /// earliest first).
@@ -372,7 +435,7 @@ impl Runtime {
                 }
                 let (tx, rx) = channel();
                 handles.push(SessionHandle { session, label: spec.label.clone(), rx });
-                st.queue.push_back(QueuedSession { session, spec, tx });
+                st.queue.push_back(QueuedSession { session, spec, tx, bypassed: 0 });
             }
             admit(&self.shared, &mut st)
         };
@@ -391,22 +454,99 @@ impl Runtime {
     }
 }
 
+/// The effective device selection of a spec: its explicit list, or the
+/// whole node when empty.
+fn resolve_devices(node: &NodeConfig, spec: &RunSession) -> Vec<DeviceSpec> {
+    if spec.devices.is_empty() {
+        (0..node.devices.len()).map(DeviceSpec::new).collect()
+    } else {
+        spec.devices.clone()
+    }
+}
+
+/// Price `spec` with the [`MakespanPredictor`]: its work in granules
+/// over `selected`, each device's rate degraded by its current lease
+/// registrations (the predicted session counts itself as one sharer —
+/// it is not registered yet when admission prices it). `None` when the
+/// spec is malformed (unknown kernel / inconsistent manifest) — those
+/// surface as their own validation errors downstream.
+fn predict_for(
+    shared: &RuntimeShared,
+    spec: &RunSession,
+    selected: &[DeviceSpec],
+) -> Option<MakespanEstimate> {
+    let kernel = spec.program.kernel_name()?;
+    let bench = shared.registry.bench(kernel).ok()?;
+    if bench.granule == 0 {
+        return None;
+    }
+    let granules = (spec.gws.unwrap_or(bench.n) / bench.granule) as f64;
+    // The store key must match what the session will record under: the
+    // effective pipeline depth decides blocking vs "+pipe" spans.
+    let depth = spec.pipeline_depth.unwrap_or_else(|| spec.scheduler.pipeline_depth()).max(1);
+    let store_key =
+        if depth > 1 { format!("{kernel}+pipe") } else { kernel.to_string() };
+    let loads: Vec<DeviceLoad> = selected
+        .iter()
+        .map(|s| {
+            let d = &shared.node.devices[s.index];
+            DeviceLoad::new(
+                d.name.clone(),
+                d.relative_power,
+                shared.arbiter.registered_sessions(s.index).len() + 1,
+            )
+        })
+        .collect();
+    Some(MakespanPredictor::predict(&shared.perf, &store_key, granules, &loads))
+}
+
 /// Pull admissible sessions off the queue (EDF among deadlined
-/// sessions, then FIFO) and register their workers with the arbiter.
+/// sessions — ties broken by the seeded label hash, never submission
+/// order — then FIFO, with [`STARVATION_BOUND`] aging so deadlined
+/// streams cannot starve the FIFO head) and register their workers with
+/// the arbiter. QoS-enabled runtimes additionally price deadlined
+/// sessions at admission and reject provably-unfittable ones, and hold
+/// best-effort admissions back while any running session is at risk.
 /// Runs under the runtime lock; returns the batch for the caller to
 /// spawn after unlocking.
 fn admit(shared: &Arc<RuntimeShared>, st: &mut RtState) -> Vec<Admitted> {
     let mut out = Vec::new();
     while st.in_flight < shared.max_in_flight && !st.queue.is_empty() {
-        let pick = (0..st.queue.len())
-            .min_by_key(|&i| (st.queue[i].spec.deadline.unwrap_or(Duration::MAX), i))
-            .expect("queue checked non-empty");
-        let q = st.queue.remove(pick).expect("index from live range");
-        let selected: Vec<DeviceSpec> = if q.spec.devices.is_empty() {
-            (0..shared.node.devices.len()).map(DeviceSpec::new).collect()
+        let head_starved =
+            st.queue.front().map(|q| q.bypassed >= STARVATION_BOUND).unwrap_or(false);
+        let pick = if head_starved {
+            // Bounded wait: the FIFO head has been bypassed by
+            // later-submitted deadlined sessions STARVATION_BOUND
+            // times; admit it unconditionally.
+            0
         } else {
-            q.spec.devices.clone()
+            (0..st.queue.len())
+                .min_by_key(|&i| {
+                    let q = &st.queue[i];
+                    match q.spec.deadline {
+                        Some(d) => (d, admission_tiebreak(shared.seed, &q.spec.label), i),
+                        None => (Duration::MAX, u64::MAX, i),
+                    }
+                })
+                .expect("queue checked non-empty")
         };
+        // While a deadlined session's slack is negative, admitting more
+        // best-effort load would only deepen the contention it is
+        // fighting — hold best-effort admissions until the risk clears
+        // (deadlined sessions still admit). The starved head overrides
+        // even this: bounded wait is the stronger guarantee.
+        if shared.qos.enabled
+            && !head_starved
+            && st.queue[pick].spec.deadline.is_none()
+            && shared.qos_ctl.any_at_risk()
+        {
+            break;
+        }
+        for bypassed in st.queue.iter_mut().take(pick) {
+            bypassed.bypassed += 1;
+        }
+        let q = st.queue.remove(pick).expect("index from live range");
+        let selected = resolve_devices(&shared.node, &q.spec);
         // Bounds-check before touching the arbiter: a bad device index
         // is a client error surfaced on the handle, not a panic inside
         // the admission path.
@@ -421,17 +561,60 @@ fn admit(shared: &Arc<RuntimeShared>, st: &mut RtState) -> Vec<Admitted> {
             .ok();
             continue;
         }
+        let predicted =
+            if shared.qos.enabled { predict_for(shared, &q.spec, &selected) } else { None };
+        if let (true, Some(deadline), Some(est)) =
+            (shared.qos.enabled, q.spec.deadline, predicted.as_ref())
+        {
+            // Reject only on fully-warm estimates: a cold or half-warm
+            // store has no absolute scale and must never turn a
+            // feasible session away (pinned by the predictor property
+            // suite).
+            if est.fully_warm() && est.secs > shared.qos.reject_factor * deadline.as_secs_f64()
+            {
+                let predicted_dur = Duration::from_secs_f64(est.secs.max(0.0));
+                shared.qos_ctl.record_rejection(
+                    q.session,
+                    &q.spec.label,
+                    predicted_dur,
+                    deadline,
+                );
+                q.tx.send(SessionOutcome {
+                    session: q.session,
+                    label: q.spec.label.clone(),
+                    deadline: q.spec.deadline,
+                    program: q.spec.program,
+                    result: Err(EclError::AdmissionRejected {
+                        label: q.spec.label.clone(),
+                        predicted: predicted_dur,
+                        deadline,
+                    }),
+                })
+                .ok();
+                continue;
+            }
+        }
         let registrations: Vec<DeviceRegistration> = selected
             .iter()
             .map(|s| shared.arbiter.register(s.index, q.session))
             .collect();
         st.in_flight += 1;
+        st.admitted_order.push(q.session);
+        if shared.qos.enabled {
+            let class = if q.spec.deadline.is_some() {
+                QosClass::Deadlined
+            } else {
+                QosClass::BestEffort
+            };
+            shared.qos_ctl.register(q.session, class);
+        }
         out.push(Admitted {
             session: q.session,
             spec: q.spec,
             tx: q.tx,
             selected,
             registrations,
+            predicted,
         });
     }
     out
@@ -442,7 +625,7 @@ fn spawn_session(shared: &Arc<RuntimeShared>, adm: Admitted) {
     std::thread::Builder::new()
         .name(format!("ecl-session-{}", adm.session))
         .spawn(move || {
-            let Admitted { session, spec, tx, selected, registrations } = adm;
+            let Admitted { session, spec, tx, selected, registrations, predicted } = adm;
             let RunSession {
                 mut program,
                 devices: _,
@@ -459,6 +642,15 @@ fn spawn_session(shared: &Arc<RuntimeShared>, adm: Admitted) {
                 config.rng_seed =
                     shared.seed ^ session.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
             }
+            let qos = if shared.qos.enabled {
+                Some(SessionQosCtx {
+                    ctl: Arc::clone(&shared.qos_ctl),
+                    deadline,
+                    predicted_secs: predicted.map(|e| e.secs),
+                })
+            } else {
+                None
+            };
             let exec = SessionExec {
                 registry: shared.registry.clone(),
                 node: shared.node.clone(),
@@ -473,6 +665,7 @@ fn spawn_session(shared: &Arc<RuntimeShared>, adm: Admitted) {
                     registrations,
                 },
                 perf: Some(Arc::clone(&shared.perf)),
+                qos,
             };
             // A panicking session must not leak its admission slot
             // (queued sessions would never admit and wait_idle would
@@ -491,6 +684,13 @@ fn spawn_session(shared: &Arc<RuntimeShared>, adm: Admitted) {
                     Err(EclError::Runtime(format!("session panicked: {msg}")))
                 }
             };
+            // Deregister from the controller *before* re-admitting: an
+            // ended at-risk session must release its shed victims and
+            // unblock queued best-effort admissions in the same step
+            // that frees its slot.
+            if shared.qos.enabled {
+                shared.qos_ctl.deregister(session);
+            }
             tx.send(SessionOutcome { session, label, deadline, program, result }).ok();
 
             // This slot is free: admit the next queued session(s).
@@ -517,6 +717,18 @@ pub(crate) struct SessionLeases {
     pub registrations: Vec<DeviceRegistration>,
 }
 
+/// The QoS context a runtime session executes under: the shared
+/// controller (slack reports in, pause state out) plus the admission
+/// prediction that seeds the schedulers' QoS hint. Absent for solo
+/// engine runs and QoS-disabled runtimes.
+pub(crate) struct SessionQosCtx {
+    pub ctl: Arc<QosController>,
+    pub deadline: Option<Duration>,
+    /// Admission-time predicted makespan (secs), when the predictor
+    /// could price the session.
+    pub predicted_secs: Option<f64>,
+}
+
 /// One session's execution plan — the code that used to be
 /// `Engine::run_inner`, parameterized by the lease context so engine
 /// (solo) and runtime (concurrent) sessions share every line of the
@@ -536,6 +748,11 @@ pub(crate) struct SessionExec {
     /// when `config.warm_start` is on, and fed this session's
     /// observation ledger at the end of the run — failure or not.
     pub perf: Option<Arc<PerfModelStore>>,
+    /// QoS participation (runtime sessions under an enabled policy):
+    /// deadlined masters report slack, best-effort masters honor
+    /// pause/resume, and the deadline + admission prediction become the
+    /// schedulers' [`QosHint`].
+    pub qos: Option<SessionQosCtx>,
 }
 
 impl SessionExec {
@@ -551,6 +768,7 @@ impl SessionExec {
             session,
             leases,
             perf,
+            qos,
         } = self;
         let SessionLeases { arbiter, registrations } = leases;
         debug_assert_eq!(registrations.len(), selected.len());
@@ -739,6 +957,13 @@ impl SessionExec {
         // staging they overlap, blocking spans include it, so the two
         // must never seed each other's warm start.
         let store_key = if depth > 1 { format!("{kernel}+pipe") } else { kernel.clone() };
+        // Deadlined sessions hand the schedulers a QoS hint (deadline +
+        // admission-time prediction): feedback strategies tighten their
+        // package sizing when the deadline is at risk.
+        let qos_hint: Option<QosHint> = qos.as_ref().and_then(|ctx| {
+            ctx.deadline
+                .map(|d| QosHint::new(d.as_secs_f64(), ctx.predicted_secs.unwrap_or(0.0)))
+        });
         let sched_devices: Vec<SchedDevice> = selected
             .iter()
             .map(|s| {
@@ -748,7 +973,9 @@ impl SessionExec {
                 } else {
                     None
                 };
-                SchedDevice::new(d.name.clone(), d.relative_power).with_warm_rate(warm)
+                SchedDevice::new(d.name.clone(), d.relative_power)
+                    .with_warm_rate(warm)
+                    .with_qos(qos_hint)
             })
             .collect();
         let mut sched = scheduler.build();
@@ -789,6 +1016,8 @@ impl SessionExec {
             failed: vec![false; ndev],
             dry: vec![false; ndev],
             reclaimed: VecDeque::new(),
+            paused: false,
+            completed_items: 0,
             parker: MasterParker {
                 arbiter,
                 tokens,
@@ -810,6 +1039,10 @@ impl SessionExec {
         // events in the worker shell; the sweep catches *silent* exits —
         // the chaos layer's "vanish" mode, a segfaulting driver).
         const LIVENESS_POLL: Duration = Duration::from_millis(25);
+
+        // QoS tick state: last progress mark a slack report was sent at
+        // (deadlined sessions report only when progress advanced).
+        let mut last_slack_report = 0usize;
 
         while finished < ndev {
             match from_workers.recv_timeout(LIVENESS_POLL) {
@@ -871,6 +1104,39 @@ impl SessionExec {
                                 "worker exited without reporting a result (dead channel)"
                                     .to_string(),
                             );
+                        }
+                    }
+                }
+            }
+            // QoS tick (every loop iteration — event or liveness poll).
+            // Deadlined: project the remaining work at the observed
+            // rate and report the slack; the controller sheds a
+            // best-effort victim when it goes negative. Best-effort:
+            // honor the controller's pause state — top_up stops
+            // assigning (and parks drained slots) while paused, and
+            // resuming tops every live device back up.
+            if let Some(ctx) = &qos {
+                match ctx.deadline {
+                    Some(deadline) => {
+                        if master.completed_items > last_slack_report {
+                            last_slack_report = master.completed_items;
+                            let elapsed = epoch.elapsed().as_secs_f64();
+                            let rate = master.completed_items as f64 / elapsed.max(1e-9);
+                            let remaining =
+                                gws.saturating_sub(master.completed_items) as f64 / rate.max(1e-9);
+                            ctx.ctl.report_slack(
+                                session,
+                                deadline.as_secs_f64() - elapsed - remaining,
+                            );
+                        }
+                    }
+                    None => {
+                        let paused = ctx.ctl.is_paused(session);
+                        if paused != master.paused {
+                            master.paused = paused;
+                            for dev in 0..ndev {
+                                master.top_up(dev);
+                            }
                         }
                     }
                 }
@@ -991,6 +1257,13 @@ struct MasterState {
     dry: Vec<bool>,
     /// Reclaimed ranges awaiting requeue.
     reclaimed: VecDeque<Range>,
+    /// QoS preemption: a paused (shed) best-effort session stops
+    /// assigning new packages — in-flight work drains, drained slots
+    /// park — until the controller resumes it.
+    paused: bool,
+    /// Items whose packages have completed so far (the deadlined
+    /// master's slack-projection input).
+    completed_items: usize,
     parker: MasterParker,
 }
 
@@ -1032,6 +1305,17 @@ impl MasterState {
     /// one-ahead off a single round-trip.
     fn top_up(&mut self, dev: usize) {
         if self.finish_sent[dev] || self.failed[dev] {
+            return;
+        }
+        if self.paused {
+            // Shed best-effort session: assign nothing new (in-flight
+            // work drains) and park slots with nothing pending, so the
+            // lease rotation never waits on the preempted session. The
+            // resume path re-enters top_up with `paused` cleared and
+            // un-parks on the next assignment.
+            if self.pending[dev].is_empty() {
+                self.parker.set(dev, true);
+            }
             return;
         }
         while self.pending[dev].len() < self.depth && self.unstaged[dev] < self.staging_cap {
@@ -1187,6 +1471,7 @@ fn handle_event(
             // *before* topping up: the next `next_package` for this
             // device must already see the completed package's span.
             if let Some(range) = master.pending[dev].pop_front() {
+                master.completed_items += range.len();
                 master.scheduler.observe(dev, range, timing);
             }
             master.top_up(dev);

@@ -31,7 +31,7 @@
 
 use crate::coordinator::work::Range;
 
-use super::{PackageTiming, SchedDevice, Scheduler, ThroughputModel};
+use super::{PackageTiming, QosTracker, SchedDevice, Scheduler, ThroughputModel, QOS_TIGHTEN};
 
 /// EWMA weight of the newest observation. More conservative than
 /// [`Adaptive`](super::Adaptive)'s default: HGuided's geometric decay
@@ -55,6 +55,8 @@ pub struct HGuided {
     /// Next unassigned granule.
     cursor: usize,
     total: usize,
+    /// Deadline-risk state (no-op for best-effort sessions).
+    qos: QosTracker,
 }
 
 impl HGuided {
@@ -73,6 +75,7 @@ impl HGuided {
             model: ThroughputModel::new(FEEDBACK_ALPHA),
             cursor: 0,
             total: 0,
+            qos: QosTracker::default(),
         }
     }
 
@@ -81,7 +84,15 @@ impl HGuided {
     /// throughput estimates, plus the minimum clamp.
     fn packet_granules(&self, dev: usize, pending: usize) -> usize {
         let n = self.powers.len() as f64;
-        let raw = (pending as f64 * self.model.rate(dev)) / (self.k * n * self.model.rate_sum());
+        let mut raw =
+            (pending as f64 * self.model.rate(dev)) / (self.k * n * self.model.rate_sum());
+        // Deadline-driven tail sizing (same rule as Adaptive): while
+        // the session's deadline is at risk, halve the chunk so the
+        // straggler overhang shrinks. Unreachable without a QoS hint —
+        // the bit-for-bit regression oracle below stays intact.
+        if self.qos.at_risk(pending, &self.model) {
+            raw /= QOS_TIGHTEN;
+        }
         let p = self.powers[dev];
         let min_i =
             ((self.min_granules as f64 * p / self.power_max).round() as usize).max(1);
@@ -109,6 +120,7 @@ impl Scheduler for HGuided {
         }
         self.cursor = 0;
         self.total = total_granules;
+        self.qos.start(devices);
     }
 
     fn next_package(&mut self, dev: usize) -> Option<Range> {
@@ -124,10 +136,15 @@ impl Scheduler for HGuided {
 
     fn observe(&mut self, dev: usize, range: Range, timing: PackageTiming) {
         if !self.feedback {
+            // Static mode never folds observations into the model, so
+            // the tracker's remaining-time estimate would have no
+            // absolute scale — its QoS response stays admission-
+            // prediction-only (`QosHint::pressured_at_start`).
             return;
         }
         let granules = range.len() as f64 / self.granule.max(1) as f64;
         self.model.observe(dev, granules, timing.span);
+        self.qos.observe(dev, timing.span);
     }
 }
 
@@ -315,6 +332,56 @@ mod tests {
                     "static mode must not shift sizing: fast {fast} vs slow {slow}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn qos_pressure_shrinks_packages_without_breaking_cover() {
+        use super::super::QosHint;
+        let d = devs(&[0.3, 1.0, 0.42]);
+        let mut dq = d.clone();
+        for dev in &mut dq {
+            dev.qos = Some(QosHint::new(1.0, 3.0));
+        }
+        let mut plain = HGuided::new(2.0, 2);
+        plain.start(1000, 64, &d);
+        let mut hinted = HGuided::new(2.0, 2);
+        hinted.start(1000, 64, &dq);
+        let a = plain.next_package(1).unwrap().len();
+        let b = hinted.next_package(1).unwrap().len();
+        assert!(b < a, "over-deadline prediction must shrink the first chunk: {b} vs {a}");
+        // The tightened scheduler still covers the pool exactly.
+        let mut cursor = b;
+        let mut i = 0;
+        while let Some(r) = hinted.next_package(i % 3) {
+            assert_eq!(r.begin, cursor);
+            cursor = r.end;
+            i += 1;
+        }
+        assert_eq!(cursor, 1000 * 64);
+    }
+
+    #[test]
+    fn qos_hint_with_slack_is_boundary_neutral() {
+        use super::super::QosHint;
+        let d = devs(&[0.3, 1.0, 0.42]);
+        let mut dq = d.clone();
+        for dev in &mut dq {
+            dev.qos = Some(QosHint::new(1e6, 1.0));
+        }
+        let mut plain = HGuided::new(2.0, 2);
+        plain.start(1000, 64, &d);
+        let mut hinted = HGuided::new(2.0, 2);
+        hinted.start(1000, 64, &dq);
+        let mut i = 0;
+        loop {
+            let a = plain.next_package(i % 3);
+            let b = hinted.next_package(i % 3);
+            assert_eq!(a, b, "slack hint moved a boundary");
+            if a.is_none() {
+                break;
+            }
+            i += 1;
         }
     }
 

@@ -52,16 +52,111 @@ pub struct SchedDevice {
     /// granules/sec earlier sessions observed for this kernel on this
     /// device. `None` = cold start from `power` alone.
     pub warm_rate: Option<f64>,
+    /// Deadline-pressure hint for the session this run belongs to
+    /// (`None` for best-effort sessions — sizing is then untouched, a
+    /// bit-for-bit invariant the HGuided regression test pins). Set by
+    /// the runtime from the session deadline and the admission-time
+    /// makespan prediction; consumed by the feedback schedulers'
+    /// deadline-driven tail sizing.
+    pub qos: Option<QosHint>,
 }
 
 impl SchedDevice {
     pub fn new(name: impl Into<String>, power: f64) -> Self {
-        Self { name: name.into(), power, warm_rate: None }
+        Self { name: name.into(), power, warm_rate: None, qos: None }
     }
 
     pub fn with_warm_rate(mut self, rate: Option<f64>) -> Self {
         self.warm_rate = rate;
         self
+    }
+
+    pub fn with_qos(mut self, qos: Option<QosHint>) -> Self {
+        self.qos = qos;
+        self
+    }
+}
+
+/// The QoS hint the runtime threads into `SchedDevice` for deadlined
+/// sessions: the deadline itself plus the admission-time makespan
+/// prediction (0.0 when the store was too cold to price the session —
+/// urgency then comes only from in-run observations).
+///
+/// Feedback schedulers (Adaptive, HGuided) use it to detect a deadline
+/// at risk — predicted remaining time exceeding the time left — and
+/// respond by *shrinking the tail*: package sizes drop by
+/// [`QOS_TIGHTEN`], so devices re-synchronize at finer granularity and
+/// the straggler overhang that would blow the deadline shrinks. Without
+/// a hint (or while slack is positive) sizing is exactly the non-QoS
+/// formula.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QosHint {
+    /// Session deadline, in seconds from run start.
+    pub deadline_secs: f64,
+    /// Admission-time predicted makespan in seconds; 0.0 = unpriced.
+    pub predicted_secs: f64,
+}
+
+impl QosHint {
+    pub fn new(deadline_secs: f64, predicted_secs: f64) -> Self {
+        Self { deadline_secs, predicted_secs }
+    }
+
+    /// The hint says the run is at risk before anything was observed.
+    pub fn pressured_at_start(&self) -> bool {
+        self.predicted_secs > 0.0 && self.predicted_secs > self.deadline_secs
+    }
+}
+
+/// Chunk-divisor multiplier applied by the feedback schedulers while a
+/// deadline is at risk: packages shrink to half so the tail converges
+/// at finer granularity.
+pub const QOS_TIGHTEN: f64 = 2.0;
+
+/// Per-run deadline-risk state shared by the feedback schedulers: the
+/// session's [`QosHint`] (if any) plus each device's cumulative
+/// observed package span. The busiest device's cumulative span is the
+/// scheduler's elapsed-time proxy (it needs no clock — determinism is
+/// preserved), and pending-over-rate-sum is its remaining-time
+/// estimate; their sum overrunning the deadline is what "at risk"
+/// means. All queries are O(1) so the hot-path audit holds.
+#[derive(Debug, Default)]
+pub struct QosTracker {
+    hint: Option<QosHint>,
+    busy: Vec<f64>,
+    busy_max: f64,
+}
+
+impl QosTracker {
+    pub fn start(&mut self, devices: &[SchedDevice]) {
+        self.hint = devices.iter().find_map(|d| d.qos);
+        self.busy.clear();
+        self.busy.resize(devices.len(), 0.0);
+        self.busy_max = 0.0;
+    }
+
+    pub fn observe(&mut self, dev: usize, span: Duration) {
+        if self.hint.is_none() || dev >= self.busy.len() {
+            return;
+        }
+        self.busy[dev] += span.as_secs_f64();
+        if self.busy[dev] > self.busy_max {
+            self.busy_max = self.busy[dev];
+        }
+    }
+
+    /// Is the deadline at risk with `pending` granules left, given the
+    /// model's current aggregate-rate estimate? Always `false` without
+    /// a hint (best-effort sessions: sizing must not move). Before any
+    /// observation the only absolute-scale signal is the admission
+    /// prediction carried in the hint.
+    pub fn at_risk(&self, pending: usize, model: &ThroughputModel) -> bool {
+        let Some(h) = self.hint else { return false };
+        if self.busy_max <= 0.0 {
+            return h.pressured_at_start();
+        }
+        let remaining = pending as f64 / model.rate_sum();
+        self.busy_max + remaining > h.deadline_secs
     }
 }
 

@@ -5,5 +5,6 @@ pub mod concurrent;
 pub mod init;
 pub mod overhead;
 pub mod perf;
+pub mod qos;
 pub mod runs;
 pub mod traces;

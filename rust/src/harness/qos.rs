@@ -1,0 +1,699 @@
+//! `run --qos` — the mixed-priority QoS soak (PR-6 acceptance bench).
+//!
+//! Drives hundreds of sessions with seeded arrivals through a
+//! virtual-time discrete-event simulation of the runtime's admission
+//! and co-execution path, and reports the deadline hit-rate plus
+//! p95/p99 tail latency as `BENCH_qos.json`.
+//!
+//! The soak reuses the *real* QoS components rather than re-modelling
+//! them: the real [`QosController`] (EDF hold-back, seeded shedding,
+//! journal), the real [`MakespanPredictor`] over a real, progressively
+//! warming [`PerfModelStore`], the real [`admission_tiebreak`] /
+//! [`STARVATION_BOUND`] admission rules, and real [`Scheduler`]
+//! instances draining each admitted session package-by-package. Only
+//! *time* is simulated: devices run at seeded synthetic rates on a
+//! virtual clock, so the whole soak is a pure function of the seed —
+//! two invocations with the same seed emit byte-identical JSON (the
+//! CI qos-suite diffs them).
+//!
+//! # Workload model
+//!
+//! Session `i` draws (in a fixed order, so the RNG stream is identical
+//! regardless of earlier outcomes): an inter-arrival gap, a kernel from
+//! the balance grid, a QoS class (`deadlined_prob`), a deadline
+//! tightness, and a per-device throughput jitter. Device rates are
+//! normalized so every session's *ideal* (uncontended, perfectly
+//! balanced) makespan is ~1 virtual second. Most deadlines are generous
+//! multiples of the ideal; a small `tight_prob` fraction get deadlines
+//! near the ideal — under lease contention those are exactly the
+//! sessions the QoS layer must reject up front (warm store) or shed
+//! best-effort work for (cold store), and the ones that may miss.
+//!
+//! Admitted sessions run their scheduler to completion at admission
+//! time (rates frozen at the admission-time contention), which yields
+//! the session's finish event; paused best-effort victims make no
+//! progress until their at-risk cause departs, exactly like a parked
+//! master loop.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::qos::{
+    admission_tiebreak, QosClass, QosController, QosEvent, QosPolicy, STARVATION_BOUND,
+};
+use crate::coordinator::scheduler::{parse_spec, PackageTiming, QosHint, SchedDevice, Scheduler};
+use crate::harness::balance::balance_kernels;
+use crate::platform::qos::{DeviceLoad, MakespanPredictor};
+use crate::platform::{NodeConfig, PerfModelStore};
+use crate::runtime::ArtifactRegistry;
+use crate::util::rng::XorShift;
+use crate::util::stats;
+
+/// Scheduler specs the soak cycles through (session `i` gets spec
+/// `i % 3`): both feedback schedulers that consume the QoS hint, plus
+/// a fixed-chunk control.
+pub fn qos_specs() -> Vec<&'static str> {
+    vec!["adaptive", "hguided", "dynamic:32"]
+}
+
+/// Knobs of the soak (CLI: `run --qos [--sessions N] [--seed S]
+/// [--quick]`).
+#[derive(Debug, Clone)]
+pub struct QosBenchConfig {
+    pub sessions: usize,
+    pub seed: u64,
+    pub quick: bool,
+    /// Admission window of the simulated runtime.
+    pub max_in_flight: usize,
+    /// Probability a session carries a deadline.
+    pub deadlined_prob: f64,
+    /// Probability a *deadlined* session's deadline is tight (near the
+    /// uncontended ideal — likely to be rejected or shed under load).
+    pub tight_prob: f64,
+}
+
+impl Default for QosBenchConfig {
+    fn default() -> Self {
+        Self {
+            sessions: 200,
+            seed: 7,
+            quick: false,
+            max_in_flight: 3,
+            deadlined_prob: 0.6,
+            tight_prob: 0.05,
+        }
+    }
+}
+
+/// Outcome of one simulated session.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SessionFate {
+    /// Completed; for deadlined sessions the flag is `finish - arrival
+    /// <= deadline`.
+    Completed { met: Option<bool> },
+    /// Refused at admission (fully-warm prediction over the reject bar).
+    Rejected,
+}
+
+/// One simulated session's ledger row.
+#[derive(Debug, Clone)]
+pub struct QosSessionResult {
+    pub label: String,
+    pub kernel: String,
+    pub spec: &'static str,
+    pub deadline: Option<f64>,
+    pub arrival: f64,
+    /// Admission (virtual) time; for rejected sessions, the rejection
+    /// time.
+    pub start: f64,
+    /// Completion time; equals `start` for rejected sessions.
+    pub finish: f64,
+    pub fate: SessionFate,
+    pub packages: usize,
+}
+
+impl QosSessionResult {
+    /// Submission-to-completion latency in virtual seconds.
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+}
+
+/// The full `run --qos` result.
+#[derive(Debug)]
+pub struct QosBench {
+    pub node: String,
+    pub seed: u64,
+    pub quick: bool,
+    pub max_in_flight: usize,
+    pub results: Vec<QosSessionResult>,
+    /// The controller's decision journal (sheds, resumes, rejections).
+    pub journal: Vec<QosEvent>,
+}
+
+impl QosBench {
+    pub fn completed(&self) -> usize {
+        self.results.iter().filter(|r| matches!(r.fate, SessionFate::Completed { .. })).count()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.results.iter().filter(|r| r.fate == SessionFate::Rejected).count()
+    }
+
+    pub fn deadlined_completed(&self) -> usize {
+        self.results
+            .iter()
+            .filter(|r| matches!(r.fate, SessionFate::Completed { met: Some(_) }))
+            .count()
+    }
+
+    pub fn met(&self) -> usize {
+        self.results
+            .iter()
+            .filter(|r| matches!(r.fate, SessionFate::Completed { met: Some(true) }))
+            .count()
+    }
+
+    pub fn missed(&self) -> usize {
+        self.results
+            .iter()
+            .filter(|r| matches!(r.fate, SessionFate::Completed { met: Some(false) }))
+            .count()
+    }
+
+    pub fn sheds(&self) -> usize {
+        self.journal.iter().filter(|e| matches!(e, QosEvent::Paused { .. })).count()
+    }
+
+    pub fn at_risk_events(&self) -> usize {
+        self.journal.iter().filter(|e| matches!(e, QosEvent::AtRisk { .. })).count()
+    }
+
+    /// Deadline hit-rate over *completed* deadlined sessions (rejected
+    /// sessions were refused service, not served late); 1.0 when no
+    /// deadlined session completed.
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.deadlined_completed();
+        if n == 0 {
+            1.0
+        } else {
+            self.met() as f64 / n as f64
+        }
+    }
+
+    fn latencies(&self) -> Vec<f64> {
+        self.results
+            .iter()
+            .filter(|r| matches!(r.fate, SessionFate::Completed { .. }))
+            .map(|r| r.latency())
+            .collect()
+    }
+
+    fn best_effort_latencies(&self) -> Vec<f64> {
+        self.results
+            .iter()
+            .filter(|r| r.fate == SessionFate::Completed { met: None })
+            .map(|r| r.latency())
+            .collect()
+    }
+
+    /// The `BENCH_qos.json` artifact — hand-rolled like the other bench
+    /// emitters (no serde offline). Every field is derived from the
+    /// seeded virtual-time run, so same-seed invocations are
+    /// byte-identical.
+    pub fn json(&self) -> String {
+        let lat = self.latencies();
+        let be = self.best_effort_latencies();
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"node\": \"{}\",\n", self.node));
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"max_in_flight\": {},\n", self.max_in_flight));
+        s.push_str(&format!("  \"sessions\": {},\n", self.results.len()));
+        s.push_str(&format!("  \"completed\": {},\n", self.completed()));
+        s.push_str(&format!("  \"rejected\": {},\n", self.rejected()));
+        s.push_str(&format!(
+            "  \"deadlined\": {{\"completed\": {}, \"met\": {}, \"missed\": {}}},\n",
+            self.deadlined_completed(),
+            self.met(),
+            self.missed()
+        ));
+        s.push_str(&format!("  \"hit_rate\": {:.4},\n", self.hit_rate()));
+        s.push_str(&format!("  \"sheds\": {},\n", self.sheds()));
+        s.push_str(&format!("  \"at_risk_events\": {},\n", self.at_risk_events()));
+        s.push_str(&format!(
+            "  \"latency_virtual_s\": {{\"mean\": {:.4}, \"p50\": {:.4}, \"p95\": {:.4}, \
+             \"p99\": {:.4}}},\n",
+            stats::mean(&lat),
+            stats::percentile(&lat, 50.0),
+            stats::percentile(&lat, 95.0),
+            stats::percentile(&lat, 99.0)
+        ));
+        s.push_str(&format!(
+            "  \"best_effort_latency_virtual_s\": {{\"completed\": {}, \"p95\": {:.4}, \
+             \"p99\": {:.4}}}\n",
+            be.len(),
+            stats::percentile(&be, 95.0),
+            stats::percentile(&be, 99.0)
+        ));
+        s.push_str("}\n");
+        s
+    }
+
+    /// The CI guard (`ECL_BENCH_GUARD=1`): the reference mix must land
+    /// a >= 0.90 deadline hit-rate (the PR-6 acceptance bar), and every
+    /// submitted session must be accounted for.
+    pub fn guard(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.completed() + self.rejected() == self.results.len(),
+            "qos accounting leak: {} completed + {} rejected != {} sessions",
+            self.completed(),
+            self.rejected(),
+            self.results.len()
+        );
+        let hit = self.hit_rate();
+        anyhow::ensure!(
+            hit >= 0.90,
+            "qos regression: deadline hit-rate {hit:.3} below the 0.90 floor \
+             ({} met / {} completed deadlined, {} rejected)",
+            self.met(),
+            self.deadlined_completed(),
+            self.rejected()
+        );
+        Ok(())
+    }
+}
+
+// ---- the virtual-time simulation ------------------------------------
+
+/// One generated session, pre-drawn before the event loop runs so the
+/// RNG stream never depends on scheduling outcomes.
+#[derive(Clone)]
+struct SimSpec {
+    id: u64,
+    label: String,
+    kernel: String,
+    spec: &'static str,
+    granules: usize,
+    granule: usize,
+    arrival: f64,
+    deadline: Option<f64>,
+    /// True per-device rates (granules / virtual second), uncontended.
+    rates: Vec<f64>,
+}
+
+struct Queued {
+    spec: SimSpec,
+    bypassed: usize,
+}
+
+struct RunningSess {
+    id: u64,
+    deadlined: bool,
+    finish: f64,
+    /// Virtual time the controller paused this victim (best-effort
+    /// only); progress freezes until resume.
+    paused_at: Option<f64>,
+    result: QosSessionResult,
+}
+
+/// Drain one session's scheduler over the node's devices at the given
+/// contention, recording uncontended occupancy spans into the store
+/// (lease waits are not occupancy — mirroring the real master loop) and
+/// returning (makespan, packages).
+fn drain_session(
+    spec: &SimSpec,
+    node: &NodeConfig,
+    store: &PerfModelStore,
+    contention: usize,
+    hint: Option<QosHint>,
+) -> (f64, usize) {
+    let kind = parse_spec(spec.spec).expect("qos_specs are valid scheduler specs");
+    let mut sched = kind.build();
+    let sdevs: Vec<SchedDevice> = node
+        .devices
+        .iter()
+        .map(|d| {
+            SchedDevice::new(d.name.clone(), d.relative_power)
+                .with_warm_rate(store.estimate(&spec.kernel, &d.name))
+                .with_qos(hint)
+        })
+        .collect();
+    let ndev = node.devices.len();
+    sched.start(spec.granules, spec.granule, &sdevs);
+    let mut busy = vec![0.0f64; ndev];
+    let mut open = vec![true; ndev];
+    let mut packages = 0usize;
+    let c = contention.max(1) as f64;
+    loop {
+        // Always extend the least-loaded still-open device — the
+        // virtual-time analogue of "the free device asks next".
+        let dev = match (0..ndev)
+            .filter(|d| open[*d])
+            .min_by(|a, b| busy[*a].total_cmp(&busy[*b]).then(a.cmp(b)))
+        {
+            Some(d) => d,
+            None => break,
+        };
+        match sched.next_package(dev) {
+            Some(range) => {
+                let g = (range.len() / spec.granule).max(1) as f64;
+                let occ = g / spec.rates[dev];
+                sched.observe(
+                    dev,
+                    range,
+                    PackageTiming {
+                        span: Duration::from_secs_f64(occ),
+                        raw_exec: Duration::from_secs_f64(occ),
+                    },
+                );
+                store.record(
+                    spec.id,
+                    &spec.kernel,
+                    &node.devices[dev].name,
+                    g,
+                    Duration::from_secs_f64(occ),
+                );
+                // Wall-clock progress is slowed by lease rotation among
+                // `contention` sessions.
+                busy[dev] += occ * c;
+                packages += 1;
+            }
+            None => open[dev] = false,
+        }
+    }
+    (busy.iter().copied().fold(0.0, f64::max), packages)
+}
+
+/// Generate the soak's sessions up front from one seeded stream.
+fn generate(reg: &ArtifactRegistry, node: &NodeConfig, cfg: &QosBenchConfig) -> Result<Vec<SimSpec>> {
+    let kernels = balance_kernels();
+    let specs = qos_specs();
+    let total_power: f64 = node.devices.iter().map(|d| d.relative_power).sum();
+    anyhow::ensure!(total_power > 0.0, "node {} has no compute power", node.name);
+    let mut rng = XorShift::new(cfg.seed ^ 0x9059_B3C4);
+    let mut out = Vec::with_capacity(cfg.sessions);
+    let mut arrival = 0.0f64;
+    for i in 0..cfg.sessions {
+        // Fixed draw order per session: gap, kernel, class, tight,
+        // tightness, then one jitter per device.
+        arrival += 1.2 + 2.6 * rng.next_f64();
+        let kernel = kernels[rng.below(kernels.len())];
+        let u_class = rng.next_f64();
+        let u_tight = rng.next_f64();
+        let u_dl = rng.next_f64();
+        let bench = reg.bench(kernel).with_context(|| format!("qos soak kernel {kernel}"))?;
+        anyhow::ensure!(bench.granule > 0, "bench {kernel} has zero granule");
+        let granules = (bench.n / bench.granule).max(1);
+        // Rates normalized so the uncontended ideal makespan is ~1s.
+        let base = granules as f64 / total_power;
+        let rates: Vec<f64> = node
+            .devices
+            .iter()
+            .map(|d| base * d.relative_power.max(1e-6) * (0.9 + 0.2 * rng.next_f64()))
+            .collect();
+        let ideal = granules as f64 / rates.iter().sum::<f64>();
+        let deadline = if u_class < cfg.deadlined_prob {
+            Some(if u_tight < cfg.tight_prob {
+                // Near-ideal: unfittable under contention — the
+                // reject/shed exercise.
+                ideal * (0.9 + 0.4 * u_dl)
+            } else {
+                // Generous: must always be met (the hit-rate floor
+                // rides on these).
+                ideal * (40.0 + 40.0 * u_dl)
+            })
+        } else {
+            None
+        };
+        out.push(SimSpec {
+            id: i as u64,
+            label: format!("s{i:03}-{kernel}"),
+            kernel: kernel.to_string(),
+            spec: specs[i % specs.len()],
+            granules,
+            granule: bench.granule,
+            arrival,
+            deadline,
+            rates,
+        });
+    }
+    Ok(out)
+}
+
+/// Admission at virtual time `now`, mirroring the runtime's `admit`:
+/// EDF with the seeded tie-break among deadlined sessions, FIFO with
+/// [`STARVATION_BOUND`] aging otherwise, the at-risk best-effort hold,
+/// and predictor-based rejection on fully-warm estimates.
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    now: f64,
+    queue: &mut VecDeque<Queued>,
+    running: &mut Vec<RunningSess>,
+    store: &PerfModelStore,
+    ctl: &QosController,
+    policy: &QosPolicy,
+    node: &NodeConfig,
+    cfg: &QosBenchConfig,
+    finished: &mut Vec<QosSessionResult>,
+) {
+    while running.len() < cfg.max_in_flight && !queue.is_empty() {
+        let head_starved = queue.front().map(|q| q.bypassed >= STARVATION_BOUND).unwrap_or(false);
+        let pick = if head_starved {
+            0
+        } else {
+            queue
+                .iter()
+                .enumerate()
+                .min_by(|(i, a), (j, b)| {
+                    let ka = match a.spec.deadline {
+                        Some(d) => (d, admission_tiebreak(cfg.seed, &a.spec.label)),
+                        None => (f64::INFINITY, u64::MAX),
+                    };
+                    let kb = match b.spec.deadline {
+                        Some(d) => (d, admission_tiebreak(cfg.seed, &b.spec.label)),
+                        None => (f64::INFINITY, u64::MAX),
+                    };
+                    ka.0.total_cmp(&kb.0).then(ka.1.cmp(&kb.1)).then(i.cmp(j))
+                })
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        };
+        // Hold queued best-effort work back while any admitted deadline
+        // is at risk (the starved head overrides the hold).
+        if !head_starved && queue[pick].spec.deadline.is_none() && ctl.any_at_risk() {
+            break;
+        }
+        for q in queue.iter_mut().take(pick) {
+            q.bypassed += 1;
+        }
+        let q = queue.remove(pick).expect("pick is in range");
+        let spec = q.spec;
+        let sharers = running.len() + 1;
+        let loads: Vec<DeviceLoad> = node
+            .devices
+            .iter()
+            .map(|d| DeviceLoad::new(d.name.clone(), d.relative_power, sharers))
+            .collect();
+        let est = MakespanPredictor::predict(store, &spec.kernel, spec.granules as f64, &loads);
+        if let Some(d) = spec.deadline {
+            if est.fully_warm() && est.secs > policy.reject_factor * d {
+                ctl.record_rejection(
+                    spec.id,
+                    &spec.label,
+                    Duration::from_secs_f64(est.secs),
+                    Duration::from_secs_f64(d),
+                );
+                finished.push(QosSessionResult {
+                    label: spec.label,
+                    kernel: spec.kernel,
+                    spec: spec.spec,
+                    deadline: Some(d),
+                    arrival: spec.arrival,
+                    start: now,
+                    finish: now,
+                    fate: SessionFate::Rejected,
+                    packages: 0,
+                });
+                continue;
+            }
+        }
+        let class = if spec.deadline.is_some() { QosClass::Deadlined } else { QosClass::BestEffort };
+        ctl.register(spec.id, class);
+        let hint = spec.deadline.map(|d| {
+            QosHint::new(d, if est.cold() { 0.0 } else { est.secs })
+        });
+        let (makespan, packages) = drain_session(&spec, node, store, sharers, hint);
+        let finish = now + makespan;
+        if let Some(d) = spec.deadline {
+            // The master's slack report, grounded on the true finish
+            // time: negative slack marks the session at risk and sheds
+            // one best-effort victim.
+            let slack = (spec.arrival + d) - finish;
+            if slack < 0.0 {
+                ctl.report_slack(spec.id, slack);
+                for r in running.iter_mut() {
+                    if r.paused_at.is_none() && ctl.is_paused(r.id) {
+                        r.paused_at = Some(now);
+                    }
+                }
+            }
+        }
+        running.push(RunningSess {
+            id: spec.id,
+            deadlined: spec.deadline.is_some(),
+            finish,
+            paused_at: None,
+            result: QosSessionResult {
+                label: spec.label,
+                kernel: spec.kernel,
+                spec: spec.spec,
+                deadline: spec.deadline,
+                arrival: spec.arrival,
+                start: now,
+                finish,
+                fate: SessionFate::Completed { met: None },
+                packages,
+            },
+        });
+    }
+}
+
+/// Run the soak: a deterministic virtual-time event loop over seeded
+/// arrivals.
+pub fn run_qos(reg: &ArtifactRegistry, node: &NodeConfig, cfg: &QosBenchConfig) -> Result<QosBench> {
+    let mut cfg = cfg.clone();
+    if cfg.quick {
+        cfg.sessions = (cfg.sessions / 4).max(12);
+    }
+    anyhow::ensure!(cfg.max_in_flight > 0, "max_in_flight must be positive");
+    let specs = generate(reg, node, &cfg)?;
+    let policy = QosPolicy::enabled();
+    let ctl = QosController::new(cfg.seed, policy);
+    let store = PerfModelStore::new();
+    let mut queue: VecDeque<Queued> = VecDeque::new();
+    let mut running: Vec<RunningSess> = Vec::new();
+    let mut finished: Vec<QosSessionResult> = Vec::new();
+    let mut next = 0usize;
+    let mut now = 0.0f64;
+    while next < specs.len() || !queue.is_empty() || !running.is_empty() {
+        admit(now, &mut queue, &mut running, &store, &ctl, &policy, node, &cfg, &mut finished);
+        // Next event: the earliest unpaused completion or the next
+        // arrival; completions win exact ties. Paused victims make no
+        // progress, but their at-risk cause is always unpaused and
+        // running, so a completion event always exists while anything
+        // is paused.
+        let fin = running
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.paused_at.is_none())
+            .min_by(|(_, a), (_, b)| a.finish.total_cmp(&b.finish).then(a.id.cmp(&b.id)))
+            .map(|(i, r)| (i, r.finish));
+        let arr = specs.get(next).map(|s| s.arrival);
+        let take_completion = match (fin, arr) {
+            (Some((_, f)), Some(a)) => f <= a,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => break,
+        };
+        if take_completion {
+            let (idx, f) = fin.expect("completion selected");
+            now = f;
+            let mut done = running.swap_remove(idx);
+            done.result.finish = now;
+            done.result.fate = SessionFate::Completed {
+                met: done
+                    .result
+                    .deadline
+                    .map(|d| now - done.result.arrival <= d),
+            };
+            debug_assert!(done.deadlined == done.result.deadline.is_some());
+            ctl.deregister(done.id);
+            // Victims the departure resumed pick their clocks back up;
+            // the paused interval is pure delay.
+            for r in running.iter_mut() {
+                if let Some(p) = r.paused_at {
+                    if !ctl.is_paused(r.id) {
+                        r.finish += now - p;
+                        r.paused_at = None;
+                    }
+                }
+            }
+            finished.push(done.result);
+        } else {
+            now = arr.expect("arrival selected");
+            queue.push_back(Queued { spec: specs[next].clone(), bypassed: 0 });
+            next += 1;
+        }
+    }
+    // Stable report order: by submission (arrivals are strictly
+    // increasing), not completion.
+    finished.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    Ok(QosBench {
+        node: node.name.clone(),
+        seed: cfg.seed,
+        quick: cfg.quick,
+        max_in_flight: cfg.max_in_flight,
+        results: finished,
+        journal: ctl.journal(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn bench(sessions: usize, seed: u64) -> QosBench {
+        let reg = ArtifactRegistry::synthetic();
+        let node = NodeConfig::batel();
+        let cfg = QosBenchConfig { sessions, seed, ..QosBenchConfig::default() };
+        run_qos(&reg, &node, &cfg).unwrap()
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical() {
+        let a = bench(60, 7);
+        let b = bench(60, 7);
+        assert_eq!(a.json(), b.json(), "virtual-time soak must be a pure function of the seed");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(bench(60, 7).json(), bench(60, 8).json());
+    }
+
+    #[test]
+    fn reference_mix_clears_the_guard() {
+        let b = bench(120, 7);
+        assert!(b.guard().is_ok(), "hit_rate {:.3}", b.hit_rate());
+        assert!(b.deadlined_completed() > 0, "the mix must contain deadlined sessions");
+        assert_eq!(b.completed() + b.rejected(), 120);
+    }
+
+    #[test]
+    fn json_is_parseable_and_reports_tails() {
+        let b = bench(60, 7);
+        let doc = Json::parse(&b.json()).expect("valid JSON");
+        let hit = doc.get("hit_rate").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&hit));
+        let lat = doc.get("latency_virtual_s").unwrap();
+        let p95 = lat.get("p95").and_then(Json::as_f64).unwrap();
+        let p99 = lat.get("p99").and_then(Json::as_f64).unwrap();
+        assert!(p99 >= p95 && p95 > 0.0, "p95={p95} p99={p99}");
+        assert_eq!(doc.get("sessions").and_then(Json::as_f64).unwrap() as usize, 60);
+    }
+
+    #[test]
+    fn all_tight_mix_rejects_or_misses() {
+        let reg = ArtifactRegistry::synthetic();
+        let node = NodeConfig::batel();
+        let cfg = QosBenchConfig {
+            sessions: 30,
+            seed: 11,
+            deadlined_prob: 1.0,
+            tight_prob: 1.0,
+            ..QosBenchConfig::default()
+        };
+        let b = run_qos(&reg, &node, &cfg).unwrap();
+        assert!(
+            b.rejected() + b.missed() > 0,
+            "near-ideal deadlines under contention must trip the QoS machinery"
+        );
+        // Accounting still closes.
+        assert_eq!(b.completed() + b.rejected(), 30);
+    }
+
+    #[test]
+    fn quick_mode_shrinks_the_soak() {
+        let reg = ArtifactRegistry::synthetic();
+        let node = NodeConfig::batel();
+        let cfg = QosBenchConfig { sessions: 200, seed: 7, quick: true, ..Default::default() };
+        let b = run_qos(&reg, &node, &cfg).unwrap();
+        assert_eq!(b.results.len(), 50);
+        assert!(b.quick);
+    }
+}

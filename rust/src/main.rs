@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use enginecl::coordinator::{scheduler, DeviceSpec, LeasePolicy};
-use enginecl::harness::{balance, concurrent, init, overhead, perf, runs, traces};
+use enginecl::harness::{balance, concurrent, init, overhead, perf, qos, runs, traces};
 use enginecl::platform::{FaultPlan, NodeConfig};
 use enginecl::runtime::ArtifactRegistry;
 use enginecl::util::cli::Args;
@@ -45,6 +45,15 @@ USAGE:
                          ECL_BENCH_GUARD=1 fails if adaptive efficiency
                          drops below hguided (ECL_BENCH_QUICK=1 or
                          --quick shrinks problems for smoke runs).
+                        [--qos] runs the mixed-priority QoS soak:
+                         [--sessions N] seeded-arrival sessions
+                         (default 200) through the virtual-time
+                         admission/co-execution simulation, writes
+                         BENCH_qos.json (deadline hit-rate, p95/p99
+                         tail latency; byte-identical for a fixed
+                         --seed S), and with ECL_BENCH_GUARD=1 fails
+                         if the hit-rate drops below 0.90. --quick
+                         (or ECL_BENCH_QUICK=1) shrinks the soak.
   enginecl solo <bench> [--node N]         per-device solo times + S_max
   enginecl overhead <bench> [--device I] [--reps N]
   enginecl eval [--node N] [--reps N]      balance/speedup/efficiency grid
@@ -144,6 +153,9 @@ fn scheduler_from(args: &Args) -> Result<enginecl::coordinator::SchedulerKind> {
 fn run(args: &Args) -> Result<()> {
     if args.has_flag("balance") {
         return balance_cmd(args);
+    }
+    if args.has_flag("qos") {
+        return qos_cmd(args);
     }
     if let Some(raw) = args.get("concurrent") {
         let n: usize = raw
@@ -270,6 +282,50 @@ fn balance_cmd(args: &Args) -> Result<()> {
     if std::env::var("ECL_BENCH_GUARD").map(|v| v == "1").unwrap_or(false) {
         bench.guard()?;
         println!("guard passed: adaptive holds the hguided efficiency bar");
+    }
+    Ok(())
+}
+
+/// `run --qos`: the PR-6 mixed-priority QoS soak — seeded arrivals
+/// through the virtual-time admission simulation, the `BENCH_qos.json`
+/// artifact, and the `ECL_BENCH_GUARD=1` deadline hit-rate guard.
+fn qos_cmd(args: &Args) -> Result<()> {
+    let node = node_from(args);
+    let reg = ArtifactRegistry::discover()?;
+    let cfg = qos::QosBenchConfig {
+        sessions: args.get_usize("sessions", 200),
+        seed: args.get_usize("seed", 7) as u64,
+        quick: args.has_flag("quick") || runs::quick_mode(),
+        ..qos::QosBenchConfig::default()
+    };
+    let bench = qos::run_qos(&reg, &node, &cfg)?;
+    println!(
+        "qos soak: node={} sessions={} seed={} quick={}",
+        bench.node,
+        bench.results.len(),
+        bench.seed,
+        bench.quick
+    );
+    println!(
+        "  completed={} rejected={} deadlined: met={} missed={} (hit-rate {:.3})",
+        bench.completed(),
+        bench.rejected(),
+        bench.met(),
+        bench.missed(),
+        bench.hit_rate()
+    );
+    println!(
+        "  sheds={} at-risk-events={} journal-entries={}",
+        bench.sheds(),
+        bench.at_risk_events(),
+        bench.journal.len()
+    );
+    let json_path = std::env::var("ECL_BENCH_JSON").unwrap_or_else(|_| "BENCH_qos.json".into());
+    std::fs::write(&json_path, bench.json())?;
+    println!("qos artifact written to {json_path}");
+    if std::env::var("ECL_BENCH_GUARD").map(|v| v == "1").unwrap_or(false) {
+        bench.guard()?;
+        println!("guard passed: deadline hit-rate holds the 0.90 floor");
     }
     Ok(())
 }

@@ -11,9 +11,11 @@
 pub mod fault;
 pub mod perfmodel;
 pub mod profile;
+pub mod qos;
 pub mod simclock;
 
 pub use fault::{FaultInjector, FaultKind, FaultPlan, FaultSpec, FaultTrigger};
 pub use perfmodel::{ObservationRecord, PerfEstimate, PerfModelStore};
 pub use profile::{DeviceKind, DeviceProfile, NodeConfig};
+pub use qos::{DeviceLoad, MakespanEstimate, MakespanPredictor};
 pub use simclock::TimeScaler;

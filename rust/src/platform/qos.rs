@@ -1,0 +1,218 @@
+//! Makespan prediction — the QoS layer's consumer of the performance
+//! model (PAPERS.md: arxiv 2010.12607, co-execution under time
+//! constraints).
+//!
+//! The [`MakespanPredictor`] prices a session before (and during) its
+//! run: given the [`PerfModelStore`]'s per-(kernel, device) EWMA
+//! throughput estimates and the current per-device contention (how many
+//! sessions share each device's lease rotation), it estimates how long
+//! the session's remaining granules will take. The runtime's admission
+//! path uses it to reject provably-unfittable deadlined sessions up
+//! front (`EclError::AdmissionRejected`), the session master uses it to
+//! seed the schedulers' QoS hint, and the `--qos` harness uses it to
+//! drive its admission decisions.
+//!
+//! # Cold vs warm
+//!
+//! The store's rates are absolute (granules/sec); the profile powers
+//! are relative. Exactly like the schedulers' `ThroughputModel`, the
+//! predictor bridges the two scales through the implied rate-per-power
+//! of the devices the store *has* observed. A device set with no store
+//! estimate at all has no absolute scale — the estimate is flagged via
+//! [`MakespanEstimate::cold`] and its `secs` is only meaningful as a
+//! relative quantity. Admission control therefore only rejects on
+//! [`MakespanEstimate::fully_warm`] predictions: a cold store can never
+//! cause a spurious rejection (asserted by the predictor property
+//! suite).
+//!
+//! # Contention
+//!
+//! Device leases are granted package-by-package in rotation, so `m`
+//! sessions sharing a device each see roughly `1/m` of its throughput.
+//! [`DeviceLoad::sharers`] carries that count (this session included);
+//! the predictor degrades each device's rate accordingly.
+
+use crate::platform::perfmodel::PerfModelStore;
+
+/// One selected device as the predictor sees it: the store lookup key,
+/// the profile's relative-power fallback, and the lease contention.
+#[derive(Debug, Clone)]
+pub struct DeviceLoad {
+    pub name: String,
+    /// Static relative power — the cold-start fallback scale.
+    pub power: f64,
+    /// Sessions sharing this device's rotation, *this one included*
+    /// (so always >= 1).
+    pub sharers: usize,
+}
+
+impl DeviceLoad {
+    pub fn new(name: impl Into<String>, power: f64, sharers: usize) -> Self {
+        Self { name: name.into(), power, sharers }
+    }
+}
+
+/// A priced session: predicted makespan plus how well-grounded the
+/// price is.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MakespanEstimate {
+    /// Predicted makespan in seconds. Only an absolute quantity when at
+    /// least one device was warm (`!cold()`).
+    pub secs: f64,
+    /// Devices with a store-backed rate for this kernel key.
+    pub warm_devices: usize,
+    /// Devices in the selection.
+    pub devices: usize,
+}
+
+impl MakespanEstimate {
+    /// No device had a store estimate: `secs` has no absolute scale.
+    /// Admission control must never reject on a cold estimate.
+    pub fn cold(&self) -> bool {
+        self.warm_devices == 0
+    }
+
+    /// Every selected device priced from a measured rate — the only
+    /// grounding strong enough for admission *rejection*.
+    pub fn fully_warm(&self) -> bool {
+        self.devices > 0 && self.warm_devices == self.devices
+    }
+
+    /// Predicted slack against `deadline_secs` after `elapsed_secs` of
+    /// the run: negative means the deadline is at risk.
+    pub fn slack(&self, deadline_secs: f64, elapsed_secs: f64) -> f64 {
+        deadline_secs - elapsed_secs - self.secs
+    }
+}
+
+/// Stateless pricing over a [`PerfModelStore`] snapshot.
+pub struct MakespanPredictor;
+
+impl MakespanPredictor {
+    /// Price `granules` of kernel `key` across `loads`. The aggregate
+    /// throughput is the sum of each device's (store rate or
+    /// power-imputed) rate divided by its sharer count.
+    pub fn predict(
+        store: &PerfModelStore,
+        key: &str,
+        granules: f64,
+        loads: &[DeviceLoad],
+    ) -> MakespanEstimate {
+        let rates: Vec<Option<f64>> = loads
+            .iter()
+            .map(|l| store.estimate(key, &l.name).filter(|r| r.is_finite() && *r > 0.0))
+            .collect();
+        let mut sum_obs_rate = 0.0;
+        let mut sum_obs_power = 0.0;
+        let mut warm = 0usize;
+        for (load, rate) in loads.iter().zip(&rates) {
+            if let Some(r) = rate {
+                sum_obs_rate += r;
+                sum_obs_power += load.power.max(1e-6);
+                warm += 1;
+            }
+        }
+        let implied = if sum_obs_power > 0.0 { (sum_obs_rate / sum_obs_power).max(1e-9) } else { 1.0 };
+        let effective: f64 = loads
+            .iter()
+            .zip(&rates)
+            .map(|(load, rate)| {
+                let r = rate.unwrap_or(load.power.max(1e-6) * implied);
+                r / load.sharers.max(1) as f64
+            })
+            .sum();
+        MakespanEstimate {
+            secs: granules.max(0.0) / effective.max(1e-9),
+            warm_devices: warm,
+            devices: loads.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+
+    fn warm_store(entries: &[(&str, f64)]) -> PerfModelStore {
+        let store = PerfModelStore::new();
+        for (dev, rate) in entries {
+            // One observation = the EWMA seeds directly at the sample.
+            store.record(0, "k", dev, *rate, Duration::from_secs(1));
+        }
+        store
+    }
+
+    #[test]
+    fn warm_rates_price_directly() {
+        let store = warm_store(&[("a", 100.0), ("b", 300.0)]);
+        let loads = vec![DeviceLoad::new("a", 0.5, 1), DeviceLoad::new("b", 1.0, 1)];
+        let est = MakespanPredictor::predict(&store, "k", 800.0, &loads);
+        assert!(est.fully_warm());
+        assert!(!est.cold());
+        assert!((est.secs - 2.0).abs() < 1e-9, "800 granules / 400 g/s: {}", est.secs);
+    }
+
+    #[test]
+    fn contention_degrades_throughput() {
+        let store = warm_store(&[("a", 100.0)]);
+        let solo = MakespanPredictor::predict(&store, "k", 100.0, &[DeviceLoad::new("a", 1.0, 1)]);
+        let shared =
+            MakespanPredictor::predict(&store, "k", 100.0, &[DeviceLoad::new("a", 1.0, 4)]);
+        assert!((shared.secs - solo.secs * 4.0).abs() < 1e-9, "4 sharers = 4x makespan");
+    }
+
+    #[test]
+    fn half_warm_imputes_from_observed_scale() {
+        // Device b (power 1.0) warm at 200 g/s => implied 200/power-unit
+        // => device a (power 0.5) imputed at 100 g/s.
+        let store = warm_store(&[("b", 200.0)]);
+        let loads = vec![DeviceLoad::new("a", 0.5, 1), DeviceLoad::new("b", 1.0, 1)];
+        let est = MakespanPredictor::predict(&store, "k", 600.0, &loads);
+        assert_eq!(est.warm_devices, 1);
+        assert!(!est.fully_warm(), "half-warm must not clear the rejection bar");
+        assert!((est.secs - 2.0).abs() < 1e-9, "600 / (100 + 200): {}", est.secs);
+    }
+
+    #[test]
+    fn cold_store_is_flagged() {
+        let store = PerfModelStore::new();
+        let loads = vec![DeviceLoad::new("a", 0.3, 1), DeviceLoad::new("b", 1.0, 1)];
+        let est = MakespanPredictor::predict(&store, "k", 130.0, &loads);
+        assert!(est.cold());
+        assert!(!est.fully_warm());
+        // Relative scale only: granules / sum(powers).
+        assert!((est.secs - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wrong_kernel_key_is_cold() {
+        let store = warm_store(&[("a", 100.0)]);
+        let est = MakespanPredictor::predict(
+            &store,
+            "other-kernel",
+            100.0,
+            &[DeviceLoad::new("a", 1.0, 1)],
+        );
+        assert!(est.cold(), "rates for a different kernel must not warm this one");
+    }
+
+    #[test]
+    fn slack_accounting() {
+        let est = MakespanEstimate { secs: 2.0, warm_devices: 1, devices: 1 };
+        assert!(est.slack(5.0, 1.0) > 0.0);
+        assert!(est.slack(2.5, 1.0) < 0.0);
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_blow_up() {
+        let store = PerfModelStore::new();
+        let est = MakespanPredictor::predict(&store, "k", 0.0, &[]);
+        assert_eq!(est.devices, 0);
+        assert!(est.secs.is_finite());
+        let est =
+            MakespanPredictor::predict(&store, "k", -5.0, &[DeviceLoad::new("a", 0.0, 0)]);
+        assert!(est.secs >= 0.0 && est.secs.is_finite());
+    }
+}

@@ -37,6 +37,27 @@ pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// Percentile `p` in [0, 100] by linear interpolation between closest
+/// ranks (the "exclusive-free" nearest-rank-interpolated definition the
+/// tail-latency reports use); 0.0 for an empty slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
 /// Median of a copy of the data; 0.0 for an empty slice.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -79,6 +100,20 @@ mod tests {
     fn median_basic() {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_basic() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-12);
+        assert!((percentile(&xs, 95.0) - 95.05).abs() < 1e-9);
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 1e-9);
+        assert_eq!(percentile(&[], 95.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        // Unsorted input is handled (sorted copy).
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 100.0), 3.0);
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! QoS property suite: the makespan predictor's grounding contract
+//! across the kernel × scheduler grid, and the QoS × faults chaos
+//! scenario (a deadlined session losing a device mid-run).
+//!
+//! The predictor contract under test (ISSUE-6 satellite): a *cold*
+//! store never causes an admission rejection (its estimates carry no
+//! absolute scale), and a *fully warm* store prices a solo re-run of
+//! the same configuration within a wide error band of the realized
+//! wall time — wide because these are real native-compute runs on a
+//! shared CI machine, and the property is "the right order of
+//! magnitude, priced from measured rates", not clock accuracy.
+
+use std::time::Duration;
+
+use enginecl::coordinator::lease::LeasePolicy;
+use enginecl::coordinator::qos::{QosEvent, QosPolicy};
+use enginecl::coordinator::runtime::Runtime;
+use enginecl::coordinator::SchedulerKind;
+use enginecl::harness::balance::balance_kernels;
+use enginecl::platform::fault::FaultPlan;
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::ArtifactRegistry;
+use enginecl::testing::{assert_exactly_once, chaos_seed, chaos_session};
+
+fn registry() -> ArtifactRegistry {
+    ArtifactRegistry::discover().expect("artifact registry (synthetic fallback)")
+}
+
+fn qos_runtime(reg: &ArtifactRegistry, seed: u64) -> Runtime {
+    Runtime::qos_configured(
+        reg.clone(),
+        NodeConfig::batel(),
+        LeasePolicy::Rotation,
+        usize::MAX,
+        seed,
+        QosPolicy::enabled(),
+    )
+}
+
+/// Granule-aligned quarter problem size — keeps the 5 × 3 × 2 grid of
+/// real runs fast while every device still sees work.
+fn quarter_gws(reg: &ArtifactRegistry, bench: &str) -> usize {
+    let m = reg.bench(bench).unwrap();
+    (m.n / m.granule / 4).max(1) * m.granule
+}
+
+/// The scheduler axis of the predictor grid.
+fn predictor_kinds() -> Vec<SchedulerKind> {
+    vec![SchedulerKind::static_default(), SchedulerKind::hguided(), SchedulerKind::adaptive()]
+}
+
+/// Cold store: estimates are flagged cold, and even an absurd deadline
+/// must not be rejected at admission — the session runs (and misses)
+/// instead. Warm store: the estimate is fully warm and brackets the
+/// realized solo wall time within the error band.
+#[test]
+fn predictor_grounding_across_the_grid() {
+    let reg = registry();
+    let seed = chaos_seed();
+    eprintln!("predictor grid: ECL_CHAOS_SEED={seed} (export to reproduce)");
+    for kernel in balance_kernels() {
+        for kind in predictor_kinds() {
+            let label = format!("{kernel}/{}", kind.label());
+            let rt = qos_runtime(&reg, seed);
+            let gws = quarter_gws(&reg, kernel);
+
+            // --- cold leg -------------------------------------------
+            let spec = chaos_session(&reg, kernel, 3, kind.clone(), None)
+                .gws(gws)
+                .deadline(Duration::from_nanos(1));
+            let est = rt.predict_session(&spec).expect("well-formed spec prices");
+            assert!(est.cold(), "{label}: fresh runtime store must price cold");
+            assert!(!est.fully_warm(), "{label}: cold estimate must not clear the reject bar");
+            let outcome = rt.submit(spec).wait();
+            let report = outcome.result.as_ref().unwrap_or_else(|e| {
+                panic!("{label}: cold store must never reject or fail a session: {e}")
+            });
+            assert_exactly_once(report);
+            assert_eq!(
+                outcome.met_deadline(),
+                Some(false),
+                "{label}: the 1ns deadline was of course missed — but served, not rejected"
+            );
+
+            // --- warm leg -------------------------------------------
+            let spec = chaos_session(&reg, kernel, 3, kind.clone(), None).gws(gws);
+            let est = rt.predict_session(&spec).expect("well-formed spec prices");
+            assert!(
+                est.fully_warm(),
+                "{label}: one completed session must warm all 3 devices \
+                 ({}/{} warm)",
+                est.warm_devices,
+                est.devices
+            );
+            let outcome = rt.submit(spec).wait();
+            let report = outcome.result.as_ref().unwrap_or_else(|e| panic!("{label}: {e}"));
+            let realized = report.wall.as_secs_f64().max(1e-9);
+            let ratio = est.secs / realized;
+            assert!(
+                (0.02..=50.0).contains(&ratio),
+                "{label}: warm prediction {:.6}s vs realized {:.6}s (ratio {ratio:.3}) \
+                 outside the error band",
+                est.secs,
+                realized
+            );
+            rt.wait_idle();
+        }
+    }
+}
+
+/// QoS × faults: a deadlined session loses device 1 at its third
+/// package while a best-effort session shares the node. The runtime
+/// must recover the kill (exactly-once, solo-identical outputs), and
+/// either meet the deadline or visibly shed/flag: with an unmeetable
+/// deadline the controller journals the at-risk transition (and pauses
+/// the best-effort victim when one is running). The scenario replays
+/// under the pinned `ECL_CHAOS_SEED` with byte-identical outputs.
+#[test]
+fn deadlined_session_surviving_kill_meets_or_sheds() {
+    let reg = registry();
+    let seed = chaos_seed();
+    eprintln!("qos chaos: ECL_CHAOS_SEED={seed} (export to reproduce)");
+
+    let run_once = || {
+        let rt = qos_runtime(&reg, seed);
+        let best_effort =
+            chaos_session(&reg, "gaussian", 3, SchedulerKind::dynamic(8), None).label("be");
+        let deadlined =
+            chaos_session(&reg, "binomial", 3, SchedulerKind::dynamic(10), Some(FaultPlan::kill(1, 2)))
+                .label("dl")
+                .deadline(Duration::from_nanos(1));
+        let handles = rt.submit_all(vec![best_effort, deadlined]);
+        let outcomes: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+        rt.wait_idle();
+        let journal = rt.qos().journal();
+        assert_eq!(rt.qos().paused_count(), 0, "no victim stays paused after the batch");
+        (outcomes, journal)
+    };
+
+    let (outcomes, journal) = run_once();
+    let be = &outcomes[0];
+    let dl = &outcomes[1];
+
+    let dr = dl.result.as_ref().expect("deadlined session must recover from the kill");
+    assert!(dr.recovered(), "the dev1 kill was recovered by survivors");
+    assert!(dr.requeued_packages() >= 1, "reclaimed work was requeued");
+    assert_exactly_once(dr);
+
+    let br = be.result.as_ref().expect("best-effort session completes despite shedding");
+    assert!(br.faults.is_empty(), "the fault must not leak into the best-effort session");
+    assert_exactly_once(br);
+
+    // Met-or-shed: the 1ns deadline cannot be met, so the controller
+    // must have flagged the session at risk (shedding the best-effort
+    // victim if it was still running at that moment).
+    let met = dl.met_deadline() == Some(true);
+    let at_risk = journal.iter().any(|e| matches!(e, QosEvent::AtRisk { .. }));
+    assert!(met || at_risk, "unmet deadline without an at-risk journal entry: {journal:?}");
+    // A pause (if one fired) is always paired with a resume.
+    let paused = journal.iter().filter(|e| matches!(e, QosEvent::Paused { .. })).count();
+    let resumed = journal.iter().filter(|e| matches!(e, QosEvent::Resumed { .. })).count();
+    assert_eq!(paused, resumed, "every shed victim resumes: {journal:?}");
+
+    // Replay under the same pinned seed: byte-identical outputs.
+    let (outcomes2, _) = run_once();
+    for (a, b) in outcomes.iter().zip(&outcomes2) {
+        let n = a.program.outputs().len();
+        for i in 0..n {
+            assert!(
+                a.output(i).unwrap() == b.output(i).unwrap(),
+                "{}: output {i} differs between same-seed replays",
+                a.label
+            );
+        }
+    }
+}

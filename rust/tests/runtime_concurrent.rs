@@ -11,9 +11,11 @@
 //! Seeded sweeps log `ECL_CHAOS_SEED` so a CI failure is reproducible
 //! locally by exporting the same value.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use enginecl::coordinator::lease::{GrantRecord, LeasePolicy, SessionId};
+use enginecl::coordinator::qos::{QosPolicy, STARVATION_BOUND};
 use enginecl::coordinator::runtime::RunSession;
 use enginecl::coordinator::SchedulerKind;
 use enginecl::harness::concurrent::{measure_config, run_concurrent, SessionSpec};
@@ -199,6 +201,122 @@ fn deadlined_session_admitted_first_when_capped() {
         last_urgent < first_plain,
         "cap-1 admission must fully serialize the two sessions' grants"
     );
+}
+
+/// Small granule-aligned problem for admission-order tests (the
+/// observable is the admission sequence, not the compute).
+fn small_gws(reg: &ArtifactRegistry, bench: &str) -> usize {
+    let m = reg.bench(bench).unwrap();
+    (m.n / m.granule).clamp(1, 8) * m.granule
+}
+
+/// Equal-deadline sessions admit in an order fixed by the runtime seed
+/// and their labels — never by submission order (the seeded EDF
+/// tie-break). Shuffling the submission batch reproduces the identical
+/// admission-grant sequence, label for label.
+#[test]
+fn equal_deadline_admission_order_survives_submission_shuffle() {
+    let reg = registry();
+    let benches = ["binomial", "gaussian", "mandelbrot", "nbody"];
+    let admit_labels = |order: &[usize]| -> Vec<String> {
+        let rt = enginecl::coordinator::Runtime::qos_configured(
+            reg.clone(),
+            NodeConfig::batel(),
+            LeasePolicy::Rotation,
+            1, // serialize admissions: the order is the whole observable
+            0xEDF0,
+            QosPolicy::enabled(),
+        );
+        let sessions: Vec<RunSession> = order
+            .iter()
+            .map(|&i| {
+                let bench = benches[i];
+                chaos_session(&reg, bench, 3, SchedulerKind::dynamic(4), None)
+                    .gws(small_gws(&reg, bench))
+                    .label(bench)
+                    .deadline(Duration::from_secs(300))
+            })
+            .collect();
+        let handles = rt.submit_all(sessions);
+        let by_id: BTreeMap<SessionId, String> =
+            handles.iter().map(|h| (h.id(), h.label().to_string())).collect();
+        for h in handles {
+            let label = h.label().to_string();
+            let o = h.wait();
+            assert!(o.result.is_ok(), "{label}: {:?}", o.result.as_ref().err());
+        }
+        rt.wait_idle();
+        rt.admission_order().iter().map(|id| by_id[id].clone()).collect()
+    };
+    let straight = admit_labels(&[0, 1, 2, 3]);
+    let shuffled = admit_labels(&[2, 0, 3, 1]);
+    assert_eq!(straight.len(), 4, "every session admitted exactly once");
+    assert_eq!(
+        straight, shuffled,
+        "equal-deadline admission order must depend only on seed + label"
+    );
+}
+
+/// Bounded wait: a saturated stream of deadlined sessions cannot starve
+/// a best-effort submission — after [`STARVATION_BOUND`] EDF bypasses,
+/// the queue head is admitted unconditionally.
+fn starvation_bounded(policy: LeasePolicy, seed: u64) {
+    let reg = registry();
+    let rt = enginecl::coordinator::Runtime::configured(
+        reg.clone(),
+        NodeConfig::batel(),
+        policy,
+        1, // cap 1: every deadlined session genuinely jumps the queue
+        seed,
+    );
+    let mut sessions = vec![chaos_session(
+        &reg,
+        "gaussian",
+        3,
+        SchedulerKind::dynamic(4),
+        None,
+    )
+    .gws(small_gws(&reg, "gaussian"))
+    .label("best-effort")];
+    for i in 0..7 {
+        sessions.push(
+            chaos_session(&reg, "binomial", 3, SchedulerKind::dynamic(4), None)
+                .gws(small_gws(&reg, "binomial"))
+                .label(&format!("deadlined-{i}"))
+                .deadline(Duration::from_secs(600)),
+        );
+    }
+    let handles = rt.submit_all(sessions);
+    let be_id = handles[0].id();
+    for h in handles {
+        let label = h.label().to_string();
+        let o = h.wait();
+        assert!(o.result.is_ok(), "{label}: {:?}", o.result.as_ref().err());
+    }
+    rt.wait_idle();
+    let order = rt.admission_order();
+    assert_eq!(order.len(), 8);
+    let pos = order
+        .iter()
+        .position(|&s| s == be_id)
+        .expect("the best-effort session was admitted");
+    assert!(
+        pos <= STARVATION_BOUND,
+        "best-effort admitted at position {pos}, beyond the starvation bound \
+         {STARVATION_BOUND} (order {order:?})"
+    );
+}
+
+/// The bounded-wait guarantee under the deterministic rotation policy.
+#[test]
+fn deadlined_stream_cannot_starve_best_effort_rotation() {
+    starvation_bounded(LeasePolicy::Rotation, 0xBE57);
+}
+
+/// The same guarantee under first-come-first-served leasing.
+#[test]
+fn deadlined_stream_cannot_starve_best_effort_fifo() {
+    starvation_bounded(LeasePolicy::Fifo, 0xBE58);
 }
 
 /// A `FaultPlan` kill inside one session: that session recovers
