@@ -1,0 +1,307 @@
+//! Dispatch-overhead benchmark suite (the PR-7 continuous-perf
+//! deliverable).
+//!
+//! Hermetic, zero-dependency runtime benchmarks in the rustc-perf
+//! style: every metric is measured with explicit warmup rounds, a fixed
+//! sample count, and median/MAD reporting (MAD = median absolute
+//! deviation — the robust spread a single noisy-neighbor outlier cannot
+//! poison).
+//!
+//!  * per-package dispatch latency at 1 and 8 concurrent sessions
+//!    (wall-clock / packages through the persistent runtime — the
+//!    number the bulk-dispatch master is supposed to flatten)
+//!  * lease acquire/release cost under 1/4/8 threads, one device per
+//!    thread — the independent-device path the per-device shards make
+//!    contention-free (the old global mutex serialized it)
+//!  * scheduler decision cost (ns/package, pure `next_package` drain)
+//!  * end-to-end makespan of 8 concurrent mixed-kernel sessions
+//!
+//! Always writes `BENCH_dispatch.json` (override: `ECL_BENCH_JSON`).
+//! `ECL_BENCH_QUICK=1` shrinks iteration counts for CI smoke runs;
+//! `ECL_BENCH_GUARD=1` fails the process when a metric crosses the
+//! regression ceilings documented in `docs/performance.md`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use enginecl::coordinator::lease::{LeaseArbiter, LeasePolicy};
+use enginecl::coordinator::scheduler::{SchedDevice, Scheduler};
+use enginecl::coordinator::SchedulerKind;
+use enginecl::harness::runs::quick_mode;
+use enginecl::runtime::ArtifactRegistry;
+use enginecl::testing::{chaos_runtime, chaos_seed, chaos_session};
+use enginecl::util::stats;
+
+/// Regression ceilings enforced under `ECL_BENCH_GUARD=1`. Deliberately
+/// generous (documented in docs/performance.md): the flattened hot path
+/// sits an order of magnitude under them on any host, while a return of
+/// the per-package assign round-trip or the global lease lock costs
+/// integer multiples of the healthy reading — a regression clears the
+/// slack, host jitter does not.
+const PER_PACKAGE_8X_MAX_MS: f64 = 250.0;
+const LEASE_GRANT_8T_MAX_NS: f64 = 1_000_000.0;
+const DECISION_MAX_NS: f64 = 100_000.0;
+const MAKESPAN_8X_MAX_MS: f64 = 20_000.0;
+
+const KERNELS: [&str; 5] = ["binomial", "gaussian", "mandelbrot", "nbody", "ray1"];
+
+#[derive(Clone, Copy)]
+struct Summary {
+    median: f64,
+    mad: f64,
+}
+
+fn summarize(samples: &[f64]) -> Summary {
+    Summary { median: stats::median(samples), mad: stats::mad(samples) }
+}
+
+/// Warmup + fixed-iteration sampling: run `f` `warmup` times discarding
+/// the results, then `iters` more collecting one sample per round.
+fn sample<F: FnMut() -> f64>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters).map(|_| f()).collect()
+}
+
+fn small_gws(reg: &ArtifactRegistry, bench: &str) -> usize {
+    let m = reg.bench(bench).expect("manifest");
+    (m.n / m.granule).clamp(1, 8) * m.granule
+}
+
+/// One timed round of the dispatch meso-benchmark: `sessions` dynamic:16
+/// binomial sessions over two devices through a fresh runtime. Returns
+/// (wall ms, total traced packages) — wall/packages is the per-package
+/// dispatch+compute cost; with a fixed tiny kernel the deltas between
+/// runs are pure dispatch overhead.
+fn dispatch_round(reg: &ArtifactRegistry, sessions: usize, seed: u64) -> (f64, usize) {
+    let m = reg.bench("binomial").expect("manifest");
+    let gws = (m.granule * 16).min(m.n);
+    let rt = chaos_runtime(reg, LeasePolicy::Rotation, seed);
+    let specs: Vec<_> = (0..sessions)
+        .map(|_| chaos_session(reg, "binomial", 2, SchedulerKind::dynamic(16), None).gws(gws))
+        .collect();
+    let t0 = Instant::now();
+    let handles = rt.submit_all(specs);
+    let mut packages = 0usize;
+    for h in handles {
+        let outcome = h.wait();
+        let report = outcome.report().expect("session report");
+        packages += report.devices.iter().map(|d| d.packages.len()).sum::<usize>();
+    }
+    (t0.elapsed().as_secs_f64() * 1e3, packages)
+}
+
+/// One timed round of the lease hammer: `threads` threads, each
+/// registered on its own device slot, each doing `cycles` RAII
+/// acquire/release pairs. Returns ns per grant. With one session per
+/// device every acquire is immediately grantable, so the reading is the
+/// pure synchronization cost of a grant — the sharded arbiter keeps the
+/// threads fully independent where the old global mutex serialized them.
+fn lease_round(threads: usize, cycles: usize) -> f64 {
+    let arb = LeaseArbiter::new(threads, LeasePolicy::Rotation);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let arb = Arc::clone(&arb);
+            scope.spawn(move || {
+                let slot = arb.register(t, t as u64 + 1);
+                for _ in 0..cycles {
+                    drop(slot.acquire());
+                }
+            });
+        }
+    });
+    t0.elapsed().as_nanos() as f64 / (threads * cycles) as f64
+}
+
+/// One timed drain of a scheduler over 10 000 granules on 3 devices
+/// (active-set loop — Adaptive may retire a straggler early). Returns
+/// ns per `next_package` decision.
+fn decision_round(kind: &SchedulerKind) -> f64 {
+    let devs: Vec<SchedDevice> = (0..3)
+        .map(|i| SchedDevice::new(format!("d{i}"), 0.3 + i as f64 * 0.3))
+        .collect();
+    let mut s = kind.build();
+    let t0 = Instant::now();
+    s.start(10_000, 256, &devs);
+    let mut dry = [false; 3];
+    let mut turn = 0usize;
+    let mut pkgs = 0usize;
+    while !dry.iter().all(|&d| d) {
+        let dev = turn % 3;
+        turn += 1;
+        if dry[dev] {
+            continue;
+        }
+        match s.next_package(dev) {
+            Some(_) => pkgs += 1,
+            None => dry[dev] = true,
+        }
+    }
+    t0.elapsed().as_nanos() as f64 / pkgs.max(1) as f64
+}
+
+/// One timed round of the 8-session mixed soak: kernels cycle through
+/// all five benches, schedulers through all four families, two devices
+/// each, small problem sizes. Returns makespan in ms.
+fn makespan_round(reg: &ArtifactRegistry, seed: u64) -> f64 {
+    let kinds = [
+        SchedulerKind::static_default(),
+        SchedulerKind::dynamic(8),
+        SchedulerKind::hguided(),
+        SchedulerKind::adaptive(),
+    ];
+    let rt = chaos_runtime(reg, LeasePolicy::Rotation, seed);
+    let specs: Vec<_> = (0..8)
+        .map(|i| {
+            let bench = KERNELS[i % KERNELS.len()];
+            let kind = kinds[i % kinds.len()].clone();
+            chaos_session(reg, bench, 2, kind, None).gws(small_gws(reg, bench))
+        })
+        .collect();
+    let t0 = Instant::now();
+    for h in rt.submit_all(specs) {
+        h.wait();
+    }
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+fn main() -> anyhow::Result<()> {
+    let reg = ArtifactRegistry::discover()?;
+    let quick = quick_mode();
+    let seed = chaos_seed();
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 7) };
+    let cycles = if quick { 2_000 } else { 20_000 };
+
+    println!("# Dispatch-overhead benchmarks (warmup {warmup}, iters {iters}, seed {seed})\n");
+
+    // ---- per-package dispatch latency --------------------------------
+    println!("## per-package dispatch latency (binomial, dynamic:16, 2 devices)");
+    let mut per_package: Vec<(usize, Summary, usize)> = Vec::new();
+    for sessions in [1usize, 8] {
+        let mut packages = 0usize;
+        let samples = sample(warmup, iters, || {
+            let (wall, pkgs) = dispatch_round(&reg, sessions, seed);
+            packages = pkgs;
+            wall / pkgs.max(1) as f64
+        });
+        let s = summarize(&samples);
+        println!(
+            "  {sessions} session(s): {:>9.4} ms/package (MAD {:.4}, {packages} packages/round)",
+            s.median, s.mad
+        );
+        per_package.push((sessions, s, packages));
+    }
+
+    // ---- lease acquire/release ---------------------------------------
+    println!("\n## lease acquire/release (sharded arbiter, one device per thread, {cycles} cycles)");
+    let mut lease: Vec<(usize, Summary)> = Vec::new();
+    for threads in [1usize, 4, 8] {
+        let samples = sample(warmup, iters, || lease_round(threads, cycles));
+        let s = summarize(&samples);
+        println!("  {threads} thread(s): {:>8.0} ns/grant (MAD {:.0})", s.median, s.mad);
+        lease.push((threads, s));
+    }
+
+    // ---- scheduler decision cost --------------------------------------
+    println!("\n## scheduler decision cost (10000 granules of 256, 3 devices)");
+    let kinds = [
+        SchedulerKind::static_default(),
+        SchedulerKind::dynamic(10_000),
+        SchedulerKind::hguided(),
+        SchedulerKind::adaptive(),
+    ];
+    let mut decisions: Vec<(String, Summary)> = Vec::new();
+    for kind in &kinds {
+        let samples = sample(warmup, iters, || decision_round(kind));
+        let s = summarize(&samples);
+        println!("  {:<12} {:>8.0} ns/package (MAD {:.0})", kind.label(), s.median, s.mad);
+        decisions.push((kind.label(), s));
+    }
+
+    // ---- 8-session mixed-kernel makespan ------------------------------
+    println!("\n## 8-session mixed-kernel makespan (5 kernels x 4 schedulers, 2 devices)");
+    let samples = sample(1, iters.min(5), || makespan_round(&reg, seed));
+    let makespan = summarize(&samples);
+    println!("  makespan: {:>9.1} ms (MAD {:.1})", makespan.median, makespan.mad);
+
+    // ---- baseline artifact --------------------------------------------
+    let json_path =
+        std::env::var("ECL_BENCH_JSON").unwrap_or_else(|_| "BENCH_dispatch.json".into());
+    let mut json = String::new();
+    json.push_str(&format!("{{\n  \"seed\": {seed},\n  \"quick\": {quick},\n"));
+    json.push_str("  \"per_package_dispatch_ms\": {\n");
+    for (i, (sessions, s, packages)) in per_package.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"sessions_{sessions}\": {{ \"median\": {:.6}, \"mad\": {:.6}, \"packages\": {packages} }}{}\n",
+            s.median,
+            s.mad,
+            if i + 1 < per_package.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  },\n  \"lease_grant_ns\": {\n");
+    for (i, (threads, s)) in lease.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"threads_{threads}\": {{ \"median\": {:.1}, \"mad\": {:.1} }}{}\n",
+            s.median,
+            s.mad,
+            if i + 1 < lease.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  },\n  \"scheduler_decision_ns\": {\n");
+    for (i, (label, s)) in decisions.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{label}\": {{ \"median\": {:.1}, \"mad\": {:.1} }}{}\n",
+            s.median,
+            s.mad,
+            if i + 1 < decisions.len() { "," } else { "" }
+        ));
+    }
+    json.push_str(&format!(
+        "  }},\n  \"makespan_8x_ms\": {{ \"median\": {:.3}, \"mad\": {:.3} }}\n}}\n",
+        makespan.median, makespan.mad
+    ));
+    std::fs::write(&json_path, &json)?;
+    println!("\n  artifact written to {json_path}");
+
+    // ---- regression guard ---------------------------------------------
+    if std::env::var("ECL_BENCH_GUARD").map(|v| v == "1").unwrap_or(false) {
+        let p8 = per_package
+            .iter()
+            .find(|(n, ..)| *n == 8)
+            .map(|(_, s, _)| s.median)
+            .unwrap_or(f64::INFINITY);
+        if p8 > PER_PACKAGE_8X_MAX_MS {
+            anyhow::bail!(
+                "dispatch regression: {p8:.3} ms/package at 8 sessions > {PER_PACKAGE_8X_MAX_MS} ms ceiling"
+            );
+        }
+        let l8 = lease
+            .iter()
+            .find(|(n, _)| *n == 8)
+            .map(|(_, s)| s.median)
+            .unwrap_or(f64::INFINITY);
+        if l8 > LEASE_GRANT_8T_MAX_NS {
+            anyhow::bail!(
+                "lease regression: {l8:.0} ns/grant at 8 threads > {LEASE_GRANT_8T_MAX_NS} ns ceiling"
+            );
+        }
+        for (label, s) in &decisions {
+            if s.median > DECISION_MAX_NS {
+                anyhow::bail!(
+                    "scheduler regression: {label} at {:.0} ns/package > {DECISION_MAX_NS} ns ceiling",
+                    s.median
+                );
+            }
+        }
+        if makespan.median > MAKESPAN_8X_MAX_MS {
+            anyhow::bail!(
+                "makespan regression: {:.1} ms at 8 sessions > {MAKESPAN_8X_MAX_MS} ms ceiling",
+                makespan.median
+            );
+        }
+        println!("  guard: all metrics inside documented ceilings");
+    }
+    Ok(())
+}

@@ -35,15 +35,21 @@
 //! transfer plus a master round-trip of idle time.
 //!
 //! With `pipeline_depth >= 2` the worker double-buffers: the master keeps
-//! a queue of up to `depth` assigned packages per device (the
-//! assignment's `lookahead` ships the second range in the initial
-//! message), and the worker stages package *n+1*'s H2D transfer inside
-//! package *n*'s compute window. `Uploaded` tells the
-//! master that a prefetch landed; `Done` is sent *before* the simulated
-//! compute hold completes, shrinking the assign-on-completion round-trip
-//! to nothing (arXiv:2010.12607's optimization for short loads). The
-//! simulated clock charges `max(compute, overlapped-upload) + write-back`
-//! per package instead of their sum (see `TimeScaler::target_overlapped`).
+//! a queue of up to `depth` assigned packages per device — every refill
+//! travels as one [`AssignBatch`] (an inline array of decided ranges,
+//! so the pipeline fills in a single message) — and the worker stages
+//! package *n+1*'s H2D transfer inside package *n*'s compute window.
+//! `Done` is sent *before* the simulated compute hold completes,
+//! shrinking the assign-on-completion round-trip to nothing
+//! (arXiv:2010.12607's optimization for short loads), and carries a
+//! `prefetched` flag when the next package's staging landed inside the
+//! compute window — coalescing what used to be a separate `Uploaded`
+//! message into the completion event (one steady-state message per
+//! package instead of two). A standalone `Uploaded` survives only for
+//! *exposed* stagings (the pipeline's fill bubble), where there is no
+//! adjacent `Done` to ride on. The simulated clock charges
+//! `max(compute, overlapped-upload) + write-back` per package instead
+//! of their sum (see `TimeScaler::target_overlapped`).
 //!
 //! # Timing feedback
 //!
@@ -96,6 +102,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::config::Configurator;
+use crate::coordinator::engine::MAX_PIPELINE_DEPTH;
 use crate::coordinator::introspector::{PackageTrace, TransferStats};
 use crate::coordinator::lease::DeviceRegistration;
 use crate::coordinator::scheduler::{PackageObservation, PackageTiming};
@@ -154,20 +161,71 @@ impl DeviceSpec {
 
 // ---- worker protocol (Tier-3) ---------------------------------------
 
-/// A package assignment, optionally shipping the next package in the
-/// same message so a pipelined worker starts one-ahead immediately.
-pub(crate) struct Assignment {
+/// One assigned range within a batch refill.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct AssignedRange {
     pub range: Range,
-    /// Prefetch range: enqueue behind `range` and pre-stage its H2D
-    /// transfer during `range`'s compute window.
-    pub lookahead: Option<Range>,
     /// `range` is recovered work reclaimed from a dead device (marks
     /// the package's trace so recovery is visible in the introspector).
     pub requeued: bool,
 }
 
+/// One master refill: every range the master decided for this device in
+/// a single top-up, shipped as one message. The storage is an inline
+/// array bounded by [`MAX_PIPELINE_DEPTH`] (a refill can never exceed
+/// the pipeline depth), so assembling and sending a batch allocates
+/// nothing.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct AssignBatch {
+    ranges: [AssignedRange; MAX_PIPELINE_DEPTH],
+    len: usize,
+}
+
+impl AssignBatch {
+    pub fn new() -> Self {
+        Self {
+            ranges: [AssignedRange { range: Range::new(0, 0), requeued: false };
+                MAX_PIPELINE_DEPTH],
+            len: 0,
+        }
+    }
+
+    /// Append a decided range. The master's refill loop is bounded by
+    /// the pipeline depth, so this can never overflow the inline array.
+    pub fn push(&mut self, range: Range, requeued: bool) {
+        debug_assert!(self.len < MAX_PIPELINE_DEPTH, "refill exceeded pipeline depth");
+        self.ranges[self.len] = AssignedRange { range, requeued };
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == MAX_PIPELINE_DEPTH
+    }
+
+    /// The batch's ranges in master decision order.
+    pub fn iter(&self) -> impl Iterator<Item = &AssignedRange> {
+        self.ranges[..self.len].iter()
+    }
+}
+
+impl Default for AssignBatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 pub(crate) enum ToWorker {
-    Assign(Assignment),
+    /// A batched refill of one or more assigned ranges (decision order
+    /// preserved; the worker enqueues them front to back).
+    Assign(AssignBatch),
     /// No more work will be assigned; drain the local queue and exit.
     Finish,
 }
@@ -175,8 +233,10 @@ pub(crate) enum ToWorker {
 pub(crate) enum FromWorker {
     /// Device initialized (driver sim + input binding + builds done).
     Ready { dev: usize, init_start: Duration, init_end: Duration },
-    /// A prefetched package's H2D staging landed on the device — the
-    /// master may top the pipeline back up.
+    /// An *exposed* (fill-bubble) H2D staging landed on the device —
+    /// the master may top the pipeline back up. Steady-state prefetch
+    /// stagings do not send this: they ride on the next `Done`'s
+    /// `prefetched` flag instead (one message per package, not two).
     Uploaded { dev: usize },
     /// Package completed (pipelined workers send this as soon as the
     /// next package can be decided, shrinking the assign round-trip);
@@ -186,7 +246,12 @@ pub(crate) enum FromWorker {
     /// consider the range finished for recovery bookkeeping. `timing`
     /// is the package's simulated occupancy — the feedback the master
     /// routes into `Scheduler::observe` before sizing the next package.
-    Done { dev: usize, timing: PackageTiming },
+    /// `prefetched` coalesces the `Uploaded` that used to precede every
+    /// steady-state pipelined `Done`: the next package's H2D staging
+    /// landed inside this package's compute window, so the master
+    /// releases the staging slot first, then books the completion —
+    /// the exact event order the two separate messages produced.
+    Done { dev: usize, timing: PackageTiming, prefetched: bool },
     /// Worker exited. Results are already in the output arena (written
     /// in place, package by package); only the introspection traces,
     /// the per-run observation ledger (for the performance-model
@@ -328,14 +393,13 @@ pub(crate) fn spawn_worker(
         .expect("spawn device worker")
 }
 
-/// Fold one master message into the worker's local state: assignments
-/// (plus their lookahead) enter the queue, `Finish` marks the drain.
+/// Fold one master message into the worker's local state: a batch's
+/// ranges enter the queue in decision order, `Finish` marks the drain.
 fn absorb(msg: ToWorker, queue: &mut VecDeque<(Range, bool)>, finishing: &mut bool) {
     match msg {
-        ToWorker::Assign(a) => {
-            queue.push_back((a.range, a.requeued));
-            if let Some(l) = a.lookahead {
-                queue.push_back((l, false));
+        ToWorker::Assign(batch) => {
+            for a in batch.iter() {
+                queue.push_back((a.range, a.requeued));
             }
         }
         ToWorker::Finish => *finishing = true,
@@ -526,14 +590,20 @@ fn worker_loop(
 
         // Overlap: stage the next package's H2D inside this package's
         // compute window, and report completion early so the master's
-        // next assignment travels during the hold.
+        // next assignment travels during the hold. The staging is not
+        // announced with its own `Uploaded` message — it rides on this
+        // package's `Done` as the `prefetched` flag (the two events
+        // were always sent back to back with nothing but arithmetic
+        // between them, so coalescing halves the steady-state message
+        // rate without reordering anything the master can observe).
         let mut overlapped_h2d = Duration::ZERO;
+        let mut prefetched = false;
         if pipelined {
             if let Some((range, requeued)) = queue.pop_front() {
                 let p = stage_package(&mut exec, epoch, range, requeued)?;
                 overlapped_h2d = p.staged.h2d();
                 staged = Some(p);
-                to_master.send(FromWorker::Uploaded { dev }).ok();
+                prefetched = true;
             }
         }
 
@@ -563,6 +633,7 @@ fn worker_loop(
                     .send(FromWorker::Done {
                         dev,
                         timing: PackageTiming { span: target, raw_exec: timing.exec },
+                        prefetched,
                     })
                     .ok();
                 scaler.hold(exec_started, target);
@@ -587,6 +658,7 @@ fn worker_loop(
                     .send(FromWorker::Done {
                         dev,
                         timing: PackageTiming { span, raw_exec: timing.exec },
+                        prefetched,
                     })
                     .ok();
             }
@@ -616,7 +688,7 @@ fn worker_loop(
             });
         }
         if !pipelined {
-            to_master.send(FromWorker::Done { dev, timing: pkg_timing }).ok();
+            to_master.send(FromWorker::Done { dev, timing: pkg_timing, prefetched: false }).ok();
         }
     }
 

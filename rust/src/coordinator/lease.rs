@@ -11,6 +11,22 @@
 //! concurrent sessions interleave per package window across the device
 //! set instead of overlapping on one device.
 //!
+//! # Sharding
+//!
+//! The arbiter is sharded per device slot: one `Mutex<DeviceState>` +
+//! `Condvar` pair per device. Every lease operation — register, park,
+//! acquire, release, deregister — touches exactly one device's state,
+//! so the shard lock is the natural unit of mutual exclusion and an
+//! 8-session soak hammering device 2 never serializes (or spuriously
+//! wakes) waiters on device 0. The only cross-device state is two
+//! atomics: the token allocator and the global grant `serial`, bumped
+//! under the granting shard's lock so each device's journal slice stays
+//! strictly serial-ordered. [`LeaseArbiter::journal`] merges the
+//! per-shard journals by serial on read; per-device grant subsequences
+//! (what rotation pins and the golden tests assert) are exactly what a
+//! single global journal would record, and cross-device interleaving is
+//! wall-clock grant order as before.
+//!
 //! # Participants, not sessions
 //!
 //! Registration is per *worker* (a `(session, device)` pair), keyed by a
@@ -46,10 +62,14 @@
 //!   starvation-free, but contended grant order follows wall-clock
 //!   arrival and is not reproducible across executions.
 //!
-//! Every grant is appended to a global journal ([`GrantRecord`]) — the
-//! observable the concurrency battery uses to pin interleavings.
+//! Every grant is appended to the granting shard's journal
+//! ([`GrantRecord`]) — the observable the concurrency battery uses to
+//! pin interleavings. Hot asserts that only need cardinality should use
+//! [`LeaseArbiter::journal_len`] / [`LeaseArbiter::registered_count`]
+//! instead of the snapshot accessors, which pay an O(n) copy.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 /// Identifies one admitted run session within a runtime.
@@ -97,6 +117,9 @@ struct DeviceState {
     /// Waiting tokens in arrival order (Fifo policy only).
     queue: VecDeque<u64>,
     grants: u64,
+    /// This device's slice of the grant journal (strictly
+    /// serial-ordered: serials are allocated under this shard's lock).
+    journal: Vec<GrantRecord>,
 }
 
 impl DeviceState {
@@ -125,12 +148,12 @@ impl DeviceState {
     }
 }
 
-#[derive(Debug)]
-struct ArbState {
-    devices: Vec<DeviceState>,
-    serial: u64,
-    next_token: u64,
-    journal: Vec<GrantRecord>,
+/// One device slot's lock + wait queue. Waiters for a device park on
+/// its own condvar, so grants and releases elsewhere never wake them.
+#[derive(Debug, Default)]
+struct Shard {
+    state: Mutex<DeviceState>,
+    cv: Condvar,
 }
 
 /// The shared arbiter. One per runtime (and one per solo `Engine::run`,
@@ -138,29 +161,30 @@ struct ArbState {
 #[derive(Debug)]
 pub struct LeaseArbiter {
     policy: LeasePolicy,
-    state: Mutex<ArbState>,
-    cv: Condvar,
+    shards: Vec<Shard>,
+    /// Global grant sequence. Bumped under the granting shard's lock,
+    /// so each shard's journal slice is strictly serial-ordered and the
+    /// merged journal reconstructs the global grant order.
+    serial: AtomicU64,
+    /// Participant token allocator (tokens are globally unique).
+    next_token: AtomicU64,
 }
 
 impl LeaseArbiter {
     pub fn new(devices: usize, policy: LeasePolicy) -> Arc<Self> {
         Arc::new(Self {
             policy,
-            state: Mutex::new(ArbState {
-                devices: (0..devices).map(|_| DeviceState::default()).collect(),
-                serial: 0,
-                next_token: 1,
-                journal: Vec::new(),
-            }),
-            cv: Condvar::new(),
+            shards: (0..devices).map(|_| Shard::default()).collect(),
+            serial: AtomicU64::new(0),
+            next_token: AtomicU64::new(1),
         })
     }
 
-    /// Poison-tolerant lock: the arbiter's critical sections never
+    /// Poison-tolerant shard lock: the arbiter's critical sections never
     /// panic, but RAII releases run during *worker* unwinds (injected
     /// panics) and must never double-panic.
-    fn lock(&self) -> MutexGuard<'_, ArbState> {
-        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    fn shard(&self, device: usize) -> MutexGuard<'_, DeviceState> {
+        self.shards[device].state.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     pub fn policy(&self) -> LeasePolicy {
@@ -168,49 +192,69 @@ impl LeaseArbiter {
     }
 
     pub fn device_count(&self) -> usize {
-        self.lock().devices.len()
+        self.shards.len()
     }
 
     /// Register a participant (one worker of `session`) on `device`.
     /// Registration order is the rotation order; the runtime registers
     /// admitted batches under one lock so it equals admission order.
     pub fn register(self: &Arc<Self>, device: usize, session: SessionId) -> DeviceRegistration {
-        let token = {
-            let mut st = self.lock();
-            let token = st.next_token;
-            st.next_token += 1;
-            st.devices[device].entries.push(Entry { token, session, parked: false });
-            token
-        };
-        self.cv.notify_all();
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        self.shard(device).entries.push(Entry { token, session, parked: false });
+        self.shards[device].cv.notify_all();
         DeviceRegistration { arb: Arc::clone(self), device, session, token }
     }
 
     /// Session currently holding `device`'s lease.
     pub fn holder(&self, device: usize) -> Option<SessionId> {
-        let st = self.lock();
-        let d = &st.devices[device];
+        let d = self.shard(device);
         d.holder.and_then(|t| d.entries.iter().find(|e| e.token == t).map(|e| e.session))
     }
 
-    /// Sessions registered on `device`, in rotation order.
+    /// Sessions registered on `device`, in rotation order (snapshot:
+    /// clones the entry list — prefer [`Self::registered_count`] when
+    /// only the cardinality matters).
     pub fn registered_sessions(&self, device: usize) -> Vec<SessionId> {
-        self.lock().devices[device].entries.iter().map(|e| e.session).collect()
+        self.shard(device).entries.iter().map(|e| e.session).collect()
+    }
+
+    /// Number of participants registered on `device` — O(1), no clone.
+    /// The hot path for contention estimates (the QoS predictor prices
+    /// every queued session with it).
+    pub fn registered_count(&self, device: usize) -> usize {
+        self.shard(device).entries.len()
     }
 
     /// Leases granted on `device` so far.
     pub fn grant_count(&self, device: usize) -> u64 {
-        self.lock().devices[device].grants
+        self.shard(device).grants
     }
 
-    /// The global grant journal (all devices, grant order).
+    /// Total grants across all devices — O(devices), no journal copy.
+    pub fn journal_len(&self) -> usize {
+        (0..self.shards.len()).map(|d| self.shard(d).journal.len()).sum()
+    }
+
+    /// The global grant journal (all devices, merged by grant serial).
+    /// This is a snapshot accessor that copies every record — meant for
+    /// test assertions and post-run reporting, not hot paths.
     pub fn journal(&self) -> Vec<GrantRecord> {
-        self.lock().journal.clone()
+        let mut out: Vec<GrantRecord> = Vec::new();
+        for d in 0..self.shards.len() {
+            out.extend(self.shard(d).journal.iter().copied());
+        }
+        out.sort_unstable_by_key(|g| g.serial);
+        out
     }
 
     /// Grants of `session` only, in grant order.
     pub fn journal_for(&self, session: SessionId) -> Vec<GrantRecord> {
-        self.lock().journal.iter().filter(|g| g.session == session).copied().collect()
+        let mut out: Vec<GrantRecord> = Vec::new();
+        for d in 0..self.shards.len() {
+            out.extend(self.shard(d).journal.iter().filter(|g| g.session == session).copied());
+        }
+        out.sort_unstable_by_key(|g| g.serial);
+        out
     }
 
     /// Mark a participant as having provably nothing to request
@@ -219,8 +263,7 @@ impl LeaseArbiter {
     /// request again, so a parked turn-holder can never be waited on.
     pub(crate) fn set_parked(&self, device: usize, token: u64, parked: bool) {
         {
-            let mut st = self.lock();
-            let d = &mut st.devices[device];
+            let mut d = self.shard(device);
             if let Some(pos) = d.position(token) {
                 if d.entries[pos].parked != parked {
                     d.entries[pos].parked = parked;
@@ -230,65 +273,56 @@ impl LeaseArbiter {
                 }
             }
         }
-        self.cv.notify_all();
+        self.shards[device].cv.notify_all();
     }
 
     fn acquire_token(&self, device: usize, token: u64, session: SessionId) {
-        let mut st = self.lock();
-        {
-            // A request is intent: a participant that asks again while
-            // parked (defensive — masters un-park before assigning)
-            // re-enters the rotation.
-            let d = &mut st.devices[device];
-            if let Some(pos) = d.position(token) {
-                if d.entries[pos].parked {
-                    d.entries[pos].parked = false;
-                }
-            }
-            if self.policy == LeasePolicy::Fifo {
-                d.queue.push_back(token);
+        let mut d = self.shard(device);
+        // A request is intent: a participant that asks again while
+        // parked (defensive — masters un-park before assigning)
+        // re-enters the rotation.
+        if let Some(pos) = d.position(token) {
+            if d.entries[pos].parked {
+                d.entries[pos].parked = false;
             }
         }
+        if self.policy == LeasePolicy::Fifo {
+            d.queue.push_back(token);
+        }
         loop {
-            let eligible = {
-                let d = &mut st.devices[device];
-                if d.holder.is_some() {
-                    false
-                } else {
-                    match self.policy {
-                        LeasePolicy::Rotation => {
-                            d.normalize();
-                            match d.entries.get(d.turn) {
-                                Some(e) => e.token == token,
-                                // Defensive: an unregistered acquire on
-                                // an otherwise-empty device proceeds.
-                                None => true,
-                            }
+            let eligible = if d.holder.is_some() {
+                false
+            } else {
+                match self.policy {
+                    LeasePolicy::Rotation => {
+                        d.normalize();
+                        match d.entries.get(d.turn) {
+                            Some(e) => e.token == token,
+                            // Defensive: an unregistered acquire on
+                            // an otherwise-empty device proceeds.
+                            None => true,
                         }
-                        LeasePolicy::Fifo => d.queue.front() == Some(&token),
                     }
+                    LeasePolicy::Fifo => d.queue.front() == Some(&token),
                 }
             };
             if eligible {
-                let d = &mut st.devices[device];
                 d.holder = Some(token);
                 d.grants += 1;
                 if self.policy == LeasePolicy::Fifo {
                     d.queue.pop_front();
                 }
-                let serial = st.serial;
-                st.serial += 1;
-                st.journal.push(GrantRecord { serial, device, session });
+                let serial = self.serial.fetch_add(1, Ordering::Relaxed);
+                d.journal.push(GrantRecord { serial, device, session });
                 return;
             }
-            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            d = self.shards[device].cv.wait(d).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     fn release_token(&self, device: usize, token: u64) {
         {
-            let mut st = self.lock();
-            let d = &mut st.devices[device];
+            let mut d = self.shard(device);
             if d.holder == Some(token) {
                 d.holder = None;
                 if self.policy == LeasePolicy::Rotation {
@@ -301,13 +335,12 @@ impl LeaseArbiter {
                 }
             }
         }
-        self.cv.notify_all();
+        self.shards[device].cv.notify_all();
     }
 
     fn deregister_token(&self, device: usize, token: u64) {
         {
-            let mut st = self.lock();
-            let d = &mut st.devices[device];
+            let mut d = self.shard(device);
             if d.holder == Some(token) {
                 // Defensive: a registration should outlive its guards,
                 // but a dying worker must never strand the device.
@@ -322,7 +355,7 @@ impl LeaseArbiter {
             }
             d.queue.retain(|t| *t != token);
         }
-        self.cv.notify_all();
+        self.shards[device].cv.notify_all();
     }
 }
 
@@ -542,5 +575,86 @@ mod tests {
         assert!(ja.iter().all(|g| g.session == 10));
         assert_eq!(arb.journal_for(20).len(), 1);
         assert_eq!(arb.journal_for(99).len(), 0);
+    }
+
+    /// The counter accessors agree with the snapshot accessors, without
+    /// paying their copies.
+    #[test]
+    fn counters_match_snapshots() {
+        let arb = LeaseArbiter::new(2, LeasePolicy::Rotation);
+        assert_eq!(arb.registered_count(0), 0);
+        assert_eq!(arb.journal_len(), 0);
+        let a = arb.register(0, 1);
+        let b = arb.register(0, 2);
+        let c = arb.register(1, 2);
+        assert_eq!(arb.registered_count(0), arb.registered_sessions(0).len());
+        assert_eq!(arb.registered_count(1), arb.registered_sessions(1).len());
+        drop(a.acquire());
+        drop(c.acquire());
+        drop(b.acquire());
+        assert_eq!(arb.journal_len(), arb.journal().len());
+        assert_eq!(arb.journal_len(), 3);
+        drop((a, b, c));
+        assert_eq!(arb.registered_count(0), 0);
+        assert_eq!(arb.registered_count(1), 0);
+    }
+
+    /// The merged journal is strictly serial-sorted and its per-device
+    /// projections match each device's own grant order — the property
+    /// the shard merge must preserve.
+    #[test]
+    fn merged_journal_is_serial_sorted_across_devices() {
+        let arb = LeaseArbiter::new(3, LeasePolicy::Rotation);
+        let regs: Vec<DeviceRegistration> =
+            (0..3).map(|d| arb.register(d, 100 + d as SessionId)).collect();
+        // Interleave grants across devices: 0,1,2,0,1,2,...
+        for _ in 0..3 {
+            for reg in &regs {
+                drop(reg.acquire());
+            }
+        }
+        let j = arb.journal();
+        assert_eq!(j.len(), 9);
+        for w in j.windows(2) {
+            assert!(w[0].serial < w[1].serial, "journal must be serial-sorted");
+        }
+        for d in 0..3 {
+            let dev: Vec<&GrantRecord> = j.iter().filter(|g| g.device == d).collect();
+            assert_eq!(dev.len(), 3);
+            assert!(dev.iter().all(|g| g.session == 100 + d as SessionId));
+            for w in dev.windows(2) {
+                assert!(w[0].serial < w[1].serial);
+            }
+        }
+    }
+
+    /// Shard independence: a waiter blocked on one device must not stop
+    /// grants on another device — the whole point of sharding.
+    #[test]
+    fn blocked_waiter_on_one_device_does_not_serialize_another() {
+        let arb = LeaseArbiter::new(2, LeasePolicy::Rotation);
+        let a0 = arb.register(0, 1);
+        let b0 = arb.register(0, 2);
+        let a1 = arb.register(1, 1);
+        let held = a0.acquire(); // session 1 holds device 0
+        let waiter = {
+            let arb = Arc::clone(&arb);
+            std::thread::spawn(move || {
+                // Blocks until device 0 frees *and* the turn reaches b0.
+                drop(b0.acquire());
+                drop(b0);
+                arb.grant_count(0)
+            })
+        };
+        // Device 1 keeps granting while device 0 has a parked waiter.
+        for _ in 0..50 {
+            drop(a1.acquire());
+        }
+        assert_eq!(arb.grant_count(1), 50);
+        drop(held); // free device 0: the waiter's turn arrives
+        let grants0 = waiter.join().unwrap();
+        assert_eq!(grants0, 2);
+        assert_eq!(arb.holder(0), None);
+        assert_eq!(arb.holder(1), None);
     }
 }

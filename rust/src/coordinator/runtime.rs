@@ -36,20 +36,29 @@
 //! The per-session loop is event-driven over the worker channel:
 //!
 //! * `Ready` — device initialized; top its pipeline up to `depth`
-//!   packages (the first assignment carries the second range as a
-//!   `lookahead`, halving the fill round-trips).
-//! * `Uploaded` — a prefetch's H2D staging landed; release the
-//!   device's staging slot (at most two assignments may be un-staged
-//!   at once — back-pressure for slow buses) and top up again.
-//! * `Done` — a package completed; the completed range and its timing
-//!   are fed to `Scheduler::observe` (the feedback loop: adaptive
-//!   strategies re-size from measured throughput), then one slot is
-//!   freed and the next package assigned — or `Finish` sent when the
-//!   scheduler is dry for that device.
+//!   packages. A refill is *batched*: every decision is computed first,
+//!   then the whole set ships as one `AssignBatch` message, so the
+//!   pipeline fills off a single send and a blocked worker channel can
+//!   never stall scheduler decisions for other devices.
+//! * `Uploaded` — an *exposed* (fill-bubble) H2D staging landed;
+//!   release the device's staging slot (at most two assignments may be
+//!   un-staged at once — back-pressure for slow buses) and top up
+//!   again. Steady-state prefetch stagings don't send this: they ride
+//!   the next `Done`'s `prefetched` flag.
+//! * `Done` — a package completed; if it carries a coalesced prefetch
+//!   confirmation the staging slot frees first, then the completed
+//!   range and its timing are fed to `Scheduler::observe` (the
+//!   feedback loop: adaptive strategies re-size from measured
+//!   throughput), one slot is freed and the next refill assigned — or
+//!   `Finish` sent when the scheduler is dry for that device.
 //! * `Finished`/`Failed` — worker exited; collect its traces,
 //!   observation ledger (folded into the performance-model store at
 //!   session end) and transfer stats (results are already in the
 //!   arena) or the failure.
+//!
+//! Idle timeouts run the liveness sweep on an *adaptive* poll derived
+//! from observed package spans (see `LivenessPoll`); the steady-state
+//! event path allocates nothing per package.
 //!
 //! With `depth == 1` this reduces exactly to the paper's blocking
 //! assign-on-completion loop.
@@ -78,7 +87,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::config::Configurator;
 use crate::coordinator::device::{
-    spawn_worker, Assignment, DeviceSpec, FromWorker, ToWorker, WorkerCtx,
+    spawn_worker, AssignBatch, DeviceSpec, FromWorker, ToWorker, WorkerCtx,
 };
 use crate::coordinator::engine::MAX_PIPELINE_DEPTH;
 use crate::coordinator::error::EclError;
@@ -493,7 +502,9 @@ fn predict_for(
             DeviceLoad::new(
                 d.name.clone(),
                 d.relative_power,
-                shared.arbiter.registered_sessions(s.index).len() + 1,
+                // O(1) participant count — admission prices every
+                // queued session, so no snapshot clone on this path.
+                shared.arbiter.registered_count(s.index) + 1,
             )
         })
         .collect();
@@ -1038,17 +1049,23 @@ impl SessionExec {
         // without reporting (panics are caught and converted to Failed
         // events in the worker shell; the sweep catches *silent* exits —
         // the chaos layer's "vanish" mode, a segfaulting driver).
-        const LIVENESS_POLL: Duration = Duration::from_millis(25);
+        // Adaptive since the hot-path flattening: derived from observed
+        // package spans instead of a fixed 25ms tick (see LivenessPoll).
+        let mut liveness = LivenessPoll::new();
+        // Reusable sweep scratch — the steady-state loop allocates
+        // nothing per event or per timeout.
+        let mut dead_scratch: Vec<usize> = Vec::with_capacity(ndev);
 
         // QoS tick state: last progress mark a slack report was sent at
         // (deadlined sessions report only when progress advanced).
         let mut last_slack_report = 0usize;
 
         while finished < ndev {
-            match from_workers.recv_timeout(LIVENESS_POLL) {
+            match from_workers.recv_timeout(liveness.current()) {
                 Ok(ev) => handle_event(
                     ev,
                     &mut master,
+                    &mut liveness,
                     arena.as_ref(),
                     &mut device_traces,
                     &mut observations,
@@ -1072,13 +1089,16 @@ impl SessionExec {
                     // is still unreported after the drain is a genuine
                     // silent death.
                     let disconnected = err == RecvTimeoutError::Disconnected;
-                    let dead: Vec<usize> = (0..ndev)
-                        .filter(|&d| !reported[d] && (disconnected || handles[d].is_finished()))
-                        .collect();
+                    dead_scratch.clear();
+                    dead_scratch.extend(
+                        (0..ndev)
+                            .filter(|&d| !reported[d] && (disconnected || handles[d].is_finished())),
+                    );
                     while let Ok(ev) = from_workers.try_recv() {
                         handle_event(
                             ev,
                             &mut master,
+                            &mut liveness,
                             arena.as_ref(),
                             &mut device_traces,
                             &mut observations,
@@ -1089,7 +1109,7 @@ impl SessionExec {
                             epoch,
                         );
                     }
-                    for dev in dead {
+                    for &dev in &dead_scratch {
                         if !reported[dev] {
                             reported[dev] = true;
                             finished += 1;
@@ -1216,6 +1236,59 @@ impl SessionExec {
     }
 }
 
+/// Floor of the adaptive liveness poll: never spin faster than this
+/// even on microsecond packages.
+const LIVENESS_POLL_MIN: Duration = Duration::from_millis(5);
+/// Ceiling of the adaptive liveness poll: a vanish is detected within
+/// this bound even on very long packages.
+const LIVENESS_POLL_MAX: Duration = Duration::from_millis(250);
+/// Default poll before the first package completes (the seed's fixed
+/// tick).
+const LIVENESS_POLL_DEFAULT: Duration = Duration::from_millis(25);
+/// EWMA weight for observed package spans.
+const LIVENESS_EWMA_ALPHA: f64 = 0.2;
+
+/// Adaptive liveness poll: how long the idle master sleeps in
+/// `recv_timeout` before sweeping for silently-dead workers. Derived
+/// from the EWMA of observed package spans (half a span, clamped to
+/// `[LIVENESS_POLL_MIN, LIVENESS_POLL_MAX]`): short packages mean
+/// frequent events anyway, so a short poll costs nothing and catches a
+/// vanish fast; long packages mean the master would otherwise burn
+/// wakeups sweeping a healthy run every 25ms. Worker-channel
+/// disconnects are detected immediately regardless (the `recv` returns
+/// `Disconnected`, not a timeout) — the poll only bounds detection of
+/// a thread that exited while *other* workers keep the channel open.
+struct LivenessPoll {
+    ewma_secs: f64,
+    observed: bool,
+}
+
+impl LivenessPoll {
+    fn new() -> Self {
+        Self { ewma_secs: 0.0, observed: false }
+    }
+
+    /// Feed one completed package's occupancy span.
+    fn observe(&mut self, span: Duration) {
+        let s = span.as_secs_f64();
+        if self.observed {
+            self.ewma_secs += LIVENESS_EWMA_ALPHA * (s - self.ewma_secs);
+        } else {
+            self.ewma_secs = s;
+            self.observed = true;
+        }
+    }
+
+    /// The poll to use for the next idle wait.
+    fn current(&self) -> Duration {
+        if !self.observed {
+            return LIVENESS_POLL_DEFAULT;
+        }
+        Duration::from_secs_f64(self.ewma_secs * 0.5)
+            .clamp(LIVENESS_POLL_MIN, LIVENESS_POLL_MAX)
+    }
+}
+
 /// The master's view of its session's lease participation: one token
 /// per device slot, parked while that slot provably has nothing to
 /// request (so the rotation never waits on a finished session).
@@ -1300,9 +1373,15 @@ impl MasterState {
     }
 
     /// Top device `dev`'s pipeline up to `depth` packages (and at most
-    /// `staging_cap` unconfirmed stagings). The first message batches
-    /// two ranges (range + lookahead) so a pipelined worker starts
-    /// one-ahead off a single round-trip.
+    /// `staging_cap` unconfirmed stagings). Two phases: every scheduler
+    /// decision for this refill is computed first (into an inline,
+    /// allocation-free [`AssignBatch`]), then the whole refill ships as
+    /// a single channel send. The decision sequence is identical to the
+    /// seed's one-send-per-decision loop — reclaimed work first, then
+    /// the scheduler, with the pipelined lookahead pulled under the
+    /// same guards — but the scheduler is never blocked behind a
+    /// worker channel, and a pipelined worker's whole refill arrives in
+    /// one message.
     fn top_up(&mut self, dev: usize) {
         if self.finish_sent[dev] || self.failed[dev] {
             return;
@@ -1318,7 +1397,15 @@ impl MasterState {
             }
             return;
         }
-        while self.pending[dev].len() < self.depth && self.unstaged[dev] < self.staging_cap {
+        // Phase 1: decisions. `batch` can never overflow its inline
+        // capacity — a refill is bounded by `depth <= MAX_PIPELINE_DEPTH`
+        // pending packages (the `is_full` guards are defensive).
+        let mut batch = AssignBatch::new();
+        let mut finish = false;
+        while self.pending[dev].len() < self.depth
+            && self.unstaged[dev] < self.staging_cap
+            && !batch.is_full()
+        {
             let Some((range, requeued)) = self.next_range(dev) else {
                 // Legacy abort-on-failure mode finishes a device the
                 // moment it runs dry (blocking workers only when idle;
@@ -1327,36 +1414,41 @@ impl MasterState {
                 // `finish_if_complete`: a later failure may still
                 // requeue work onto this device.
                 if !self.fault_tolerant && (self.pending[dev].is_empty() || self.depth > 1) {
-                    self.to_workers[dev].send(ToWorker::Finish).ok();
-                    self.finish_sent[dev] = true;
+                    finish = true;
                 }
                 break;
             };
-            // Un-park strictly before the Assign travels: the arbiter
-            // must consider this slot active by the time its worker
-            // requests the device lease for the new package.
-            self.parker.set(dev, false);
             self.pending[dev].push_back(range);
             if self.depth > 1 {
                 self.unstaged[dev] += 1;
             }
-            let lookahead = if self.depth > 1
+            batch.push(range, requeued);
+            // Pipelined lookahead: pull one more scheduler range into
+            // the same refill so the pipeline fills off a single
+            // message (the seed's `lookahead` field, generalized).
+            if self.depth > 1
                 && self.pending[dev].len() < self.depth
                 && self.unstaged[dev] < self.staging_cap
                 && self.reclaimed.is_empty()
+                && !batch.is_full()
             {
-                let next = self.next_scheduler_range(dev);
-                if let Some(n) = next {
+                if let Some(n) = self.next_scheduler_range(dev) {
                     self.pending[dev].push_back(n);
                     self.unstaged[dev] += 1;
+                    batch.push(n, false);
                 }
-                next
-            } else {
-                None
-            };
-            self.to_workers[dev]
-                .send(ToWorker::Assign(Assignment { range, lookahead, requeued }))
-                .ok();
+            }
+        }
+        // Phase 2: ship. Un-park strictly before the batch travels: the
+        // arbiter must consider this slot active by the time its worker
+        // requests the device lease for the new packages.
+        if !batch.is_empty() {
+            self.parker.set(dev, false);
+            self.to_workers[dev].send(ToWorker::Assign(batch)).ok();
+        }
+        if finish {
+            self.to_workers[dev].send(ToWorker::Finish).ok();
+            self.finish_sent[dev] = true;
         }
         // Park the slot once it provably has nothing left to request:
         // scheduler dry, nothing in flight, nothing reclaimed pending.
@@ -1443,6 +1535,7 @@ impl MasterState {
 fn handle_event(
     ev: FromWorker,
     master: &mut MasterState,
+    liveness: &mut LivenessPoll,
     arena: &OutputArena,
     device_traces: &mut [DeviceTrace],
     observations: &mut [Vec<PackageObservation>],
@@ -1459,12 +1552,20 @@ fn handle_event(
             master.top_up(dev);
         }
         FromWorker::Uploaded { dev } => {
-            // A prefetch landed on the device: release its staging slot
-            // and keep the pipe full.
+            // An exposed (fill-bubble) staging landed on the device:
+            // release its staging slot and keep the pipe full.
             master.unstaged[dev] = master.unstaged[dev].saturating_sub(1);
             master.top_up(dev);
         }
-        FromWorker::Done { dev, timing } => {
+        FromWorker::Done { dev, timing, prefetched } => {
+            // A coalesced prefetch rides ahead of the completion: the
+            // staging slot frees first, exactly as the standalone
+            // `Uploaded` that used to precede this `Done` did.
+            if prefetched {
+                master.unstaged[dev] = master.unstaged[dev].saturating_sub(1);
+                master.top_up(dev);
+            }
+            liveness.observe(timing.span);
             // Workers execute in assignment order, so the front pending
             // range is the completed one; its results are fully in the
             // arena by the time Done is sent. Close the feedback loop
@@ -1707,5 +1808,139 @@ mod tests {
             result: Err(EclError::NoProgram),
         };
         assert_eq!(none.met_deadline(), None);
+    }
+
+    /// Build a bare MasterState over `ndev` channel-backed device slots
+    /// (no workers) for dispatch-protocol unit tests. The registrations
+    /// must stay alive for the parker's tokens to stay valid.
+    fn test_master(
+        ndev: usize,
+        depth: usize,
+        kind: SchedulerKind,
+        granules: usize,
+        granule: usize,
+    ) -> (MasterState, Vec<Receiver<ToWorker>>, Vec<DeviceRegistration>) {
+        let arbiter = LeaseArbiter::new(ndev, LeasePolicy::Rotation);
+        let regs: Vec<DeviceRegistration> = (0..ndev).map(|d| arbiter.register(d, 0)).collect();
+        let tokens: Vec<u64> = regs.iter().map(|r| r.token()).collect();
+        let devices: Vec<SchedDevice> =
+            (0..ndev).map(|d| SchedDevice::new(format!("dev{d}"), 1.0)).collect();
+        let mut scheduler = kind.build();
+        scheduler.start(granules, granule, &devices);
+        let mut to_workers = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..ndev {
+            let (tx, rx) = channel();
+            to_workers.push(tx);
+            rxs.push(rx);
+        }
+        let master = MasterState {
+            depth,
+            staging_cap: if depth > 1 { 2 } else { usize::MAX },
+            granule,
+            fault_tolerant: true,
+            scheduler,
+            to_workers,
+            pending: vec![VecDeque::new(); ndev],
+            unstaged: vec![0usize; ndev],
+            finish_sent: vec![false; ndev],
+            failed: vec![false; ndev],
+            dry: vec![false; ndev],
+            reclaimed: VecDeque::new(),
+            paused: false,
+            completed_items: 0,
+            parker: MasterParker {
+                arbiter,
+                tokens,
+                node_devs: (0..ndev).collect(),
+                parked: vec![false; ndev],
+            },
+        };
+        (master, rxs, regs)
+    }
+
+    /// A pipelined refill ships as ONE batched message carrying every
+    /// decision of the top-up (range + lookahead in the seed protocol),
+    /// with contiguous scheduler ranges in decision order.
+    #[test]
+    fn top_up_ships_one_batched_refill() {
+        let (mut master, rxs, _regs) =
+            test_master(1, 2, SchedulerKind::dynamic(4), 8, 4);
+        master.top_up(0);
+        let msg = rxs[0].try_recv().expect("one refill message");
+        match msg {
+            ToWorker::Assign(batch) => {
+                assert_eq!(batch.len(), 2, "depth-2 refill batches both ranges");
+                let ranges: Vec<Range> = batch.iter().map(|a| a.range).collect();
+                assert_eq!(
+                    ranges[0].end, ranges[1].begin,
+                    "decision order preserved: contiguous dynamic ranges"
+                );
+                assert!(batch.iter().all(|a| !a.requeued));
+            }
+            ToWorker::Finish => panic!("expected an Assign batch, got Finish"),
+        }
+        assert!(rxs[0].try_recv().is_err(), "the whole refill was a single message");
+        assert_eq!(master.pending[0].len(), 2);
+        assert_eq!(master.unstaged[0], 2, "both ranges count against the staging cap");
+        // A second top-up with a full pipeline ships nothing.
+        master.top_up(0);
+        assert!(rxs[0].try_recv().is_err());
+    }
+
+    /// Satellite regression: scheduler decisions are computed before any
+    /// channel send, so a worker channel that died (or blocked) cannot
+    /// stall scheduling — decisions and observations for *other* devices
+    /// proceed untouched.
+    #[test]
+    fn dead_worker_channel_does_not_stall_other_devices() {
+        let (mut master, mut rxs, _regs) =
+            test_master(2, 1, SchedulerKind::dynamic(4), 8, 4);
+        drop(rxs.remove(0)); // device 0's channel is gone
+        master.top_up(0); // must neither panic nor block
+        assert_eq!(master.pending[0].len(), 1, "decision was still made for dev 0");
+        // Device 1 keeps scheduling, observing and re-filling.
+        master.top_up(1);
+        let first = match rxs[0].try_recv().expect("dev 1 gets its refill") {
+            ToWorker::Assign(batch) => {
+                assert_eq!(batch.len(), 1);
+                batch.iter().next().unwrap().range
+            }
+            ToWorker::Finish => panic!("expected an Assign batch"),
+        };
+        let done = master.pending[1].pop_front().expect("dev 1 has in-flight work");
+        assert_eq!(done, first);
+        master
+            .scheduler
+            .observe(1, done, crate::coordinator::scheduler::PackageTiming::default());
+        master.top_up(1);
+        assert!(
+            matches!(rxs[0].try_recv(), Ok(ToWorker::Assign(_))),
+            "observation fed and the next refill shipped despite dev 0's dead channel"
+        );
+    }
+
+    /// The adaptive liveness poll: defaults to the seed's 25ms tick
+    /// until the first observation, then tracks half the EWMA package
+    /// span clamped to [5ms, 250ms].
+    #[test]
+    fn liveness_poll_adapts_and_clamps() {
+        let mut p = LivenessPoll::new();
+        assert_eq!(p.current(), LIVENESS_POLL_DEFAULT);
+        p.observe(Duration::from_millis(100));
+        assert_eq!(p.current(), Duration::from_millis(50), "half the observed span");
+        let mut fast = LivenessPoll::new();
+        fast.observe(Duration::from_micros(200));
+        assert_eq!(fast.current(), LIVENESS_POLL_MIN, "floor on microsecond packages");
+        let mut slow = LivenessPoll::new();
+        slow.observe(Duration::from_secs(30));
+        assert_eq!(slow.current(), LIVENESS_POLL_MAX, "ceiling bounds vanish detection");
+        // EWMA: a step change moves the estimate toward the new level.
+        let before = p.current();
+        for _ in 0..50 {
+            p.observe(Duration::from_millis(400));
+        }
+        assert!(p.current() > before);
+        assert!(p.current() <= Duration::from_millis(200));
     }
 }

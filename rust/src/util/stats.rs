@@ -73,6 +73,18 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// Median absolute deviation from the median — the robust spread the
+/// dispatch benchmark suite reports alongside medians (rustc-perf style);
+/// 0.0 for an empty slice.
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = median(xs);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&devs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +126,18 @@ mod tests {
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
         // Unsorted input is handled (sorted copy).
         assert_eq!(percentile(&[3.0, 1.0, 2.0], 100.0), 3.0);
+    }
+
+    #[test]
+    fn mad_basic() {
+        // median = 2, |devs| = [1, 0, 1] -> mad = 1
+        assert_eq!(mad(&[1.0, 2.0, 3.0]), 1.0);
+        // constant data has zero spread
+        assert_eq!(mad(&[5.0, 5.0, 5.0]), 0.0);
+        // robust to a single outlier: median = 2.5,
+        // devs = [1.5, 0.5, 0.5, 97.5] -> mad = 1.0
+        assert_eq!(mad(&[1.0, 2.0, 3.0, 100.0]), 1.0);
+        assert_eq!(mad(&[]), 0.0);
     }
 
     #[test]

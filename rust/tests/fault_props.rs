@@ -137,6 +137,21 @@ fn kill_recovery_hguided_pipe() {
     kill_sweep(SchedulerKind::hguided().pipelined(2));
 }
 
+/// The feedback-driven scheduler through the batched dispatch path:
+/// adaptive package sizing is timing-dependent, but a kill at the
+/// second device's first package (its probe) always fires, and the
+/// recovery contract — bit-identical outputs, exactly-once ledger, one
+/// recovered fault — is timing-independent.
+#[test]
+fn kill_recovery_adaptive() {
+    kill_sweep(SchedulerKind::adaptive());
+}
+
+#[test]
+fn kill_recovery_adaptive_pipe() {
+    kill_sweep(SchedulerKind::adaptive().pipelined(2));
+}
+
 /// Any device may die, and at a later package too (late kill points may
 /// not fire on adaptive schedulers — then the run is simply fault-free,
 /// which the conditional contract accepts).
@@ -282,6 +297,28 @@ fn vanished_worker_is_detected_and_recovered() {
     // Vanish at package 0: no claim was taken (revoked = 0), but the
     // assigned range must still be reclaimed and requeued.
     check_faulted(&reg, "gaussian", SchedulerKind::dynamic(10), FaultPlan::vanish(1, 0), Some(0));
+}
+
+/// Vanish-detection latency regression (PR-7): the master's liveness
+/// sweep is now driven by an adaptive poll derived from observed
+/// package times, clamped to [5 ms, 250 ms]. A silently-dead worker
+/// must therefore still be noticed within a bounded number of poll
+/// ticks — if the adaptive interval ever escaped its clamp (or the
+/// sweep stopped running), this small recovered run would stretch far
+/// past the generous wall-clock bound.
+#[test]
+fn vanish_detection_latency_is_bounded() {
+    let reg = registry();
+    let kind = SchedulerKind::dynamic(10);
+    let want = baseline_outputs(&reg, "gaussian", &kind);
+    let t0 = std::time::Instant::now();
+    check_faulted_against(&reg, "gaussian", &kind, FaultPlan::vanish(1, 0), Some(0), &want);
+    let wall = t0.elapsed();
+    assert!(
+        wall < Duration::from_secs(10),
+        "vanish recovery took {wall:?} — the liveness poll must stay clamped \
+         (max 250 ms per tick)"
+    );
 }
 
 /// With no survivors, a vanished worker surfaces as a dead-channel

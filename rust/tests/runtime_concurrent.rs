@@ -439,6 +439,119 @@ fn golden_concurrent_trace_determinism() {
     }
 }
 
+/// Bulk-dispatch equivalence grid (PR-7): across 5 kernels ×
+/// {static,dynamic,hguided,adaptive} × {blocking,+pipe}, a session run
+/// solo and the same session run twice concurrently must produce
+/// bit-identical outputs and exactly-once package ledgers. The batched
+/// master refills whole `AssignBatch`es and coalesces prefetch
+/// acknowledgements into `Done` — any range duplicated, dropped, or
+/// misordered by the batching shows up here as a ledger gap/overlap or
+/// an output diff.
+#[test]
+fn bulk_dispatch_equivalence_grid() {
+    let reg = registry();
+    let kinds = [
+        SchedulerKind::static_default(),
+        SchedulerKind::dynamic(6),
+        SchedulerKind::hguided(),
+        SchedulerKind::adaptive(),
+    ];
+    for bench in ["binomial", "gaussian", "mandelbrot", "nbody", "ray1"] {
+        let gws = small_gws(&reg, bench);
+        for base in &kinds {
+            for depth in [1usize, 2] {
+                let kind =
+                    if depth > 1 { base.clone().pipelined(depth) } else { base.clone() };
+                let label = format!("{bench}/{}", kind.label());
+                // Solo reference through its own runtime.
+                let solo_rt = chaos_runtime(&reg, LeasePolicy::Rotation, 0xD15);
+                let solo = solo_rt
+                    .submit(chaos_session(&reg, bench, 2, kind.clone(), None).gws(gws))
+                    .wait();
+                let sr = solo
+                    .result
+                    .as_ref()
+                    .unwrap_or_else(|e| panic!("{label}: solo run failed: {e}"));
+                assert_exactly_once(sr);
+                let nouts = reg.bench(bench).unwrap().outputs.len();
+                let want: Vec<Vec<f32>> =
+                    (0..nouts).map(|i| solo.output(i).unwrap().to_vec()).collect();
+                solo_rt.wait_idle();
+                // The same combo twice, concurrently, contending on the
+                // same two devices.
+                let rt = chaos_runtime(&reg, LeasePolicy::Rotation, 0xD16);
+                let handles = rt.submit_all(vec![
+                    chaos_session(&reg, bench, 2, kind.clone(), None).gws(gws),
+                    chaos_session(&reg, bench, 2, kind.clone(), None).gws(gws),
+                ]);
+                for h in handles {
+                    let o = h.wait();
+                    let r = o
+                        .result
+                        .as_ref()
+                        .unwrap_or_else(|e| panic!("{label}: concurrent run failed: {e}"));
+                    assert_exactly_once(r);
+                    for (i, w) in want.iter().enumerate() {
+                        assert!(
+                            o.output(i).unwrap() == &w[..],
+                            "{label}: concurrent output {i} not bit-identical to solo"
+                        );
+                    }
+                }
+                rt.wait_idle();
+            }
+        }
+    }
+}
+
+/// Pinned-seed lease-journal replay over pipelined sessions (PR-7): the
+/// sharded arbiter merges per-device journal slices on read, and the
+/// batched master changes *when* grants are requested — neither may
+/// change *what* each device's grant sequence is. Two executions of the
+/// same seeded batch (including +pipe depth-2 sessions, which golden
+/// batches did not cover before) must reproduce identical per-session
+/// trace signatures and identical per-device grant sequences.
+#[test]
+fn pipelined_batch_lease_journal_replay() {
+    let reg = registry();
+    let run = |seed: u64| -> (Vec<Signature>, Vec<GrantRecord>) {
+        let rt = chaos_runtime(&reg, LeasePolicy::Rotation, seed);
+        let sessions = vec![
+            chaos_session(&reg, "binomial", 3, SchedulerKind::static_default().pipelined(2), None),
+            chaos_session(&reg, "gaussian", 3, SchedulerKind::dynamic(6).pipelined(2), None),
+            chaos_session(&reg, "mandelbrot", 2, SchedulerKind::static_default(), None),
+        ];
+        let handles = rt.submit_all(sessions);
+        let sigs = handles
+            .into_iter()
+            .map(|h| {
+                let label = h.label().to_string();
+                let o = h.wait();
+                let report = o
+                    .result
+                    .as_ref()
+                    .unwrap_or_else(|e| panic!("{label}: replay batch session failed: {e}"));
+                trace_signature(report)
+            })
+            .collect();
+        rt.wait_idle();
+        (sigs, rt.lease_journal())
+    };
+    let (sig1, j1) = run(0x7E9);
+    let (sig2, j2) = run(0x7E9);
+    assert_eq!(sig1, sig2, "pipelined package streams must reproduce exactly");
+    assert_eq!(
+        per_device_grants(&j1, 3),
+        per_device_grants(&j2, 3),
+        "per-device lease grant sequences must reproduce exactly"
+    );
+    // The merged journal must itself be serial-ordered — the sharded
+    // arbiter's merge-on-read contract.
+    for w in j1.windows(2) {
+        assert!(w[0].serial < w[1].serial, "merged journal must be strictly serial-sorted");
+    }
+}
+
 /// Acceptance: two sessions submitted together on the 3-device batel
 /// node finish with simclock makespan strictly less than the sum of
 /// their solo makespans, while each session's outputs stay
