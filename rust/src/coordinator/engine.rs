@@ -251,6 +251,7 @@ impl Engine {
             leases: SessionLeases { arbiter, registrations },
             perf: Some(Arc::clone(&self.perf)),
             qos: None,
+            artifacts: None,
         };
         exec.run(program)
     }

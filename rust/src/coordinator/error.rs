@@ -36,6 +36,10 @@ pub enum EclError {
     BadPipelineDepth { depth: usize, max: usize },
     /// A device worker thread failed.
     Worker { device: String, message: String },
+    /// A service ingestion shard's bounded mailbox is full. This is
+    /// backpressure, not failure: retry after the dispatcher (or a
+    /// `Service::pump_round` call) drains the shard.
+    MailboxFull { shard: usize, cap: usize },
     /// QoS admission control rejected the session up front: the
     /// performance model priced its makespan above the deadline with
     /// margin to spare (only ever raised on fully warm estimates — a
@@ -86,6 +90,10 @@ impl fmt::Display for EclError {
             EclError::Worker { device, message } => {
                 write!(f, "device worker '{device}' failed: {message}")
             }
+            EclError::MailboxFull { shard, cap } => write!(
+                f,
+                "service shard {shard} mailbox full (cap {cap}): retry after a dispatch round"
+            ),
             EclError::AdmissionRejected { label, predicted, deadline } => write!(
                 f,
                 "session '{label}' rejected at admission: predicted makespan {}ms cannot fit deadline {}ms",

@@ -124,6 +124,12 @@ pub struct DeviceTrace {
     /// lease — i.e., the device serving *other* sessions' package
     /// windows. Zero in a solo run (single-participant arbiter).
     pub lease_wait: Duration,
+    /// Artifact-cache outcome of this device's init: `Some(true)` when
+    /// the (kernel-key, device) artifact was already resident (setup
+    /// skipped), `Some(false)` when this worker paid the build, `None`
+    /// when the session ran without a cache (solo engine, uncached
+    /// runtime).
+    pub cache_hit: Option<bool>,
 }
 
 impl DeviceTrace {
@@ -320,6 +326,20 @@ impl RunReport {
         self.devices.iter().map(|d| d.lease_wait).sum()
     }
 
+    /// Devices whose compiled artifact was already resident in the
+    /// runtime's [`ArtifactCache`](crate::platform::ArtifactCache) —
+    /// they skipped eager compilation and the simulated driver init.
+    /// 0 for uncached sessions.
+    pub fn artifact_cache_hits(&self) -> usize {
+        self.devices.iter().filter(|d| d.cache_hit == Some(true)).count()
+    }
+
+    /// Devices that paid the artifact build this session (cache misses).
+    /// 0 for uncached sessions.
+    pub fn artifact_cache_misses(&self) -> usize {
+        self.devices.iter().filter(|d| d.cache_hit == Some(false)).count()
+    }
+
     /// ASCII timeline (one row per device) — the Introspector "visual
     /// representation" of Figures 5/6 for terminals. `i` marks init,
     /// `#` compute windows, `u` H2D staging visible outside compute
@@ -436,6 +456,7 @@ mod tests {
                     packages: vec![mk(0, 0, 30, 10, 80)],
                     xfer: TransferStats { input_upload_bytes: 0, h2d_bytes: 4, d2h_bytes: 0 },
                     lease_wait: ms(0),
+                    cache_hit: None,
                 },
                 DeviceTrace {
                     name: "gpu".into(),
@@ -445,6 +466,7 @@ mod tests {
                     packages: vec![mk(1, 30, 100, 5, 100)],
                     xfer: TransferStats { input_upload_bytes: 0, h2d_bytes: 4, d2h_bytes: 0 },
                     lease_wait: ms(0),
+                    cache_hit: None,
                 },
             ],
             faults: Vec::new(),

@@ -18,6 +18,7 @@ pub mod program;
 pub mod qos;
 pub mod runtime;
 pub mod scheduler;
+pub mod service;
 pub mod work;
 
 pub use buffer::Buffer;
@@ -31,4 +32,8 @@ pub use program::{Arg, Program};
 pub use qos::{QosClass, QosController, QosEvent, QosPolicy};
 pub use runtime::{RunSession, Runtime, SessionHandle, SessionOutcome};
 pub use scheduler::SchedulerKind;
+pub use service::{
+    LedgerCounts, LedgerState, Request, RequestId, RequestReport, Response, ResponseHandle,
+    Served, Service, ServiceConfig, ServiceStats,
+};
 pub use work::Range;

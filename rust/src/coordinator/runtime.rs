@@ -105,7 +105,7 @@ use crate::coordinator::scheduler::{
 use crate::coordinator::work::{split_range, Range};
 use crate::platform::perfmodel::PerfModelStore;
 use crate::platform::qos::{DeviceLoad, MakespanEstimate, MakespanPredictor};
-use crate::platform::{DeviceKind, NodeConfig};
+use crate::platform::{ArtifactCache, DeviceKind, NodeConfig};
 use crate::runtime::{input_views, ArtifactRegistry, HostBuf, InputView, OutputArena};
 
 // ---- sessions ---------------------------------------------------------
@@ -307,6 +307,12 @@ struct RuntimeShared {
     qos: QosPolicy,
     /// The shed/preempt controller (inert while `qos.enabled` is off).
     qos_ctl: Arc<QosController>,
+    /// The compiled-artifact cache (`None` unless enabled via
+    /// [`Runtime::with_artifact_cache`]): repeat sessions on a
+    /// (kernel-key, device) pair skip eager compilation and the
+    /// simulated driver init. Opt-in so uncached runtimes keep their
+    /// init timing byte-identical to the pre-cache behavior.
+    artifacts: Option<Arc<ArtifactCache>>,
     state: Mutex<RtState>,
     idle: Condvar,
 }
@@ -355,6 +361,7 @@ impl Runtime {
                 max_in_flight: max_in_flight.max(1),
                 qos,
                 qos_ctl: Arc::new(QosController::new(seed, qos)),
+                artifacts: None,
                 state: Mutex::new(RtState {
                     next_session: 0,
                     in_flight: 0,
@@ -400,6 +407,24 @@ impl Runtime {
 
     pub fn qos_policy(&self) -> QosPolicy {
         self.shared.qos
+    }
+
+    /// Enable the compiled-artifact cache (builder-style; call before
+    /// the first submission — the service front-end's repeat-traffic
+    /// path). Each (kernel-key, device) pair pays its setup once per
+    /// runtime; later sessions skip eager compilation and the simulated
+    /// driver init, and their reports record the hit
+    /// ([`RunReport::artifact_cache_hits`]).
+    pub fn with_artifact_cache(mut self) -> Self {
+        if let Some(shared) = Arc::get_mut(&mut self.shared) {
+            shared.artifacts = Some(Arc::new(ArtifactCache::new()));
+        }
+        self
+    }
+
+    /// The artifact cache, when enabled.
+    pub fn artifact_cache(&self) -> Option<&Arc<ArtifactCache>> {
+        self.shared.artifacts.as_ref()
     }
 
     /// Sessions in admission-grant order — what the EDF tie-break and
@@ -677,6 +702,7 @@ fn spawn_session(shared: &Arc<RuntimeShared>, adm: Admitted) {
                 },
                 perf: Some(Arc::clone(&shared.perf)),
                 qos,
+                artifacts: shared.artifacts.clone(),
             };
             // A panicking session must not leak its admission slot
             // (queued sessions would never admit and wait_idle would
@@ -764,6 +790,11 @@ pub(crate) struct SessionExec {
     /// pause/resume, and the deadline + admission prediction become the
     /// schedulers' [`QosHint`].
     pub qos: Option<SessionQosCtx>,
+    /// The runtime's compiled-artifact cache, when enabled: workers
+    /// probe it at init and skip setup on a hit (see
+    /// `platform::artifact_cache`). `None` for solo engine runs and
+    /// uncached runtimes.
+    pub artifacts: Option<Arc<ArtifactCache>>,
 }
 
 impl SessionExec {
@@ -780,6 +811,7 @@ impl SessionExec {
             leases,
             perf,
             qos,
+            artifacts,
         } = self;
         let SessionLeases { arbiter, registrations } = leases;
         debug_assert_eq!(registrations.len(), selected.len());
@@ -887,6 +919,13 @@ impl SessionExec {
             return Err(EclError::BadPipelineDepth { depth, max: MAX_PIPELINE_DEPTH });
         }
 
+        // The performance-model / artifact-cache key carries the
+        // execution mode: pipelined spans exclude the staging they
+        // overlap, blocking spans include it, so the two must never
+        // seed each other's warm start — nor alias each other's
+        // compiled artifacts.
+        let store_key = if depth > 1 { format!("{kernel}+pipe") } else { kernel.clone() };
+
         // ---- zero-copy buffer setup ------------------------------------
         // Inputs: one shared immutable view per program input (a single
         // O(N) materialization; every worker shares the allocation).
@@ -954,6 +993,7 @@ impl SessionExec {
                     .map(|p| p.injector_for(slot))
                     .unwrap_or_default(),
                 lease,
+                artifacts: artifacts.as_ref().map(|c| (Arc::clone(c), store_key.clone())),
             };
             handles.push(spawn_worker(ctx, to_master_tx.clone(), rx));
         }
@@ -963,11 +1003,7 @@ impl SessionExec {
         // Feedback-capable schedulers warm-start from the performance
         // model's cross-session estimates: the first package of this
         // run is already sized for the throughput earlier sessions
-        // *measured*, not the profile's static prior. The store key
-        // carries the execution mode: pipelined spans exclude the
-        // staging they overlap, blocking spans include it, so the two
-        // must never seed each other's warm start.
-        let store_key = if depth > 1 { format!("{kernel}+pipe") } else { kernel.clone() };
+        // *measured*, not the profile's static prior.
         // Deadlined sessions hand the schedulers a QoS hint (deadline +
         // admission-time prediction): feedback strategies tighten their
         // package sizing when the deadline is at risk.
@@ -980,7 +1016,13 @@ impl SessionExec {
             .map(|s| {
                 let d = &node.devices[s.index];
                 let warm = if config.warm_start {
-                    perf.as_ref().and_then(|p| p.estimate(&store_key, &d.name))
+                    // Same hygiene as the MakespanPredictor: a
+                    // zero/NaN/Inf rate from a degenerate store entry
+                    // must cold-start the scheduler, not poison its
+                    // throughput model.
+                    perf.as_ref()
+                        .and_then(|p| p.estimate(&store_key, &d.name))
+                        .filter(|r| r.is_finite() && *r > 0.0)
                 } else {
                     None
                 };
@@ -1005,6 +1047,7 @@ impl SessionExec {
                     packages: Vec::new(),
                     xfer: Default::default(),
                     lease_wait: Default::default(),
+                    cache_hit: None,
                 }
             })
             .collect();
@@ -1546,9 +1589,10 @@ fn handle_event(
     epoch: Instant,
 ) {
     match ev {
-        FromWorker::Ready { dev, init_start, init_end } => {
+        FromWorker::Ready { dev, init_start, init_end, cache_hit } => {
             device_traces[dev].init_start = init_start;
             device_traces[dev].init_end = init_end;
+            device_traces[dev].cache_hit = cache_hit;
             master.top_up(dev);
         }
         FromWorker::Uploaded { dev } => {

@@ -1,0 +1,1053 @@
+//! Service front-end: traffic-scale ingestion over the persistent
+//! [`Runtime`].
+//!
+//! The runtime (PR-5/PR-7) already multiplexes concurrent sessions over
+//! one device fleet, but every caller still hand-builds a `RunSession`
+//! and pays full per-session setup. This layer turns the runtime into a
+//! *service*: clients toss small [`Request`]s at it and get per-request
+//! [`Response`]s back, while the front-end does the traffic engineering
+//! in between:
+//!
+//! 1. **Sharded ingestion** — requests land in one of `shards` bounded
+//!    mailboxes (picked by a seeded tenant/id hash). A full mailbox is
+//!    backpressure ([`EclError::MailboxFull`]), never silent loss.
+//! 2. **Weighted fair admission** — drained requests queue per tenant
+//!    and leave by deficit round-robin: each round every backlogged
+//!    tenant earns `quantum × weight` work-items of credit and releases
+//!    requests from its FIFO head while the credit lasts. A heavy
+//!    tenant can saturate its own queue, not the fleet. This sits
+//!    *under* the runtime's EDF + starvation-bound admission, which
+//!    still orders whatever the DRR releases.
+//! 3. **Coalescing** — released requests with the same (kernel,
+//!    scheduler) collapse into one batched `RunSession` whose global
+//!    work size is the largest member's. Kernels compute
+//!    `output[i] = f(inputs, i)` per item over the canonical golden
+//!    inputs, so member `k`'s answer is exactly the output prefix
+//!    `[0, gws_k × elems_per_item)` of the batch — demultiplexed back
+//!    bit-identical to a solo run (pinned by `tests/service_props.rs`).
+//! 4. **Artifact + program caching** — the backing runtime is built
+//!    [`Runtime::with_artifact_cache`], so repeat traffic skips eager
+//!    compilation and simulated driver init; the service additionally
+//!    memoizes golden-input programs per kernel so repeat requests skip
+//!    registry regeneration. Both caches export hit/miss counters
+//!    ([`ServiceStats`]).
+//!
+//! Two driving modes share one code path: the deterministic
+//! [`Service::pump_round`] (what the storm harness and the tests call —
+//! ingest order in, response order out, reproducible under a fixed
+//! seed), and the threaded live mode ([`Service::start`] /
+//! [`Service::shutdown`]) where shard drainers and a dispatcher run the
+//! same rounds continuously.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::Duration;
+
+use crate::coordinator::config::Configurator;
+use crate::coordinator::error::EclError;
+use crate::coordinator::lease::LeasePolicy;
+use crate::coordinator::program::Program;
+use crate::coordinator::qos::QosPolicy;
+use crate::coordinator::runtime::{RunSession, Runtime, SessionOutcome};
+use crate::coordinator::scheduler::SchedulerKind;
+use crate::platform::NodeConfig;
+use crate::runtime::ArtifactRegistry;
+
+/// Monotone per-service request identifier (assigned at ingestion).
+pub type RequestId = u64;
+
+/// Memoized golden inputs for one kernel (shared across every request
+/// that coalesces onto it).
+type GoldenInputs = Arc<Vec<Vec<f32>>>;
+
+// ---- requests and responses -------------------------------------------
+
+/// One unit of service traffic: which kernel, how much of it, how, and
+/// for whom. Small by design — the service supplies the program (golden
+/// inputs), the batch, and the runtime plumbing.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub kernel: String,
+    /// Work items wanted; `None` = the kernel's full problem size.
+    pub gws: Option<usize>,
+    pub scheduler: SchedulerKind,
+    /// Soft completion target, forwarded to the runtime's EDF admission
+    /// (a batch inherits the earliest member deadline).
+    pub deadline: Option<Duration>,
+    /// Client label for weighted fair admission.
+    pub tenant: String,
+}
+
+impl Request {
+    pub fn new(kernel: &str) -> Self {
+        Self {
+            kernel: kernel.to_string(),
+            gws: None,
+            scheduler: SchedulerKind::static_default(),
+            deadline: None,
+            tenant: "default".to_string(),
+        }
+    }
+
+    pub fn gws(mut self, gws: usize) -> Self {
+        self.gws = Some(gws);
+        self
+    }
+
+    pub fn scheduler(mut self, kind: SchedulerKind) -> Self {
+        self.scheduler = kind;
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn tenant(mut self, tenant: &str) -> Self {
+        self.tenant = tenant.to_string();
+        self
+    }
+}
+
+/// How a request was served — the per-request slice of its batch.
+#[derive(Debug, Clone)]
+pub struct RequestReport {
+    /// Runtime session id of the batched run that served this request.
+    pub session: u64,
+    /// Label of the batched session (shared by coalesced siblings).
+    pub batch_label: String,
+    /// Requests coalesced into the batch (1 = ran solo).
+    pub batch_size: usize,
+    /// Global work size of the batched session (max member gws).
+    pub batch_gws: usize,
+    /// Wall time of the batched run.
+    pub wall: Duration,
+    /// Artifact-cache hits among the batch's device workers.
+    pub cache_hits: usize,
+    /// Artifact-cache misses (devices that paid the build).
+    pub cache_misses: usize,
+    /// Ingestion shard the request landed on.
+    pub shard: usize,
+    /// Admission round the request entered the tenant queue.
+    pub enqueue_round: u64,
+    /// Admission round the DRR released it for dispatch.
+    pub dispatch_round: u64,
+}
+
+impl RequestReport {
+    /// Rounds spent waiting in the tenant queue — the fairness metric
+    /// (per-tenant p95 wait vs the fleet median).
+    pub fn wait_rounds(&self) -> u64 {
+        self.dispatch_round.saturating_sub(self.enqueue_round)
+    }
+}
+
+/// A successfully served request: per-output result vectors, each
+/// exactly the request's own prefix (`gws × elems_per_item` elements),
+/// plus the batch report slice.
+#[derive(Debug, Clone)]
+pub struct Served {
+    pub outputs: Vec<Vec<f32>>,
+    pub report: RequestReport,
+}
+
+/// Terminal answer for one request.
+#[derive(Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub tenant: String,
+    pub result: Result<Served, EclError>,
+}
+
+/// Client side of an ingested request; resolves exactly once.
+pub struct ResponseHandle {
+    id: RequestId,
+    tenant: String,
+    rx: Receiver<Response>,
+}
+
+impl ResponseHandle {
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Block until the service responds. Never panics: a dropped
+    /// service yields an error response.
+    pub fn wait(self) -> Response {
+        let ResponseHandle { id, tenant, rx } = self;
+        match rx.recv() {
+            Ok(resp) => resp,
+            Err(_) => Response {
+                id,
+                tenant,
+                result: Err(EclError::Runtime(
+                    "service dropped the request without responding".into(),
+                )),
+            },
+        }
+    }
+}
+
+// ---- configuration ----------------------------------------------------
+
+/// Service tuning knobs (all deterministic under a fixed seed).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Ingestion shards (bounded mailboxes + live-mode drain threads).
+    pub shards: usize,
+    /// Capacity of each shard mailbox; a full shard backpressures.
+    pub mailbox_cap: usize,
+    /// Most requests one batched session may serve.
+    pub coalesce_max: usize,
+    /// DRR credit (work-items) each weight-1 tenant earns per round.
+    pub quantum: usize,
+    /// Per-tenant DRR weights; absent tenants weigh 1.
+    pub weights: BTreeMap<String, usize>,
+    /// Runtime concurrency cap (sessions in flight).
+    pub max_in_flight: usize,
+    pub lease: LeasePolicy,
+    pub seed: u64,
+    pub qos: QosPolicy,
+    /// Configurator applied to every batched session.
+    pub session_config: Configurator,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            shards: 4,
+            mailbox_cap: 256,
+            coalesce_max: 8,
+            quantum: 4096,
+            weights: BTreeMap::new(),
+            max_in_flight: 4,
+            lease: LeasePolicy::Rotation,
+            seed: 0,
+            qos: QosPolicy::default(),
+            session_config: Configurator::default(),
+        }
+    }
+}
+
+// ---- ledger -----------------------------------------------------------
+
+/// Exactly-once accounting state of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LedgerState {
+    /// Ingested; waiting in a mailbox or a tenant queue.
+    Queued,
+    /// Released by the DRR into a batch this round.
+    Dispatched,
+    /// Response sent (terminal).
+    Responded,
+}
+
+/// Snapshot of the ledger, by state.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LedgerCounts {
+    pub queued: usize,
+    pub dispatched: usize,
+    pub responded: usize,
+}
+
+// ---- internals --------------------------------------------------------
+
+/// A request in flight through the service.
+struct Pending {
+    id: RequestId,
+    req: Request,
+    /// Resolved work items (DRR cost and demux prefix length).
+    items: usize,
+    shard: usize,
+    enqueue_round: u64,
+    tx: Sender<Response>,
+}
+
+#[derive(Default)]
+struct TenantState {
+    /// Unspent DRR credit, in work-items.
+    deficit: u64,
+    fifo: VecDeque<Pending>,
+}
+
+struct Core {
+    /// Per-tenant admission queues in label order (deterministic DRR
+    /// visit order).
+    tenants: BTreeMap<String, TenantState>,
+    /// Completed admission rounds.
+    round: u64,
+    /// Requests currently sitting in tenant queues.
+    queued: usize,
+    ledger: BTreeMap<RequestId, LedgerState>,
+    /// Transitions that skipped a state (0 unless exactly-once broke).
+    ledger_violations: u64,
+    ingested: u64,
+    responded: u64,
+    batches: u64,
+    /// Requests that shared a batch with at least one sibling.
+    coalesced: u64,
+}
+
+struct Shard {
+    tx: SyncSender<Pending>,
+    /// Present until live mode hands the receiver to a drain thread;
+    /// `pump_round` drains it in place through the mutex.
+    rx: Mutex<Option<Receiver<Pending>>>,
+}
+
+/// Aggregate service counters (all monotone).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    pub ingested: u64,
+    pub responded: u64,
+    /// Batched sessions dispatched.
+    pub batches: u64,
+    /// Requests that shared a batch with at least one sibling.
+    pub coalesced_requests: u64,
+    /// Completed admission rounds.
+    pub rounds: u64,
+    pub program_cache_hits: u64,
+    pub program_cache_misses: u64,
+    pub artifact_cache_hits: u64,
+    pub artifact_cache_misses: u64,
+}
+
+// ---- the service ------------------------------------------------------
+
+/// Traffic front-end over one persistent [`Runtime`] (see module docs).
+pub struct Service {
+    registry: ArtifactRegistry,
+    cfg: ServiceConfig,
+    runtime: Runtime,
+    shards: Vec<Shard>,
+    core: Mutex<Core>,
+    next_id: AtomicU64,
+    batch_seq: AtomicU64,
+    /// Golden-input memo per kernel: repeat requests skip registry
+    /// regeneration.
+    golden: Mutex<BTreeMap<String, GoldenInputs>>,
+    program_hits: AtomicU64,
+    program_misses: AtomicU64,
+    stop: AtomicBool,
+    threads: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl Service {
+    pub fn new(registry: ArtifactRegistry, node: NodeConfig, cfg: ServiceConfig) -> Self {
+        let runtime = Runtime::qos_configured(
+            registry.clone(),
+            node,
+            cfg.lease,
+            cfg.max_in_flight,
+            cfg.seed,
+            cfg.qos,
+        )
+        .with_artifact_cache();
+        let shards = (0..cfg.shards.max(1))
+            .map(|_| {
+                let (tx, rx) = sync_channel(cfg.mailbox_cap.max(1));
+                Shard { tx, rx: Mutex::new(Some(rx)) }
+            })
+            .collect();
+        Self {
+            registry,
+            cfg,
+            runtime,
+            shards,
+            core: Mutex::new(Core {
+                tenants: BTreeMap::new(),
+                round: 0,
+                queued: 0,
+                ledger: BTreeMap::new(),
+                ledger_violations: 0,
+                ingested: 0,
+                responded: 0,
+                batches: 0,
+                coalesced: 0,
+            }),
+            next_id: AtomicU64::new(0),
+            batch_seq: AtomicU64::new(0),
+            golden: Mutex::new(BTreeMap::new()),
+            program_hits: AtomicU64::new(0),
+            program_misses: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            threads: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The backing runtime (perf model, artifact cache, QoS journal).
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    fn lock_core(&self) -> MutexGuard<'_, Core> {
+        self.core.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Seeded FNV-1a over (tenant, id): which mailbox a request lands
+    /// on. Deterministic per seed; spreads tenants across shards.
+    fn shard_for(&self, tenant: &str, id: RequestId) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ self.cfg.seed;
+        for b in tenant.as_bytes().iter().copied().chain(id.to_le_bytes()) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+
+    /// Validate and enqueue one request. Returns the response handle,
+    /// or an immediate error: malformed requests are rejected here so
+    /// they can never poison a coalesced batch, and a full shard
+    /// mailbox surfaces as [`EclError::MailboxFull`] (backpressure —
+    /// retry after a dispatch round).
+    pub fn ingest(&self, req: Request) -> Result<ResponseHandle, EclError> {
+        let (n, granule) = match self.registry.bench(&req.kernel) {
+            Ok(b) => (b.n, b.granule),
+            Err(_) => return Err(EclError::UnknownKernel(req.kernel.clone())),
+        };
+        let items = req.gws.unwrap_or(n);
+        if items == 0 || items > n {
+            return Err(EclError::WorkSizeTooLarge { gws: items, n });
+        }
+        if granule == 0 || items % granule != 0 {
+            return Err(EclError::MisalignedWorkSize { gws: items, granule });
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let shard = self.shard_for(&req.tenant, id);
+        let (tx, rx) = channel();
+        let handle = ResponseHandle { id, tenant: req.tenant.clone(), rx };
+        let pending = Pending { id, req, items, shard, enqueue_round: 0, tx };
+        // Ledger first: in live mode a shard thread may absorb and the
+        // dispatcher release the request the instant it lands, and the
+        // Queued -> Dispatched transition must find Queued in place.
+        {
+            let mut core = self.lock_core();
+            core.ledger.insert(id, LedgerState::Queued);
+            core.ingested += 1;
+        }
+        match self.shards[shard].tx.try_send(pending) {
+            Ok(()) => Ok(handle),
+            Err(e) => {
+                let mut core = self.lock_core();
+                core.ledger.remove(&id);
+                core.ingested -= 1;
+                drop(core);
+                match e {
+                    TrySendError::Full(_) => {
+                        Err(EclError::MailboxFull { shard, cap: self.cfg.mailbox_cap })
+                    }
+                    TrySendError::Disconnected(_) => {
+                        Err(EclError::Runtime("service is shut down".into()))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Move a drained request into its tenant queue (live-mode shard
+    /// threads call this; `pump_round` inlines the same step).
+    fn absorb(&self, mut p: Pending) {
+        let mut core = self.lock_core();
+        p.enqueue_round = core.round;
+        core.queued += 1;
+        core.tenants.entry(p.req.tenant.clone()).or_default().fifo.push_back(p);
+    }
+
+    /// Drain every shard mailbox into the tenant queues (shard order,
+    /// FIFO within a shard — deterministic in pump mode).
+    fn drain_mailboxes(&self, core: &mut Core) {
+        for shard in &self.shards {
+            let guard = shard.rx.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(rx) = guard.as_ref() {
+                while let Ok(mut p) = rx.try_recv() {
+                    p.enqueue_round = core.round;
+                    core.queued += 1;
+                    core.tenants.entry(p.req.tenant.clone()).or_default().fifo.push_back(p);
+                }
+            }
+        }
+    }
+
+    /// One deficit-round-robin pass: every backlogged tenant earns
+    /// `quantum × weight` items of credit and releases FIFO-head
+    /// requests while the credit covers their cost (their work items).
+    fn drr_select(&self, core: &mut Core) -> Vec<Pending> {
+        let mut released = Vec::new();
+        for (tenant, state) in core.tenants.iter_mut() {
+            if state.fifo.is_empty() {
+                // An idle tenant banks nothing — credit hoarding would
+                // let it burst past the weights later.
+                state.deficit = 0;
+                continue;
+            }
+            let weight = *self.cfg.weights.get(tenant).unwrap_or(&1);
+            state.deficit += (self.cfg.quantum as u64) * (weight.max(1) as u64);
+            while let Some(front) = state.fifo.front() {
+                let cost = front.items as u64;
+                if state.deficit < cost {
+                    break;
+                }
+                state.deficit -= cost;
+                released.push(state.fifo.pop_front().expect("front exists"));
+            }
+            if state.fifo.is_empty() {
+                state.deficit = 0;
+            }
+        }
+        core.queued -= released.len();
+        released
+    }
+
+    /// Pack released requests into batches: same (kernel, scheduler)
+    /// groups of at most `coalesce_max`, first-seen order preserved.
+    fn coalesce(&self, released: Vec<Pending>) -> Vec<Vec<Pending>> {
+        let cap = self.cfg.coalesce_max.max(1);
+        let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
+        for p in released {
+            let key = format!("{}|{:?}", p.req.kernel, p.req.scheduler);
+            match groups.iter_mut().find(|(k, g)| *k == key && g.len() < cap) {
+                Some((_, g)) => g.push(p),
+                None => groups.push((key, vec![p])),
+            }
+        }
+        groups.into_iter().map(|(_, g)| g).collect()
+    }
+
+    /// Golden inputs for `kernel`, memoized (the service's program
+    /// cache — repeat traffic skips registry regeneration).
+    fn golden_for(&self, kernel: &str) -> Result<GoldenInputs, EclError> {
+        {
+            let cache = self.golden.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(v) = cache.get(kernel) {
+                self.program_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(v));
+            }
+        }
+        let manifest = self
+            .registry
+            .bench(kernel)
+            .map_err(|_| EclError::UnknownKernel(kernel.to_string()))?
+            .clone();
+        let bufs = self
+            .registry
+            .golden_inputs(&manifest)
+            .map_err(|e| EclError::Runtime(format!("{e:#}")))?;
+        let mut vecs = Vec::with_capacity(bufs.len());
+        for b in &bufs {
+            match b.as_f32() {
+                Some(s) => vecs.push(s.to_vec()),
+                None => {
+                    return Err(EclError::Runtime(format!(
+                        "golden input for '{kernel}' is not f32"
+                    )))
+                }
+            }
+        }
+        let arc = Arc::new(vecs);
+        let mut cache = self.golden.lock().unwrap_or_else(|e| e.into_inner());
+        // A racing builder may have inserted meanwhile; keep the first
+        // so every later request shares one allocation.
+        let entry = cache.entry(kernel.to_string()).or_insert_with(|| {
+            self.program_misses.fetch_add(1, Ordering::Relaxed);
+            Arc::clone(&arc)
+        });
+        Ok(Arc::clone(entry))
+    }
+
+    /// A golden-input program for `kernel` (same wiring as the harness
+    /// `build_program`, fed from the memo).
+    fn program_for(&self, kernel: &str) -> Result<Program, EclError> {
+        let manifest = self
+            .registry
+            .bench(kernel)
+            .map_err(|_| EclError::UnknownKernel(kernel.to_string()))?
+            .clone();
+        let inputs = self.golden_for(kernel)?;
+        let mut program = Program::new();
+        program.kernel(kernel, &manifest.kernel);
+        for buf in inputs.iter() {
+            program.input(buf.clone());
+        }
+        for out in &manifest.outputs {
+            program.output(out.elems);
+        }
+        let (num, den) = manifest.out_pattern;
+        program.out_pattern(num, den);
+        Ok(program)
+    }
+
+    /// Build the batched session for one coalesced group.
+    fn batch_session(&self, members: &[Pending]) -> Result<RunSession, EclError> {
+        let first = &members[0].req;
+        let program = self.program_for(&first.kernel)?;
+        let gws = members.iter().map(|p| p.items).max().expect("non-empty group");
+        let seq = self.batch_seq.fetch_add(1, Ordering::Relaxed);
+        let mut session = RunSession::new(program)
+            .scheduler(first.scheduler.clone())
+            .gws(gws)
+            .label(&format!("svc-{seq}-{}x{}", first.kernel, members.len()))
+            .config(self.cfg.session_config.clone());
+        if let Some(d) = members.iter().filter_map(|p| p.req.deadline).min() {
+            session = session.deadline(d);
+        }
+        Ok(session)
+    }
+
+    /// Send the terminal response for one request, exactly once (the
+    /// ledger pins Queued → Dispatched → Responded; a skipped state
+    /// counts as a violation).
+    fn respond(&self, p: Pending, result: Result<Served, EclError>) {
+        {
+            let mut core = self.lock_core();
+            let prev = core.ledger.insert(p.id, LedgerState::Responded);
+            if prev != Some(LedgerState::Dispatched) {
+                core.ledger_violations += 1;
+            }
+            core.responded += 1;
+        }
+        // A client that dropped its handle is not an error.
+        p.tx.send(Response { id: p.id, tenant: p.req.tenant.clone(), result }).ok();
+    }
+
+    /// Fail every member of a group with the same stringified error
+    /// (`EclError` is not `Clone`).
+    fn fail_group(&self, members: Vec<Pending>, err: &EclError, what: &str) {
+        let msg = format!("{err}");
+        for p in members {
+            self.respond(p, Err(EclError::Runtime(format!("{what}: {msg}"))));
+        }
+    }
+
+    /// Demultiplex one finished batch back into per-request responses:
+    /// member `k` gets, for each output, the prefix
+    /// `[0, items_k × elems_per_item)` of the batch output — which per-
+    /// item kernels over shared golden inputs make bit-identical to
+    /// member `k`'s solo run.
+    fn demux(&self, outcome: SessionOutcome, members: Vec<Pending>, dispatch_round: u64) {
+        let SessionOutcome { session, label, program, result, .. } = outcome;
+        let batch_size = members.len();
+        match result {
+            Ok(report) => {
+                let epi: Vec<usize> = match self.registry.bench(&members[0].req.kernel) {
+                    Ok(m) => m.outputs.iter().map(|o| o.elems_per_item).collect(),
+                    Err(_) => Vec::new(),
+                };
+                let cache_hits = report.artifact_cache_hits();
+                let cache_misses = report.artifact_cache_misses();
+                for p in members {
+                    let outputs: Vec<Vec<f32>> = program
+                        .outputs()
+                        .iter()
+                        .zip(epi.iter())
+                        .map(|(buf, &e)| {
+                            let data = buf.as_f32();
+                            let want = (p.items * e).min(data.len());
+                            data[..want].to_vec()
+                        })
+                        .collect();
+                    let rep = RequestReport {
+                        session,
+                        batch_label: label.clone(),
+                        batch_size,
+                        batch_gws: report.gws,
+                        wall: report.wall,
+                        cache_hits,
+                        cache_misses,
+                        shard: p.shard,
+                        enqueue_round: p.enqueue_round,
+                        dispatch_round,
+                    };
+                    self.respond(p, Ok(Served { outputs, report: rep }));
+                }
+            }
+            Err(e) => self.fail_group(members, &e, "batched session failed"),
+        }
+    }
+
+    /// One full admission round: drain mailboxes, DRR-release, coalesce,
+    /// dispatch the batches through the runtime, demux the outcomes.
+    /// Returns how many requests were served this round. Deterministic
+    /// under a fixed seed when driven single-threaded (pump mode).
+    pub fn pump_round(&self) -> usize {
+        let (groups, dispatch_round) = {
+            let mut core = self.lock_core();
+            self.drain_mailboxes(&mut core);
+            let released = self.drr_select(&mut core);
+            core.round += 1;
+            let round = core.round;
+            for p in &released {
+                let prev = core.ledger.insert(p.id, LedgerState::Dispatched);
+                if prev != Some(LedgerState::Queued) {
+                    core.ledger_violations += 1;
+                }
+            }
+            let groups = self.coalesce(released);
+            core.batches += groups.len() as u64;
+            core.coalesced +=
+                groups.iter().filter(|g| g.len() > 1).map(|g| g.len() as u64).sum::<u64>();
+            (groups, round)
+        };
+        if groups.is_empty() {
+            return 0;
+        }
+        let served: usize = groups.iter().map(|g| g.len()).sum();
+        // Build outside the core lock; a build failure fails only its
+        // own group.
+        let mut sessions = Vec::new();
+        let mut live = Vec::new();
+        for g in groups {
+            match self.batch_session(&g) {
+                Ok(s) => {
+                    sessions.push(s);
+                    live.push(g);
+                }
+                Err(e) => self.fail_group(g, &e, "batch build failed"),
+            }
+        }
+        // One atomic runtime submission per round: EDF + lease rotation
+        // see the whole round's batches at once.
+        let handles = self.runtime.submit_all(sessions);
+        for (handle, members) in handles.into_iter().zip(live) {
+            let outcome = handle.wait();
+            self.demux(outcome, members, dispatch_round);
+        }
+        served
+    }
+
+    /// Requests ingested but not yet responded to.
+    pub fn pending(&self) -> usize {
+        let core = self.lock_core();
+        (core.ingested - core.responded) as usize
+    }
+
+    /// Pump rounds until every ingested request has been answered
+    /// (pump-mode helper; live mode drains via its dispatcher).
+    pub fn drain(&self) {
+        while self.pending() > 0 {
+            self.pump_round();
+        }
+    }
+
+    /// Ledger totals by state (the exactly-once observable).
+    pub fn ledger_counts(&self) -> LedgerCounts {
+        let core = self.lock_core();
+        let mut out = LedgerCounts::default();
+        for state in core.ledger.values() {
+            match state {
+                LedgerState::Queued => out.queued += 1,
+                LedgerState::Dispatched => out.dispatched += 1,
+                LedgerState::Responded => out.responded += 1,
+            }
+        }
+        out
+    }
+
+    /// Transitions that skipped a ledger state; 0 unless exactly-once
+    /// delivery broke.
+    pub fn ledger_violations(&self) -> u64 {
+        self.lock_core().ledger_violations
+    }
+
+    /// Aggregate counters (see [`ServiceStats`]).
+    pub fn stats(&self) -> ServiceStats {
+        let (ingested, responded, batches, coalesced, rounds) = {
+            let core = self.lock_core();
+            (core.ingested, core.responded, core.batches, core.coalesced, core.round)
+        };
+        let (ahits, amisses) = self
+            .runtime
+            .artifact_cache()
+            .map(|c| c.counters())
+            .unwrap_or((0, 0));
+        ServiceStats {
+            ingested,
+            responded,
+            batches,
+            coalesced_requests: coalesced,
+            rounds,
+            program_cache_hits: self.program_hits.load(Ordering::Relaxed),
+            program_cache_misses: self.program_misses.load(Ordering::Relaxed),
+            artifact_cache_hits: ahits,
+            artifact_cache_misses: amisses,
+        }
+    }
+
+    // ---- live mode ----------------------------------------------------
+
+    /// Start live mode: one drain thread per shard plus a dispatcher
+    /// thread running `pump_round` continuously. Requests ingested
+    /// after this resolve without any pumping by the caller. Stop with
+    /// [`Service::shutdown`].
+    pub fn start(self: &Arc<Self>) {
+        let mut threads = self.threads.lock().unwrap_or_else(|e| e.into_inner());
+        if !threads.is_empty() {
+            return; // already live
+        }
+        self.stop.store(false, Ordering::SeqCst);
+        for shard in &self.shards {
+            let rx = shard.rx.lock().unwrap_or_else(|e| e.into_inner()).take();
+            let Some(rx) = rx else { continue };
+            let svc = Arc::clone(self);
+            threads.push(thread::spawn(move || loop {
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(p) => svc.absorb(p),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        if svc.stop.load(Ordering::SeqCst) {
+                            // Drain stragglers, then exit.
+                            while let Ok(p) = rx.try_recv() {
+                                svc.absorb(p);
+                            }
+                            break;
+                        }
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }));
+        }
+        let svc = Arc::clone(self);
+        threads.push(thread::spawn(move || {
+            loop {
+                let served = svc.pump_round();
+                if svc.stop.load(Ordering::SeqCst)
+                    && served == 0
+                    && svc.lock_core().queued == 0
+                {
+                    break;
+                }
+                if served == 0 {
+                    thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }));
+    }
+
+    /// Stop live mode: joins the service threads, then serves whatever
+    /// the shard drainers absorbed on their way out. Call after clients
+    /// stop ingesting. Idempotent; a no-op if `start` was never called.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let threads: Vec<_> =
+            self.threads.lock().unwrap_or_else(|e| e.into_inner()).drain(..).collect();
+        for t in threads {
+            t.join().ok();
+        }
+        // Stragglers a shard drained after the dispatcher exited.
+        while self.pump_round() > 0 {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service(cfg: ServiceConfig) -> Service {
+        let reg = ArtifactRegistry::synthetic();
+        Service::new(reg, NodeConfig::batel(), cfg)
+    }
+
+    fn quick_cfg() -> ServiceConfig {
+        ServiceConfig {
+            session_config: Configurator {
+                simulate_init: false,
+                simulate_speed: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_requests_at_ingestion() {
+        let svc = service(quick_cfg());
+        assert!(matches!(
+            svc.ingest(Request::new("no-such-kernel")),
+            Err(EclError::UnknownKernel(_))
+        ));
+        let n = svc.runtime().registry().bench("binomial").unwrap().n;
+        assert!(matches!(
+            svc.ingest(Request::new("binomial").gws(n + 1)),
+            Err(EclError::WorkSizeTooLarge { .. })
+        ));
+        assert!(matches!(
+            svc.ingest(Request::new("binomial").gws(0)),
+            Err(EclError::WorkSizeTooLarge { .. })
+        ));
+        // Nothing reached the queues.
+        assert_eq!(svc.stats().ingested, 0);
+        assert_eq!(svc.pending(), 0);
+    }
+
+    #[test]
+    fn full_mailbox_is_backpressure_not_loss() {
+        let cfg = ServiceConfig { shards: 1, mailbox_cap: 2, ..quick_cfg() };
+        let svc = service(cfg);
+        let mut handles = Vec::new();
+        let mut rejected = 0;
+        for _ in 0..4 {
+            match svc.ingest(Request::new("binomial")) {
+                Ok(h) => handles.push(h),
+                Err(EclError::MailboxFull { shard, cap }) => {
+                    assert_eq!((shard, cap), (0, 2));
+                    rejected += 1;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(rejected, 2, "two of four bounce off a cap-2 mailbox");
+        svc.drain();
+        for h in handles {
+            assert!(h.wait().result.is_ok());
+        }
+    }
+
+    #[test]
+    fn coalesced_batch_serves_every_member() {
+        let cfg = ServiceConfig { coalesce_max: 4, ..quick_cfg() };
+        let svc = service(cfg);
+        let granule = svc.runtime().registry().bench("binomial").unwrap().granule;
+        let handles: Vec<_> = (1..=3)
+            .map(|k| svc.ingest(Request::new("binomial").gws(granule * k)).expect("ingest"))
+            .collect();
+        svc.drain();
+        let mut batch_labels = Vec::new();
+        for (k, h) in handles.into_iter().enumerate() {
+            let resp = h.wait();
+            let served = resp.result.expect("served");
+            assert_eq!(served.report.batch_size, 3, "all three share one batch");
+            assert_eq!(served.report.batch_gws, granule * 3, "batch runs the max gws");
+            batch_labels.push(served.report.batch_label.clone());
+            // Each member got exactly its own prefix.
+            let epi: Vec<usize> = svc
+                .runtime()
+                .registry()
+                .bench("binomial")
+                .unwrap()
+                .outputs
+                .iter()
+                .map(|o| o.elems_per_item)
+                .collect();
+            for (out, &e) in served.outputs.iter().zip(epi.iter()) {
+                assert_eq!(out.len(), granule * (k + 1) * e);
+            }
+        }
+        batch_labels.dedup();
+        assert_eq!(batch_labels.len(), 1, "one session served all members");
+        let stats = svc.stats();
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.coalesced_requests, 3);
+    }
+
+    #[test]
+    fn different_kernels_do_not_coalesce() {
+        let svc = service(quick_cfg());
+        let a = svc.ingest(Request::new("binomial")).expect("ingest");
+        let b = svc.ingest(Request::new("gaussian")).expect("ingest");
+        svc.drain();
+        let ra = a.wait().result.expect("served");
+        let rb = b.wait().result.expect("served");
+        assert_eq!(ra.report.batch_size, 1);
+        assert_eq!(rb.report.batch_size, 1);
+        assert_ne!(ra.report.batch_label, rb.report.batch_label);
+        assert_eq!(svc.stats().batches, 2);
+    }
+
+    #[test]
+    fn drr_favors_weighted_tenant_under_contention() {
+        // Tiny quantum so one round releases only part of the backlog;
+        // the weight-3 tenant must clear its queue strictly sooner.
+        let granule;
+        let cfg = {
+            let reg = ArtifactRegistry::synthetic();
+            granule = reg.bench("binomial").unwrap().granule;
+            let mut weights = BTreeMap::new();
+            weights.insert("gold".to_string(), 3);
+            ServiceConfig { quantum: granule, weights, shards: 1, ..quick_cfg() }
+        };
+        let svc = service(cfg);
+        let mut gold = Vec::new();
+        let mut bronze = Vec::new();
+        for _ in 0..6 {
+            gold.push(
+                svc.ingest(Request::new("binomial").gws(granule).tenant("gold")).expect("ingest"),
+            );
+            bronze.push(
+                svc.ingest(Request::new("binomial").gws(granule).tenant("bronze")).expect("ingest"),
+            );
+        }
+        svc.drain();
+        let max_wait = |hs: Vec<ResponseHandle>| {
+            hs.into_iter()
+                .map(|h| h.wait().result.expect("served").report.wait_rounds())
+                .max()
+                .unwrap()
+        };
+        let gold_max = max_wait(gold);
+        let bronze_max = max_wait(bronze);
+        assert!(
+            gold_max < bronze_max,
+            "weight-3 tenant drains sooner (gold {gold_max} vs bronze {bronze_max} rounds)"
+        );
+    }
+
+    #[test]
+    fn ledger_is_exactly_once() {
+        let svc = service(quick_cfg());
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                svc.ingest(Request::new("binomial").tenant(if i % 2 == 0 { "a" } else { "b" }))
+                    .expect("ingest")
+            })
+            .collect();
+        svc.drain();
+        let counts = svc.ledger_counts();
+        assert_eq!(counts, LedgerCounts { queued: 0, dispatched: 0, responded: 8 });
+        assert_eq!(svc.ledger_violations(), 0);
+        for h in handles {
+            assert!(h.wait().result.is_ok());
+        }
+    }
+
+    #[test]
+    fn repeat_traffic_hits_both_caches() {
+        let cfg = ServiceConfig { coalesce_max: 1, ..quick_cfg() };
+        let svc = service(cfg);
+        for _ in 0..3 {
+            let h = svc.ingest(Request::new("binomial")).expect("ingest");
+            svc.drain();
+            assert!(h.wait().result.is_ok());
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.program_cache_misses, 1, "golden inputs built once");
+        assert_eq!(stats.program_cache_hits, 2);
+        assert!(stats.artifact_cache_hits > 0, "later sessions reuse artifacts");
+        // Misses = distinct (kernel-key, device) pairs: one kernel over
+        // the whole node.
+        assert_eq!(stats.artifact_cache_misses as usize, svc.runtime().node().devices.len());
+    }
+
+    #[test]
+    fn live_mode_serves_without_pumping() {
+        let svc = Arc::new(service(quick_cfg()));
+        svc.start();
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                svc.ingest(Request::new(if i % 2 == 0 { "binomial" } else { "gaussian" }))
+                    .expect("ingest")
+            })
+            .collect();
+        for h in handles {
+            assert!(h.wait().result.is_ok(), "live dispatcher resolves without pump_round");
+        }
+        svc.shutdown();
+        assert_eq!(svc.pending(), 0);
+        assert_eq!(svc.ledger_violations(), 0);
+    }
+}

@@ -7,4 +7,5 @@ pub mod overhead;
 pub mod perf;
 pub mod qos;
 pub mod runs;
+pub mod service;
 pub mod traces;

@@ -198,6 +198,7 @@ mod tests {
                     }],
                     xfer: Default::default(),
                     lease_wait: Default::default(),
+                    cache_hit: None,
                 })
                 .collect(),
             faults: Vec::new(),

@@ -1,0 +1,434 @@
+//! `run --service` — the ingest-storm soak (PR-8 acceptance bench).
+//!
+//! Drives a seeded storm of small mixed-tenant requests through the
+//! real [`Service`] front-end in deterministic pump mode: bursts of
+//! requests land in the sharded mailboxes, each burst boundary runs one
+//! admission round (drain → DRR → coalesce → dispatch → demux), and
+//! backpressure ([`EclError::MailboxFull`]) is handled the way a real
+//! client would — pump a round, retry. The result is
+//! `BENCH_service.json`.
+//!
+//! Every JSON field is a pure function of the seed: request draws come
+//! from one fixed-order [`XorShift`] stream, the pump loop is
+//! single-threaded, and the cache counters it reports are aggregate
+//! totals (artifact-cache *misses* are the number of distinct
+//! (kernel-key, device) pairs — a set, not a race). Wall-clock never
+//! enters the artifact; setup cost is *modeled* from the per-device
+//! hit/miss counters times the device's profiled init latency, which is
+//! exactly the work a cache hit skips. The CI service-suite runs the
+//! storm twice under one seed and diffs the bytes.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    Configurator, EclError, Request, SchedulerKind, Service, ServiceConfig, ServiceStats,
+};
+use crate::platform::NodeConfig;
+use crate::runtime::ArtifactRegistry;
+use crate::util::rng::XorShift;
+use crate::util::stats;
+
+/// Kernels the storm mixes (all four families present in every
+/// registry, synthetic or AOT).
+pub fn storm_kernels() -> Vec<&'static str> {
+    vec!["binomial", "gaussian", "mandelbrot", "nbody"]
+}
+
+/// Knobs of the storm (CLI: `run --service [--requests N] [--seed S]
+/// [--quick]`).
+#[derive(Debug, Clone)]
+pub struct ServiceBenchConfig {
+    pub requests: usize,
+    /// Distinct tenant labels; tenant `t0` draws double traffic (the
+    /// skew the fairness metric is judged under).
+    pub tenants: usize,
+    pub seed: u64,
+    pub quick: bool,
+    pub shards: usize,
+    pub coalesce_max: usize,
+    /// DRR quantum (work-items per tenant per round).
+    pub quantum: usize,
+    /// Requests ingested between admission rounds.
+    pub burst: usize,
+}
+
+impl Default for ServiceBenchConfig {
+    fn default() -> Self {
+        Self {
+            requests: 1000,
+            tenants: 5,
+            seed: 7,
+            quick: false,
+            shards: 4,
+            coalesce_max: 8,
+            quantum: 4096,
+            burst: 64,
+        }
+    }
+}
+
+/// One served request's ledger row.
+#[derive(Debug, Clone)]
+pub struct RequestRow {
+    pub tenant: String,
+    pub kernel: String,
+    pub items: usize,
+    /// Admission rounds spent queued (the fairness observable).
+    pub wait_rounds: u64,
+    /// Siblings in the batch that served it (1 = ran solo).
+    pub batch_size: usize,
+}
+
+/// The full `run --service` result.
+#[derive(Debug)]
+pub struct ServiceBench {
+    pub node: String,
+    pub seed: u64,
+    pub quick: bool,
+    pub shards: usize,
+    pub coalesce_max: usize,
+    pub tenants: usize,
+    pub rows: Vec<RequestRow>,
+    pub failed: usize,
+    pub stats: ServiceStats,
+    /// Per-device (name, artifact hits, artifact misses, init ms).
+    pub setup: Vec<(String, u64, u64, f64)>,
+}
+
+impl ServiceBench {
+    pub fn served(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Mean requests per batched session (1.0 = no coalescing at all).
+    pub fn coalesce_ratio(&self) -> f64 {
+        self.served() as f64 / (self.stats.batches.max(1)) as f64
+    }
+
+    fn wait_rounds(&self) -> Vec<f64> {
+        self.rows.iter().map(|r| r.wait_rounds as f64).collect()
+    }
+
+    fn per_tenant_waits(&self) -> BTreeMap<String, Vec<f64>> {
+        let mut out: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        for r in &self.rows {
+            out.entry(r.tenant.clone()).or_default().push(r.wait_rounds as f64);
+        }
+        out
+    }
+
+    /// Worst per-tenant p95 admission wait over the fleet-wide median —
+    /// the weighted-fairness observable (1.0 = perfectly even).
+    pub fn fairness_ratio(&self) -> f64 {
+        let fleet = self.wait_rounds();
+        let median = stats::median(&fleet).max(1.0);
+        self.per_tenant_waits()
+            .values()
+            .map(|w| stats::percentile(w, 95.0) / median)
+            .fold(0.0, f64::max)
+    }
+
+    /// Modeled setup milliseconds (paid, saved): each artifact-cache
+    /// miss charges its device's profiled init latency, each hit saves
+    /// it.
+    pub fn modeled_setup_ms(&self) -> (f64, f64) {
+        let mut paid = 0.0;
+        let mut saved = 0.0;
+        for (_, hits, misses, init_ms) in &self.setup {
+            paid += *misses as f64 * init_ms;
+            saved += *hits as f64 * init_ms;
+        }
+        (paid, saved)
+    }
+
+    /// The `BENCH_service.json` artifact — hand-rolled like the other
+    /// bench emitters. Deterministic quantities only (see module docs).
+    pub fn json(&self) -> String {
+        let waits = self.wait_rounds();
+        let (paid_ms, saved_ms) = self.modeled_setup_ms();
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"node\": \"{}\",\n", self.node));
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"shards\": {},\n", self.shards));
+        s.push_str(&format!("  \"coalesce_max\": {},\n", self.coalesce_max));
+        s.push_str(&format!("  \"requests\": {},\n", self.served() + self.failed));
+        s.push_str(&format!("  \"served\": {},\n", self.served()));
+        s.push_str(&format!("  \"failed\": {},\n", self.failed));
+        s.push_str(&format!("  \"rounds\": {},\n", self.stats.rounds));
+        s.push_str(&format!("  \"batches\": {},\n", self.stats.batches));
+        s.push_str(&format!("  \"coalesced_requests\": {},\n", self.stats.coalesced_requests));
+        s.push_str(&format!("  \"coalesce_ratio\": {:.4},\n", self.coalesce_ratio()));
+        s.push_str(&format!(
+            "  \"program_cache\": {{\"hits\": {}, \"misses\": {}}},\n",
+            self.stats.program_cache_hits, self.stats.program_cache_misses
+        ));
+        s.push_str(&format!(
+            "  \"artifact_cache\": {{\"hits\": {}, \"misses\": {}}},\n",
+            self.stats.artifact_cache_hits, self.stats.artifact_cache_misses
+        ));
+        s.push_str(&format!(
+            "  \"modeled_setup_ms\": {{\"paid\": {:.3}, \"saved\": {:.3}}},\n",
+            paid_ms, saved_ms
+        ));
+        s.push_str("  \"per_device_setup\": {\n");
+        for (i, (name, hits, misses, init_ms)) in self.setup.iter().enumerate() {
+            let comma = if i + 1 == self.setup.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    \"{name}\": {{\"hits\": {hits}, \"misses\": {misses}, \
+                 \"init_ms\": {init_ms:.3}}}{comma}\n"
+            ));
+        }
+        s.push_str("  },\n");
+        s.push_str(&format!(
+            "  \"wait_rounds\": {{\"p50\": {:.2}, \"p95\": {:.2}, \"max\": {}}},\n",
+            stats::percentile(&waits, 50.0),
+            stats::percentile(&waits, 95.0),
+            self.rows.iter().map(|r| r.wait_rounds).max().unwrap_or(0)
+        ));
+        s.push_str("  \"per_tenant\": {\n");
+        let per = self.per_tenant_waits();
+        for (i, (tenant, w)) in per.iter().enumerate() {
+            let comma = if i + 1 == per.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    \"{tenant}\": {{\"requests\": {}, \"p50_wait\": {:.2}, \
+                 \"p95_wait\": {:.2}}}{comma}\n",
+                w.len(),
+                stats::percentile(w, 50.0),
+                stats::percentile(w, 95.0)
+            ));
+        }
+        s.push_str("  },\n");
+        s.push_str(&format!("  \"fairness_p95_over_median\": {:.4}\n", self.fairness_ratio()));
+        s.push_str("}\n");
+        s
+    }
+
+    /// The CI guard (`ECL_BENCH_GUARD=1`): every request served,
+    /// coalescing actually happening, repeat traffic actually hitting
+    /// the artifact cache, and no tenant starved past the fairness bar.
+    pub fn guard(&self) -> Result<()> {
+        anyhow::ensure!(self.failed == 0, "service storm dropped {} requests", self.failed);
+        let ratio = self.coalesce_ratio();
+        anyhow::ensure!(
+            ratio >= 1.2,
+            "coalescing regression: {:.2} requests/batch ({} served over {} batches)",
+            ratio,
+            self.served(),
+            self.stats.batches
+        );
+        anyhow::ensure!(
+            self.stats.artifact_cache_hits > 0,
+            "artifact cache never hit across {} batches",
+            self.stats.batches
+        );
+        let (paid, saved) = self.modeled_setup_ms();
+        anyhow::ensure!(
+            saved > paid,
+            "repeat traffic should save more modeled setup than it pays \
+             (paid {paid:.1}ms, saved {saved:.1}ms)"
+        );
+        let fair = self.fairness_ratio();
+        anyhow::ensure!(
+            fair <= 6.0,
+            "fairness regression: worst tenant p95 wait is {fair:.2}x the fleet median"
+        );
+        Ok(())
+    }
+}
+
+/// One pre-drawn storm request (the draw order is fixed so the RNG
+/// stream is identical regardless of service behavior).
+fn generate(
+    reg: &ArtifactRegistry,
+    cfg: &ServiceBenchConfig,
+) -> Result<Vec<(Request, String, usize)>> {
+    let kernels = storm_kernels();
+    let mut rng = XorShift::new(cfg.seed ^ 0x51CE_F00D);
+    let mut out = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        // Fixed draw order: kernel, size, tenant, scheduler, deadline.
+        let kernel = kernels[rng.below(kernels.len())];
+        let mult = 1 + rng.below(4);
+        let t = rng.below(cfg.tenants + 1);
+        let tenant = format!("t{}", if t >= cfg.tenants { 0 } else { t });
+        let sched = if rng.below(2) == 0 {
+            SchedulerKind::static_default()
+        } else {
+            SchedulerKind::dynamic(50)
+        };
+        let deadlined = rng.next_f64() < 0.25;
+        let dl_ms = 50 + rng.below(200) as u64;
+        let granule = reg.bench(kernel)?.granule;
+        let items = granule * mult;
+        let mut req = Request::new(kernel).gws(items).tenant(&tenant).scheduler(sched);
+        if deadlined {
+            req = req.deadline(Duration::from_millis(dl_ms));
+        }
+        out.push((req, kernel.to_string(), items));
+    }
+    Ok(out)
+}
+
+/// Run the storm: ingest in bursts, pump a round per burst (and per
+/// backpressure bounce), drain, collect.
+pub fn run_service(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    cfg: &ServiceBenchConfig,
+) -> Result<ServiceBench> {
+    let mut cfg = cfg.clone();
+    if cfg.quick {
+        cfg.requests = (cfg.requests / 5).max(50);
+    }
+    anyhow::ensure!(cfg.tenants > 0, "storm needs at least one tenant");
+    anyhow::ensure!(cfg.burst > 0, "burst must be positive");
+    // t0 draws double traffic and pays for it with a double DRR weight —
+    // weighted fairness means waits even out despite the skew.
+    let mut weights = BTreeMap::new();
+    weights.insert("t0".to_string(), 2);
+    let svc_cfg = ServiceConfig {
+        shards: cfg.shards,
+        coalesce_max: cfg.coalesce_max,
+        quantum: cfg.quantum,
+        seed: cfg.seed,
+        weights,
+        session_config: Configurator {
+            simulate_init: false,
+            simulate_speed: false,
+            ..Default::default()
+        },
+        ..ServiceConfig::default()
+    };
+    let svc = Service::new(reg.clone(), node.clone(), svc_cfg);
+    let drawn = generate(reg, &cfg)?;
+    let mut handles = Vec::with_capacity(drawn.len());
+    let mut meta = Vec::with_capacity(drawn.len());
+    for (i, (req, kernel, items)) in drawn.into_iter().enumerate() {
+        loop {
+            match svc.ingest(req.clone()) {
+                Ok(h) => {
+                    handles.push(h);
+                    meta.push((kernel.clone(), items));
+                    break;
+                }
+                Err(EclError::MailboxFull { .. }) => {
+                    // Backpressure: serve a round, then retry.
+                    svc.pump_round();
+                }
+                Err(e) => anyhow::bail!("storm request {i} rejected at ingestion: {e}"),
+            }
+        }
+        if (i + 1) % cfg.burst == 0 {
+            svc.pump_round();
+        }
+    }
+    svc.drain();
+    anyhow::ensure!(
+        svc.ledger_violations() == 0,
+        "service ledger broke exactly-once delivery"
+    );
+    let mut rows = Vec::with_capacity(handles.len());
+    let mut failed = 0usize;
+    for (handle, (kernel, items)) in handles.into_iter().zip(meta) {
+        let resp = handle.wait();
+        match resp.result {
+            Ok(served) => rows.push(RequestRow {
+                tenant: resp.tenant,
+                kernel,
+                items,
+                wait_rounds: served.report.wait_rounds(),
+                batch_size: served.report.batch_size,
+            }),
+            Err(_) => failed += 1,
+        }
+    }
+    let per_device = svc
+        .runtime()
+        .artifact_cache()
+        .map(|c| c.device_counters())
+        .unwrap_or_default();
+    let setup = node
+        .devices
+        .iter()
+        .map(|d| {
+            let (hits, misses) = per_device.get(&d.name).copied().unwrap_or((0, 0));
+            (d.name.clone(), hits, misses, d.init.as_secs_f64() * 1e3)
+        })
+        .collect();
+    Ok(ServiceBench {
+        node: node.name.clone(),
+        seed: cfg.seed,
+        quick: cfg.quick,
+        shards: cfg.shards,
+        coalesce_max: cfg.coalesce_max,
+        tenants: cfg.tenants,
+        rows,
+        failed,
+        stats: svc.stats(),
+        setup,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn bench(requests: usize, seed: u64) -> ServiceBench {
+        let reg = ArtifactRegistry::synthetic();
+        let node = NodeConfig::batel();
+        let cfg = ServiceBenchConfig { requests, seed, ..Default::default() };
+        run_service(&reg, &node, &cfg).unwrap()
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical() {
+        let a = bench(80, 7);
+        let b = bench(80, 7);
+        assert_eq!(a.json(), b.json(), "storm must be a pure function of the seed");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(bench(80, 7).json(), bench(80, 8).json());
+    }
+
+    #[test]
+    fn reference_storm_clears_the_guard() {
+        let b = bench(150, 7);
+        b.guard().unwrap_or_else(|e| panic!("guard failed: {e}"));
+        assert_eq!(b.served(), 150);
+        assert!(b.coalesce_ratio() > 1.0, "storm traffic must coalesce");
+    }
+
+    #[test]
+    fn json_is_parseable_and_accounts_for_every_request() {
+        let b = bench(80, 7);
+        let doc = Json::parse(&b.json()).expect("valid JSON");
+        assert_eq!(doc.get("served").and_then(Json::as_f64).unwrap() as usize, 80);
+        assert_eq!(doc.get("failed").and_then(Json::as_f64).unwrap() as usize, 0);
+        let ratio = doc.get("coalesce_ratio").and_then(Json::as_f64).unwrap();
+        assert!(ratio >= 1.0);
+        let fair = doc.get("fairness_p95_over_median").and_then(Json::as_f64).unwrap();
+        assert!(fair > 0.0);
+        let ac = doc.get("artifact_cache").unwrap();
+        let misses = ac.get("misses").and_then(Json::as_f64).unwrap();
+        assert!(misses > 0.0, "first-touch builds must be counted");
+    }
+
+    #[test]
+    fn quick_mode_shrinks_the_storm() {
+        let reg = ArtifactRegistry::synthetic();
+        let node = NodeConfig::batel();
+        let cfg =
+            ServiceBenchConfig { requests: 1000, seed: 7, quick: true, ..Default::default() };
+        let b = run_service(&reg, &node, &cfg).unwrap();
+        assert_eq!(b.served(), 200);
+        assert!(b.quick);
+    }
+}

@@ -70,8 +70,8 @@ pub mod util;
 pub mod prelude {
     pub use crate::coordinator::{
         Buffer, Configurator, DeviceMask, DeviceSpec, EclError, Engine, FaultEvent,
-        LeasePolicy, Program, RunReport, RunSession, Runtime, SchedulerKind, SessionHandle,
-        SessionOutcome,
+        LeasePolicy, Program, Request, Response, ResponseHandle, RunReport, RunSession,
+        Runtime, SchedulerKind, Served, Service, ServiceConfig, SessionHandle, SessionOutcome,
     };
     pub use crate::platform::{
         DeviceKind, DeviceProfile, FaultKind, FaultPlan, NodeConfig, PerfModelStore,

@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use enginecl::coordinator::{scheduler, DeviceSpec, LeasePolicy};
-use enginecl::harness::{balance, concurrent, init, overhead, perf, qos, runs, traces};
+use enginecl::harness::{balance, concurrent, init, overhead, perf, qos, runs, service, traces};
 use enginecl::platform::{FaultPlan, NodeConfig};
 use enginecl::runtime::ArtifactRegistry;
 use enginecl::util::cli::Args;
@@ -54,6 +54,17 @@ USAGE:
                          --seed S), and with ECL_BENCH_GUARD=1 fails
                          if the hit-rate drops below 0.90. --quick
                          (or ECL_BENCH_QUICK=1) shrinks the soak.
+                        [--service] runs the ingest-storm soak:
+                         [--requests N] seeded mixed-tenant requests
+                         (default 1000) through the Service front-end
+                         (sharded ingestion, DRR fair admission,
+                         coalescing, artifact cache), writes
+                         BENCH_service.json (coalesce ratio, cache
+                         hits/misses, modeled setup savings, per-tenant
+                         wait tails; byte-identical for a fixed
+                         --seed S), and with ECL_BENCH_GUARD=1 fails
+                         on a coalescing, cache or fairness
+                         regression. --quick shrinks the storm.
   enginecl solo <bench> [--node N]         per-device solo times + S_max
   enginecl overhead <bench> [--device I] [--reps N]
   enginecl eval [--node N] [--reps N]      balance/speedup/efficiency grid
@@ -156,6 +167,9 @@ fn run(args: &Args) -> Result<()> {
     }
     if args.has_flag("qos") {
         return qos_cmd(args);
+    }
+    if args.has_flag("service") {
+        return service_cmd(args);
     }
     if let Some(raw) = args.get("concurrent") {
         let n: usize = raw
@@ -326,6 +340,60 @@ fn qos_cmd(args: &Args) -> Result<()> {
     if std::env::var("ECL_BENCH_GUARD").map(|v| v == "1").unwrap_or(false) {
         bench.guard()?;
         println!("guard passed: deadline hit-rate holds the 0.90 floor");
+    }
+    Ok(())
+}
+
+/// `run --service`: the PR-8 ingest-storm soak — seeded mixed-tenant
+/// requests through the Service front-end, the `BENCH_service.json`
+/// artifact, and the `ECL_BENCH_GUARD=1` coalescing/cache/fairness
+/// guard.
+fn service_cmd(args: &Args) -> Result<()> {
+    let node = node_from(args);
+    let reg = ArtifactRegistry::discover()?;
+    let cfg = service::ServiceBenchConfig {
+        requests: args.get_usize("requests", 1000),
+        seed: args.get_usize("seed", 7) as u64,
+        quick: args.has_flag("quick") || runs::quick_mode(),
+        ..service::ServiceBenchConfig::default()
+    };
+    let bench = service::run_service(&reg, &node, &cfg)?;
+    println!(
+        "service storm: node={} requests={} tenants={} shards={} seed={} quick={}",
+        bench.node,
+        bench.served() + bench.failed,
+        bench.tenants,
+        bench.shards,
+        bench.seed,
+        bench.quick
+    );
+    let (paid_ms, saved_ms) = bench.modeled_setup_ms();
+    println!(
+        "  served={} failed={} rounds={} batches={} coalesce-ratio={:.2}",
+        bench.served(),
+        bench.failed,
+        bench.stats.rounds,
+        bench.stats.batches,
+        bench.coalesce_ratio()
+    );
+    println!(
+        "  artifact cache: {} hits / {} misses (modeled setup: paid {:.1}ms, saved {:.1}ms); \
+         program cache: {} hits / {} misses",
+        bench.stats.artifact_cache_hits,
+        bench.stats.artifact_cache_misses,
+        paid_ms,
+        saved_ms,
+        bench.stats.program_cache_hits,
+        bench.stats.program_cache_misses
+    );
+    println!("  fairness: worst tenant p95 wait = {:.2}x fleet median", bench.fairness_ratio());
+    let json_path =
+        std::env::var("ECL_BENCH_JSON").unwrap_or_else(|_| "BENCH_service.json".into());
+    std::fs::write(&json_path, bench.json())?;
+    println!("service artifact written to {json_path}");
+    if std::env::var("ECL_BENCH_GUARD").map(|v| v == "1").unwrap_or(false) {
+        bench.guard()?;
+        println!("guard passed: coalescing, cache reuse and fairness hold their floors");
     }
     Ok(())
 }

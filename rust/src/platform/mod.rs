@@ -8,12 +8,14 @@
 //! per-package overheads and the content-dependent cost profile, all of
 //! which are preserved (DESIGN.md §4).
 
+pub mod artifact_cache;
 pub mod fault;
 pub mod perfmodel;
 pub mod profile;
 pub mod qos;
 pub mod simclock;
 
+pub use artifact_cache::{ArtifactCache, ArtifactEntry};
 pub use fault::{FaultInjector, FaultKind, FaultPlan, FaultSpec, FaultTrigger};
 pub use perfmodel::{ObservationRecord, PerfEstimate, PerfModelStore};
 pub use profile::{DeviceKind, DeviceProfile, NodeConfig};

@@ -155,6 +155,12 @@ impl PerfModelStore {
             return;
         }
         let sample = granules / secs;
+        // A denormal-tiny span can still overflow the division: the
+        // resulting rate must be finite and positive or the EWMA is
+        // poisoned forever (an Inf estimate never decays away).
+        if !sample.is_finite() || sample <= 0.0 {
+            return;
+        }
         let e = inner
             .estimates
             .entry((kernel.to_string(), device.to_string()))
@@ -200,6 +206,20 @@ impl PerfModelStore {
         for &(device, granules, span) in ledger {
             Self::fold(&mut inner, self.alpha, session, kernel, device, granules, span);
         }
+    }
+
+    /// Inject a raw estimate, bypassing `fold`'s sample hygiene — a
+    /// diagnostics/test hook for reproducing *poisoned* store states
+    /// (e.g. an Inf rate restored from a corrupt journal). Consumers
+    /// must survive such entries (see the poisoned-store admission
+    /// regression in `qos_props`); production ingest goes through
+    /// [`PerfModelStore::record`]/[`record_session`], which cannot
+    /// create them.
+    pub fn force_estimate(&self, kernel: &str, device: &str, rate: f64, samples: u64) {
+        let mut inner = self.lock();
+        inner
+            .estimates
+            .insert((kernel.to_string(), device.to_string()), PerfEstimate { rate, samples });
     }
 
     /// Every (kernel, device) pair with an estimate, in key order.

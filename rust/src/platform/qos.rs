@@ -98,6 +98,12 @@ impl MakespanPredictor {
         granules: f64,
         loads: &[DeviceLoad],
     ) -> MakespanEstimate {
+        // Finiteness guard: a zero/NaN/Inf rate from a degenerate store
+        // entry (e.g. one injected past `fold`'s hygiene) is treated as
+        // *unobserved* — the device falls back to power imputation and
+        // does not count as warm, so a poisoned store can never produce
+        // the fully-warm Inf/NaN estimate that would silently reject
+        // every deadlined session at admission.
         let rates: Vec<Option<f64>> = loads
             .iter()
             .map(|l| store.estimate(key, &l.name).filter(|r| r.is_finite() && *r > 0.0))
@@ -121,8 +127,13 @@ impl MakespanPredictor {
                 r / load.sharers.max(1) as f64
             })
             .sum();
+        let secs = granules.max(0.0) / effective.max(1e-9);
         MakespanEstimate {
-            secs: granules.max(0.0) / effective.max(1e-9),
+            // Belt over the per-rate filter above: if a non-finite
+            // quantity slips through (e.g. Inf granules), degrade to
+            // 0.0 — an estimate that can never cause a rejection —
+            // rather than propagate NaN into slack accounting.
+            secs: if secs.is_finite() { secs } else { 0.0 },
             warm_devices: warm,
             devices: loads.len(),
         }
@@ -203,6 +214,25 @@ mod tests {
         let est = MakespanEstimate { secs: 2.0, warm_devices: 1, devices: 1 };
         assert!(est.slack(5.0, 1.0) > 0.0);
         assert!(est.slack(2.5, 1.0) < 0.0);
+    }
+
+    /// Regression (PR-8): a degenerate store entry (zero/NaN/Inf rate)
+    /// must price like an *unobserved* device — power-imputed, not warm
+    /// — instead of yielding an Inf/NaN "fully warm" estimate that
+    /// silently rejects every deadlined session.
+    #[test]
+    fn poisoned_rates_fall_back_to_imputation() {
+        for bad in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let store = warm_store(&[("b", 200.0)]);
+            store.force_estimate("k", "a", bad, 5);
+            let loads = vec![DeviceLoad::new("a", 0.5, 1), DeviceLoad::new("b", 1.0, 1)];
+            let est = MakespanPredictor::predict(&store, "k", 600.0, &loads);
+            assert_eq!(est.warm_devices, 1, "poisoned rate {bad} must not count as warm");
+            assert!(!est.fully_warm(), "poisoned rate {bad} must block the rejection bar");
+            assert!(est.secs.is_finite(), "poisoned rate {bad} leaked into secs: {}", est.secs);
+            // Same price as the half-warm imputation case: 600 / (100 + 200).
+            assert!((est.secs - 2.0).abs() < 1e-9, "rate {bad}: secs {}", est.secs);
+        }
     }
 
     #[test]

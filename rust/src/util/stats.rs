@@ -37,15 +37,31 @@ pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// The finite subset of `xs`, sorted with `f64::total_cmp` (total order,
+/// no panics). The order statistics below operate on this subset: one
+/// poisoned (NaN/Inf) latency sample must degrade a soak's aggregate,
+/// never abort it — `partial_cmp(..).unwrap()` panicked on the first NaN.
+fn sorted_finite(xs: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    v.sort_by(f64::total_cmp);
+    v
+}
+
+/// Non-finite samples in `xs` — the count the harnesses surface next to
+/// order statistics so dropped samples are visible, not silent.
+pub fn non_finite_count(xs: &[f64]) -> usize {
+    xs.iter().filter(|x| !x.is_finite()).count()
+}
+
 /// Percentile `p` in [0, 100] by linear interpolation between closest
 /// ranks (the "exclusive-free" nearest-rank-interpolated definition the
-/// tail-latency reports use); 0.0 for an empty slice.
+/// tail-latency reports use), over the *finite* samples; 0.0 when no
+/// sample is finite (see [`non_finite_count`] for the drop count).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let v = sorted_finite(xs);
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let p = p.clamp(0.0, 100.0);
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
@@ -58,13 +74,12 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
-/// Median of a copy of the data; 0.0 for an empty slice.
+/// Median of the finite samples; 0.0 when none are finite.
 pub fn median(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
+    let v = sorted_finite(xs);
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -144,5 +159,33 @@ mod tests {
     fn minmax() {
         assert_eq!(min(&[3.0, -1.0, 2.0]), -1.0);
         assert_eq!(max(&[3.0, -1.0, 2.0]), 3.0);
+    }
+
+    /// Regression (PR-8): `percentile`/`median` used
+    /// `partial_cmp(..).unwrap()` and panicked on the first NaN sample —
+    /// one poisoned latency killed a whole soak's aggregation. Non-finite
+    /// samples are now dropped (and countable) instead.
+    #[test]
+    fn nan_and_inf_samples_do_not_panic_order_stats() {
+        let poisoned = [3.0, f64::NAN, 1.0, f64::INFINITY, 2.0, f64::NEG_INFINITY];
+        // The finite subset is [1, 2, 3].
+        assert_eq!(median(&poisoned), 2.0);
+        assert_eq!(percentile(&poisoned, 0.0), 1.0);
+        assert_eq!(percentile(&poisoned, 100.0), 3.0);
+        assert!((percentile(&poisoned, 50.0) - 2.0).abs() < 1e-12);
+        assert_eq!(non_finite_count(&poisoned), 3);
+        // mad routes through median twice; the NaN deviations of the
+        // dropped samples must not resurface.
+        assert_eq!(mad(&poisoned), 1.0);
+    }
+
+    /// All-poisoned input degrades to the documented empty-slice result.
+    #[test]
+    fn all_non_finite_degrades_to_zero() {
+        let bad = [f64::NAN, f64::INFINITY];
+        assert_eq!(median(&bad), 0.0);
+        assert_eq!(percentile(&bad, 95.0), 0.0);
+        assert_eq!(mad(&bad), 0.0);
+        assert_eq!(non_finite_count(&bad), 2);
     }
 }

@@ -174,3 +174,37 @@ fn deadlined_session_surviving_kill_meets_or_sheds() {
         }
     }
 }
+
+/// ISSUE-8 satellite: a poisoned performance store — non-finite or
+/// non-positive rates, e.g. a corrupt persisted snapshot or a
+/// zero-duration timing artifact — must never block admission or leak
+/// a non-finite makespan estimate. The predictor filters poisoned
+/// rates down to the imputation path (poisoned ≠ warm), so the
+/// deadlined session is admitted under the cold-store rule and runs to
+/// completion.
+#[test]
+fn poisoned_perf_store_never_blocks_admission() {
+    let reg = registry();
+    let rt = qos_runtime(&reg, 0x9015);
+    for bad in [f64::INFINITY, f64::NAN, 0.0, -5.0] {
+        for d in &NodeConfig::batel().devices {
+            rt.perf_model().force_estimate("binomial", &d.name, bad, 10);
+        }
+        let spec = chaos_session(&reg, "binomial", 3, SchedulerKind::dynamic(8), None)
+            .gws(quarter_gws(&reg, "binomial"))
+            // Unfittably tight: only a (bogus) fully-warm prediction
+            // could reject this — the poisoned store must not be one.
+            .deadline(Duration::from_millis(1))
+            .label(&format!("poisoned-{bad}"));
+        if let Some(est) = rt.predict_session(&spec) {
+            assert!(est.secs.is_finite(), "estimate leaked non-finite secs from rate {bad}");
+            assert!(!est.fully_warm(), "poisoned rates (rate {bad}) must not count as warm");
+        }
+        let outcome = rt.submit(spec).wait();
+        assert!(
+            outcome.result.is_ok(),
+            "poisoned store (rate {bad}) must not reject or break the session: {:?}",
+            outcome.result.as_ref().err()
+        );
+    }
+}

@@ -601,3 +601,67 @@ fn two_concurrent_sessions_beat_serial_execution() {
         "sharing three devices between two sessions must show some lease wait"
     );
 }
+
+/// ISSUE-8 satellite: *two* interleaved deadlined streams leapfrogging
+/// each other through EDF must still age the best-effort queue head on
+/// every bypass — the head is admitted within [`STARVATION_BOUND`]
+/// jumps no matter how many distinct streams take turns in front of it,
+/// and EDF keeps ordering the streams themselves (earliest deadlines
+/// first) around the forced admission.
+#[test]
+fn two_deadline_streams_cannot_starve_best_effort_head() {
+    let reg = registry();
+    let rt = enginecl::coordinator::Runtime::configured(
+        reg.clone(),
+        NodeConfig::batel(),
+        LeasePolicy::Rotation,
+        1, // cap 1: every admission is a fresh EDF pick over the queue
+        0xED1F,
+    );
+    let mut sessions = vec![chaos_session(&reg, "gaussian", 3, SchedulerKind::dynamic(4), None)
+        .gws(small_gws(&reg, "gaussian"))
+        .label("best-effort-head")];
+    // Stream A (urgent) and stream B (loose), interleaved in the batch
+    // so the EDF pick alternates position while the head waits.
+    for i in 0..4u64 {
+        sessions.push(
+            chaos_session(&reg, "binomial", 3, SchedulerKind::dynamic(4), None)
+                .gws(small_gws(&reg, "binomial"))
+                .label(&format!("stream-a-{i}"))
+                .deadline(Duration::from_secs(100 + i)),
+        );
+        sessions.push(
+            chaos_session(&reg, "mandelbrot", 3, SchedulerKind::dynamic(4), None)
+                .gws(small_gws(&reg, "mandelbrot"))
+                .label(&format!("stream-b-{i}"))
+                .deadline(Duration::from_secs(600 + i)),
+        );
+    }
+    let handles = rt.submit_all(sessions);
+    let be_id = handles[0].id();
+    let a_ids: Vec<SessionId> = (0..4).map(|i| handles[1 + 2 * i].id()).collect();
+    for h in handles {
+        let label = h.label().to_string();
+        let o = h.wait();
+        assert!(o.result.is_ok(), "{label}: {:?}", o.result.as_ref().err());
+    }
+    rt.wait_idle();
+    let order = rt.admission_order();
+    assert_eq!(order.len(), 9);
+    let pos = order
+        .iter()
+        .position(|&s| s == be_id)
+        .expect("the best-effort head was admitted");
+    assert!(
+        pos <= STARVATION_BOUND,
+        "best-effort head admitted at position {pos}, beyond the starvation bound \
+         {STARVATION_BOUND} (order {order:?})"
+    );
+    // EDF still ran the urgent stream first — aging the head must not
+    // scramble deadline order among the streams.
+    assert_eq!(
+        &order[..a_ids.len().min(pos)],
+        &a_ids[..a_ids.len().min(pos)],
+        "urgent stream A must fill every admission slot before the forced head (order {order:?})"
+    );
+}
