@@ -695,14 +695,15 @@ fn worker_loop(
         observations.push(PackageObservation { range: current.range, timing: pkg_timing });
 
         if ctx.config.introspect {
+            // Blocking packages own their staging span; pipelined
+            // packages start at compute (staging ran earlier, inside
+            // the previous package's window).
+            let start = if pipelined { exec_start } else { current.h2d_start };
             traces.push(PackageTrace {
                 device: dev,
                 begin_item: current.range.begin,
                 end_item: current.range.end,
-                // Blocking packages own their staging span; pipelined
-                // packages start at compute (staging ran earlier,
-                // inside the previous package's window).
-                start: if pipelined { exec_start } else { current.h2d_start },
+                start,
                 end,
                 h2d_start: current.h2d_start,
                 h2d_end: current.h2d_end,
@@ -711,6 +712,10 @@ fn worker_loop(
                 launches: timing.launches,
                 h2d_bytes: timing.h2d_bytes,
                 d2h_bytes: timing.d2h_bytes,
+                // Busy watts over the package's occupancy window: the
+                // device draws full power for exactly as long as the
+                // package holds it. Idle draw is billed at report level.
+                energy_j: ctx.profile.busy_watts * end.saturating_sub(start).as_secs_f64(),
                 requeued: current.requeued,
             });
         }

@@ -49,6 +49,14 @@ pub struct PackageTrace {
     /// True when this package is recovered work: its range was reclaimed
     /// from a dead device's unfinished assignments and requeued here.
     pub requeued: bool,
+    /// Joules the package consumed: the device's busy watts integrated
+    /// over the occupancy window (`start..end`, H2D + compute). Idle
+    /// draw between packages is charged at the device level
+    /// ([`RunReport::device_energy_j`]), never here, so a granule's
+    /// joules are billed exactly once even when its range is requeued
+    /// after a fault (the dead device's unfinished package never
+    /// reaches a trace).
+    pub energy_j: f64,
 }
 
 impl PackageTrace {
@@ -130,6 +138,17 @@ pub struct DeviceTrace {
     /// when the session ran without a cache (solo engine, uncached
     /// runtime).
     pub cache_hit: Option<bool>,
+    /// Power draw while a package occupies this device, in watts
+    /// (copied from the [`DeviceProfile`](crate::platform::DeviceProfile)).
+    pub busy_watts: f64,
+    /// Power draw while this device sits idle in the node, in watts.
+    pub idle_watts: f64,
+    /// True when the scheduler *refused* this device while work still
+    /// remained (tail cutoff, energy-objective exclusion) — as opposed
+    /// to going dry because the pool was simply exhausted. Refused
+    /// devices are deliberate non-participants: the balance metrics
+    /// exclude them instead of reading the refusal as imbalance.
+    pub refused: bool,
 }
 
 impl DeviceTrace {
@@ -224,19 +243,34 @@ impl RunReport {
     }
 
     /// Per-run balance *efficiency* (the Fig. 13 busy-time metric):
-    /// mean device busy-time over max device busy-time, across devices
-    /// that computed work. 1.0 = every device was busy equally long; a
-    /// low value means one device carried the run while others idled —
-    /// the signature of a mis-calibrated profile or a degraded device
-    /// that a static schedule kept over-feeding. (Equivalently the
-    /// inverse of the max/mean ratio; reported in [0, 1] so "higher is
-    /// better" matches `balance()` and the efficiency figures.)
+    /// mean device busy-time over max device busy-time, across the
+    /// run's *participants*. 1.0 = every participant was busy equally
+    /// long; a low value means one device carried the run while others
+    /// idled — the signature of a mis-calibrated profile or a degraded
+    /// device that a static schedule kept over-feeding.
+    ///
+    /// A participant is a device that computed packages, or a live one
+    /// the scheduler was still willing to feed — the latter contribute
+    /// zero busy time, so a run where one device hogged all the work
+    /// reads as maximally *imbalanced* (the old metric silently dropped
+    /// empty devices and reported a perfect 1.0). Devices the scheduler
+    /// deliberately refused (tail cutoff, energy exclusion) and devices
+    /// that died mid-run are non-participants and stay excluded; 1.0 is
+    /// kept only for genuine single-participant runs.
     pub fn balance_efficiency(&self) -> f64 {
         let busys: Vec<f64> = self
             .devices
             .iter()
-            .filter(|d| !d.packages.is_empty())
-            .map(|d| d.busy().as_secs_f64())
+            .enumerate()
+            .filter_map(|(i, d)| {
+                if !d.packages.is_empty() {
+                    Some(d.busy().as_secs_f64())
+                } else if d.refused || self.faults.iter().any(|f| f.device == i) {
+                    None
+                } else {
+                    Some(0.0)
+                }
+            })
             .collect();
         if busys.len() < 2 {
             return 1.0;
@@ -340,33 +374,70 @@ impl RunReport {
         self.devices.iter().filter(|d| d.cache_hit == Some(false)).count()
     }
 
+    /// Joules device `i` consumed over the run: each package's busy
+    /// energy (busy watts × occupancy span, integrated per package in
+    /// the trace) plus idle watts over the rest of the wall — init,
+    /// inter-package gaps and lease waits all draw idle power.
+    pub fn device_energy_j(&self, i: usize) -> f64 {
+        let d = &self.devices[i];
+        let busy_j: f64 = d.packages.iter().map(|p| p.energy_j).sum();
+        let idle_s = (self.wall.as_secs_f64() - d.busy().as_secs_f64()).max(0.0);
+        busy_j + d.idle_watts * idle_s
+    }
+
+    /// Total joules the node consumed over the run, across all devices.
+    pub fn total_energy_j(&self) -> f64 {
+        (0..self.devices.len()).map(|i| self.device_energy_j(i)).sum()
+    }
+
+    /// Per-device share of the run's total energy, normalized to 1.0
+    /// (the energy analogue of [`work_shares`](Self::work_shares)).
+    pub fn energy_shares(&self) -> Vec<f64> {
+        let total = self.total_energy_j();
+        (0..self.devices.len())
+            .map(|i| if total > 0.0 { self.device_energy_j(i) / total } else { 0.0 })
+            .collect()
+    }
+
+    /// Energy-delay product (joule-seconds): total energy × wall time.
+    /// The co-execution objective where adding a watt-hungry device
+    /// that barely shortens the run makes things *worse* — the frontier
+    /// `adaptive:obj=edp` optimizes.
+    pub fn edp(&self) -> f64 {
+        self.total_energy_j() * self.wall.as_secs_f64()
+    }
+
     /// ASCII timeline (one row per device) — the Introspector "visual
     /// representation" of Figures 5/6 for terminals. `i` marks init,
     /// `#` compute windows, `u` H2D staging visible outside compute
     /// (exposed, un-overlapped transfer).
     pub fn ascii_timeline(&self, width: usize) -> String {
         let wall = self.wall.as_secs_f64().max(1e-9);
+        // Column for run-epoch offset `t`, clamped to the row. The clamp
+        // must happen *before* any arithmetic on the index: a package
+        // whose `end` exceeds the recorded wall (possible after a fault
+        // requeue) casts to a saturated usize, and the old `.max(b + 1)`
+        // on that value overflowed in debug builds.
+        let col = |t: Duration| -> usize {
+            (((t.as_secs_f64() / wall) * width as f64) as usize).min(width)
+        };
         let mut out = String::new();
         for d in &self.devices {
             let mut row = vec![b'.'; width];
-            let ib = ((d.init_start.as_secs_f64() / wall) * width as f64) as usize;
-            let ie = ((d.init_end.as_secs_f64() / wall) * width as f64) as usize;
-            for c in row.iter_mut().take(ie.min(width)).skip(ib.min(width)) {
+            for c in row.iter_mut().take(col(d.init_end)).skip(col(d.init_start)) {
                 *c = b'i';
             }
             // Exposed uploads first; compute windows overwrite them, so
             // only transfer time the pipeline failed to hide stays 'u'.
             for p in &d.packages {
-                let b = ((p.h2d_start.as_secs_f64() / wall) * width as f64) as usize;
-                let e = ((p.h2d_end.as_secs_f64() / wall) * width as f64) as usize;
-                for c in row.iter_mut().take(e.min(width)).skip(b.min(width)) {
+                for c in row.iter_mut().take(col(p.h2d_end)).skip(col(p.h2d_start)) {
                     *c = b'u';
                 }
             }
             for p in &d.packages {
-                let b = ((p.start.as_secs_f64() / wall) * width as f64) as usize;
-                let e = (((p.end.as_secs_f64() / wall) * width as f64) as usize).max(b + 1);
-                for c in row.iter_mut().take(e.min(width)).skip(b.min(width)) {
+                let b = col(p.start);
+                let e = col(p.end).max((b + 1).min(width));
+                for c in row.iter_mut().take(e).skip(b) {
                     *c = b'#';
                 }
             }
@@ -386,12 +457,12 @@ impl RunReport {
     /// pipelined sub-spans.
     pub fn package_csv(&self) -> String {
         let mut s = String::from(
-            "device,kind,begin_item,end_item,start_ms,end_ms,h2d_start_ms,h2d_end_ms,exec_start_ms,raw_ms,launches,h2d_bytes,d2h_bytes,requeued\n",
+            "device,kind,begin_item,end_item,start_ms,end_ms,h2d_start_ms,h2d_end_ms,exec_start_ms,raw_ms,launches,h2d_bytes,d2h_bytes,energy_j,requeued\n",
         );
         for d in &self.devices {
             for p in &d.packages {
                 s.push_str(&format!(
-                    "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{},{},{},{}\n",
+                    "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{},{},{},{:.6},{}\n",
                     d.name,
                     d.kind.label(),
                     p.begin_item,
@@ -405,6 +476,7 @@ impl RunReport {
                     p.launches,
                     p.h2d_bytes,
                     p.d2h_bytes,
+                    p.energy_j,
                     u8::from(p.requeued)
                 ));
             }
@@ -421,7 +493,8 @@ mod tests {
         Duration::from_millis(x)
     }
 
-    /// A blocking-style package: H2D at the window start, compute after.
+    /// A blocking-style package: H2D at the window start, compute after,
+    /// energy charged at 100 busy watts over the occupancy window.
     fn mk(device: usize, b: usize, e: usize, s: u64, t: u64) -> PackageTrace {
         PackageTrace {
             device,
@@ -436,6 +509,7 @@ mod tests {
             launches: 1,
             h2d_bytes: 4,
             d2h_bytes: 0,
+            energy_j: 100.0 * (t - s) as f64 * 1e-3,
             requeued: false,
         }
     }
@@ -457,6 +531,9 @@ mod tests {
                     xfer: TransferStats { input_upload_bytes: 0, h2d_bytes: 4, d2h_bytes: 0 },
                     lease_wait: ms(0),
                     cache_hit: None,
+                    busy_watts: 100.0,
+                    idle_watts: 10.0,
+                    refused: false,
                 },
                 DeviceTrace {
                     name: "gpu".into(),
@@ -467,6 +544,9 @@ mod tests {
                     xfer: TransferStats { input_upload_bytes: 0, h2d_bytes: 4, d2h_bytes: 0 },
                     lease_wait: ms(0),
                     cache_hit: None,
+                    busy_watts: 100.0,
+                    idle_watts: 10.0,
+                    refused: false,
                 },
             ],
             faults: Vec::new(),
@@ -491,9 +571,50 @@ mod tests {
         let mut solo = mk_report();
         solo.devices.truncate(1);
         assert_eq!(solo.balance_efficiency(), 1.0, "one device is trivially balanced");
-        let mut idle = mk_report();
-        idle.devices[0].packages.clear();
-        assert_eq!(idle.balance_efficiency(), 1.0, "idle devices are excluded");
+        let mut refused = mk_report();
+        refused.devices[0].packages.clear();
+        refused.devices[0].refused = true;
+        assert_eq!(
+            refused.balance_efficiency(),
+            1.0,
+            "scheduler-refused devices are deliberate non-participants"
+        );
+    }
+
+    #[test]
+    fn hogged_run_reports_imbalance_not_perfection() {
+        // Regression: a 3-device run where one device got *everything*
+        // used to report a perfect 1.0 — the empty devices were silently
+        // dropped and the metric degenerated to a single-device case.
+        let mut r = mk_report();
+        r.devices[0].packages.clear();
+        r.devices.push(DeviceTrace {
+            name: "acc".into(),
+            kind: DeviceKind::Accelerator,
+            init_start: ms(0),
+            init_end: ms(8),
+            packages: Vec::new(),
+            xfer: TransferStats::default(),
+            lease_wait: ms(0),
+            cache_hit: None,
+            busy_watts: 100.0,
+            idle_watts: 10.0,
+            refused: false,
+        });
+        // gpu hogs all work (95ms busy); cpu and acc are live, willing
+        // and empty: mean/max = (0 + 0 + 95)/3 / 95 = 1/3.
+        assert!((r.balance_efficiency() - 1.0 / 3.0).abs() < 1e-9);
+        // A faulted empty device is not a participant: back to 1/2 + 95/2.
+        r.faults.push(FaultEvent {
+            device: 2,
+            device_name: "acc".into(),
+            message: "killed".into(),
+            at: ms(1),
+            reclaimed_items: 0,
+            revoked_claims: 0,
+            recovered: true,
+        });
+        assert!((r.balance_efficiency() - 0.5).abs() < 1e-9);
     }
 
     #[test]
@@ -551,7 +672,47 @@ mod tests {
         assert_eq!(r.lease_wait_total(), ms(12));
         let csv = r.package_csv();
         assert!(csv.starts_with("device,"));
-        assert!(csv.lines().next().unwrap().ends_with("h2d_bytes,d2h_bytes,requeued"));
+        assert!(csv
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("h2d_bytes,d2h_bytes,energy_j,requeued"));
+    }
+
+    #[test]
+    fn timeline_clamps_overflowing_trace() {
+        // Regression: a package whose `end` exceeds the recorded wall
+        // (possible after a fault requeue) saturated the f64→usize cast
+        // and the render's `.max(b + 1)` overflowed in debug builds.
+        let mut r = mk_report();
+        let mut p = mk(1, 100, 130, 99, 100);
+        p.start = Duration::from_secs(40); // way past the 100ms wall
+        p.end = Duration::from_secs(90);
+        p.h2d_start = Duration::from_secs(40);
+        p.h2d_end = Duration::from_secs(41);
+        r.devices[1].packages.push(p);
+        let tl = r.ascii_timeline(40);
+        assert_eq!(tl.lines().count(), 2);
+        for line in tl.lines() {
+            let bar = line.split('|').nth(1).expect("row has a |bar|");
+            assert_eq!(bar.len(), 40, "row stays exactly `width` wide");
+        }
+    }
+
+    #[test]
+    fn energy_integrates_busy_and_idle_watts() {
+        let r = mk_report();
+        // cpu: 70ms busy @100W (energy_j from the trace) + 30ms idle @10W.
+        let cpu = 100.0 * 0.070 + 10.0 * 0.030;
+        // gpu: 95ms busy @100W + 5ms idle @10W.
+        let gpu = 100.0 * 0.095 + 10.0 * 0.005;
+        assert!((r.device_energy_j(0) - cpu).abs() < 1e-9);
+        assert!((r.device_energy_j(1) - gpu).abs() < 1e-9);
+        assert!((r.total_energy_j() - (cpu + gpu)).abs() < 1e-9);
+        let shares = r.energy_shares();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(shares[1] > shares[0], "the busier device bills more joules");
+        assert!((r.edp() - r.total_energy_j() * 0.1).abs() < 1e-9);
     }
 
     #[test]
@@ -610,6 +771,7 @@ mod tests {
             launches: 1,
             h2d_bytes: 4,
             d2h_bytes: 0,
+            energy_j: 2.0,
             requeued: false,
         });
         assert_eq!(r.transfer_overlap_count(), 1);

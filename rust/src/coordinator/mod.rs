@@ -31,7 +31,7 @@ pub use lease::{GrantRecord, LeaseArbiter, LeasePolicy, SessionId};
 pub use program::{Arg, Program};
 pub use qos::{QosClass, QosController, QosEvent, QosPolicy};
 pub use runtime::{RunSession, Runtime, SessionHandle, SessionOutcome};
-pub use scheduler::SchedulerKind;
+pub use scheduler::{EnergyObjective, SchedulerKind};
 pub use service::{
     LedgerCounts, LedgerState, Request, RequestId, RequestReport, Response, ResponseHandle,
     Served, Service, ServiceConfig, ServiceStats,

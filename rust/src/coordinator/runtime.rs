@@ -1026,9 +1026,21 @@ impl SessionExec {
                 } else {
                     None
                 };
+                // Energy warm start rides the same store with the same
+                // hygiene: a degenerate joules/granule estimate must
+                // cold-start the energy model, not poison it.
+                let warm_epg = if config.warm_start {
+                    perf.as_ref()
+                        .and_then(|p| p.energy_estimate(&store_key, &d.name))
+                        .filter(|e| e.is_finite() && *e > 0.0)
+                } else {
+                    None
+                };
                 SchedDevice::new(d.name.clone(), d.relative_power)
                     .with_warm_rate(warm)
                     .with_qos(qos_hint)
+                    .with_watts(d.busy_watts, d.idle_watts)
+                    .with_warm_epg(warm_epg)
             })
             .collect();
         let mut sched = scheduler.build();
@@ -1048,6 +1060,9 @@ impl SessionExec {
                     xfer: Default::default(),
                     lease_wait: Default::default(),
                     cache_hit: None,
+                    busy_watts: d.busy_watts,
+                    idle_watts: d.idle_watts,
+                    refused: false,
                 }
             })
             .collect();
@@ -1069,6 +1084,11 @@ impl SessionExec {
             finish_sent: vec![false; ndev],
             failed: vec![false; ndev],
             dry: vec![false; ndev],
+            refused: vec![false; ndev],
+            // What the scheduler was started with: the granule-aligned
+            // item count (a non-aligned gws remainder is never
+            // scheduled), so refusal detection compares like with like.
+            total_items: (gws / bench.granule) * bench.granule,
             reclaimed: VecDeque::new(),
             paused: false,
             completed_items: 0,
@@ -1233,6 +1253,28 @@ impl SessionExec {
                 })
                 .collect();
             store.record_session(session, &store_key, &ledger);
+            // The energy ledger rides the same observations: joules per
+            // package = busy watts × occupancy span, normalized to
+            // granules by the store. Observations are recorded exactly
+            // once per completed package (a requeued range's joules are
+            // billed only by the survivor that actually computed it),
+            // so the energy model never double-bills recovered work.
+            let energy_ledger: Vec<(&str, f64, f64)> = observations
+                .iter()
+                .enumerate()
+                .flat_map(|(slot, obs)| {
+                    let device = device_traces[slot].name.as_str();
+                    let watts = device_traces[slot].busy_watts;
+                    obs.iter().map(move |o| {
+                        (
+                            device,
+                            o.range.len() as f64 / granule,
+                            watts * o.timing.span.as_secs_f64(),
+                        )
+                    })
+                })
+                .collect();
+            store.record_session_energy(session, &store_key, &energy_ledger);
         }
 
         // ---- recover the arena: results are already in place -----------
@@ -1266,6 +1308,12 @@ impl SessionExec {
         } else if depth <= 1 && scheduler_label.ends_with("+pipe") {
             let len = scheduler_label.len() - "+pipe".len();
             scheduler_label.truncate(len);
+        }
+        // Surface scheduler refusals (tail cutoff, energy exclusion) on
+        // the traces so the balance metrics can exclude deliberate
+        // non-participants.
+        for (dev, trace) in device_traces.iter_mut().enumerate() {
+            trace.refused = master.refused[dev];
         }
         Ok(RunReport {
             bench: bench.name.clone(),
@@ -1371,6 +1419,13 @@ struct MasterState {
     /// The scheduler returned `None` for this device (terminal, per the
     /// trait contract).
     dry: Vec<bool>,
+    /// The scheduler returned `None` for this device *while unassigned
+    /// work still remained* — a deliberate refusal (tail cutoff, energy
+    /// exclusion), not pool exhaustion. Surfaced on [`DeviceTrace`] so
+    /// the balance metrics can tell the two apart.
+    refused: Vec<bool>,
+    /// Granule-aligned work items the scheduler was started with.
+    total_items: usize,
     /// Reclaimed ranges awaiting requeue.
     reclaimed: VecDeque<Range>,
     /// QoS preemption: a paused (shed) best-effort session stops
@@ -1402,6 +1457,15 @@ impl MasterState {
         let r = self.scheduler.next_package(dev);
         if r.is_none() {
             self.dry[dev] = true;
+            // Refusal vs exhaustion: if items remain that are neither
+            // completed, in flight, nor awaiting requeue, the scheduler
+            // still *had* work and chose not to feed this device.
+            let accounted: usize = self.completed_items
+                + self.pending.iter().map(|q| q.iter().map(Range::len).sum::<usize>()).sum::<usize>()
+                + self.reclaimed.iter().map(Range::len).sum::<usize>();
+            if accounted < self.total_items {
+                self.refused[dev] = true;
+            }
         }
         r
     }
@@ -1890,6 +1954,8 @@ mod tests {
             finish_sent: vec![false; ndev],
             failed: vec![false; ndev],
             dry: vec![false; ndev],
+            refused: vec![false; ndev],
+            total_items: granules * granule,
             reclaimed: VecDeque::new(),
             paused: false,
             completed_items: 0,

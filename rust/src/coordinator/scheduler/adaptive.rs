@@ -58,7 +58,10 @@
 
 use crate::coordinator::work::Range;
 
-use super::{PackageTiming, QosTracker, SchedDevice, Scheduler, ThroughputModel, QOS_TIGHTEN};
+use super::{
+    EnergyObjective, PackageTiming, QosTracker, SchedDevice, Scheduler, ThroughputModel,
+    QOS_TIGHTEN,
+};
 
 /// Chunk decay divisor: each request takes `share/k` of the remainder.
 pub const DEFAULT_K: f64 = 2.0;
@@ -72,11 +75,21 @@ pub const DEFAULT_ALPHA: f64 = 0.5;
 /// pending pool (scaled by this factor).
 const TAIL_BETA: f64 = 1.0;
 
+/// Largest live-device count the energy selector will enumerate subsets
+/// for (2^n candidates). Paper nodes have 3 devices; this is a safety
+/// valve, not a practical limit.
+const ENERGY_SELECT_MAX_DEVICES: usize = 12;
+
 #[derive(Debug)]
 pub struct Adaptive {
     k: f64,
     min_granules: usize,
     alpha: f64,
+    /// What the active-set selector optimizes (time = classic behavior,
+    /// bit-identical to pre-energy Adaptive).
+    objective: EnergyObjective,
+    /// Node power budget in watts (`adaptive:power=W`); `None` = uncapped.
+    power_cap: Option<f64>,
     // ---- per-run state (reset in `start`) ----------------------------
     granule: usize,
     total: usize,
@@ -86,19 +99,45 @@ pub struct Adaptive {
     model: ThroughputModel,
     /// Packages assigned so far per device (probe bookkeeping).
     assigned: Vec<usize>,
-    /// Devices this scheduler has gone terminal for: tail-cutoff
-    /// refusals plus devices reclaimed by the recovery path.
+    /// Devices this scheduler has gone terminal for: tail-cutoff and
+    /// energy-selector refusals plus devices reclaimed by recovery.
     terminal: Vec<bool>,
     /// Deadline-risk state (no-op for best-effort sessions).
     qos: QosTracker,
+    /// Busy power draw per device (watts, from the device profile).
+    busy_watts: Vec<f64>,
+    /// Idle power draw per device (watts).
+    idle_watts: Vec<f64>,
+    /// Joules/granule EWMA per device, seeded from the store's
+    /// warm-start prior when present; `None` until the first energy
+    /// observation on a cold device.
+    epg: Vec<Option<f64>>,
+    /// The power cap was infeasible even for a single device; the
+    /// selector kept the lowest-draw device and recorded the breach.
+    cap_violated: bool,
 }
 
 impl Adaptive {
     pub fn new(k: f64, min_granules: usize, alpha: f64) -> Self {
+        Self::with_objective(k, min_granules, alpha, EnergyObjective::Time, None)
+    }
+
+    /// Full-knob constructor backing `adaptive:obj=…,power=…` specs.
+    /// With `objective == Time` and no cap, behavior is bit-identical
+    /// to the classic `new` (the energy selector never runs).
+    pub fn with_objective(
+        k: f64,
+        min_granules: usize,
+        alpha: f64,
+        objective: EnergyObjective,
+        power_cap: Option<f64>,
+    ) -> Self {
         Self {
             k: if k <= 0.0 { DEFAULT_K } else { k },
             min_granules: min_granules.max(1),
             alpha: if alpha > 0.0 && alpha <= 1.0 { alpha } else { DEFAULT_ALPHA },
+            objective,
+            power_cap: power_cap.filter(|w| w.is_finite() && *w > 0.0),
             granule: 1,
             total: 0,
             cursor: 0,
@@ -107,6 +146,10 @@ impl Adaptive {
             assigned: Vec::new(),
             terminal: Vec::new(),
             qos: QosTracker::default(),
+            busy_watts: Vec::new(),
+            idle_watts: Vec::new(),
+            epg: Vec::new(),
+            cap_violated: false,
         }
     }
 
@@ -146,11 +189,116 @@ impl Adaptive {
             .map(|d| self.model.rate(d))
             .sum()
     }
+
+    /// Effective busy draw of `dev`: the measured joules/granule times
+    /// the estimated rate when an energy observation (or warm-start
+    /// prior) exists — i.e. watts the device *actually* burns per unit
+    /// of progress — falling back to the profile's nameplate draw.
+    fn effective_busy_watts(&self, dev: usize) -> f64 {
+        self.epg[dev]
+            .map(|e| e * self.model.rate(dev))
+            .filter(|w| w.is_finite() && *w > 0.0)
+            .unwrap_or(self.busy_watts[dev])
+    }
+
+    /// Energy-aware active-set selection: over every non-empty subset
+    /// of the live devices, estimate node power (busy draw of the
+    /// subset + idle draw of the excluded) and completion time
+    /// (pool / summed rate), keep the subset optimizing the objective
+    /// subject to the power cap, and refuse the rest via the existing
+    /// `terminal` mechanism (sticky, never the last live device — a
+    /// subset is non-empty by construction).
+    ///
+    /// Never runs for plain time-objective uncapped runs, so classic
+    /// Adaptive sizing stays bit-identical. Re-run after each
+    /// observation: better rate/epg estimates can tighten the set
+    /// (exclusions are monotone — a refused device never comes back,
+    /// matching the master's `dry` bookkeeping).
+    fn select_active_set(&mut self) {
+        if self.objective == EnergyObjective::Time && self.power_cap.is_none() {
+            return;
+        }
+        let live: Vec<usize> = (0..self.ndev).filter(|&d| !self.terminal[d]).collect();
+        if live.len() <= 1 || live.len() > ENERGY_SELECT_MAX_DEVICES {
+            return;
+        }
+        // Node draw always includes every live device's idle floor;
+        // activating a device adds its (busy - idle) increment.
+        let idle_floor: f64 = live.iter().map(|&d| self.idle_watts[d]).sum();
+        let mut best: Option<(f64, u32)> = None;
+        for mask in 1u32..(1 << live.len()) {
+            let mut rate = 0.0;
+            let mut extra = 0.0;
+            for (bit, &d) in live.iter().enumerate() {
+                if mask & (1 << bit) != 0 {
+                    rate += self.model.rate(d);
+                    extra += (self.effective_busy_watts(d) - self.idle_watts[d]).max(0.0);
+                }
+            }
+            let node_watts = idle_floor + extra;
+            if let Some(cap) = self.power_cap {
+                if node_watts > cap {
+                    continue;
+                }
+            }
+            // Scores: Time minimizes makespan (1/rate — the pool size
+            // is a common factor); EDP minimizes watts/rate², i.e.
+            // P·T² with the pool² factor dropped. Ranking is therefore
+            // independent of how much of the pool remains.
+            let score = match self.objective {
+                EnergyObjective::Time => 1.0 / rate.max(1e-12),
+                EnergyObjective::Edp => node_watts / (rate * rate).max(1e-24),
+            };
+            let better = match best {
+                None => true,
+                // Strict improvement only: ties keep the earlier
+                // (smaller-mask) subset, a deterministic choice.
+                Some((s, _)) => score < s,
+            };
+            if better {
+                best = Some((score, mask));
+            }
+        }
+        match best {
+            Some((_, mask)) => {
+                for (bit, &d) in live.iter().enumerate() {
+                    if mask & (1 << bit) == 0 {
+                        self.terminal[d] = true;
+                    }
+                }
+            }
+            None => {
+                // Cap infeasible even for one device: someone must
+                // compute. Keep the lowest-draw live device and record
+                // the breach (surfaced by the energy harness).
+                let keep = live
+                    .iter()
+                    .copied()
+                    .min_by(|&a, &b| {
+                        self.effective_busy_watts(a).total_cmp(&self.effective_busy_watts(b))
+                    })
+                    .expect("live is non-empty");
+                for &d in &live {
+                    if d != keep {
+                        self.terminal[d] = true;
+                    }
+                }
+                self.cap_violated = true;
+            }
+        }
+    }
 }
 
 impl Scheduler for Adaptive {
     fn name(&self) -> String {
-        "Adaptive".into()
+        let mut s = String::from("Adaptive");
+        if self.objective == EnergyObjective::Edp {
+            s.push_str("-EDP");
+        }
+        if self.power_cap.is_some() {
+            s.push_str("-cap");
+        }
+        s
     }
 
     fn start(&mut self, total_granules: usize, granule: usize, devices: &[SchedDevice]) {
@@ -163,6 +311,14 @@ impl Scheduler for Adaptive {
         self.assigned = vec![0; devices.len()];
         self.terminal = vec![false; devices.len()];
         self.qos.start(devices);
+        self.busy_watts = devices.iter().map(|d| d.busy_watts.max(0.0)).collect();
+        self.idle_watts = devices.iter().map(|d| d.idle_watts.max(0.0)).collect();
+        self.epg = devices
+            .iter()
+            .map(|d| d.warm_epg.filter(|e| e.is_finite() && *e > 0.0))
+            .collect();
+        self.cap_violated = false;
+        self.select_active_set();
     }
 
     fn next_package(&mut self, dev: usize) -> Option<Range> {
@@ -197,6 +353,20 @@ impl Scheduler for Adaptive {
         let granules = range.len() as f64 / self.granule.max(1) as f64;
         self.model.observe(dev, granules, timing.span);
         self.qos.observe(dev, timing.span);
+        // Joules/granule EWMA: the package burned busy_watts over its
+        // occupancy span. Same alpha as the rate model so energy and
+        // throughput estimates track the device at the same cadence.
+        if dev < self.ndev && granules > 0.0 {
+            let sample = self.busy_watts[dev] * timing.span.as_secs_f64() / granules;
+            if sample.is_finite() && sample >= 0.0 {
+                self.epg[dev] = Some(match self.epg[dev] {
+                    Some(prev) => self.alpha * sample + (1.0 - self.alpha) * prev,
+                    None => sample,
+                });
+            }
+        }
+        // Fresh estimates can change the energy-optimal active set.
+        self.select_active_set();
     }
 
     /// Recovery: mark the dead device terminal so the tail cutoff never
@@ -510,5 +680,99 @@ mod tests {
         assert!((s.k - DEFAULT_K).abs() < 1e-12);
         assert_eq!(s.min_granules, 1);
         assert!((s.alpha - DEFAULT_ALPHA).abs() < 1e-12);
+        assert_eq!(s.objective, EnergyObjective::Time);
+        assert_eq!(s.power_cap, None);
+        // Degenerate caps are dropped, not obeyed.
+        let s = Adaptive::with_objective(2.0, 1, 0.5, EnergyObjective::Time, Some(f64::NAN));
+        assert_eq!(s.power_cap, None);
+    }
+
+    /// Batel-shaped device set with real watts: cpu 95/10, gpu 225/12,
+    /// phi 300/15, relative rates 0.3 / 1.0 / 0.42.
+    fn batel_devs() -> Vec<SchedDevice> {
+        vec![
+            SchedDevice::new("cpu", 0.3).with_watts(95.0, 10.0),
+            SchedDevice::new("gpu", 1.0).with_watts(225.0, 12.0),
+            SchedDevice::new("phi", 0.42).with_watts(300.0, 15.0),
+        ]
+    }
+
+    /// EDP selection on the batel shape: {cpu, gpu} wins (198 W/r²
+    /// vs 210 for all three, 250 for gpu solo), so the power-hungry
+    /// Phi is refused from the start while both others are served.
+    #[test]
+    fn edp_objective_drops_the_power_hungry_straggler() {
+        let mut s = Adaptive::with_objective(2.0, 1, 0.5, EnergyObjective::Edp, None);
+        s.start(10_000, 1, &batel_devs());
+        assert!(s.next_package(2).is_none(), "phi is EDP-refused");
+        assert!(s.terminal[2], "refusal is terminal");
+        assert!(s.next_package(0).is_some(), "cpu stays in the EDP-optimal set");
+        assert!(s.next_package(1).is_some(), "gpu stays in the EDP-optimal set");
+        assert!(!s.cap_violated);
+    }
+
+    /// Time objective with watts plumbed but no cap is bit-identical
+    /// to the classic scheduler — the selector must never run.
+    #[test]
+    fn time_objective_with_watts_is_boundary_neutral() {
+        let mut plain = Adaptive::new(2.0, 2, 0.5);
+        plain.start(1000, 64, &devs(&[0.3, 1.0, 0.42]));
+        let mut energy_aware = Adaptive::with_objective(2.0, 2, 0.5, EnergyObjective::Time, None);
+        energy_aware.start(1000, 64, &batel_devs());
+        let a = drain(&mut plain, 3, |_| ms(5));
+        let b = drain(&mut energy_aware, 3, |_| ms(5));
+        assert_eq!(a, b, "watts alone must not move package boundaries");
+    }
+
+    /// A 400 W cap on batel admits {cpu, gpu} (335 W) but not any set
+    /// containing the Phi alongside another device; the time objective
+    /// picks the max-rate feasible subset.
+    #[test]
+    fn power_cap_excludes_devices_beyond_the_budget() {
+        let mut s = Adaptive::with_objective(2.0, 1, 0.5, EnergyObjective::Time, Some(400.0));
+        s.start(10_000, 1, &batel_devs());
+        assert!(s.next_package(2).is_none(), "phi would blow the cap");
+        assert!(s.next_package(0).is_some());
+        assert!(s.next_package(1).is_some());
+        assert!(!s.cap_violated, "a feasible cap is not a violation");
+    }
+
+    /// A cap below even the cheapest single device is infeasible:
+    /// someone must compute, so the lowest-draw device is kept, the
+    /// breach is recorded, and the pool still drains to completion.
+    #[test]
+    fn infeasible_cap_keeps_lowest_draw_device_and_records_violation() {
+        let mut s = Adaptive::with_objective(2.0, 1, 0.5, EnergyObjective::Time, Some(50.0));
+        s.start(1000, 1, &batel_devs());
+        assert!(s.cap_violated, "infeasible cap must be flagged");
+        assert!(s.next_package(1).is_none(), "gpu shed to approach the cap");
+        assert!(s.next_package(2).is_none(), "phi shed to approach the cap");
+        let mut cursor = 0;
+        while let Some(r) = s.next_package(0) {
+            assert_eq!(r.begin, cursor);
+            s.observe(0, r, timing(ms(5)));
+            cursor = r.end;
+        }
+        assert_eq!(cursor, 1000, "the kept device drains the whole pool");
+    }
+
+    /// The joules/granule EWMA: seeded by the first sample, folded with
+    /// alpha thereafter, and warm-start priors are trusted immediately.
+    #[test]
+    fn energy_per_granule_ewma_tracks_observations() {
+        let mut s = Adaptive::new(2.0, 1, 0.5);
+        let d = vec![
+            SchedDevice::new("a", 1.0).with_watts(100.0, 10.0),
+            SchedDevice::new("b", 1.0).with_watts(100.0, 10.0).with_warm_epg(Some(3.0)),
+        ];
+        s.start(10_000, 1, &d);
+        assert_eq!(s.epg[0], None, "cold device has no estimate");
+        assert_eq!(s.epg[1], Some(3.0), "warm prior trusted immediately");
+        // 100 W for 1 s over 100 granules = 1 J/granule.
+        s.observe(0, Range::new(0, 100), timing(Duration::from_secs(1)));
+        assert!((s.epg[0].unwrap() - 1.0).abs() < 1e-9);
+        // Next sample 2 J/granule folds with alpha 0.5 → 1.5.
+        s.observe(0, Range::new(100, 200), timing(Duration::from_secs(2)));
+        assert!((s.epg[0].unwrap() - 1.5).abs() < 1e-9);
     }
 }

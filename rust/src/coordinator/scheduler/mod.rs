@@ -59,11 +59,30 @@ pub struct SchedDevice {
     /// makespan prediction; consumed by the feedback schedulers'
     /// deadline-driven tail sizing.
     pub qos: Option<QosHint>,
+    /// Power draw while a package occupies this device, in watts (from
+    /// the device profile). Plumbed through every scheduler; only the
+    /// energy-objective Adaptive acts on it — HGuided and the rest
+    /// carry the hint untouched, so their sizing stays bit-for-bit.
+    pub busy_watts: f64,
+    /// Idle power draw, in watts.
+    pub idle_watts: f64,
+    /// Warm-start joules/granule prior from the performance-model
+    /// store's energy map. `None` = cold start from `busy_watts` and
+    /// relative rates alone.
+    pub warm_epg: Option<f64>,
 }
 
 impl SchedDevice {
     pub fn new(name: impl Into<String>, power: f64) -> Self {
-        Self { name: name.into(), power, warm_rate: None, qos: None }
+        Self {
+            name: name.into(),
+            power,
+            warm_rate: None,
+            qos: None,
+            busy_watts: 0.0,
+            idle_watts: 0.0,
+            warm_epg: None,
+        }
     }
 
     pub fn with_warm_rate(mut self, rate: Option<f64>) -> Self {
@@ -73,6 +92,17 @@ impl SchedDevice {
 
     pub fn with_qos(mut self, qos: Option<QosHint>) -> Self {
         self.qos = qos;
+        self
+    }
+
+    pub fn with_watts(mut self, busy: f64, idle: f64) -> Self {
+        self.busy_watts = busy;
+        self.idle_watts = idle;
+        self
+    }
+
+    pub fn with_warm_epg(mut self, epg: Option<f64>) -> Self {
+        self.warm_epg = epg;
         self
     }
 }
@@ -350,6 +380,19 @@ impl ThroughputModel {
     }
 }
 
+/// Optimization objective for the [`Adaptive`] scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EnergyObjective {
+    /// Minimize makespan — the classic objective; every device that
+    /// helps finish sooner participates.
+    #[default]
+    Time,
+    /// Minimize energy-delay product: devices whose marginal joules
+    /// outweigh their marginal speedup are excluded from the active
+    /// set. The fastest split is often not the greenest one.
+    Edp,
+}
+
 /// Engine-facing configuration enum (Tier-2 API); materialized into a
 /// boxed Strategy at run time.
 #[derive(Debug, Clone, PartialEq)]
@@ -368,7 +411,16 @@ pub enum SchedulerKind {
     /// Fully feedback-driven: profile/warm-start prior, per-device
     /// probe packages, online EWMA re-estimation (`alpha`), decaying
     /// chunk schedule (`k`) with an absolute minimum-package clamp.
-    Adaptive { k: f64, min_granules: usize, alpha: f64 },
+    /// `objective` selects what the active device set optimizes
+    /// (`adaptive:obj=edp` minimizes energy-delay product) and
+    /// `power_cap` bounds node power in watts (`adaptive:power=W`).
+    Adaptive {
+        k: f64,
+        min_granules: usize,
+        alpha: f64,
+        objective: EnergyObjective,
+        power_cap: Option<f64>,
+    },
     /// Any base strategy with per-device package pipelining of `depth`.
     Pipelined { inner: Box<SchedulerKind>, depth: usize },
 }
@@ -402,6 +454,38 @@ impl SchedulerKind {
             k: adaptive::DEFAULT_K,
             min_granules: adaptive::DEFAULT_MIN_GRANULES,
             alpha: adaptive::DEFAULT_ALPHA,
+            objective: EnergyObjective::Time,
+            power_cap: None,
+        }
+    }
+
+    /// Adaptive with the EDP-minimizing objective (`adaptive:obj=edp`).
+    pub fn adaptive_edp() -> Self {
+        match Self::adaptive() {
+            SchedulerKind::Adaptive { k, min_granules, alpha, .. } => SchedulerKind::Adaptive {
+                k,
+                min_granules,
+                alpha,
+                objective: EnergyObjective::Edp,
+                power_cap: None,
+            },
+            _ => unreachable!(),
+        }
+    }
+
+    /// Adaptive under a node power cap in watts (`adaptive:power=W`).
+    pub fn adaptive_power_capped(watts: f64) -> Self {
+        match Self::adaptive() {
+            SchedulerKind::Adaptive { k, min_granules, alpha, objective, .. } => {
+                SchedulerKind::Adaptive {
+                    k,
+                    min_granules,
+                    alpha,
+                    objective,
+                    power_cap: Some(watts),
+                }
+            }
+            _ => unreachable!(),
         }
     }
 
@@ -418,6 +502,15 @@ impl SchedulerKind {
         match self {
             SchedulerKind::Pipelined { inner, .. } => inner.base(),
             other => other,
+        }
+    }
+
+    /// The node power cap this spec requests in watts, if any
+    /// (`adaptive:power=W`), unwrapping pipelining.
+    pub fn power_cap(&self) -> Option<f64> {
+        match self.base() {
+            SchedulerKind::Adaptive { power_cap, .. } => *power_cap,
+            _ => None,
         }
     }
 
@@ -442,8 +535,14 @@ impl SchedulerKind {
             SchedulerKind::HGuided { k, min_granules, feedback } => {
                 Box::new(HGuided::with_feedback(*k, *min_granules, *feedback))
             }
-            SchedulerKind::Adaptive { k, min_granules, alpha } => {
-                Box::new(Adaptive::new(*k, *min_granules, *alpha))
+            SchedulerKind::Adaptive { k, min_granules, alpha, objective, power_cap } => {
+                Box::new(Adaptive::with_objective(
+                    *k,
+                    *min_granules,
+                    *alpha,
+                    *objective,
+                    *power_cap,
+                ))
             }
             SchedulerKind::Pipelined { inner, depth } => {
                 Box::new(Pipelined::new(inner.build(), *depth))
@@ -458,7 +557,16 @@ impl SchedulerKind {
             SchedulerKind::Dynamic { packages } => format!("Dynamic {packages}"),
             SchedulerKind::HGuided { feedback: true, .. } => "HGuided".into(),
             SchedulerKind::HGuided { feedback: false, .. } => "HGuided-static".into(),
-            SchedulerKind::Adaptive { .. } => "Adaptive".into(),
+            SchedulerKind::Adaptive { objective, power_cap, .. } => {
+                let mut s = String::from("Adaptive");
+                if *objective == EnergyObjective::Edp {
+                    s.push_str("-EDP");
+                }
+                if power_cap.is_some() {
+                    s.push_str("-cap");
+                }
+                s
+            }
             SchedulerKind::Pipelined { inner, .. } => format!("{}+pipe", inner.label()),
         }
     }
@@ -479,8 +587,15 @@ impl SchedulerKind {
                 }
                 s
             }
-            SchedulerKind::Adaptive { k, min_granules, alpha } => {
-                format!("adaptive:k={k},min={min_granules},alpha={alpha}")
+            SchedulerKind::Adaptive { k, min_granules, alpha, objective, power_cap } => {
+                let mut s = format!("adaptive:k={k},min={min_granules},alpha={alpha}");
+                if *objective == EnergyObjective::Edp {
+                    s.push_str(",obj=edp");
+                }
+                if let Some(w) = power_cap {
+                    s.push_str(&format!(",power={w}"));
+                }
+                s
             }
             SchedulerKind::Pipelined { inner, depth } => {
                 format!("{}+pipe{depth}", inner.spec())
@@ -491,9 +606,10 @@ impl SchedulerKind {
 
 /// Every valid CLI scheduler spec, for error messages.
 pub const VALID_SPECS: &str = "static, static-rev, dynamic[:N], \
-     hguided[:k=F,min=N,feedback=0|1], adaptive[:k=F,min=N,alpha=F] \
+     hguided[:k=F,min=N,feedback=0|1], \
+     adaptive[:k=F,min=N,alpha=F,obj=time|edp,power=W] \
      — each optionally with a +pipe[N] suffix (N >= 2), e.g. \
-     hguided+pipe, dynamic:150+pipe3, adaptive+pipe";
+     hguided+pipe, dynamic:150+pipe3, adaptive:obj=edp";
 
 /// Parse a CLI scheduler spec: `static`, `static-rev`, `dynamic:N`,
 /// `hguided[:k=…,min=…,feedback=0|1]`, `adaptive[:k=…,min=…,alpha=…]` —
@@ -580,6 +696,8 @@ pub fn parse_spec(s: &str) -> Result<SchedulerKind, String> {
             let mut k = adaptive::DEFAULT_K;
             let mut min = adaptive::DEFAULT_MIN_GRANULES;
             let mut alpha = adaptive::DEFAULT_ALPHA;
+            let mut objective = EnergyObjective::Time;
+            let mut power_cap = None;
             for part in tail.split(',').filter(|p| !p.is_empty()) {
                 let (key, val) = part
                     .split_once('=')
@@ -595,14 +713,26 @@ pub fn parse_spec(s: &str) -> Result<SchedulerKind, String> {
                             ));
                         }
                     }
+                    "obj" => {
+                        objective = match val {
+                            "time" => EnergyObjective::Time,
+                            "edp" => EnergyObjective::Edp,
+                            other => {
+                                return Err(format!(
+                                    "bad value '{other}' for 'obj' in '{s}' (want time or edp)"
+                                ))
+                            }
+                        }
+                    }
+                    "power" => power_cap = Some(parse_f64("power", val)?),
                     other => {
                         return Err(format!(
-                            "unknown adaptive knob '{other}' in '{s}' (valid: k, min, alpha)"
+                            "unknown adaptive knob '{other}' in '{s}' (valid: k, min, alpha, obj, power)"
                         ))
                     }
                 }
             }
-            Ok(SchedulerKind::Adaptive { k, min_granules: min, alpha })
+            Ok(SchedulerKind::Adaptive { k, min_granules: min, alpha, objective, power_cap })
         }
         other => Err(format!("unknown scheduler '{other}'; valid specs: {VALID_SPECS}")),
     }
@@ -625,6 +755,8 @@ mod tests {
         assert_eq!(SchedulerKind::hguided().label(), "HGuided");
         assert_eq!(SchedulerKind::hguided_static().label(), "HGuided-static");
         assert_eq!(SchedulerKind::adaptive().label(), "Adaptive");
+        assert_eq!(SchedulerKind::adaptive_edp().label(), "Adaptive-EDP");
+        assert_eq!(SchedulerKind::adaptive_power_capped(400.0).label(), "Adaptive-cap");
         assert_eq!(
             SchedulerKind::Static { props: None, reversed: true }.label(),
             "Static rev"
@@ -652,10 +784,26 @@ mod tests {
             Some(SchedulerKind::HGuided { feedback: false, .. })
         ));
         match parse_kind("adaptive:k=3,min=4,alpha=0.25") {
-            Some(SchedulerKind::Adaptive { k, min_granules, alpha }) => {
+            Some(SchedulerKind::Adaptive { k, min_granules, alpha, objective, power_cap }) => {
                 assert!((k - 3.0).abs() < 1e-9);
                 assert_eq!(min_granules, 4);
                 assert!((alpha - 0.25).abs() < 1e-9);
+                assert_eq!(objective, EnergyObjective::Time, "objective defaults to time");
+                assert_eq!(power_cap, None, "uncapped by default");
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_kind("adaptive:obj=edp") {
+            Some(SchedulerKind::Adaptive { objective, power_cap, .. }) => {
+                assert_eq!(objective, EnergyObjective::Edp);
+                assert_eq!(power_cap, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_kind("adaptive:power=400") {
+            Some(SchedulerKind::Adaptive { objective, power_cap, .. }) => {
+                assert_eq!(objective, EnergyObjective::Time);
+                assert_eq!(power_cap, Some(400.0));
             }
             other => panic!("{other:?}"),
         }
@@ -663,6 +811,9 @@ mod tests {
         assert!(parse_kind("hguided:bogus=1").is_none());
         assert!(parse_kind("adaptive:alpha=2").is_none(), "alpha > 1 rejected");
         assert!(parse_kind("adaptive:alpha=0").is_none(), "alpha 0 rejected");
+        assert!(parse_kind("adaptive:obj=joules").is_none(), "unknown objective rejected");
+        assert!(parse_kind("adaptive:power=0").is_none(), "zero cap rejected");
+        assert!(parse_kind("adaptive:power=nan").is_none(), "NaN cap rejected");
     }
 
     #[test]
@@ -719,7 +870,22 @@ mod tests {
             SchedulerKind::hguided_static(),
             SchedulerKind::HGuided { k: 3.5, min_granules: 4, feedback: true },
             SchedulerKind::adaptive(),
-            SchedulerKind::Adaptive { k: 1.5, min_granules: 8, alpha: 0.25 },
+            SchedulerKind::Adaptive {
+                k: 1.5,
+                min_granules: 8,
+                alpha: 0.25,
+                objective: EnergyObjective::Time,
+                power_cap: None,
+            },
+            SchedulerKind::adaptive_edp(),
+            SchedulerKind::adaptive_power_capped(400.0),
+            SchedulerKind::Adaptive {
+                k: 2.5,
+                min_granules: 2,
+                alpha: 0.5,
+                objective: EnergyObjective::Edp,
+                power_cap: Some(250.0),
+            },
             SchedulerKind::static_default().pipelined(2),
             SchedulerKind::dynamic(150).pipelined(3),
             SchedulerKind::hguided().pipelined(2),

@@ -37,10 +37,13 @@ pub fn proportional_split(total_granules: usize, props: &[f64]) -> Vec<(usize, u
     let mut counts: Vec<usize> = exact.iter().map(|e| e.floor() as usize).collect();
     let mut assigned: usize = counts.iter().sum();
     let mut order: Vec<usize> = (0..props.len()).collect();
+    // `total_cmp`, not `partial_cmp(..).unwrap()`: a NaN prop (poisoned
+    // rate upstream) must not panic the remainder ordering — under IEEE
+    // total order it simply sorts deterministically.
     order.sort_by(|&a, &b| {
         let ra = exact[a] - counts[a] as f64;
         let rb = exact[b] - counts[b] as f64;
-        rb.partial_cmp(&ra).unwrap()
+        rb.total_cmp(&ra)
     });
     let mut i = 0;
     while assigned < total_granules {
@@ -133,6 +136,22 @@ mod tests {
         let parts = proportional_split(10, &[0.0, 1.0]);
         assert_eq!(parts[0], (0, 0));
         assert_eq!(parts[1], (0, 10));
+    }
+
+    #[test]
+    fn proportional_survives_non_finite_share() {
+        // Regression: an infinite prop (a poisoned upstream rate) makes
+        // `p / sum * total` go NaN, and the largest-remainder sort used
+        // `partial_cmp(..).unwrap()` — instant panic. The cover contract
+        // must survive instead.
+        for props in [[f64::INFINITY, 1.0], [f64::INFINITY, f64::INFINITY]] {
+            let parts = proportional_split(10, &props);
+            assert_eq!(parts[0].0, 0);
+            assert_eq!(parts.last().unwrap().1, 10);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+        }
     }
 
     #[test]

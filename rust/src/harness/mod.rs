@@ -2,6 +2,7 @@
 
 pub mod balance;
 pub mod concurrent;
+pub mod energy;
 pub mod init;
 pub mod overhead;
 pub mod perf;

@@ -194,11 +194,15 @@ mod tests {
                         launches: 1,
                         h2d_bytes: 4,
                         d2h_bytes: 0,
+                        energy_j: 0.0,
                         requeued: false,
                     }],
                     xfer: Default::default(),
                     lease_wait: Default::default(),
                     cache_hit: None,
+                    busy_watts: 80.0,
+                    idle_watts: 8.0,
+                    refused: false,
                 })
                 .collect(),
             faults: Vec::new(),

@@ -43,6 +43,69 @@ pub fn chunk_series(report: &RunReport) -> Vec<(String, f64, usize)> {
             rows.push((d.name.clone(), p.start.as_secs_f64() * 1e3, p.items()));
         }
     }
-    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    // A trace with a NaN start (possible when a report is assembled from
+    // a poisoned clock) must not panic the sort — IEEE total order keeps
+    // it deterministic instead.
+    rows.sort_by(|a, b| a.1.total_cmp(&b.1));
     rows
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::introspector::{DeviceTrace, PackageTrace, TransferStats};
+    use crate::platform::DeviceKind;
+    use std::time::Duration;
+
+    #[test]
+    fn chunk_series_sort_survives_nan_key() {
+        // Regression: `chunk_series` sorted its start-time keys with
+        // `partial_cmp(..).unwrap()` and panicked on a NaN key (Duration
+        // itself can't hold NaN, but the f64 sort key can be poisoned by
+        // NaN-scaled arithmetic upstream). The sort must be total.
+        let mut rows: Vec<(String, f64, usize)> =
+            vec![("a".into(), 1.0, 8), ("b".into(), f64::NAN, 8), ("c".into(), 0.5, 8)];
+        rows.sort_by(|a, b| a.1.total_cmp(&b.1));
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].0, "c", "finite keys stay ordered");
+
+        // And the public entry point stays panic-free on real traces.
+        let d = DeviceTrace {
+            name: "d0".into(),
+            kind: DeviceKind::Cpu,
+            init_start: Duration::ZERO,
+            init_end: Duration::ZERO,
+            packages: vec![PackageTrace {
+                device: 0,
+                begin_item: 0,
+                end_item: 8,
+                start: Duration::from_millis(3),
+                end: Duration::from_millis(5),
+                h2d_start: Duration::from_millis(3),
+                h2d_end: Duration::from_millis(3),
+                exec_start: Duration::from_millis(3),
+                raw_exec: Duration::from_millis(1),
+                launches: 1,
+                h2d_bytes: 0,
+                d2h_bytes: 0,
+                energy_j: 0.1,
+                requeued: false,
+            }],
+            xfer: TransferStats::default(),
+            lease_wait: Duration::ZERO,
+            cache_hit: None,
+            busy_watts: 50.0,
+            idle_watts: 5.0,
+            refused: false,
+        };
+        let report = crate::coordinator::RunReport {
+            bench: "b".into(),
+            scheduler: "s".into(),
+            session: 0,
+            gws: 8,
+            wall: Duration::from_millis(5),
+            devices: vec![d],
+            faults: Vec::new(),
+        };
+        assert_eq!(super::chunk_series(&report).len(), 1);
+    }
 }

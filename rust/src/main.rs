@@ -4,7 +4,9 @@
 use anyhow::Result;
 
 use enginecl::coordinator::{scheduler, DeviceSpec, LeasePolicy};
-use enginecl::harness::{balance, concurrent, init, overhead, perf, qos, runs, service, traces};
+use enginecl::harness::{
+    balance, concurrent, energy, init, overhead, perf, qos, runs, service, traces,
+};
 use enginecl::platform::{FaultPlan, NodeConfig};
 use enginecl::runtime::ArtifactRegistry;
 use enginecl::util::cli::Args;
@@ -24,7 +26,8 @@ USAGE:
                          --scheduler hguided+pipe, adaptive+pipe or
                          dynamic:150+pipe3; hguided takes
                          k=F,min=N,feedback=0|1 knobs and adaptive
-                         k=F,min=N,alpha=F — bad specs are rejected
+                         k=F,min=N,alpha=F,obj=time|edp,power=W —
+                         bad specs are rejected
                          with the valid list, never silently defaulted;
                          --fault injects deterministic faults, e.g.
                          kill:dev1@pkg2, stall:dev0@pkg1:250ms,
@@ -54,6 +57,17 @@ USAGE:
                          --seed S), and with ECL_BENCH_GUARD=1 fails
                          if the hit-rate drops below 0.90. --quick
                          (or ECL_BENCH_QUICK=1) shrinks the soak.
+                        [--energy] runs the energy-aware scheduling
+                         sweep: 5 kernels x {time-optimal, EDP-optimal
+                         (adaptive:obj=edp), 400W power-capped
+                         (adaptive:power=400)} through the virtual-time
+                         drain with warm perf/energy models, writes
+                         BENCH_energy.json (joules, EDP, makespan
+                         deltas, cap violations; byte-identical for a
+                         fixed --seed S), and with ECL_BENCH_GUARD=1
+                         fails unless EDP-optimal beats time-optimal
+                         on EDP on >= 4 of 5 kernels and the cap is
+                         never exceeded. --quick shrinks the warm-up.
                         [--service] runs the ingest-storm soak:
                          [--requests N] seeded mixed-tenant requests
                          (default 1000) through the Service front-end
@@ -170,6 +184,9 @@ fn run(args: &Args) -> Result<()> {
     }
     if args.has_flag("service") {
         return service_cmd(args);
+    }
+    if args.has_flag("energy") {
+        return energy_cmd(args);
     }
     if let Some(raw) = args.get("concurrent") {
         let n: usize = raw
@@ -394,6 +411,56 @@ fn service_cmd(args: &Args) -> Result<()> {
     if std::env::var("ECL_BENCH_GUARD").map(|v| v == "1").unwrap_or(false) {
         bench.guard()?;
         println!("guard passed: coalescing, cache reuse and fairness hold their floors");
+    }
+    Ok(())
+}
+
+/// `run --energy`: the PR-9 energy-aware scheduling sweep — kernels ×
+/// {time-optimal, EDP-optimal, power-capped} through the virtual-time
+/// drain, the `BENCH_energy.json` artifact, and the
+/// `ECL_BENCH_GUARD=1` EDP-superiority / cap-compliance guard.
+fn energy_cmd(args: &Args) -> Result<()> {
+    let node = node_from(args);
+    let reg = ArtifactRegistry::discover()?;
+    let cfg = energy::EnergyBenchConfig {
+        seed: args.get_usize("seed", 7) as u64,
+        quick: args.has_flag("quick") || runs::quick_mode(),
+        ..energy::EnergyBenchConfig::default()
+    };
+    let bench = energy::run_energy(&reg, &node, &cfg)?;
+    println!(
+        "energy sweep: node={} seed={} quick={} cap={:.0}W",
+        bench.node, bench.seed, bench.quick, bench.power_cap_w
+    );
+    println!(
+        "{:<11} {:<22} {:>11} {:>11} {:>11} {:>9} {:>6} {:>4}",
+        "kernel", "spec", "makespan(s)", "energy(J)", "EDP(J*s)", "avg(W)", "peak", "dev"
+    );
+    for c in &bench.cells {
+        println!(
+            "{:<11} {:<22} {:>11.4} {:>11.1} {:>11.1} {:>9.1} {:>6.0} {:>4}",
+            c.kernel,
+            c.spec,
+            c.makespan_s,
+            c.total_energy_j(),
+            c.edp(),
+            c.avg_power_w(),
+            c.peak_power_w,
+            c.active_devices
+        );
+    }
+    println!(
+        "\nEDP wins (edp vs time objective): {}/5; cap violations: {}",
+        bench.edp_wins(),
+        bench.cap_violations()
+    );
+    let json_path =
+        std::env::var("ECL_BENCH_JSON").unwrap_or_else(|_| "BENCH_energy.json".into());
+    std::fs::write(&json_path, bench.json())?;
+    println!("energy artifact written to {json_path}");
+    if std::env::var("ECL_BENCH_GUARD").map(|v| v == "1").unwrap_or(false) {
+        bench.guard()?;
+        println!("guard passed: EDP objective wins on >= 4/5 kernels, power cap clean");
     }
     Ok(())
 }

@@ -17,7 +17,7 @@ pub mod simclock;
 
 pub use artifact_cache::{ArtifactCache, ArtifactEntry};
 pub use fault::{FaultInjector, FaultKind, FaultPlan, FaultSpec, FaultTrigger};
-pub use perfmodel::{ObservationRecord, PerfEstimate, PerfModelStore};
+pub use perfmodel::{EnergyEstimate, ObservationRecord, PerfEstimate, PerfModelStore};
 pub use profile::{DeviceKind, DeviceProfile, NodeConfig};
 pub use qos::{DeviceLoad, MakespanEstimate, MakespanPredictor};
 pub use simclock::TimeScaler;

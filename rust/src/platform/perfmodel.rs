@@ -86,9 +86,22 @@ pub struct PerfEstimate {
     pub samples: u64,
 }
 
+/// Current energy estimate for one (kernel, device) pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyEstimate {
+    /// EWMA joules per granule.
+    pub epg: f64,
+    /// Observations folded in so far.
+    pub samples: u64,
+}
+
 #[derive(Debug, Default)]
 struct Inner {
     estimates: BTreeMap<(String, String), PerfEstimate>,
+    /// Joules/granule estimates, keyed like `estimates` — the energy
+    /// model rides the same store (same keys, same session ingest) so
+    /// a warm scheduler gets rate *and* cost-per-granule together.
+    energy: BTreeMap<(String, String), EnergyEstimate>,
     journal: VecDeque<ObservationRecord>,
     /// Journal records evicted by the ring cap.
     dropped: u64,
@@ -208,6 +221,82 @@ impl PerfModelStore {
         }
     }
 
+    /// The current joules/granule estimate for `kernel` on `device`,
+    /// if any session has recorded energy for the pair.
+    pub fn energy_estimate(&self, kernel: &str, device: &str) -> Option<f64> {
+        self.lock()
+            .energy
+            .get(&(kernel.to_string(), device.to_string()))
+            .map(|e| e.epg)
+    }
+
+    /// Full energy estimate record (joules/granule + sample count).
+    pub fn energy_estimate_record(&self, kernel: &str, device: &str) -> Option<EnergyEstimate> {
+        self.lock()
+            .energy
+            .get(&(kernel.to_string(), device.to_string()))
+            .copied()
+    }
+
+    /// Fold one energy observation into the (locked) store: `joules`
+    /// consumed computing `granules` granules. Same hygiene as `fold` —
+    /// degenerate samples (empty packages, zero/negative/NaN joules, a
+    /// non-finite per-granule quotient) are dropped.
+    fn fold_energy(
+        inner: &mut Inner,
+        alpha: f64,
+        kernel: &str,
+        device: &str,
+        granules: f64,
+        joules: f64,
+    ) {
+        if !granules.is_finite() || granules <= 0.0 || !joules.is_finite() || joules <= 0.0 {
+            return;
+        }
+        let sample = joules / granules;
+        if !sample.is_finite() || sample <= 0.0 {
+            return;
+        }
+        let e = inner
+            .energy
+            .entry((kernel.to_string(), device.to_string()))
+            .or_insert(EnergyEstimate { epg: 0.0, samples: 0 });
+        e.epg = if e.samples == 0 {
+            sample
+        } else {
+            alpha * sample + (1.0 - alpha) * e.epg
+        };
+        e.samples += 1;
+    }
+
+    /// Fold one completed package's energy in.
+    pub fn record_energy(
+        &self,
+        _session: u64,
+        kernel: &str,
+        device: &str,
+        granules: f64,
+        joules: f64,
+    ) {
+        let mut inner = self.lock();
+        Self::fold_energy(&mut inner, self.alpha, kernel, device, granules, joules);
+    }
+
+    /// Fold a whole session's energy ledger in under one lock hold —
+    /// `(device, granules, joules)` per completed package, the energy
+    /// counterpart of [`record_session`](Self::record_session).
+    pub fn record_session_energy(
+        &self,
+        _session: u64,
+        kernel: &str,
+        ledger: &[(&str, f64, f64)],
+    ) {
+        let mut inner = self.lock();
+        for &(device, granules, joules) in ledger {
+            Self::fold_energy(&mut inner, self.alpha, kernel, device, granules, joules);
+        }
+    }
+
     /// Inject a raw estimate, bypassing `fold`'s sample hygiene — a
     /// diagnostics/test hook for reproducing *poisoned* store states
     /// (e.g. an Inf rate restored from a corrupt journal). Consumers
@@ -252,6 +341,7 @@ impl PerfModelStore {
     pub fn clear(&self) {
         let mut inner = self.lock();
         inner.estimates.clear();
+        inner.energy.clear();
         inner.journal.clear();
         inner.dropped = 0;
     }
@@ -348,6 +438,34 @@ mod tests {
         assert_eq!(s.total_samples(), JOURNAL_CAP as u64 + extra);
         s.clear();
         assert_eq!(s.journal_dropped(), 0);
+    }
+
+    #[test]
+    fn energy_ewma_and_hygiene() {
+        let s = PerfModelStore::with_alpha(0.25);
+        assert_eq!(s.energy_estimate("b", "gpu"), None);
+        s.record_energy(0, "b", "gpu", 10.0, 50.0);
+        assert!((s.energy_estimate("b", "gpu").unwrap() - 5.0).abs() < 1e-9);
+        s.record_energy(0, "b", "gpu", 10.0, 10.0);
+        // 0.25 * 1 + 0.75 * 5 = 4.
+        let e = s.energy_estimate_record("b", "gpu").unwrap();
+        assert!((e.epg - 4.0).abs() < 1e-9);
+        assert_eq!(e.samples, 2);
+        // Degenerate samples are dropped, never folded.
+        s.record_energy(0, "b", "gpu", 0.0, 50.0);
+        s.record_energy(0, "b", "gpu", 10.0, f64::NAN);
+        s.record_energy(0, "b", "gpu", 10.0, -1.0);
+        s.record_energy(0, "b", "gpu", f64::INFINITY, 10.0);
+        assert_eq!(s.energy_estimate_record("b", "gpu").unwrap().samples, 2);
+        // Session ingest matches per-package ingest, and clear() wipes.
+        let t = PerfModelStore::with_alpha(0.25);
+        t.record_session_energy(0, "b", &[("gpu", 10.0, 50.0), ("gpu", 10.0, 10.0)]);
+        assert_eq!(
+            t.energy_estimate_record("b", "gpu"),
+            s.energy_estimate_record("b", "gpu")
+        );
+        s.clear();
+        assert_eq!(s.energy_estimate("b", "gpu"), None);
     }
 
     #[test]

@@ -46,10 +46,24 @@ pub struct DeviceProfile {
     pub package_overhead: Duration,
     /// Relative jitter applied to stretched durations (driver noise).
     pub jitter: f64,
+    /// Power draw while a package occupies the device (H2D + compute),
+    /// in watts. Always finite and positive.
+    pub busy_watts: f64,
+    /// Power draw while the device sits idle in the node (gaps, lease
+    /// waits), in watts. Always finite, positive and <= `busy_watts`.
+    pub idle_watts: f64,
 }
 
 impl DeviceProfile {
     pub fn new(name: &str, kind: DeviceKind, relative_power: f64) -> Self {
+        // Kind-level defaults (nameplate-ish TDP / idle draw); the node
+        // configs override these with per-device figures.
+        let (busy_watts, idle_watts) = match kind {
+            DeviceKind::Cpu => (80.0, 8.0),
+            DeviceKind::Gpu => (150.0, 10.0),
+            DeviceKind::IntegratedGpu => (35.0, 5.0),
+            DeviceKind::Accelerator => (220.0, 15.0),
+        };
         Self {
             name: name.to_string(),
             kind,
@@ -58,6 +72,8 @@ impl DeviceProfile {
             init_contention: Duration::ZERO,
             package_overhead: Duration::from_micros(600),
             jitter: 0.0,
+            busy_watts,
+            idle_watts,
         }
     }
 
@@ -74,6 +90,24 @@ impl DeviceProfile {
 
     pub fn with_jitter(mut self, j: f64) -> Self {
         self.jitter = j;
+        self
+    }
+
+    /// Set the power model. Panics on non-finite or non-positive watts
+    /// (and on idle > busy): a NaN here would silently poison every
+    /// joule integral downstream, so it is rejected at construction.
+    pub fn with_watts(mut self, busy: f64, idle: f64) -> Self {
+        assert!(
+            busy.is_finite() && busy > 0.0,
+            "busy_watts must be finite and positive, got {busy}"
+        );
+        assert!(
+            idle.is_finite() && idle > 0.0,
+            "idle_watts must be finite and positive, got {idle}"
+        );
+        assert!(idle <= busy, "idle_watts ({idle}) must not exceed busy_watts ({busy})");
+        self.busy_watts = busy;
+        self.idle_watts = idle;
         self
     }
 }
@@ -104,15 +138,23 @@ impl NodeConfig {
                 DeviceProfile::new("xeon-e5-2620x2", DeviceKind::Cpu, 0.30)
                     .with_init(Duration::from_millis(8), Duration::ZERO)
                     .with_package_overhead(Duration::from_micros(350))
-                    .with_jitter(0.01),
+                    .with_jitter(0.01)
+                    // 2x E5-2620 TDP 95W each, but one socket mostly
+                    // carries the OpenCL device; package idle ~10W.
+                    .with_watts(95.0, 10.0),
                 DeviceProfile::new("tesla-k20m", DeviceKind::Gpu, 1.0)
                     .with_init(Duration::from_millis(20), Duration::ZERO)
                     .with_package_overhead(Duration::from_micros(800))
-                    .with_jitter(0.01),
+                    .with_jitter(0.01)
+                    // K20m board power 225W TDP, ~12W idle.
+                    .with_watts(225.0, 12.0),
                 DeviceProfile::new("xeon-phi-7120p", DeviceKind::Accelerator, 0.42)
                     .with_init(Duration::from_millis(110), Duration::from_millis(55))
                     .with_package_overhead(Duration::from_micros(1500))
-                    .with_jitter(0.05),
+                    .with_jitter(0.05)
+                    // Phi 7120P TDP 300W — the watt-hungriest device per
+                    // unit of throughput on the node.
+                    .with_watts(300.0, 15.0),
             ],
         }
     }
@@ -126,15 +168,22 @@ impl NodeConfig {
                 DeviceProfile::new("a10-7850k", DeviceKind::Cpu, 0.12)
                     .with_init(Duration::from_millis(6), Duration::ZERO)
                     .with_package_overhead(Duration::from_micros(400))
-                    .with_jitter(0.02),
+                    .with_jitter(0.02)
+                    // A10-7850K 95W APU TDP, CPU-side share ~65W.
+                    .with_watts(65.0, 8.0),
                 DeviceProfile::new("r7-igpu", DeviceKind::IntegratedGpu, 0.45)
                     .with_init(Duration::from_millis(10), Duration::ZERO)
                     .with_package_overhead(Duration::from_micros(500))
-                    .with_jitter(0.01),
+                    .with_jitter(0.01)
+                    // The iGPU side of the same package: cheap watts per
+                    // granule — the green device of the node.
+                    .with_watts(35.0, 5.0),
                 DeviceProfile::new("gtx-950", DeviceKind::Gpu, 1.0)
                     .with_init(Duration::from_millis(16), Duration::ZERO)
                     .with_package_overhead(Duration::from_micros(700))
-                    .with_jitter(0.01),
+                    .with_jitter(0.01)
+                    // GTX 950 board power 90W, ~10W idle.
+                    .with_watts(90.0, 10.0),
             ],
         }
     }
@@ -148,13 +197,21 @@ impl NodeConfig {
     }
 
     /// Index of the fastest device (the speedup baseline, the GPU).
+    /// `total_cmp` keeps a NaN-poisoned power from panicking the
+    /// selection: NaN sorts above every finite power under IEEE total
+    /// order, so a corrupt profile is picked, not crashed on.
     pub fn fastest(&self) -> usize {
         self.devices
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.relative_power.partial_cmp(&b.1.relative_power).unwrap())
+            .max_by(|a, b| a.1.relative_power.total_cmp(&b.1.relative_power))
             .map(|(i, _)| i)
             .unwrap_or(0)
+    }
+
+    /// First device of `kind`, if the node has one.
+    pub fn first_of_kind(&self, kind: DeviceKind) -> Option<&DeviceProfile> {
+        self.devices.iter().find(|d| d.kind == kind)
     }
 
     /// Devices matching a predicate, as (index, profile).
@@ -196,7 +253,9 @@ mod tests {
     #[test]
     fn phi_has_init_pathology() {
         let n = NodeConfig::batel();
-        let phi = n.devices.iter().find(|d| d.kind == DeviceKind::Accelerator).unwrap();
+        let phi = n
+            .first_of_kind(DeviceKind::Accelerator)
+            .expect("batel is defined with a Xeon Phi accelerator");
         // Paper: 1.8s solo / +0.9s contended, scaled 1/4 (see batel docs).
         assert!(phi.init >= 5 * n.devices[n.fastest()].init);
         assert!(phi.init_contention >= phi.init / 2);
@@ -215,5 +274,48 @@ mod tests {
         let accs = n.select(&[DeviceKind::Accelerator]);
         assert_eq!(accs.len(), 1);
         assert_eq!(accs[0].1.name, "xeon-phi-7120p");
+    }
+
+    #[test]
+    fn fastest_survives_nan_power() {
+        // Regression: `fastest()` used `partial_cmp(..).unwrap()` and
+        // panicked the moment any profile carried a NaN power.
+        let mut n = NodeConfig::batel();
+        n.devices[0].relative_power = f64::NAN;
+        let _ = n.fastest(); // must not panic
+        n.devices.iter_mut().for_each(|d| d.relative_power = f64::NAN);
+        let _ = n.fastest(); // all-NaN must not panic either
+    }
+
+    #[test]
+    fn missing_kind_lookup_is_none_not_panic() {
+        // Regression: the Accelerator lookup was an unguarded `.unwrap()`
+        // — a node without a Phi panicked instead of reporting absence.
+        let n = NodeConfig::remo();
+        assert!(n.first_of_kind(DeviceKind::Accelerator).is_none());
+        assert!(n.first_of_kind(DeviceKind::IntegratedGpu).is_some());
+    }
+
+    #[test]
+    fn watts_are_finite_positive_and_ordered() {
+        for node in [NodeConfig::batel(), NodeConfig::remo()] {
+            for d in &node.devices {
+                assert!(d.busy_watts.is_finite() && d.busy_watts > 0.0, "{}", d.name);
+                assert!(d.idle_watts.is_finite() && d.idle_watts > 0.0, "{}", d.name);
+                assert!(d.idle_watts <= d.busy_watts, "{}", d.name);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "busy_watts must be finite and positive")]
+    fn nan_watts_rejected_at_construction() {
+        let _ = DeviceProfile::new("bad", DeviceKind::Cpu, 0.5).with_watts(f64::NAN, 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must not exceed busy_watts")]
+    fn idle_above_busy_rejected() {
+        let _ = DeviceProfile::new("bad", DeviceKind::Cpu, 0.5).with_watts(10.0, 20.0);
     }
 }

@@ -1,0 +1,144 @@
+//! PR-9 energy acceptance suite: exactly-once joule accounting under
+//! faults, deterministic `BENCH_energy.json` emission, the warm-model
+//! EDP guard, and the end-to-end energy-objective engine path
+//! (EDP-refused devices surface as deliberate non-participants, not
+//! imbalance).
+
+use enginecl::coordinator::SchedulerKind;
+use enginecl::harness::energy::{run_energy, EnergyBenchConfig, BENCH_POWER_CAP_W};
+use enginecl::platform::fault::FaultPlan;
+use enginecl::platform::NodeConfig;
+use enginecl::runtime::ArtifactRegistry;
+use enginecl::testing::{assert_exactly_once, chaos_engine};
+
+fn registry() -> ArtifactRegistry {
+    ArtifactRegistry::discover().expect("artifact registry (synthetic fallback)")
+}
+
+/// Every traced package's joules must equal its device's busy watts
+/// integrated over the occupancy window, and device/total accessors
+/// must close over busy + idle.
+fn assert_energy_consistent(report: &enginecl::coordinator::RunReport) {
+    let wall = report.wall.as_secs_f64();
+    let mut total = 0.0f64;
+    for (i, d) in report.devices.iter().enumerate() {
+        assert!(d.busy_watts > 0.0, "{}: profile watts must be plumbed", d.name);
+        assert!(d.idle_watts > 0.0, "{}: idle watts must be plumbed", d.name);
+        let mut busy_secs = 0.0f64;
+        let mut busy_joules = 0.0f64;
+        for p in &d.packages {
+            let span = p.end.saturating_sub(p.start).as_secs_f64();
+            assert!(
+                (p.energy_j - d.busy_watts * span).abs() <= 1e-9 * d.busy_watts.max(1.0),
+                "{} package {}..{}: {} J != {} W x {} s",
+                d.name,
+                p.begin_item,
+                p.end_item,
+                p.energy_j,
+                d.busy_watts,
+                span
+            );
+            busy_secs += span;
+            busy_joules += p.energy_j;
+        }
+        let expect = busy_joules + d.idle_watts * (wall - busy_secs).max(0.0);
+        let got = report.device_energy_j(i);
+        assert!(
+            (got - expect).abs() <= 1e-6 * expect.max(1.0),
+            "{}: device energy {got} J != busy {busy_joules} + idle over slack",
+            d.name
+        );
+        total += got;
+    }
+    let t = report.total_energy_j();
+    assert!((t - total).abs() <= 1e-6 * total.max(1.0), "total energy must sum devices");
+    assert!(t.is_finite() && t > 0.0);
+    let shares = report.energy_shares();
+    assert_eq!(shares.len(), report.devices.len());
+    assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9, "shares normalize");
+    assert!((report.edp() - t * wall).abs() <= 1e-6 * (t * wall).max(1.0));
+}
+
+/// Satellite 4: a recovered `kill:dev1@pkg2` run charges each
+/// granule's joules exactly once — the dead device's unfinished
+/// package never reaches a trace, the requeued replacement is billed
+/// on its executing survivor, and the package ranges (the billing
+/// keys) tile `[0, gws)` exactly.
+#[test]
+fn recovered_run_charges_joules_exactly_once() {
+    let reg = registry();
+    let plan = FaultPlan::parse("kill:dev1@pkg2").expect("valid fault spec");
+    let mut e = chaos_engine(&reg, "binomial", 3, SchedulerKind::dynamic(4), Some(plan));
+    e.run().expect("killed run must recover");
+    let report = e.report().unwrap().clone();
+    assert_eq!(report.faults.len(), 1, "the kill must fire");
+    assert!(report.recovered());
+    assert!(report.requeued_packages() >= 1, "reclaimed work surfaces as requeued packages");
+    assert_exactly_once(&report);
+    assert_energy_consistent(&report);
+}
+
+/// A fault-free run satisfies the same energy closure (the invariant
+/// is not a recovery special case).
+#[test]
+fn fault_free_run_energy_is_consistent() {
+    let reg = registry();
+    let mut e = chaos_engine(&reg, "gaussian", 3, SchedulerKind::hguided(), None);
+    e.run().expect("fault-free run");
+    let report = e.report().unwrap().clone();
+    assert_exactly_once(&report);
+    assert_energy_consistent(&report);
+}
+
+/// End-to-end `adaptive:obj=edp` on batel: the Phi is EDP-inefficient
+/// (300 W busy for 0.42 relative rate), so the scheduler refuses it
+/// from the start; the engine must mark it `refused`, give it zero
+/// packages, and exclude it from the balance metric instead of
+/// reading deliberate shedding as imbalance.
+#[test]
+fn edp_objective_engine_run_sheds_and_marks_the_phi() {
+    let reg = registry();
+    let mut e = chaos_engine(&reg, "mandelbrot", 3, SchedulerKind::adaptive_edp(), None);
+    e.run().expect("EDP-objective run");
+    let report = e.report().unwrap().clone();
+    assert_exactly_once(&report);
+    assert_energy_consistent(&report);
+    let phi = &report.devices[2];
+    assert_eq!(phi.items(), 0, "the Phi must be EDP-refused on batel");
+    assert!(phi.refused, "shed device must carry the refused mark");
+    assert!(report.devices[0].items() > 0 && report.devices[1].items() > 0);
+    // Deliberate shedding is not imbalance: the metric spans only the
+    // two participants.
+    assert!(
+        report.balance_efficiency() > 0.0,
+        "refused devices must not zero the balance metric"
+    );
+}
+
+/// Satellite 4 (determinism half): same-seed sweeps are byte-identical
+/// on the JSON artifact, across quick and full modes.
+#[test]
+fn same_seed_energy_bench_replays_byte_identical() {
+    let reg = ArtifactRegistry::synthetic();
+    let node = NodeConfig::batel();
+    for quick in [false, true] {
+        let cfg = EnergyBenchConfig { seed: 7, quick, ..Default::default() };
+        let a = run_energy(&reg, &node, &cfg).unwrap().json();
+        let b = run_energy(&reg, &node, &cfg).unwrap().json();
+        assert_eq!(a, b, "BENCH_energy.json must be a pure function of the seed (quick={quick})");
+    }
+}
+
+/// The CI reference point: seed 7 clears the guard (EDP superiority on
+/// >= 4/5 kernels, a clean power-cap column).
+#[test]
+fn seed_seven_clears_the_energy_guard() {
+    let reg = ArtifactRegistry::synthetic();
+    let node = NodeConfig::batel();
+    let cfg = EnergyBenchConfig { seed: 7, quick: false, ..Default::default() };
+    let bench = run_energy(&reg, &node, &cfg).unwrap();
+    bench.guard().unwrap_or_else(|e| panic!("guard failed:\n{e}\n{}", bench.json()));
+    for c in bench.cells.iter().filter(|c| c.spec == "adaptive:power=400") {
+        assert!(c.peak_power_w <= BENCH_POWER_CAP_W, "{}: {:.1} W", c.kernel, c.peak_power_w);
+    }
+}

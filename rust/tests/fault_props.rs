@@ -14,7 +14,7 @@
 use std::collections::VecDeque;
 use std::time::Duration;
 
-use enginecl::coordinator::scheduler::{SchedDevice, SchedulerKind};
+use enginecl::coordinator::scheduler::{EnergyObjective, SchedDevice, SchedulerKind};
 use enginecl::coordinator::work::{split_range, Range};
 use enginecl::coordinator::{EclError, Engine};
 use enginecl::platform::fault::{FaultKind, FaultPlan, FaultTrigger};
@@ -500,6 +500,8 @@ fn schedulers_cover_exactly_even_after_requeue() {
                 k: 1.0 + rng.next_f64() * 3.0,
                 min_granules: rng.range(1, 4),
                 alpha: 0.5,
+                objective: EnergyObjective::Time,
+                power_cap: None,
             },
             _ => SchedulerKind::HGuided {
                 k: 1.0 + rng.next_f64() * 3.0,
