@@ -81,6 +81,22 @@
 //! clean, error, panic or silent vanish — frees the device for the
 //! other sessions.
 //!
+//! # Work stealing
+//!
+//! When a `+steal` policy is active the master may revoke a dry-spell
+//! victim's *assigned-but-unstarted* backlog: a [`ToWorker::Steal`]
+//! asks this worker to yield up to `max_items` from the **back** of its
+//! local queue (deepest assignments first — the work it would start
+//! last). The worker never yields its in-flight package or the staged
+//! prefetch (their H2D transfers are already paid); if the budget ends
+//! inside a queued range the range is split at a granule boundary and
+//! only the unstarted suffix leaves. The worker always acks with a
+//! [`FromWorker::Yielded`] — possibly empty — so the master can retire
+//! the outstanding-steal marker; because the ack is sent from the same
+//! thread as `Done`/`Failed`, channel order guarantees the master sees
+//! the yield before any later completion or death of this worker (the
+//! exactly-once argument under steal × fault races).
+//!
 //! # Fault injection and failure reporting
 //!
 //! Each worker polls its [`FaultInjector`] once per package boundary
@@ -168,6 +184,9 @@ pub(crate) struct AssignedRange {
     /// `range` is recovered work reclaimed from a dead device (marks
     /// the package's trace so recovery is visible in the introspector).
     pub requeued: bool,
+    /// `range` was stolen from another device's unstarted backlog
+    /// (marks the package's trace so migrations are countable).
+    pub stolen: bool,
 }
 
 /// One master refill: every range the master decided for this device in
@@ -184,7 +203,7 @@ pub(crate) struct AssignBatch {
 impl AssignBatch {
     pub fn new() -> Self {
         Self {
-            ranges: [AssignedRange { range: Range::new(0, 0), requeued: false };
+            ranges: [AssignedRange { range: Range::new(0, 0), requeued: false, stolen: false };
                 MAX_PIPELINE_DEPTH],
             len: 0,
         }
@@ -192,9 +211,9 @@ impl AssignBatch {
 
     /// Append a decided range. The master's refill loop is bounded by
     /// the pipeline depth, so this can never overflow the inline array.
-    pub fn push(&mut self, range: Range, requeued: bool) {
+    pub fn push(&mut self, range: Range, requeued: bool, stolen: bool) {
         debug_assert!(self.len < MAX_PIPELINE_DEPTH, "refill exceeded pipeline depth");
-        self.ranges[self.len] = AssignedRange { range, requeued };
+        self.ranges[self.len] = AssignedRange { range, requeued, stolen };
         self.len += 1;
     }
 
@@ -226,6 +245,11 @@ pub(crate) enum ToWorker {
     /// A batched refill of one or more assigned ranges (decision order
     /// preserved; the worker enqueues them front to back).
     Assign(AssignBatch),
+    /// Yield up to `max_items` assigned-but-unstarted work-items from
+    /// the back of the local queue (splitting the cut entry at a
+    /// `granule` boundary); always ack with [`FromWorker::Yielded`].
+    /// The in-flight package and the staged prefetch are never yielded.
+    Steal { max_items: usize, granule: usize },
     /// No more work will be assigned; drain the local queue and exit.
     Finish,
 }
@@ -258,6 +282,13 @@ pub(crate) enum FromWorker {
     /// releases the staging slot first, then books the completion —
     /// the exact event order the two separate messages produced.
     Done { dev: usize, timing: PackageTiming, prefetched: bool },
+    /// Ack of a [`ToWorker::Steal`]: the ranges this worker removed
+    /// from its local queue (possibly none — the backlog may have
+    /// drained between the master's decision and the worker absorbing
+    /// the message). Deepest-first: `ranges[0]` is the assignment the
+    /// worker would have started last. Sent from the worker thread, so
+    /// it is ordered before any later `Done`/`Failed` on this channel.
+    Yielded { dev: usize, ranges: Vec<Range> },
     /// Worker exited. Results are already in the output arena (written
     /// in place, package by package); only the introspection traces,
     /// the per-run observation ledger (for the performance-model
@@ -407,13 +438,53 @@ pub(crate) fn spawn_worker(
 }
 
 /// Fold one master message into the worker's local state: a batch's
-/// ranges enter the queue in decision order, `Finish` marks the drain.
-fn absorb(msg: ToWorker, queue: &mut VecDeque<(Range, bool)>, finishing: &mut bool) {
+/// ranges enter the queue in decision order, `Steal` truncates the
+/// queue from the back and acks with `Yielded`, `Finish` marks the
+/// drain.
+fn absorb(
+    msg: ToWorker,
+    queue: &mut VecDeque<AssignedRange>,
+    finishing: &mut bool,
+    to_master: &Sender<FromWorker>,
+    dev: usize,
+) {
     match msg {
         ToWorker::Assign(batch) => {
             for a in batch.iter() {
-                queue.push_back((a.range, a.requeued));
+                queue.push_back(*a);
             }
+        }
+        ToWorker::Steal { max_items, granule } => {
+            let granule = granule.max(1);
+            let mut yielded: Vec<Range> = Vec::new();
+            let mut budget = max_items;
+            while budget > 0 {
+                let Some(back) = queue.back_mut() else { break };
+                let len = back.range.len();
+                if len <= budget {
+                    // Whole entry leaves the queue.
+                    yielded.push(back.range);
+                    budget -= len;
+                    queue.pop_back();
+                } else {
+                    // Budget ends inside this entry: keep the front at
+                    // a granule-aligned cut (rounding the kept part
+                    // *up*, so the yielded suffix never exceeds the
+                    // budget) and yield the unstarted remainder. A cut
+                    // past the end means the whole entry stays.
+                    let keep_items = len - budget;
+                    let keep_granules = keep_items.div_ceil(granule);
+                    let cut = back.range.begin + keep_granules * granule;
+                    if cut < back.range.end {
+                        yielded.push(Range::new(cut, back.range.end));
+                        back.range = Range::new(back.range.begin, cut);
+                    }
+                    break;
+                }
+            }
+            // Always ack — an empty yield still retires the master's
+            // outstanding-steal marker for this device.
+            to_master.send(FromWorker::Yielded { dev, ranges: yielded }).ok();
         }
         ToWorker::Finish => *finishing = true,
     }
@@ -423,6 +494,7 @@ fn absorb(msg: ToWorker, queue: &mut VecDeque<(Range, bool)>, finishing: &mut bo
 struct Prefetched {
     range: Range,
     requeued: bool,
+    stolen: bool,
     staged: StagedPackage,
     /// Epoch offsets of the staging span.
     h2d_start: Duration,
@@ -437,14 +509,21 @@ struct Prefetched {
 fn stage_package(
     exec: &mut ChunkExecutor,
     epoch: Instant,
-    range: Range,
-    requeued: bool,
+    assigned: AssignedRange,
 ) -> anyhow::Result<Prefetched> {
     let staged_at = Instant::now();
     let h2d_start = epoch.elapsed();
-    let staged = exec.stage(range.begin, range.end)?;
+    let staged = exec.stage(assigned.range.begin, assigned.range.end)?;
     let h2d_end = epoch.elapsed();
-    Ok(Prefetched { range, requeued, staged, h2d_start, h2d_end, staged_at })
+    Ok(Prefetched {
+        range: assigned.range,
+        requeued: assigned.requeued,
+        stolen: assigned.stolen,
+        staged,
+        h2d_start,
+        h2d_end,
+        staged_at,
+    })
 }
 
 fn worker_loop(
@@ -504,7 +583,7 @@ fn worker_loop(
 
     let init_end = epoch.elapsed();
     let mut scaler = TimeScaler::new(&ctx.profile, ctx.seed);
-    let mut queue: VecDeque<(Range, bool)> = VecDeque::new();
+    let mut queue: VecDeque<AssignedRange> = VecDeque::new();
     let mut staged: Option<Prefetched> = None;
     let mut finishing = false;
     // Packages started on this device (the fault triggers' ordinal).
@@ -517,7 +596,7 @@ fn worker_loop(
         // Absorb any pending assignments without blocking.
         loop {
             match from_master.try_recv() {
-                Ok(msg) => absorb(msg, &mut queue, &mut finishing),
+                Ok(msg) => absorb(msg, &mut queue, &mut finishing, to_master, dev),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     finishing = true;
@@ -533,7 +612,7 @@ fn worker_loop(
             }
             match from_master.recv() {
                 Ok(msg) => {
-                    absorb(msg, &mut queue, &mut finishing);
+                    absorb(msg, &mut queue, &mut finishing, to_master, dev);
                     continue;
                 }
                 Err(_) => break,
@@ -556,8 +635,8 @@ fn worker_loop(
         let current = match staged.take() {
             Some(p) => p,
             None => {
-                let (range, requeued) = queue.pop_front().expect("checked non-empty");
-                let p = stage_package(&mut exec, epoch, range, requeued)?;
+                let assigned = queue.pop_front().expect("checked non-empty");
+                let p = stage_package(&mut exec, epoch, assigned)?;
                 if pipelined {
                     to_master.send(FromWorker::Uploaded { dev }).ok();
                 }
@@ -626,8 +705,8 @@ fn worker_loop(
         let mut overlapped_h2d = Duration::ZERO;
         let mut prefetched = false;
         if pipelined {
-            if let Some((range, requeued)) = queue.pop_front() {
-                let p = stage_package(&mut exec, epoch, range, requeued)?;
+            if let Some(assigned) = queue.pop_front() {
+                let p = stage_package(&mut exec, epoch, assigned)?;
                 overlapped_h2d = p.staged.h2d();
                 staged = Some(p);
                 prefetched = true;
@@ -717,6 +796,7 @@ fn worker_loop(
                 // package holds it. Idle draw is billed at report level.
                 energy_j: ctx.profile.busy_watts * end.saturating_sub(start).as_secs_f64(),
                 requeued: current.requeued,
+                stolen: current.stolen,
             });
         }
         if !pipelined {
@@ -748,5 +828,98 @@ mod tests {
         assert!(d.kernel.is_none());
         let d = DeviceSpec::with_kernel(1, "nbody.gpu");
         assert_eq!(d.kernel.as_deref(), Some("nbody.gpu"));
+    }
+
+    // ---- absorb / steal truncation ----------------------------------
+
+    fn queued(ranges: &[(usize, usize)]) -> VecDeque<AssignedRange> {
+        ranges
+            .iter()
+            .map(|&(b, e)| AssignedRange { range: Range::new(b, e), requeued: false, stolen: false })
+            .collect()
+    }
+
+    fn steal(
+        queue: &mut VecDeque<AssignedRange>,
+        max_items: usize,
+        granule: usize,
+    ) -> Vec<Range> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut finishing = false;
+        absorb(ToWorker::Steal { max_items, granule }, queue, &mut finishing, &tx, 3);
+        assert!(!finishing, "a steal never marks the drain");
+        match rx.try_recv() {
+            Ok(FromWorker::Yielded { dev, ranges }) => {
+                assert_eq!(dev, 3);
+                ranges
+            }
+            _ => panic!("steal must always ack with Yielded"),
+        }
+    }
+
+    #[test]
+    fn steal_yields_whole_entries_deepest_first() {
+        let mut q = queued(&[(0, 64), (64, 128), (128, 192)]);
+        let got = steal(&mut q, 128, 16);
+        assert_eq!(got, vec![Range::new(128, 192), Range::new(64, 128)]);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].range, Range::new(0, 64));
+    }
+
+    #[test]
+    fn steal_splits_the_cut_entry_at_a_granule_boundary() {
+        // Budget 40 inside a 100-item entry, granule 16: keep
+        // ceil(60/16)=4 granules -> cut at 64, yield 64..100 (36 items,
+        // within budget).
+        let mut q = queued(&[(0, 100)]);
+        let got = steal(&mut q, 40, 16);
+        assert_eq!(got, vec![Range::new(64, 100)]);
+        assert_eq!(q[0].range, Range::new(0, 64));
+    }
+
+    #[test]
+    fn steal_never_yields_a_partial_granule() {
+        // Budget smaller than the entry's tail granule: the rounded-up
+        // keep covers the whole range, nothing moves — but the ack is
+        // still sent (the empty Vec the helper returns).
+        let mut q = queued(&[(0, 16)]);
+        let got = steal(&mut q, 8, 16);
+        assert!(got.is_empty());
+        assert_eq!(q[0].range, Range::new(0, 16));
+    }
+
+    #[test]
+    fn steal_on_an_empty_queue_acks_empty() {
+        let mut q = queued(&[]);
+        let got = steal(&mut q, 512, 16);
+        assert!(got.is_empty());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn steal_budget_spans_entries_then_splits() {
+        // 3 entries of 64; budget 96 takes the whole back entry then
+        // splits the middle one at its halfway granule.
+        let mut q = queued(&[(0, 64), (64, 128), (128, 192)]);
+        let got = steal(&mut q, 96, 32);
+        assert_eq!(got, vec![Range::new(128, 192), Range::new(96, 128)]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q[1].range, Range::new(64, 96));
+    }
+
+    #[test]
+    fn assign_and_finish_still_absorb() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let mut q = queued(&[]);
+        let mut finishing = false;
+        let mut batch = AssignBatch::new();
+        batch.push(Range::new(0, 32), false, false);
+        batch.push(Range::new(32, 64), true, true);
+        absorb(ToWorker::Assign(batch), &mut q, &mut finishing, &tx, 0);
+        assert_eq!(q.len(), 2);
+        assert!(!q[0].requeued && !q[0].stolen);
+        assert!(q[1].requeued && q[1].stolen);
+        absorb(ToWorker::Finish, &mut q, &mut finishing, &tx, 0);
+        assert!(finishing);
     }
 }

@@ -49,6 +49,10 @@ pub struct PackageTrace {
     /// True when this package is recovered work: its range was reclaimed
     /// from a dead device's unfinished assignments and requeued here.
     pub requeued: bool,
+    /// True when this package is stolen work: its range was revoked
+    /// (assigned-but-unstarted) from a backlogged device's queue and
+    /// re-dispatched here — the `+steal` tail-squashing path.
+    pub stolen: bool,
     /// Joules the package consumed: the device's busy watts integrated
     /// over the occupancy window (`start..end`, H2D + compute). Idle
     /// draw between packages is charged at the device level
@@ -195,6 +199,10 @@ pub struct RunReport {
     /// Empty on a clean run; a non-empty list on a *successful* run
     /// means every failure was recovered (work requeued to survivors).
     pub faults: Vec<FaultEvent>,
+    /// `Steal` revocations the master issued (acked or not). 0 under
+    /// non-`+steal` specs; pair with [`stolen_items`](Self::stolen_items)
+    /// to see how much work the acks actually moved.
+    pub steals_issued: usize,
 }
 
 impl RunReport {
@@ -329,6 +337,41 @@ impl RunReport {
             .sum()
     }
 
+    /// Packages (across all devices) that were stolen work — ranges
+    /// revoked from a backlogged device's unstarted queue and
+    /// re-dispatched to a dry one (`+steal`).
+    pub fn stolen_packages(&self) -> usize {
+        self.devices
+            .iter()
+            .flat_map(|d| d.packages.iter())
+            .filter(|p| p.stolen)
+            .count()
+    }
+
+    /// Work-items executed as stolen packages.
+    pub fn stolen_items(&self) -> usize {
+        self.devices
+            .iter()
+            .flat_map(|d| d.packages.iter())
+            .filter(|p| p.stolen)
+            .map(PackageTrace::items)
+            .sum()
+    }
+
+    /// Estimated tail time the steals recovered: the total occupancy of
+    /// the stolen packages on their thieves. Each of these spans is work
+    /// the victim no longer serializes behind its own backlog, so —
+    /// since steals are priced to move work only to a faster-or-equal
+    /// device — this is a lower bound on the makespan time bought back.
+    pub fn steal_time_recovered(&self) -> Duration {
+        self.devices
+            .iter()
+            .flat_map(|d| d.packages.iter())
+            .filter(|p| p.stolen)
+            .map(|p| p.end.saturating_sub(p.start))
+            .sum()
+    }
+
     /// True when the run saw at least one device failure and every one
     /// of them was recovered.
     pub fn recovered(&self) -> bool {
@@ -457,12 +500,12 @@ impl RunReport {
     /// pipelined sub-spans.
     pub fn package_csv(&self) -> String {
         let mut s = String::from(
-            "device,kind,begin_item,end_item,start_ms,end_ms,h2d_start_ms,h2d_end_ms,exec_start_ms,raw_ms,launches,h2d_bytes,d2h_bytes,energy_j,requeued\n",
+            "device,kind,begin_item,end_item,start_ms,end_ms,h2d_start_ms,h2d_end_ms,exec_start_ms,raw_ms,launches,h2d_bytes,d2h_bytes,energy_j,requeued,stolen\n",
         );
         for d in &self.devices {
             for p in &d.packages {
                 s.push_str(&format!(
-                    "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{},{},{},{:.6},{}\n",
+                    "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{},{},{},{:.6},{},{}\n",
                     d.name,
                     d.kind.label(),
                     p.begin_item,
@@ -477,7 +520,8 @@ impl RunReport {
                     p.h2d_bytes,
                     p.d2h_bytes,
                     p.energy_j,
-                    u8::from(p.requeued)
+                    u8::from(p.requeued),
+                    u8::from(p.stolen)
                 ));
             }
         }
@@ -511,6 +555,7 @@ mod tests {
             d2h_bytes: 0,
             energy_j: 100.0 * (t - s) as f64 * 1e-3,
             requeued: false,
+            stolen: false,
         }
     }
 
@@ -550,6 +595,7 @@ mod tests {
                 },
             ],
             faults: Vec::new(),
+            steals_issued: 0,
         }
     }
 
@@ -676,7 +722,7 @@ mod tests {
             .lines()
             .next()
             .unwrap()
-            .ends_with("h2d_bytes,d2h_bytes,energy_j,requeued"));
+            .ends_with("h2d_bytes,d2h_bytes,energy_j,requeued,stolen"));
     }
 
     #[test]
@@ -739,7 +785,7 @@ mod tests {
         assert_eq!(r.requeued_packages(), 1);
         assert_eq!(r.requeued_items(), 30);
         let csv = r.package_csv();
-        assert!(csv.lines().any(|l| l.ends_with(",1")), "requeued column set");
+        assert!(csv.lines().any(|l| l.ends_with(",1,0")), "requeued column set");
 
         r.faults.push(FaultEvent {
             device: 1,
@@ -751,6 +797,26 @@ mod tests {
             recovered: false,
         });
         assert!(!r.recovered(), "one unrecovered fault poisons the run");
+    }
+
+    #[test]
+    fn steal_accounting_and_csv_column() {
+        let mut r = mk_report();
+        assert_eq!(r.stolen_packages(), 0);
+        assert_eq!(r.stolen_items(), 0);
+        assert_eq!(r.steal_time_recovered(), ms(0));
+
+        // The gpu executes a package stolen from the cpu's backlog.
+        let mut stolen = mk(1, 0, 30, 85, 95);
+        stolen.stolen = true;
+        r.devices[1].packages.push(stolen);
+        r.steals_issued = 1;
+        assert_eq!(r.stolen_packages(), 1);
+        assert_eq!(r.stolen_items(), 30);
+        assert_eq!(r.steal_time_recovered(), ms(10), "the thief's occupancy span");
+        assert_eq!(r.requeued_packages(), 0, "stolen is not requeued");
+        let csv = r.package_csv();
+        assert!(csv.lines().any(|l| l.ends_with(",0,1")), "stolen column set");
     }
 
     #[test]
@@ -773,6 +839,7 @@ mod tests {
             d2h_bytes: 0,
             energy_j: 2.0,
             requeued: false,
+            stolen: false,
         });
         assert_eq!(r.transfer_overlap_count(), 1);
         assert!(r.has_transfer_overlap());

@@ -63,6 +63,29 @@
 //! With `depth == 1` this reduces exactly to the paper's blocking
 //! assign-on-completion loop.
 //!
+//! # Work stealing
+//!
+//! Under a `+steal` spec the loop adds one message pair. When a device
+//! runs dry (scheduler refused or exhausted, requeue queue and steal
+//! pool empty) the master prices every other device's
+//! assigned-but-unstarted backlog with [`price_steal`] over a
+//! master-owned [`ThroughputModel`] and, if profitable, sends the most
+//! backlogged victim a `Steal` revocation. The victim's worker
+//! truncates its local queue from the back (splitting the cut range at
+//! a granule boundary) and always acks with `Yielded`; the master
+//! matches the ack against the victim's pending ledger, defensively
+//! revokes arena claims over the yielded ranges
+//! ([`OutputArena::revoke_tail`] — unstarted work holds no claims),
+//! pools them, and re-dispatches through the normal `AssignBatch` path
+//! with the `stolen` trace flag (thief first). Exactly-once under
+//! races: the victim's `top_up` is suppressed while its ack is
+//! outstanding (the master must not append ranges the truncation never
+//! saw), and a `Yielded` from a device already registered as failed is
+//! dropped — recovery requeued its whole pending ledger, the yielded
+//! ranges included. Per-worker channel order (`Yielded` is sent at a
+//! package boundary, before any later `Done`/`Failed`) makes both
+//! rules sufficient; the steal × fault chaos suite pins this.
+//!
 //! # Fault tolerance
 //!
 //! The loop tracks, per device, every range assigned but not yet
@@ -100,7 +123,8 @@ use crate::coordinator::qos::{
     admission_tiebreak, QosClass, QosController, QosEvent, QosPolicy, STARVATION_BOUND,
 };
 use crate::coordinator::scheduler::{
-    PackageObservation, QosHint, SchedDevice, Scheduler, SchedulerKind,
+    price_steal, PackageObservation, QosHint, SchedDevice, Scheduler, SchedulerKind,
+    StealPolicy, ThroughputModel,
 };
 use crate::coordinator::work::{split_range, Range};
 use crate::platform::perfmodel::PerfModelStore;
@@ -1092,6 +1116,7 @@ impl SessionExec {
             reclaimed: VecDeque::new(),
             paused: false,
             completed_items: 0,
+            steal: StealState::new(scheduler.steal_policy(), &sched_devices),
             parker: MasterParker {
                 arbiter,
                 tokens,
@@ -1323,6 +1348,7 @@ impl SessionExec {
             wall: epoch.elapsed(),
             devices: device_traces,
             faults,
+            steals_issued: master.steal.issued,
         })
     }
 }
@@ -1399,6 +1425,67 @@ impl MasterParker {
     }
 }
 
+/// EWMA weight of the steal-pricing throughput model. More responsive
+/// than the schedulers' own models: steal decisions fire at the tail of
+/// a run, where the latest package spans (a hotspot band, a degraded
+/// device) matter more than the run-long average.
+/// (Public so the `run --steal` virtual-clock bench prices its steals
+/// with the exact model the master uses.)
+pub const STEAL_MODEL_ALPHA: f64 = 0.4;
+
+/// Master-side cooperative-stealing state (the `+steal` suffix): the
+/// policy, the throughput model that prices candidate steals, the
+/// per-victim outstanding-revocation markers, and the pool of yielded
+/// ranges awaiting re-dispatch. Inert (`policy = Off`, empty pool,
+/// never-consulted model) for every non-stealing spec.
+struct StealState {
+    policy: StealPolicy,
+    /// Throughput estimates feeding [`price_steal`] — master-owned so
+    /// pricing works identically over every scheduler family (the
+    /// wrapped strategy may not keep a model of its own).
+    model: ThroughputModel,
+    /// `outstanding[victim] = Some(thief)` while a `Steal` sent to
+    /// `victim` is un-acked. The victim's `top_up` is suppressed for
+    /// the window — the worker's truncation runs against the queue as
+    /// *it* saw it, so the master must not append ranges the ack's
+    /// back-matching would then misattribute.
+    outstanding: Vec<Option<usize>>,
+    /// Yielded ranges awaiting re-dispatch: drained by `next_range`
+    /// after the fault-recovery queue, before the scheduler.
+    pool: VecDeque<Range>,
+    /// `Steal` messages issued (acked or not) — surfaced on the report.
+    issued: usize,
+    /// Work-items that actually moved (sum over acked yields).
+    items_moved: usize,
+    /// `cooling[victim]` after an empty yield: the victim's local queue
+    /// was already drained (everything in flight or staged), so
+    /// re-pricing it before its next `Done` would just ping-pong
+    /// Steal/Yielded messages at channel speed. Cleared on `Done`.
+    cooling: Vec<bool>,
+}
+
+impl StealState {
+    fn new(policy: StealPolicy, devices: &[SchedDevice]) -> Self {
+        let mut model = ThroughputModel::new(STEAL_MODEL_ALPHA);
+        model.start(devices);
+        Self {
+            policy,
+            model,
+            outstanding: vec![None; devices.len()],
+            pool: VecDeque::new(),
+            issued: 0,
+            items_moved: 0,
+            cooling: vec![false; devices.len()],
+        }
+    }
+
+    /// `dev` is the thief of an un-acked steal (at most one at a time:
+    /// the priced backlog is not re-priceable until the yield lands).
+    fn thieving(&self, dev: usize) -> bool {
+        self.outstanding.iter().any(|o| *o == Some(dev))
+    }
+}
+
 /// Recovery-aware assignment state for the master loop: per-device
 /// in-flight ranges (what recovery must reclaim when a device dies),
 /// staging back-pressure counters, and the shared queue of reclaimed
@@ -1435,6 +1522,8 @@ struct MasterState {
     /// Items whose packages have completed so far (the deadlined
     /// master's slack-projection input).
     completed_items: usize,
+    /// Cooperative stealing (inert under non-`+steal` specs).
+    steal: StealState,
     parker: MasterParker,
 }
 
@@ -1458,11 +1547,13 @@ impl MasterState {
         if r.is_none() {
             self.dry[dev] = true;
             // Refusal vs exhaustion: if items remain that are neither
-            // completed, in flight, nor awaiting requeue, the scheduler
-            // still *had* work and chose not to feed this device.
+            // completed, in flight, awaiting requeue, nor pooled from a
+            // steal, the scheduler still *had* work and chose not to
+            // feed this device.
             let accounted: usize = self.completed_items
                 + self.pending.iter().map(|q| q.iter().map(Range::len).sum::<usize>()).sum::<usize>()
-                + self.reclaimed.iter().map(Range::len).sum::<usize>();
+                + self.reclaimed.iter().map(Range::len).sum::<usize>()
+                + self.steal.pool.iter().map(Range::len).sum::<usize>();
             if accounted < self.total_items {
                 self.refused[dev] = true;
             }
@@ -1471,12 +1562,16 @@ impl MasterState {
     }
 
     /// The next range for `dev`: reclaimed (requeued) work first, then
-    /// the scheduler. Returns the range plus its requeued flag.
-    fn next_range(&mut self, dev: usize) -> Option<(Range, bool)> {
+    /// stolen work awaiting re-dispatch, then the scheduler. Returns
+    /// the range plus its (requeued, stolen) trace flags.
+    fn next_range(&mut self, dev: usize) -> Option<(Range, bool, bool)> {
         if let Some(r) = self.reclaimed.pop_front() {
-            return Some((r, true));
+            return Some((r, true, false));
         }
-        self.next_scheduler_range(dev).map(|r| (r, false))
+        if let Some(r) = self.steal.pool.pop_front() {
+            return Some((r, false, true));
+        }
+        self.next_scheduler_range(dev).map(|r| (r, false, false))
     }
 
     /// Top device `dev`'s pipeline up to `depth` packages (and at most
@@ -1491,6 +1586,14 @@ impl MasterState {
     /// one message.
     fn top_up(&mut self, dev: usize) {
         if self.finish_sent[dev] || self.failed[dev] {
+            return;
+        }
+        // Victim suppression: while a Steal to this device is un-acked
+        // the master appends nothing — the worker's truncation runs
+        // against the queue as it saw it, and the ack's back-matching
+        // against `pending` must see exactly that queue. The ack
+        // handler re-enters top_up with the marker cleared.
+        if self.steal.outstanding[dev].is_some() {
             return;
         }
         if self.paused {
@@ -1513,7 +1616,7 @@ impl MasterState {
             && self.unstaged[dev] < self.staging_cap
             && !batch.is_full()
         {
-            let Some((range, requeued)) = self.next_range(dev) else {
+            let Some((range, requeued, stolen)) = self.next_range(dev) else {
                 // Legacy abort-on-failure mode finishes a device the
                 // moment it runs dry (blocking workers only when idle;
                 // pipelined workers drain their local queue). The
@@ -1529,7 +1632,7 @@ impl MasterState {
             if self.depth > 1 {
                 self.unstaged[dev] += 1;
             }
-            batch.push(range, requeued);
+            batch.push(range, requeued, stolen);
             // Pipelined lookahead: pull one more scheduler range into
             // the same refill so the pipeline fills off a single
             // message (the seed's `lookahead` field, generalized).
@@ -1537,12 +1640,13 @@ impl MasterState {
                 && self.pending[dev].len() < self.depth
                 && self.unstaged[dev] < self.staging_cap
                 && self.reclaimed.is_empty()
+                && self.steal.pool.is_empty()
                 && !batch.is_full()
             {
                 if let Some(n) = self.next_scheduler_range(dev) {
                     self.pending[dev].push_back(n);
                     self.unstaged[dev] += 1;
-                    batch.push(n, false);
+                    batch.push(n, false, false);
                 }
             }
         }
@@ -1557,20 +1661,197 @@ impl MasterState {
             self.to_workers[dev].send(ToWorker::Finish).ok();
             self.finish_sent[dev] = true;
         }
+        // Steal hook: the refill left this device dry with nothing
+        // queued anywhere — if another device holds priced-profitable
+        // unstarted backlog, revoke some of it (the yield re-enters
+        // through the Yielded ack).
+        self.try_steal(dev);
         // Park the slot once it provably has nothing left to request:
-        // scheduler dry, nothing in flight, nothing reclaimed pending.
-        // A later failure that requeues work un-parks it (above).
-        let idle =
-            self.dry[dev] && self.pending[dev].is_empty() && self.reclaimed.is_empty();
+        // scheduler dry, nothing in flight, nothing reclaimed or
+        // stolen pending. A later failure or yield that surfaces work
+        // un-parks it (above).
+        let idle = self.dry[dev]
+            && self.pending[dev].is_empty()
+            && self.reclaimed.is_empty()
+            && self.steal.pool.is_empty();
         self.parker.set(dev, idle);
     }
 
-    /// All work provably done: nothing reclaimed waits, nothing is in
-    /// flight, and the scheduler is dry for every live device. Only
-    /// then can no future failure surface new work (dead devices have
-    /// nothing pending), so Finish is safe to broadcast.
+    /// Issue at most one steal on behalf of dry device `thief`. The
+    /// candidate backlog of a victim is everything beyond its in-flight
+    /// package and (pipelined) its staged prefetch — the work its
+    /// worker never yields; [`price_steal`] sizes the take so victim
+    /// and thief finish together and refuses moves the victim would
+    /// finish before the thief's transfer-and-restart cost. Among
+    /// profitable victims the one predicted to finish *last* is chosen
+    /// — squashing the tail is the whole point.
+    fn try_steal(&mut self, thief: usize) {
+        if self.steal.policy.is_off()
+            || !self.fault_tolerant
+            || self.paused
+            || !self.dry[thief]
+            // A refused device was *deliberately* excluded by the
+            // scheduler (tail cutoff, energy objective) — stealing
+            // work onto it would override that decision.
+            || self.refused[thief]
+            || !self.pending[thief].is_empty()
+            || !self.reclaimed.is_empty()
+            || !self.steal.pool.is_empty()
+            || self.steal.thieving(thief)
+        {
+            return;
+        }
+        let shielded = if self.depth > 1 { 2 } else { 1 };
+        let thief_rate = self.steal.model.rate(thief);
+        // (victim, items to request, predicted remaining time).
+        let mut best: Option<(usize, usize, f64)> = None;
+        for v in 0..self.ndev() {
+            if v == thief
+                || self.failed[v]
+                || self.finish_sent[v]
+                || self.steal.outstanding[v].is_some()
+                || self.steal.cooling[v]
+            {
+                continue;
+            }
+            let backlog: usize =
+                self.pending[v].iter().skip(shielded).map(Range::len).sum();
+            if backlog < self.granule {
+                continue;
+            }
+            let total: usize = self.pending[v].iter().map(Range::len).sum();
+            let victim_rate = self.steal.model.rate(v);
+            let Some(take) = price_steal(
+                self.steal.policy,
+                self.granule,
+                backlog,
+                total,
+                victim_rate,
+                thief_rate,
+            ) else {
+                continue;
+            };
+            let t_old =
+                total as f64 / (self.granule as f64 * victim_rate.max(1e-9));
+            if best.map_or(true, |(_, _, t)| t_old > t) {
+                best = Some((v, take, t_old));
+            }
+        }
+        let Some((victim, take, _)) = best else { return };
+        self.steal.outstanding[victim] = Some(thief);
+        self.steal.issued += 1;
+        self.to_workers[victim]
+            .send(ToWorker::Steal { max_items: take, granule: self.granule })
+            .ok();
+    }
+
+    /// Fold a victim's `Yielded` ack: retire the outstanding marker,
+    /// remove the yielded ranges from the victim's pending ledger
+    /// (deepest-first, so each matches the current back — whole or as
+    /// a split suffix), defensively revoke any arena claim over them,
+    /// pool them, and re-dispatch (thief first).
+    fn handle_yield(&mut self, dev: usize, ranges: Vec<Range>, arena: &OutputArena) {
+        let thief = self.steal.outstanding[dev].take();
+        if self.failed[dev] {
+            // The victim is already registered dead (liveness-sweep
+            // path): recovery drained and requeued its *whole* pending
+            // ledger, the yielded ranges included. Pooling them again
+            // would double-requeue — drop the ack.
+            return;
+        }
+        let mut moved = 0usize;
+        for r in ranges {
+            let matched = match self.pending[dev].back_mut() {
+                Some(back) if *back == r => {
+                    self.pending[dev].pop_back();
+                    true
+                }
+                Some(back) if back.end == r.end && back.begin < r.begin => {
+                    // The worker split this entry at a granule
+                    // boundary and kept the front.
+                    back.end = r.begin;
+                    true
+                }
+                _ => {
+                    // Unreachable by protocol (victim suppression plus
+                    // per-worker FIFO order); scan defensively so a
+                    // yielded range is never silently lost.
+                    debug_assert!(false, "yielded range not at the pending back");
+                    match self.pending[dev].iter().position(|p| *p == r) {
+                        Some(i) => {
+                            self.pending[dev].remove(i);
+                            true
+                        }
+                        None => false,
+                    }
+                }
+            };
+            if !matched {
+                continue;
+            }
+            // Yielded ranges are assigned-but-unstarted, so normally no
+            // claim covers them and this is a no-op; the partial-revoke
+            // contract (exact claim, or the tail of a wider one) covers
+            // an executor that claims ahead. SAFETY: the victim acked
+            // the revocation — it will never claim or write this range.
+            unsafe {
+                arena.revoke_tail(r.begin, r.end);
+            }
+            moved += r.len();
+            self.steal.pool.push_back(r);
+        }
+        self.steal.items_moved += moved;
+        if moved > 0 {
+            if let Some(t) = thief {
+                self.scheduler.on_steal(dev, t, moved);
+            }
+        } else {
+            // Empty ack: the victim's local queue was already drained
+            // when the revocation arrived. Its master-side ledger still
+            // shows the same backlog (the Dones are in flight behind
+            // this ack), so an immediate re-price would re-issue the
+            // same steal and spin. Cool the victim until its next Done.
+            self.steal.cooling[dev] = true;
+        }
+        // Re-dispatch: the thief first (the dry device this steal was
+        // priced for), then the victim, then — if anything is still
+        // pooled (a thief that died while the steal was in flight) —
+        // every other live device, so the pool can never strand.
+        if let Some(t) = thief {
+            self.top_up(t);
+        }
+        self.top_up(dev);
+        if !self.steal.pool.is_empty() {
+            for d in 0..self.ndev() {
+                self.top_up(d);
+            }
+        }
+    }
+
+    /// Re-evaluate stealing for every dry device. Called after each
+    /// completion: the pricing model's rates just moved, so a steal
+    /// that was unprofitable a package ago may clear the threshold now
+    /// (and a dry device gets no events of its own to re-trigger from).
+    fn try_steal_all(&mut self) {
+        if self.steal.policy.is_off() {
+            return;
+        }
+        for d in 0..self.ndev() {
+            if !self.failed[d] && !self.finish_sent[d] {
+                self.try_steal(d);
+            }
+        }
+    }
+
+    /// All work provably done: nothing reclaimed or stolen waits,
+    /// nothing is in flight, and the scheduler is dry for every live
+    /// device. Only then can no future failure or yield surface new
+    /// work (dead devices have nothing pending; a non-empty yield ack
+    /// still in the channel implies a non-empty pending ledger), so
+    /// Finish is safe to broadcast.
     fn complete(&self) -> bool {
         self.reclaimed.is_empty()
+            && self.steal.pool.is_empty()
             && self.pending.iter().all(|q| q.is_empty())
             && (0..self.ndev()).all(|d| self.failed[d] || self.dry[d])
     }
@@ -1599,6 +1880,13 @@ impl MasterState {
     /// registration drop on thread exit).
     fn handle_failure(&mut self, dev: usize, arena: &OutputArena) -> FailureOutcome {
         self.failed[dev] = true;
+        // A Steal sent to this device will never be acked now — or its
+        // ack was already processed (per-worker channel order puts any
+        // sent Yielded before the failure). Clear the marker so it
+        // cannot suppress a top_up or block a later steal decision;
+        // the pending drain below requeues whatever the un-acked
+        // revocation would have yielded, keeping exactly-once intact.
+        self.steal.outstanding[dev] = None;
         let mut ranges: Vec<Range> = self.pending[dev].drain(..).collect();
         ranges.extend(self.scheduler.reclaim_device(dev));
         let reclaimed_items: usize = ranges.iter().map(Range::len).sum();
@@ -1623,7 +1911,11 @@ impl MasterState {
                 }
             }
         }
-        if !self.reclaimed.is_empty() {
+        // Also re-dispatch a non-empty steal pool: the failed device
+        // may have been the thief a yield was pooled for, and without
+        // this broadcast no surviving device would ever be topped up
+        // to drain it.
+        if !self.reclaimed.is_empty() || !self.steal.pool.is_empty() {
             for d in 0..self.ndev() {
                 if !self.failed[d] {
                     self.top_up(d);
@@ -1681,9 +1973,25 @@ fn handle_event(
             // device must already see the completed package's span.
             if let Some(range) = master.pending[dev].pop_front() {
                 master.completed_items += range.len();
+                if !master.steal.policy.is_off() {
+                    master.steal.model.observe(
+                        dev,
+                        range.len() as f64 / master.granule.max(1) as f64,
+                        timing.span,
+                    );
+                    // Progress re-arms a victim cooled by an empty
+                    // yield: its ledger has genuinely shrunk now.
+                    master.steal.cooling[dev] = false;
+                }
                 master.scheduler.observe(dev, range, timing);
             }
             master.top_up(dev);
+            // Every completion moves the pricing model: re-evaluate
+            // stealing for any device sitting dry (no-op when off).
+            master.try_steal_all();
+        }
+        FromWorker::Yielded { dev, ranges } => {
+            master.handle_yield(dev, ranges, arena);
         }
         FromWorker::Finished { dev, traces, observations: obs, xfer, lease_wait } => {
             device_traces[dev].packages = traces;
@@ -1959,6 +2267,7 @@ mod tests {
             reclaimed: VecDeque::new(),
             paused: false,
             completed_items: 0,
+            steal: StealState::new(kind.steal_policy(), &devices),
             parker: MasterParker {
                 arbiter,
                 tokens,
@@ -2028,6 +2337,214 @@ mod tests {
             matches!(rxs[0].try_recv(), Ok(ToWorker::Assign(_))),
             "observation fed and the next refill shipped despite dev 0's dead channel"
         );
+    }
+
+    // ---- master-side steal protocol ----------------------------------
+
+    use crate::coordinator::scheduler::PackageTiming;
+
+    fn steal_kind() -> SchedulerKind {
+        SchedulerKind::dynamic(8)
+            .pipelined(3)
+            .stealing(StealPolicy::TailOnly { threshold: 1.2 })
+    }
+
+    /// Drive a 2-device steal master (32 granules of 8 items, dynamic:8
+    /// → eight 32-item packages) until device 0 is dry and fast
+    /// (~1000 granules/s observed) while device 1 sits on a full
+    /// depth-3 ledger at 1 granule/s — at which point the final
+    /// `top_up(0)` prices and issues a Steal. Returns the Steal request
+    /// as received on the victim's channel, with both channels drained.
+    fn provoke_steal(master: &mut MasterState, rxs: &[Receiver<ToWorker>]) -> (usize, usize) {
+        // Fill both pipelines: the staging cap (2) bounds the first
+        // refill; a confirmed staging lets the third package in.
+        for dev in 0..2 {
+            master.top_up(dev);
+            master.unstaged[dev] = 0;
+            master.top_up(dev);
+            assert_eq!(master.pending[dev].len(), 3, "dev{dev} pipeline full");
+        }
+        // The rate gap that makes the steal profitable: one slow
+        // observation for the victim (4 granules over 4s = 1 g/s)...
+        master.steal.model.observe(1, 4.0, Duration::from_secs(4));
+        // ...while device 0 completes its whole queue fast (4 granules
+        // over 4ms = 1000 g/s), replaying the Done arm's bookkeeping.
+        while let Some(range) = master.pending[0].pop_front() {
+            master.completed_items += range.len();
+            let granules = range.len() as f64 / master.granule as f64;
+            master.steal.model.observe(0, granules, Duration::from_millis(4));
+            master.scheduler.observe(0, range, PackageTiming::default());
+            master.unstaged[0] = 0;
+            master.top_up(0);
+        }
+        assert!(master.dry[0], "scheduler exhausted for the fast device");
+        while rxs[0].try_recv().is_ok() {}
+        let mut steal = None;
+        while let Ok(msg) = rxs[1].try_recv() {
+            if let ToWorker::Steal { max_items, granule } = msg {
+                steal = Some((max_items, granule));
+            }
+        }
+        steal.expect("no Steal reached the backlogged victim")
+    }
+
+    #[test]
+    fn dry_device_steals_from_a_backlogged_victim() {
+        let (mut master, rxs, _regs) = test_master(2, 3, steal_kind(), 32, 8);
+        let (max_items, granule) = provoke_steal(&mut master, &rxs);
+        assert_eq!(granule, 8);
+        assert!(max_items >= 8, "at least one granule requested: {max_items}");
+        assert_eq!(max_items % 8, 0, "granule-aligned request");
+        assert!(
+            max_items <= master.pending[1].iter().skip(2).map(Range::len).sum::<usize>(),
+            "never more than the unshielded backlog"
+        );
+        assert_eq!(master.steal.issued, 1);
+        assert_eq!(master.steal.outstanding[1], Some(0), "victim 1, thief 0");
+        // Victim suppression: while the ack is outstanding, nothing may
+        // ship to the victim — not even requeued work it has pipeline
+        // capacity for (the worker's truncation runs against the queue
+        // as it saw it).
+        master.pending[1].pop_front(); // its in-flight package completes
+        master.unstaged[1] = 0;
+        master.reclaimed.push_back(Range::new(0, 8));
+        let before = master.pending[1].len();
+        master.top_up(1);
+        assert_eq!(master.pending[1].len(), before, "victim top_up suppressed");
+        assert!(rxs[1].try_recv().is_err(), "nothing shipped to the victim");
+        // Counterfactual: with the marker retired the same top_up ships.
+        master.steal.outstanding[1] = None;
+        master.top_up(1);
+        assert!(master.pending[1].len() > before, "unsuppressed top_up assigns");
+    }
+
+    #[test]
+    fn yield_ack_moves_ranges_to_the_thief_exactly_once() {
+        let (mut master, rxs, _regs) = test_master(2, 3, steal_kind(), 32, 8);
+        provoke_steal(&mut master, &rxs);
+        // The victim yields its deepest pending entry (whole match).
+        let yielded = *master.pending[1].back().expect("victim has backlog");
+        let arena = OutputArena::new(vec![(vec![0.0f32; 256], 1)], 8, 256).unwrap();
+        master.handle_yield(1, vec![yielded], &arena);
+        assert_eq!(master.steal.outstanding[1], None, "ack retired the marker");
+        assert_eq!(master.steal.items_moved, yielded.len());
+        assert!(
+            !master.pending[1].contains(&yielded),
+            "yielded range left the victim's ledger"
+        );
+        // The thief was topped up with the stolen range (flagged).
+        let batch = match rxs[0].try_recv() {
+            Ok(ToWorker::Assign(b)) => b,
+            _ => panic!("stolen work never reached the thief"),
+        };
+        let stolen: Vec<_> = batch.iter().filter(|a| a.stolen).collect();
+        assert_eq!(stolen.len(), 1, "exactly one stolen assignment");
+        assert_eq!(stolen[0].range, yielded);
+        assert!(!stolen[0].requeued, "stolen, not requeued");
+        assert!(master.pending[0].contains(&yielded), "thief's ledger holds it");
+        assert!(master.steal.pool.is_empty(), "pool drained");
+        // Exactly-once: every item is accounted exactly once across
+        // completed + pending.
+        let accounted: usize = master.completed_items
+            + master.pending.iter().map(|q| q.iter().map(Range::len).sum::<usize>()).sum::<usize>();
+        assert_eq!(accounted, master.total_items);
+    }
+
+    #[test]
+    fn split_suffix_yield_shrinks_the_pending_entry() {
+        let (mut master, rxs, _regs) = test_master(2, 3, steal_kind(), 32, 8);
+        provoke_steal(&mut master, &rxs);
+        let back = *master.pending[1].back().expect("victim has backlog");
+        assert!(back.len() > 8, "test needs a splittable entry");
+        // The worker kept the first granule and yielded the suffix.
+        let cut = back.begin + 8;
+        let suffix = Range::new(cut, back.end);
+        let arena = OutputArena::new(vec![(vec![0.0f32; 256], 1)], 8, 256).unwrap();
+        master.handle_yield(1, vec![suffix], &arena);
+        assert_eq!(
+            *master.pending[1].back().unwrap(),
+            Range::new(back.begin, cut),
+            "pending entry shrank to the kept front"
+        );
+        assert_eq!(master.steal.items_moved, suffix.len());
+        assert!(master.pending[0].contains(&suffix), "suffix re-dispatched to the thief");
+        let accounted: usize = master.completed_items
+            + master.pending.iter().map(|q| q.iter().map(Range::len).sum::<usize>()).sum::<usize>()
+            + master.steal.pool.iter().map(Range::len).sum::<usize>();
+        assert_eq!(accounted, master.total_items, "no item lost or duplicated");
+    }
+
+    #[test]
+    fn yield_from_a_failed_victim_is_dropped_not_double_requeued() {
+        let (mut master, rxs, _regs) = test_master(2, 3, steal_kind(), 32, 8);
+        provoke_steal(&mut master, &rxs);
+        let yielded = *master.pending[1].back().expect("victim has backlog");
+        let arena = OutputArena::new(vec![(vec![0.0f32; 256], 1)], 8, 256).unwrap();
+        // The victim dies before its ack is processed: recovery drains
+        // and requeues its whole ledger (the yielded range included)...
+        master.handle_failure(1, &arena);
+        assert_eq!(master.steal.outstanding[1], None, "failure cleared the marker");
+        let requeued: usize = master.reclaimed.iter().map(Range::len).sum::<usize>()
+            + master.pending[0].iter().map(Range::len).sum::<usize>();
+        // ...so the late ack must be dropped, not pooled a second time.
+        master.handle_yield(1, vec![yielded], &arena);
+        assert!(master.steal.pool.is_empty(), "late ack dropped");
+        assert_eq!(master.steal.items_moved, 0);
+        let after: usize = master.reclaimed.iter().map(Range::len).sum::<usize>()
+            + master.pending[0].iter().map(Range::len).sum::<usize>();
+        assert_eq!(after, requeued, "no double-requeue");
+        assert_eq!(after + master.completed_items, master.total_items, "exactly-once holds");
+    }
+
+    #[test]
+    fn empty_yield_cools_the_victim_until_its_next_done() {
+        let (mut master, rxs, _regs) = test_master(2, 3, steal_kind(), 32, 8);
+        provoke_steal(&mut master, &rxs);
+        let arena = OutputArena::new(vec![(vec![0.0f32; 256], 1)], 8, 256).unwrap();
+        // The victim's local queue was already drained when the Steal
+        // arrived: it acks with nothing. The marker retires, and the
+        // victim must NOT be re-priced immediately (its master-side
+        // ledger still shows the un-Done backlog — an instant re-steal
+        // would ping-pong at channel speed).
+        master.handle_yield(1, Vec::new(), &arena);
+        assert_eq!(master.steal.outstanding[1], None, "marker retired");
+        assert_eq!(master.steal.items_moved, 0);
+        assert!(master.steal.pool.is_empty());
+        assert!(master.steal.cooling[1], "empty ack cools the victim");
+        assert_eq!(master.steal.issued, 1, "no immediate re-steal spin");
+        // The victim's next Done re-arms it (the Done arm clears the
+        // flag); the still-dry thief then prices the steal again.
+        master.steal.cooling[1] = false;
+        master.try_steal_all();
+        assert_eq!(master.steal.issued, 2, "re-armed after the victim progresses");
+        assert_eq!(master.steal.outstanding[1], Some(0));
+    }
+
+    #[test]
+    fn off_policy_never_issues_steals() {
+        let (mut master, rxs, _regs) =
+            test_master(2, 3, SchedulerKind::dynamic(8).pipelined(3), 32, 8);
+        for dev in 0..2 {
+            master.top_up(dev);
+            master.unstaged[dev] = 0;
+            master.top_up(dev);
+        }
+        // Device 0 drains completely while device 1 holds its ledger —
+        // the exact shape that triggers a steal under `+steal`.
+        while let Some(range) = master.pending[0].pop_front() {
+            master.completed_items += range.len();
+            master.scheduler.observe(0, range, PackageTiming::default());
+            master.unstaged[0] = 0;
+            master.top_up(0);
+        }
+        master.try_steal_all();
+        assert_eq!(master.steal.issued, 0);
+        while let Ok(msg) = rxs[1].try_recv() {
+            assert!(
+                !matches!(msg, ToWorker::Steal { .. }),
+                "no Steal may ship under an off policy"
+            );
+        }
     }
 
     /// The adaptive liveness poll: defaults to the seed's 25ms tick

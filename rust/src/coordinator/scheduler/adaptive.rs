@@ -51,6 +51,14 @@
 //! the requeue path can split it over the remaining (refused but
 //! healthy) workers instead of stranding it.
 //!
+//! Float-ordering audit (PR-10, discharged): no comparison in this file
+//! unwraps a `partial_cmp`. The subset selector ranks with strict `<`
+//! over scores whose operands are clamped finite at ingress (powers and
+//! rates via `ThroughputModel`, watts via `.max(0.0)`, epg priors and
+//! caps via `is_finite` filters), and its infeasible-cap tiebreak uses
+//! IEEE `total_cmp`. The NaN regression test below pins the no-panic,
+//! full-cover behavior for a fully poisoned device profile.
+//!
 //! `next_package` stays off the allocation path; the only non-O(1)
 //! piece is the tail-cutoff's live-rate sum, an O(ndev) fold over a
 //! handful of devices (the estimates it reads are maintained
@@ -754,6 +762,31 @@ mod tests {
             cursor = r.end;
         }
         assert_eq!(cursor, 1000, "the kept device drains the whole pool");
+    }
+
+    /// Float-ordering audit regression (PR-10): a device whose profile
+    /// is fully NaN-poisoned (power, watts, warm rate, warm epg) must
+    /// degrade to the ingress clamps — the run never panics and the
+    /// pool is still covered exactly, even with the energy selector
+    /// (EDP objective) scoring subsets over the poisoned estimates.
+    #[test]
+    fn nan_poisoned_profile_still_covers_and_never_panics() {
+        let mut poisoned = SchedDevice::new("poisoned", f64::NAN)
+            .with_watts(f64::NAN, f64::NAN)
+            .with_warm_epg(Some(f64::NAN));
+        poisoned.warm_rate = Some(f64::NAN);
+        let d = vec![poisoned, SchedDevice::new("healthy", 1.0).with_watts(100.0, 10.0)];
+        for objective in [EnergyObjective::Time, EnergyObjective::Edp] {
+            let mut s = Adaptive::with_objective(2.0, 1, 0.5, objective, None);
+            s.start(1000, 1, &d);
+            let ranges = drain(&mut s, 2, |_| ms(5));
+            let mut cursor = 0;
+            for r in &ranges {
+                assert_eq!(r.begin, cursor, "contiguous cover ({objective:?})");
+                cursor = r.end;
+            }
+            assert_eq!(cursor, 1000, "poisoned profile still covers ({objective:?})");
+        }
     }
 
     /// The joules/granule EWMA: seeded by the first sample, folded with

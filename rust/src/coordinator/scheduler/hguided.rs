@@ -21,6 +21,13 @@
 //! (spec `hguided:feedback=0`) pins that static behavior for ablations
 //! and for comparing against [`Adaptive`](super::Adaptive).
 //!
+//! Float-ordering audit (PR-10, discharged): no comparison in this file
+//! unwraps a `partial_cmp`. Poisoned priors are clamped at ingress —
+//! powers through `.max(1e-6)` (NaN-rejecting: `f64::max` returns the
+//! finite operand), warm rates through the model's `is_finite` filter —
+//! so the sizing formula's operands are always finite and the NaN
+//! regression test below pins the no-panic, full-cover behavior.
+//!
 //! Hot-loop note (PR-2 audit, discharged): `next_package` runs on the
 //! master's `Done` path for every package, so it is O(1) and
 //! allocation-free — pure arithmetic over per-run state. The
@@ -383,6 +390,27 @@ mod tests {
             }
             i += 1;
         }
+    }
+
+    /// Float-ordering audit regression (PR-10): NaN/inf priors (a
+    /// poisoned profile power, a corrupt warm-start rate) must degrade
+    /// to the clamped floors — never a panic, never a stalled cover.
+    #[test]
+    fn nan_priors_degrade_to_clamped_floors_not_panic() {
+        let mut d = devs(&[f64::NAN, 1.0]);
+        d[0].warm_rate = Some(f64::NAN);
+        d[1].warm_rate = Some(f64::INFINITY);
+        let mut s = HGuided::new(2.0, 2);
+        s.start(1000, 64, &d);
+        let mut cursor = 0;
+        let mut i = 0;
+        while let Some(r) = s.next_package(i % 2) {
+            assert_eq!(r.begin, cursor, "contiguous cover");
+            assert!(!r.is_empty());
+            cursor = r.end;
+            i += 1;
+        }
+        assert_eq!(cursor, 1000 * 64, "poisoned priors still cover the pool");
     }
 
     #[test]

@@ -31,12 +31,14 @@ pub mod dynamic;
 pub mod hguided;
 pub mod pipelined;
 pub mod static_sched;
+pub mod steal;
 
 pub use adaptive::Adaptive;
 pub use dynamic::Dynamic;
 pub use hguided::HGuided;
 pub use pipelined::Pipelined;
 pub use static_sched::Static;
+pub use steal::{price_steal, StealPolicy, Stealing, DEFAULT_STEAL_THRESHOLD};
 
 use std::time::Duration;
 
@@ -254,6 +256,17 @@ pub trait Scheduler: Send {
     fn reclaim_device(&mut self, _dev: usize) -> Vec<Range> {
         Vec::new()
     }
+
+    /// Notification that the master moved `items` assigned-but-unstarted
+    /// work-items from `victim` to `thief` (cooperative stealing,
+    /// `+steal`). The moved ranges were already *delivered* by
+    /// `next_package` — they are gone from every scheduler pool — and
+    /// `observe` will attribute their completion timing to the executing
+    /// thief, so pool-based strategies need no ledger correction and the
+    /// default is a no-op. Strategies that keep per-device calibration
+    /// state may override it: being stolen from is evidence the victim's
+    /// estimate was stale ([`Adaptive`] re-probes the victim).
+    fn on_steal(&mut self, _victim: usize, _thief: usize, _items: usize) {}
 }
 
 /// Online per-device throughput estimator shared by the feedback-driven
@@ -423,6 +436,11 @@ pub enum SchedulerKind {
     },
     /// Any base strategy with per-device package pipelining of `depth`.
     Pipelined { inner: Box<SchedulerKind>, depth: usize },
+    /// Any base strategy with cooperative work stealing (spec suffix
+    /// `+steal[:threshold|:eager]`, composable with `+pipe`). Forces a
+    /// pipeline depth of at least [`steal::MIN_STEAL_PIPELINE`] so
+    /// victims hold assigned-but-unstarted backlog to yield.
+    Stealing { inner: Box<SchedulerKind>, policy: StealPolicy },
 }
 
 impl SchedulerKind {
@@ -496,12 +514,33 @@ impl SchedulerKind {
         SchedulerKind::Pipelined { inner: Box::new(self), depth: depth.max(2) }
     }
 
+    /// Wrap this strategy with cooperative work stealing under `policy`
+    /// (`StealPolicy::Off` is an identity — no wrapper).
+    pub fn stealing(self, policy: StealPolicy) -> Self {
+        if policy.is_off() {
+            self
+        } else {
+            SchedulerKind::Stealing { inner: Box::new(self), policy }
+        }
+    }
+
     /// The base (unwrapped) strategy — what partitioning validation
-    /// inspects regardless of pipelining.
+    /// inspects regardless of pipelining or stealing.
     pub fn base(&self) -> &SchedulerKind {
         match self {
             SchedulerKind::Pipelined { inner, .. } => inner.base(),
+            SchedulerKind::Stealing { inner, .. } => inner.base(),
             other => other,
+        }
+    }
+
+    /// The steal policy this spec requests (`+steal` suffix), unwrapping
+    /// other wrappers; [`StealPolicy::Off`] when absent.
+    pub fn steal_policy(&self) -> StealPolicy {
+        match self {
+            SchedulerKind::Stealing { policy, .. } => *policy,
+            SchedulerKind::Pipelined { inner, .. } => inner.steal_policy(),
+            _ => StealPolicy::Off,
         }
     }
 
@@ -521,6 +560,9 @@ impl SchedulerKind {
         match self {
             SchedulerKind::Pipelined { inner, depth } => {
                 (*depth).max(inner.pipeline_depth()).max(2)
+            }
+            SchedulerKind::Stealing { inner, .. } => {
+                inner.pipeline_depth().max(steal::MIN_STEAL_PIPELINE)
             }
             _ => 1,
         }
@@ -547,6 +589,9 @@ impl SchedulerKind {
             SchedulerKind::Pipelined { inner, depth } => {
                 Box::new(Pipelined::new(inner.build(), *depth))
             }
+            SchedulerKind::Stealing { inner, policy } => {
+                Box::new(Stealing::new(inner.build(), *policy))
+            }
         }
     }
 
@@ -568,6 +613,9 @@ impl SchedulerKind {
                 s
             }
             SchedulerKind::Pipelined { inner, .. } => format!("{}+pipe", inner.label()),
+            SchedulerKind::Stealing { inner, policy } => {
+                format!("{}{}", inner.label(), policy.label_suffix())
+            }
         }
     }
 
@@ -600,6 +648,9 @@ impl SchedulerKind {
             SchedulerKind::Pipelined { inner, depth } => {
                 format!("{}+pipe{depth}", inner.spec())
             }
+            SchedulerKind::Stealing { inner, policy } => {
+                format!("{}{}", inner.spec(), policy.spec_suffix())
+            }
         }
     }
 }
@@ -608,18 +659,54 @@ impl SchedulerKind {
 pub const VALID_SPECS: &str = "static, static-rev, dynamic[:N], \
      hguided[:k=F,min=N,feedback=0|1], \
      adaptive[:k=F,min=N,alpha=F,obj=time|edp,power=W] \
-     — each optionally with a +pipe[N] suffix (N >= 2), e.g. \
-     hguided+pipe, dynamic:150+pipe3, adaptive:obj=edp";
+     — each optionally with +pipe[N] (N >= 2) and/or \
+     +steal[:threshold|:eager] (threshold >= 1.0) suffixes, e.g. \
+     hguided+pipe, dynamic:150+pipe3, adaptive:obj=edp, \
+     hguided+pipe3+steal, adaptive+steal:eager";
 
 /// Parse a CLI scheduler spec: `static`, `static-rev`, `dynamic:N`,
 /// `hguided[:k=…,min=…,feedback=0|1]`, `adaptive[:k=…,min=…,alpha=…]` —
 /// each optionally with a `+pipe` suffix (`+pipe` = depth 2, `+pipeN` =
-/// depth N) enabling the package pipeline, e.g. `hguided+pipe`,
-/// `adaptive+pipe` or `dynamic:150+pipe3`. Unknown names, knobs or
-/// malformed values are rejected with an error naming the valid specs —
-/// never a silent fallback.
+/// depth N) enabling the package pipeline and/or a `+steal` suffix
+/// (`+steal` = tail-only at the default threshold, `+steal:F` = custom
+/// threshold F >= 1.0, `+steal:eager` = steal on any predicted win)
+/// enabling cooperative work stealing, e.g. `hguided+pipe`,
+/// `dynamic:150+pipe3`, `hguided+pipe3+steal` or `adaptive+steal:eager`.
+/// Unknown names, knobs or malformed values are rejected with an error
+/// naming the valid specs — never a silent fallback.
 pub fn parse_spec(s: &str) -> Result<SchedulerKind, String> {
-    if let Some(idx) = s.rfind("+pipe") {
+    // Wrapper suffixes compose in spelling order: strip whichever of
+    // `+pipe`/`+steal` occurs *last* and recurse on the prefix, so
+    // `hguided+pipe3+steal` never misreads `3+steal` as a pipe depth.
+    let pipe_idx = s.rfind("+pipe");
+    let steal_idx = s.rfind("+steal");
+    if let Some(idx) = steal_idx.filter(|si| pipe_idx.map_or(true, |pi| *si > pi)) {
+        let (base, suffix) = s.split_at(idx);
+        let arg = &suffix["+steal".len()..];
+        if base.is_empty() {
+            return Err(format!("'+steal' needs a base spec; valid specs: {VALID_SPECS}"));
+        }
+        let policy = match arg {
+            "" => StealPolicy::TailOnly { threshold: DEFAULT_STEAL_THRESHOLD },
+            ":eager" => StealPolicy::Eager,
+            _ => {
+                let val = arg.strip_prefix(':').unwrap_or(arg);
+                let threshold: f64 = val
+                    .parse()
+                    .ok()
+                    .filter(|t: &f64| t.is_finite() && *t >= 1.0)
+                    .ok_or_else(|| {
+                        format!(
+                            "bad steal policy '{val}' in '{s}' (want +steal, \
+                             +steal:eager or +steal:F with F >= 1.0)"
+                        )
+                    })?;
+                StealPolicy::TailOnly { threshold }
+            }
+        };
+        return parse_spec(base).map(|k| k.stealing(policy));
+    }
+    if let Some(idx) = pipe_idx {
         let (base, suffix) = s.split_at(idx);
         let digits = &suffix["+pipe".len()..];
         if base.is_empty() {
@@ -763,6 +850,22 @@ mod tests {
         );
         assert_eq!(SchedulerKind::hguided().pipelined(2).label(), "HGuided+pipe");
         assert_eq!(SchedulerKind::adaptive().pipelined(2).label(), "Adaptive+pipe");
+        assert_eq!(
+            SchedulerKind::hguided()
+                .pipelined(3)
+                .stealing(StealPolicy::TailOnly { threshold: DEFAULT_STEAL_THRESHOLD })
+                .label(),
+            "HGuided+pipe+steal"
+        );
+        assert_eq!(
+            SchedulerKind::adaptive().stealing(StealPolicy::Eager).label(),
+            "Adaptive+steal-eager"
+        );
+        assert_eq!(
+            SchedulerKind::adaptive().stealing(StealPolicy::Off).label(),
+            "Adaptive",
+            "Off policy wraps nothing"
+        );
     }
 
     #[test]
@@ -857,6 +960,54 @@ mod tests {
         assert!(parse_kind("hguided+pipex").is_none());
     }
 
+    #[test]
+    fn parse_steal_suffix() {
+        let k = parse_kind("hguided+steal").unwrap();
+        assert_eq!(
+            k.steal_policy(),
+            StealPolicy::TailOnly { threshold: DEFAULT_STEAL_THRESHOLD }
+        );
+        assert!(matches!(k.base(), SchedulerKind::HGuided { .. }));
+        assert_eq!(
+            k.pipeline_depth(),
+            steal::MIN_STEAL_PIPELINE,
+            "bare +steal forces a stealable pipeline"
+        );
+
+        let k = parse_kind("adaptive+steal:eager").unwrap();
+        assert_eq!(k.steal_policy(), StealPolicy::Eager);
+        assert!(matches!(k.base(), SchedulerKind::Adaptive { .. }));
+
+        let k = parse_kind("dynamic:150+steal:1.5").unwrap();
+        assert_eq!(k.steal_policy(), StealPolicy::TailOnly { threshold: 1.5 });
+        assert!(matches!(k.base(), SchedulerKind::Dynamic { packages: 150 }));
+
+        // Composition with +pipe in either spelling order; the pipe
+        // depth must never swallow the steal suffix as digits.
+        let k = parse_kind("hguided+pipe3+steal").unwrap();
+        assert_eq!(k.pipeline_depth(), 3);
+        assert!(!k.steal_policy().is_off());
+        assert!(matches!(k.base(), SchedulerKind::HGuided { .. }));
+        let k = parse_kind("hguided+steal+pipe4").unwrap();
+        assert_eq!(k.pipeline_depth(), 4);
+        assert!(!k.steal_policy().is_off());
+
+        // A +pipe under +steal keeps its explicit depth when >= the
+        // stealable minimum; a too-shallow pipe is raised to it.
+        let k = parse_kind("hguided+pipe+steal").unwrap();
+        assert_eq!(k.pipeline_depth(), steal::MIN_STEAL_PIPELINE);
+
+        assert!(parse_kind("+steal").is_none(), "needs a base spec");
+        assert!(parse_kind("hguided+steal:0.5").is_none(), "threshold < 1.0 rejected");
+        assert!(parse_kind("hguided+steal:nan").is_none(), "NaN threshold rejected");
+        assert!(parse_kind("hguided+steal:always").is_none(), "unknown word rejected");
+        assert!(parse_kind("hguided+steal:").is_none(), "dangling colon rejected");
+        let err = parse_spec("hguided+steal:always").unwrap_err();
+        assert!(err.contains("bad steal policy 'always'"), "{err}");
+        let err = parse_spec("+steal").unwrap_err();
+        assert!(err.contains("needs a base spec"), "{err}");
+    }
+
     /// Every expressible spec must round-trip `parse_spec(k.spec()) == k`
     /// — the CLI satellite's parse/format contract.
     #[test]
@@ -892,6 +1043,16 @@ mod tests {
             SchedulerKind::hguided_static().pipelined(4),
             SchedulerKind::adaptive().pipelined(2),
             SchedulerKind::adaptive().pipelined(3),
+            SchedulerKind::hguided()
+                .stealing(StealPolicy::TailOnly { threshold: DEFAULT_STEAL_THRESHOLD }),
+            SchedulerKind::hguided()
+                .pipelined(3)
+                .stealing(StealPolicy::TailOnly { threshold: 1.5 }),
+            SchedulerKind::adaptive().stealing(StealPolicy::Eager),
+            SchedulerKind::adaptive()
+                .stealing(StealPolicy::TailOnly { threshold: DEFAULT_STEAL_THRESHOLD })
+                .pipelined(4),
+            SchedulerKind::dynamic(64).pipelined(3).stealing(StealPolicy::Eager),
         ];
         for k in kinds {
             let spec = k.spec();

@@ -34,13 +34,26 @@ impl Scheduler for Static {
 
     fn start(&mut self, total_granules: usize, granule: usize, devices: &[SchedDevice]) {
         self.granule = granule;
-        let props: Vec<f64> = match &self.props {
+        let mut props: Vec<f64> = match &self.props {
             Some(p) => {
                 assert_eq!(p.len(), devices.len(), "one proportion per device");
                 p.clone()
             }
             None => devices.iter().map(|d| d.power).collect(),
         };
+        // Float-ordering audit (PR-10): a poisoned proportion (NaN/inf
+        // power from a bad profile, or a negative user prop) must
+        // degrade, not trip `proportional_split`'s sum assertion. Bad
+        // entries get a zero share; an entirely-poisoned set falls back
+        // to equal shares (someone must compute).
+        for p in &mut props {
+            if !p.is_finite() || *p < 0.0 {
+                *p = 0.0;
+            }
+        }
+        if props.iter().sum::<f64>() <= 0.0 {
+            props = vec![1.0; props.len()];
+        }
         // Slice the dataset contiguously; delivery order decides which
         // device gets which region.
         let order: Vec<usize> = if self.reversed {
@@ -142,6 +155,34 @@ mod tests {
         // A package already delivered cannot be reclaimed from the scheduler.
         s.next_package(0).unwrap();
         assert!(s.reclaim_device(0).is_empty());
+    }
+
+    /// Float-ordering audit regression (PR-10): NaN profile powers used
+    /// to flow raw into `proportional_split`, whose `sum > 0` assertion
+    /// panics on a NaN sum. Poisoned entries must degrade to a zero
+    /// share — and an all-poisoned profile to equal shares — instead.
+    #[test]
+    fn nan_power_profile_degrades_instead_of_panicking() {
+        // One poisoned device: it gets nothing, the healthy one gets all.
+        let mut s = Static::new(None, false);
+        s.start(100, 1, &devs(&[f64::NAN, 1.0]));
+        assert!(s.next_package(0).is_none(), "NaN power → zero share");
+        assert_eq!(s.next_package(1).unwrap().len(), 100);
+
+        // Every device poisoned (NaN and negative): equal-share fallback.
+        let mut s = Static::new(None, false);
+        s.start(100, 1, &devs(&[f64::NAN, -3.0]));
+        let a = s.next_package(0).unwrap();
+        let b = s.next_package(1).unwrap();
+        assert_eq!(a.len(), 50);
+        assert_eq!(b.len(), 50);
+        assert_eq!(a.len() + b.len(), 100, "full cover");
+
+        // Explicit user props get the same sanitation.
+        let mut s = Static::new(Some(vec![f64::INFINITY, 1.0]), false);
+        s.start(10, 1, &devs(&[1.0, 1.0]));
+        assert!(s.next_package(0).is_none());
+        assert_eq!(s.next_package(1).unwrap().len(), 10);
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! Cooperative work stealing (spec suffix `+steal[:threshold|:eager]`).
+//!
+//! Every strategy in this crate is assign-once: a range handed to a
+//! device only moves if that device *dies* (the fault-recovery requeue).
+//! Under heavy-tailed package costs (the `collatz` hotspot band) the
+//! last package on the slowest device dictates the makespan while the
+//! fast devices idle. The stealing layer makes the fault path's
+//! involuntary migration voluntary: when a device goes dry, the master
+//! revokes assigned-but-unstarted ranges from the most backlogged
+//! victim and re-dispatches them to the thief through the normal
+//! `AssignBatch` path (flagged `stolen` in the traces).
+//!
+//! This module owns the three policy-level pieces, all deliberately
+//! free of engine state so the master loop and the `run --steal`
+//! virtual-clock bench price steals with the *same* code:
+//!
+//! * [`StealPolicy`] — off / tail-only (default threshold
+//!   [`DEFAULT_STEAL_THRESHOLD`]) / eager, parsed from the `+steal`
+//!   spec suffix in [`parse_spec`](super::parse_spec).
+//! * [`price_steal`] — the pricing rule: never steal work the victim
+//!   would finish before the thief's transfer-and-restart cost, sized
+//!   so victim and thief finish their shares together.
+//! * [`Stealing`] — the [`Scheduler`] wrapper (mirroring
+//!   [`Pipelined`](super::Pipelined)) that labels the run and forces a
+//!   pipeline deep enough that victims actually hold stealable backlog.
+
+use super::{PackageTiming, SchedDevice, Scheduler};
+use crate::coordinator::work::Range;
+
+/// Default tail-only profitability threshold: a steal must be priced to
+/// cut the victim's remaining time by >= 20% before the master issues
+/// it. High enough that regular (uniform-cost) kernels price every
+/// steal out near the tail, low enough that a hotspot band triggers.
+pub const DEFAULT_STEAL_THRESHOLD: f64 = 1.2;
+
+/// Minimum pipeline depth the [`Stealing`] wrapper forces. With the
+/// default double-buffered pipeline a worker holds only its in-flight
+/// package plus one staged prefetch — both excluded from yielding (the
+/// H2D transfer is already paid) — so nothing would ever be stealable.
+/// Depth 3 gives every victim at least one assigned-but-unstarted
+/// queue slot.
+pub const MIN_STEAL_PIPELINE: usize = 3;
+
+/// When (and how aggressively) the master steals for a dry device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StealPolicy {
+    /// Never steal — the assign-once baseline.
+    Off,
+    /// Steal only when priced clearly profitable: the victim's predicted
+    /// remaining time must exceed `threshold` times the post-steal
+    /// predicted finish (threshold >= 1.0; the `+steal` default is
+    /// [`DEFAULT_STEAL_THRESHOLD`]).
+    TailOnly { threshold: f64 },
+    /// Steal on any predicted improvement (threshold 1.0) — the
+    /// ablation bound; regular kernels measure its overhead.
+    Eager,
+}
+
+impl StealPolicy {
+    pub fn is_off(&self) -> bool {
+        matches!(self, StealPolicy::Off)
+    }
+
+    /// The profitability threshold this policy prices with.
+    pub fn threshold(&self) -> f64 {
+        match self {
+            StealPolicy::Off => f64::INFINITY,
+            StealPolicy::TailOnly { threshold } => *threshold,
+            StealPolicy::Eager => 1.0,
+        }
+    }
+
+    /// Label suffix (`RunReport::scheduler` spelling).
+    pub fn label_suffix(&self) -> &'static str {
+        match self {
+            StealPolicy::Off => "",
+            StealPolicy::TailOnly { .. } => "+steal",
+            StealPolicy::Eager => "+steal-eager",
+        }
+    }
+
+    /// Canonical spec suffix (round-trips through `parse_spec`).
+    pub fn spec_suffix(&self) -> String {
+        match self {
+            StealPolicy::Off => String::new(),
+            StealPolicy::TailOnly { threshold } if *threshold == DEFAULT_STEAL_THRESHOLD => {
+                "+steal".into()
+            }
+            StealPolicy::TailOnly { threshold } => format!("+steal:{threshold}"),
+            StealPolicy::Eager => "+steal:eager".into(),
+        }
+    }
+}
+
+/// Price one candidate steal: should the master move work from a victim
+/// with `backlog_items` assigned-but-unstarted work-items (out of
+/// `total_items` still outstanding on it, in-flight included) to a dry
+/// thief, given both devices' modeled rates in granules/sec?
+///
+/// Returns the number of work-items to request (granule-aligned, >= one
+/// granule) or `None` when the steal is priced out. The rule, in
+/// granule-time units (documented in ARCHITECTURE.md):
+///
+/// * share the yieldable backlog so both finish together:
+///   `S = backlog × r_t / (r_t + r_v)`, floored to a granule multiple;
+/// * charge the thief a restart surcharge of one granule's time
+///   (`C = 1/r_t`) — the H2D staging and ramp the victim has already
+///   paid for this work;
+/// * steal iff `T_old > threshold × T_new` where `T_old = W_v / r_v`
+///   and `T_new = max((W_v − S)/r_v, S/r_t + C)`.
+///
+/// A steal is therefore *never* issued for work the victim would finish
+/// before the thief could restart it — on uniform-cost kernels with a
+/// healthy balance the tail shares shrink below profitability and the
+/// policy stays quiet.
+pub fn price_steal(
+    policy: StealPolicy,
+    granule: usize,
+    backlog_items: usize,
+    total_items: usize,
+    victim_rate: f64,
+    thief_rate: f64,
+) -> Option<usize> {
+    if policy.is_off() || granule == 0 || backlog_items < granule {
+        return None;
+    }
+    let threshold = policy.threshold();
+    if !threshold.is_finite() || threshold < 1.0 {
+        return None;
+    }
+    let rv = if victim_rate.is_finite() { victim_rate.max(1e-9) } else { 1e-9 };
+    let rt = if thief_rate.is_finite() { thief_rate.max(1e-9) } else { 1e-9 };
+    let g = granule as f64;
+    // Finish-together share of the yieldable backlog, granule-floored
+    // (but at least one granule — a sub-granule ideal share still beats
+    // idling when the ratio test below passes).
+    let ideal = backlog_items as f64 * rt / (rt + rv);
+    let take_granules = ((ideal / g) as usize).max(1).min(backlog_items / granule);
+    let sg = take_granules as f64;
+    let wg = total_items as f64 / g;
+    let t_old = wg / rv;
+    let t_new = ((wg - sg).max(0.0) / rv).max(sg / rt + 1.0 / rt);
+    if t_old > threshold * t_new {
+        Some(take_granules * granule)
+    } else {
+        None
+    }
+}
+
+/// Scheduler wrapper enabling cooperative stealing over any strategy —
+/// the runtime object behind the `+steal` suffix. The steal machinery
+/// itself lives in the master loop (it needs the per-device pending
+/// ledgers and worker channels); this wrapper carries the policy into
+/// the run label and forces [`MIN_STEAL_PIPELINE`] so victims hold a
+/// stealable backlog, forwarding everything else to the wrapped
+/// strategy.
+pub struct Stealing {
+    inner: Box<dyn Scheduler>,
+    policy: StealPolicy,
+}
+
+impl Stealing {
+    pub fn new(inner: Box<dyn Scheduler>, policy: StealPolicy) -> Self {
+        Self { inner, policy }
+    }
+}
+
+impl Scheduler for Stealing {
+    fn name(&self) -> String {
+        format!("{}{}", self.inner.name(), self.policy.label_suffix())
+    }
+
+    fn start(&mut self, total_granules: usize, granule: usize, devices: &[SchedDevice]) {
+        self.inner.start(total_granules, granule, devices);
+    }
+
+    fn next_package(&mut self, dev: usize) -> Option<Range> {
+        self.inner.next_package(dev)
+    }
+
+    fn observe(&mut self, dev: usize, range: Range, timing: PackageTiming) {
+        self.inner.observe(dev, range, timing);
+    }
+
+    fn pipeline_depth(&self) -> usize {
+        self.inner.pipeline_depth().max(MIN_STEAL_PIPELINE)
+    }
+
+    fn reclaim_device(&mut self, dev: usize) -> Vec<Range> {
+        self.inner.reclaim_device(dev)
+    }
+
+    fn on_steal(&mut self, victim: usize, thief: usize, items: usize) {
+        self.inner.on_steal(victim, thief, items);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::Dynamic;
+
+    #[test]
+    fn off_never_prices_a_steal() {
+        assert_eq!(price_steal(StealPolicy::Off, 64, 640, 1280, 1.0, 100.0), None);
+    }
+
+    #[test]
+    fn sub_granule_backlog_is_not_stealable() {
+        let p = StealPolicy::Eager;
+        assert_eq!(price_steal(p, 64, 0, 1280, 1.0, 100.0), None);
+        assert_eq!(price_steal(p, 64, 63, 1280, 1.0, 100.0), None);
+        assert_eq!(price_steal(p, 0, 640, 1280, 1.0, 100.0), None, "zero granule");
+    }
+
+    #[test]
+    fn deep_backlog_on_a_slow_victim_is_stolen() {
+        // Victim: 10 granules queued + in-flight at 1 granule/sec (10s
+        // left). Thief at 10 granules/sec. Finish-together share ~9
+        // granules; post-steal finish ~1s — well past any threshold.
+        let take = price_steal(
+            StealPolicy::TailOnly { threshold: DEFAULT_STEAL_THRESHOLD },
+            64,
+            640,
+            704,
+            1.0,
+            10.0,
+        )
+        .expect("profitable steal");
+        assert_eq!(take % 64, 0, "granule-aligned");
+        assert!(take >= 64 && take <= 640, "within the backlog: {take}");
+        assert!(take >= 512, "most of the backlog moves to the 10x thief: {take}");
+    }
+
+    #[test]
+    fn near_finished_victim_is_priced_out() {
+        // One granule queued on an equal-rate victim: the thief's
+        // restart surcharge makes moving it pointless.
+        assert_eq!(
+            price_steal(StealPolicy::TailOnly { threshold: 1.2 }, 64, 64, 128, 1.0, 1.0),
+            None
+        );
+    }
+
+    #[test]
+    fn eager_threshold_is_tighter_than_tail_only() {
+        // A marginal imbalance (~25% win) that tail-only (1.2) takes
+        // and a stricter custom threshold refuses.
+        let args = (64usize, 320usize, 960usize, 1.0f64, 1.0f64);
+        let eager = price_steal(StealPolicy::Eager, args.0, args.1, args.2, args.3, args.4);
+        let strict = price_steal(
+            StealPolicy::TailOnly { threshold: 2.0 },
+            args.0,
+            args.1,
+            args.2,
+            args.3,
+            args.4,
+        );
+        assert!(eager.is_some(), "eager takes any predicted improvement");
+        assert_eq!(strict, None, "a 2.0 threshold prices the same steal out");
+    }
+
+    #[test]
+    fn poisoned_rates_do_not_panic_or_steal_everything() {
+        // NaN rates (a poisoned model) degrade to the epsilon clamp and
+        // still produce a bounded, aligned answer — never a panic.
+        let take = price_steal(StealPolicy::Eager, 64, 640, 1280, f64::NAN, f64::NAN);
+        if let Some(t) = take {
+            assert_eq!(t % 64, 0);
+            assert!(t <= 640);
+        }
+        assert_eq!(
+            price_steal(
+                StealPolicy::TailOnly { threshold: f64::NAN },
+                64,
+                640,
+                1280,
+                1.0,
+                10.0
+            ),
+            None,
+            "a NaN threshold refuses rather than panics"
+        );
+    }
+
+    #[test]
+    fn policy_suffixes_round_trip_shapes() {
+        assert_eq!(StealPolicy::Off.spec_suffix(), "");
+        assert_eq!(
+            StealPolicy::TailOnly { threshold: DEFAULT_STEAL_THRESHOLD }.spec_suffix(),
+            "+steal"
+        );
+        assert_eq!(StealPolicy::TailOnly { threshold: 1.5 }.spec_suffix(), "+steal:1.5");
+        assert_eq!(StealPolicy::Eager.spec_suffix(), "+steal:eager");
+        assert_eq!(StealPolicy::Eager.label_suffix(), "+steal-eager");
+        assert!(StealPolicy::Off.is_off());
+        assert_eq!(StealPolicy::Eager.threshold(), 1.0);
+    }
+
+    #[test]
+    fn wrapper_forces_a_stealable_pipeline() {
+        let s = Stealing::new(
+            Box::new(Dynamic::new(8)),
+            StealPolicy::TailOnly { threshold: DEFAULT_STEAL_THRESHOLD },
+        );
+        assert_eq!(s.pipeline_depth(), MIN_STEAL_PIPELINE);
+        assert_eq!(s.name(), "Dynamic 8+steal");
+    }
+}

@@ -9,4 +9,5 @@ pub mod perf;
 pub mod qos;
 pub mod runs;
 pub mod service;
+pub mod steal;
 pub mod traces;

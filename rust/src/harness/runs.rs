@@ -196,6 +196,7 @@ mod tests {
                         d2h_bytes: 0,
                         energy_j: 0.0,
                         requeued: false,
+                        stolen: false,
                     }],
                     xfer: Default::default(),
                     lease_wait: Default::default(),
@@ -206,6 +207,7 @@ mod tests {
                 })
                 .collect(),
             faults: Vec::new(),
+            steals_issued: 0,
         }
     }
 

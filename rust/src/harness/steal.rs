@@ -1,0 +1,754 @@
+//! `run --steal` — the tail-squashing work-stealing sweep (PR-10
+//! acceptance bench), emitted as `BENCH_steal.json`.
+//!
+//! Sweeps {HGuided, Adaptive} × {off, tail-only, eager} × {binomial,
+//! collatz} through a depth-[`STEAL_BENCH_DEPTH`] pipelined virtual-time
+//! drain that mirrors the master loop's stealing machinery: real
+//! [`Scheduler`] instances fill per-device prefetch queues, a
+//! master-side [`ThroughputModel`] (same [`STEAL_MODEL_ALPHA`] as the
+//! runtime) prices candidate steals with the real [`price_steal`], and a
+//! profitable steal absorbs the victim's queue from the back — splitting
+//! the deepest entry at a granule boundary, never touching the two
+//! shielded slots (in-flight plus staged) the worker cannot yield.
+//! The whole sweep is a pure function of the seed; the CI steal-suite
+//! diffs two invocations byte-for-byte.
+//!
+//! The straggler workload is the `collatz` kernel: its hot band sits at
+//! the *front* of the index space, so the cold-start prior hands the hot
+//! granules out in its largest, least-informed prefetch batches — the
+//! queues are stale before the first observation can return, and the
+//! victim's backlog is exactly what cooperative stealing exists to
+//! revoke. `binomial` (regular, uniform cost) rides along to pin the
+//! other side of the contract: on a well-balanced kernel the pricing
+//! rule keeps the policy quiet.
+//!
+//! Honesty note: a stolen package is charged a restart surcharge of one
+//! granule-time on the thief — the same `C = 1/r_t` the pricing rule
+//! charges — so the sim can never claim a win the pricing model did not
+//! pay for.
+//!
+//! The `--steal` guard asserts, per base scheduler:
+//!
+//! * collatz, tail-only vs off: makespan shrinks to <=
+//!   [`STEAL_GUARD_SPEEDUP`] of no-steal AND balance efficiency gains >=
+//!   [`STEAL_GUARD_BALANCE`], with at least one steal issued;
+//! * binomial: tail-only and eager stay within
+//!   [`STEAL_GUARD_OVERHEAD`] of no-steal makespan.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::runtime::STEAL_MODEL_ALPHA;
+use crate::coordinator::scheduler::{
+    price_steal, PackageTiming, SchedDevice, Scheduler, SchedulerKind, StealPolicy,
+    ThroughputModel, DEFAULT_STEAL_THRESHOLD,
+};
+use crate::coordinator::work::Range;
+use crate::platform::NodeConfig;
+use crate::runtime::kernels::collatz_item_steps;
+use crate::runtime::ArtifactRegistry;
+use crate::util::rng::XorShift;
+
+/// Pipeline depth of every cell (steal and no-steal alike, so the
+/// comparison isolates the policy): deep enough that a victim holds a
+/// stealable backlog beyond its two shielded slots, and the depth at
+/// which cold-start prefetch staleness makes the straggler band hurt.
+pub const STEAL_BENCH_DEPTH: usize = 4;
+/// Guard: tail-only stealing must shrink the collatz makespan to at
+/// most this fraction of the no-steal run (>= 10% improvement).
+pub const STEAL_GUARD_SPEEDUP: f64 = 0.90;
+/// Guard: tail-only stealing must lift collatz balance efficiency by at
+/// least this much over the no-steal run.
+pub const STEAL_GUARD_BALANCE: f64 = 0.05;
+/// Guard: stealing may cost a regular kernel at most 1% makespan.
+pub const STEAL_GUARD_OVERHEAD: f64 = 1.01;
+/// Queue slots a victim never yields: the in-flight package plus the
+/// staged prefetch (the master's `shielded` for pipelined workers).
+const SHIELDED: usize = 2;
+
+/// Kernels of the sweep: one regular control, one heavy-tailed straggler.
+pub fn steal_kernels() -> Vec<&'static str> {
+    vec!["binomial", "collatz"]
+}
+
+/// Base strategies the policies wrap, in column order.
+pub fn steal_bases() -> Vec<&'static str> {
+    vec!["hguided", "adaptive"]
+}
+
+/// Steal policies compared per base, in column order.
+pub fn steal_policies() -> Vec<(&'static str, StealPolicy)> {
+    vec![
+        ("off", StealPolicy::Off),
+        ("tail", StealPolicy::TailOnly { threshold: DEFAULT_STEAL_THRESHOLD }),
+        ("eager", StealPolicy::Eager),
+    ]
+}
+
+fn base_kind(base: &str) -> SchedulerKind {
+    match base {
+        "hguided" => SchedulerKind::hguided(),
+        "adaptive" => SchedulerKind::adaptive(),
+        other => panic!("unknown steal-bench base {other}"),
+    }
+}
+
+/// Knobs of the sweep (CLI: `run --steal [--seed S] [--quick]`).
+///
+/// `quick` is accepted for CLI symmetry with the other suites and
+/// recorded in the artifact; the sweep itself is already sub-second
+/// (12 virtual drains), so quick mode runs the identical grid.
+#[derive(Debug, Clone)]
+pub struct StealBenchConfig {
+    pub seed: u64,
+    pub quick: bool,
+}
+
+impl Default for StealBenchConfig {
+    fn default() -> Self {
+        Self { seed: 7, quick: false }
+    }
+}
+
+/// One (kernel × base × policy) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct StealCell {
+    pub kernel: String,
+    pub base: &'static str,
+    pub policy: &'static str,
+    /// Canonical scheduler spec of the drained kind (round-trips
+    /// through `parse_spec`).
+    pub spec: String,
+    /// Virtual-seconds makespan of the drain.
+    pub makespan_s: f64,
+    /// Mean device utilization: sum(busy) / (ndev × makespan).
+    pub balance_eff: f64,
+    /// Steals the master issued (every issued steal moved work — the
+    /// sim has no in-flight races, so no empty yields).
+    pub steals: usize,
+    /// Work-items moved victim→thief across all steals.
+    pub items_moved: usize,
+    pub packages: usize,
+    /// Total device idle under the makespan (the tail the policy is
+    /// meant to squash).
+    pub idle_s: f64,
+}
+
+/// The full `run --steal` result.
+#[derive(Debug)]
+pub struct StealBench {
+    pub node: String,
+    pub seed: u64,
+    pub quick: bool,
+    pub depth: usize,
+    /// Row-major: kernels × bases × [`steal_policies`] order.
+    pub cells: Vec<StealCell>,
+}
+
+impl StealBench {
+    pub fn cell(&self, kernel: &str, base: &str, policy: &str) -> Option<&StealCell> {
+        self.cells
+            .iter()
+            .find(|c| c.kernel == kernel && c.base == base && c.policy == policy)
+    }
+
+    /// The `BENCH_steal.json` artifact — hand-rolled like the other
+    /// bench emitters (no serde offline). Every field derives from the
+    /// seeded virtual-time sweep, so same-seed invocations are
+    /// byte-identical.
+    pub fn json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"node\": \"{}\",\n", self.node));
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"depth\": {},\n", self.depth));
+        s.push_str("  \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"kernel\": \"{}\", \"base\": \"{}\", \"policy\": \"{}\", \
+                 \"spec\": \"{}\", \"makespan_s\": {:.4}, \"balance_eff\": {:.4}, \
+                 \"steals\": {}, \"items_moved\": {}, \"packages\": {}, \
+                 \"idle_s\": {:.4}}}{}\n",
+                c.kernel,
+                c.base,
+                c.policy,
+                c.spec,
+                c.makespan_s,
+                c.balance_eff,
+                c.steals,
+                c.items_moved,
+                c.packages,
+                c.idle_s,
+                if i + 1 < self.cells.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"headline\": [\n");
+        let bases = steal_bases();
+        for (i, base) in bases.iter().enumerate() {
+            let (speedup_pct, balance_gain) = match (
+                self.cell("collatz", base, "off"),
+                self.cell("collatz", base, "tail"),
+            ) {
+                (Some(off), Some(st)) if off.makespan_s > 0.0 => (
+                    100.0 * (off.makespan_s - st.makespan_s) / off.makespan_s,
+                    st.balance_eff - off.balance_eff,
+                ),
+                _ => (0.0, 0.0),
+            };
+            s.push_str(&format!(
+                "    {{\"base\": \"{base}\", \"collatz_speedup_pct\": {speedup_pct:.4}, \
+                 \"collatz_balance_gain\": {balance_gain:.4}}}{}\n",
+                if i + 1 < bases.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// The CI guard (`ECL_BENCH_GUARD=1`): tail-only stealing squashes
+    /// the straggler tail on both bases and never taxes the regular
+    /// kernel.
+    pub fn guard(&self) -> Result<()> {
+        for c in &self.cells {
+            anyhow::ensure!(
+                c.makespan_s.is_finite() && c.makespan_s > 0.0,
+                "degenerate steal cell {}/{}/{}: makespan {:.4}s",
+                c.kernel,
+                c.base,
+                c.policy,
+                c.makespan_s
+            );
+        }
+        for base in steal_bases() {
+            let off = self
+                .cell("collatz", base, "off")
+                .ok_or_else(|| anyhow::anyhow!("missing collatz/{base}/off cell"))?;
+            let st = self
+                .cell("collatz", base, "tail")
+                .ok_or_else(|| anyhow::anyhow!("missing collatz/{base}/tail cell"))?;
+            anyhow::ensure!(
+                st.steals > 0,
+                "steal regression ({base}): no steal issued on the straggler kernel"
+            );
+            anyhow::ensure!(
+                st.makespan_s <= STEAL_GUARD_SPEEDUP * off.makespan_s,
+                "steal regression ({base}): collatz makespan {:.4}s vs no-steal {:.4}s \
+                 (must be <= {:.0}%)",
+                st.makespan_s,
+                off.makespan_s,
+                STEAL_GUARD_SPEEDUP * 100.0
+            );
+            anyhow::ensure!(
+                st.balance_eff >= off.balance_eff + STEAL_GUARD_BALANCE,
+                "steal regression ({base}): collatz balance {:.3} vs no-steal {:.3} \
+                 (must gain >= {:.2})",
+                st.balance_eff,
+                off.balance_eff,
+                STEAL_GUARD_BALANCE
+            );
+            let off_b = self
+                .cell("binomial", base, "off")
+                .ok_or_else(|| anyhow::anyhow!("missing binomial/{base}/off cell"))?;
+            for (policy, _) in steal_policies().into_iter().filter(|(p, _)| *p != "off") {
+                let c = self
+                    .cell("binomial", base, policy)
+                    .ok_or_else(|| anyhow::anyhow!("missing binomial/{base}/{policy} cell"))?;
+                anyhow::ensure!(
+                    c.makespan_s <= STEAL_GUARD_OVERHEAD * off_b.makespan_s,
+                    "steal overhead ({base}/{policy}): binomial makespan {:.4}s vs \
+                     no-steal {:.4}s (must stay within {:.0}%)",
+                    c.makespan_s,
+                    off_b.makespan_s,
+                    (STEAL_GUARD_OVERHEAD - 1.0) * 100.0
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-granule cost weights, normalized so their sum equals the granule
+/// count — rates stay in nominal granules/sec while hot granules charge
+/// their true multiple. For `collatz` the weights come from the exact
+/// per-item cost helper the native kernel executes
+/// ([`collatz_item_steps`] — a kernel test pins the lockstep); every
+/// other kernel is uniform.
+fn granule_weights(reg: &ArtifactRegistry, kernel: &str) -> Result<Vec<f64>> {
+    let bench = reg.bench(kernel)?;
+    let g_count = (bench.n / bench.granule).max(1);
+    if kernel != "collatz" {
+        return Ok(vec![1.0; g_count]);
+    }
+    let mut raw = Vec::with_capacity(g_count);
+    for g in 0..g_count {
+        let mut w = 0.0f64;
+        for p in g * bench.granule..(g + 1) * bench.granule {
+            w += collatz_item_steps(bench, p)? as f64;
+        }
+        raw.push(w);
+    }
+    let total: f64 = raw.iter().sum();
+    anyhow::ensure!(total > 0.0, "collatz weights must be positive");
+    Ok(raw.iter().map(|w| w * g_count as f64 / total).collect())
+}
+
+/// Seeded per-(kernel, device) rates, energy-suite style: relative
+/// power, jittered ±4% and normalized so the uncontended all-device
+/// ideal makespan is ~1 virtual second. Drawn in one fixed pass so the
+/// RNG stream never depends on drain outcomes.
+fn kernel_rates(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    kernels: &[&'static str],
+    seed: u64,
+) -> Result<Vec<(usize, Vec<f64>)>> {
+    let total_power: f64 = node.devices.iter().map(|d| d.relative_power).sum();
+    anyhow::ensure!(total_power > 0.0, "node {} has no compute power", node.name);
+    let mut rng = XorShift::new(seed ^ 0x57EA_15E5);
+    let mut out = Vec::with_capacity(kernels.len());
+    for kernel in kernels {
+        let bench = reg.bench(kernel)?;
+        anyhow::ensure!(bench.granule > 0, "bench {kernel} has zero granule");
+        let granules = (bench.n / bench.granule).max(1);
+        let base = granules as f64 / total_power;
+        let rates: Vec<f64> = node
+            .devices
+            .iter()
+            .map(|d| base * d.relative_power.max(1e-6) * (0.96 + 0.08 * rng.next_f64()))
+            .collect();
+        out.push((granules, rates));
+    }
+    Ok(out)
+}
+
+/// The virtual-clock drain: an event-driven mirror of the master loop's
+/// pipelined dispatch plus stealing. Each device executes its queue
+/// front; completions feed the scheduler and the pricing model; a dry,
+/// un-refused device triggers the master's steal pass (victim with the
+/// worst predicted remaining time among profitably priced candidates).
+struct Sim<'a> {
+    granule: usize,
+    total_items: usize,
+    weights: &'a [f64],
+    rates: &'a [f64],
+    sched: Box<dyn Scheduler>,
+    policy: StealPolicy,
+    depth: usize,
+    /// Master-side pending ledger per device: front = in-flight once
+    /// started; the bool marks a stolen (pool-sourced) package.
+    pending: Vec<VecDeque<(Range, bool)>>,
+    /// Virtual finish time of the in-flight front, when running.
+    running: Vec<Option<f64>>,
+    busy: Vec<f64>,
+    done_at: Vec<f64>,
+    dry: Vec<bool>,
+    refused: Vec<bool>,
+    completed_items: usize,
+    /// Yielded ranges awaiting re-dispatch (thief first).
+    pool: VecDeque<(Range, bool)>,
+    model: ThroughputModel,
+    steals: usize,
+    items_moved: usize,
+    packages: usize,
+    now: f64,
+}
+
+impl<'a> Sim<'a> {
+    fn new(
+        kind: &SchedulerKind,
+        policy: StealPolicy,
+        node: &NodeConfig,
+        granules: usize,
+        granule: usize,
+        weights: &'a [f64],
+        rates: &'a [f64],
+    ) -> Self {
+        let mut sched = kind.build();
+        // Cold start by design: the straggler story is the prior-driven
+        // prefetch committed before the first observations return.
+        let sdevs: Vec<SchedDevice> = node
+            .devices
+            .iter()
+            .map(|d| SchedDevice::new(d.name.clone(), d.relative_power))
+            .collect();
+        sched.start(granules, granule, &sdevs);
+        let mut model = ThroughputModel::new(STEAL_MODEL_ALPHA);
+        model.start(&sdevs);
+        let ndev = node.devices.len();
+        Self {
+            granule,
+            total_items: granules * granule,
+            weights,
+            rates,
+            depth: sched.pipeline_depth().max(1),
+            sched,
+            policy,
+            pending: vec![VecDeque::new(); ndev],
+            running: vec![None; ndev],
+            busy: vec![0.0; ndev],
+            done_at: vec![0.0; ndev],
+            dry: vec![false; ndev],
+            refused: vec![false; ndev],
+            completed_items: 0,
+            pool: VecDeque::new(),
+            model,
+            steals: 0,
+            items_moved: 0,
+            packages: 0,
+            now: 0.0,
+        }
+    }
+
+    fn ndev(&self) -> usize {
+        self.rates.len()
+    }
+
+    /// Virtual cost of `range` in granule-units (hot granules charge
+    /// their true weight).
+    fn weight(&self, range: Range) -> f64 {
+        let gb = range.begin / self.granule;
+        let ge = range.end / self.granule;
+        self.weights[gb..ge].iter().sum()
+    }
+
+    /// Refill `dev`'s queue to the pipeline depth: steal pool first
+    /// (the master's re-dispatch), then the scheduler. A `None` from a
+    /// scheduler that has undelivered work left is a deliberate refusal
+    /// (tail cutoff) — such a device never thieves.
+    fn top_up(&mut self, dev: usize) {
+        while self.pending[dev].len() < self.depth {
+            if let Some(entry) = self.pool.pop_front() {
+                self.pending[dev].push_back(entry);
+                continue;
+            }
+            if self.dry[dev] {
+                break;
+            }
+            match self.sched.next_package(dev) {
+                Some(r) => self.pending[dev].push_back((r, false)),
+                None => {
+                    self.dry[dev] = true;
+                    let in_ledgers: usize = self
+                        .pending
+                        .iter()
+                        .map(|q| q.iter().map(|(r, _)| r.len()).sum::<usize>())
+                        .sum();
+                    if self.completed_items + in_ledgers < self.total_items {
+                        self.refused[dev] = true;
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Start the queue front executing, if idle and non-empty. A stolen
+    /// package pays the one-granule-time restart surcharge the pricing
+    /// rule charged for it.
+    fn start_dev(&mut self, dev: usize) {
+        if self.running[dev].is_none() {
+            if let Some(&(range, stolen)) = self.pending[dev].front() {
+                let mut w = self.weight(range);
+                if stolen {
+                    w += 1.0;
+                }
+                self.running[dev] = Some(self.now + w / self.rates[dev]);
+            }
+        }
+    }
+
+    /// The master's steal pass on behalf of a dry `thief`: price every
+    /// candidate victim's unshielded backlog, pick the one predicted to
+    /// finish last, absorb from the back of its queue at a granule
+    /// boundary, and re-dispatch (thief first).
+    fn try_steal(&mut self, thief: usize) {
+        if self.policy.is_off()
+            || !self.dry[thief]
+            || self.refused[thief]
+            || !self.pending[thief].is_empty()
+            || !self.pool.is_empty()
+        {
+            return;
+        }
+        let thief_rate = self.model.rate(thief);
+        // (victim, items to request, predicted remaining time).
+        let mut best: Option<(usize, usize, f64)> = None;
+        for v in 0..self.ndev() {
+            if v == thief {
+                continue;
+            }
+            let backlog: usize =
+                self.pending[v].iter().skip(SHIELDED).map(|(r, _)| r.len()).sum();
+            if backlog < self.granule {
+                continue;
+            }
+            let total: usize = self.pending[v].iter().map(|(r, _)| r.len()).sum();
+            let victim_rate = self.model.rate(v);
+            let Some(take) = price_steal(
+                self.policy,
+                self.granule,
+                backlog,
+                total,
+                victim_rate,
+                thief_rate,
+            ) else {
+                continue;
+            };
+            let t_old = total as f64 / (self.granule as f64 * victim_rate.max(1e-9));
+            if best.map_or(true, |(_, _, t)| t_old > t) {
+                best = Some((v, take, t_old));
+            }
+        }
+        let Some((victim, take, _)) = best else { return };
+        // Absorb from the back of the victim's queue — whole entries
+        // while they fit, then a granule-boundary split of the deepest
+        // remaining entry — exactly the worker's truncation rule. The
+        // shielded slots are never touched.
+        let mut budget = take;
+        let mut moved: Vec<Range> = Vec::new();
+        while budget >= self.granule && self.pending[victim].len() > SHIELDED {
+            let &(back, _) = self.pending[victim].back().expect("len > SHIELDED");
+            if back.len() <= budget {
+                self.pending[victim].pop_back();
+                budget -= back.len();
+                moved.push(back);
+            } else {
+                let keep_items = back.len() - budget;
+                let keep_granules = keep_items.div_ceil(self.granule);
+                let cut = back.begin + keep_granules * self.granule;
+                if cut < back.end {
+                    moved.push(Range::new(cut, back.end));
+                    self.pending[victim].back_mut().expect("len > SHIELDED").0.end = cut;
+                }
+                break;
+            }
+        }
+        if moved.is_empty() {
+            return;
+        }
+        let items: usize = moved.iter().map(Range::len).sum();
+        self.steals += 1;
+        self.items_moved += items;
+        self.sched.on_steal(victim, thief, items);
+        for r in moved {
+            self.pool.push_back((r, true));
+        }
+        self.top_up(thief);
+        self.top_up(victim);
+        if !self.pool.is_empty() {
+            for d in 0..self.ndev() {
+                self.top_up(d);
+            }
+        }
+        for d in 0..self.ndev() {
+            self.start_dev(d);
+        }
+    }
+
+    /// Drain to completion; returns (makespan, balance, idle).
+    fn run(&mut self) -> (f64, f64, f64) {
+        for d in 0..self.ndev() {
+            self.top_up(d);
+            self.start_dev(d);
+        }
+        for d in 0..self.ndev() {
+            self.try_steal(d);
+        }
+        loop {
+            // Next completion: earliest finish, lowest index on ties.
+            let mut next: Option<usize> = None;
+            for d in 0..self.ndev() {
+                if let Some(t) = self.running[d] {
+                    if next.map_or(true, |n| t < self.running[n].expect("running")) {
+                        next = Some(d);
+                    }
+                }
+            }
+            let Some(dev) = next else { break };
+            self.now = self.running[dev].take().expect("selected running device");
+            let (range, stolen) = self.pending[dev].pop_front().expect("in-flight front");
+            let mut w = self.weight(range);
+            if stolen {
+                w += 1.0;
+            }
+            let span = w / self.rates[dev];
+            self.busy[dev] += span;
+            self.done_at[dev] = self.now;
+            self.completed_items += range.len();
+            self.packages += 1;
+            let granules = range.len() as f64 / self.granule as f64;
+            let timing = PackageTiming {
+                span: Duration::from_secs_f64(span),
+                raw_exec: Duration::from_secs_f64(span),
+            };
+            self.sched.observe(dev, range, timing);
+            self.model.observe(dev, granules, Duration::from_secs_f64(span));
+            self.top_up(dev);
+            self.start_dev(dev);
+            for t in 0..self.ndev() {
+                self.try_steal(t);
+            }
+        }
+        assert_eq!(
+            self.completed_items, self.total_items,
+            "virtual drain must execute the pool exactly once"
+        );
+        let makespan = self.done_at.iter().copied().fold(0.0, f64::max);
+        let total_busy: f64 = self.busy.iter().sum();
+        let balance = if makespan > 0.0 {
+            total_busy / (self.ndev() as f64 * makespan)
+        } else {
+            1.0
+        };
+        let idle = (self.ndev() as f64 * makespan - total_busy).max(0.0);
+        (makespan, balance, idle)
+    }
+}
+
+/// Run the sweep over the full grid.
+pub fn run_steal(
+    reg: &ArtifactRegistry,
+    node: &NodeConfig,
+    cfg: &StealBenchConfig,
+) -> Result<StealBench> {
+    let kernels = steal_kernels();
+    let shapes = kernel_rates(reg, node, &kernels, cfg.seed)?;
+    let mut cells =
+        Vec::with_capacity(kernels.len() * steal_bases().len() * steal_policies().len());
+    for (kernel, (granules, rates)) in kernels.iter().zip(&shapes) {
+        let granule = reg.bench(kernel)?.granule;
+        let weights = granule_weights(reg, kernel)?;
+        for base in steal_bases() {
+            for (policy_name, policy) in steal_policies() {
+                let kind = base_kind(base).pipelined(STEAL_BENCH_DEPTH).stealing(policy);
+                let mut sim =
+                    Sim::new(&kind, policy, node, *granules, granule, &weights, rates);
+                let (makespan, balance, idle) = sim.run();
+                cells.push(StealCell {
+                    kernel: kernel.to_string(),
+                    base,
+                    policy: policy_name,
+                    spec: kind.spec(),
+                    makespan_s: makespan,
+                    balance_eff: balance,
+                    steals: sim.steals,
+                    items_moved: sim.items_moved,
+                    packages: sim.packages,
+                    idle_s: idle,
+                });
+            }
+        }
+    }
+    Ok(StealBench {
+        node: node.name.clone(),
+        seed: cfg.seed,
+        quick: cfg.quick,
+        depth: STEAL_BENCH_DEPTH,
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn bench(seed: u64, quick: bool) -> StealBench {
+        let reg = ArtifactRegistry::synthetic();
+        let node = NodeConfig::batel();
+        let cfg = StealBenchConfig { seed, quick };
+        run_steal(&reg, &node, &cfg).unwrap()
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical() {
+        let a = bench(7, false);
+        let b = bench(7, false);
+        assert_eq!(a.json(), b.json(), "steal sweep must be a pure function of the seed");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(bench(7, false).json(), bench(8, false).json());
+    }
+
+    #[test]
+    fn reference_sweep_clears_the_guard() {
+        let b = bench(7, false);
+        assert!(b.guard().is_ok(), "guard failed:\n{}\n{:?}", b.json(), b.guard());
+        assert_eq!(b.cells.len(), 12, "2 kernels x 2 bases x 3 policies");
+    }
+
+    #[test]
+    fn quick_sweep_clears_the_guard_too() {
+        // CI runs the guard in quick mode (the grid is identical; the
+        // flag is recorded so artifacts are self-describing).
+        let b = bench(7, true);
+        assert!(b.guard().is_ok(), "quick guard: {}", b.json());
+        assert!(b.quick);
+    }
+
+    #[test]
+    fn pricing_keeps_the_regular_kernel_quiet() {
+        // On binomial the balance is healthy, so every candidate steal
+        // must be priced out — zero moves under the tail-only policy at
+        // the reference seed.
+        let b = bench(7, false);
+        for base in steal_bases() {
+            let c = b.cell("binomial", base, "tail").unwrap();
+            assert_eq!(
+                c.items_moved, 0,
+                "binomial/{base}: tail-only policy moved work on a regular kernel"
+            );
+        }
+    }
+
+    #[test]
+    fn straggler_tail_is_squashed_with_real_steals() {
+        let b = bench(7, false);
+        for base in steal_bases() {
+            let off = b.cell("collatz", base, "off").unwrap();
+            let st = b.cell("collatz", base, "tail").unwrap();
+            assert!(st.steals > 0, "{base}: no steals on the straggler");
+            assert!(st.items_moved > 0, "{base}: steals must move items");
+            assert!(
+                st.idle_s < off.idle_s,
+                "{base}: stealing must shrink tail idle ({:.3} vs {:.3})",
+                st.idle_s,
+                off.idle_s
+            );
+        }
+    }
+
+    #[test]
+    fn json_is_parseable_with_headline() {
+        let b = bench(7, false);
+        let doc = Json::parse(&b.json()).expect("valid JSON");
+        assert_eq!(doc.get("node").and_then(Json::as_str), Some("batel"));
+        assert_eq!(doc.get("depth").and_then(Json::as_f64), Some(STEAL_BENCH_DEPTH as f64));
+        let cells = doc.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 12);
+        let headline = doc.get("headline").and_then(Json::as_arr).unwrap();
+        assert_eq!(headline.len(), 2);
+        for h in headline {
+            let speedup = h.get("collatz_speedup_pct").and_then(Json::as_f64).unwrap();
+            assert!(speedup >= 10.0, "headline speedup below the guard: {speedup}");
+        }
+    }
+
+    #[test]
+    fn specs_carry_the_policy_suffix() {
+        let b = bench(7, false);
+        let tail = b.cell("collatz", "hguided", "tail").unwrap();
+        assert!(tail.spec.ends_with("+steal"), "spec {}", tail.spec);
+        let eager = b.cell("collatz", "adaptive", "eager").unwrap();
+        assert!(eager.spec.ends_with("+steal:eager"), "spec {}", eager.spec);
+        let off = b.cell("collatz", "hguided", "off").unwrap();
+        assert!(!off.spec.contains("steal"), "spec {}", off.spec);
+    }
+}

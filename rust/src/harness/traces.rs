@@ -89,6 +89,7 @@ mod tests {
                 d2h_bytes: 0,
                 energy_j: 0.1,
                 requeued: false,
+                stolen: false,
             }],
             xfer: TransferStats::default(),
             lease_wait: Duration::ZERO,
@@ -105,6 +106,7 @@ mod tests {
             wall: Duration::from_millis(5),
             devices: vec![d],
             faults: Vec::new(),
+            steals_issued: 0,
         };
         assert_eq!(super::chunk_series(&report).len(), 1);
     }

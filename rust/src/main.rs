@@ -5,7 +5,7 @@ use anyhow::Result;
 
 use enginecl::coordinator::{scheduler, DeviceSpec, LeasePolicy};
 use enginecl::harness::{
-    balance, concurrent, energy, init, overhead, perf, qos, runs, service, traces,
+    balance, concurrent, energy, init, overhead, perf, qos, runs, service, steal, traces,
 };
 use enginecl::platform::{FaultPlan, NodeConfig};
 use enginecl::runtime::ArtifactRegistry;
@@ -79,6 +79,18 @@ USAGE:
                          --seed S), and with ECL_BENCH_GUARD=1 fails
                          on a coalescing, cache or fairness
                          regression. --quick shrinks the storm.
+                        [--steal] runs the PR-10 work-stealing sweep:
+                         {hguided, adaptive} x {off, tail-only, eager}
+                         x {binomial, collatz} through the pipelined
+                         virtual-time drain (real schedulers, real
+                         steal pricing), writes BENCH_steal.json
+                         (makespan, balance efficiency, steals,
+                         items moved; byte-identical for a fixed
+                         --seed S), and with ECL_BENCH_GUARD=1 fails
+                         unless tail-only stealing cuts the collatz
+                         straggler makespan >= 10% and lifts balance
+                         >= 0.05 on both bases while binomial stays
+                         within 1% of no-steal.
   enginecl solo <bench> [--node N]         per-device solo times + S_max
   enginecl overhead <bench> [--device I] [--reps N]
   enginecl eval [--node N] [--reps N]      balance/speedup/efficiency grid
@@ -187,6 +199,9 @@ fn run(args: &Args) -> Result<()> {
     }
     if args.has_flag("energy") {
         return energy_cmd(args);
+    }
+    if args.has_flag("steal") {
+        return steal_cmd(args);
     }
     if let Some(raw) = args.get("concurrent") {
         let n: usize = raw
@@ -461,6 +476,63 @@ fn energy_cmd(args: &Args) -> Result<()> {
     if std::env::var("ECL_BENCH_GUARD").map(|v| v == "1").unwrap_or(false) {
         bench.guard()?;
         println!("guard passed: EDP objective wins on >= 4/5 kernels, power cap clean");
+    }
+    Ok(())
+}
+
+/// `run --steal`: the PR-10 work-stealing sweep — straggler and regular
+/// kernels × base schedulers × steal policies through the pipelined
+/// virtual-time drain, the `BENCH_steal.json` artifact, and the
+/// `ECL_BENCH_GUARD=1` tail-squash / zero-overhead guard.
+fn steal_cmd(args: &Args) -> Result<()> {
+    let node = node_from(args);
+    let reg = ArtifactRegistry::discover()?;
+    let cfg = steal::StealBenchConfig {
+        seed: args.get_usize("seed", 7) as u64,
+        quick: args.has_flag("quick") || runs::quick_mode(),
+    };
+    let bench = steal::run_steal(&reg, &node, &cfg)?;
+    println!(
+        "steal sweep: node={} seed={} quick={} depth={}",
+        bench.node, bench.seed, bench.quick, bench.depth
+    );
+    println!(
+        "{:<11} {:<10} {:<7} {:>11} {:>9} {:>7} {:>7} {:>6} {:>9}",
+        "kernel", "base", "policy", "makespan(s)", "balance", "steals", "moved", "pkgs", "idle(s)"
+    );
+    for c in &bench.cells {
+        println!(
+            "{:<11} {:<10} {:<7} {:>11.4} {:>9.3} {:>7} {:>7} {:>6} {:>9.4}",
+            c.kernel,
+            c.base,
+            c.policy,
+            c.makespan_s,
+            c.balance_eff,
+            c.steals,
+            c.items_moved,
+            c.packages,
+            c.idle_s
+        );
+    }
+    for base in steal::steal_bases() {
+        if let (Some(off), Some(st)) =
+            (bench.cell("collatz", base, "off"), bench.cell("collatz", base, "tail"))
+        {
+            println!(
+                "collatz/{base}: tail-only cuts makespan {:.1}% (balance {:.3} -> {:.3})",
+                100.0 * (off.makespan_s - st.makespan_s) / off.makespan_s,
+                off.balance_eff,
+                st.balance_eff
+            );
+        }
+    }
+    let json_path =
+        std::env::var("ECL_BENCH_JSON").unwrap_or_else(|_| "BENCH_steal.json".into());
+    std::fs::write(&json_path, bench.json())?;
+    println!("steal artifact written to {json_path}");
+    if std::env::var("ECL_BENCH_GUARD").map(|v| v == "1").unwrap_or(false) {
+        bench.guard()?;
+        println!("guard passed: straggler tail squashed, regular kernels untaxed");
     }
     Ok(())
 }

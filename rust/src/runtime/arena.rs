@@ -169,6 +169,39 @@ impl OutputArena {
         }
     }
 
+    /// Partial revoke for work stealing: release `[begin, end)` when it
+    /// is an exact claim, or the *tail* of a wider claim `[b, end)` with
+    /// `b < begin` — that claim shrinks to `[b, begin)`, and the freed
+    /// suffix becomes claimable by the thief. Returns `false` (and
+    /// changes nothing) when no claim covers the range that way — the
+    /// normal case for stolen ranges, which are assigned-but-unstarted
+    /// and were never claimed; the master calls this defensively.
+    ///
+    /// `begin` and `end` must stay granule-aligned (steals are sized in
+    /// granules) or the thief's re-claim of the suffix would be
+    /// rejected; the shrink itself keeps the surviving prefix aligned
+    /// because the original claim was.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`revoke`](Self::revoke), narrowed to the
+    /// suffix: the victim has acked the steal, so no live window will
+    /// ever write an element of `[begin, end)` again. The surviving
+    /// prefix `[b, begin)` may still be written by its owner — the
+    /// ledger keeps it claimed, so nobody else can touch it.
+    pub unsafe fn revoke_tail(&self, begin: usize, end: usize) -> bool {
+        let mut claims = self.claims.lock().unwrap();
+        if let Some(i) = claims.iter().position(|&(b, e)| b == begin && e == end) {
+            claims.swap_remove(i);
+            return true;
+        }
+        if let Some(c) = claims.iter_mut().find(|&&mut (b, e)| e == end && b < begin) {
+            c.1 = begin;
+            return true;
+        }
+        false
+    }
+
     /// Item-ranges claimed so far (sorted), for coverage checks.
     pub fn claimed_ranges(&self) -> Vec<(usize, usize)> {
         let mut v = self.claims.lock().unwrap().clone();
@@ -294,6 +327,44 @@ mod tests {
         assert_eq!(a.claimed_items(), 64);
         let bufs = a.into_buffers();
         assert!(bufs[0][..32].iter().all(|&x| x == 9.0), "rewrite overwrote the poison");
+    }
+
+    #[test]
+    fn revoke_tail_shrinks_a_wider_claim() {
+        let a = arena(64, 8, &[1]);
+        {
+            let mut w = a.claim(0, 32).unwrap();
+            w[0].as_mut_slice().fill(7.0);
+        }
+        // SAFETY (all revokes below): the windows were dropped above.
+        // The victim's claim [0,32) loses its stolen suffix [16,32):
+        assert!(unsafe { a.revoke_tail(16, 32) });
+        assert_eq!(a.claimed_ranges(), vec![(0, 16)], "prefix survives");
+        // The thief can claim exactly the freed suffix; the surviving
+        // prefix stays protected.
+        a.claim(16, 32).unwrap();
+        assert!(a.claim(8, 16).is_err(), "prefix still claimed");
+        assert_eq!(a.claimed_items(), 32);
+    }
+
+    #[test]
+    fn revoke_tail_takes_an_exact_claim_whole() {
+        let a = arena(64, 8, &[1]);
+        a.claim(8, 24).unwrap();
+        assert!(unsafe { a.revoke_tail(8, 24) });
+        assert!(a.claimed_ranges().is_empty());
+        a.claim(8, 24).unwrap(); // claimable again
+    }
+
+    #[test]
+    fn revoke_tail_of_an_unclaimed_range_is_a_noop() {
+        let a = arena(64, 8, &[1]);
+        a.claim(0, 16).unwrap();
+        // The master revokes stolen ranges defensively; an unstarted
+        // range holds no claim and nothing may change.
+        assert!(!unsafe { a.revoke_tail(32, 48) }, "no covering claim");
+        assert!(!unsafe { a.revoke_tail(8, 32) }, "end does not match any claim");
+        assert_eq!(a.claimed_ranges(), vec![(0, 16)], "ledger untouched");
     }
 
     #[test]

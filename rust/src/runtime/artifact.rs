@@ -7,7 +7,8 @@
 //!
 //! When no `artifacts/` directory exists (no Python toolchain ran),
 //! [`ArtifactRegistry::discover`] falls back to
-//! [`ArtifactRegistry::synthetic`]: the same seven benchmarks at reduced
+//! [`ArtifactRegistry::synthetic`]: the same seven benchmarks (plus the
+//! synthetic-only `collatz` straggler workload) at reduced
 //! problem sizes, with
 //! deterministic generated inputs and golden outputs computed by the
 //! native kernels in [`super::kernels`]. Everything above the runtime —
@@ -189,8 +190,9 @@ impl ArtifactRegistry {
         synthetic_or_bail()
     }
 
-    /// The built-in workload set: the paper's seven benchmarks at reduced
-    /// problem sizes, fully generated in-process (no files, no Python).
+    /// The built-in workload set: the paper's seven benchmarks plus the
+    /// `collatz` straggler workload, at reduced problem sizes, fully
+    /// generated in-process (no files, no Python).
     pub fn synthetic() -> Self {
         let mut benches = BTreeMap::new();
         for b in synthetic_benches() {
@@ -276,7 +278,8 @@ fn scalars(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
 
 /// Reduced-size counterparts of `python/compile/model.py`'s BENCHES —
 /// small enough that debug-mode test runs stay fast, large enough that
-/// every scheduler produces multi-package co-executions.
+/// every scheduler produces multi-package co-executions — plus the
+/// synthetic-only `collatz` straggler workload (no AOT counterpart).
 fn synthetic_benches() -> Vec<BenchManifest> {
     let mut out = Vec::new();
 
@@ -331,6 +334,33 @@ fn synthetic_benches() -> Vec<BenchManifest> {
         inputs: vec![],
         outputs: vec![buf("iters", mw * mh, 1)],
         chunks: ladder(256, mw * mh),
+    });
+
+    // Collatz: trajectory lengths with a seeded hotspot band — the
+    // heavy-tailed straggler workload of the work-stealing bench. Not a
+    // paper benchmark; synthetic-only (no HLO artifact exists for it).
+    // The hot band sits at the *front* of the index space, where the
+    // cold-start prior hands out the largest, least-informed packages:
+    // the prefetch queues built before the first observations return are
+    // exactly the backlog stealing exists to revoke.
+    let cn = 4096usize;
+    out.push(BenchManifest {
+        name: "collatz".into(),
+        n: cn,
+        granule: 64,
+        irregular: true,
+        out_pattern: (1, 1),
+        kernel: "collatz".into(),
+        scalars: scalars(&[
+            ("seed", 2026.0),
+            ("maxiter", 512.0),
+            ("hot_lo", 0.0),
+            ("hot_hi", 0.125),
+            ("hot_rounds", 16.0),
+        ]),
+        inputs: vec![],
+        outputs: vec![buf("steps", cn, 1)],
+        chunks: ladder(64, cn),
     });
 
     // NBody: 1024 bodies, one integration step. Regular, O(n^2).
@@ -399,7 +429,8 @@ fn synthetic_inputs(bench: &BenchManifest) -> Vec<HostBuf> {
             let mut r = XorShift::new(12);
             vec![HostBuf::F32((0..bench.n).map(|_| r.next_f32()).collect())]
         }
-        "mandelbrot" => vec![],
+        // Input-less kernels: the whole workload is derived from scalars.
+        "collatz" | "mandelbrot" => vec![],
         "nbody" => {
             let mut r = XorShift::new(13);
             let n = bench.n;
@@ -508,7 +539,9 @@ mod tests {
     #[test]
     fn synthetic_has_all_paper_benches() {
         let reg = ArtifactRegistry::synthetic();
-        for name in ["gaussian", "binomial", "mandelbrot", "nbody", "ray1", "ray2", "ray3"] {
+        for name in
+            ["gaussian", "binomial", "collatz", "mandelbrot", "nbody", "ray1", "ray2", "ray3"]
+        {
             let b = reg.bench(name).unwrap();
             assert!(b.n % b.granule == 0, "{name}: n granule-aligned");
             assert!(b.chunks.contains_key(&b.granule), "{name}: granule chunk");

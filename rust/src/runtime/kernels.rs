@@ -1,6 +1,7 @@
 //! Native (pure-Rust) implementations of the five paper benchmarks —
 //! item-for-item ports of `python/compile/kernels/*.py` and the pure-jnp
-//! oracles in `ref.py`.
+//! oracles in `ref.py` — plus the synthetic `collatz` straggler kernel
+//! (the heavy-tailed work-stealing workload; no Python counterpart).
 //!
 //! These serve two roles:
 //!
@@ -39,6 +40,7 @@ pub fn compute_range(
     match family.as_str() {
         "binomial" => binomial(bench, inputs, begin, end, chunk_outs),
         "gaussian" => gaussian(bench, inputs, begin, end, chunk_outs),
+        "collatz" => collatz(bench, begin, end, chunk_outs),
         "mandelbrot" => mandelbrot(bench, begin, end, chunk_outs),
         "nbody" => nbody(bench, inputs, begin, end, chunk_outs),
         f if f.starts_with("ray") => ray(bench, inputs, begin, end, chunk_outs),
@@ -148,6 +150,65 @@ fn gaussian(
             acc += row_pass(yi, x) * filt[dy];
         }
         out[p - begin] = acc;
+    }
+    Ok(())
+}
+
+// ---- collatz: heavy-tailed trajectory lengths, seeded hotspot band ----
+
+/// Collatz trajectory length of `n`, capped at `maxiter` steps.
+fn collatz_len(mut n: u64, maxiter: u32) -> u32 {
+    let mut it = 0u32;
+    while n > 1 && it < maxiter {
+        n = if n % 2 == 0 { n / 2 } else { 3 * n + 1 };
+        it += 1;
+    }
+    it
+}
+
+/// Total Collatz steps executed for work-item `p` of `bench` — the exact
+/// per-item cost [`compute_range`] pays on the `collatz` family, exported
+/// so the straggler bench's virtual clock (`harness::steal`) charges the
+/// same heavy tail the native kernel does.
+///
+/// Items whose index falls in the `[hot_lo, hot_hi)` fraction band of the
+/// problem run `hot_rounds` seeded trajectories instead of one: a
+/// contiguous straggler band, placed at the front of the index space in
+/// the synthetic manifest — the region the cold-start prior assigns in
+/// its largest, least-informed prefetch batches.
+pub fn collatz_item_steps(bench: &BenchManifest, p: usize) -> Result<u32> {
+    let seed = scalar(bench, "seed")? as u64;
+    let maxiter = scalar(bench, "maxiter")? as u32;
+    let hot_lo = scalar(bench, "hot_lo")?;
+    let hot_hi = scalar(bench, "hot_hi")?;
+    let frac = p as f64 / bench.n as f64;
+    let rounds =
+        if (hot_lo..hot_hi).contains(&frac) { scalar(bench, "hot_rounds")? as u32 } else { 1 };
+    let mut acc = 0u32;
+    for r in 0..rounds as u64 {
+        // Mix index, seed and round into an odd 32-bit start value
+        // (splitmix64-style finalizer): trajectories stay bounded and the
+        // value of item `p` depends only on `p` and the manifest scalars.
+        let mut x = (p as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(seed ^ r);
+        x ^= x >> 31;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        acc += collatz_len((x & 0xFFFF_FFFF) | 1, maxiter);
+    }
+    Ok(acc)
+}
+
+fn collatz(
+    bench: &BenchManifest,
+    begin: usize,
+    end: usize,
+    outs: &mut [&mut [f32]],
+) -> Result<()> {
+    // Output = work done: step counts stay well under 2^24, so the f32
+    // round-trip is exact and the oracle comparison stays bit-strict.
+    let out = &mut outs[0];
+    for p in begin..end {
+        out[p - begin] = collatz_item_steps(bench, p)? as f32;
     }
     Ok(())
 }
@@ -367,7 +428,7 @@ mod tests {
     #[test]
     fn chunks_match_full_computation() {
         let reg = ArtifactRegistry::synthetic();
-        for name in ["binomial", "gaussian", "mandelbrot", "nbody", "ray1"] {
+        for name in ["binomial", "collatz", "gaussian", "mandelbrot", "nbody", "ray1"] {
             let bench = reg.bench(name).unwrap().clone();
             let inputs = full_inputs(&reg, &bench);
             let mut full = chunk_outs(&bench, bench.n);
@@ -396,6 +457,38 @@ mod tests {
         assert!(vals.iter().any(|&v| v == maxiter), "some pixels in the set");
         assert!(vals.iter().any(|&v| v < maxiter), "some pixels escape");
         assert!(vals.iter().all(|&v| (1.0..=maxiter).contains(&v)));
+    }
+
+    /// The hotspot band must be a real straggler: items inside it cost a
+    /// multiple of the cold mean, and the written output is the exact step
+    /// count the cost helper reports (the bench sim's virtual clock and
+    /// the native kernel must never drift apart).
+    #[test]
+    fn collatz_hotspot_is_heavy_tailed() {
+        let reg = ArtifactRegistry::synthetic();
+        let bench = reg.bench("collatz").unwrap().clone();
+        let mut outs = chunk_outs(&bench, bench.n);
+        compute_range_vecs(&bench, &[], 0, bench.n, &mut outs).unwrap();
+        let vals = &outs[0];
+
+        let (hot_lo, hot_hi) = (bench.scalars["hot_lo"], bench.scalars["hot_hi"]);
+        let in_band = |p: usize| (hot_lo..hot_hi).contains(&(p as f64 / bench.n as f64));
+        let mean = |band: bool| {
+            let picked: Vec<f64> = (0..bench.n)
+                .filter(|&p| in_band(p) == band)
+                .map(|p| vals[p] as f64)
+                .collect();
+            assert!(!picked.is_empty(), "band(in={band}) non-empty");
+            picked.iter().sum::<f64>() / picked.len() as f64
+        };
+        let (hot, cold) = (mean(true), mean(false));
+        assert!(cold > 1.0, "cold items do real work (mean {cold})");
+        assert!(hot >= 4.0 * cold, "hotspot {hot} not heavy vs cold {cold}");
+
+        for p in [0, bench.n / 2, bench.n - 1] {
+            let steps = collatz_item_steps(&bench, p).unwrap();
+            assert_eq!(vals[p], steps as f32, "item {p}: output == cost helper");
+        }
     }
 
     #[test]

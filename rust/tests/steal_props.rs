@@ -1,0 +1,193 @@
+//! Steal × fault chaos grid (PR-10): cooperative work stealing must
+//! never compromise the recovery contract.
+//!
+//! The acceptance invariant mirrors `fault_props.rs`: for every kernel
+//! × base scheduler × steal policy × fault plan, the run **completes**,
+//! its outputs are **bit-identical** to the no-steal fault-free run,
+//! and the trace ledger is **exactly-once** — the executed packages
+//! (survivors' own, requeued, and stolen alike) tile `[0, gws)` with no
+//! gap and no overlap.
+//!
+//! A steal is a three-way race (master revokes, victim yields, thief
+//! executes), and a kill can land in any leg: before the victim acks
+//! (the dead victim's whole ledger is reclaimed, the steal aborts), or
+//! after the transfer (the thief dies holding stolen work, which must
+//! requeue like any other pending range). Package-ordinal fault plans
+//! cannot pin one leg by construction — dispatch order is
+//! thread-timing dependent — so the grid drives kills and vanishes at
+//! several ordinals on both early and late devices, under both steal
+//! policies, and the seeded sweep (pinned by `ECL_CHAOS_SEED` in CI)
+//! varies the landing spot further. Whatever leg a fault lands in, the
+//! contract below must hold; the arena's exactly-once ledger is the
+//! oracle that catches a lost or doubled granule regardless of
+//! interleaving.
+
+use enginecl::coordinator::scheduler::{SchedulerKind, StealPolicy, DEFAULT_STEAL_THRESHOLD};
+use enginecl::platform::fault::FaultPlan;
+use enginecl::runtime::ArtifactRegistry;
+use enginecl::testing::{assert_exactly_once, chaos_engine, chaos_seed};
+
+fn registry() -> ArtifactRegistry {
+    ArtifactRegistry::discover().expect("artifact registry (synthetic fallback)")
+}
+
+/// The straggler kernel when the registry carries it (always true for
+/// the synthetic registry), plus the regular control.
+fn sweep_kernels(reg: &ArtifactRegistry) -> Vec<&'static str> {
+    let mut kernels = vec!["binomial"];
+    if reg.benches.contains_key("collatz") {
+        kernels.push("collatz");
+    }
+    kernels
+}
+
+fn bases() -> Vec<(&'static str, fn() -> SchedulerKind)> {
+    vec![("hguided", SchedulerKind::hguided), ("adaptive", SchedulerKind::adaptive)]
+}
+
+/// Both active policies per base. The `Stealing` wrapper forces the
+/// pipeline deep enough that a victim owns at least one yieldable slot.
+fn steal_kinds(base: fn() -> SchedulerKind) -> Vec<SchedulerKind> {
+    vec![
+        base().stealing(StealPolicy::TailOnly { threshold: DEFAULT_STEAL_THRESHOLD }),
+        base().stealing(StealPolicy::Eager),
+    ]
+}
+
+/// Fault-free, steal-free reference outputs for `bench` under `base`
+/// (3 devices) — the bit-identity target for every steal run.
+fn no_steal_outputs(reg: &ArtifactRegistry, bench: &str, base: fn() -> SchedulerKind) -> Vec<Vec<f32>> {
+    let mut e = chaos_engine(reg, bench, 3, base(), None);
+    e.run().expect("no-steal baseline run");
+    let n = reg.bench(bench).unwrap().outputs.len();
+    (0..n).map(|i| e.output(i).unwrap().to_vec()).collect()
+}
+
+/// Run `bench` under a stealing `kind` with an optional fault plan and
+/// assert the full contract against the no-steal reference.
+fn check_steal_run(
+    reg: &ArtifactRegistry,
+    bench: &str,
+    kind: &SchedulerKind,
+    plan: Option<FaultPlan>,
+    want: &[Vec<f32>],
+) {
+    let label = kind.label();
+    let mut e = chaos_engine(reg, bench, 3, kind.clone(), plan.clone());
+    e.run().unwrap_or_else(|err| {
+        panic!("{bench}/{label}: steal run must complete (plan {plan:?}): {err}")
+    });
+    let report = e.report().unwrap().clone();
+    for (i, w) in want.iter().enumerate() {
+        assert!(
+            e.output(i).unwrap() == &w[..],
+            "{bench}/{label}: output {i} not bit-identical to the no-steal run (plan {plan:?})"
+        );
+    }
+    assert_exactly_once(&report);
+    for f in &report.faults {
+        assert!(f.recovered, "{bench}/{label}: fault not recovered: {:?}", f.message);
+    }
+    // Steal accounting is self-consistent whether or not any steal
+    // fired this interleaving (timing-dependent under fast-sim).
+    if report.steals_issued > 0 {
+        assert!(
+            report.stolen_items() > 0,
+            "{bench}/{label}: {} steals issued but no stolen items executed",
+            report.steals_issued
+        );
+    } else {
+        assert_eq!(
+            report.stolen_packages(),
+            0,
+            "{bench}/{label}: stolen packages without an issued steal"
+        );
+    }
+}
+
+/// Fault-free: `+steal` is invisible in the results — outputs stay
+/// bit-identical to the no-steal run and the ledger exactly-once, on
+/// both the regular and the straggler kernel.
+#[test]
+fn steal_outputs_bit_identical_to_no_steal() {
+    let reg = registry();
+    for bench in sweep_kernels(&reg) {
+        for (_, base) in bases() {
+            let want = no_steal_outputs(&reg, bench, base);
+            for kind in steal_kinds(base) {
+                check_steal_run(&reg, bench, &kind, None, &want);
+            }
+        }
+    }
+}
+
+/// The kill grid: early and late kill points on different devices while
+/// stealing is active. A kill can land before the victim yields, while
+/// a yield is in flight, or after a thief absorbed the ranges — the
+/// recovery contract is the same in every leg.
+#[test]
+fn kills_during_stealing_recover_exactly_once() {
+    let reg = registry();
+    let plans = [FaultPlan::kill(1, 0), FaultPlan::kill(2, 1), FaultPlan::vanish(1, 0)];
+    for bench in sweep_kernels(&reg) {
+        for (_, base) in bases() {
+            let want = no_steal_outputs(&reg, bench, base);
+            for kind in steal_kinds(base) {
+                for plan in &plans {
+                    check_steal_run(&reg, bench, &kind, Some(plan.clone()), &want);
+                }
+            }
+        }
+    }
+}
+
+/// Seeded chaos: the kill point is derived from `ECL_CHAOS_SEED`
+/// (logged, so a CI failure reproduces locally with the same env),
+/// landing faults at varied points of the steal protocol.
+#[test]
+fn seeded_steal_chaos_reproducible_from_logged_seed() {
+    let reg = registry();
+    let seed = chaos_seed();
+    eprintln!("steal chaos sweep: ECL_CHAOS_SEED={seed} (export to reproduce)");
+    let bench = if reg.benches.contains_key("collatz") { "collatz" } else { "binomial" };
+    for (i, (name, base)) in bases().into_iter().enumerate() {
+        let want = no_steal_outputs(&reg, bench, base);
+        for (j, kind) in steal_kinds(base).into_iter().enumerate() {
+            let plan = FaultPlan::seeded_kill(
+                seed.wrapping_add((i * 2 + j) as u64),
+                3,
+                2,
+            );
+            eprintln!("  case {name}/{}: plan={plan:?}", kind.label());
+            check_steal_run(&reg, bench, &kind, Some(plan), &want);
+        }
+    }
+}
+
+/// With a single device there is no one to steal from — the policy must
+/// be inert, not a hang or a self-steal.
+#[test]
+fn single_device_steal_is_inert() {
+    let reg = registry();
+    let kind = SchedulerKind::hguided().stealing(StealPolicy::Eager);
+    let mut e = chaos_engine(&reg, "binomial", 1, kind, None);
+    e.run().expect("single-device steal run");
+    let report = e.report().unwrap();
+    assert_eq!(report.steals_issued, 0, "no victim exists on a 1-device run");
+    assert_eq!(report.stolen_packages(), 0);
+    assert_exactly_once(report);
+}
+
+/// Results are stable across repetitions: thread timing may change
+/// which steals fire, but never the bytes (the per-item outputs are
+/// pure functions of the index).
+#[test]
+fn repeated_steal_runs_keep_outputs_stable() {
+    let reg = registry();
+    let bench = if reg.benches.contains_key("collatz") { "collatz" } else { "binomial" };
+    let want = no_steal_outputs(&reg, bench, SchedulerKind::hguided);
+    let kind = SchedulerKind::hguided().stealing(StealPolicy::Eager);
+    for _ in 0..3 {
+        check_steal_run(&reg, bench, &kind, None, &want);
+    }
+}
